@@ -1,0 +1,95 @@
+"""AOT exporter: lower a Rust-exported model to HLO text + manifest.
+
+HLO *text* (not a serialized ``HloModuleProto``) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids that the pinned
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage (invoked by `make artifacts`):
+
+    python -m compile.aot --json artifacts/src/tiny.json \\
+        --weights artifacts/src/tiny.weights.bin \\
+        --out-dir artifacts --name tiny [--backend pallas]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import graph_ir, model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants=True is essential: the default elides big
+    # weight constants as "{...}", which the pinned XLA 0.5.1 text parser
+    # silently parses as ZEROS — the artifact would run but with zeroed
+    # weights.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def export(json_path: str, weights_path: str, out_dir: str, name: str, backend: str) -> dict:
+    g = graph_ir.load_graph(json_path, weights_path)
+    forward = model.build_forward(g, backend=backend)
+
+    in_specs = [
+        jax.ShapeDtypeStruct(tuple(g.tensors[t].shape), jnp.float32) for t in g.inputs
+    ]
+    lowered = jax.jit(forward).lower(*in_specs)
+    hlo = to_hlo_text(lowered)
+
+    os.makedirs(out_dir, exist_ok=True)
+    hlo_path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(hlo_path, "w") as f:
+        f.write(hlo)
+
+    manifest = {
+        "model": g.name,
+        "kernels": backend,
+        "inputs": [
+            {
+                "name": g.tensors[t].name,
+                "shape": list(g.tensors[t].shape),
+                "dtype": "f32",
+            }
+            for t in g.inputs
+        ],
+        "outputs": [
+            {
+                "name": g.tensors[t].name,
+                "shape": list(g.tensors[t].shape),
+                "dtype": "f32",
+            }
+            for t in g.outputs
+        ],
+    }
+    man_path = os.path.join(out_dir, f"{name}.manifest.json")
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {hlo_path} ({len(hlo)} chars) + {man_path}")
+    return manifest
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--json", required=True, help="model JSON from `mcu-reorder export`")
+    p.add_argument("--weights", required=True, help="weights blob from `mcu-reorder export`")
+    p.add_argument("--out-dir", required=True)
+    p.add_argument("--name", required=True, help="artifact base name")
+    p.add_argument("--backend", default="pallas", choices=["pallas", "jnp"])
+    args = p.parse_args()
+    export(args.json, args.weights, args.out_dir, args.name, args.backend)
+
+
+if __name__ == "__main__":
+    main()

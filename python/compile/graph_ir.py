@@ -1,0 +1,130 @@
+"""Load the Rust-exported model container (graph JSON + weights blob).
+
+The Rust model zoo is the single source of truth for architectures
+(`mcu-reorder export` writes `<model>.json` + `<model>.weights.bin`); this
+module parses that container so the L2 JAX builder and the L1 Pallas kernels
+cannot drift from the graph the coordinator schedules.
+
+Weight blob layout: float32 little-endian, weight tensors concatenated in
+tensor-id order, each in its declared shape (row-major):
+  Conv2D            [kh, kw, cin, cout]   (HWIO)
+  DepthwiseConv2D   [kh, kw, c]
+  Dense             [in, out]
+  biases            [out]
+"""
+
+from __future__ import annotations
+
+import json
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+FORMAT = "mcu-reorder/v1"
+
+
+@dataclass
+class Tensor:
+    id: int
+    name: str
+    shape: List[int]
+    dtype: str
+    is_weight: bool
+
+    @property
+    def elems(self) -> int:
+        n = 1
+        for d in self.shape:
+            n *= d
+        return n
+
+
+@dataclass
+class Op:
+    id: int
+    name: str
+    kind: str
+    attrs: Dict
+    inputs: List[int]
+    weights: List[int]
+    output: int
+
+
+@dataclass
+class Graph:
+    name: str
+    tensors: List[Tensor]
+    ops: List[Op]
+    inputs: List[int]
+    outputs: List[int]
+    execution_order: Optional[List[int]] = None
+    weight_data: Dict[int, np.ndarray] = field(default_factory=dict)
+
+    def tensor_by_name(self, name: str) -> Tensor:
+        for t in self.tensors:
+            if t.name == name:
+                return t
+        raise KeyError(name)
+
+
+def load_graph(json_path: str, weights_path: Optional[str] = None) -> Graph:
+    """Parse the model JSON (and optional weights blob) into a Graph."""
+    with open(json_path) as f:
+        doc = json.load(f)
+    if doc.get("format") != FORMAT:
+        raise ValueError(f"unsupported model format: {doc.get('format')!r}")
+
+    tensors = [
+        Tensor(
+            id=t["id"],
+            name=t["name"],
+            shape=list(t["shape"]),
+            dtype=t["dtype"],
+            is_weight=bool(t["weight"]),
+        )
+        for t in doc["tensors"]
+    ]
+    for i, t in enumerate(tensors):
+        if t.id != i:
+            raise ValueError("tensor ids must be dense")
+
+    ops = [
+        Op(
+            id=o["id"],
+            name=o["name"],
+            kind=o["kind"],
+            attrs=o.get("attrs", {}),
+            inputs=list(o["inputs"]),
+            weights=list(o["weights"]),
+            output=o["output"],
+        )
+        for o in doc["ops"]
+    ]
+
+    g = Graph(
+        name=doc["name"],
+        tensors=tensors,
+        ops=ops,
+        inputs=list(doc["inputs"]),
+        outputs=list(doc["outputs"]),
+        execution_order=doc.get("execution_order"),
+    )
+
+    if weights_path is not None:
+        blob = np.fromfile(weights_path, dtype="<f4")
+        cursor = 0
+        for t in tensors:
+            if not t.is_weight:
+                continue
+            n = t.elems
+            if cursor + n > blob.size:
+                raise ValueError(
+                    f"weights blob too short at tensor {t.name} "
+                    f"(need {cursor + n}, have {blob.size})"
+                )
+            g.weight_data[t.id] = blob[cursor : cursor + n].reshape(t.shape).copy()
+            cursor += n
+        if cursor != blob.size:
+            raise ValueError(f"weights blob has {blob.size - cursor} trailing floats")
+    return g

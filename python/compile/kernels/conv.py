@@ -1,0 +1,242 @@
+"""Layer-1 Pallas kernels: the convolution hot-spots of the evaluated models.
+
+All kernels are lowered with ``interpret=True`` — the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so interpret mode turns each ``pallas_call``
+into plain HLO that the Rust runtime's CPU client runs bit-for-bit. The
+kernels are nonetheless *structured* for a real TPU lowering:
+
+- the **pointwise (1×1) conv** — the dominant FLOP sink of MobileNet and the
+  SwiftNet-style cells — is a grid of ``(TILE_HW, Cin) @ (Cin, Cout)``
+  matmuls, i.e. MXU-shaped work per grid step, with the HBM↔VMEM staging
+  expressed through ``BlockSpec`` row tiles;
+- the **depthwise 3×3 conv** processes one output row per grid step,
+  accumulating the kh×kw taps as vectorized multiply-adds over the row
+  (VPU-shaped work), reading only the ``kh`` input rows it needs;
+- the **general conv** (network stems) does a per-tap
+  ``(W_out, Cin) @ (Cin, Cout)`` matmul per output row.
+
+Spatial SAME padding is materialized with ``jnp.pad`` before the kernel — on
+TPU that boundary is where the HBM→VMEM copy happens, and DESIGN.md
+§Hardware-Adaptation discusses the VMEM budget per tile.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+INTERPRET = True  # CPU PJRT target; see module docstring.
+
+
+def same_pad(in_size: int, k: int, stride: int) -> tuple[int, int]:
+    """TF-style SAME padding split (low, high)."""
+    out = -(-in_size // stride)  # ceil div
+    total = max((out - 1) * stride + k - in_size, 0)
+    return total // 2, total - total // 2
+
+
+def _out_dim(in_size: int, k: int, stride: int, padding: str) -> int:
+    if padding == "SAME":
+        return -(-in_size // stride)
+    return (in_size - k) // stride + 1
+
+
+def _act(y, act: str):
+    if act == "linear":
+        return y
+    if act == "relu":
+        return jnp.maximum(y, 0.0)
+    if act == "relu6":
+        return jnp.clip(y, 0.0, 6.0)
+    raise ValueError(f"unknown act {act!r}")
+
+
+def _row_tile(hw: int, target: int = 256) -> int:
+    """Largest divisor of `hw` that is ≤ target (grid tiles must divide the
+    array; on TPU we'd pick a multiple of 8 rows × 128 lanes)."""
+    best = 1
+    for d in range(1, hw + 1):
+        if hw % d == 0 and d <= target:
+            best = d
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Pointwise (1×1) convolution: tiled matmul.
+# ---------------------------------------------------------------------------
+
+
+def _pointwise_kernel(x_ref, w_ref, b_ref, o_ref, *, act):
+    """One tile: (TILE, Cin) @ (Cin, Cout) + bias, fused activation."""
+    y = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = _act(y + b_ref[...], act)
+
+
+def pointwise_conv(x, w, b, stride=(1, 1), act="linear"):
+    """1×1 convolution. x: [1,H,W,Cin], w: [1,1,Cin,Cout] or [Cin,Cout].
+
+    Strided 1×1 convs subsample rows/cols first (cheap gather), then run the
+    matmul grid over the remaining pixels.
+    """
+    if w.ndim == 4:
+        w = w.reshape(w.shape[2], w.shape[3])
+    _, h, wd, cin = x.shape
+    if stride != (1, 1):
+        x = x[:, :: stride[0], :: stride[1], :]
+        _, h, wd, cin = x.shape
+    cout = w.shape[1]
+    hw = h * wd
+    tile = _row_tile(hw)
+    x2 = x.reshape(hw, cin)
+
+    out = pl.pallas_call(
+        functools.partial(_pointwise_kernel, act=act),
+        grid=(hw // tile,),
+        in_specs=[
+            pl.BlockSpec((tile, cin), lambda i: (i, 0)),
+            pl.BlockSpec((cin, cout), lambda i: (0, 0)),
+            pl.BlockSpec((cout,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile, cout), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((hw, cout), jnp.float32),
+        interpret=INTERPRET,
+    )(x2, w, b)
+    return out.reshape(1, h, wd, cout)
+
+
+# ---------------------------------------------------------------------------
+# Depthwise conv: one output row per grid step.
+# ---------------------------------------------------------------------------
+
+
+def _dw_row_kernel(x_ref, w_ref, b_ref, o_ref, *, kh, kw, sh, sw, w_out, act):
+    """Compute one output row: accumulate kh·kw taps over the row."""
+    oy = pl.program_id(0)
+    xpad = x_ref[...]  # (H_pad, W_pad, C) — staged block
+    c = xpad.shape[-1]
+    rows = lax.dynamic_slice(
+        xpad, (oy * sh, 0, 0), (kh, xpad.shape[1], c)
+    )  # (kh, W_pad, C)
+    acc = jnp.zeros((w_out, c), dtype=jnp.float32)
+    for ky in range(kh):
+        for kx in range(kw):
+            span = rows[ky, kx : kx + (w_out - 1) * sw + 1 : sw, :]  # (W_out, C)
+            acc = acc + span * w_ref[ky, kx, :]
+    o_ref[...] = _act(acc + b_ref[...], act)[None, :, :]
+
+
+def dwconv2d(x, w, b, stride=(1, 1), padding="SAME", act="linear"):
+    """Depthwise conv (multiplier 1). x: [1,H,W,C], w: [kh,kw,C], b: [C]."""
+    _, h, wd, c = x.shape
+    kh, kw = w.shape[0], w.shape[1]
+    sh, sw = stride
+    h_out = _out_dim(h, kh, sh, padding)
+    w_out = _out_dim(wd, kw, sw, padding)
+    if padding == "SAME":
+        (pt, pb), (pl_, pr) = same_pad(h, kh, sh), same_pad(wd, kw, sw)
+    else:
+        (pt, pb), (pl_, pr) = (0, 0), (0, 0)
+    xpad = jnp.pad(x[0], ((pt, pb), (pl_, pr), (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(
+            _dw_row_kernel, kh=kh, kw=kw, sh=sh, sw=sw, w_out=w_out, act=act
+        ),
+        grid=(h_out,),
+        in_specs=[
+            pl.BlockSpec(xpad.shape, lambda i: (0, 0, 0)),
+            pl.BlockSpec(w.shape, lambda i: (0, 0, 0)),
+            pl.BlockSpec(b.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, w_out, c), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h_out, w_out, c), jnp.float32),
+        interpret=INTERPRET,
+    )(xpad, w, b)
+    return out.reshape(1, h_out, w_out, c)
+
+
+# ---------------------------------------------------------------------------
+# General conv (stems): per-tap matmul, one output row per grid step.
+# ---------------------------------------------------------------------------
+
+
+def _conv_row_kernel(x_ref, w_ref, b_ref, o_ref, *, kh, kw, sh, sw, w_out, act):
+    oy = pl.program_id(0)
+    xpad = x_ref[...]  # (H_pad, W_pad, Cin)
+    cin = xpad.shape[-1]
+    cout = w_ref.shape[-1]
+    rows = lax.dynamic_slice(xpad, (oy * sh, 0, 0), (kh, xpad.shape[1], cin))
+    acc = jnp.zeros((w_out, cout), dtype=jnp.float32)
+    for ky in range(kh):
+        for kx in range(kw):
+            span = rows[ky, kx : kx + (w_out - 1) * sw + 1 : sw, :]  # (W_out, Cin)
+            acc = acc + jnp.dot(
+                span, w_ref[ky, kx, :, :], preferred_element_type=jnp.float32
+            )
+    o_ref[...] = _act(acc + b_ref[...], act)[None, :, :]
+
+
+def conv2d(x, w, b, stride=(1, 1), padding="SAME", act="linear"):
+    """Standard conv. x: [1,H,W,Cin], w: [kh,kw,Cin,Cout], b: [Cout]."""
+    kh, kw = w.shape[0], w.shape[1]
+    if (kh, kw) == (1, 1):
+        return pointwise_conv(x, w, b, stride=stride, act=act)
+    _, h, wd, cin = x.shape
+    cout = w.shape[3]
+    sh, sw = stride
+    h_out = _out_dim(h, kh, sh, padding)
+    w_out = _out_dim(wd, kw, sw, padding)
+    if padding == "SAME":
+        (pt, pb), (pl_, pr) = same_pad(h, kh, sh), same_pad(wd, kw, sw)
+    else:
+        (pt, pb), (pl_, pr) = (0, 0), (0, 0)
+    xpad = jnp.pad(x[0], ((pt, pb), (pl_, pr), (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(
+            _conv_row_kernel, kh=kh, kw=kw, sh=sh, sw=sw, w_out=w_out, act=act
+        ),
+        grid=(h_out,),
+        in_specs=[
+            pl.BlockSpec(xpad.shape, lambda i: (0, 0, 0)),
+            pl.BlockSpec(w.shape, lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec(b.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, w_out, cout), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h_out, w_out, cout), jnp.float32),
+        interpret=INTERPRET,
+    )(xpad, w, b)
+    return out.reshape(1, h_out, w_out, cout)
+
+
+# ---------------------------------------------------------------------------
+# Dense head.
+# ---------------------------------------------------------------------------
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref, *, act):
+    y = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=jnp.float32)
+    o_ref[...] = _act(y + b_ref[...], act)
+
+
+def dense(x, w, b, act="linear"):
+    """Fully connected. x: [1, ...] (flattened), w: [in,out], b: [out]."""
+    x2 = x.reshape(1, -1)
+    n_in, n_out = w.shape
+    out = pl.pallas_call(
+        functools.partial(_dense_kernel, act=act),
+        grid=(1,),
+        in_specs=[
+            pl.BlockSpec((1, n_in), lambda i: (0, 0)),
+            pl.BlockSpec((n_in, n_out), lambda i: (0, 0)),
+            pl.BlockSpec((n_out,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, n_out), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, n_out), jnp.float32),
+        interpret=INTERPRET,
+    )(x2, w, b)
+    return out

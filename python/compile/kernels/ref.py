@@ -1,0 +1,114 @@
+"""Pure-jnp correctness oracle for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here, written
+with `jax.lax` primitives whose semantics are well understood (TF-style SAME
+padding, NHWC/HWIO layouts). The pytest suite sweeps shapes/strides/paddings
+and asserts the Pallas kernels match to float32 tolerance; the Rust
+micro-interpreter implements the same semantics and is cross-checked against
+the lowered artifacts end-to-end.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def _act(y, act: str):
+    if act == "linear":
+        return y
+    if act == "relu":
+        return jnp.maximum(y, 0.0)
+    if act == "relu6":
+        return jnp.clip(y, 0.0, 6.0)
+    raise ValueError(f"unknown act {act!r}")
+
+
+def conv2d(x, w, b, stride=(1, 1), padding="SAME", act="linear"):
+    """Standard conv. x: [1,H,W,Cin], w: [kh,kw,Cin,Cout] (HWIO), b: [Cout]."""
+    y = lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=stride,
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return _act(y + b, act)
+
+
+def dwconv2d(x, w, b, stride=(1, 1), padding="SAME", act="linear"):
+    """Depthwise conv (multiplier 1). x: [1,H,W,C], w: [kh,kw,C], b: [C]."""
+    c = x.shape[-1]
+    w4 = w.reshape(w.shape[0], w.shape[1], 1, c)
+    y = lax.conv_general_dilated(
+        x,
+        w4,
+        window_strides=stride,
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    )
+    return _act(y + b, act)
+
+
+def dense(x, w, b, act="linear"):
+    """Fully connected. x: [1, ...] flattened, w: [in,out], b: [out]."""
+    y = x.reshape(1, -1) @ w + b
+    return _act(y, act)
+
+
+def add(a, b):
+    return a + b
+
+
+def concat_channels(parts):
+    return jnp.concatenate(parts, axis=-1)
+
+
+def relu(x):
+    return jnp.maximum(x, 0.0)
+
+
+def relu6(x):
+    return jnp.clip(x, 0.0, 6.0)
+
+
+def maxpool2d(x, kernel, stride, padding="SAME"):
+    return lax.reduce_window(
+        x,
+        -jnp.inf,
+        lax.max,
+        window_dimensions=(1, kernel[0], kernel[1], 1),
+        window_strides=(1, stride[0], stride[1], 1),
+        padding=padding,
+    )
+
+
+def avgpool2d(x, kernel, stride, padding="SAME"):
+    """Average pooling, divisor = number of valid taps (TFLite semantics)."""
+    summed = lax.reduce_window(
+        x,
+        0.0,
+        lax.add,
+        window_dimensions=(1, kernel[0], kernel[1], 1),
+        window_strides=(1, stride[0], stride[1], 1),
+        padding=padding,
+    )
+    counts = lax.reduce_window(
+        jnp.ones_like(x),
+        0.0,
+        lax.add,
+        window_dimensions=(1, kernel[0], kernel[1], 1),
+        window_strides=(1, stride[0], stride[1], 1),
+        padding=padding,
+    )
+    return summed / counts
+
+
+def global_avgpool(x):
+    return jnp.mean(x, axis=(1, 2), keepdims=True)
+
+
+def softmax(x):
+    return jax.nn.softmax(x, axis=-1)

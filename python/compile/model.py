@@ -1,0 +1,119 @@
+"""Layer-2: build the JAX forward function for a Rust-exported graph.
+
+`build_forward(graph, backend)` walks the computation DAG (in its embedded
+execution order when present) and emits a pure function
+``f(*inputs) -> tuple(outputs)`` whose convolution/dense ops are the Layer-1
+Pallas kernels (``backend="pallas"``, the default) or the pure-jnp oracle
+(``backend="jnp"``, used to cross-check the kernels at model scale).
+
+Weights come from the graph container (baked by ``mcu-reorder export``) and
+are closed over, so the lowered HLO embeds them as constants — the NOR-Flash
+analogy: parameters are immutable at inference and do not occupy SRAM.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, List
+
+import jax.numpy as jnp
+
+from . import graph_ir
+from .kernels import conv as pallas_kernels
+from .kernels import ref as jnp_kernels
+
+
+def _padding_str(attrs: Dict) -> str:
+    return {"same": "SAME", "valid": "VALID"}[attrs.get("padding", "same")]
+
+
+def _pair(attrs: Dict, key: str):
+    v = attrs[key]
+    return (int(v[0]), int(v[1]))
+
+
+def build_forward(
+    g: graph_ir.Graph, backend: str = "pallas"
+) -> Callable[..., tuple]:
+    """Return ``f(*graph_inputs) -> tuple(graph_outputs)``."""
+    if backend == "pallas":
+        k = pallas_kernels
+    elif backend == "jnp":
+        k = jnp_kernels
+    else:
+        raise ValueError(f"unknown backend {backend!r}")
+
+    if not g.weight_data and any(t.is_weight for t in g.tensors):
+        raise ValueError("graph has weight tensors but no weight data was loaded")
+
+    order = g.execution_order or list(range(len(g.ops)))
+    weights = {tid: jnp.asarray(arr, dtype=jnp.float32) for tid, arr in g.weight_data.items()}
+
+    def forward(*inputs):
+        if len(inputs) != len(g.inputs):
+            raise ValueError(f"expected {len(g.inputs)} inputs, got {len(inputs)}")
+        vals: Dict[int, jnp.ndarray] = {}
+        for tid, x in zip(g.inputs, inputs):
+            expect = tuple(g.tensors[tid].shape)
+            if tuple(x.shape) != expect:
+                raise ValueError(
+                    f"input {g.tensors[tid].name} expects shape {expect}, got {x.shape}"
+                )
+            vals[tid] = x
+
+        for opid in order:
+            op = g.ops[opid]
+            ins: List[jnp.ndarray] = [vals[t] for t in op.inputs]
+            a = op.attrs
+            if op.kind == "Conv2D":
+                w = weights[op.weights[0]]
+                b = weights[op.weights[1]]
+                y = k.conv2d(
+                    ins[0], w, b,
+                    stride=_pair(a, "stride"),
+                    padding=_padding_str(a),
+                    act=a.get("act", "linear"),
+                )
+            elif op.kind == "DepthwiseConv2D":
+                w = weights[op.weights[0]]
+                b = weights[op.weights[1]]
+                y = k.dwconv2d(
+                    ins[0], w, b,
+                    stride=_pair(a, "stride"),
+                    padding=_padding_str(a),
+                    act=a.get("act", "linear"),
+                )
+            elif op.kind == "Dense":
+                w = weights[op.weights[0]]
+                b = weights[op.weights[1]]
+                y = k.dense(ins[0], w, b, act=a.get("act", "linear"))
+            elif op.kind == "Add":
+                y = jnp_kernels.add(ins[0], ins[1])
+            elif op.kind == "Concat":
+                y = jnp_kernels.concat_channels(ins)
+            elif op.kind == "Relu":
+                y = jnp_kernels.relu(ins[0])
+            elif op.kind == "Relu6":
+                y = jnp_kernels.relu6(ins[0])
+            elif op.kind == "MaxPool2D":
+                y = jnp_kernels.maxpool2d(ins[0], _pair(a, "kernel"), _pair(a, "stride"), _padding_str(a))
+            elif op.kind == "AvgPool2D":
+                y = jnp_kernels.avgpool2d(ins[0], _pair(a, "kernel"), _pair(a, "stride"), _padding_str(a))
+            elif op.kind == "GlobalAvgPool":
+                y = jnp_kernels.global_avgpool(ins[0])
+            elif op.kind == "Softmax":
+                y = jnp_kernels.softmax(ins[0])
+            elif op.kind == "Reshape":
+                y = ins[0].reshape(tuple(g.tensors[op.output].shape))
+            else:
+                raise NotImplementedError(f"op kind {op.kind} ({op.name})")
+
+            expect = tuple(g.tensors[op.output].shape)
+            if tuple(y.shape) != expect:
+                raise AssertionError(
+                    f"op {op.name}: produced shape {y.shape}, graph says {expect}"
+                )
+            vals[op.output] = y
+
+        return tuple(vals[t] for t in g.outputs)
+
+    return forward

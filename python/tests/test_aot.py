@@ -1,0 +1,53 @@
+"""AOT exporter: HLO text hygiene + manifest correctness.
+
+The critical regression here: `as_hlo_text()` must print large constants —
+the default elides them as `{...}`, which the pinned XLA 0.5.1 text parser
+silently interprets as ZEROED weights.
+"""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+from tests.test_model import container, SRC
+
+
+@pytest.fixture(scope="module")
+def tiny_export(tmp_path_factory):
+    container("tiny")  # ensure the source container exists
+    out = tmp_path_factory.mktemp("aot")
+    manifest = aot.export(
+        os.path.join(SRC, "tiny.json"),
+        os.path.join(SRC, "tiny.weights.bin"),
+        str(out),
+        "tiny",
+        "pallas",
+    )
+    return out, manifest
+
+
+def test_no_elided_constants(tiny_export):
+    out, _ = tiny_export
+    hlo = (out / "tiny.hlo.txt").read_text()
+    assert "constant({...})" not in hlo, "large constants were elided (zeroed weights!)"
+    assert "ENTRY" in hlo
+
+
+def test_manifest_shapes(tiny_export):
+    out, manifest = tiny_export
+    on_disk = json.loads((out / "tiny.manifest.json").read_text())
+    assert on_disk == manifest
+    assert manifest["model"] == "tiny-cnn"
+    assert manifest["kernels"] == "pallas"
+    assert manifest["inputs"][0]["shape"] == [1, 8, 8, 2]
+    assert manifest["outputs"][0]["shape"] == [1, 3]
+
+
+def test_hlo_has_weights_as_constants_not_params(tiny_export):
+    out, _ = tiny_export
+    hlo = (out / "tiny.hlo.txt").read_text()
+    entry = hlo[hlo.index("ENTRY") :]
+    n_params = entry.count(" parameter(")
+    assert n_params == 1, f"expected only the image input as parameter, got {n_params}"

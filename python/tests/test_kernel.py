@@ -1,0 +1,136 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes, strides, paddings and activations; assert_allclose
+at float32 tolerance. This is the core correctness signal for the kernels
+that get lowered into every AOT artifact.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv as pk
+from compile.kernels import ref
+
+F32 = np.float32
+settings.register_profile("kernels", max_examples=25, deadline=None)
+settings.load_profile("kernels")
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(F32))
+
+
+strides = st.sampled_from([(1, 1), (2, 2), (1, 2)])
+paddings = st.sampled_from(["SAME", "VALID"])
+acts = st.sampled_from(["linear", "relu", "relu6"])
+
+
+@given(
+    h=st.integers(3, 10),
+    w=st.integers(3, 10),
+    cin=st.integers(1, 6),
+    cout=st.integers(1, 6),
+    stride=strides,
+    act=acts,
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pointwise_matches_ref(h, w, cin, cout, stride, act, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, 1, h, w, cin)
+    wt = rand(rng, 1, 1, cin, cout)
+    b = rand(rng, cout)
+    got = pk.pointwise_conv(x, wt, b, stride=stride, act=act)
+    want = ref.conv2d(x, wt, b, stride, "SAME", act)
+    np.testing.assert_allclose(np.array(got), np.array(want), atol=1e-5, rtol=1e-5)
+
+
+@given(
+    h=st.integers(3, 10),
+    w=st.integers(3, 10),
+    c=st.integers(1, 8),
+    k=st.sampled_from([(3, 3), (1, 3), (5, 5)]),
+    stride=strides,
+    padding=paddings,
+    act=acts,
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dwconv_matches_ref(h, w, c, k, stride, padding, act, seed):
+    if padding == "VALID" and (h < k[0] or w < k[1]):
+        return
+    rng = np.random.default_rng(seed)
+    x = rand(rng, 1, h, w, c)
+    wt = rand(rng, k[0], k[1], c)
+    b = rand(rng, c)
+    got = pk.dwconv2d(x, wt, b, stride=stride, padding=padding, act=act)
+    want = ref.dwconv2d(x, wt, b, stride, padding, act)
+    np.testing.assert_allclose(np.array(got), np.array(want), atol=1e-5, rtol=1e-5)
+
+
+@given(
+    h=st.integers(3, 9),
+    w=st.integers(3, 9),
+    cin=st.integers(1, 5),
+    cout=st.integers(1, 5),
+    stride=strides,
+    padding=paddings,
+    act=acts,
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_matches_ref(h, w, cin, cout, stride, padding, act, seed):
+    if padding == "VALID" and (h < 3 or w < 3):
+        return
+    rng = np.random.default_rng(seed)
+    x = rand(rng, 1, h, w, cin)
+    wt = rand(rng, 3, 3, cin, cout)
+    b = rand(rng, cout)
+    got = pk.conv2d(x, wt, b, stride=stride, padding=padding, act=act)
+    want = ref.conv2d(x, wt, b, stride, padding, act)
+    np.testing.assert_allclose(np.array(got), np.array(want), atol=1e-5, rtol=1e-5)
+
+
+@given(
+    n_in=st.integers(1, 64),
+    n_out=st.integers(1, 16),
+    act=acts,
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dense_matches_ref(n_in, n_out, act, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, 1, n_in)
+    wt = rand(rng, n_in, n_out)
+    b = rand(rng, n_out)
+    got = pk.dense(x, wt, b, act=act)
+    want = ref.dense(x, wt, b, act)
+    np.testing.assert_allclose(np.array(got), np.array(want), atol=1e-5, rtol=1e-5)
+
+
+def test_same_pad_matches_tf_convention():
+    # in=8, k=3, s=2 → out=4, total=1 → (0, 1); in=5, k=3, s=1 → (1, 1).
+    assert pk.same_pad(8, 3, 2) == (0, 1)
+    assert pk.same_pad(5, 3, 1) == (1, 1)
+    assert pk.same_pad(4, 1, 1) == (0, 0)
+
+
+def test_row_tile_divides():
+    for hw in [2304, 576, 144, 36, 1, 97]:
+        t = pk._row_tile(hw)
+        assert hw % t == 0 and t <= 256
+
+
+def test_mxu_shaped_pointwise_tile():
+    # A 48x48 feature map should tile into 256-row blocks (MXU-friendly).
+    assert pk._row_tile(48 * 48) == 256
+
+
+@pytest.mark.parametrize("act,lo,hi", [("relu", 0.0, None), ("relu6", 0.0, 6.0)])
+def test_act_bounds(act, lo, hi):
+    rng = np.random.default_rng(0)
+    x = rand(rng, 1, 4, 4, 3) * 10
+    wt = rand(rng, 1, 1, 3, 3)
+    b = rand(rng, 3)
+    y = np.array(pk.pointwise_conv(x, wt, b, act=act))
+    assert y.min() >= lo
+    if hi is not None:
+        assert y.max() <= hi

@@ -1,0 +1,113 @@
+"""L2 correctness: the graph→JAX builder over the Rust-exported container.
+
+The pallas and jnp backends must agree at full-model scale, and every
+intermediate shape must match what the Rust graph declares (the builder
+asserts this internally).
+"""
+
+import os
+import subprocess
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from compile import graph_ir, model
+
+ROOT = os.path.dirname(os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+SRC = os.path.join(ROOT, "artifacts", "src")
+BIN = os.path.join(ROOT, "target", "release", "mcu-reorder")
+
+
+def container(name):
+    json_path = os.path.join(SRC, f"{name}.json")
+    weights_path = os.path.join(SRC, f"{name}.weights.bin")
+    if not os.path.exists(json_path):
+        if not os.path.exists(BIN):
+            pytest.skip("run `make artifacts` first (rust exporter not built)")
+        os.makedirs(SRC, exist_ok=True)
+        subprocess.run(
+            [BIN, "export", "--model", name, "--dtype", "f32",
+             "--json", json_path, "--weights", weights_path],
+            check=True,
+        )
+    return graph_ir.load_graph(json_path, weights_path)
+
+
+def ramp_input(g):
+    shape = tuple(g.tensors[g.inputs[0]].shape)
+    n = int(np.prod(shape))
+    return jnp.asarray(
+        [(((i % 17) - 8.0) / 8.0) for i in range(n)], dtype=jnp.float32
+    ).reshape(shape)
+
+
+@pytest.mark.parametrize("name", ["tiny", "mobilenet", "swiftnet"])
+def test_backends_agree(name):
+    g = container(name)
+    x = ramp_input(g)
+    out_p = model.build_forward(g, backend="pallas")(x)
+    out_j = model.build_forward(g, backend="jnp")(x)
+    assert len(out_p) == len(out_j) == len(g.outputs)
+    for a, b in zip(out_p, out_j):
+        np.testing.assert_allclose(np.array(a), np.array(b), atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("name", ["tiny", "mobilenet", "swiftnet"])
+def test_output_is_probability(name):
+    g = container(name)
+    x = ramp_input(g)
+    (probs,) = model.build_forward(g, backend="pallas")(x)
+    probs = np.array(probs)
+    assert probs.shape == tuple(g.tensors[g.outputs[0]].shape)
+    np.testing.assert_allclose(probs.sum(), 1.0, atol=1e-5)
+    assert (probs >= 0).all()
+
+
+def test_wrong_input_shape_rejected():
+    g = container("tiny")
+    f = model.build_forward(g, backend="jnp")
+    with pytest.raises(ValueError):
+        f(jnp.zeros((1, 4, 4, 2), jnp.float32))
+
+
+def test_weightless_graph_requires_no_blob(tmp_path):
+    import json as J
+    doc = {
+        "format": "mcu-reorder/v1",
+        "name": "id",
+        "tensors": [
+            {"id": 0, "name": "x", "shape": [1, 2], "dtype": "f32", "weight": False},
+            {"id": 1, "name": "sm", "shape": [1, 2], "dtype": "f32", "weight": False},
+        ],
+        "ops": [
+            {"id": 0, "name": "sm", "kind": "Softmax", "attrs": {},
+             "inputs": [0], "weights": [], "output": 1}
+        ],
+        "inputs": [0],
+        "outputs": [1],
+    }
+    p = tmp_path / "id.json"
+    p.write_text(J.dumps(doc))
+    g = graph_ir.load_graph(str(p))
+    (y,) = model.build_forward(g, backend="jnp")(jnp.asarray([[1.0, 2.0]]))
+    np.testing.assert_allclose(np.array(y).sum(), 1.0, atol=1e-6)
+
+
+def test_missing_weights_detected(tmp_path):
+    g = container("tiny")
+    g.weight_data = {}
+    with pytest.raises(ValueError, match="no weight data"):
+        model.build_forward(g)
+
+
+def test_execution_order_is_respected():
+    g = container("tiny")
+    x = ramp_input(g)
+    base = model.build_forward(g, backend="jnp")(x)
+    # Reversed-but-valid order: branch B before branch A (ops 2 and 1 are
+    # both enabled after op 0 in tiny-cnn).
+    g.execution_order = [0, 2, 1, 3, 4, 5, 6]
+    swapped = model.build_forward(g, backend="jnp")(x)
+    for a, b in zip(base, swapped):
+        np.testing.assert_allclose(np.array(a), np.array(b), atol=0, rtol=0)

@@ -1,0 +1,147 @@
+//! Ablation: allocation strategies and defragmentation policies
+//! (DESIGN.md §6; supports Table 1's overhead rows and the §6 discussion).
+//!
+//! Replays the MobileNet execution trace through every policy and reports
+//! arena requirement, compaction traffic, and the modeled MCU overhead; then
+//! micro-benchmarks the allocator hot paths.
+
+use mcu_reorder::alloc::{AllocError, AllocStats, BufId, CompactPolicy, DynamicArena, StaticPlan};
+use mcu_reorder::graph::{DType, Graph};
+use mcu_reorder::mcu::{CostModel, NUCLEO_F767ZI};
+use mcu_reorder::models;
+use mcu_reorder::sched;
+use mcu_reorder::util::bench::{black_box, Bencher, Table};
+
+/// Replay a schedule's alloc/free pattern through an arena (no kernel
+/// execution — pure allocator behaviour).
+fn replay(g: &Graph, order: &[usize], arena: &mut DynamicArena) -> Result<AllocStats, AllocError> {
+    let n = g.tensors.len();
+    let mut handles: Vec<Option<BufId>> = vec![None; n];
+    let mut remaining = vec![0usize; n];
+    for op in &g.ops {
+        for &t in &op.inputs {
+            remaining[t] += 1;
+        }
+    }
+    for &t in &g.inputs {
+        handles[t] = Some(arena.alloc(g.tensors[t].bytes())?);
+    }
+    for &opid in order {
+        let op = &g.ops[opid];
+        handles[op.output] = Some(arena.alloc(g.tensors[op.output].bytes())?);
+        for &t in &op.inputs {
+            remaining[t] -= 1;
+            if remaining[t] == 0 && !g.outputs.contains(&t) {
+                arena.free(handles[t].take().unwrap())?;
+            }
+        }
+        arena.after_op();
+    }
+    Ok(arena.stats().clone())
+}
+
+fn main() {
+    let g = models::mobilenet_v1_025(DType::I8);
+    let order = g.default_order();
+    let peak = sched::peak_of(&g, &order);
+    let board = &NUCLEO_F767ZI;
+
+    let mut static_stats = AllocStats::default();
+    static_stats.high_water = g.activation_total();
+    let model = CostModel::calibrated(&g, &static_stats, board, 1.316, 728.0);
+    let base = model.estimate(&g, &static_stats, board);
+
+    println!("=== allocation-strategy ablation (MobileNet trace) ===\n");
+    let mut t = Table::new(&["strategy", "arena needed", "bytes moved", "compactions", "time overhead", "energy overhead"]);
+
+    // Static no-reuse.
+    t.row(&[
+        "static no-reuse (old TFLM)".into(),
+        format!("{:.0}KB", g.activation_total() as f64 / 1000.0),
+        "0".into(),
+        "0".into(),
+        "0% (baseline)".into(),
+        "0% (baseline)".into(),
+    ]);
+
+    // Dynamic policies.
+    for (name, policy) in [
+        ("dynamic + compact every op (paper)", CompactPolicy::EveryOp),
+        ("dynamic + compact on demand", CompactPolicy::OnDemand),
+        ("dynamic, never compact", CompactPolicy::Never),
+    ] {
+        // Find the smallest arena (KB granularity) that completes.
+        let mut lo = peak;
+        let mut hi = g.activation_total();
+        let fits = |cap: usize| {
+            let mut a = DynamicArena::new(cap, policy);
+            replay(&g, &order, &mut a).is_ok()
+        };
+        if fits(lo) {
+            hi = lo;
+        } else {
+            while hi - lo > 256 {
+                let mid = (lo + hi) / 2;
+                if fits(mid) {
+                    hi = mid;
+                } else {
+                    lo = mid;
+                }
+            }
+        }
+        let mut a = DynamicArena::new(hi, policy);
+        let stats = replay(&g, &order, &mut a).unwrap();
+        let est = model.estimate(&g, &stats, board);
+        t.row(&[
+            name.into(),
+            format!("{:.0}KB", hi as f64 / 1000.0),
+            format!("{:.0}KB", stats.bytes_moved as f64 / 1000.0),
+            format!("{}", stats.compactions),
+            format!("+{:.2}%", 100.0 * (est.seconds / base.seconds - 1.0)),
+            format!("+{:.2}%", 100.0 * (est.energy_mj / base.energy_mj - 1.0)),
+        ]);
+    }
+
+    // Offline best-fit plan (§6).
+    let plan = StaticPlan::best_fit(&g, &order);
+    t.row(&[
+        "offline best-fit plan (§6)".into(),
+        format!("{:.0}KB", plan.arena_bytes as f64 / 1000.0),
+        "0".into(),
+        "0".into(),
+        "+0.00%".into(),
+        "+0.00%".into(),
+    ]);
+    t.print();
+    println!(
+        "\nworking-set peak (lower bound for any strategy): {:.0}KB; paper: 241KB static → 55KB dynamic\n",
+        peak as f64 / 1000.0
+    );
+
+    // --- allocator hot-path micro-benchmarks -------------------------------
+    let mut b = Bencher::new();
+    b.bench("arena/replay-mobilenet-everyop", || {
+        let mut a = DynamicArena::new(64 * 1024, CompactPolicy::EveryOp);
+        black_box(replay(&g, &order, &mut a).unwrap())
+    });
+    b.bench("arena/replay-mobilenet-ondemand", || {
+        let mut a = DynamicArena::new(64 * 1024, CompactPolicy::OnDemand);
+        black_box(replay(&g, &order, &mut a).unwrap())
+    });
+    b.bench("arena/alloc-free-churn", || {
+        let mut a = DynamicArena::new(1 << 20, CompactPolicy::OnDemand);
+        let mut live = Vec::new();
+        for i in 0..256 {
+            live.push(a.alloc(512 + (i % 7) * 128).unwrap());
+            if i % 3 == 0 {
+                a.free(live.remove(0)).unwrap();
+            }
+        }
+        black_box(a.stats().allocs)
+    });
+    b.bench("planner/best-fit-mobilenet", || black_box(StaticPlan::best_fit(&g, &order)));
+    let swift = models::swiftnet_cell(DType::I8);
+    let sorder = sched::optimal(&swift).unwrap().0.order;
+    b.bench("planner/best-fit-swiftnet", || black_box(StaticPlan::best_fit(&swift, &sorder)));
+    b.summary();
+}

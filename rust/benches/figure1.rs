@@ -1,0 +1,41 @@
+//! Bench + regeneration of Figure 1 / Figure 2 / Figure 3 (Appendix A).
+//!
+//! Prints the per-operator working-set tables for the default and optimal
+//! orders of the example graph and times the analysis primitives
+//! (simulation, Algorithm 1, exhaustive enumeration).
+
+use mcu_reorder::models;
+use mcu_reorder::sched;
+use mcu_reorder::util::bench::{black_box, Bencher, Table};
+
+fn main() {
+    let g = models::figure1();
+
+    println!("=== Figure 2: default operator order ===");
+    let fig2 = sched::simulate(&g, &g.default_order());
+    print!("{}", fig2.render_table(&g));
+
+    let (opt, stats) = sched::optimal(&g).unwrap();
+    println!("\n=== Figure 3: optimal operator order (Algorithm 1) ===");
+    let fig3 = sched::simulate(&g, &opt.order);
+    print!("{}", fig3.render_table(&g));
+
+    let bf = sched::bruteforce(&g, usize::MAX).unwrap();
+    let mut t = Table::new(&["quantity", "reproduction", "paper"]);
+    t.row(&["default-order peak".into(), format!("{} B", fig2.peak_bytes), "5216 B".into()]);
+    t.row(&["optimal-order peak".into(), format!("{} B", fig3.peak_bytes), "4960 B".into()]);
+    t.row(&["worst-order peak".into(), format!("{} B", bf.worst.peak_bytes), "—".into()]);
+    t.row(&["topological orders".into(), format!("{}", bf.orders_enumerated), "—".into()]);
+    t.row(&["DP memo states".into(), format!("{}", stats.states), "—".into()]);
+    println!();
+    t.print();
+    println!();
+
+    let mut b = Bencher::new();
+    b.bench("figure1/simulate-default", || black_box(sched::simulate(&g, &g.default_order())));
+    b.bench("figure1/peak_of-default", || black_box(sched::peak_of(&g, &g.default_order())));
+    b.bench("figure1/optimal-dp", || black_box(sched::optimal(&g).unwrap()));
+    b.bench("figure1/optimal-bnb", || black_box(sched::optimal_bnb(&g).unwrap()));
+    b.bench("figure1/bruteforce", || black_box(sched::bruteforce(&g, usize::MAX).unwrap()));
+    b.summary();
+}

@@ -1,0 +1,105 @@
+//! Ablation: scheduler quality and runtime scaling (not a paper table —
+//! DESIGN.md §6 design-choice ablations).
+//!
+//! Sweeps series-parallel DAGs of growing size and compares:
+//! - Algorithm 1 (memoized DP) — optimal;
+//! - branch-and-bound with dominance memo — optimal, different constants;
+//! - greedy min-increase / depth-first — heuristics (optimality gap);
+//! - exhaustive enumeration — ground truth (small sizes only).
+
+use mcu_reorder::models::synth;
+use mcu_reorder::sched;
+use mcu_reorder::util::bench::{black_box, Bencher, Table};
+use mcu_reorder::util::rng::Rng;
+use mcu_reorder::util::stats;
+
+fn main() {
+    println!("=== scheduler ablation: optimality gap (peak / optimal peak) ===\n");
+    let mut quality = Table::new(&["graph", "ops", "orders", "default", "greedy", "dfs", "optimal=1.0"]);
+    let mut rng = Rng::new(2024);
+    for (depth, width) in [(2, 2), (2, 3), (3, 2), (3, 3)] {
+        let g = synth::series_parallel(&mut rng, depth, width);
+        let (opt, _) = sched::optimal(&g).unwrap();
+        let bf = sched::bruteforce(&g, 5_000_000);
+        assert!(bf.as_ref().map_or(true, |b| b.best.peak_bytes == opt.peak_bytes));
+        let ratio = |p: usize| format!("{:.3}", p as f64 / opt.peak_bytes as f64);
+        quality.row(&[
+            format!("sp-{depth}x{width}"),
+            format!("{}", g.n_ops()),
+            bf.as_ref().map_or("—".into(), |b| format!("{}", b.orders_enumerated)),
+            ratio(sched::peak_of(&g, &g.default_order())),
+            ratio(sched::greedy_min_increase(&g).peak_bytes),
+            ratio(sched::greedy_depth_first(&g).peak_bytes),
+            "1.000".into(),
+        ]);
+    }
+    quality.print();
+
+    println!("\n=== average optimality gap over 50 random sp-2x3 graphs ===\n");
+    let mut rng = Rng::new(7);
+    let mut gaps_default = Vec::new();
+    let mut gaps_greedy = Vec::new();
+    for _ in 0..50 {
+        let g = synth::series_parallel(&mut rng, 2, 3);
+        let (opt, _) = sched::optimal(&g).unwrap();
+        gaps_default.push(sched::peak_of(&g, &g.default_order()) as f64 / opt.peak_bytes as f64);
+        gaps_greedy.push(sched::greedy_min_increase(&g).peak_bytes as f64 / opt.peak_bytes as f64);
+    }
+    println!(
+        "default order : mean {:.3}× optimal (max {:.3}×)",
+        stats::mean(&gaps_default),
+        stats::max(&gaps_default)
+    );
+    println!(
+        "greedy        : mean {:.3}× optimal (max {:.3}×)",
+        stats::mean(&gaps_greedy),
+        stats::max(&gaps_greedy)
+    );
+
+    println!("\n=== §6 in-place accumulation ablation (residual nets) ===\n");
+    {
+        use mcu_reorder::graph::DType;
+        use mcu_reorder::sched::Opts;
+        let g = mcu_reorder::models::resnet_micro(DType::I8);
+        let mut t = Table::new(&["schedule", "plain peak", "in-place peak", "saving"]);
+        let d_plain = sched::peak_of(&g, &g.default_order());
+        let d_inp = sched::peak_of_opts(&g, &g.default_order(), Opts::INPLACE);
+        let (o_plain, _) = sched::optimal(&g).unwrap();
+        let (o_inp, _) = sched::optimal_opts(&g, Opts::INPLACE).unwrap();
+        let row = |name: &str, a: usize, b: usize| {
+            [
+                name.to_string(),
+                format!("{:.1}KB", a as f64 / 1000.0),
+                format!("{:.1}KB", b as f64 / 1000.0),
+                format!("{:.1}%", 100.0 * (1.0 - b as f64 / a as f64)),
+            ]
+        };
+        t.row(&row("default order", d_plain, d_inp));
+        t.row(&row("optimal order", o_plain.peak_bytes, o_inp.peak_bytes));
+        t.print();
+    }
+
+    println!("\n=== runtime scaling ===\n");
+    let mut b = Bencher::quick();
+    let mut rng = Rng::new(99);
+    for (depth, width) in [(2, 2), (3, 2), (3, 3), (4, 3)] {
+        let g = synth::series_parallel(&mut rng, depth, width);
+        let n = g.n_ops();
+        b.bench(&format!("optimal-dp/sp-{depth}x{width} ({n} ops)"), || {
+            black_box(sched::optimal(&g).unwrap())
+        });
+        b.bench(&format!("optimal-bnb/sp-{depth}x{width} ({n} ops)"), || {
+            black_box(sched::optimal_bnb(&g).unwrap())
+        });
+        b.bench(&format!("greedy/sp-{depth}x{width} ({n} ops)"), || {
+            black_box(sched::greedy_min_increase(&g))
+        });
+    }
+    // The real networks.
+    use mcu_reorder::graph::DType;
+    let swift = mcu_reorder::models::swiftnet_cell(DType::I8);
+    b.bench("optimal-dp/swiftnet (53 ops)", || black_box(sched::optimal(&swift).unwrap()));
+    let mnet = mcu_reorder::models::mobilenet_v1_025(DType::I8);
+    b.bench("optimal-dp/mobilenet (30 ops)", || black_box(sched::optimal(&mnet).unwrap()));
+    b.summary();
+}

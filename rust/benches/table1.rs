@@ -1,0 +1,100 @@
+//! Bench + regeneration of Table 1 (the paper's headline results).
+//!
+//! Left half: SwiftNet-style cell network, default vs optimal operator
+//! order (peak memory; modeled time/energy for the order that fits).
+//! Right half: MobileNet person detection, static vs dynamic allocation
+//! (peak memory exact; time/energy from the cost model fed with the real
+//! compaction traffic of an arena execution).
+
+use mcu_reorder::alloc::{AllocStats, StaticPlan};
+use mcu_reorder::graph::DType;
+use mcu_reorder::interp::{calibrate, ExecConfig, Interpreter, TensorData, WeightStore};
+use mcu_reorder::mcu::{CostModel, DeployReport, OverheadModel, NUCLEO_F767ZI};
+use mcu_reorder::models;
+use mcu_reorder::sched;
+use mcu_reorder::util::bench::{black_box, Bencher, Table};
+
+fn ramp(n: usize) -> Vec<f32> {
+    (0..n).map(|i| ((i % 17) as f32 - 8.0) / 8.0).collect()
+}
+
+fn main() {
+    // --- SwiftNet columns -------------------------------------------------
+    let swift = models::swiftnet_cell(DType::I8);
+    let swift_default = sched::peak_of(&swift, &swift.default_order());
+    let (swift_opt, _) = sched::optimal(&swift).unwrap();
+    let overhead = OverheadModel::default();
+    let fits_d = DeployReport::new(&swift, swift_default, &NUCLEO_F767ZI, &overhead).fits_sram;
+    let fits_o = DeployReport::new(&swift, swift_opt.peak_bytes, &NUCLEO_F767ZI, &overhead).fits_sram;
+
+    // --- MobileNet columns -------------------------------------------------
+    let mnet = models::mobilenet_v1_025(DType::I8);
+    let static_bytes = StaticPlan::no_reuse(&mnet).arena_bytes;
+    let g_f32 = models::mobilenet_v1_025(DType::F32);
+    let ws_f32 = WeightStore::seeded_f32(&g_f32, 42);
+    let input = TensorData::F32(ramp(g_f32.tensors[g_f32.inputs[0]].elems()));
+    let ranges = calibrate(&g_f32, &ws_f32, &[input.clone()], 1 << 24).unwrap();
+    let ws_i8 = WeightStore::quantize_from(&mnet, &ws_f32, &ranges);
+    let in_q = ws_i8.qparams[&mnet.inputs[0]];
+    let qin = TensorData::I8(in_q.quantize(input.as_f32().unwrap()));
+    let interp = Interpreter::new(&mnet, ws_i8.clone(), ExecConfig::with_capacity(256 * 1024));
+    let run = interp.run(&[qin.clone()]).unwrap();
+
+    let mut static_stats = AllocStats::default();
+    static_stats.high_water = static_bytes;
+    let model = CostModel::calibrated(&mnet, &static_stats, &NUCLEO_F767ZI, 1.316, 728.0);
+    let est_static = model.estimate(&mnet, &static_stats, &NUCLEO_F767ZI);
+    let est_dyn = model.estimate(&mnet, &run.alloc, &NUCLEO_F767ZI);
+    let est_swift = model.estimate(&swift, &run.alloc, &NUCLEO_F767ZI);
+
+    let kb = |b: usize| format!("{:.0}KB", b as f64 / 1000.0);
+    println!("=== Table 1 reproduction ===\n");
+    let mut t = Table::new(&[
+        "",
+        "SwiftNet default",
+        "SwiftNet optimal",
+        "MobileNet static",
+        "MobileNet dynamic",
+    ]);
+    t.row(&[
+        "Peak memory (excl. overheads)".into(),
+        kb(swift_default),
+        kb(swift_opt.peak_bytes),
+        kb(static_bytes),
+        kb(run.alloc.high_water),
+    ]);
+    t.row(&[
+        "Fits 512KB SRAM (+overhead)?".into(),
+        if fits_d { "yes" } else { "NO" }.into(),
+        if fits_o { "yes" } else { "NO" }.into(),
+        "—".into(),
+        "—".into(),
+    ]);
+    t.row(&[
+        "Execution time".into(),
+        "N/A".into(),
+        format!("{:.0} ms", est_swift.millis()),
+        format!("{:.0} ms", est_static.millis()),
+        format!("{:.0} ms (+{:.2}%)", est_dyn.millis(), 100.0 * (est_dyn.seconds / est_static.seconds - 1.0)),
+    ]);
+    t.row(&[
+        "Energy use".into(),
+        "N/A".into(),
+        format!("{:.0} mJ", est_swift.energy_mj),
+        format!("{:.0} mJ", est_static.energy_mj),
+        format!("{:.0} mJ (+{:.2}%)", est_dyn.energy_mj, 100.0 * (est_dyn.energy_mj / est_static.energy_mj - 1.0)),
+    ]);
+    t.print();
+    println!("\npaper: 351KB/301KB (no/yes) · 241KB/55KB · 1316/1325ms (+0.68%) · 728/735mJ (+0.97%)\n");
+
+    // --- timings of the pieces that generate the table ---------------------
+    let mut b = Bencher::quick();
+    b.bench("table1/swiftnet-optimal-schedule", || black_box(sched::optimal(&swift).unwrap()));
+    b.bench("table1/swiftnet-default-peak", || black_box(sched::peak_of(&swift, &swift.default_order())));
+    b.bench("table1/mobilenet-static-plan", || black_box(StaticPlan::no_reuse(&mnet)));
+    b.bench("table1/mobilenet-i8-arena-inference", || {
+        let interp = Interpreter::new(&mnet, ws_i8.clone(), ExecConfig::with_capacity(256 * 1024));
+        black_box(interp.run(std::slice::from_ref(&qin)).unwrap())
+    });
+    b.summary();
+}

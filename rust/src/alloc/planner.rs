@@ -1,0 +1,238 @@
+//! Offline (ahead-of-time) tensor placement.
+//!
+//! Two planners bracket the dynamic allocator:
+//!
+//! - [`StaticPlan::no_reuse`] — the baseline the paper measured against:
+//!   every activation gets its own offset, no reuse. SRAM need = sum of all
+//!   activation bytes (Table 1 "Static alloc.": 241KB for MobileNet).
+//! - [`StaticPlan::best_fit`] — the §6 extension ("when the execution
+//!   schedule is known in advance, optimal tensor buffer placement in
+//!   memory may be precomputed"): lifetime-interval analysis + greedy
+//!   best-fit-decreasing offset assignment (the strategy TFLM's
+//!   `GreedyMemoryPlanner` later adopted). Needs no run-time compaction.
+
+use std::collections::HashMap;
+
+use crate::graph::{Graph, OpId, TensorId};
+
+/// Production/death step of one activation tensor under a given order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Lifetime {
+    pub tensor: TensorId,
+    /// First step (index into the order) at which the tensor is resident.
+    /// Graph inputs are resident from step 0.
+    pub start: usize,
+    /// Last step at which it is resident (inclusive). Graph outputs live to
+    /// the final step.
+    pub end: usize,
+    pub bytes: usize,
+}
+
+/// Compute activation lifetimes under `order` (weights excluded).
+pub fn plan_lifetimes(g: &Graph, order: &[OpId]) -> Vec<Lifetime> {
+    g.check_order(order).expect("plan_lifetimes: invalid order");
+    let n_steps = order.len();
+    let step_of: HashMap<OpId, usize> =
+        order.iter().enumerate().map(|(i, &o)| (o, i)).collect();
+    let mut out = Vec::new();
+    for t in &g.tensors {
+        if t.is_weight {
+            continue;
+        }
+        let start = match t.producer {
+            Some(p) => step_of[&p],
+            None => 0,
+        };
+        let mut end = if g.outputs.contains(&t.id) {
+            n_steps.saturating_sub(1)
+        } else {
+            start
+        };
+        for &c in &t.consumers {
+            if g.ops[c].inputs.contains(&t.id) {
+                end = end.max(step_of[&c]);
+            }
+        }
+        out.push(Lifetime { tensor: t.id, start, end, bytes: t.bytes() });
+    }
+    out
+}
+
+/// An offline placement: offsets for every activation tensor plus the
+/// arena size it requires.
+#[derive(Clone, Debug)]
+pub struct StaticPlan {
+    /// `tensor id → offset`; only activation tensors appear.
+    pub offsets: HashMap<TensorId, usize>,
+    /// Bytes of SRAM the plan needs (`max(offset + len)`).
+    pub arena_bytes: usize,
+    /// Human-readable name of the strategy (reports/benches).
+    pub strategy: &'static str,
+}
+
+impl StaticPlan {
+    /// Old-TFLM behaviour: all activations pre-allocated side by side.
+    pub fn no_reuse(g: &Graph) -> StaticPlan {
+        let mut offsets = HashMap::new();
+        let mut cursor = 0usize;
+        for t in &g.tensors {
+            if t.is_weight {
+                continue;
+            }
+            offsets.insert(t.id, cursor);
+            cursor += t.bytes();
+        }
+        StaticPlan { offsets, arena_bytes: cursor, strategy: "static-no-reuse" }
+    }
+
+    /// Lifetime-aware greedy best-fit-decreasing placement for a known
+    /// execution order.
+    ///
+    /// Tensors are placed largest-first; each goes to the lowest offset
+    /// where it does not overlap (in address space) any already-placed
+    /// tensor with an intersecting lifetime. Zero-byte tensors all sit at
+    /// offset 0.
+    pub fn best_fit(g: &Graph, order: &[OpId]) -> StaticPlan {
+        let mut lifetimes = plan_lifetimes(g, order);
+        lifetimes.sort_by(|a, b| b.bytes.cmp(&a.bytes).then(a.tensor.cmp(&b.tensor)));
+
+        // placed: (offset, lifetime)
+        let mut placed: Vec<(usize, Lifetime)> = Vec::new();
+        let mut offsets = HashMap::new();
+        let mut arena = 0usize;
+
+        for lt in lifetimes {
+            // Collect address intervals of time-overlapping tensors, sorted
+            // by offset; first-fit the new tensor into the gaps.
+            let mut busy: Vec<(usize, usize)> = placed
+                .iter()
+                .filter(|(_, other)| !(other.end < lt.start || other.start > lt.end))
+                .map(|(off, other)| (*off, *off + other.bytes))
+                .collect();
+            busy.sort_unstable();
+            let mut offset = 0usize;
+            for (lo, hi) in busy {
+                if lo >= offset + lt.bytes {
+                    break; // fits in the gap before `lo`
+                }
+                offset = offset.max(hi);
+            }
+            offsets.insert(lt.tensor, offset);
+            arena = arena.max(offset + lt.bytes);
+            placed.push((offset, lt));
+        }
+        StaticPlan { offsets, arena_bytes: arena, strategy: "planned-best-fit" }
+    }
+
+    /// Verify no two simultaneously-live tensors overlap in address space
+    /// and the plan stays within `arena_bytes`.
+    pub fn check_no_overlap(&self, g: &Graph, order: &[OpId]) -> Result<(), String> {
+        let lifetimes = plan_lifetimes(g, order);
+        for (i, a) in lifetimes.iter().enumerate() {
+            let ao = *self
+                .offsets
+                .get(&a.tensor)
+                .ok_or_else(|| format!("tensor {} unplaced", a.tensor))?;
+            if ao + a.bytes > self.arena_bytes {
+                return Err(format!("tensor {} exceeds arena", a.tensor));
+            }
+            for b in &lifetimes[i + 1..] {
+                let time_overlap = !(b.end < a.start || b.start > a.end);
+                if !time_overlap || a.bytes == 0 || b.bytes == 0 {
+                    continue;
+                }
+                let bo = self.offsets[&b.tensor];
+                let addr_overlap = ao < bo + b.bytes && bo < ao + a.bytes;
+                if addr_overlap {
+                    return Err(format!(
+                        "tensors {} and {} overlap in time and address",
+                        a.tensor, b.tensor
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{DType, GraphBuilder};
+    use crate::sched::{peak_of, simulate};
+    use crate::util::prop;
+
+    #[test]
+    fn lifetimes_of_figure1_default_order() {
+        let g = crate::sched::tests::figure1_graph();
+        let order = g.default_order();
+        let lts = plan_lifetimes(&g, &order);
+        let by_name = |name: &str| {
+            let id = g.tensor_by_name(name).unwrap().id;
+            *lts.iter().find(|l| l.tensor == id).unwrap()
+        };
+        // t1 (output of op1) is produced at step 0 and last consumed by
+        // op4 at step 3.
+        let t1 = by_name("op1");
+        assert_eq!((t1.start, t1.end), (0, 3));
+        // Graph input lives [0, 0] (only op1 consumes it).
+        let t0 = by_name("t0");
+        assert_eq!((t0.start, t0.end), (0, 0));
+        // Output lives to the last step.
+        let t7 = by_name("op7");
+        assert_eq!((t7.start, t7.end), (6, 6));
+    }
+
+    #[test]
+    fn no_reuse_equals_activation_total() {
+        let g = crate::sched::tests::figure1_graph();
+        let plan = StaticPlan::no_reuse(&g);
+        assert_eq!(plan.arena_bytes, g.activation_total());
+        plan.check_no_overlap(&g, &g.default_order()).unwrap();
+    }
+
+    #[test]
+    fn best_fit_is_between_peak_and_total() {
+        let g = crate::sched::tests::figure1_graph();
+        let order = g.default_order();
+        let plan = StaticPlan::best_fit(&g, &order);
+        plan.check_no_overlap(&g, &order).unwrap();
+        let peak = peak_of(&g, &order);
+        assert!(plan.arena_bytes >= peak);
+        assert!(plan.arena_bytes <= g.activation_total());
+    }
+
+    #[test]
+    fn best_fit_reuses_memory_on_chains() {
+        // Chain of equal-size tensors: plan should ping-pong two slots.
+        let mut b = GraphBuilder::new("chain");
+        let mut t = b.input("x", &[256], DType::U8);
+        for i in 0..8 {
+            t = b.synthetic(&format!("s{i}"), &[t], 256, 0);
+        }
+        b.output(t);
+        let g = b.finish().unwrap();
+        let plan = StaticPlan::best_fit(&g, &g.default_order());
+        assert_eq!(plan.arena_bytes, 512, "chain should need exactly two slots");
+    }
+
+    #[test]
+    fn prop_best_fit_never_overlaps_on_random_dags() {
+        prop::check_sized("best-fit-no-overlap", 60, 3, 10, |rng, n| {
+            let g = crate::sched::bruteforce::tests::random_dag(rng, n);
+            let order = g.topo_order().unwrap();
+            let plan = StaticPlan::best_fit(&g, &order);
+            plan.check_no_overlap(&g, &order).unwrap();
+            let peak = peak_of(&g, &order);
+            assert!(plan.arena_bytes >= peak);
+            assert!(plan.arena_bytes <= g.activation_total());
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid order")]
+    fn lifetimes_reject_bad_order() {
+        let g = crate::sched::tests::figure1_graph();
+        plan_lifetimes(&g, &[1, 0, 2, 3, 4, 5, 6]);
+    }
+}

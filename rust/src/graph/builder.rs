@@ -1,0 +1,390 @@
+//! Fluent graph construction with shape inference.
+//!
+//! The model zoo builds networks through this API; output shapes and weight
+//! tensor sizes are derived from the layer parameters so the byte-exact
+//! memory accounting cannot drift from the architecture definition.
+
+use super::{Act, DType, Graph, GraphError, Op, OpKind, Padding, Tensor, TensorId};
+
+/// Incremental graph builder. Ops are appended in call order, which becomes
+/// the graph's *default* execution order (the baseline schedule).
+pub struct GraphBuilder {
+    g: Graph,
+}
+
+fn conv_out_dim(input: usize, k: usize, stride: usize, padding: Padding) -> usize {
+    match padding {
+        Padding::Same => input.div_ceil(stride),
+        Padding::Valid => {
+            assert!(input >= k, "valid padding with input {input} < kernel {k}");
+            (input - k) / stride + 1
+        }
+    }
+}
+
+impl GraphBuilder {
+    pub fn new(name: impl Into<String>) -> Self {
+        GraphBuilder { g: Graph::new(name) }
+    }
+
+    // ---- tensors -------------------------------------------------------
+
+    fn add_tensor(&mut self, name: String, shape: Vec<usize>, dtype: DType, is_weight: bool) -> TensorId {
+        let id = self.g.tensors.len();
+        self.g.tensors.push(Tensor {
+            id,
+            name,
+            shape,
+            dtype,
+            producer: None,
+            consumers: Vec::new(),
+            is_weight,
+        });
+        id
+    }
+
+    /// Declare a graph input (activation, SRAM-resident).
+    pub fn input(&mut self, name: &str, shape: &[usize], dtype: DType) -> TensorId {
+        let id = self.add_tensor(name.to_string(), shape.to_vec(), dtype, false);
+        self.g.inputs.push(id);
+        id
+    }
+
+    /// Declare a weight/constant tensor (Flash-resident).
+    pub fn weight(&mut self, name: &str, shape: &[usize], dtype: DType) -> TensorId {
+        self.add_tensor(name.to_string(), shape.to_vec(), dtype, true)
+    }
+
+    /// Mark a tensor as a graph output.
+    pub fn output(&mut self, t: TensorId) {
+        self.g.outputs.push(t);
+    }
+
+    // ---- op plumbing ----------------------------------------------------
+
+    fn add_op(
+        &mut self,
+        name: &str,
+        kind: OpKind,
+        inputs: Vec<TensorId>,
+        weights: Vec<TensorId>,
+        out_shape: Vec<usize>,
+        out_dtype: DType,
+    ) -> TensorId {
+        let opid = self.g.ops.len();
+        let out = self.add_tensor(name.to_string(), out_shape, out_dtype, false);
+        self.g.tensors[out].producer = Some(opid);
+        for &t in inputs.iter().chain(&weights) {
+            self.g.tensors[t].consumers.push(opid);
+        }
+        self.g.ops.push(Op { id: opid, name: name.to_string(), kind, inputs, weights, output: out });
+        out
+    }
+
+    fn shape(&self, t: TensorId) -> &[usize] {
+        &self.g.tensors[t].shape
+    }
+
+    fn dtype(&self, t: TensorId) -> DType {
+        self.g.tensors[t].dtype
+    }
+
+    // ---- layers ---------------------------------------------------------
+
+    /// 2D convolution with implicit weight + bias tensors.
+    pub fn conv2d(
+        &mut self,
+        name: &str,
+        input: TensorId,
+        cout: usize,
+        kernel: (usize, usize),
+        stride: (usize, usize),
+        padding: Padding,
+        act: Act,
+    ) -> TensorId {
+        let (n, h, w, cin) = nhwc(self.shape(input));
+        let oh = conv_out_dim(h, kernel.0, stride.0, padding);
+        let ow = conv_out_dim(w, kernel.1, stride.1, padding);
+        let dt = self.dtype(input);
+        let wt = self.weight(&format!("{name}.w"), &[kernel.0, kernel.1, cin, cout], dt);
+        let bias = self.weight(&format!("{name}.b"), &[cout], DType::I32.pick_bias(dt));
+        self.add_op(
+            name,
+            OpKind::Conv2D { kernel, stride, padding, act },
+            vec![input],
+            vec![wt, bias],
+            vec![n, oh, ow, cout],
+            dt,
+        )
+    }
+
+    /// Depthwise 2D convolution (multiplier 1) with implicit weight + bias.
+    pub fn dwconv2d(
+        &mut self,
+        name: &str,
+        input: TensorId,
+        kernel: (usize, usize),
+        stride: (usize, usize),
+        padding: Padding,
+        act: Act,
+    ) -> TensorId {
+        let (n, h, w, c) = nhwc(self.shape(input));
+        let oh = conv_out_dim(h, kernel.0, stride.0, padding);
+        let ow = conv_out_dim(w, kernel.1, stride.1, padding);
+        let dt = self.dtype(input);
+        let wt = self.weight(&format!("{name}.w"), &[kernel.0, kernel.1, c], dt);
+        let bias = self.weight(&format!("{name}.b"), &[c], DType::I32.pick_bias(dt));
+        self.add_op(
+            name,
+            OpKind::DepthwiseConv2D { kernel, stride, padding, act },
+            vec![input],
+            vec![wt, bias],
+            vec![n, oh, ow, c],
+            dt,
+        )
+    }
+
+    /// Fully-connected layer over a flattened input.
+    pub fn dense(&mut self, name: &str, input: TensorId, out_features: usize, act: Act) -> TensorId {
+        let in_features = self.g.tensors[input].elems();
+        let dt = self.dtype(input);
+        let wt = self.weight(&format!("{name}.w"), &[in_features, out_features], dt);
+        let bias = self.weight(&format!("{name}.b"), &[out_features], DType::I32.pick_bias(dt));
+        self.add_op(name, OpKind::Dense { act }, vec![input], vec![wt, bias], vec![1, out_features], dt)
+    }
+
+    /// Elementwise add; shapes must match.
+    pub fn add(&mut self, name: &str, a: TensorId, b: TensorId) -> TensorId {
+        assert_eq!(self.shape(a), self.shape(b), "add shape mismatch at {name}");
+        let shape = self.shape(a).to_vec();
+        let dt = self.dtype(a);
+        self.add_op(name, OpKind::Add, vec![a, b], vec![], shape, dt)
+    }
+
+    /// Channel-axis concatenation of two or more tensors.
+    pub fn concat(&mut self, name: &str, parts: &[TensorId]) -> TensorId {
+        assert!(parts.len() >= 2, "concat needs >=2 inputs at {name}");
+        let first = self.shape(parts[0]).to_vec();
+        let mut c_total = 0;
+        for &p in parts {
+            let s = self.shape(p);
+            assert_eq!(s.len(), first.len(), "concat rank mismatch at {name}");
+            assert_eq!(&s[..s.len() - 1], &first[..first.len() - 1], "concat spatial mismatch at {name}");
+            c_total += s[s.len() - 1];
+        }
+        let mut shape = first;
+        *shape.last_mut().unwrap() = c_total;
+        let dt = self.dtype(parts[0]);
+        self.add_op(name, OpKind::Concat, parts.to_vec(), vec![], shape, dt)
+    }
+
+    /// Elementwise ReLU.
+    pub fn relu(&mut self, name: &str, input: TensorId) -> TensorId {
+        let shape = self.shape(input).to_vec();
+        let dt = self.dtype(input);
+        self.add_op(name, OpKind::Relu, vec![input], vec![], shape, dt)
+    }
+
+    /// Elementwise ReLU6.
+    pub fn relu6(&mut self, name: &str, input: TensorId) -> TensorId {
+        let shape = self.shape(input).to_vec();
+        let dt = self.dtype(input);
+        self.add_op(name, OpKind::Relu6, vec![input], vec![], shape, dt)
+    }
+
+    /// 2D max pooling.
+    pub fn maxpool(
+        &mut self,
+        name: &str,
+        input: TensorId,
+        kernel: (usize, usize),
+        stride: (usize, usize),
+        padding: Padding,
+    ) -> TensorId {
+        let (n, h, w, c) = nhwc(self.shape(input));
+        let oh = conv_out_dim(h, kernel.0, stride.0, padding);
+        let ow = conv_out_dim(w, kernel.1, stride.1, padding);
+        let dt = self.dtype(input);
+        self.add_op(name, OpKind::MaxPool2D { kernel, stride, padding }, vec![input], vec![], vec![n, oh, ow, c], dt)
+    }
+
+    /// 2D average pooling.
+    pub fn avgpool(
+        &mut self,
+        name: &str,
+        input: TensorId,
+        kernel: (usize, usize),
+        stride: (usize, usize),
+        padding: Padding,
+    ) -> TensorId {
+        let (n, h, w, c) = nhwc(self.shape(input));
+        let oh = conv_out_dim(h, kernel.0, stride.0, padding);
+        let ow = conv_out_dim(w, kernel.1, stride.1, padding);
+        let dt = self.dtype(input);
+        self.add_op(name, OpKind::AvgPool2D { kernel, stride, padding }, vec![input], vec![], vec![n, oh, ow, c], dt)
+    }
+
+    /// Global average pool to `[1,1,1,C]`.
+    pub fn global_avgpool(&mut self, name: &str, input: TensorId) -> TensorId {
+        let (n, _, _, c) = nhwc(self.shape(input));
+        let dt = self.dtype(input);
+        self.add_op(name, OpKind::GlobalAvgPool, vec![input], vec![], vec![n, 1, 1, c], dt)
+    }
+
+    /// Inference batch normalization with implicit γ/β/μ/σ² weights.
+    pub fn batchnorm(&mut self, name: &str, input: TensorId, eps: f32) -> TensorId {
+        let shape = self.shape(input).to_vec();
+        let c = *shape.last().expect("batchnorm needs a channel axis");
+        let dt = self.dtype(input);
+        let gamma = self.weight(&format!("{name}.gamma"), &[c], DType::F32);
+        let beta = self.weight(&format!("{name}.beta"), &[c], DType::F32);
+        let mean = self.weight(&format!("{name}.mean"), &[c], DType::F32);
+        let var = self.weight(&format!("{name}.var"), &[c], DType::F32);
+        self.add_op(name, OpKind::BatchNorm { eps }, vec![input], vec![gamma, beta, mean, var], shape, dt)
+    }
+
+    /// Softmax over the last axis.
+    pub fn softmax(&mut self, name: &str, input: TensorId) -> TensorId {
+        let shape = self.shape(input).to_vec();
+        let dt = self.dtype(input);
+        self.add_op(name, OpKind::Softmax, vec![input], vec![], shape, dt)
+    }
+
+    /// Reshape (element count must be preserved).
+    pub fn reshape(&mut self, name: &str, input: TensorId, shape: &[usize]) -> TensorId {
+        assert_eq!(
+            self.g.tensors[input].elems(),
+            shape.iter().product::<usize>(),
+            "reshape element mismatch at {name}"
+        );
+        let dt = self.dtype(input);
+        self.add_op(name, OpKind::Reshape, vec![input], vec![], shape.to_vec(), dt)
+    }
+
+    /// Synthetic op for generated DAGs: arbitrary inputs, explicit output
+    /// byte size (as a `[bytes]` u8 tensor) and MAC count.
+    pub fn synthetic(&mut self, name: &str, inputs: &[TensorId], out_bytes: usize, macs: u64) -> TensorId {
+        self.add_op(name, OpKind::Synthetic { macs }, inputs.to_vec(), vec![], vec![out_bytes], DType::U8)
+    }
+
+    /// Validate and return the finished graph.
+    pub fn finish(self) -> Result<Graph, GraphError> {
+        self.g.validate()?;
+        Ok(self.g)
+    }
+
+    /// Access the graph under construction (tests).
+    pub fn graph(&self) -> &Graph {
+        &self.g
+    }
+}
+
+fn nhwc(shape: &[usize]) -> (usize, usize, usize, usize) {
+    assert_eq!(shape.len(), 4, "expected NHWC shape, got {shape:?}");
+    (shape[0], shape[1], shape[2], shape[3])
+}
+
+impl DType {
+    /// Bias dtype convention: f32 models carry f32 biases, quantized models
+    /// carry i32 biases (TFLite convention).
+    fn pick_bias(self, activation: DType) -> DType {
+        match activation {
+            DType::F32 => DType::F32,
+            _ => self,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_shape_same_padding() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[1, 96, 96, 1], DType::I8);
+        let y = b.conv2d("c1", x, 8, (3, 3), (2, 2), Padding::Same, Act::Linear);
+        assert_eq!(b.shape(y), &[1, 48, 48, 8]);
+        b.output(y);
+        let g = b.finish().unwrap();
+        assert_eq!(g.tensor_by_name("c1").unwrap().bytes(), 48 * 48 * 8);
+    }
+
+    #[test]
+    fn conv_shape_valid_padding() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[1, 10, 10, 3], DType::F32);
+        let y = b.conv2d("c", x, 4, (3, 3), (1, 1), Padding::Valid, Act::Linear);
+        assert_eq!(b.shape(y), &[1, 8, 8, 4]);
+    }
+
+    #[test]
+    fn dwconv_preserves_channels() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[1, 48, 48, 8], DType::I8);
+        let y = b.dwconv2d("dw", x, (3, 3), (1, 1), Padding::Same, Act::Linear);
+        assert_eq!(b.shape(y), &[1, 48, 48, 8]);
+    }
+
+    #[test]
+    fn concat_sums_channels() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[1, 8, 8, 4], DType::I8);
+        let l = b.relu("l", x);
+        let r = b.relu("r", x);
+        let c = b.concat("c", &[l, r]);
+        assert_eq!(b.shape(c), &[1, 8, 8, 8]);
+    }
+
+    #[test]
+    fn weights_are_flash_resident() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[1, 8, 8, 4], DType::I8);
+        let y = b.conv2d("c", x, 8, (1, 1), (1, 1), Padding::Same, Act::Linear);
+        b.output(y);
+        let g = b.finish().unwrap();
+        // weight [1,1,4,8] = 32 B + bias 8*4 = 32 B
+        assert_eq!(g.model_size(), 32 + 32);
+        // activations: input 256 + output 512
+        assert_eq!(g.activation_total(), 8 * 8 * 4 + 8 * 8 * 8);
+    }
+
+    #[test]
+    fn dense_flattens() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[1, 1, 1, 256], DType::I8);
+        let y = b.dense("fc", x, 2, Act::Linear);
+        assert_eq!(b.shape(y), &[1, 2]);
+        b.output(y);
+        let g = b.finish().unwrap();
+        assert_eq!(g.op_by_name("fc").unwrap().macs(&g), 512);
+    }
+
+    #[test]
+    fn global_avgpool_shape() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[1, 3, 3, 128], DType::I8);
+        let y = b.global_avgpool("gap", x);
+        assert_eq!(b.shape(y), &[1, 1, 1, 128]);
+    }
+
+    #[test]
+    #[should_panic(expected = "add shape mismatch")]
+    fn add_rejects_mismatched_shapes() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[1, 4, 4, 2], DType::F32);
+        let y = b.input("y", &[1, 4, 4, 3], DType::F32);
+        b.add("bad", x, y);
+    }
+
+    #[test]
+    fn synthetic_bytes_are_exact() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[1568], DType::U8);
+        let y = b.synthetic("s", &[x], 3136, 1000);
+        b.output(y);
+        let g = b.finish().unwrap();
+        assert_eq!(g.tensor_by_name("s").unwrap().bytes(), 3136);
+        assert_eq!(g.op_by_name("s").unwrap().macs(&g), 1000);
+    }
+}

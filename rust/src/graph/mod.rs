@@ -1,0 +1,581 @@
+//! Computation-graph IR.
+//!
+//! A model is a DAG of single-output operators over tensors (§2.1 of the
+//! paper). Tensors are either *activations* (produced at runtime, live in
+//! SRAM) or *weights/constants* (baked into NOR-Flash and therefore excluded
+//! from the working set, §2.2). Each operator lists activation inputs and
+//! weight inputs separately so the schedulers only ever reason about
+//! activations.
+//!
+//! The IR carries enough shape/dtype information to (a) account for memory
+//! byte-exactly, (b) execute the graph in the micro-interpreter, and (c)
+//! cross-check the AOT-compiled HLO artifacts' shapes.
+
+mod builder;
+pub mod serde;
+pub mod transform;
+
+pub use builder::GraphBuilder;
+
+use std::collections::HashMap;
+
+use crate::util::bitset::BitSet;
+
+/// Index of a tensor within its graph.
+pub type TensorId = usize;
+/// Index of an operator within its graph.
+pub type OpId = usize;
+
+/// Element type of a tensor. MCU deployments quantize activations and
+/// weights to `I8`; the PJRT execution path uses `F32`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    I32,
+    I8,
+    U8,
+}
+
+impl DType {
+    /// Bytes per element.
+    pub fn size(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::I8 | DType::U8 => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+            DType::I8 => "i8",
+            DType::U8 => "u8",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<DType> {
+        match s {
+            "f32" => Some(DType::F32),
+            "i32" => Some(DType::I32),
+            "i8" => Some(DType::I8),
+            "u8" => Some(DType::U8),
+            _ => None,
+        }
+    }
+}
+
+/// Spatial padding mode for convolution/pooling.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Padding {
+    /// Output spatial size = ceil(in / stride); zero-pads evenly.
+    Same,
+    /// No padding; output = floor((in - k) / stride) + 1.
+    Valid,
+}
+
+/// Fused activation applied by a compute operator before writing its
+/// output (MCU deployments fuse activations into the preceding op, so no
+/// extra tensor is materialized — this matters for memory accounting).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Act {
+    Linear,
+    Relu,
+    Relu6,
+}
+
+impl Act {
+    pub fn name(self) -> &'static str {
+        match self {
+            Act::Linear => "linear",
+            Act::Relu => "relu",
+            Act::Relu6 => "relu6",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Act> {
+        match s {
+            "linear" => Some(Act::Linear),
+            "relu" => Some(Act::Relu),
+            "relu6" => Some(Act::Relu6),
+            _ => None,
+        }
+    }
+}
+
+/// Operator kind. Shapes follow NHWC with N == 1 (single-image MCU
+/// inference).
+#[derive(Clone, Debug, PartialEq)]
+pub enum OpKind {
+    /// Standard 2D convolution; weights `[kh, kw, cin, cout]`.
+    Conv2D { kernel: (usize, usize), stride: (usize, usize), padding: Padding, act: Act },
+    /// Depthwise 2D convolution (channel multiplier 1); weights `[kh, kw, c]`.
+    DepthwiseConv2D { kernel: (usize, usize), stride: (usize, usize), padding: Padding, act: Act },
+    /// Fully connected; weights `[in, out]`.
+    Dense { act: Act },
+    /// Elementwise addition of two tensors of identical shape.
+    Add,
+    /// Concatenation along the channel (last) axis.
+    Concat,
+    /// Rectified linear activation (elementwise).
+    Relu,
+    /// ReLU clipped at 6 (elementwise), as used by MobileNet.
+    Relu6,
+    /// 2D max pooling.
+    MaxPool2D { kernel: (usize, usize), stride: (usize, usize), padding: Padding },
+    /// 2D average pooling.
+    AvgPool2D { kernel: (usize, usize), stride: (usize, usize), padding: Padding },
+    /// Global average pooling over H and W → `[1, 1, 1, C]`.
+    GlobalAvgPool,
+    /// Batch normalization (inference): `y = γ·(x−μ)/√(σ²+ε) + β`;
+    /// weights `[γ, β, μ, σ²]`, each `[C]`. Foldable into a preceding
+    /// linear op (see [`transform::fold_batchnorm`]).
+    BatchNorm { eps: f32 },
+    /// Softmax over the last axis.
+    Softmax,
+    /// Shape-only view change (no data movement on MCU; modeled as a copy
+    /// in the interpreter for simplicity).
+    Reshape,
+    /// Synthetic operator for generated DAGs: pure cost-model node with an
+    /// explicit MAC count; executes as identity-ish mix in the interpreter.
+    Synthetic { macs: u64 },
+}
+
+impl OpKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            OpKind::Conv2D { .. } => "Conv2D",
+            OpKind::DepthwiseConv2D { .. } => "DepthwiseConv2D",
+            OpKind::Dense { .. } => "Dense",
+            OpKind::Add => "Add",
+            OpKind::Concat => "Concat",
+            OpKind::Relu => "Relu",
+            OpKind::Relu6 => "Relu6",
+            OpKind::MaxPool2D { .. } => "MaxPool2D",
+            OpKind::AvgPool2D { .. } => "AvgPool2D",
+            OpKind::GlobalAvgPool => "GlobalAvgPool",
+            OpKind::BatchNorm { .. } => "BatchNorm",
+            OpKind::Softmax => "Softmax",
+            OpKind::Reshape => "Reshape",
+            OpKind::Synthetic { .. } => "Synthetic",
+        }
+    }
+}
+
+/// A tensor: shape, dtype, and its role in the dataflow.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub id: TensorId,
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    /// Operator that produces this tensor; `None` for graph inputs and
+    /// weights.
+    pub producer: Option<OpId>,
+    /// Operators that consume this tensor.
+    pub consumers: Vec<OpId>,
+    /// `true` for weights/constants (NOR-Flash resident; never in the
+    /// working set).
+    pub is_weight: bool,
+}
+
+impl Tensor {
+    /// Total element count.
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// Size in bytes (what the working-set accounting sums).
+    pub fn bytes(&self) -> usize {
+        self.elems() * self.dtype.size()
+    }
+}
+
+/// A single-output operator.
+#[derive(Clone, Debug)]
+pub struct Op {
+    pub id: OpId,
+    pub name: String,
+    pub kind: OpKind,
+    /// Activation inputs (SRAM tensors).
+    pub inputs: Vec<TensorId>,
+    /// Weight inputs (Flash tensors, excluded from scheduling).
+    pub weights: Vec<TensorId>,
+    /// The single output tensor.
+    pub output: TensorId,
+}
+
+impl Op {
+    /// Multiply-accumulate count of this operator given its graph (for the
+    /// MCU cycle model).
+    pub fn macs(&self, g: &Graph) -> u64 {
+        let out = &g.tensors[self.output];
+        let out_elems = out.elems() as u64;
+        match &self.kind {
+            OpKind::Conv2D { kernel: (kh, kw), .. } => {
+                let cin = g.tensors[self.inputs[0]].shape.last().copied().unwrap_or(1) as u64;
+                out_elems * (*kh as u64) * (*kw as u64) * cin
+            }
+            OpKind::DepthwiseConv2D { kernel: (kh, kw), .. } => {
+                out_elems * (*kh as u64) * (*kw as u64)
+            }
+            OpKind::Dense { .. } => {
+                let cin = g.tensors[self.inputs[0]].elems() as u64;
+                out_elems * cin
+            }
+            OpKind::Add | OpKind::Relu | OpKind::Relu6 | OpKind::Softmax => out_elems,
+            OpKind::BatchNorm { .. } => 2 * out_elems,
+            OpKind::MaxPool2D { kernel: (kh, kw), .. }
+            | OpKind::AvgPool2D { kernel: (kh, kw), .. } => {
+                out_elems * (*kh as u64) * (*kw as u64)
+            }
+            OpKind::GlobalAvgPool => g.tensors[self.inputs[0]].elems() as u64,
+            OpKind::Concat | OpKind::Reshape => 0,
+            OpKind::Synthetic { macs } => *macs,
+        }
+    }
+
+    /// Bytes read + written by this operator (activation traffic only).
+    pub fn bytes_touched(&self, g: &Graph) -> u64 {
+        let read: usize = self.inputs.iter().map(|&t| g.tensors[t].bytes()).sum();
+        let weights: usize = self.weights.iter().map(|&t| g.tensors[t].bytes()).sum();
+        (read + weights + g.tensors[self.output].bytes()) as u64
+    }
+}
+
+/// Errors raised by graph validation.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum GraphError {
+    DanglingTensor(TensorId),
+    BadProducer(TensorId),
+    WeightWithProducer(TensorId),
+    MultipleProducers(TensorId),
+    EmptyOutputs,
+    CycleDetected,
+    BadOrder(String),
+}
+
+impl std::fmt::Display for GraphError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            GraphError::DanglingTensor(t) => write!(f, "tensor {t} referenced but not defined"),
+            GraphError::BadProducer(t) => write!(f, "tensor {t} producer link inconsistent"),
+            GraphError::WeightWithProducer(t) => write!(f, "weight tensor {t} has a producer"),
+            GraphError::MultipleProducers(t) => write!(f, "tensor {t} produced twice"),
+            GraphError::EmptyOutputs => write!(f, "graph declares no outputs"),
+            GraphError::CycleDetected => write!(f, "graph contains a cycle"),
+            GraphError::BadOrder(m) => write!(f, "invalid execution order: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for GraphError {}
+
+/// The computation graph.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub name: String,
+    pub tensors: Vec<Tensor>,
+    pub ops: Vec<Op>,
+    /// Graph input tensors (activations with no producer).
+    pub inputs: Vec<TensorId>,
+    /// Graph output tensors (kept live until the end).
+    pub outputs: Vec<TensorId>,
+}
+
+impl Graph {
+    pub fn new(name: impl Into<String>) -> Self {
+        Graph { name: name.into(), tensors: Vec::new(), ops: Vec::new(), inputs: Vec::new(), outputs: Vec::new() }
+    }
+
+    pub fn n_tensors(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn n_ops(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// The model's default (as-built) execution order — what a converter
+    /// embeds in the flatbuffer; the baseline the paper improves on.
+    pub fn default_order(&self) -> Vec<OpId> {
+        (0..self.ops.len()).collect()
+    }
+
+    /// Total bytes of weights (NOR-Flash footprint, "model size").
+    pub fn model_size(&self) -> usize {
+        self.tensors.iter().filter(|t| t.is_weight).map(|t| t.bytes()).sum()
+    }
+
+    /// Total bytes of all activations (what a no-reuse static planner
+    /// allocates, including graph inputs).
+    pub fn activation_total(&self) -> usize {
+        self.tensors.iter().filter(|t| !t.is_weight).map(|t| t.bytes()).sum()
+    }
+
+    /// Total multiply-accumulate count.
+    pub fn total_macs(&self) -> u64 {
+        self.ops.iter().map(|o| o.macs(self)).sum()
+    }
+
+    /// Structural validation: every link consistent, single producer per
+    /// tensor, weights producer-free, DAG acyclic, outputs non-empty.
+    pub fn validate(&self) -> Result<(), GraphError> {
+        let n = self.tensors.len();
+        let check = |t: TensorId| if t < n { Ok(()) } else { Err(GraphError::DanglingTensor(t)) };
+        if self.outputs.is_empty() {
+            return Err(GraphError::EmptyOutputs);
+        }
+        let mut produced: HashMap<TensorId, OpId> = HashMap::new();
+        for op in &self.ops {
+            for &t in op.inputs.iter().chain(&op.weights) {
+                check(t)?;
+            }
+            check(op.output)?;
+            if produced.insert(op.output, op.id).is_some() {
+                return Err(GraphError::MultipleProducers(op.output));
+            }
+        }
+        for t in &self.tensors {
+            match (t.producer, produced.get(&t.id)) {
+                (Some(p), Some(&q)) if p == q => {}
+                (None, None) => {}
+                _ => return Err(GraphError::BadProducer(t.id)),
+            }
+            if t.is_weight && t.producer.is_some() {
+                return Err(GraphError::WeightWithProducer(t.id));
+            }
+            for &c in &t.consumers {
+                let op = self.ops.get(c).ok_or(GraphError::BadProducer(t.id))?;
+                if !op.inputs.contains(&t.id) && !op.weights.contains(&t.id) {
+                    return Err(GraphError::BadProducer(t.id));
+                }
+            }
+        }
+        for &t in self.inputs.iter().chain(&self.outputs) {
+            check(t)?;
+        }
+        // Acyclicity via Kahn's algorithm over ops.
+        if self.topo_order().is_none() {
+            return Err(GraphError::CycleDetected);
+        }
+        Ok(())
+    }
+
+    /// Some topological order of the ops (Kahn); `None` if cyclic.
+    pub fn topo_order(&self) -> Option<Vec<OpId>> {
+        let mut indeg = vec![0usize; self.ops.len()];
+        for op in &self.ops {
+            for &t in &op.inputs {
+                if self.tensors[t].producer.is_some() {
+                    indeg[op.id] += 1;
+                }
+            }
+        }
+        let mut ready: Vec<OpId> = indeg
+            .iter()
+            .enumerate()
+            .filter(|(_, &d)| d == 0)
+            .map(|(i, _)| i)
+            .collect();
+        ready.reverse();
+        let mut order = Vec::with_capacity(self.ops.len());
+        while let Some(op) = ready.pop() {
+            order.push(op);
+            let out = self.ops[op].output;
+            for &c in &self.tensors[out].consumers {
+                if self.ops[c].inputs.contains(&out) {
+                    indeg[c] -= 1;
+                    if indeg[c] == 0 {
+                        ready.push(c);
+                    }
+                }
+            }
+        }
+        (order.len() == self.ops.len()).then_some(order)
+    }
+
+    /// Is `order` a valid complete topological execution order?
+    pub fn check_order(&self, order: &[OpId]) -> Result<(), GraphError> {
+        if order.len() != self.ops.len() {
+            return Err(GraphError::BadOrder(format!(
+                "length {} != op count {}",
+                order.len(),
+                self.ops.len()
+            )));
+        }
+        let mut seen = vec![false; self.ops.len()];
+        let mut have = vec![false; self.tensors.len()];
+        for t in &self.tensors {
+            if t.producer.is_none() {
+                have[t.id] = true;
+            }
+        }
+        for &op in order {
+            if op >= self.ops.len() || seen[op] {
+                return Err(GraphError::BadOrder(format!("op {op} repeated or out of range")));
+            }
+            seen[op] = true;
+            for &t in &self.ops[op].inputs {
+                if !have[t] {
+                    return Err(GraphError::BadOrder(format!(
+                        "op {op} ({}) consumes tensor {t} before it is produced",
+                        self.ops[op].name
+                    )));
+                }
+            }
+            have[self.ops[op].output] = true;
+        }
+        Ok(())
+    }
+
+    /// Per-tensor ancestor sets over *activation* tensors: `anc[t]` contains
+    /// every activation tensor that (transitively) feeds the producer of
+    /// `t`. Used by Algorithm 1's "would have to be evaluated twice" check.
+    pub fn tensor_ancestors(&self) -> Vec<BitSet> {
+        let n = self.tensors.len();
+        let mut anc: Vec<BitSet> = (0..n).map(|_| BitSet::new(n)).collect();
+        let order = self.topo_order().expect("tensor_ancestors on cyclic graph");
+        for &opid in &order {
+            let op = &self.ops[opid];
+            let out = op.output;
+            let mut acc = BitSet::new(n);
+            for &i in &op.inputs {
+                acc.insert(i);
+                acc.union_with(&anc[i]);
+            }
+            anc[out] = acc;
+        }
+        anc
+    }
+
+    /// Look up an op by name (test/CLI convenience).
+    pub fn op_by_name(&self, name: &str) -> Option<&Op> {
+        self.ops.iter().find(|o| o.name == name)
+    }
+
+    /// Look up a tensor by name.
+    pub fn tensor_by_name(&self, name: &str) -> Option<&Tensor> {
+        self.tensors.iter().find(|t| t.name == name)
+    }
+
+    /// GraphViz dot rendering (activations solid, weights dashed).
+    pub fn to_dot(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("digraph \"{}\" {{\n  rankdir=TB;\n", self.name));
+        for op in &self.ops {
+            s.push_str(&format!(
+                "  op{} [shape=box,label=\"#{} {}\\n{}\"];\n",
+                op.id,
+                op.id + 1,
+                op.name,
+                op.kind.name()
+            ));
+        }
+        for t in &self.tensors {
+            for &c in &t.consumers {
+                let style = if t.is_weight { " [style=dashed]" } else { "" };
+                let label = format!(" [label=\"{}B\"]", t.bytes());
+                match t.producer {
+                    Some(p) => s.push_str(&format!("  op{p} -> op{c}{label};\n")),
+                    None if !t.is_weight => {
+                        s.push_str(&format!(
+                            "  in{} [shape=ellipse,label=\"{}\"];\n  in{} -> op{c}{label};\n",
+                            t.id, t.name, t.id
+                        ));
+                    }
+                    None => {
+                        let _ = style;
+                    }
+                }
+            }
+        }
+        s.push_str("}\n");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> Graph {
+        // in -> a -> {b, c} -> d(add)
+        let mut b = GraphBuilder::new("diamond");
+        let x = b.input("x", &[1, 4, 4, 2], DType::F32);
+        let a = b.relu("a", x);
+        let l = b.relu("l", a);
+        let r = b.relu("r", a);
+        let d = b.add("d", l, r);
+        b.output(d);
+        b.finish().unwrap()
+    }
+
+    #[test]
+    fn diamond_validates() {
+        let g = diamond();
+        assert_eq!(g.n_ops(), 4);
+        assert!(g.validate().is_ok());
+    }
+
+    #[test]
+    fn topo_order_is_valid() {
+        let g = diamond();
+        let order = g.topo_order().unwrap();
+        g.check_order(&order).unwrap();
+    }
+
+    #[test]
+    fn check_order_rejects_violations() {
+        let g = diamond();
+        // 'd' (op 3) before its inputs.
+        assert!(g.check_order(&[3, 0, 1, 2]).is_err());
+        // duplicate
+        assert!(g.check_order(&[0, 0, 1, 2]).is_err());
+        // short
+        assert!(g.check_order(&[0, 1]).is_err());
+    }
+
+    #[test]
+    fn ancestors_flow_through() {
+        let g = diamond();
+        let anc = g.tensor_ancestors();
+        let x = g.tensor_by_name("x").unwrap().id;
+        let a = g.tensor_by_name("a").unwrap().id;
+        let d = g.tensor_by_name("d").unwrap().id;
+        assert!(anc[d].contains(a));
+        assert!(anc[d].contains(x));
+        assert!(!anc[a].contains(d));
+    }
+
+    #[test]
+    fn tensor_bytes() {
+        let g = diamond();
+        let x = g.tensor_by_name("x").unwrap();
+        assert_eq!(x.elems(), 32);
+        assert_eq!(x.bytes(), 128);
+    }
+
+    #[test]
+    fn macs_of_add_are_elementwise() {
+        let g = diamond();
+        let d = g.op_by_name("d").unwrap();
+        assert_eq!(d.macs(&g), 32);
+    }
+
+    #[test]
+    fn dtype_sizes() {
+        assert_eq!(DType::F32.size(), 4);
+        assert_eq!(DType::I8.size(), 1);
+        assert_eq!(DType::from_name("i8"), Some(DType::I8));
+        assert_eq!(DType::from_name("nope"), None);
+    }
+
+    #[test]
+    fn dot_renders() {
+        let g = diamond();
+        let dot = g.to_dot();
+        assert!(dot.contains("digraph"));
+        assert!(dot.contains("op0 -> op1"));
+    }
+}

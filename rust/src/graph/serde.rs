@@ -1,0 +1,360 @@
+//! Model file (de)serialization.
+//!
+//! The paper's tool rewrites TensorFlow Lite flatbuffers to embed a chosen
+//! operator execution order. Our equivalent model container is a JSON
+//! document holding the graph plus an optional `execution_order` field; the
+//! `mcu-reorder optimize` CLI writes that field, and the interpreter/runtime
+//! honour it when present (falling back to the default as-built order).
+
+use std::collections::BTreeMap;
+
+use super::{Act, DType, Graph, Op, OpId, OpKind, Padding, Tensor};
+use crate::util::json::Json;
+
+/// A graph plus an optional embedded execution order — the on-disk model.
+#[derive(Clone, Debug)]
+pub struct ModelFile {
+    pub graph: Graph,
+    pub execution_order: Option<Vec<OpId>>,
+}
+
+impl ModelFile {
+    pub fn new(graph: Graph) -> Self {
+        ModelFile { graph, execution_order: None }
+    }
+
+    /// The order the interpreter should run: embedded if present, else the
+    /// as-built default.
+    pub fn effective_order(&self) -> Vec<OpId> {
+        self.execution_order.clone().unwrap_or_else(|| self.graph.default_order())
+    }
+
+    /// Serialize to pretty JSON.
+    pub fn to_json(&self) -> String {
+        graph_to_json(&self.graph, self.execution_order.as_deref()).to_pretty()
+    }
+
+    /// Parse from JSON, validating the graph and (when present) the
+    /// embedded order.
+    pub fn from_json(src: &str) -> Result<ModelFile, String> {
+        let v = Json::parse(src).map_err(|e| e.to_string())?;
+        let (graph, order) = graph_from_json(&v)?;
+        graph.validate().map_err(|e| format!("invalid graph: {e}"))?;
+        if let Some(ref o) = order {
+            graph.check_order(o).map_err(|e| format!("invalid embedded order: {e}"))?;
+        }
+        Ok(ModelFile { graph, execution_order: order })
+    }
+}
+
+fn padding_str(p: Padding) -> &'static str {
+    match p {
+        Padding::Same => "same",
+        Padding::Valid => "valid",
+    }
+}
+
+fn padding_from(s: &str) -> Result<Padding, String> {
+    match s {
+        "same" => Ok(Padding::Same),
+        "valid" => Ok(Padding::Valid),
+        other => Err(format!("unknown padding {other:?}")),
+    }
+}
+
+fn pair_json(p: (usize, usize)) -> Json {
+    Json::arr_usize(&[p.0, p.1])
+}
+
+fn pair_from(v: &Json, what: &str) -> Result<(usize, usize), String> {
+    let arr = v.as_arr().ok_or_else(|| format!("{what}: expected [a,b]"))?;
+    if arr.len() != 2 {
+        return Err(format!("{what}: expected 2 elements"));
+    }
+    Ok((
+        arr[0].as_usize().ok_or_else(|| format!("{what}[0] not usize"))?,
+        arr[1].as_usize().ok_or_else(|| format!("{what}[1] not usize"))?,
+    ))
+}
+
+fn kind_to_json(kind: &OpKind) -> (String, Json) {
+    let mut attrs: BTreeMap<String, Json> = BTreeMap::new();
+    let name = kind.name().to_string();
+    match kind {
+        OpKind::Conv2D { kernel, stride, padding, act }
+        | OpKind::DepthwiseConv2D { kernel, stride, padding, act } => {
+            attrs.insert("kernel".into(), pair_json(*kernel));
+            attrs.insert("stride".into(), pair_json(*stride));
+            attrs.insert("padding".into(), Json::Str(padding_str(*padding).into()));
+            attrs.insert("act".into(), Json::Str(act.name().into()));
+        }
+        OpKind::MaxPool2D { kernel, stride, padding }
+        | OpKind::AvgPool2D { kernel, stride, padding } => {
+            attrs.insert("kernel".into(), pair_json(*kernel));
+            attrs.insert("stride".into(), pair_json(*stride));
+            attrs.insert("padding".into(), Json::Str(padding_str(*padding).into()));
+        }
+        OpKind::Dense { act } => {
+            attrs.insert("act".into(), Json::Str(act.name().into()));
+        }
+        OpKind::BatchNorm { eps } => {
+            attrs.insert("eps".into(), Json::Num(*eps as f64));
+        }
+        OpKind::Synthetic { macs } => {
+            attrs.insert("macs".into(), Json::Num(*macs as f64));
+        }
+        _ => {}
+    }
+    (name, Json::Obj(attrs))
+}
+
+fn kind_from_json(name: &str, attrs: &Json) -> Result<OpKind, String> {
+    let geom = || -> Result<((usize, usize), (usize, usize), Padding), String> {
+        Ok((
+            pair_from(attrs.get("kernel"), "kernel")?,
+            pair_from(attrs.get("stride"), "stride")?,
+            padding_from(attrs.get("padding").as_str().unwrap_or(""))?,
+        ))
+    };
+    let act = || -> Result<Act, String> {
+        Act::from_name(attrs.get("act").as_str().unwrap_or("linear"))
+            .ok_or_else(|| "bad act".to_string())
+    };
+    match name {
+        "Conv2D" => {
+            let (kernel, stride, padding) = geom()?;
+            Ok(OpKind::Conv2D { kernel, stride, padding, act: act()? })
+        }
+        "DepthwiseConv2D" => {
+            let (kernel, stride, padding) = geom()?;
+            Ok(OpKind::DepthwiseConv2D { kernel, stride, padding, act: act()? })
+        }
+        "MaxPool2D" => {
+            let (kernel, stride, padding) = geom()?;
+            Ok(OpKind::MaxPool2D { kernel, stride, padding })
+        }
+        "AvgPool2D" => {
+            let (kernel, stride, padding) = geom()?;
+            Ok(OpKind::AvgPool2D { kernel, stride, padding })
+        }
+        "Dense" => Ok(OpKind::Dense { act: act()? }),
+        "Add" => Ok(OpKind::Add),
+        "Concat" => Ok(OpKind::Concat),
+        "Relu" => Ok(OpKind::Relu),
+        "Relu6" => Ok(OpKind::Relu6),
+        "GlobalAvgPool" => Ok(OpKind::GlobalAvgPool),
+        "BatchNorm" => {
+            let eps = attrs.get("eps").as_f64().unwrap_or(1e-3) as f32;
+            Ok(OpKind::BatchNorm { eps })
+        }
+        "Softmax" => Ok(OpKind::Softmax),
+        "Reshape" => Ok(OpKind::Reshape),
+        "Synthetic" => {
+            let macs = attrs.get("macs").as_f64().unwrap_or(0.0) as u64;
+            Ok(OpKind::Synthetic { macs })
+        }
+        other => Err(format!("unknown op kind {other:?}")),
+    }
+}
+
+/// Graph → JSON document.
+pub fn graph_to_json(g: &Graph, order: Option<&[OpId]>) -> Json {
+    let tensors: Vec<Json> = g
+        .tensors
+        .iter()
+        .map(|t| {
+            Json::obj(vec![
+                ("id", Json::Num(t.id as f64)),
+                ("name", Json::Str(t.name.clone())),
+                ("shape", Json::arr_usize(&t.shape)),
+                ("dtype", Json::Str(t.dtype.name().into())),
+                ("weight", Json::Bool(t.is_weight)),
+            ])
+        })
+        .collect();
+    let ops: Vec<Json> = g
+        .ops
+        .iter()
+        .map(|o| {
+            let (kind, attrs) = kind_to_json(&o.kind);
+            Json::obj(vec![
+                ("id", Json::Num(o.id as f64)),
+                ("name", Json::Str(o.name.clone())),
+                ("kind", Json::Str(kind)),
+                ("attrs", attrs),
+                ("inputs", Json::arr_usize(&o.inputs)),
+                ("weights", Json::arr_usize(&o.weights)),
+                ("output", Json::Num(o.output as f64)),
+            ])
+        })
+        .collect();
+    let mut fields = vec![
+        ("format", Json::Str("mcu-reorder/v1".into())),
+        ("name", Json::Str(g.name.clone())),
+        ("tensors", Json::Arr(tensors)),
+        ("ops", Json::Arr(ops)),
+        ("inputs", Json::arr_usize(&g.inputs)),
+        ("outputs", Json::arr_usize(&g.outputs)),
+    ];
+    if let Some(o) = order {
+        fields.push(("execution_order", Json::arr_usize(o)));
+    }
+    Json::obj(fields)
+}
+
+fn usize_arr(v: &Json, what: &str) -> Result<Vec<usize>, String> {
+    v.as_arr()
+        .ok_or_else(|| format!("{what}: expected array"))?
+        .iter()
+        .map(|x| x.as_usize().ok_or_else(|| format!("{what}: expected usize")))
+        .collect()
+}
+
+/// JSON document → graph (+ optional embedded order). Does not validate.
+pub fn graph_from_json(v: &Json) -> Result<(Graph, Option<Vec<OpId>>), String> {
+    if v.get("format").as_str() != Some("mcu-reorder/v1") {
+        return Err("missing or unknown 'format' field (want mcu-reorder/v1)".into());
+    }
+    let name = v.get("name").as_str().unwrap_or("model").to_string();
+    let mut g = Graph::new(name);
+
+    for (i, tj) in v.get("tensors").as_arr().ok_or("missing tensors")?.iter().enumerate() {
+        let id = tj.get("id").as_usize().ok_or("tensor missing id")?;
+        if id != i {
+            return Err(format!("tensor ids must be dense, got {id} at index {i}"));
+        }
+        let dtype = DType::from_name(tj.get("dtype").as_str().unwrap_or(""))
+            .ok_or_else(|| format!("tensor {id}: bad dtype"))?;
+        g.tensors.push(Tensor {
+            id,
+            name: tj.get("name").as_str().unwrap_or("").to_string(),
+            shape: usize_arr(tj.get("shape"), "shape")?,
+            dtype,
+            producer: None,
+            consumers: Vec::new(),
+            is_weight: tj.get("weight").as_bool().unwrap_or(false),
+        });
+    }
+
+    for (i, oj) in v.get("ops").as_arr().ok_or("missing ops")?.iter().enumerate() {
+        let id = oj.get("id").as_usize().ok_or("op missing id")?;
+        if id != i {
+            return Err(format!("op ids must be dense, got {id} at index {i}"));
+        }
+        let kind = kind_from_json(oj.get("kind").as_str().unwrap_or(""), oj.get("attrs"))?;
+        let inputs = usize_arr(oj.get("inputs"), "op inputs")?;
+        let weights = usize_arr(oj.get("weights"), "op weights")?;
+        let output = oj.get("output").as_usize().ok_or("op missing output")?;
+        for &t in inputs.iter().chain(&weights).chain(std::iter::once(&output)) {
+            if t >= g.tensors.len() {
+                return Err(format!("op {id} references unknown tensor {t}"));
+            }
+        }
+        g.tensors[output].producer = Some(id);
+        for &t in inputs.iter().chain(&weights) {
+            g.tensors[t].consumers.push(id);
+        }
+        g.ops.push(Op {
+            id,
+            name: oj.get("name").as_str().unwrap_or("").to_string(),
+            kind,
+            inputs,
+            weights,
+            output,
+        });
+    }
+
+    g.inputs = usize_arr(v.get("inputs"), "inputs")?;
+    g.outputs = usize_arr(v.get("outputs"), "outputs")?;
+
+    let order = match v.get("execution_order") {
+        Json::Null => None,
+        o => Some(usize_arr(o, "execution_order")?),
+    };
+    Ok((g, order))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Act, GraphBuilder};
+
+    fn sample() -> Graph {
+        let mut b = GraphBuilder::new("sample");
+        let x = b.input("x", &[1, 16, 16, 3], DType::I8);
+        let c1 = b.conv2d("c1", x, 8, (3, 3), (2, 2), Padding::Same, Act::Relu6);
+        let l = b.dwconv2d("dw", c1, (3, 3), (1, 1), Padding::Same, Act::Relu6);
+        let r = b.conv2d("pw", c1, 8, (1, 1), (1, 1), Padding::Same, Act::Relu6);
+        let cat = b.concat("cat", &[l, r]);
+        let gap = b.global_avgpool("gap", cat);
+        let fc = b.dense("fc", gap, 2, Act::Linear);
+        let sm = b.softmax("sm", fc);
+        b.output(sm);
+        b.finish().unwrap()
+    }
+
+    #[test]
+    fn roundtrip_preserves_structure() {
+        let g = sample();
+        let mf = ModelFile::new(g.clone());
+        let json = mf.to_json();
+        let back = ModelFile::from_json(&json).unwrap();
+        assert_eq!(back.graph.n_ops(), g.n_ops());
+        assert_eq!(back.graph.n_tensors(), g.n_tensors());
+        assert_eq!(back.graph.model_size(), g.model_size());
+        assert_eq!(back.graph.activation_total(), g.activation_total());
+        for (a, b) in g.ops.iter().zip(&back.graph.ops) {
+            assert_eq!(a.kind, b.kind, "op {} kind", a.name);
+            assert_eq!(a.inputs, b.inputs);
+            assert_eq!(a.weights, b.weights);
+            assert_eq!(a.output, b.output);
+        }
+    }
+
+    #[test]
+    fn roundtrip_preserves_order() {
+        let g = sample();
+        let order = g.topo_order().unwrap();
+        let mf = ModelFile { graph: g, execution_order: Some(order.clone()) };
+        let back = ModelFile::from_json(&mf.to_json()).unwrap();
+        assert_eq!(back.execution_order, Some(order));
+    }
+
+    #[test]
+    fn rejects_bad_embedded_order() {
+        let g = sample();
+        let n = g.n_ops();
+        let mf = ModelFile { graph: g, execution_order: Some((0..n).rev().collect()) };
+        let json = mf.to_json();
+        assert!(ModelFile::from_json(&json).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_format() {
+        assert!(ModelFile::from_json(r#"{"format":"bogus"}"#).is_err());
+        assert!(ModelFile::from_json("not json").is_err());
+    }
+
+    #[test]
+    fn effective_order_falls_back_to_default() {
+        let g = sample();
+        let n = g.n_ops();
+        let mf = ModelFile::new(g);
+        assert_eq!(mf.effective_order(), (0..n).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn rejects_dangling_tensor_reference() {
+        let g = sample();
+        let mut json = graph_to_json(&g, None);
+        // Corrupt: op 0 output -> out-of-range tensor.
+        if let Json::Obj(ref mut o) = json {
+            if let Some(Json::Arr(ops)) = o.get_mut("ops") {
+                if let Json::Obj(op0) = &mut ops[0] {
+                    op0.insert("output".into(), Json::Num(9999.0));
+                }
+            }
+        }
+        assert!(ModelFile::from_json(&json.to_pretty()).is_err());
+    }
+}

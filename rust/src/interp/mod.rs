@@ -1,0 +1,868 @@
+//! Micro-interpreter (the paper's modified TFLite-Micro execution engine).
+//!
+//! Executes a scheduled graph inside a fixed-size SRAM arena. All tensor
+//! buffers are addressed through [`BufId`] handles resolved at each kernel
+//! call — never across operators — so the [`DynamicArena`] is free to move
+//! buffers during defragmentation (§4: "pointers to memory blocks are not
+//! being remembered anywhere in the code").
+//!
+//! Two numeric paths mirror a real MCU deployment:
+//! - **f32** — reference semantics; compared against the AOT-compiled PJRT
+//!   artifacts in integration tests.
+//! - **int8** — TFLite-style affine quantization with a calibration pass
+//!   ([`calibrate`]); exercises the byte-exact arena accounting the paper's
+//!   memory numbers are about.
+
+pub mod ops;
+pub mod quant;
+
+use std::collections::HashMap;
+
+use crate::alloc::{AllocError, AllocStats, BufId, CompactPolicy, DynamicArena};
+use crate::graph::{Act, DType, Graph, OpId, OpKind, Tensor, TensorId};
+use crate::util::rng::Rng;
+use ops::Hwc;
+use quant::QuantParams;
+
+/// Typed tensor payload.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I8(Vec<i8>),
+    I32(Vec<i32>),
+    U8(Vec<u8>),
+}
+
+impl TensorData {
+    pub fn len(&self) -> usize {
+        match self {
+            TensorData::F32(v) => v.len(),
+            TensorData::I8(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+            TensorData::U8(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            TensorData::F32(_) => DType::F32,
+            TensorData::I8(_) => DType::I8,
+            TensorData::I32(_) => DType::I32,
+            TensorData::U8(_) => DType::U8,
+        }
+    }
+
+    /// Little-endian byte serialization (the arena's storage format).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        match self {
+            TensorData::F32(v) => v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+            TensorData::I8(v) => v.iter().map(|&x| x as u8).collect(),
+            TensorData::I32(v) => v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+            TensorData::U8(v) => v.clone(),
+        }
+    }
+
+    /// Decode from little-endian bytes.
+    pub fn from_bytes(dtype: DType, bytes: &[u8]) -> TensorData {
+        match dtype {
+            DType::F32 => TensorData::F32(
+                bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect(),
+            ),
+            DType::I32 => TensorData::I32(
+                bytes.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect(),
+            ),
+            DType::I8 => TensorData::I8(bytes.iter().map(|&b| b as i8).collect()),
+            DType::U8 => TensorData::U8(bytes.to_vec()),
+        }
+    }
+
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match self {
+            TensorData::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_i8(&self) -> Option<&[i8]> {
+        match self {
+            TensorData::I8(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Flash-resident parameters plus quantization metadata.
+#[derive(Clone, Debug, Default)]
+pub struct WeightStore {
+    /// Weight tensor payloads, keyed by tensor id.
+    pub data: HashMap<TensorId, TensorData>,
+    /// Quantization parameters per tensor (weights *and* activations);
+    /// empty for f32 graphs.
+    pub qparams: HashMap<TensorId, QuantParams>,
+}
+
+impl WeightStore {
+    /// Deterministic He-style random f32 weights for every weight tensor of
+    /// `g` (bias ≈ 0). The same seed reproduces the same parameters — the
+    /// AOT Python exporter uses an identical generator so the PJRT
+    /// artifacts and the interpreter share weights.
+    pub fn seeded_f32(g: &Graph, seed: u64) -> WeightStore {
+        let mut ws = WeightStore::default();
+        let mut rng = Rng::new(seed);
+        for t in &g.tensors {
+            if !t.is_weight {
+                continue;
+            }
+            // BatchNorm statistics need specific distributions (γ around 1,
+            // σ² strictly positive); everything else is He-style uniform.
+            let vals: Vec<f32> = if t.name.ends_with(".gamma") {
+                (0..t.elems()).map(|_| rng.f32_range(0.8, 1.2)).collect()
+            } else if t.name.ends_with(".var") {
+                (0..t.elems()).map(|_| rng.f32_range(0.5, 1.5)).collect()
+            } else if t.name.ends_with(".beta") || t.name.ends_with(".mean") {
+                (0..t.elems()).map(|_| rng.f32_range(-0.1, 0.1)).collect()
+            } else {
+                let is_bias = t.name.ends_with(".b");
+                let fan_in = fan_in_of(t);
+                let bound = if is_bias { 0.05 } else { (1.0 / fan_in as f32).sqrt() };
+                (0..t.elems()).map(|_| rng.f32_range(-bound, bound)).collect()
+            };
+            ws.data.insert(t.id, TensorData::F32(vals));
+        }
+        ws
+    }
+
+    /// Quantize an f32 weight store to int8 for the structurally-identical
+    /// i8 graph `g_i8` (same tensor order/names as the f32 graph used for
+    /// calibration). `act_ranges` maps tensor names to observed (min, max).
+    pub fn quantize_from(
+        g_i8: &Graph,
+        ws_f32: &WeightStore,
+        act_ranges: &HashMap<String, (f32, f32)>,
+    ) -> WeightStore {
+        let mut ws = WeightStore::default();
+        // Activation qparams from calibration ranges.
+        for t in &g_i8.tensors {
+            if t.is_weight {
+                continue;
+            }
+            let (lo, hi) = act_ranges.get(&t.name).copied().unwrap_or((-1.0, 1.0));
+            ws.qparams.insert(t.id, QuantParams::from_range(lo, hi));
+        }
+        // Weights: symmetric per-tensor; biases: i32 at s_in * s_w.
+        for op in &g_i8.ops {
+            if op.weights.is_empty() {
+                continue;
+            }
+            let w_id = op.weights[0];
+            let w_f = ws_f32.data[&w_id].as_f32().expect("f32 master weights");
+            let absmax = w_f.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+            let w_q = QuantParams::symmetric(absmax.max(1e-6));
+            ws.qparams.insert(w_id, w_q);
+            ws.data.insert(w_id, TensorData::I8(w_q.quantize(w_f)));
+            if op.weights.len() > 1 {
+                let b_id = op.weights[1];
+                let b_f = ws_f32.data[&b_id].as_f32().expect("f32 master bias");
+                let s_in = ws.qparams[&op.inputs[0]].scale;
+                let bias_scale = s_in * w_q.scale;
+                ws.qparams.insert(b_id, QuantParams::new(bias_scale, 0));
+                ws.data.insert(
+                    b_id,
+                    TensorData::I32(b_f.iter().map(|&b| (b / bias_scale).round() as i32).collect()),
+                );
+            }
+        }
+        ws
+    }
+
+    fn f32_of(&self, t: TensorId) -> &[f32] {
+        self.data[&t].as_f32().expect("expected f32 weight")
+    }
+
+    fn i8_of(&self, t: TensorId) -> &[i8] {
+        self.data[&t].as_i8().expect("expected i8 weight")
+    }
+
+    fn i32_of(&self, t: TensorId) -> &[i32] {
+        match &self.data[&t] {
+            TensorData::I32(v) => v,
+            _ => panic!("expected i32 bias"),
+        }
+    }
+}
+
+fn fan_in_of(t: &Tensor) -> usize {
+    match t.shape.len() {
+        4 => t.shape[0] * t.shape[1] * t.shape[2], // conv HWIO
+        3 => t.shape[0] * t.shape[1],              // dwconv HWC
+        2 => t.shape[0],                           // dense [in,out]
+        _ => t.elems().max(1),
+    }
+}
+
+/// Interpreter configuration.
+#[derive(Clone, Debug)]
+pub struct ExecConfig {
+    /// SRAM bytes available for tensor data.
+    pub arena_bytes: usize,
+    /// Defragmentation policy.
+    pub policy: CompactPolicy,
+    /// Execution order; `None` uses the graph's default order.
+    pub order: Option<Vec<OpId>>,
+}
+
+impl ExecConfig {
+    pub fn with_capacity(arena_bytes: usize) -> Self {
+        ExecConfig { arena_bytes, policy: CompactPolicy::EveryOp, order: None }
+    }
+}
+
+/// Per-run outcome.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    /// Payloads of the graph's output tensors, in `g.outputs` order.
+    pub outputs: Vec<TensorData>,
+    /// Arena counters (high-water, compaction traffic, …).
+    pub alloc: AllocStats,
+    /// Total multiply-accumulates executed.
+    pub macs: u64,
+}
+
+/// Execution failure.
+#[derive(Debug)]
+pub enum ExecError {
+    Alloc(AllocError),
+    BadInput(String),
+    Unsupported(String),
+}
+
+impl std::fmt::Display for ExecError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ExecError::Alloc(e) => write!(f, "allocation failure: {e}"),
+            ExecError::BadInput(m) => write!(f, "bad input: {m}"),
+            ExecError::Unsupported(m) => write!(f, "unsupported: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for ExecError {}
+
+impl From<AllocError> for ExecError {
+    fn from(e: AllocError) -> Self {
+        ExecError::Alloc(e)
+    }
+}
+
+/// The micro-interpreter.
+pub struct Interpreter<'g> {
+    g: &'g Graph,
+    weights: WeightStore,
+    config: ExecConfig,
+}
+
+impl<'g> Interpreter<'g> {
+    pub fn new(g: &'g Graph, weights: WeightStore, config: ExecConfig) -> Self {
+        Interpreter { g, weights, config }
+    }
+
+    pub fn weights(&self) -> &WeightStore {
+        &self.weights
+    }
+
+    /// Run one inference.
+    pub fn run(&self, inputs: &[TensorData]) -> Result<RunResult, ExecError> {
+        Ok(self.run_inner(inputs, false)?.0)
+    }
+
+    /// Run one inference, additionally capturing every activation tensor
+    /// (used by the int8 calibration pass).
+    pub fn run_capture(
+        &self,
+        inputs: &[TensorData],
+    ) -> Result<(RunResult, Vec<Option<TensorData>>), ExecError> {
+        let (r, c) = self.run_inner(inputs, true)?;
+        Ok((r, c.expect("capture requested")))
+    }
+
+    fn order(&self) -> Vec<OpId> {
+        self.config.order.clone().unwrap_or_else(|| self.g.default_order())
+    }
+
+    #[allow(clippy::type_complexity)]
+    fn run_inner(
+        &self,
+        inputs: &[TensorData],
+        capture: bool,
+    ) -> Result<(RunResult, Option<Vec<Option<TensorData>>>), ExecError> {
+        let g = self.g;
+        let order = self.order();
+        g.check_order(&order).map_err(|e| ExecError::BadInput(e.to_string()))?;
+        if inputs.len() != g.inputs.len() {
+            return Err(ExecError::BadInput(format!(
+                "expected {} inputs, got {}",
+                g.inputs.len(),
+                inputs.len()
+            )));
+        }
+
+        let mut arena = DynamicArena::new(self.config.arena_bytes, self.config.policy);
+        let n = g.tensors.len();
+        let mut handles: Vec<Option<BufId>> = vec![None; n];
+        let mut remaining = vec![0usize; n];
+        for op in &g.ops {
+            for &t in &op.inputs {
+                remaining[t] += 1;
+            }
+        }
+        let mut is_output = vec![false; n];
+        for &t in &g.outputs {
+            is_output[t] = true;
+        }
+        let mut captured: Vec<Option<TensorData>> = vec![None; n];
+
+        // Stage graph inputs into the arena.
+        for (&tid, data) in g.inputs.iter().zip(inputs) {
+            let t = &g.tensors[tid];
+            if data.dtype() != t.dtype || data.len() != t.elems() {
+                return Err(ExecError::BadInput(format!(
+                    "input tensor {} expects {}x{}, got {}x{}",
+                    t.name,
+                    t.elems(),
+                    t.dtype.name(),
+                    data.len(),
+                    data.dtype().name()
+                )));
+            }
+            let h = arena.alloc(t.bytes())?;
+            arena.write(h, &data.to_bytes())?;
+            handles[tid] = Some(h);
+            if capture {
+                captured[tid] = Some(data.clone());
+            }
+        }
+
+        let mut macs = 0u64;
+        for &opid in &order {
+            let op = &g.ops[opid];
+            let out_t = &g.tensors[op.output];
+            // Read inputs out of the arena (copies: handles may move under
+            // compaction triggered by the output allocation below).
+            let in_data: Vec<TensorData> = op
+                .inputs
+                .iter()
+                .map(|&t| {
+                    let bytes = arena.get(handles[t].expect("input not resident"))?;
+                    Ok(TensorData::from_bytes(g.tensors[t].dtype, bytes))
+                })
+                .collect::<Result<_, AllocError>>()?;
+            let out_h = arena.alloc(out_t.bytes())?;
+            handles[op.output] = Some(out_h);
+
+            let out_data = self.dispatch(op, &in_data)?;
+            debug_assert_eq!(out_data.len(), out_t.elems(), "op {} output size", op.name);
+            arena.write(out_h, &out_data.to_bytes())?;
+            if capture {
+                captured[op.output] = Some(out_data);
+            }
+            macs += op.macs(g);
+
+            // Reclaim dead inputs.
+            for &t in &op.inputs {
+                remaining[t] -= 1;
+                if remaining[t] == 0 && !is_output[t] {
+                    arena.free(handles[t].take().unwrap())?;
+                }
+            }
+            if remaining[op.output] == 0 && !is_output[op.output] {
+                arena.free(handles[op.output].take().unwrap())?;
+            }
+            arena.after_op();
+        }
+
+        let outputs: Vec<TensorData> = g
+            .outputs
+            .iter()
+            .map(|&t| {
+                let bytes = arena.get(handles[t].expect("output not resident"))?;
+                Ok(TensorData::from_bytes(g.tensors[t].dtype, bytes))
+            })
+            .collect::<Result<_, AllocError>>()?;
+
+        let result = RunResult { outputs, alloc: arena.stats().clone(), macs };
+        Ok((result, capture.then_some(captured)))
+    }
+
+    fn qp(&self, t: TensorId) -> QuantParams {
+        self.weights
+            .qparams
+            .get(&t)
+            .copied()
+            .unwrap_or(QuantParams { scale: 1.0, zero_point: 0 })
+    }
+
+    fn dispatch(&self, op: &crate::graph::Op, inputs: &[TensorData]) -> Result<TensorData, ExecError> {
+        let g = self.g;
+        let out_t = &g.tensors[op.output];
+        let in0_t = op.inputs.first().map(|&t| &g.tensors[t]);
+
+        match out_t.dtype {
+            DType::F32 => {
+                let xs: Vec<&[f32]> = inputs
+                    .iter()
+                    .map(|d| d.as_f32().ok_or_else(|| ExecError::BadInput("dtype mix".into())))
+                    .collect::<Result<_, _>>()?;
+                let mut out = vec![0.0f32; out_t.elems()];
+                let mut fused_act = Act::Linear;
+                match &op.kind {
+                    OpKind::Conv2D { kernel, stride, padding, act } => {
+                        fused_act = *act;
+                        ops::conv2d(
+                        xs[0],
+                        Hwc::from_shape(&in0_t.unwrap().shape),
+                        self.weights.f32_of(op.weights[0]),
+                        self.weights.f32_of(op.weights[1]),
+                        &mut out,
+                        Hwc::from_shape(&out_t.shape),
+                        *kernel,
+                        *stride,
+                        *padding,
+                        )
+                    }
+                    OpKind::DepthwiseConv2D { kernel, stride, padding, act } => {
+                        fused_act = *act;
+                        ops::dwconv2d(
+                        xs[0],
+                        Hwc::from_shape(&in0_t.unwrap().shape),
+                        self.weights.f32_of(op.weights[0]),
+                        self.weights.f32_of(op.weights[1]),
+                        &mut out,
+                        Hwc::from_shape(&out_t.shape),
+                        *kernel,
+                        *stride,
+                        *padding,
+                        )
+                    }
+                    OpKind::Dense { act } => {
+                        fused_act = *act;
+                        ops::dense(
+                            xs[0],
+                            self.weights.f32_of(op.weights[0]),
+                            self.weights.f32_of(op.weights[1]),
+                            &mut out,
+                        )
+                    }
+                    OpKind::Add => ops::add(xs[0], xs[1], &mut out),
+                    OpKind::Concat => {
+                        let parts: Vec<(&[f32], Hwc)> = op
+                            .inputs
+                            .iter()
+                            .zip(&xs)
+                            .map(|(&t, x)| (*x, Hwc::from_shape(&g.tensors[t].shape)))
+                            .collect();
+                        ops::concat_channels(&parts, &mut out, Hwc::from_shape(&out_t.shape));
+                    }
+                    OpKind::Relu => ops::relu(xs[0], &mut out),
+                    OpKind::Relu6 => ops::relu6(xs[0], &mut out),
+                    OpKind::MaxPool2D { kernel, stride, padding } => ops::maxpool2d(
+                        xs[0],
+                        Hwc::from_shape(&in0_t.unwrap().shape),
+                        &mut out,
+                        Hwc::from_shape(&out_t.shape),
+                        *kernel,
+                        *stride,
+                        *padding,
+                    ),
+                    OpKind::AvgPool2D { kernel, stride, padding } => ops::avgpool2d(
+                        xs[0],
+                        Hwc::from_shape(&in0_t.unwrap().shape),
+                        &mut out,
+                        Hwc::from_shape(&out_t.shape),
+                        *kernel,
+                        *stride,
+                        *padding,
+                    ),
+                    OpKind::GlobalAvgPool => ops::global_avgpool(
+                        xs[0],
+                        Hwc::from_shape(&in0_t.unwrap().shape),
+                        &mut out,
+                    ),
+                    OpKind::Softmax => ops::softmax(xs[0], &mut out),
+                    OpKind::BatchNorm { eps } => {
+                        let gamma = self.weights.f32_of(op.weights[0]);
+                        let beta = self.weights.f32_of(op.weights[1]);
+                        let mean = self.weights.f32_of(op.weights[2]);
+                        let var = self.weights.f32_of(op.weights[3]);
+                        let c = gamma.len();
+                        for (i, v) in xs[0].iter().enumerate() {
+                            let ch = i % c;
+                            out[i] = gamma[ch] * (v - mean[ch])
+                                / (var[ch] + eps).sqrt()
+                                + beta[ch];
+                        }
+                    }
+                    OpKind::Reshape => out.copy_from_slice(xs[0]),
+                    OpKind::Synthetic { .. } => {
+                        return Err(ExecError::Unsupported("synthetic op with f32 dtype".into()))
+                    }
+                }
+                match fused_act {
+                    Act::Linear => {}
+                    Act::Relu => {
+                        for v in out.iter_mut() {
+                            *v = v.max(0.0);
+                        }
+                    }
+                    Act::Relu6 => {
+                        for v in out.iter_mut() {
+                            *v = v.clamp(0.0, 6.0);
+                        }
+                    }
+                }
+                Ok(TensorData::F32(out))
+            }
+            DType::I8 => {
+                let xs: Vec<&[i8]> = inputs
+                    .iter()
+                    .map(|d| d.as_i8().ok_or_else(|| ExecError::BadInput("dtype mix".into())))
+                    .collect::<Result<_, _>>()?;
+                let mut out = vec![0i8; out_t.elems()];
+                let out_q = self.qp(op.output);
+                let mut fused_act = Act::Linear;
+                match &op.kind {
+                    OpKind::Conv2D { kernel, stride, padding, act } => {
+                        fused_act = *act;
+                        quant::conv2d_i8(
+                        xs[0],
+                        Hwc::from_shape(&in0_t.unwrap().shape),
+                        self.qp(op.inputs[0]),
+                        self.weights.i8_of(op.weights[0]),
+                        self.qp(op.weights[0]).scale,
+                        self.weights.i32_of(op.weights[1]),
+                        &mut out,
+                        Hwc::from_shape(&out_t.shape),
+                        out_q,
+                        *kernel,
+                        *stride,
+                        *padding,
+                        )
+                    }
+                    OpKind::DepthwiseConv2D { kernel, stride, padding, act } => {
+                        fused_act = *act;
+                        quant::dwconv2d_i8(
+                        xs[0],
+                        Hwc::from_shape(&in0_t.unwrap().shape),
+                        self.qp(op.inputs[0]),
+                        self.weights.i8_of(op.weights[0]),
+                        self.qp(op.weights[0]).scale,
+                        self.weights.i32_of(op.weights[1]),
+                        &mut out,
+                        Hwc::from_shape(&out_t.shape),
+                        out_q,
+                        *kernel,
+                        *stride,
+                        *padding,
+                        )
+                    }
+                    OpKind::Dense { act } => {
+                        fused_act = *act;
+                        quant::dense_i8(
+                            xs[0],
+                            self.qp(op.inputs[0]),
+                            self.weights.i8_of(op.weights[0]),
+                            self.qp(op.weights[0]).scale,
+                            self.weights.i32_of(op.weights[1]),
+                            &mut out,
+                            out_q,
+                        )
+                    }
+                    OpKind::Add => quant::add_i8(
+                        xs[0],
+                        self.qp(op.inputs[0]),
+                        xs[1],
+                        self.qp(op.inputs[1]),
+                        &mut out,
+                        out_q,
+                    ),
+                    OpKind::Concat => {
+                        // Requantize each part into the output domain.
+                        let mut c_off = 0usize;
+                        let oshape = Hwc::from_shape(&out_t.shape);
+                        for (&t, x) in op.inputs.iter().zip(&xs) {
+                            let ishape = Hwc::from_shape(&g.tensors[t].shape);
+                            let iq = self.qp(t);
+                            for y in 0..ishape.h {
+                                for xw in 0..ishape.w {
+                                    for ch in 0..ishape.c {
+                                        let v = iq.dequantize_one(x[ishape.at(y, xw, ch)]);
+                                        out[oshape.at(y, xw, c_off + ch)] = out_q.quantize_one(v);
+                                    }
+                                }
+                            }
+                            c_off += ishape.c;
+                        }
+                    }
+                    OpKind::Relu => quant::relu_i8(xs[0], self.qp(op.inputs[0]), &mut out),
+                    OpKind::Relu6 => quant::relu6_i8(xs[0], self.qp(op.inputs[0]), &mut out),
+                    OpKind::MaxPool2D { kernel, stride, padding } => quant::maxpool2d_i8(
+                        xs[0],
+                        Hwc::from_shape(&in0_t.unwrap().shape),
+                        &mut out,
+                        Hwc::from_shape(&out_t.shape),
+                        *kernel,
+                        *stride,
+                        *padding,
+                    ),
+                    OpKind::AvgPool2D { .. } => {
+                        return Err(ExecError::Unsupported("i8 avgpool (unused in zoo)".into()))
+                    }
+                    OpKind::GlobalAvgPool => quant::global_avgpool_i8(
+                        xs[0],
+                        Hwc::from_shape(&in0_t.unwrap().shape),
+                        self.qp(op.inputs[0]),
+                        &mut out,
+                    ),
+                    OpKind::Softmax => quant::softmax_i8(xs[0], self.qp(op.inputs[0]), &mut out),
+                    OpKind::BatchNorm { .. } => {
+                        return Err(ExecError::Unsupported(
+                            "i8 batchnorm (fold it first; see graph::transform)".into(),
+                        ))
+                    }
+                    OpKind::Reshape => out.copy_from_slice(xs[0]),
+                    OpKind::Synthetic { .. } => {
+                        return Err(ExecError::Unsupported("synthetic op with i8 dtype".into()))
+                    }
+                }
+                match fused_act {
+                    Act::Linear => {}
+                    Act::Relu => {
+                        let lo = out_q.zero_point.clamp(-128, 127) as i8;
+                        for v in out.iter_mut() {
+                            *v = (*v).max(lo);
+                        }
+                    }
+                    Act::Relu6 => {
+                        let lo = out_q.zero_point.clamp(-128, 127) as i8;
+                        let hi = out_q.quantize_one(6.0).max(lo);
+                        for v in out.iter_mut() {
+                            *v = (*v).clamp(lo, hi);
+                        }
+                    }
+                }
+                Ok(TensorData::I8(out))
+            }
+            DType::U8 => {
+                // Synthetic byte-mixing ops (generated DAGs).
+                let xs: Vec<&[u8]> = inputs
+                    .iter()
+                    .map(|d| match d {
+                        TensorData::U8(v) => Ok(v.as_slice()),
+                        _ => Err(ExecError::BadInput("synthetic op expects u8".into())),
+                    })
+                    .collect::<Result<_, _>>()?;
+                let mut out = vec![0u8; out_t.elems()];
+                ops::synthetic_bytes(&xs, &mut out);
+                Ok(TensorData::U8(out))
+            }
+            DType::I32 => Err(ExecError::Unsupported("i32 activations".into())),
+        }
+    }
+}
+
+/// Calibration: run the f32 interpreter on `inputs` and record per-tensor
+/// (min, max) ranges by tensor name.
+pub fn calibrate(
+    g_f32: &Graph,
+    ws_f32: &WeightStore,
+    inputs: &[TensorData],
+    arena_bytes: usize,
+) -> Result<HashMap<String, (f32, f32)>, ExecError> {
+    let interp = Interpreter::new(g_f32, ws_f32.clone(), ExecConfig::with_capacity(arena_bytes));
+    let (_, captured) = interp.run_capture(inputs)?;
+    let mut ranges = HashMap::new();
+    for (tid, data) in captured.iter().enumerate() {
+        if let Some(TensorData::F32(vals)) = data {
+            let lo = vals.iter().cloned().fold(f32::INFINITY, f32::min);
+            let hi = vals.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            if lo.is_finite() && hi.is_finite() {
+                ranges.insert(g_f32.tensors[tid].name.clone(), (lo, hi));
+            }
+        }
+    }
+    Ok(ranges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Act, GraphBuilder, Padding};
+
+    /// Small branchy f32 CNN used across the interpreter tests.
+    fn tiny_cnn(dtype: DType) -> Graph {
+        let mut b = GraphBuilder::new("tiny");
+        let x = b.input("x", &[1, 8, 8, 2], dtype);
+        let c1 = b.conv2d("c1", x, 4, (3, 3), (1, 1), Padding::Same, Act::Relu6);
+        let r1 = b.relu("r1", c1);
+        let dw = b.dwconv2d("dw", r1, (3, 3), (2, 2), Padding::Same, Act::Relu6);
+        let pw = b.conv2d("pw", r1, 4, (1, 1), (2, 2), Padding::Same, Act::Relu6);
+        let cat = b.concat("cat", &[dw, pw]);
+        let gap = b.global_avgpool("gap", cat);
+        let fc = b.dense("fc", gap, 3, Act::Linear);
+        let sm = b.softmax("sm", fc);
+        b.output(sm);
+        b.finish().unwrap()
+    }
+
+    fn ramp_input(n: usize) -> TensorData {
+        TensorData::F32((0..n).map(|i| ((i % 17) as f32 - 8.0) / 8.0).collect())
+    }
+
+    #[test]
+    fn f32_run_produces_probabilities() {
+        let g = tiny_cnn(DType::F32);
+        let ws = WeightStore::seeded_f32(&g, 42);
+        let interp = Interpreter::new(&g, ws, ExecConfig::with_capacity(64 * 1024));
+        let r = interp.run(&[ramp_input(128)]).unwrap();
+        let probs = r.outputs[0].as_f32().unwrap();
+        assert_eq!(probs.len(), 3);
+        assert!((probs.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        assert!(r.macs > 0);
+        assert!(r.alloc.high_water > 0);
+    }
+
+    #[test]
+    fn runs_agree_across_execution_orders() {
+        let g = tiny_cnn(DType::F32);
+        let ws = WeightStore::seeded_f32(&g, 42);
+        let input = ramp_input(128);
+
+        let default = Interpreter::new(&g, ws.clone(), ExecConfig::with_capacity(64 * 1024))
+            .run(&[input.clone()])
+            .unwrap();
+        let (sched, _) = crate::sched::optimal(&g).unwrap();
+        let cfg = ExecConfig {
+            arena_bytes: 64 * 1024,
+            policy: CompactPolicy::EveryOp,
+            order: Some(sched.order.clone()),
+        };
+        let optimal = Interpreter::new(&g, ws, cfg).run(&[input]).unwrap();
+        assert_eq!(default.outputs, optimal.outputs, "reordering must not change outputs");
+        assert!(optimal.alloc.high_water <= default.alloc.high_water);
+    }
+
+    #[test]
+    fn arena_high_water_matches_analytic_peak() {
+        let g = tiny_cnn(DType::F32);
+        let ws = WeightStore::seeded_f32(&g, 7);
+        let interp = Interpreter::new(&g, ws, ExecConfig::with_capacity(256 * 1024));
+        let r = interp.run(&[ramp_input(128)]).unwrap();
+        let peak = crate::sched::peak_of(&g, &g.default_order());
+        assert_eq!(r.alloc.high_water, peak);
+    }
+
+    #[test]
+    fn insufficient_arena_fails_cleanly() {
+        let g = tiny_cnn(DType::F32);
+        let ws = WeightStore::seeded_f32(&g, 7);
+        let peak = crate::sched::peak_of(&g, &g.default_order());
+        let interp = Interpreter::new(&g, ws, ExecConfig::with_capacity(peak - 1));
+        match interp.run(&[ramp_input(128)]) {
+            Err(ExecError::Alloc(_)) => {}
+            other => panic!("expected alloc failure, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn exact_arena_capacity_suffices() {
+        let g = tiny_cnn(DType::F32);
+        let ws = WeightStore::seeded_f32(&g, 7);
+        let peak = crate::sched::peak_of(&g, &g.default_order());
+        let interp = Interpreter::new(&g, ws, ExecConfig::with_capacity(peak));
+        interp.run(&[ramp_input(128)]).unwrap();
+    }
+
+    #[test]
+    fn i8_path_tracks_f32_path() {
+        let g_f32 = tiny_cnn(DType::F32);
+        let ws_f32 = WeightStore::seeded_f32(&g_f32, 42);
+        let input_f = ramp_input(128);
+        let ranges = calibrate(&g_f32, &ws_f32, &[input_f.clone()], 256 * 1024).unwrap();
+        let f32_out = Interpreter::new(&g_f32, ws_f32.clone(), ExecConfig::with_capacity(256 * 1024))
+            .run(&[input_f.clone()])
+            .unwrap();
+
+        let g_i8 = tiny_cnn(DType::I8);
+        let ws_i8 = WeightStore::quantize_from(&g_i8, &ws_f32, &ranges);
+        let in_q = ws_i8.qparams[&g_i8.inputs[0]];
+        let input_q = TensorData::I8(in_q.quantize(input_f.as_f32().unwrap()));
+        let i8_out = Interpreter::new(&g_i8, ws_i8.clone(), ExecConfig::with_capacity(256 * 1024))
+            .run(&[input_q])
+            .unwrap();
+
+        let probs_f = f32_out.outputs[0].as_f32().unwrap();
+        let probs_q = quant::softmax_out_qparams().dequantize(i8_out.outputs[0].as_i8().unwrap());
+        // Argmax agreement (when the f32 margin is decisive) + coarse
+        // numeric agreement.
+        let argmax = |v: &[f32]| {
+            v.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0
+        };
+        let mut sorted = probs_f.to_vec();
+        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        if sorted[0] - sorted[1] > 0.1 {
+            assert_eq!(argmax(probs_f), argmax(&probs_q));
+        }
+        for (a, b) in probs_f.iter().zip(&probs_q) {
+            assert!((a - b).abs() < 0.15, "f32={a} i8={b}");
+        }
+    }
+
+    #[test]
+    fn i8_arena_is_quarter_of_f32() {
+        let g_f32 = tiny_cnn(DType::F32);
+        let g_i8 = tiny_cnn(DType::I8);
+        let p_f = crate::sched::peak_of(&g_f32, &g_f32.default_order());
+        let p_q = crate::sched::peak_of(&g_i8, &g_i8.default_order());
+        assert_eq!(p_f, 4 * p_q);
+    }
+
+    #[test]
+    fn rejects_wrong_input_shape() {
+        let g = tiny_cnn(DType::F32);
+        let ws = WeightStore::seeded_f32(&g, 7);
+        let interp = Interpreter::new(&g, ws, ExecConfig::with_capacity(64 * 1024));
+        match interp.run(&[TensorData::F32(vec![0.0; 10])]) {
+            Err(ExecError::BadInput(_)) => {}
+            other => panic!("expected BadInput, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn synthetic_graph_executes_deterministically() {
+        let g = crate::sched::tests::figure1_graph();
+        let ws = WeightStore::default();
+        let input = TensorData::U8((0..1568).map(|i| (i % 251) as u8).collect());
+        let cfg = ExecConfig::with_capacity(16 * 1024);
+        let a = Interpreter::new(&g, ws.clone(), cfg.clone()).run(&[input.clone()]).unwrap();
+        // Optimal order must produce identical bytes.
+        let (sched, _) = crate::sched::optimal(&g).unwrap();
+        let cfg2 = ExecConfig { order: Some(sched.order), ..cfg };
+        let b = Interpreter::new(&g, ws, cfg2).run(&[input]).unwrap();
+        assert_eq!(a.outputs, b.outputs);
+        assert_eq!(a.alloc.high_water, 5216);
+        assert_eq!(b.alloc.high_water, 4960);
+    }
+
+    #[test]
+    fn tensordata_byte_roundtrip() {
+        let f = TensorData::F32(vec![1.5, -2.25, 0.0]);
+        assert_eq!(TensorData::from_bytes(DType::F32, &f.to_bytes()), f);
+        let q = TensorData::I8(vec![-128, 0, 127]);
+        assert_eq!(TensorData::from_bytes(DType::I8, &q.to_bytes()), q);
+        let i = TensorData::I32(vec![i32::MIN, 7, i32::MAX]);
+        assert_eq!(TensorData::from_bytes(DType::I32, &i.to_bytes()), i);
+    }
+}

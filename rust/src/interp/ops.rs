@@ -1,0 +1,490 @@
+//! Reference f32 kernels (NHWC, batch 1).
+//!
+//! These are the micro-interpreter's operator implementations — scalar
+//! loops written for clarity and bit-level determinism, matching TFLite
+//! reference-kernel semantics (SAME padding split low/high like
+//! TensorFlow). They double as the ground truth the PJRT-executed HLO
+//! artifacts are compared against in integration tests.
+
+use crate::graph::Padding;
+
+/// NHWC activation shape (N fixed at 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Hwc {
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+}
+
+impl Hwc {
+    pub fn from_shape(shape: &[usize]) -> Hwc {
+        assert_eq!(shape.len(), 4, "expected NHWC, got {shape:?}");
+        assert_eq!(shape[0], 1, "batch must be 1");
+        Hwc { h: shape[1], w: shape[2], c: shape[3] }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.h * self.w * self.c
+    }
+
+    #[inline]
+    pub fn at(&self, y: usize, x: usize, ch: usize) -> usize {
+        (y * self.w + x) * self.c + ch
+    }
+}
+
+/// TensorFlow SAME padding: total = max((out-1)*stride + k - in, 0),
+/// low half first.
+pub fn pad_amounts(input: usize, k: usize, stride: usize, padding: Padding, out: usize) -> usize {
+    match padding {
+        Padding::Valid => 0,
+        Padding::Same => {
+            let total = ((out - 1) * stride + k).saturating_sub(input);
+            total / 2
+        }
+    }
+}
+
+/// Standard 2D convolution. `weights` layout HWIO `[kh,kw,cin,cout]`,
+/// `bias` length `cout`.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d(
+    input: &[f32],
+    in_shape: Hwc,
+    weights: &[f32],
+    bias: &[f32],
+    out: &mut [f32],
+    out_shape: Hwc,
+    kernel: (usize, usize),
+    stride: (usize, usize),
+    padding: Padding,
+) {
+    let (kh, kw) = kernel;
+    let (sh, sw) = stride;
+    let cin = in_shape.c;
+    let cout = out_shape.c;
+    debug_assert_eq!(input.len(), in_shape.elems());
+    debug_assert_eq!(weights.len(), kh * kw * cin * cout);
+    debug_assert_eq!(bias.len(), cout);
+    debug_assert_eq!(out.len(), out_shape.elems());
+    let pad_y = pad_amounts(in_shape.h, kh, sh, padding, out_shape.h);
+    let pad_x = pad_amounts(in_shape.w, kw, sw, padding, out_shape.w);
+
+    // Perf pass (mirrors the i8 kernels): accumulator row per output pixel,
+    // contiguous weight rows in the innermost loop.
+    let mut acc_row = vec![0.0f32; cout];
+    for oy in 0..out_shape.h {
+        for ox in 0..out_shape.w {
+            acc_row.copy_from_slice(bias);
+            for ky in 0..kh {
+                let iy = (oy * sh + ky) as isize - pad_y as isize;
+                if iy < 0 || iy as usize >= in_shape.h {
+                    continue;
+                }
+                for kx in 0..kw {
+                    let ix = (ox * sw + kx) as isize - pad_x as isize;
+                    if ix < 0 || ix as usize >= in_shape.w {
+                        continue;
+                    }
+                    let ibase = in_shape.at(iy as usize, ix as usize, 0);
+                    let wbase = ((ky * kw + kx) * cin) * cout;
+                    for ic in 0..cin {
+                        let iv = input[ibase + ic];
+                        let wrow = &weights[wbase + ic * cout..wbase + (ic + 1) * cout];
+                        for (a, &w) in acc_row.iter_mut().zip(wrow) {
+                            *a += iv * w;
+                        }
+                    }
+                }
+            }
+            let obase = out_shape.at(oy, ox, 0);
+            out[obase..obase + cout].copy_from_slice(&acc_row);
+        }
+    }
+}
+
+/// Depthwise 2D convolution (multiplier 1). `weights` layout `[kh,kw,c]`,
+/// `bias` length `c`.
+#[allow(clippy::too_many_arguments)]
+pub fn dwconv2d(
+    input: &[f32],
+    in_shape: Hwc,
+    weights: &[f32],
+    bias: &[f32],
+    out: &mut [f32],
+    out_shape: Hwc,
+    kernel: (usize, usize),
+    stride: (usize, usize),
+    padding: Padding,
+) {
+    let (kh, kw) = kernel;
+    let (sh, sw) = stride;
+    let c = in_shape.c;
+    debug_assert_eq!(out_shape.c, c);
+    debug_assert_eq!(weights.len(), kh * kw * c);
+    debug_assert_eq!(bias.len(), c);
+    let pad_y = pad_amounts(in_shape.h, kh, sh, padding, out_shape.h);
+    let pad_x = pad_amounts(in_shape.w, kw, sw, padding, out_shape.w);
+
+    // Channels innermost: contiguous input and weight rows (perf pass).
+    let mut acc_row = vec![0.0f32; c];
+    for oy in 0..out_shape.h {
+        for ox in 0..out_shape.w {
+            acc_row.copy_from_slice(bias);
+            for ky in 0..kh {
+                let iy = (oy * sh + ky) as isize - pad_y as isize;
+                if iy < 0 || iy as usize >= in_shape.h {
+                    continue;
+                }
+                for kx in 0..kw {
+                    let ix = (ox * sw + kx) as isize - pad_x as isize;
+                    if ix < 0 || ix as usize >= in_shape.w {
+                        continue;
+                    }
+                    let ibase = in_shape.at(iy as usize, ix as usize, 0);
+                    let irow = &input[ibase..ibase + c];
+                    let wrow = &weights[(ky * kw + kx) * c..(ky * kw + kx + 1) * c];
+                    for ((a, &iv), &w) in acc_row.iter_mut().zip(irow).zip(wrow) {
+                        *a += iv * w;
+                    }
+                }
+            }
+            let obase = out_shape.at(oy, ox, 0);
+            out[obase..obase + c].copy_from_slice(&acc_row);
+        }
+    }
+}
+
+/// Fully connected: `weights` layout `[in, out]` (row-major), bias `[out]`.
+pub fn dense(input: &[f32], weights: &[f32], bias: &[f32], out: &mut [f32]) {
+    let n_in = input.len();
+    let n_out = out.len();
+    debug_assert_eq!(weights.len(), n_in * n_out);
+    debug_assert_eq!(bias.len(), n_out);
+    for o in 0..n_out {
+        let mut acc = bias[o];
+        for i in 0..n_in {
+            acc += input[i] * weights[i * n_out + o];
+        }
+        out[o] = acc;
+    }
+}
+
+/// Elementwise addition.
+pub fn add(a: &[f32], b: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), out.len());
+    for i in 0..a.len() {
+        out[i] = a[i] + b[i];
+    }
+}
+
+/// Channel-axis concat of equally-shaped-spatially inputs.
+pub fn concat_channels(parts: &[(&[f32], Hwc)], out: &mut [f32], out_shape: Hwc) {
+    debug_assert_eq!(out.len(), out_shape.elems());
+    let mut c_off = 0usize;
+    for (data, shape) in parts {
+        debug_assert_eq!(shape.h, out_shape.h);
+        debug_assert_eq!(shape.w, out_shape.w);
+        for y in 0..shape.h {
+            for x in 0..shape.w {
+                let src = shape.at(y, x, 0);
+                let dst = out_shape.at(y, x, c_off);
+                out[dst..dst + shape.c].copy_from_slice(&data[src..src + shape.c]);
+            }
+        }
+        c_off += shape.c;
+    }
+    debug_assert_eq!(c_off, out_shape.c);
+}
+
+/// ReLU.
+pub fn relu(input: &[f32], out: &mut [f32]) {
+    for i in 0..input.len() {
+        out[i] = input[i].max(0.0);
+    }
+}
+
+/// ReLU6.
+pub fn relu6(input: &[f32], out: &mut [f32]) {
+    for i in 0..input.len() {
+        out[i] = input[i].clamp(0.0, 6.0);
+    }
+}
+
+/// 2D max pooling.
+#[allow(clippy::too_many_arguments)]
+pub fn maxpool2d(
+    input: &[f32],
+    in_shape: Hwc,
+    out: &mut [f32],
+    out_shape: Hwc,
+    kernel: (usize, usize),
+    stride: (usize, usize),
+    padding: Padding,
+) {
+    let (kh, kw) = kernel;
+    let (sh, sw) = stride;
+    let pad_y = pad_amounts(in_shape.h, kh, sh, padding, out_shape.h);
+    let pad_x = pad_amounts(in_shape.w, kw, sw, padding, out_shape.w);
+    for oy in 0..out_shape.h {
+        for ox in 0..out_shape.w {
+            for ch in 0..in_shape.c {
+                let mut m = f32::NEG_INFINITY;
+                for ky in 0..kh {
+                    let iy = (oy * sh + ky) as isize - pad_y as isize;
+                    if iy < 0 || iy as usize >= in_shape.h {
+                        continue;
+                    }
+                    for kx in 0..kw {
+                        let ix = (ox * sw + kx) as isize - pad_x as isize;
+                        if ix < 0 || ix as usize >= in_shape.w {
+                            continue;
+                        }
+                        m = m.max(input[in_shape.at(iy as usize, ix as usize, ch)]);
+                    }
+                }
+                out[out_shape.at(oy, ox, ch)] = m;
+            }
+        }
+    }
+}
+
+/// 2D average pooling (divisor = valid taps, TFLite-style).
+#[allow(clippy::too_many_arguments)]
+pub fn avgpool2d(
+    input: &[f32],
+    in_shape: Hwc,
+    out: &mut [f32],
+    out_shape: Hwc,
+    kernel: (usize, usize),
+    stride: (usize, usize),
+    padding: Padding,
+) {
+    let (kh, kw) = kernel;
+    let (sh, sw) = stride;
+    let pad_y = pad_amounts(in_shape.h, kh, sh, padding, out_shape.h);
+    let pad_x = pad_amounts(in_shape.w, kw, sw, padding, out_shape.w);
+    for oy in 0..out_shape.h {
+        for ox in 0..out_shape.w {
+            for ch in 0..in_shape.c {
+                let mut acc = 0.0f32;
+                let mut taps = 0usize;
+                for ky in 0..kh {
+                    let iy = (oy * sh + ky) as isize - pad_y as isize;
+                    if iy < 0 || iy as usize >= in_shape.h {
+                        continue;
+                    }
+                    for kx in 0..kw {
+                        let ix = (ox * sw + kx) as isize - pad_x as isize;
+                        if ix < 0 || ix as usize >= in_shape.w {
+                            continue;
+                        }
+                        acc += input[in_shape.at(iy as usize, ix as usize, ch)];
+                        taps += 1;
+                    }
+                }
+                out[out_shape.at(oy, ox, ch)] = acc / taps.max(1) as f32;
+            }
+        }
+    }
+}
+
+/// Global average pooling to `[1,1,1,C]`.
+pub fn global_avgpool(input: &[f32], in_shape: Hwc, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), in_shape.c);
+    let hw = (in_shape.h * in_shape.w) as f32;
+    for ch in 0..in_shape.c {
+        let mut acc = 0.0f32;
+        for y in 0..in_shape.h {
+            for x in 0..in_shape.w {
+                acc += input[in_shape.at(y, x, ch)];
+            }
+        }
+        out[ch] = acc / hw;
+    }
+}
+
+/// Numerically-stable softmax over the whole slice (last-axis softmax for
+/// `[1, n]` logits).
+pub fn softmax(input: &[f32], out: &mut [f32]) {
+    let m = input.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for i in 0..input.len() {
+        out[i] = (input[i] - m).exp();
+        sum += out[i];
+    }
+    for v in out.iter_mut() {
+        *v /= sum;
+    }
+}
+
+/// Synthetic operator body over raw bytes: deterministic, cheap mixing so
+/// generated-DAG runs are reproducible and data-dependent.
+pub fn synthetic_bytes(inputs: &[&[u8]], out: &mut [u8]) {
+    for (i, o) in out.iter_mut().enumerate() {
+        let mut acc = 0x9Eu8.wrapping_add(i as u8);
+        for inp in inputs {
+            if !inp.is_empty() {
+                acc = acc.wrapping_mul(31).wrapping_add(inp[i % inp.len()]);
+            }
+        }
+        *o = acc;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv2d_identity_kernel() {
+        // 1x1 conv with identity weights passes channels through.
+        let shape = Hwc { h: 2, w: 2, c: 2 };
+        let input: Vec<f32> = (0..8).map(|v| v as f32).collect();
+        // HWIO [1,1,2,2] identity.
+        let weights = vec![1.0, 0.0, 0.0, 1.0];
+        let bias = vec![0.0, 0.0];
+        let mut out = vec![0.0; 8];
+        conv2d(&input, shape, &weights, &bias, &mut out, shape, (1, 1), (1, 1), Padding::Same);
+        assert_eq!(out, input);
+    }
+
+    #[test]
+    fn conv2d_sums_channels() {
+        let shape = Hwc { h: 1, w: 1, c: 3 };
+        let input = vec![1.0, 2.0, 3.0];
+        let weights = vec![1.0, 1.0, 1.0]; // [1,1,3,1] all ones
+        let bias = vec![0.5];
+        let out_shape = Hwc { h: 1, w: 1, c: 1 };
+        let mut out = vec![0.0];
+        conv2d(&input, shape, &weights, &bias, &mut out, out_shape, (1, 1), (1, 1), Padding::Valid);
+        assert_eq!(out, vec![6.5]);
+    }
+
+    #[test]
+    fn conv2d_same_padding_3x3_counts_taps() {
+        // All-ones input & kernel, 1 channel: corner output = 4 taps,
+        // edge = 6, centre = 9.
+        let shape = Hwc { h: 3, w: 3, c: 1 };
+        let input = vec![1.0; 9];
+        let weights = vec![1.0; 9];
+        let bias = vec![0.0];
+        let mut out = vec![0.0; 9];
+        conv2d(&input, shape, &weights, &bias, &mut out, shape, (3, 3), (1, 1), Padding::Same);
+        assert_eq!(out, vec![4., 6., 4., 6., 9., 6., 4., 6., 4.]);
+    }
+
+    #[test]
+    fn conv2d_stride2_shape() {
+        let in_shape = Hwc { h: 4, w: 4, c: 1 };
+        let out_shape = Hwc { h: 2, w: 2, c: 1 };
+        let input: Vec<f32> = (0..16).map(|v| v as f32).collect();
+        let weights = vec![1.0]; // 1x1
+        let bias = vec![0.0];
+        let mut out = vec![0.0; 4];
+        conv2d(&input, in_shape, &weights, &bias, &mut out, out_shape, (1, 1), (2, 2), Padding::Same);
+        assert_eq!(out, vec![0.0, 2.0, 8.0, 10.0]);
+    }
+
+    #[test]
+    fn dwconv_channels_independent() {
+        let shape = Hwc { h: 1, w: 2, c: 2 };
+        let input = vec![1.0, 10.0, 2.0, 20.0]; // (y0x0: c0=1,c1=10), (y0x1: c0=2,c1=20)
+        // kernel 1x2, per-channel weights: c0 = [1, 1], c1 = [0.5, 0.5]
+        let weights = vec![1.0, 0.5, 1.0, 0.5]; // [ky=0][kx=0][c], [ky=0][kx=1][c]
+        let bias = vec![0.0, 0.0];
+        let out_shape = Hwc { h: 1, w: 1, c: 2 };
+        let mut out = vec![0.0; 2];
+        dwconv2d(&input, shape, &weights, &bias, &mut out, out_shape, (1, 2), (1, 1), Padding::Valid);
+        assert_eq!(out, vec![3.0, 15.0]);
+    }
+
+    #[test]
+    fn dense_matvec() {
+        let input = vec![1.0, 2.0];
+        let weights = vec![1.0, 2.0, 3.0, 4.0]; // [[1,2],[3,4]] row-major [in,out]
+        let bias = vec![0.1, 0.2];
+        let mut out = vec![0.0; 2];
+        dense(&input, &weights, &bias, &mut out);
+        assert!((out[0] - 7.1).abs() < 1e-6); // 1*1+2*3+0.1
+        assert!((out[1] - 10.2).abs() < 1e-6); // 1*2+2*4+0.2
+    }
+
+    #[test]
+    fn concat_interleaves_channels() {
+        let a = vec![1.0, 2.0, 3.0, 4.0]; // 2x1x2
+        let b = vec![9.0, 8.0]; // 2x1x1
+        let sa = Hwc { h: 2, w: 1, c: 2 };
+        let sb = Hwc { h: 2, w: 1, c: 1 };
+        let so = Hwc { h: 2, w: 1, c: 3 };
+        let mut out = vec![0.0; 6];
+        concat_channels(&[(&a, sa), (&b, sb)], &mut out, so);
+        assert_eq!(out, vec![1.0, 2.0, 9.0, 3.0, 4.0, 8.0]);
+    }
+
+    #[test]
+    fn relu_and_relu6() {
+        let x = vec![-1.0, 0.5, 7.0];
+        let mut r = vec![0.0; 3];
+        relu(&x, &mut r);
+        assert_eq!(r, vec![0.0, 0.5, 7.0]);
+        relu6(&x, &mut r);
+        assert_eq!(r, vec![0.0, 0.5, 6.0]);
+    }
+
+    #[test]
+    fn maxpool_basic() {
+        let shape = Hwc { h: 2, w: 2, c: 1 };
+        let input = vec![1.0, 3.0, 2.0, 4.0];
+        let out_shape = Hwc { h: 1, w: 1, c: 1 };
+        let mut out = vec![0.0];
+        maxpool2d(&input, shape, &mut out, out_shape, (2, 2), (2, 2), Padding::Valid);
+        assert_eq!(out, vec![4.0]);
+    }
+
+    #[test]
+    fn avgpool_divides_by_valid_taps() {
+        // 3x3 input, 2x2 kernel stride 2, SAME → 2x2 out; bottom/right
+        // cells average fewer taps.
+        let shape = Hwc { h: 3, w: 3, c: 1 };
+        let input = vec![1.0; 9];
+        let out_shape = Hwc { h: 2, w: 2, c: 1 };
+        let mut out = vec![0.0; 4];
+        avgpool2d(&input, shape, &mut out, out_shape, (2, 2), (2, 2), Padding::Same);
+        assert_eq!(out, vec![1.0; 4]);
+    }
+
+    #[test]
+    fn global_avgpool_means() {
+        let shape = Hwc { h: 2, w: 2, c: 2 };
+        let input = vec![1.0, 10.0, 2.0, 20.0, 3.0, 30.0, 4.0, 40.0];
+        let mut out = vec![0.0; 2];
+        global_avgpool(&input, shape, &mut out);
+        assert_eq!(out, vec![2.5, 25.0]);
+    }
+
+    #[test]
+    fn softmax_sums_to_one_and_is_stable() {
+        let x = vec![1000.0, 1001.0];
+        let mut out = vec![0.0; 2];
+        softmax(&x, &mut out);
+        assert!((out.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(out[1] > out[0]);
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn synthetic_is_deterministic() {
+        let a = vec![1u8, 2, 3];
+        let b = vec![7u8; 5];
+        let mut o1 = vec![0u8; 4];
+        let mut o2 = vec![0u8; 4];
+        synthetic_bytes(&[&a, &b], &mut o1);
+        synthetic_bytes(&[&a, &b], &mut o2);
+        assert_eq!(o1, o2);
+        let mut o3 = vec![0u8; 4];
+        synthetic_bytes(&[&b, &a], &mut o3);
+        assert_ne!(o1, o3, "order-sensitive mixing");
+    }
+}

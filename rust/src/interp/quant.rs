@@ -1,0 +1,530 @@
+//! Int8 quantized kernels (TFLite-style affine quantization).
+//!
+//! MCU deployments run int8: `real = scale * (q - zero_point)`. Weights are
+//! quantized symmetrically (zero-point 0), biases are i32 with scale
+//! `s_in * s_w`, and every activation tensor carries its own
+//! [`QuantParams`]. Accumulation is i32; requantization uses f64 multipliers
+//! (the fixed-point multiplier of a real MCU kernel introduces < 1 ULP
+//! differences that don't matter for this reproduction and are covered by
+//! the f32-vs-i8 tolerance tests).
+
+use super::ops::{pad_amounts, Hwc};
+use crate::graph::Padding;
+
+/// Affine quantization parameters of one tensor.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct QuantParams {
+    pub scale: f32,
+    pub zero_point: i32,
+}
+
+impl QuantParams {
+    pub fn new(scale: f32, zero_point: i32) -> Self {
+        assert!(scale > 0.0, "quant scale must be positive");
+        QuantParams { scale, zero_point }
+    }
+
+    /// Parameters covering the symmetric range `[-absmax, absmax]`.
+    pub fn symmetric(absmax: f32) -> Self {
+        QuantParams::new((absmax / 127.0).max(1e-8), 0)
+    }
+
+    /// Parameters covering `[lo, hi]` (asymmetric, i8 domain).
+    pub fn from_range(lo: f32, hi: f32) -> Self {
+        let lo = lo.min(0.0);
+        let hi = hi.max(lo + 1e-6);
+        let scale = (hi - lo) / 255.0;
+        let zp = (-128.0 - lo / scale).round().clamp(-128.0, 127.0) as i32;
+        QuantParams::new(scale, zp)
+    }
+
+    #[inline]
+    pub fn quantize_one(&self, v: f32) -> i8 {
+        ((v / self.scale).round() as i32 + self.zero_point).clamp(-128, 127) as i8
+    }
+
+    #[inline]
+    pub fn dequantize_one(&self, q: i8) -> f32 {
+        (q as i32 - self.zero_point) as f32 * self.scale
+    }
+
+    pub fn quantize(&self, vs: &[f32]) -> Vec<i8> {
+        vs.iter().map(|&v| self.quantize_one(v)).collect()
+    }
+
+    pub fn dequantize(&self, qs: &[i8]) -> Vec<f32> {
+        qs.iter().map(|&q| self.dequantize_one(q)).collect()
+    }
+}
+
+/// TFLite-style fixed-point requantization multiplier:
+/// `mult = frac · 2^e` with `frac ∈ [0.5, 1)`, stored as
+/// `m = round(frac · 2^31)` and right-shift `sh = 31 − e`. Integer-only
+/// rescaling is both what a real MCU kernel does and measurably faster
+/// than per-element f64 (perf pass, EXPERIMENTS.md §Perf).
+#[derive(Clone, Copy, Debug)]
+struct FixedMult {
+    m: i64,
+    sh: u32,
+}
+
+impl FixedMult {
+    fn new(mult: f64) -> FixedMult {
+        assert!(mult > 0.0, "requantization multiplier must be positive");
+        let mut e = 0i32;
+        let mut frac = mult;
+        while frac >= 1.0 {
+            frac /= 2.0;
+            e += 1;
+        }
+        while frac < 0.5 {
+            frac *= 2.0;
+            e -= 1;
+        }
+        let mut m = (frac * (1i64 << 31) as f64).round() as i64;
+        if m == 1i64 << 31 {
+            m >>= 1;
+            e += 1;
+        }
+        let sh = 31 - e;
+        assert!(sh >= 1, "multiplier too large for fixed-point requantization");
+        FixedMult { m, sh: sh.min(63) as u32 }
+    }
+
+    /// `round(acc · mult)` in pure integer arithmetic.
+    #[inline]
+    fn apply(&self, acc: i32) -> i32 {
+        let prod = acc as i64 * self.m;
+        ((prod + (1i64 << (self.sh - 1))) >> self.sh) as i32
+    }
+}
+
+#[inline]
+fn requantize_fixed(acc: i32, fm: FixedMult, zp_out: i32) -> i8 {
+    (fm.apply(acc) + zp_out).clamp(-128, 127) as i8
+}
+
+/// Reference f64 requantization (retained as the oracle for the
+/// fixed-point path's unit tests).
+#[cfg_attr(not(test), allow(dead_code))]
+#[inline]
+fn requantize(acc: i32, mult: f64, zp_out: i32) -> i8 {
+    ((acc as f64 * mult).round() as i32 + zp_out).clamp(-128, 127) as i8
+}
+
+/// Quantized standard conv. Weight zero-point must be 0 (symmetric).
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_i8(
+    input: &[i8],
+    in_shape: Hwc,
+    in_q: QuantParams,
+    weights: &[i8],
+    w_scale: f32,
+    bias: &[i32],
+    out: &mut [i8],
+    out_shape: Hwc,
+    out_q: QuantParams,
+    kernel: (usize, usize),
+    stride: (usize, usize),
+    padding: Padding,
+) {
+    let (kh, kw) = kernel;
+    let (sh, sw) = stride;
+    let cin = in_shape.c;
+    let cout = out_shape.c;
+    let pad_y = pad_amounts(in_shape.h, kh, sh, padding, out_shape.h);
+    let pad_x = pad_amounts(in_shape.w, kw, sw, padding, out_shape.w);
+    let fm = FixedMult::new((in_q.scale as f64) * (w_scale as f64) / (out_q.scale as f64));
+    let zp_in = in_q.zero_point;
+
+    // Hot loop structure (perf pass, EXPERIMENTS.md §Perf): one i32
+    // accumulator row per output pixel, taps and input channels in the
+    // outer loops so the innermost loop walks a *contiguous* weight row —
+    // the strided `w[.. + ic*cout + oc]` access of the naive ordering was
+    // the top bottleneck. The pointwise (1×1, stride 1) case — most of
+    // MobileNet's MACs — skips the padding arithmetic entirely.
+    let mut acc_row: Vec<i32> = vec![0; cout];
+    if kh == 1 && kw == 1 && sh == 1 && sw == 1 {
+        for p in 0..out_shape.h * out_shape.w {
+            acc_row.copy_from_slice(bias);
+            let ibase = p * cin;
+            for ic in 0..cin {
+                let iv = input[ibase + ic] as i32 - zp_in;
+                if iv == 0 {
+                    continue;
+                }
+                let wrow = &weights[ic * cout..(ic + 1) * cout];
+                for (a, &w) in acc_row.iter_mut().zip(wrow) {
+                    *a += iv * w as i32;
+                }
+            }
+            let orow = &mut out[p * cout..(p + 1) * cout];
+            for (o, &a) in orow.iter_mut().zip(&acc_row) {
+                *o = requantize_fixed(a, fm, out_q.zero_point);
+            }
+        }
+        return;
+    }
+
+    for oy in 0..out_shape.h {
+        for ox in 0..out_shape.w {
+            acc_row.copy_from_slice(bias);
+            for ky in 0..kh {
+                let iy = (oy * sh + ky) as isize - pad_y as isize;
+                if iy < 0 || iy as usize >= in_shape.h {
+                    continue;
+                }
+                for kx in 0..kw {
+                    let ix = (ox * sw + kx) as isize - pad_x as isize;
+                    if ix < 0 || ix as usize >= in_shape.w {
+                        continue;
+                    }
+                    let ibase = in_shape.at(iy as usize, ix as usize, 0);
+                    let wbase = ((ky * kw + kx) * cin) * cout;
+                    for ic in 0..cin {
+                        let iv = input[ibase + ic] as i32 - zp_in;
+                        if iv == 0 {
+                            continue;
+                        }
+                        let wrow = &weights[wbase + ic * cout..wbase + (ic + 1) * cout];
+                        for (a, &w) in acc_row.iter_mut().zip(wrow) {
+                            *a += iv * w as i32;
+                        }
+                    }
+                }
+            }
+            let obase = out_shape.at(oy, ox, 0);
+            let orow = &mut out[obase..obase + cout];
+            for (o, &a) in orow.iter_mut().zip(&acc_row) {
+                *o = requantize_fixed(a, fm, out_q.zero_point);
+            }
+        }
+    }
+}
+
+/// Quantized depthwise conv.
+#[allow(clippy::too_many_arguments)]
+pub fn dwconv2d_i8(
+    input: &[i8],
+    in_shape: Hwc,
+    in_q: QuantParams,
+    weights: &[i8],
+    w_scale: f32,
+    bias: &[i32],
+    out: &mut [i8],
+    out_shape: Hwc,
+    out_q: QuantParams,
+    kernel: (usize, usize),
+    stride: (usize, usize),
+    padding: Padding,
+) {
+    let (kh, kw) = kernel;
+    let (sh, sw) = stride;
+    let c = in_shape.c;
+    let pad_y = pad_amounts(in_shape.h, kh, sh, padding, out_shape.h);
+    let pad_x = pad_amounts(in_shape.w, kw, sw, padding, out_shape.w);
+    let fm = FixedMult::new((in_q.scale as f64) * (w_scale as f64) / (out_q.scale as f64));
+
+    // Perf pass: channels innermost so both the input row and the weight
+    // tap row are walked contiguously (the naive channel-outer ordering
+    // re-strided both arrays per element).
+    let zp_in = in_q.zero_point;
+    let mut acc_row: Vec<i32> = vec![0; c];
+    for oy in 0..out_shape.h {
+        for ox in 0..out_shape.w {
+            acc_row.copy_from_slice(bias);
+            for ky in 0..kh {
+                let iy = (oy * sh + ky) as isize - pad_y as isize;
+                if iy < 0 || iy as usize >= in_shape.h {
+                    continue;
+                }
+                for kx in 0..kw {
+                    let ix = (ox * sw + kx) as isize - pad_x as isize;
+                    if ix < 0 || ix as usize >= in_shape.w {
+                        continue;
+                    }
+                    let ibase = in_shape.at(iy as usize, ix as usize, 0);
+                    let irow = &input[ibase..ibase + c];
+                    let wrow = &weights[(ky * kw + kx) * c..(ky * kw + kx + 1) * c];
+                    for ((a, &iv), &w) in acc_row.iter_mut().zip(irow).zip(wrow) {
+                        *a += (iv as i32 - zp_in) * w as i32;
+                    }
+                }
+            }
+            let obase = out_shape.at(oy, ox, 0);
+            let orow = &mut out[obase..obase + c];
+            for (o, &a) in orow.iter_mut().zip(&acc_row) {
+                *o = requantize_fixed(a, fm, out_q.zero_point);
+            }
+        }
+    }
+}
+
+/// Quantized fully connected.
+#[allow(clippy::too_many_arguments)]
+pub fn dense_i8(
+    input: &[i8],
+    in_q: QuantParams,
+    weights: &[i8],
+    w_scale: f32,
+    bias: &[i32],
+    out: &mut [i8],
+    out_q: QuantParams,
+) {
+    let n_in = input.len();
+    let n_out = out.len();
+    let fm = FixedMult::new((in_q.scale as f64) * (w_scale as f64) / (out_q.scale as f64));
+    // Contiguous weight rows (perf pass): accumulate over outputs with the
+    // input element hoisted.
+    let mut acc: Vec<i32> = bias.to_vec();
+    for i in 0..n_in {
+        let iv = input[i] as i32 - in_q.zero_point;
+        if iv == 0 {
+            continue;
+        }
+        let wrow = &weights[i * n_out..(i + 1) * n_out];
+        for (a, &w) in acc.iter_mut().zip(wrow) {
+            *a += iv * w as i32;
+        }
+    }
+    for (o, &a) in out.iter_mut().zip(&acc) {
+        *o = requantize_fixed(a, fm, out_q.zero_point);
+    }
+}
+
+/// Quantized elementwise add (each operand requantized into the output
+/// domain).
+pub fn add_i8(
+    a: &[i8],
+    a_q: QuantParams,
+    b: &[i8],
+    b_q: QuantParams,
+    out: &mut [i8],
+    out_q: QuantParams,
+) {
+    let ma = (a_q.scale / out_q.scale) as f64;
+    let mb = (b_q.scale / out_q.scale) as f64;
+    for i in 0..out.len() {
+        let av = (a[i] as i32 - a_q.zero_point) as f64 * ma;
+        let bv = (b[i] as i32 - b_q.zero_point) as f64 * mb;
+        out[i] = ((av + bv).round() as i32 + out_q.zero_point).clamp(-128, 127) as i8;
+    }
+}
+
+/// Quantized ReLU: clamp below at the zero point (in/out share params).
+pub fn relu_i8(input: &[i8], q: QuantParams, out: &mut [i8]) {
+    let zp = q.zero_point.clamp(-128, 127) as i8;
+    for i in 0..input.len() {
+        out[i] = input[i].max(zp);
+    }
+}
+
+/// Quantized ReLU6: clamp to `[zp, q(6.0)]`.
+pub fn relu6_i8(input: &[i8], q: QuantParams, out: &mut [i8]) {
+    let lo = q.zero_point.clamp(-128, 127) as i8;
+    let hi = q.quantize_one(6.0).max(lo);
+    for i in 0..input.len() {
+        out[i] = input[i].clamp(lo, hi);
+    }
+}
+
+/// Quantized max pooling (domain-preserving, no requantization needed).
+#[allow(clippy::too_many_arguments)]
+pub fn maxpool2d_i8(
+    input: &[i8],
+    in_shape: Hwc,
+    out: &mut [i8],
+    out_shape: Hwc,
+    kernel: (usize, usize),
+    stride: (usize, usize),
+    padding: Padding,
+) {
+    let (kh, kw) = kernel;
+    let (sh, sw) = stride;
+    let pad_y = pad_amounts(in_shape.h, kh, sh, padding, out_shape.h);
+    let pad_x = pad_amounts(in_shape.w, kw, sw, padding, out_shape.w);
+    for oy in 0..out_shape.h {
+        for ox in 0..out_shape.w {
+            for ch in 0..in_shape.c {
+                let mut m = i8::MIN;
+                for ky in 0..kh {
+                    let iy = (oy * sh + ky) as isize - pad_y as isize;
+                    if iy < 0 || iy as usize >= in_shape.h {
+                        continue;
+                    }
+                    for kx in 0..kw {
+                        let ix = (ox * sw + kx) as isize - pad_x as isize;
+                        if ix < 0 || ix as usize >= in_shape.w {
+                            continue;
+                        }
+                        m = m.max(input[in_shape.at(iy as usize, ix as usize, ch)]);
+                    }
+                }
+                out[out_shape.at(oy, ox, ch)] = m;
+            }
+        }
+    }
+}
+
+/// Quantized global average pooling (in/out share params; rounding to
+/// nearest).
+pub fn global_avgpool_i8(input: &[i8], in_shape: Hwc, q: QuantParams, out: &mut [i8]) {
+    let hw = (in_shape.h * in_shape.w) as i64;
+    for ch in 0..in_shape.c {
+        let mut acc: i64 = 0;
+        for y in 0..in_shape.h {
+            for x in 0..in_shape.w {
+                acc += input[in_shape.at(y, x, ch)] as i64 - q.zero_point as i64;
+            }
+        }
+        let mean = (acc as f64 / hw as f64).round() as i32 + q.zero_point;
+        out[ch] = mean.clamp(-128, 127) as i8;
+    }
+}
+
+/// Quantized softmax: dequantize, stable softmax, requantize to the
+/// conventional output domain `scale = 1/256, zp = -128`.
+pub fn softmax_i8(input: &[i8], in_q: QuantParams, out: &mut [i8]) {
+    let xs = in_q.dequantize(input);
+    let m = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let exps: Vec<f32> = xs.iter().map(|v| (v - m).exp()).collect();
+    let sum: f32 = exps.iter().sum();
+    for (o, e) in out.iter_mut().zip(&exps) {
+        *o = (((e / sum) * 256.0).round() as i32 - 128).clamp(-128, 127) as i8;
+    }
+}
+
+/// The conventional softmax output quantization.
+pub fn softmax_out_qparams() -> QuantParams {
+    QuantParams::new(1.0 / 256.0, -128)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixed_mult_matches_f64_requantize() {
+        let mut rng = crate::util::rng::Rng::new(314);
+        for _ in 0..3000 {
+            let mult = rng.f64() * 0.499 + 1e-6; // typical requant range
+            let acc = (rng.next_u64() as i32) % 2_000_000;
+            let fm = FixedMult::new(mult);
+            let a = requantize_fixed(acc, fm, -3);
+            let b = requantize(acc, mult, -3);
+            assert!(
+                (a as i32 - b as i32).abs() <= 1,
+                "mult={mult} acc={acc}: fixed={a} f64={b}"
+            );
+        }
+    }
+
+    #[test]
+    fn fixed_mult_handles_extremes() {
+        for mult in [1e-6, 0.25, 0.5, 0.999, 1.5] {
+            let fm = FixedMult::new(mult);
+            assert_eq!(fm.apply(0), 0);
+            let v = fm.apply(1000);
+            let want = (1000.0 * mult).round() as i32;
+            assert!((v - want).abs() <= 1, "mult={mult}: {v} vs {want}");
+        }
+    }
+
+    #[test]
+    fn quantize_roundtrip_within_half_scale() {
+        let q = QuantParams::from_range(-4.0, 4.0);
+        for v in [-3.9f32, -1.0, 0.0, 0.5, 3.9] {
+            let r = q.dequantize_one(q.quantize_one(v));
+            assert!((r - v).abs() <= q.scale * 0.5 + 1e-6, "v={v} r={r}");
+        }
+    }
+
+    #[test]
+    fn symmetric_weights_have_zero_zp() {
+        let q = QuantParams::symmetric(2.0);
+        assert_eq!(q.zero_point, 0);
+        assert_eq!(q.quantize_one(0.0), 0);
+    }
+
+    #[test]
+    fn conv_i8_tracks_f32_reference() {
+        use crate::interp::ops;
+        let in_shape = Hwc { h: 4, w: 4, c: 2 };
+        let out_shape = Hwc { h: 4, w: 4, c: 3 };
+        let mut rng = crate::util::rng::Rng::new(99);
+        let input_f: Vec<f32> = (0..in_shape.elems()).map(|_| rng.f32_range(-1.0, 1.0)).collect();
+        let weights_f: Vec<f32> = (0..3 * 3 * 2 * 3).map(|_| rng.f32_range(-0.5, 0.5)).collect();
+        let bias_f: Vec<f32> = (0..3).map(|_| rng.f32_range(-0.2, 0.2)).collect();
+
+        let mut out_f = vec![0.0; out_shape.elems()];
+        ops::conv2d(
+            &input_f, in_shape, &weights_f, &bias_f, &mut out_f, out_shape,
+            (3, 3), (1, 1), Padding::Same,
+        );
+
+        let in_q = QuantParams::from_range(-1.0, 1.0);
+        let w_q = QuantParams::symmetric(0.5);
+        let absmax = out_f.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        let out_q = QuantParams::from_range(-absmax, absmax);
+        let input_q = in_q.quantize(&input_f);
+        let weights_q = w_q.quantize(&weights_f);
+        let bias_scale = in_q.scale * w_q.scale;
+        let bias_q: Vec<i32> = bias_f.iter().map(|&b| (b / bias_scale).round() as i32).collect();
+        let mut out_i = vec![0i8; out_shape.elems()];
+        conv2d_i8(
+            &input_q, in_shape, in_q, &weights_q, w_q.scale, &bias_q, &mut out_i, out_shape,
+            out_q, (3, 3), (1, 1), Padding::Same,
+        );
+        let out_deq = out_q.dequantize(&out_i);
+        for (a, b) in out_f.iter().zip(&out_deq) {
+            assert!((a - b).abs() < 6.0 * out_q.scale, "f32={a} i8={b}");
+        }
+    }
+
+    #[test]
+    fn add_i8_requantizes_operand_domains() {
+        let a_q = QuantParams::from_range(-1.0, 1.0);
+        let b_q = QuantParams::from_range(-2.0, 2.0);
+        let o_q = QuantParams::from_range(-3.0, 3.0);
+        let a = a_q.quantize(&[0.5, -0.25]);
+        let b = b_q.quantize(&[1.0, 0.75]);
+        let mut out = vec![0i8; 2];
+        add_i8(&a, a_q, &b, b_q, &mut out, o_q);
+        let got = o_q.dequantize(&out);
+        assert!((got[0] - 1.5).abs() < 0.05);
+        assert!((got[1] - 0.5).abs() < 0.05);
+    }
+
+    #[test]
+    fn relu6_i8_clamps() {
+        let q = QuantParams::from_range(-8.0, 8.0);
+        let x = q.quantize(&[-3.0, 2.0, 7.5]);
+        let mut out = vec![0i8; 3];
+        relu6_i8(&x, q, &mut out);
+        let got = q.dequantize(&out);
+        assert!(got[0].abs() < 0.1);
+        assert!((got[1] - 2.0).abs() < 0.1);
+        assert!((got[2] - 6.0).abs() < 0.1);
+    }
+
+    #[test]
+    fn softmax_i8_sums_to_about_one() {
+        let in_q = QuantParams::from_range(-8.0, 8.0);
+        let x = in_q.quantize(&[1.0, 2.0, 3.0]);
+        let mut out = vec![0i8; 3];
+        softmax_i8(&x, in_q, &mut out);
+        let oq = softmax_out_qparams();
+        let sum: f32 = oq.dequantize(&out).iter().sum();
+        assert!((sum - 1.0).abs() < 0.05, "sum={sum}");
+    }
+
+    #[test]
+    fn gap_i8_mean() {
+        let q = QuantParams::new(0.1, 3);
+        let shape = Hwc { h: 2, w: 2, c: 1 };
+        let input = q.quantize(&[1.0, 2.0, 3.0, 4.0]);
+        let mut out = vec![0i8; 1];
+        global_avgpool_i8(&input, shape, q, &mut out);
+        assert!((q.dequantize_one(out[0]) - 2.5).abs() < 0.1);
+    }
+}

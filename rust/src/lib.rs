@@ -1,0 +1,42 @@
+//! # mcu-reorder
+//!
+//! A production-style reproduction of *“Neural networks on microcontrollers:
+//! saving memory at inference via operator reordering”* (Liberis & Lane,
+//! 2019) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate provides:
+//!
+//! - [`graph`] — a computation-graph IR with byte-exact SRAM/Flash memory
+//!   accounting and a JSON model container.
+//! - [`sched`] — working-set simulation and the paper's Algorithm 1: a
+//!   memoized dynamic program over tensor sets that finds the execution
+//!   order minimizing peak SRAM usage, plus brute-force and greedy
+//!   baselines.
+//! - [`alloc`] — SRAM arena allocators: the paper's dynamic allocator with
+//!   post-operator compaction/defragmentation, the static no-reuse planner
+//!   it replaces, and an offline lifetime-aware offset planner (§6).
+//! - [`interp`] — a micro-interpreter that executes scheduled graphs inside
+//!   a fixed-size arena through a handle table (no raw pointers across
+//!   operators, so buffers may move during defragmentation).
+//! - [`mcu`] — board profiles and first-order cycle/energy models used to
+//!   reproduce the paper's execution-time and energy overhead numbers.
+//! - [`models`] — the evaluated model zoo: the Figure-1 example graph,
+//!   MobileNet-v1 0.25 person detection, a SwiftNet-style cell network, and
+//!   synthetic DAG generators.
+//! - [`runtime`] — PJRT loading/execution of the AOT-compiled JAX/Pallas
+//!   artifacts (Python never runs at inference time).
+//! - [`coordinator`] — a small serving layer (request queue, batcher,
+//!   worker pool, metrics) driving the runtime.
+//! - [`util`] — in-tree substrates for JSON, RNG, property testing and
+//!   benchmarking (their crates.io equivalents are not vendored here).
+
+pub mod alloc;
+pub mod graph;
+pub mod interp;
+pub mod mcu;
+pub mod models;
+pub mod nas;
+pub mod runtime;
+pub mod coordinator;
+pub mod sched;
+pub mod util;

@@ -1,0 +1,462 @@
+//! `mcu-reorder` — command-line tool (the repo's analogue of the paper's
+//! tflite-tools: analyze a model's memory profile, compute the optimal
+//! operator order, embed it into the model file, and run/serve the
+//! AOT-compiled artifact through PJRT).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use mcu_reorder::coordinator::{self, Coordinator, ServeConfig};
+use mcu_reorder::graph::serde::ModelFile;
+use mcu_reorder::graph::{DType, Graph};
+use mcu_reorder::interp::{ExecConfig, Interpreter, TensorData, WeightStore};
+use mcu_reorder::mcu::{CostModel, DeployReport, OverheadModel, NUCLEO_F767ZI};
+use mcu_reorder::models;
+use mcu_reorder::sched;
+use mcu_reorder::util::bench::Table;
+
+const USAGE: &str = "\
+mcu-reorder — memory-optimal operator reordering for MCU inference
+(reproduction of Liberis & Lane, 2019)
+
+USAGE:
+  mcu-reorder <command> [options]
+
+COMMANDS:
+  list                         List zoo models
+  analyze   --model M          Working-set table + peaks + deploy verdict
+            [--dtype i8|f32] [--order default|optimal|greedy|dfs] [--file F]
+  optimize  --model M --out F  Embed the optimal execution order into a
+            [--dtype i8|f32]   model JSON file (like tflite-tools)
+  export    --model M --json F --weights F [--dtype f32]
+                               Export graph JSON + seeded weights for the
+                               AOT pipeline (python/compile/aot.py)
+  run       --model M [--artifacts DIR] [--check] [--n N]
+                               Execute the AOT artifact via PJRT
+  serve     --model M [--engine pjrt|interp] [--artifacts DIR]
+            [--port P] [--workers N]
+                               Start the serving coordinator (TCP front-end)
+  table1                       Reproduce the paper's Table 1
+  sweep                        Fit matrix: zoo models × boards × orders
+  nas       [--samples N] [--seed S]
+                               §6: memory-aware architecture search scored
+                               by Algorithm 1 (reports Pareto front and how
+                               many candidates only fit when reordered)
+  dot       --model M [--dtype i8]
+                               GraphViz dump of a zoo model
+
+Common analyze flags: --chart (ASCII memory plot), --csv FILE (trace dump),
+--inplace (enable §6 in-place Add accumulation in the accounting).
+";
+
+fn parse_args(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
+    let mut pos = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(name) = a.strip_prefix("--") {
+            let boolean = matches!(name, "check" | "table" | "chart" | "inplace");
+            if boolean {
+                flags.insert(name.to_string(), "true".to_string());
+            } else if i + 1 < args.len() {
+                flags.insert(name.to_string(), args[i + 1].clone());
+                i += 1;
+            } else {
+                flags.insert(name.to_string(), "true".to_string());
+            }
+        } else {
+            pos.push(a.clone());
+        }
+        i += 1;
+    }
+    (pos, flags)
+}
+
+fn dtype_flag(flags: &HashMap<String, String>, default: DType) -> Result<DType> {
+    match flags.get("dtype").map(|s| s.as_str()) {
+        None => Ok(default),
+        Some(s) => DType::from_name(s).ok_or_else(|| anyhow!("unknown dtype {s:?}")),
+    }
+}
+
+/// Resolve a model graph from `--model <zoo-name>` or `--file <model.json>`.
+fn load_graph(flags: &HashMap<String, String>, default_dtype: DType) -> Result<(Graph, Option<Vec<usize>>)> {
+    if let Some(path) = flags.get("file") {
+        let src = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        let mf = ModelFile::from_json(&src).map_err(|e| anyhow!("{e}"))?;
+        return Ok((mf.graph, mf.execution_order));
+    }
+    let name = flags.get("model").ok_or_else(|| anyhow!("--model or --file required"))?;
+    let dtype = dtype_flag(flags, default_dtype)?;
+    let g = models::by_name(name, dtype)
+        .ok_or_else(|| anyhow!("unknown model {name:?}; try: {}", models::MODEL_NAMES.join(", ")))?;
+    Ok((g, None))
+}
+
+fn order_for(g: &Graph, spec: &str) -> Result<sched::Schedule> {
+    Ok(match spec {
+        "default" => {
+            let order = g.default_order();
+            let peak = sched::peak_of(g, &order);
+            sched::Schedule { order, peak_bytes: peak }
+        }
+        "optimal" => sched::optimal(g).map_err(|e| anyhow!("{e}"))?.0,
+        "greedy" => sched::greedy_min_increase(g),
+        "dfs" => sched::greedy_depth_first(g),
+        other => bail!("unknown order {other:?} (default|optimal|greedy|dfs)"),
+    })
+}
+
+fn cmd_list() {
+    println!("{:<12} {:>6} {:>8} {:>12} {:>12}", "model", "ops", "tensors", "params", "activations");
+    for name in models::MODEL_NAMES {
+        let g = models::by_name(name, DType::I8).unwrap();
+        println!(
+            "{:<12} {:>6} {:>8} {:>10}B {:>10}B",
+            name,
+            g.n_ops(),
+            g.n_tensors(),
+            g.model_size(),
+            g.activation_total()
+        );
+    }
+}
+
+fn cmd_analyze(flags: &HashMap<String, String>) -> Result<()> {
+    let (g, embedded) = load_graph(flags, DType::I8)?;
+    let opts = if flags.contains_key("inplace") {
+        sched::Opts::INPLACE
+    } else {
+        sched::Opts::default()
+    };
+    let spec = flags.get("order").map(|s| s.as_str()).unwrap_or("default");
+    let sched = if spec == "default" && embedded.is_some() {
+        let order = embedded.unwrap();
+        let peak = sched::peak_of_opts(&g, &order, opts);
+        sched::Schedule { order, peak_bytes: peak }
+    } else if spec == "optimal" && opts.inplace_add {
+        sched::optimal_opts(&g, opts).map_err(|e| anyhow!("{e}"))?.0
+    } else {
+        order_for(&g, spec)?
+    };
+    let trace = sched::simulate_opts(&g, &sched.order, opts);
+    println!("model: {}  ({} ops, {} tensors)", g.name, g.n_ops(), g.n_tensors());
+    println!("order: {spec}\n");
+    print!("{}", trace.render_table(&g));
+    if flags.contains_key("chart") {
+        println!();
+        print!("{}", trace.render_chart(&g, 48));
+    }
+    if let Some(path) = flags.get("csv") {
+        std::fs::write(path, trace.to_csv(&g)).with_context(|| format!("writing {path}"))?;
+        println!("\nwrote memory trace to {path}");
+    }
+    println!();
+    println!("peak working set : {} B ({:.1} KB)", trace.peak_bytes, trace.peak_bytes as f64 / 1000.0);
+    println!("model size       : {} B ({:.1} KB)", g.model_size(), g.model_size() as f64 / 1000.0);
+    println!("activation total : {} B ({:.1} KB)", g.activation_total(), g.activation_total() as f64 / 1000.0);
+    let report = DeployReport::new(&g, trace.peak_bytes, &NUCLEO_F767ZI, &OverheadModel::default());
+    println!(
+        "deploy ({:>14}): peak + overhead = {} B of {} B SRAM → {}",
+        report.board,
+        report.total_sram(),
+        NUCLEO_F767ZI.sram_bytes,
+        if report.fits_sram { "FITS" } else { "DOES NOT FIT" }
+    );
+    Ok(())
+}
+
+fn cmd_optimize(flags: &HashMap<String, String>) -> Result<()> {
+    let (g, _) = load_graph(flags, DType::I8)?;
+    let out = flags.get("out").ok_or_else(|| anyhow!("--out required"))?;
+    let default_peak = sched::peak_of(&g, &g.default_order());
+    let (opt, stats) = sched::optimal(&g).map_err(|e| anyhow!("{e}"))?;
+    let mf = ModelFile { graph: g, execution_order: Some(opt.order.clone()) };
+    std::fs::write(out, mf.to_json()).with_context(|| format!("writing {out}"))?;
+    println!(
+        "wrote {out}: peak {} B → {} B ({} states, {} expansions)",
+        default_peak, opt.peak_bytes, stats.states, stats.expansions
+    );
+    Ok(())
+}
+
+fn cmd_export(flags: &HashMap<String, String>) -> Result<()> {
+    let (g, _) = load_graph(flags, DType::F32)?;
+    let json_path = flags.get("json").ok_or_else(|| anyhow!("--json required"))?;
+    let weights_path = flags.get("weights").ok_or_else(|| anyhow!("--weights required"))?;
+    let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(42);
+
+    let mf = ModelFile::new(g.clone());
+    std::fs::write(json_path, mf.to_json()).with_context(|| format!("writing {json_path}"))?;
+
+    // Weights: f32 little-endian, weight tensors in tensor-id order.
+    let ws = WeightStore::seeded_f32(&g, seed);
+    let mut blob: Vec<u8> = Vec::new();
+    for t in &g.tensors {
+        if !t.is_weight {
+            continue;
+        }
+        let data = ws.data.get(&t.id).ok_or_else(|| anyhow!("missing weight {}", t.name))?;
+        blob.extend_from_slice(&data.to_bytes());
+    }
+    std::fs::write(weights_path, &blob).with_context(|| format!("writing {weights_path}"))?;
+    println!("exported {} ({} weight bytes, seed {seed}) → {json_path}, {weights_path}", g.name, blob.len());
+    Ok(())
+}
+
+/// Deterministic synthetic input for a graph's single input tensor.
+fn synthetic_input(g: &Graph) -> Vec<f32> {
+    let n = g.tensors[g.inputs[0]].elems();
+    (0..n).map(|i| ((i % 17) as f32 - 8.0) / 8.0).collect()
+}
+
+fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
+    let name = flags.get("model").ok_or_else(|| anyhow!("--model required"))?.clone();
+    let dir = PathBuf::from(flags.get("artifacts").cloned().unwrap_or_else(|| "artifacts".into()));
+    let n: usize = flags.get("n").map(|s| s.parse()).transpose()?.unwrap_or(1);
+    let g = models::by_name(&name, DType::F32)
+        .ok_or_else(|| anyhow!("unknown model {name:?}"))?;
+
+    let mut rt = mcu_reorder::runtime::Runtime::cpu()?;
+    rt.load_artifact(&name, &dir)?;
+    let manifest = rt.get(&name).unwrap().manifest.clone();
+    manifest.check_against(&g)?;
+    println!("platform: {}  model: {}  kernels: {}", rt.platform(), name, manifest.kernels);
+
+    let input = synthetic_input(&g);
+    let t = std::time::Instant::now();
+    let mut out = Vec::new();
+    for _ in 0..n {
+        out = rt.execute_f32(&name, &[input.clone()])?;
+    }
+    let per = t.elapsed().as_secs_f64() / n as f64;
+    println!("output[0] = {:?}", &out[0][..out[0].len().min(8)]);
+    println!("{n} runs, {:.3} ms per inference (PJRT CPU)", per * 1e3);
+
+    if flags.contains_key("check") {
+        let ws = WeightStore::seeded_f32(&g, 42);
+        let interp = Interpreter::new(&g, ws, ExecConfig::with_capacity(16 * 1024 * 1024));
+        let r = interp.run(&[TensorData::F32(input)])?;
+        let reference = r.outputs[0].as_f32().unwrap();
+        let mut max_err = 0f32;
+        for (a, b) in out[0].iter().zip(reference) {
+            max_err = max_err.max((a - b).abs());
+        }
+        println!("check vs micro-interpreter: max |Δ| = {max_err:.2e}");
+        if max_err > 1e-3 {
+            bail!("PJRT output diverges from the reference interpreter");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    let name = flags.get("model").ok_or_else(|| anyhow!("--model required"))?.clone();
+    let engine = flags.get("engine").cloned().unwrap_or_else(|| "pjrt".into());
+    let workers: usize = flags.get("workers").map(|s| s.parse()).transpose()?.unwrap_or(2);
+    let port: u16 = flags.get("port").map(|s| s.parse()).transpose()?.unwrap_or(7878);
+
+    let factory = match engine.as_str() {
+        "pjrt" => {
+            let dir =
+                PathBuf::from(flags.get("artifacts").cloned().unwrap_or_else(|| "artifacts".into()));
+            coordinator::pjrt_engine_factory(name.clone(), dir)
+        }
+        "interp" => {
+            let g = models::by_name(&name, DType::F32)
+                .ok_or_else(|| anyhow!("unknown model {name:?}"))?;
+            coordinator::interp_engine_factory(g, 42, 16 * 1024 * 1024)
+        }
+        other => bail!("unknown engine {other:?} (pjrt|interp)"),
+    };
+    let coord = Arc::new(Coordinator::start(
+        ServeConfig { workers, ..Default::default() },
+        factory,
+    )?);
+    println!("serving {name} ({engine}, {workers} workers) on 0.0.0.0:{port}");
+    println!("protocol: one CSV line of {} floats per request", {
+        let g = models::by_name(&name, DType::F32).unwrap();
+        g.tensors[g.inputs[0]].elems()
+    });
+    coordinator::serve_tcp(coord, &format!("0.0.0.0:{port}"), None, |a| {
+        println!("listening on {a}");
+    })
+}
+
+fn cmd_table1() -> Result<()> {
+    // --- SwiftNet: default vs optimal operator order (memory only; the
+    //     paper could not even run the default order on-device). ---
+    let swift = models::swiftnet_cell(DType::I8);
+    let swift_default = sched::peak_of(&swift, &swift.default_order());
+    let (swift_opt, _) = sched::optimal(&swift).map_err(|e| anyhow!("{e}"))?;
+
+    // --- MobileNet: static vs dynamic allocation. ---
+    let mnet = models::mobilenet_v1_025(DType::I8);
+    let static_bytes = mcu_reorder::alloc::StaticPlan::no_reuse(&mnet).arena_bytes;
+
+    // Execute the i8 model in the arena to count real defrag traffic.
+    let g_f32 = models::mobilenet_v1_025(DType::F32);
+    let ws_f32 = WeightStore::seeded_f32(&g_f32, 42);
+    let input = TensorData::F32(synthetic_input(&g_f32));
+    let ranges = mcu_reorder::interp::calibrate(&g_f32, &ws_f32, &[input], 16 * 1024 * 1024)?;
+    let ws_i8 = WeightStore::quantize_from(&mnet, &ws_f32, &ranges);
+    let in_q = ws_i8.qparams[&mnet.inputs[0]];
+    let qin = TensorData::I8(in_q.quantize(&synthetic_input(&g_f32)));
+    let interp = Interpreter::new(&mnet, ws_i8, ExecConfig::with_capacity(256 * 1024));
+    let run = interp.run(&[qin])?;
+
+    let mut static_stats = mcu_reorder::alloc::AllocStats::default();
+    static_stats.high_water = static_bytes;
+    let dynamic_stats = run.alloc.clone();
+
+    let model = CostModel::calibrated(&mnet, &static_stats, &NUCLEO_F767ZI, 1.316, 728.0);
+    let est_static = model.estimate(&mnet, &static_stats, &NUCLEO_F767ZI);
+    let est_dyn = model.estimate(&mnet, &dynamic_stats, &NUCLEO_F767ZI);
+    let est_swift = model.estimate(&swift, &dynamic_stats, &NUCLEO_F767ZI);
+
+    let kb = |b: usize| format!("{:.0}KB", b as f64 / 1000.0);
+    let mut t = Table::new(&["", "SwiftNet default", "SwiftNet optimal", "MobileNet static", "MobileNet dynamic"]);
+    t.row(&[
+        "Peak memory (excl. overheads)".into(),
+        kb(swift_default),
+        kb(swift_opt.peak_bytes),
+        kb(static_bytes),
+        kb(dynamic_stats.high_water),
+    ]);
+    t.row(&[
+        "Execution time".into(),
+        "N/A (doesn't fit)".into(),
+        format!("{:.0} ms", est_swift.millis()),
+        format!("{:.0} ms", est_static.millis()),
+        format!("{:.0} ms (+{:.2}%)", est_dyn.millis(), 100.0 * (est_dyn.seconds / est_static.seconds - 1.0)),
+    ]);
+    t.row(&[
+        "Energy use".into(),
+        "N/A (doesn't fit)".into(),
+        format!("{:.0} mJ", est_swift.energy_mj),
+        format!("{:.0} mJ", est_static.energy_mj),
+        format!("{:.0} mJ (+{:.2}%)", est_dyn.energy_mj, 100.0 * (est_dyn.energy_mj / est_static.energy_mj - 1.0)),
+    ]);
+    t.print();
+    println!("\npaper (Table 1): 351KB/301KB; 241KB/55KB; 1316ms/1325ms (+0.68%); 728mJ/735mJ (+0.97%)");
+    Ok(())
+}
+
+fn cmd_sweep() -> Result<()> {
+    use mcu_reorder::mcu::boards::ALL_BOARDS;
+    let overhead = OverheadModel::default();
+    println!("fit matrix (peak + framework overhead vs board SRAM; d = default order, o = optimal)\n");
+    let mut t = Table::new(&["model", "peak d/o", "overhead",
+        "F767ZI 512K", "F446RE 128K", "H743ZI 1M", "Edge 384K"]);
+    for name in models::MODEL_NAMES {
+        if name == "figure1" {
+            continue;
+        }
+        let g = models::by_name(name, DType::I8).unwrap();
+        let d = sched::peak_of(&g, &g.default_order());
+        let (o, _) = sched::optimal(&g).map_err(|e| anyhow!("{e}"))?;
+        let ov = overhead.bytes(&g);
+        let verdict = |board: &mcu_reorder::mcu::Board| {
+            let fd = d + ov <= board.sram_bytes;
+            let fo = o.peak_bytes + ov <= board.sram_bytes;
+            match (fd, fo) {
+                (true, true) => "fits".to_string(),
+                (false, true) => "REORDER".to_string(),
+                (false, false) => "no".to_string(),
+                (true, false) => unreachable!("optimal can't be worse"),
+            }
+        };
+        t.row(&[
+            name.into(),
+            format!("{:.0}/{:.0}KB", d as f64 / 1000.0, o.peak_bytes as f64 / 1000.0),
+            format!("{:.0}KB", ov as f64 / 1000.0),
+            verdict(ALL_BOARDS[0]),
+            verdict(ALL_BOARDS[1]),
+            verdict(ALL_BOARDS[2]),
+            verdict(ALL_BOARDS[3]),
+        ]);
+    }
+    t.print();
+    println!("\nREORDER = fits only with the optimal operator order (the paper's scenario)");
+    Ok(())
+}
+
+fn cmd_nas(flags: &HashMap<String, String>) -> Result<()> {
+    let samples: usize = flags.get("samples").map(|s| s.parse()).transpose()?.unwrap_or(60);
+    let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(41);
+    let mut rng = mcu_reorder::util::rng::Rng::new(seed);
+    let t0 = std::time::Instant::now();
+    let result = mcu_reorder::nas::random_search(
+        &mut rng,
+        samples,
+        &NUCLEO_F767ZI,
+        &OverheadModel::default(),
+    );
+    println!(
+        "evaluated {} candidates in {:.2}s ({:.1} ms per Algorithm-1 solve incl. graph build)\n",
+        result.evaluated.len(),
+        t0.elapsed().as_secs_f64(),
+        t0.elapsed().as_secs_f64() * 1e3 / result.evaluated.len() as f64
+    );
+    println!(
+        "feasible only via reordering: {} candidates (would be discarded by a default-order check)\n",
+        result.rescued_by_reordering
+    );
+    let mut t = Table::new(&["peak (opt)", "peak (default)", "MACs", "params", "stages"]);
+    for c in &result.pareto {
+        t.row(&[
+            format!("{:.0}KB", c.optimal_peak as f64 / 1000.0),
+            format!("{:.0}KB", c.default_peak as f64 / 1000.0),
+            format!("{:.1}M", c.macs as f64 / 1e6),
+            format!("{:.0}KB", c.params as f64 / 1000.0),
+            format!("{:?}", c.config.stages.iter().map(|s| s.0).collect::<Vec<_>>()),
+        ]);
+    }
+    println!("Pareto front (min peak SRAM, max capacity):");
+    t.print();
+    Ok(())
+}
+
+fn cmd_dot(flags: &HashMap<String, String>) -> Result<()> {
+    let (g, _) = load_graph(flags, DType::I8)?;
+    print!("{}", g.to_dot());
+    Ok(())
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        print!("{USAGE}");
+        std::process::exit(2);
+    }
+    let cmd = args[0].clone();
+    let (_pos, flags) = parse_args(&args[1..]);
+    let result = match cmd.as_str() {
+        "list" => {
+            cmd_list();
+            Ok(())
+        }
+        "analyze" => cmd_analyze(&flags),
+        "optimize" => cmd_optimize(&flags),
+        "export" => cmd_export(&flags),
+        "run" => cmd_run(&flags),
+        "serve" => cmd_serve(&flags),
+        "table1" => cmd_table1(),
+        "sweep" => cmd_sweep(),
+        "nas" => cmd_nas(&flags),
+        "dot" => cmd_dot(&flags),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => Err(anyhow!("unknown command {other:?}\n{USAGE}")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

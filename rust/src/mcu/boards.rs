@@ -1,0 +1,83 @@
+//! Board profiles (STM32 catalogue values [1], §2.2).
+
+/// A microcontroller development-board profile.
+#[derive(Clone, Copy, Debug)]
+pub struct Board {
+    pub name: &'static str,
+    /// Core family (for reports).
+    pub core: &'static str,
+    pub clock_hz: u64,
+    /// Read-write on-chip SRAM available to the application.
+    pub sram_bytes: usize,
+    /// NOR-Flash for code + weights.
+    pub flash_bytes: usize,
+    /// Active power while running the NN workload, in milliwatts.
+    /// Calibrated for the F767ZI from the paper's MobileNet row:
+    /// 728mJ / 1.316s ≈ 553mW. Other boards use datasheet-typical values.
+    pub active_power_mw: f64,
+}
+
+/// The paper's evaluation board: NUCLEO-F767ZI [36].
+pub const NUCLEO_F767ZI: Board = Board {
+    name: "NUCLEO-F767ZI",
+    core: "Cortex-M7",
+    clock_hz: 216_000_000,
+    sram_bytes: 512 * 1024,
+    flash_bytes: 2 * 1024 * 1024,
+    active_power_mw: 553.0,
+};
+
+/// A mid-range Cortex-M4 part (tighter SRAM).
+pub const STM32F446RE: Board = Board {
+    name: "NUCLEO-F446RE",
+    core: "Cortex-M4",
+    clock_hz: 180_000_000,
+    sram_bytes: 128 * 1024,
+    flash_bytes: 512 * 1024,
+    active_power_mw: 280.0,
+};
+
+/// A high-end Cortex-M7 part (the roomiest realistic target).
+pub const STM32H743ZI: Board = Board {
+    name: "NUCLEO-H743ZI",
+    core: "Cortex-M7",
+    clock_hz: 480_000_000,
+    sram_bytes: 1024 * 1024,
+    flash_bytes: 2 * 1024 * 1024,
+    active_power_mw: 720.0,
+};
+
+/// The TinyML-summit-era ultra-low-power board (Ambiq Apollo3).
+pub const SPARKFUN_EDGE: Board = Board {
+    name: "SparkFun-Edge",
+    core: "Cortex-M4F",
+    clock_hz: 48_000_000,
+    sram_bytes: 384 * 1024,
+    flash_bytes: 1024 * 1024,
+    active_power_mw: 6.0,
+};
+
+/// All profiles (CLI listing / sweeps).
+pub const ALL_BOARDS: [&Board; 4] =
+    [&NUCLEO_F767ZI, &STM32F446RE, &STM32H743ZI, &SPARKFUN_EDGE];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_board_is_512kb_216mhz() {
+        assert_eq!(NUCLEO_F767ZI.sram_bytes, 512 * 1024);
+        assert_eq!(NUCLEO_F767ZI.clock_hz, 216_000_000);
+    }
+
+    #[test]
+    fn boards_have_sane_profiles() {
+        for b in ALL_BOARDS {
+            assert!(b.clock_hz >= 10_000_000);
+            assert!(b.sram_bytes >= 64 * 1024);
+            assert!(b.flash_bytes >= b.sram_bytes);
+            assert!(b.active_power_mw > 0.0);
+        }
+    }
+}

@@ -1,0 +1,333 @@
+//! Model zoo — the paper's evaluated networks plus synthetic generators.
+//!
+//! - [`figure1`] — the 7-operator example graph of Figure 1 with its exact
+//!   byte sizes (the Appendix A tables are regenerated from it).
+//! - [`mobilenet_v1_025`] — MobileNet-v1, width 0.25, 96×96×1 input, the
+//!   TFLM person-detection model used in Table 1's right half. With int8
+//!   tensors its activation total is 241.0 KB (paper: 241KB static
+//!   allocation) and its peak working set is 55.3 KB (paper: 55KB) —
+//!   the architecture is public, so these reproduce from first principles.
+//! - [`swiftnet_cell`] — a SwiftNet-style branch-heavy NAS-cell network.
+//!   The exact SwiftNet Cell architecture was never published (the paper
+//!   cites the VWW contest submission repo), so this is a reconstruction
+//!   calibrated to the published characteristics: ~250KB int8 parameters,
+//!   many branched cells, default-order peak ≈351KB and optimal-order peak
+//!   ≈301KB (see DESIGN.md substitution ledger).
+//! - [`tiny_cnn`] — a small branchy CNN for quickstarts and fast tests.
+//! - [`synth`] — random DAG generators for property tests and the
+//!   scheduler-scaling ablation.
+
+pub mod synth;
+
+use crate::graph::{Act, DType, Graph, GraphBuilder, Padding, TensorId};
+
+/// The Figure-1 example computation graph (sizes in bytes, derived from the
+/// Appendix A working-set tables; tensors are 1-D u8 so `bytes == elems`).
+pub fn figure1() -> Graph {
+    let mut b = GraphBuilder::new("figure1");
+    let t0 = b.input("t0", &[1568], DType::U8);
+    let t1 = b.synthetic("op1", &[t0], 3136, 0);
+    let t2 = b.synthetic("op2", &[t1], 1568, 0);
+    let t3 = b.synthetic("op3", &[t2], 512, 0);
+    let t4 = b.synthetic("op4", &[t1], 512, 0);
+    let t5 = b.synthetic("op5", &[t3], 256, 0);
+    let t6 = b.synthetic("op6", &[t4], 256, 0);
+    let t7 = b.synthetic("op7", &[t5, t6], 512, 0);
+    b.output(t7);
+    b.finish().expect("figure1 graph is valid")
+}
+
+/// MobileNet-v1 (width multiplier 0.25) person-detection network:
+/// 96×96×1 input, 28 fused conv ops, global pool, 2-class head.
+pub fn mobilenet_v1_025(dtype: DType) -> Graph {
+    let mut b = GraphBuilder::new("mobilenet-v1-0.25-96");
+    let x = b.input("input", &[1, 96, 96, 1], dtype);
+    let mut t = b.conv2d("conv1", x, 8, (3, 3), (2, 2), Padding::Same, Act::Relu6);
+    // (stride of the depthwise conv, output channels of the pointwise conv)
+    let blocks: [(usize, usize); 13] = [
+        (1, 16),
+        (2, 32),
+        (1, 32),
+        (2, 64),
+        (1, 64),
+        (2, 128),
+        (1, 128),
+        (1, 128),
+        (1, 128),
+        (1, 128),
+        (1, 128),
+        (2, 256),
+        (1, 256),
+    ];
+    for (i, &(s, cout)) in blocks.iter().enumerate() {
+        let n = i + 1;
+        t = b.dwconv2d(&format!("dw{n}"), t, (3, 3), (s, s), Padding::Same, Act::Relu6);
+        t = b.conv2d(&format!("pw{n}"), t, cout, (1, 1), (1, 1), Padding::Same, Act::Relu6);
+    }
+    let gap = b.global_avgpool("gap", t);
+    let fc = b.dense("fc", gap, 2, Act::Linear);
+    let sm = b.softmax("softmax", fc);
+    b.output(sm);
+    b.finish().expect("mobilenet graph is valid")
+}
+
+/// One SwiftNet-style cell: two asymmetric branches over a shared input,
+/// joined by a concat (the Figure-1 motif at scale).
+///
+/// ```text
+///        ┌─ conv1x1(ca_mid) ─ dw3x3 ─ conv1x1(ca_out) ─┐
+///   X ───┤                                             concat
+///        └─ dw3x3 ─ conv1x1(cb_out) ──────────────────┘
+/// ```
+///
+/// Branch A expands (`ca_mid > C_x`), so while it runs the big shared input
+/// must be held for branch B under the as-built order; evaluating B first
+/// trades that for the much smaller `cb_out` tensor — exactly the
+/// reordering opportunity the paper exploits.
+fn swift_cell(
+    b: &mut GraphBuilder,
+    name: &str,
+    x: TensorId,
+    ca_mid: usize,
+    ca_out: usize,
+    cb_out: usize,
+) -> TensorId {
+    let a1 = b.conv2d(&format!("{name}.a1"), x, ca_mid, (1, 1), (1, 1), Padding::Same, Act::Relu6);
+    let a2 = b.dwconv2d(&format!("{name}.a2"), a1, (3, 3), (1, 1), Padding::Same, Act::Relu6);
+    let a3 = b.conv2d(&format!("{name}.a3"), a2, ca_out, (1, 1), (1, 1), Padding::Same, Act::Relu6);
+    let b1 = b.dwconv2d(&format!("{name}.b1"), x, (3, 3), (1, 1), Padding::Same, Act::Relu6);
+    let b2 = b.conv2d(&format!("{name}.b2"), b1, cb_out, (1, 1), (1, 1), Padding::Same, Act::Relu6);
+    b.concat(&format!("{name}.cat"), &[a3, b2])
+}
+
+/// Strided transition between cell stages: dw3x3 s2 + pointwise.
+fn swift_transition(b: &mut GraphBuilder, name: &str, x: TensorId, cout: usize) -> TensorId {
+    let d = b.dwconv2d(&format!("{name}.dw"), x, (3, 3), (2, 2), Padding::Same, Act::Relu6);
+    b.conv2d(&format!("{name}.pw"), d, cout, (1, 1), (1, 1), Padding::Same, Act::Relu6)
+}
+
+/// SwiftNet-style cell network (reconstruction; see module docs).
+/// Input 96×96×3 RGB, 2-class visual-wake-words head.
+pub fn swiftnet_cell(dtype: DType) -> Graph {
+    let mut b = GraphBuilder::new("swiftnet-cell");
+    let x = b.input("input", &[1, 96, 96, 3], dtype);
+    // Stem: 96×96×3 → 48×48×32.
+    let stem = b.conv2d("stem", x, 32, (3, 3), (2, 2), Padding::Same, Act::Relu6);
+    // Stage 1 (48×48): the memory bottleneck. Branch A expands 32→60
+    // channels; its working set dominates the whole network.
+    let c1 = swift_cell(&mut b, "c1", stem, 60, 40, 12); // 48×48×52
+    let t1 = swift_transition(&mut b, "t1", c1, 64); // 24×24×64
+    // Stage 2 (24×24): two cells.
+    let c2 = swift_cell(&mut b, "c2", t1, 96, 64, 32); // 24×24×96
+    let c3 = swift_cell(&mut b, "c3", c2, 96, 64, 32); // 24×24×96
+    let t2 = swift_transition(&mut b, "t2", c3, 128); // 12×12×128
+    // Stage 3 (12×12): three cells.
+    let c4 = swift_cell(&mut b, "c4", t2, 96, 96, 32); // 12×12×128
+    let c5 = swift_cell(&mut b, "c5", c4, 96, 96, 32);
+    let c6 = swift_cell(&mut b, "c6", c5, 96, 96, 32);
+    let t3 = swift_transition(&mut b, "t3", c6, 192); // 6×6×192
+    // Stage 4 (6×6): parameter-heavy pointwise tail (this is where most of
+    // the ~250KB of weights live, as in compact NAS models).
+    let c7 = swift_cell(&mut b, "c7", t3, 160, 128, 64); // 6×6×192
+    let p1 = b.conv2d("tail1", c7, 160, (1, 1), (1, 1), Padding::Same, Act::Relu6);
+    let gap = b.global_avgpool("gap", p1);
+    let fc = b.dense("fc", gap, 2, Act::Linear);
+    let sm = b.softmax("softmax", fc);
+    b.output(sm);
+    b.finish().expect("swiftnet graph is valid")
+}
+
+/// Micro residual network (ResNet-style): three stages of residual blocks
+/// with skip-connection `Add` ops — the §6 in-place-accumulation extension's
+/// showcase (an `Add` whose skip input has no other consumer can accumulate
+/// into it, eliminating the output buffer).
+pub fn resnet_micro(dtype: DType) -> Graph {
+    let mut b = GraphBuilder::new("resnet-micro");
+    let x = b.input("input", &[1, 32, 32, 3], dtype);
+    let mut t = b.conv2d("stem", x, 16, (3, 3), (1, 1), Padding::Same, Act::Relu);
+    for (stage, &(c, stride)) in [(16usize, 1usize), (32, 2), (64, 2)].iter().enumerate() {
+        // Downsample (and widen) at stage entry.
+        if stride > 1 || c != 16 {
+            t = b.conv2d(
+                &format!("s{stage}.down"),
+                t,
+                c,
+                (1, 1),
+                (stride, stride),
+                Padding::Same,
+                Act::Linear,
+            );
+        }
+        for blk in 0..2 {
+            // Bottleneck residual block: the inner 3×3 runs at c/2
+            // channels, so the skip-join `Add` step (skip + branch output +
+            // sum) is the block's memory bottleneck — exactly where
+            // in-place accumulation pays.
+            let name = format!("s{stage}.b{blk}");
+            let c1 = b.conv2d(&format!("{name}.c1"), t, c / 2, (3, 3), (1, 1), Padding::Same, Act::Relu);
+            let c2 = b.conv2d(&format!("{name}.c2"), c1, c, (3, 3), (1, 1), Padding::Same, Act::Linear);
+            t = b.add(&format!("{name}.add"), c2, t);
+        }
+    }
+    let gap = b.global_avgpool("gap", t);
+    let fc = b.dense("fc", gap, 10, Act::Linear);
+    let sm = b.softmax("softmax", fc);
+    b.output(sm);
+    b.finish().expect("resnet graph is valid")
+}
+
+/// Small branchy CNN for quickstarts and fast integration tests
+/// (8×8×2 input, one two-way branch, 3-class head).
+pub fn tiny_cnn(dtype: DType) -> Graph {
+    let mut b = GraphBuilder::new("tiny-cnn");
+    let x = b.input("x", &[1, 8, 8, 2], dtype);
+    let c1 = b.conv2d("c1", x, 4, (3, 3), (1, 1), Padding::Same, Act::Relu6);
+    let dw = b.dwconv2d("dw", c1, (3, 3), (2, 2), Padding::Same, Act::Relu6);
+    let pw = b.conv2d("pw", c1, 4, (1, 1), (2, 2), Padding::Same, Act::Relu6);
+    let cat = b.concat("cat", &[dw, pw]);
+    let gap = b.global_avgpool("gap", cat);
+    let fc = b.dense("fc", gap, 3, Act::Linear);
+    let sm = b.softmax("softmax", fc);
+    b.output(sm);
+    b.finish().expect("tiny graph is valid")
+}
+
+/// Every named model (CLI listing).
+pub fn by_name(name: &str, dtype: DType) -> Option<Graph> {
+    match name {
+        "figure1" => Some(figure1()),
+        "mobilenet" | "mobilenet-v1-0.25-96" => Some(mobilenet_v1_025(dtype)),
+        "swiftnet" | "swiftnet-cell" => Some(swiftnet_cell(dtype)),
+        "resnet" | "resnet-micro" => Some(resnet_micro(dtype)),
+        "tiny" | "tiny-cnn" => Some(tiny_cnn(dtype)),
+        _ => None,
+    }
+}
+
+/// Names accepted by [`by_name`].
+pub const MODEL_NAMES: [&str; 5] = ["figure1", "mobilenet", "swiftnet", "resnet", "tiny"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{optimal, peak_of, simulate};
+
+    #[test]
+    fn figure1_reproduces_paper_peaks() {
+        let g = figure1();
+        assert_eq!(simulate(&g, &g.default_order()).peak_bytes, 5216);
+        let (sched, _) = optimal(&g).unwrap();
+        assert_eq!(sched.peak_bytes, 4960);
+    }
+
+    #[test]
+    fn mobilenet_reproduces_table1_memory_numbers() {
+        let g = mobilenet_v1_025(DType::I8);
+        // Paper Table 1 (KB = 1000 B): static 241KB, dynamic 55KB.
+        let static_bytes = g.activation_total();
+        assert_eq!(static_bytes, 241_028, "static allocation (sum of activations)");
+        let peak = peak_of(&g, &g.default_order());
+        assert_eq!(peak, 55_296, "dynamic allocation (peak working set)");
+        // The saving the paper reports: 186KB (241 − 55 in rounded KB).
+        let kb = |b: usize| (b as f64 / 1000.0).round() as i64;
+        assert_eq!(kb(static_bytes) - kb(peak), 186);
+    }
+
+    #[test]
+    fn mobilenet_is_sequential_so_reordering_cannot_help() {
+        let g = mobilenet_v1_025(DType::I8);
+        let (sched, _) = optimal(&g).unwrap();
+        assert_eq!(sched.peak_bytes, peak_of(&g, &g.default_order()));
+    }
+
+    #[test]
+    fn mobilenet_shape_chain() {
+        let g = mobilenet_v1_025(DType::I8);
+        assert_eq!(g.tensor_by_name("conv1").unwrap().shape, vec![1, 48, 48, 8]);
+        assert_eq!(g.tensor_by_name("pw1").unwrap().shape, vec![1, 48, 48, 16]);
+        assert_eq!(g.tensor_by_name("pw13").unwrap().shape, vec![1, 3, 3, 256]);
+        assert_eq!(g.tensor_by_name("softmax").unwrap().shape, vec![1, 2]);
+        assert_eq!(g.n_ops(), 30);
+    }
+
+    #[test]
+    fn mobilenet_macs_in_expected_range() {
+        // MobileNet-0.25 @96 grayscale ≈ 7–8 M MACs.
+        let g = mobilenet_v1_025(DType::I8);
+        let m = g.total_macs();
+        assert!((5_000_000..12_000_000).contains(&m), "macs = {m}");
+    }
+
+    #[test]
+    fn swiftnet_reproduces_table1_shape() {
+        let g = swiftnet_cell(DType::I8);
+        let default_peak = peak_of(&g, &g.default_order());
+        let (sched, _) = optimal(&g).unwrap();
+        // Paper: 351KB default → 301KB optimal (KB = 1000 B). The exact
+        // architecture is reconstructed, so we assert the calibrated
+        // targets of this reconstruction and the ~50KB saving.
+        assert_eq!(default_peak, 350_208);
+        assert_eq!(sched.peak_bytes, 304_128);
+        let saving_kb = (default_peak - sched.peak_bytes) / 1000;
+        assert!((40..60).contains(&saving_kb), "saving = {saving_kb}KB");
+    }
+
+    #[test]
+    fn swiftnet_has_about_250kb_of_parameters() {
+        let g = swiftnet_cell(DType::I8);
+        let kb = g.model_size() / 1000;
+        assert!((220..290).contains(&kb), "params = {kb}KB");
+    }
+
+    #[test]
+    fn swiftnet_is_branchy() {
+        let g = swiftnet_cell(DType::I8);
+        let branch_points = g
+            .tensors
+            .iter()
+            .filter(|t| !t.is_weight)
+            .filter(|t| t.consumers.iter().filter(|&&c| g.ops[c].inputs.contains(&t.id)).count() > 1)
+            .count();
+        assert!(branch_points >= 6, "branch points = {branch_points}");
+    }
+
+    #[test]
+    fn zoo_graphs_validate_and_roundtrip() {
+        for name in MODEL_NAMES {
+            let g = by_name(name, DType::I8).unwrap();
+            g.validate().unwrap();
+            let mf = crate::graph::serde::ModelFile::new(g.clone());
+            let back = crate::graph::serde::ModelFile::from_json(&mf.to_json()).unwrap();
+            assert_eq!(back.graph.n_ops(), g.n_ops(), "{name}");
+            assert_eq!(back.graph.activation_total(), g.activation_total(), "{name}");
+        }
+    }
+
+    #[test]
+    fn resnet_inplace_add_saves_memory() {
+        use crate::sched::{self, Opts};
+        let g = resnet_micro(DType::I8);
+        let base = sched::peak_of(&g, &g.default_order());
+        let inplace = sched::peak_of_opts(&g, &g.default_order(), Opts::INPLACE);
+        assert!(inplace < base, "in-place add must shrink the peak ({base} → {inplace})");
+        // Every residual Add is eligible (skip inputs have one consumer).
+        let accs = sched::inplace_accumulators(&g);
+        let eligible = accs.iter().filter(|a| a.is_some()).count();
+        assert_eq!(eligible, 6);
+    }
+
+    #[test]
+    fn resnet_optimal_inplace_is_optimal_and_no_worse() {
+        use crate::sched::{self, Opts};
+        let g = resnet_micro(DType::I8);
+        let (plain, _) = sched::optimal(&g).unwrap();
+        let (inp, _) = sched::optimal_opts(&g, Opts::INPLACE).unwrap();
+        assert!(inp.peak_bytes <= plain.peak_bytes);
+        assert_eq!(inp.peak_bytes, sched::peak_of_opts(&g, &inp.order, Opts::INPLACE));
+    }
+
+    #[test]
+    fn by_name_rejects_unknown() {
+        assert!(by_name("resnet152", DType::I8).is_none());
+    }
+}

@@ -1,0 +1,115 @@
+//! Synthetic DAG generators for property tests and scheduler ablations.
+
+use crate::graph::{DType, Graph, GraphBuilder, TensorId};
+use crate::util::rng::Rng;
+
+/// Random single-output DAG of `n_ops` synthetic operators; each consumes
+/// 1–2 earlier tensors, all sinks become outputs. Mirrors the generator the
+/// scheduler property tests use.
+pub fn random_dag(rng: &mut Rng, n_ops: usize) -> Graph {
+    let mut b = GraphBuilder::new("rand-dag");
+    let mut tensors = vec![b.input("x", &[64 * (1 + rng.range(0, 8))], DType::U8)];
+    for i in 0..n_ops {
+        let n_in = if tensors.len() >= 2 && rng.chance(0.4) { 2 } else { 1 };
+        let mut ins = Vec::new();
+        while ins.len() < n_in {
+            let t = *rng.pick(&tensors);
+            if !ins.contains(&t) {
+                ins.push(t);
+            }
+        }
+        let bytes = 32 * (1 + rng.range(0, 64));
+        tensors.push(b.synthetic(&format!("op{i}"), &ins, bytes, 1000));
+    }
+    let sinks: Vec<TensorId> = b
+        .graph()
+        .tensors
+        .iter()
+        .filter(|t| t.consumers.is_empty() && !t.is_weight)
+        .map(|t| t.id)
+        .collect();
+    for s in sinks {
+        b.output(s);
+    }
+    b.finish().expect("random dag is valid")
+}
+
+/// Series-parallel DAG: a chain of `depth` stages; each stage fans out into
+/// `width` parallel branches (each a short chain) that rejoin. These are
+/// the graphs where reordering freedom grows combinatorially — the
+/// scheduler-scaling ablation sweeps `depth × width`.
+pub fn series_parallel(rng: &mut Rng, depth: usize, width: usize) -> Graph {
+    let mut b = GraphBuilder::new("series-parallel");
+    let mut cur = b.input("x", &[256 + 64 * rng.range(0, 8)], DType::U8);
+    for d in 0..depth {
+        let mut joins = Vec::with_capacity(width);
+        for w in 0..width {
+            // Each branch: 1–3 chained ops with varying tensor sizes.
+            let mut t = cur;
+            let hops = 1 + rng.range(0, 3);
+            for h in 0..hops {
+                let bytes = 64 * (1 + rng.range(0, 32));
+                t = b.synthetic(&format!("d{d}b{w}h{h}"), &[t], bytes, 500);
+            }
+            joins.push(t);
+        }
+        cur = if joins.len() == 1 {
+            joins[0]
+        } else {
+            // Join with a synthetic N-ary combiner.
+            let bytes = 64 * (1 + rng.range(0, 16));
+            b.synthetic(&format!("d{d}join"), &joins, bytes, 500)
+        };
+    }
+    b.output(cur);
+    b.finish().expect("series-parallel dag is valid")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::{bruteforce, optimal};
+
+    #[test]
+    fn random_dags_are_valid_and_schedulable() {
+        let mut rng = Rng::new(7);
+        for _ in 0..20 {
+            let g = random_dag(&mut rng, 8);
+            g.validate().unwrap();
+            let (sched, _) = optimal(&g).unwrap();
+            g.check_order(&sched.order).unwrap();
+        }
+    }
+
+    #[test]
+    fn series_parallel_shape() {
+        let mut rng = Rng::new(3);
+        let g = series_parallel(&mut rng, 3, 3);
+        g.validate().unwrap();
+        // depth 3, width 3: at least 3 joins + 9 branch ops.
+        assert!(g.n_ops() >= 12);
+        let (sched, _) = optimal(&g).unwrap();
+        let bf = bruteforce(&g, 2_000_000);
+        if let Some(bf) = bf {
+            assert_eq!(sched.peak_bytes, bf.best.peak_bytes);
+        }
+    }
+
+    #[test]
+    fn series_parallel_offers_reordering_gains() {
+        // Across seeds, the optimal schedule should beat the default
+        // as-built order on at least some series-parallel graphs.
+        let mut rng = Rng::new(42);
+        let mut gains = 0;
+        for _ in 0..20 {
+            let g = series_parallel(&mut rng, 2, 3);
+            let d = crate::sched::peak_of(&g, &g.default_order());
+            let (o, _) = optimal(&g).unwrap();
+            assert!(o.peak_bytes <= d);
+            if o.peak_bytes < d {
+                gains += 1;
+            }
+        }
+        assert!(gains >= 5, "only {gains}/20 graphs improved");
+    }
+}

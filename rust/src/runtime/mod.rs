@@ -1,0 +1,245 @@
+//! PJRT runtime: load and execute AOT-compiled JAX/Pallas artifacts.
+//!
+//! The build-time Python pipeline (`python/compile/aot.py`) lowers each
+//! model's forward pass — with the Pallas kernels inlined via
+//! `interpret=True` — to **HLO text** (`artifacts/<model>.hlo.txt`).
+//! HLO text, not a serialized `HloModuleProto`, is the interchange format:
+//! jax ≥ 0.5 emits 64-bit instruction ids that the pinned xla_extension
+//! 0.5.1 rejects, while the text parser reassigns ids cleanly.
+//!
+//! This module wraps the `xla` crate: CPU PJRT client → parse text →
+//! compile once → execute many times. Weights are baked into the HLO as
+//! constants (the Flash analogy: parameters are immutable at inference), so
+//! an executable takes just the image tensor and returns the class
+//! probabilities. Python never runs on this path.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::graph::Graph;
+use crate::util::json::Json;
+
+/// Shape + dtype signature of one artifact boundary tensor.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// Parsed `artifacts/<model>.manifest.json` — written by `aot.py` alongside
+/// the HLO so the Rust side can validate shapes before feeding buffers.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub model: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    /// Kernel backend used at lowering time ("pallas" | "jnp").
+    pub kernels: String,
+}
+
+impl Manifest {
+    pub fn from_json(src: &str) -> Result<Manifest> {
+        let v = Json::parse(src).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let specs = |key: &str| -> Result<Vec<IoSpec>> {
+            v.get(key)
+                .as_arr()
+                .ok_or_else(|| anyhow!("manifest missing {key}"))?
+                .iter()
+                .map(|s| {
+                    Ok(IoSpec {
+                        name: s.get("name").as_str().unwrap_or("").to_string(),
+                        shape: s
+                            .get("shape")
+                            .as_arr()
+                            .ok_or_else(|| anyhow!("bad shape"))?
+                            .iter()
+                            .map(|x| x.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                            .collect::<Result<_>>()?,
+                        dtype: s.get("dtype").as_str().unwrap_or("f32").to_string(),
+                    })
+                })
+                .collect()
+        };
+        Ok(Manifest {
+            model: v.get("model").as_str().unwrap_or("").to_string(),
+            inputs: specs("inputs")?,
+            outputs: specs("outputs")?,
+            kernels: v.get("kernels").as_str().unwrap_or("jnp").to_string(),
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        Manifest::from_json(&src)
+    }
+
+    /// Cross-check the manifest against the Rust model-zoo graph the
+    /// artifact claims to implement (guards against zoo/exporter drift).
+    pub fn check_against(&self, g: &Graph) -> Result<()> {
+        if self.inputs.len() != g.inputs.len() {
+            bail!("manifest has {} inputs, graph has {}", self.inputs.len(), g.inputs.len());
+        }
+        for (spec, &tid) in self.inputs.iter().zip(&g.inputs) {
+            let t = &g.tensors[tid];
+            if spec.shape != t.shape {
+                bail!("input {} shape {:?} != graph {:?}", spec.name, spec.shape, t.shape);
+            }
+        }
+        if self.outputs.len() != g.outputs.len() {
+            bail!("manifest has {} outputs, graph has {}", self.outputs.len(), g.outputs.len());
+        }
+        for (spec, &tid) in self.outputs.iter().zip(&g.outputs) {
+            let t = &g.tensors[tid];
+            if spec.shape != t.shape {
+                bail!("output {} shape {:?} != graph {:?}", spec.name, spec.shape, t.shape);
+            }
+        }
+        Ok(())
+    }
+}
+
+/// A compiled model artifact resident on the PJRT client.
+pub struct LoadedModel {
+    pub name: String,
+    pub manifest: Manifest,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT runtime: one CPU client, many compiled executables.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    models: HashMap<String, LoadedModel>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+        Ok(Runtime { client, models: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile `artifacts/<name>.hlo.txt` (+ its manifest).
+    pub fn load_artifact(&mut self, name: &str, dir: &Path) -> Result<&LoadedModel> {
+        let hlo_path: PathBuf = dir.join(format!("{name}.hlo.txt"));
+        let man_path: PathBuf = dir.join(format!("{name}.manifest.json"));
+        let manifest = Manifest::load(&man_path)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        self.models
+            .insert(name.to_string(), LoadedModel { name: name.to_string(), manifest, exe });
+        Ok(&self.models[name])
+    }
+
+    pub fn get(&self, name: &str) -> Option<&LoadedModel> {
+        self.models.get(name)
+    }
+
+    pub fn loaded_names(&self) -> Vec<&str> {
+        self.models.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Execute a loaded model on f32 inputs (shapes validated against the
+    /// manifest). Returns one f32 vector per output.
+    pub fn execute_f32(&self, name: &str, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        let model =
+            self.models.get(name).ok_or_else(|| anyhow!("model {name} not loaded"))?;
+        model.execute_f32(inputs)
+    }
+}
+
+impl LoadedModel {
+    /// Execute on f32 inputs.
+    pub fn execute_f32(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        if inputs.len() != self.manifest.inputs.len() {
+            bail!(
+                "model {} expects {} inputs, got {}",
+                self.name,
+                self.manifest.inputs.len(),
+                inputs.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (spec, data) in self.manifest.inputs.iter().zip(inputs) {
+            let elems: usize = spec.shape.iter().product();
+            if data.len() != elems {
+                bail!("input {} expects {} elems, got {}", spec.name, elems, data.len());
+            }
+            let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data)
+                .reshape(&dims)
+                .map_err(|e| anyhow!("reshape input {}: {e:?}", spec.name))?;
+            literals.push(lit);
+        }
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.name))?;
+        let root = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: unpack N outputs.
+        let n_out = self.manifest.outputs.len();
+        let parts = root.to_tuple().map_err(|e| anyhow!("decompose tuple: {e:?}"))?;
+        if parts.len() != n_out {
+            bail!("model {} returned {} outputs, manifest says {}", self.name, parts.len(), n_out);
+        }
+        parts
+            .iter()
+            .map(|p| p.to_vec::<f32>().map_err(|e| anyhow!("read output: {e:?}")))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_roundtrip_and_check() {
+        let src = r#"{
+            "model": "tiny-cnn",
+            "kernels": "pallas",
+            "inputs": [{"name": "x", "shape": [1, 8, 8, 2], "dtype": "f32"}],
+            "outputs": [{"name": "softmax", "shape": [1, 3], "dtype": "f32"}]
+        }"#;
+        let m = Manifest::from_json(src).unwrap();
+        assert_eq!(m.model, "tiny-cnn");
+        assert_eq!(m.kernels, "pallas");
+        assert_eq!(m.inputs[0].shape, vec![1, 8, 8, 2]);
+        let g = crate::models::tiny_cnn(crate::graph::DType::F32);
+        m.check_against(&g).unwrap();
+    }
+
+    #[test]
+    fn manifest_check_rejects_shape_drift() {
+        let src = r#"{
+            "model": "tiny-cnn",
+            "inputs": [{"name": "x", "shape": [1, 16, 16, 2], "dtype": "f32"}],
+            "outputs": [{"name": "softmax", "shape": [1, 3], "dtype": "f32"}]
+        }"#;
+        let m = Manifest::from_json(src).unwrap();
+        let g = crate::models::tiny_cnn(crate::graph::DType::F32);
+        assert!(m.check_against(&g).is_err());
+    }
+
+    #[test]
+    fn manifest_rejects_garbage() {
+        assert!(Manifest::from_json("{}").is_err());
+        assert!(Manifest::from_json("not json").is_err());
+    }
+}

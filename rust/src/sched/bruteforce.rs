@@ -1,0 +1,291 @@
+//! Exhaustive enumeration of all topological orders.
+//!
+//! Backtracking over the ready set (the classic Knuth–Szwarcfiter
+//! arrangement generator [32]); for each complete order the peak working
+//! set is computed incrementally. Exponential — usable up to ~12 operators —
+//! and kept as the ground truth the DP and B&B schedulers are property-
+//! tested against.
+
+use super::Schedule;
+use crate::graph::Graph;
+
+/// Result of the exhaustive search.
+#[derive(Clone, Debug)]
+pub struct BruteForceResult {
+    /// A minimal-peak schedule.
+    pub best: Schedule,
+    /// A maximal-peak schedule (how bad the worst order is).
+    pub worst: Schedule,
+    /// Number of distinct topological orders enumerated.
+    pub orders_enumerated: u64,
+}
+
+/// Enumerate every topological order of `g` (up to `cap`). Returns `None`
+/// when the cap is exceeded. Used by tests that need to evaluate a custom
+/// objective over the full order space.
+pub fn all_orders(g: &Graph, cap: usize) -> Option<Vec<Vec<usize>>> {
+    g.validate().ok()?;
+    let n_ops = g.ops.len();
+    let mut waiting = vec![0usize; n_ops];
+    for op in &g.ops {
+        waiting[op.id] = op.inputs.iter().filter(|&&t| g.tensors[t].producer.is_some()).count();
+    }
+    let mut orders = Vec::new();
+    let mut order = Vec::with_capacity(n_ops);
+    let mut executed = vec![false; n_ops];
+    fn rec(
+        g: &Graph,
+        order: &mut Vec<usize>,
+        waiting: &mut Vec<usize>,
+        executed: &mut Vec<bool>,
+        orders: &mut Vec<Vec<usize>>,
+        cap: usize,
+    ) -> bool {
+        if order.len() == g.ops.len() {
+            if orders.len() >= cap {
+                return false;
+            }
+            orders.push(order.clone());
+            return true;
+        }
+        for o in 0..g.ops.len() {
+            if executed[o] || waiting[o] != 0 {
+                continue;
+            }
+            executed[o] = true;
+            order.push(o);
+            let out = g.ops[o].output;
+            for &c in &g.tensors[out].consumers {
+                if g.ops[c].inputs.contains(&out) {
+                    waiting[c] -= 1;
+                }
+            }
+            let ok = rec(g, order, waiting, executed, orders, cap);
+            for &c in &g.tensors[out].consumers {
+                if g.ops[c].inputs.contains(&out) {
+                    waiting[c] += 1;
+                }
+            }
+            order.pop();
+            executed[o] = false;
+            if !ok {
+                return false;
+            }
+        }
+        true
+    }
+    rec(g, &mut order, &mut waiting, &mut executed, &mut orders, cap).then_some(orders)
+}
+
+/// Enumerate every topological order of `g` (up to `max_orders`), tracking
+/// best and worst peak memory. Returns `None` if the cap was hit.
+pub fn bruteforce(g: &Graph, max_orders: usize) -> Option<BruteForceResult> {
+    g.validate().ok()?;
+    let n_ops = g.ops.len();
+    let n_t = g.tensors.len();
+
+    let bytes: Vec<usize> = g.tensors.iter().map(|t| t.bytes()).collect();
+    let mut is_output = vec![false; n_t];
+    for &t in &g.outputs {
+        is_output[t] = true;
+    }
+    let mut remaining = vec![0u32; n_t];
+    for op in &g.ops {
+        for &t in &op.inputs {
+            remaining[t] += 1;
+        }
+    }
+    let mut waiting = vec![0usize; n_ops];
+    for op in &g.ops {
+        waiting[op.id] = op.inputs.iter().filter(|&&t| g.tensors[t].producer.is_some()).count();
+    }
+
+    struct St<'g> {
+        g: &'g Graph,
+        bytes: Vec<usize>,
+        is_output: Vec<bool>,
+        best: Option<(usize, Vec<usize>)>,
+        worst: Option<(usize, Vec<usize>)>,
+        count: u64,
+        cap: u64,
+        capped: bool,
+    }
+
+    fn rec(
+        s: &mut St,
+        order: &mut Vec<usize>,
+        waiting: &mut Vec<usize>,
+        remaining: &mut Vec<u32>,
+        executed: &mut Vec<bool>,
+        live: usize,
+        peak: usize,
+    ) {
+        if s.capped {
+            return;
+        }
+        if order.len() == s.g.ops.len() {
+            s.count += 1;
+            if s.count > s.cap {
+                s.capped = true;
+                return;
+            }
+            if s.best.as_ref().map_or(true, |(b, _)| peak < *b) {
+                s.best = Some((peak, order.clone()));
+            }
+            if s.worst.as_ref().map_or(true, |(w, _)| peak > *w) {
+                s.worst = Some((peak, order.clone()));
+            }
+            return;
+        }
+        for o in 0..s.g.ops.len() {
+            if executed[o] || waiting[o] != 0 {
+                continue;
+            }
+            let op = &s.g.ops[o];
+            let out = op.output;
+            let step_live = live + s.bytes[out];
+            let new_peak = peak.max(step_live);
+            let mut after = step_live;
+            for &t in &op.inputs {
+                remaining[t] -= 1;
+                if remaining[t] == 0 && !s.is_output[t] {
+                    after -= s.bytes[t];
+                }
+            }
+            if remaining[out] == 0 && !s.is_output[out] {
+                after -= s.bytes[out];
+            }
+            executed[o] = true;
+            order.push(o);
+            for &c in &s.g.tensors[out].consumers {
+                if s.g.ops[c].inputs.contains(&out) {
+                    waiting[c] -= 1;
+                }
+            }
+
+            rec(s, order, waiting, remaining, executed, after, new_peak);
+
+            for &c in &s.g.tensors[out].consumers {
+                if s.g.ops[c].inputs.contains(&out) {
+                    waiting[c] += 1;
+                }
+            }
+            order.pop();
+            executed[o] = false;
+            for &t in &op.inputs {
+                remaining[t] += 1;
+            }
+        }
+    }
+
+    let live0: usize = g.inputs.iter().map(|&t| g.tensors[t].bytes()).sum();
+    let mut st = St {
+        g,
+        bytes,
+        is_output,
+        best: None,
+        worst: None,
+        count: 0,
+        cap: max_orders as u64,
+        capped: false,
+    };
+    let mut order = Vec::with_capacity(n_ops);
+    let mut executed = vec![false; n_ops];
+    rec(&mut st, &mut order, &mut waiting, &mut remaining, &mut executed, live0, live0);
+    if st.capped {
+        return None;
+    }
+    let (bp, bo) = st.best?;
+    let (wp, wo) = st.worst?;
+    Some(BruteForceResult {
+        best: Schedule { order: bo, peak_bytes: bp },
+        worst: Schedule { order: wo, peak_bytes: wp },
+        orders_enumerated: st.count,
+    })
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::graph::{DType, Graph, GraphBuilder};
+    use crate::sched::{peak_of, simulate};
+    use crate::util::rng::Rng;
+
+    /// Random single-output DAG: `n_ops` synthetic operators, each consuming
+    /// 1–2 earlier tensors; all sink tensors become outputs (so every op is
+    /// schedulable by the backward DP).
+    pub(crate) fn random_dag(rng: &mut Rng, n_ops: usize) -> Graph {
+        let mut b = GraphBuilder::new("rand");
+        let mut tensors = vec![b.input("x", &[64 * (1 + rng.range(0, 8))], DType::U8)];
+        for i in 0..n_ops {
+            let n_in = if tensors.len() >= 2 && rng.chance(0.4) { 2 } else { 1 };
+            let mut ins = Vec::new();
+            while ins.len() < n_in {
+                let t = *rng.pick(&tensors);
+                if !ins.contains(&t) {
+                    ins.push(t);
+                }
+            }
+            let bytesz = 32 * (1 + rng.range(0, 64));
+            tensors.push(b.synthetic(&format!("op{i}"), &ins, bytesz, 0));
+        }
+        // Every tensor without consumers becomes a graph output.
+        let g = b.graph();
+        let sinks: Vec<usize> = g
+            .tensors
+            .iter()
+            .filter(|t| t.consumers.is_empty() && !t.is_weight)
+            .map(|t| t.id)
+            .collect();
+        for s in sinks {
+            b.output(s);
+        }
+        b.finish().unwrap()
+    }
+
+    #[test]
+    fn enumerates_figure1_orders() {
+        let g = crate::sched::tests::figure1_graph();
+        let r = bruteforce(&g, usize::MAX).unwrap();
+        assert_eq!(r.best.peak_bytes, 4960);
+        assert_eq!(r.worst.peak_bytes >= r.best.peak_bytes, true);
+        // Figure-1 graph: orders = interleavings of the two branches with
+        // the concat last. Branch A = ops 2,3,5 after 1; branch B = 4,6.
+        // Count must be C(5,2) = 10.
+        assert_eq!(r.orders_enumerated, 10);
+    }
+
+    #[test]
+    fn cap_returns_none() {
+        let g = crate::sched::tests::figure1_graph();
+        assert!(bruteforce(&g, 3).is_none());
+    }
+
+    #[test]
+    fn best_and_worst_orders_are_valid() {
+        let mut rng = Rng::new(123);
+        for _ in 0..10 {
+            let g = random_dag(&mut rng, 6);
+            let r = bruteforce(&g, usize::MAX).unwrap();
+            g.check_order(&r.best.order).unwrap();
+            g.check_order(&r.worst.order).unwrap();
+            assert_eq!(peak_of(&g, &r.best.order), r.best.peak_bytes);
+            assert_eq!(simulate(&g, &r.worst.order).peak_bytes, r.worst.peak_bytes);
+            assert!(r.best.peak_bytes <= r.worst.peak_bytes);
+        }
+    }
+
+    #[test]
+    fn linear_chain_has_one_order() {
+        let mut b = GraphBuilder::new("chain");
+        let mut t = b.input("x", &[16], DType::U8);
+        for i in 0..5 {
+            t = b.synthetic(&format!("s{i}"), &[t], 16, 0);
+        }
+        b.output(t);
+        let g: Graph = b.finish().unwrap();
+        let r = bruteforce(&g, usize::MAX).unwrap();
+        assert_eq!(r.orders_enumerated, 1);
+        assert_eq!(r.best.peak_bytes, r.worst.peak_bytes);
+    }
+}

@@ -1,0 +1,198 @@
+//! Greedy scheduling heuristics.
+//!
+//! Neither is optimal in general (the property tests include graphs where
+//! they lose to Algorithm 1), but both are linear-ish and serve as (a) the
+//! incumbent for branch-and-bound pruning and (b) baselines in the
+//! scheduler ablation bench.
+
+use super::Schedule;
+use crate::graph::{Graph, OpId};
+
+/// Pick, at every step, the ready operator whose execution step needs the
+/// least memory (live bytes + output), breaking ties toward the op that
+/// frees the most bytes, then by id (deterministic).
+pub fn greedy_min_increase(g: &Graph) -> Schedule {
+    let n_t = g.tensors.len();
+    let bytes: Vec<usize> = g.tensors.iter().map(|t| t.bytes()).collect();
+    let mut is_output = vec![false; n_t];
+    for &t in &g.outputs {
+        is_output[t] = true;
+    }
+    let mut remaining = vec![0u32; n_t];
+    for op in &g.ops {
+        for &t in &op.inputs {
+            remaining[t] += 1;
+        }
+    }
+    let mut waiting: Vec<usize> = g
+        .ops
+        .iter()
+        .map(|op| op.inputs.iter().filter(|&&t| g.tensors[t].producer.is_some()).count())
+        .collect();
+    let mut executed = vec![false; g.ops.len()];
+    let mut live: usize = g.inputs.iter().map(|&t| bytes[t]).sum();
+    let mut peak = live;
+    let mut order = Vec::with_capacity(g.ops.len());
+
+    for _ in 0..g.ops.len() {
+        // Evaluate each ready op: step cost and bytes freed.
+        let mut best: Option<(usize, isize, OpId)> = None;
+        for o in 0..g.ops.len() {
+            if executed[o] || waiting[o] != 0 {
+                continue;
+            }
+            let op = &g.ops[o];
+            let step = live + bytes[op.output];
+            let mut freed: isize = 0;
+            for &t in &op.inputs {
+                if remaining[t] == 1 && !is_output[t] {
+                    freed += bytes[t] as isize;
+                }
+            }
+            let key = (step, -freed, o);
+            if best.map_or(true, |(bs, bf, bo)| key < (bs, bf, bo)) {
+                best = Some(key);
+            }
+        }
+        let (_, _, o) = best.expect("greedy: no ready op (cyclic graph?)");
+        let op = &g.ops[o];
+        let step = live + bytes[op.output];
+        peak = peak.max(step);
+        live = step;
+        for &t in &op.inputs {
+            remaining[t] -= 1;
+            if remaining[t] == 0 && !is_output[t] {
+                live -= bytes[t];
+            }
+        }
+        if remaining[op.output] == 0 && !is_output[op.output] {
+            live -= bytes[op.output];
+        }
+        executed[o] = true;
+        order.push(o);
+        for &c in &g.tensors[op.output].consumers {
+            if g.ops[c].inputs.contains(&op.output) {
+                waiting[c] -= 1;
+            }
+        }
+    }
+    Schedule { order, peak_bytes: peak }
+}
+
+/// Depth-first branch completion: always continue the most recently opened
+/// branch (run the consumer of the most recently produced tensor when
+/// ready). This mimics what a naive converter that walks the graph
+/// depth-first would emit.
+pub fn greedy_depth_first(g: &Graph) -> Schedule {
+    let n_t = g.tensors.len();
+    let mut remaining = vec![0u32; n_t];
+    for op in &g.ops {
+        for &t in &op.inputs {
+            remaining[t] += 1;
+        }
+    }
+    let mut waiting: Vec<usize> = g
+        .ops
+        .iter()
+        .map(|op| op.inputs.iter().filter(|&&t| g.tensors[t].producer.is_some()).count())
+        .collect();
+    let mut executed = vec![false; g.ops.len()];
+    let mut order = Vec::with_capacity(g.ops.len());
+    // Stack of candidate ops; seeded with ops ready at the start, lowest id
+    // on top.
+    let mut stack: Vec<OpId> = (0..g.ops.len()).rev().filter(|&o| waiting[o] == 0).collect();
+
+    while order.len() < g.ops.len() {
+        let o = loop {
+            match stack.pop() {
+                Some(o) if !executed[o] && waiting[o] == 0 => break o,
+                Some(_) => continue,
+                None => {
+                    // Shouldn't happen for valid DAGs, but fall back to any
+                    // ready op for robustness.
+                    let o = (0..g.ops.len())
+                        .find(|&o| !executed[o] && waiting[o] == 0)
+                        .expect("depth-first: no ready op");
+                    break o;
+                }
+            }
+        };
+        let op = &g.ops[o];
+        executed[o] = true;
+        order.push(o);
+        for &t in &op.inputs {
+            remaining[t] -= 1;
+        }
+        // Push newly-ready consumers of the fresh output (highest priority).
+        let mut newly: Vec<OpId> = Vec::new();
+        for &c in &g.tensors[op.output].consumers {
+            if g.ops[c].inputs.contains(&op.output) {
+                waiting[c] -= 1;
+                if waiting[c] == 0 {
+                    newly.push(c);
+                }
+            }
+        }
+        newly.sort_unstable_by(|a, b| b.cmp(a));
+        stack.extend(newly);
+    }
+    let peak = super::peak_of(g, &order);
+    Schedule { order, peak_bytes: peak }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::tests::figure1_graph;
+    use crate::sched::{bruteforce, optimal};
+    use crate::util::prop;
+
+    #[test]
+    fn greedy_orders_are_valid() {
+        let g = figure1_graph();
+        for s in [greedy_min_increase(&g), greedy_depth_first(&g)] {
+            g.check_order(&s.order).unwrap();
+            assert_eq!(crate::sched::peak_of(&g, &s.order), s.peak_bytes);
+        }
+    }
+
+    #[test]
+    fn greedy_at_least_matches_worst_case() {
+        prop::check_sized("greedy<=worst", 40, 3, 8, |rng, n| {
+            let g = crate::sched::bruteforce::tests::random_dag(rng, n);
+            let bf = bruteforce(&g, usize::MAX).unwrap();
+            let gm = greedy_min_increase(&g);
+            assert!(gm.peak_bytes >= bf.best.peak_bytes);
+            assert!(gm.peak_bytes <= bf.worst.peak_bytes);
+        });
+    }
+
+    #[test]
+    fn greedy_is_not_always_optimal() {
+        // Find (by seeded search) at least one graph where greedy
+        // min-increase is strictly worse than Algorithm 1 — documents that
+        // the DP is actually needed.
+        let mut found = false;
+        let mut rng = crate::util::rng::Rng::new(0x5EED);
+        for _ in 0..400 {
+            let g = crate::sched::bruteforce::tests::random_dag(&mut rng, 8);
+            let gm = greedy_min_increase(&g);
+            let (opt, _) = optimal(&g).unwrap();
+            assert!(gm.peak_bytes >= opt.peak_bytes);
+            if gm.peak_bytes > opt.peak_bytes {
+                found = true;
+                break;
+            }
+        }
+        assert!(found, "expected at least one graph where greedy is suboptimal");
+    }
+
+    #[test]
+    fn depth_first_completes_branches() {
+        let g = figure1_graph();
+        let s = greedy_depth_first(&g);
+        // Depth-first from op1 runs branch ops 2→3→5 before 4→6 (0-based:
+        // 1,2,4 before 3,5), then the concat.
+        assert_eq!(s.order, vec![0, 1, 2, 4, 3, 5, 6]);
+    }
+}

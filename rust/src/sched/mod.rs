@@ -1,0 +1,387 @@
+//! Execution scheduling and working-set analysis (§4 of the paper).
+//!
+//! The *working set* at an execution step is the pending operator's input
+//! and output tensors plus every already-produced tensor still needed by a
+//! later operator (§2.1). Weights are Flash-resident and never counted.
+//! This module provides:
+//!
+//! - [`simulate`] — byte-exact working-set trace of a given execution order
+//!   (regenerates the Appendix A tables).
+//! - [`optimal`] — **Algorithm 1**: memoized dynamic programming over tensor
+//!   sets; returns a peak-memory-optimal topological order.
+//! - [`optimal_bnb`] — branch-and-bound forward search with a dominance
+//!   memo; same optimum, different constant factors (ablation).
+//! - [`bruteforce`] — exhaustive enumeration of all topological orders
+//!   (Knuth–Szwarcfiter-style backtracking); ground truth for tests.
+//! - [`greedy`] — cheap heuristics (min-increase, depth-first) used as
+//!   incumbents and baselines.
+
+pub(crate) mod bruteforce;
+mod greedy;
+mod optimal;
+
+pub use bruteforce::{all_orders, bruteforce, BruteForceResult};
+pub use greedy::{greedy_depth_first, greedy_min_increase};
+pub use optimal::{optimal, optimal_bnb, optimal_opts, OptimalError, OptimalStats};
+
+use crate::graph::{Graph, OpId, TensorId};
+
+/// One step of a working-set trace: the operator executed and the tensors
+/// resident in SRAM *during* its execution (inputs + output + held).
+#[derive(Clone, Debug)]
+pub struct Step {
+    pub op: OpId,
+    /// Tensors in SRAM during this step, ascending by id.
+    pub resident: Vec<TensorId>,
+    /// Total bytes of `resident`.
+    pub bytes: usize,
+}
+
+/// Working-set trace of a complete execution order.
+#[derive(Clone, Debug)]
+pub struct MemTrace {
+    pub order: Vec<OpId>,
+    pub steps: Vec<Step>,
+    /// Peak working-set size over all steps (the paper's "peak memory
+    /// usage (excl. overheads)").
+    pub peak_bytes: usize,
+    /// Index into `steps` where the peak occurs (first occurrence).
+    pub peak_step: usize,
+}
+
+impl MemTrace {
+    /// Render the Appendix-A style table ("Operator | Tensors in RAM | Usage").
+    pub fn render_table(&self, g: &Graph) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<24} {:<28} {:>10}\n",
+            "Operator", "Tensors in RAM (op #)", "Usage (B)"
+        ));
+        for step in &self.steps {
+            let op = &g.ops[step.op];
+            let tensor_list: Vec<String> = step
+                .resident
+                .iter()
+                .map(|&t| match g.tensors[t].producer {
+                    Some(p) => format!("{}", p + 1),
+                    None => "in".to_string(),
+                })
+                .collect();
+            out.push_str(&format!(
+                "{:<24} {{{}}}{:width$} {:>10}\n",
+                format!("{} ({})", op.id + 1, op.kind.name()),
+                tensor_list.join(","),
+                "",
+                step.bytes,
+                width = 28usize.saturating_sub(tensor_list.join(",").len() + 2)
+            ));
+        }
+        out.push_str(&format!("{:>63}  (peak)\n", self.peak_bytes));
+        out
+    }
+}
+
+/// Scheduling options.
+///
+/// `inplace_add` enables the §6 extension: "if one of the inputs to the
+/// addition operator is not used elsewhere, the result can be accumulated
+/// into it, eliminating the need for an output buffer". An `Add` is
+/// eligible when one of its inputs has no other consumer, is not a graph
+/// output, and matches the output size; at that step the output shares the
+/// accumulator's buffer, so it contributes no extra bytes.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Opts {
+    pub inplace_add: bool,
+}
+
+impl Opts {
+    pub const INPLACE: Opts = Opts { inplace_add: true };
+}
+
+/// Per-op in-place accumulator: `Some(tensor)` when the op may write its
+/// output over that input's buffer under [`Opts::inplace_add`].
+pub fn inplace_accumulators(g: &Graph) -> Vec<Option<TensorId>> {
+    g.ops
+        .iter()
+        .map(|op| {
+            if !matches!(op.kind, crate::graph::OpKind::Add) {
+                return None;
+            }
+            let out_bytes = g.tensors[op.output].bytes();
+            op.inputs.iter().copied().find(|&t| {
+                let tens = &g.tensors[t];
+                let consumers = tens
+                    .consumers
+                    .iter()
+                    .filter(|&&c| g.ops[c].inputs.contains(&t))
+                    .count();
+                consumers == 1 && !g.outputs.contains(&t) && tens.bytes() == out_bytes
+            })
+        })
+        .collect()
+}
+
+impl MemTrace {
+    /// ASCII bar chart of per-step memory usage (the plots the paper's tool
+    /// produces, in terminal form).
+    pub fn render_chart(&self, g: &Graph, width: usize) -> String {
+        let mut out = String::new();
+        let peak = self.peak_bytes.max(1);
+        for (i, step) in self.steps.iter().enumerate() {
+            let bar = (step.bytes * width).div_ceil(peak);
+            let marker = if i == self.peak_step { " ◀ peak" } else { "" };
+            out.push_str(&format!(
+                "op {:>3} {:<18} |{:<w$}| {:>8} B{}
+",
+                step.op + 1,
+                g.ops[step.op].name,
+                "█".repeat(bar),
+                step.bytes,
+                marker,
+                w = width
+            ));
+        }
+        out
+    }
+
+    /// CSV dump (`step,op,op_name,bytes,resident`) for external plotting.
+    pub fn to_csv(&self, g: &Graph) -> String {
+        let mut out = String::from("step,op,op_name,bytes,resident\n");
+        for (i, step) in self.steps.iter().enumerate() {
+            let resident: Vec<String> = step.resident.iter().map(|t| t.to_string()).collect();
+            out.push_str(&format!(
+                "{},{},{},{},\"{}\"\n",
+                i,
+                step.op,
+                g.ops[step.op].name,
+                step.bytes,
+                resident.join(" ")
+            ));
+        }
+        out
+    }
+}
+
+/// A schedule: an execution order plus its peak working-set size.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Schedule {
+    pub order: Vec<OpId>,
+    pub peak_bytes: usize,
+}
+
+/// Compute the working-set trace of `order` on `g`.
+///
+/// Semantics (matching the paper's Appendix A accounting):
+/// - graph inputs are resident from the start until their last consumer has
+///   executed;
+/// - an operator's output becomes resident at its step;
+/// - a tensor is freed immediately after its last consumer executes, unless
+///   it is a graph output (graph outputs stay resident to the end);
+/// - weights are never resident (they live in Flash).
+///
+/// Panics if `order` is not a valid topological order (callers validate via
+/// [`Graph::check_order`]).
+pub fn simulate(g: &Graph, order: &[OpId]) -> MemTrace {
+    simulate_opts(g, order, Opts::default())
+}
+
+/// [`simulate`] with scheduling options (in-place accumulation).
+pub fn simulate_opts(g: &Graph, order: &[OpId], opts: Opts) -> MemTrace {
+    g.check_order(order).expect("simulate: invalid execution order");
+    let acc = if opts.inplace_add { inplace_accumulators(g) } else { vec![None; g.ops.len()] };
+    let n = g.tensors.len();
+    // Remaining consumer count per tensor (activation consumers only).
+    let mut remaining = vec![0usize; n];
+    for op in &g.ops {
+        for &t in &op.inputs {
+            remaining[t] += 1;
+        }
+    }
+    let is_output = {
+        let mut v = vec![false; n];
+        for &t in &g.outputs {
+            v[t] = true;
+        }
+        v
+    };
+
+    let mut resident = vec![false; n];
+    for &t in &g.inputs {
+        resident[t] = true;
+    }
+
+    let mut steps = Vec::with_capacity(order.len());
+    let mut peak = 0usize;
+    let mut peak_step = 0usize;
+
+    for (i, &opid) in order.iter().enumerate() {
+        let op = &g.ops[opid];
+        resident[op.output] = true;
+        let live: Vec<TensorId> = (0..n).filter(|&t| resident[t]).collect();
+        let mut bytes: usize = live.iter().map(|&t| g.tensors[t].bytes()).sum();
+        // In-place accumulation: the output shares its accumulator's buffer.
+        if acc[opid].is_some() {
+            bytes -= g.tensors[op.output].bytes();
+        }
+        if bytes > peak {
+            peak = bytes;
+            peak_step = i;
+        }
+        steps.push(Step { op: opid, resident: live, bytes });
+        // Reclaim inputs whose consumers are all done.
+        for &t in &op.inputs {
+            remaining[t] -= 1;
+            if remaining[t] == 0 && !is_output[t] {
+                resident[t] = false;
+            }
+        }
+        // An output with no consumers that is not a graph output would be
+        // dead on arrival; reclaim it to keep accounting consistent.
+        if remaining[op.output] == 0 && !is_output[op.output] {
+            resident[op.output] = false;
+        }
+    }
+
+    MemTrace { order: order.to_vec(), steps, peak_bytes: peak, peak_step }
+}
+
+/// Peak working-set size of `order` without materializing the trace
+/// (hot path for enumeration-based schedulers).
+pub fn peak_of(g: &Graph, order: &[OpId]) -> usize {
+    peak_of_opts(g, order, Opts::default())
+}
+
+/// [`peak_of`] with scheduling options.
+pub fn peak_of_opts(g: &Graph, order: &[OpId], opts: Opts) -> usize {
+    let acc = if opts.inplace_add { inplace_accumulators(g) } else { vec![None; g.ops.len()] };
+    let n = g.tensors.len();
+    let mut remaining = vec![0u32; n];
+    for op in &g.ops {
+        for &t in &op.inputs {
+            remaining[t] += 1;
+        }
+    }
+    let mut is_output = vec![false; n];
+    for &t in &g.outputs {
+        is_output[t] = true;
+    }
+    let mut live_bytes: usize = g.inputs.iter().map(|&t| g.tensors[t].bytes()).sum();
+    let mut peak = 0usize;
+    for &opid in order {
+        let op = &g.ops[opid];
+        live_bytes += g.tensors[op.output].bytes();
+        let step = if acc[opid].is_some() {
+            live_bytes - g.tensors[op.output].bytes()
+        } else {
+            live_bytes
+        };
+        peak = peak.max(step);
+        for &t in &op.inputs {
+            remaining[t] -= 1;
+            if remaining[t] == 0 && !is_output[t] {
+                live_bytes -= g.tensors[t].bytes();
+            }
+        }
+        if remaining[op.output] == 0 && !is_output[op.output] {
+            live_bytes -= g.tensors[op.output].bytes();
+        }
+    }
+    peak
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::graph::{DType, GraphBuilder};
+
+    /// The Figure-1 example graph with its exact byte sizes, built from
+    /// synthetic ops (sizes derived from the Appendix A tables).
+    pub(crate) fn figure1_graph() -> Graph {
+        let mut b = GraphBuilder::new("figure1");
+        let t0 = b.input("t0", &[1568], DType::U8);
+        let t1 = b.synthetic("op1", &[t0], 3136, 0);
+        let t2 = b.synthetic("op2", &[t1], 1568, 0);
+        let t3 = b.synthetic("op3", &[t2], 512, 0);
+        let t4 = b.synthetic("op4", &[t1], 512, 0);
+        let t5 = b.synthetic("op5", &[t3], 256, 0);
+        let t6 = b.synthetic("op6", &[t4], 256, 0);
+        let t7 = b.synthetic("op7", &[t5, t6], 512, 0);
+        b.output(t7);
+        b.finish().unwrap()
+    }
+
+    #[test]
+    fn figure2_default_order_peak_5216() {
+        let g = figure1_graph();
+        let trace = simulate(&g, &g.default_order());
+        // Appendix A, Figure 2: usage per step.
+        let expected = [4704, 4704, 5216, 4160, 1280, 1024, 1024];
+        let got: Vec<usize> = trace.steps.iter().map(|s| s.bytes).collect();
+        assert_eq!(got, expected);
+        assert_eq!(trace.peak_bytes, 5216);
+        assert_eq!(trace.peak_step, 2); // operator #3
+    }
+
+    #[test]
+    fn figure3_optimised_order_peak_4960() {
+        let g = figure1_graph();
+        // Paper's optimised order 1,4,6,2,3,5,7 (1-based) → 0-based op ids.
+        let order = [0, 3, 5, 1, 2, 4, 6];
+        let trace = simulate(&g, &order);
+        let expected = [4704, 3648, 3904, 4960, 2336, 1024, 1024];
+        let got: Vec<usize> = trace.steps.iter().map(|s| s.bytes).collect();
+        assert_eq!(got, expected);
+        assert_eq!(trace.peak_bytes, 4960);
+        assert_eq!(trace.peak_step, 3); // operator #2
+    }
+
+    #[test]
+    fn peak_of_matches_simulate() {
+        let g = figure1_graph();
+        for order in [vec![0, 1, 2, 3, 4, 5, 6], vec![0, 3, 5, 1, 2, 4, 6]] {
+            assert_eq!(peak_of(&g, &order), simulate(&g, &order).peak_bytes);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid execution order")]
+    fn simulate_rejects_invalid_order() {
+        let g = figure1_graph();
+        simulate(&g, &[6, 5, 4, 3, 2, 1, 0]);
+    }
+
+    #[test]
+    fn residual_tensors_counted_in_figure2_step3() {
+        let g = figure1_graph();
+        let trace = simulate(&g, &g.default_order());
+        // During op #3 (index 2) the resident set is {t1, t2, t3} —
+        // t1 (output of op1) is held back for op4.
+        let step = &trace.steps[2];
+        let names: Vec<&str> =
+            step.resident.iter().map(|&t| g.tensors[t].name.as_str()).collect();
+        assert_eq!(names, vec!["op1", "op2", "op3"]);
+    }
+
+    #[test]
+    fn graph_outputs_stay_resident() {
+        // x -> a -> b, both a and b are outputs: a must not be freed.
+        let mut bld = GraphBuilder::new("t");
+        let x = bld.input("x", &[100], DType::U8);
+        let a = bld.synthetic("a", &[x], 100, 0);
+        let b = bld.synthetic("b", &[a], 100, 0);
+        bld.output(a);
+        bld.output(b);
+        let g = bld.finish().unwrap();
+        let trace = simulate(&g, &[0, 1]);
+        assert_eq!(trace.steps[1].resident.len(), 2); // a and b
+    }
+
+    #[test]
+    fn render_table_mentions_peak() {
+        let g = figure1_graph();
+        let trace = simulate(&g, &g.default_order());
+        let table = trace.render_table(&g);
+        assert!(table.contains("5216"));
+        assert!(table.contains("(peak)"));
+    }
+}

@@ -1,0 +1,248 @@
+//! Mini-criterion: a self-contained benchmark runner.
+//!
+//! The `criterion` crate is not vendored in this environment, so `cargo
+//! bench` targets (declared with `harness = false`) use this runner instead.
+//! It provides warm-up, adaptive iteration counts, mean/σ/min/max reporting,
+//! a `black_box` sink, and markdown-style result tables that the paper-table
+//! benches print alongside their timing rows.
+
+use std::hint::black_box as std_black_box;
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+/// Re-exported opaque value sink (prevents the optimizer from deleting the
+/// benched computation).
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// One measured benchmark result.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+    pub min_ns: f64,
+    pub max_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean(&self) -> Duration {
+        Duration::from_nanos(self.mean_ns as u64)
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1_000.0 {
+        format!("{ns:.1} ns")
+    } else if ns < 1_000_000.0 {
+        format!("{:.2} µs", ns / 1_000.0)
+    } else if ns < 1_000_000_000.0 {
+        format!("{:.2} ms", ns / 1_000_000.0)
+    } else {
+        format!("{:.3} s", ns / 1_000_000_000.0)
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Clone, Debug)]
+pub struct Bencher {
+    /// Wall-clock budget for the measurement phase of each benchmark.
+    pub measure_time: Duration,
+    /// Wall-clock budget for warm-up.
+    pub warmup_time: Duration,
+    /// Number of sample batches collected.
+    pub samples: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            measure_time: Duration::from_millis(800),
+            warmup_time: Duration::from_millis(200),
+            samples: 20,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick preset for long-running end-to-end benches.
+    pub fn quick() -> Self {
+        Bencher {
+            measure_time: Duration::from_millis(300),
+            warmup_time: Duration::from_millis(50),
+            samples: 8,
+            results: Vec::new(),
+        }
+    }
+
+    /// Run `f` repeatedly and record a timing row under `name`.
+    /// The closure's return value is black-boxed.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        // Warm-up: also estimates the per-iteration cost.
+        let warm_start = Instant::now();
+        let mut warm_iters = 0u64;
+        while warm_start.elapsed() < self.warmup_time || warm_iters == 0 {
+            black_box(f());
+            warm_iters += 1;
+            if warm_iters > 1_000_000 {
+                break;
+            }
+        }
+        let per_iter = warm_start.elapsed().as_nanos() as f64 / warm_iters as f64;
+
+        // Choose batch size so that one batch is ≥ ~50µs (amortizes timer
+        // overhead) and the whole measurement fits the budget.
+        let batch = ((50_000.0 / per_iter).ceil() as u64).max(1);
+        let total_budget_ns = self.measure_time.as_nanos() as f64;
+        let max_batches = (total_budget_ns / (per_iter * batch as f64)).ceil() as usize;
+        let batches = self.samples.min(max_batches.max(1));
+
+        let mut sample_ns: Vec<f64> = Vec::with_capacity(batches);
+        let mut total_iters = 0u64;
+        for _ in 0..batches {
+            let t = Instant::now();
+            for _ in 0..batch {
+                black_box(f());
+            }
+            let el = t.elapsed().as_nanos() as f64 / batch as f64;
+            sample_ns.push(el);
+            total_iters += batch;
+        }
+
+        let res = BenchResult {
+            name: name.to_string(),
+            iters: total_iters,
+            mean_ns: stats::mean(&sample_ns),
+            stddev_ns: stats::stddev(&sample_ns),
+            min_ns: stats::min(&sample_ns),
+            max_ns: stats::max(&sample_ns),
+        };
+        println!(
+            "bench  {:<44} {:>12}  ±{:>10}  ({} iters)",
+            res.name,
+            fmt_ns(res.mean_ns),
+            fmt_ns(res.stddev_ns),
+            res.iters
+        );
+        self.results.push(res.clone());
+        res
+    }
+
+    /// All recorded results.
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Print a summary table of all recorded results.
+    pub fn summary(&self) {
+        println!();
+        println!("{:<46} {:>12} {:>12} {:>12}", "benchmark", "mean", "min", "max");
+        println!("{}", "-".repeat(86));
+        for r in &self.results {
+            println!(
+                "{:<46} {:>12} {:>12} {:>12}",
+                r.name,
+                fmt_ns(r.mean_ns),
+                fmt_ns(r.min_ns),
+                fmt_ns(r.max_ns)
+            );
+        }
+    }
+}
+
+/// Markdown-ish table printer used by the paper-table benches: fixed column
+/// widths, header rule, right-aligned numeric columns.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: Vec::new() }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<w$} |", c, w = widths[i]));
+            }
+            s
+        };
+        println!("{}", line(&self.headers));
+        let mut rule = String::from("|");
+        for w in &widths {
+            rule.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        println!("{rule}");
+        for row in &self.rows {
+            println!("{}", line(row));
+        }
+    }
+}
+
+/// Format a byte count the way the paper does (KB = 1024 B, one decimal).
+pub fn fmt_kb(bytes: usize) -> String {
+    format!("{:.1}KB", bytes as f64 / 1024.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bencher {
+            measure_time: Duration::from_millis(20),
+            warmup_time: Duration::from_millis(5),
+            samples: 4,
+            results: Vec::new(),
+        };
+        let r = b.bench("sum", || (0..1000u64).sum::<u64>());
+        assert!(r.mean_ns > 0.0);
+        assert!(r.iters > 0);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn table_prints_consistent_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["x".into(), "1".into()]);
+        t.print(); // smoke: no panic
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_ns(12.3), "12.3 ns");
+        assert_eq!(fmt_ns(12_300.0), "12.30 µs");
+        assert_eq!(fmt_kb(2048), "2.0KB");
+    }
+}

@@ -1,0 +1,210 @@
+//! Fixed-capacity bit set over `Vec<u64>` words.
+//!
+//! Algorithm 1 memoizes on *sets of tensors*; those sets are the hash keys of
+//! the DP table and the operands of ancestor checks, so they need O(1)-ish
+//! hashing, fast union/difference, and cheap iteration. Word-packed bitsets
+//! give all three. Capacity is fixed at construction (the graph's tensor
+//! count) so equality/hash are well-defined across all sets of one graph.
+
+use std::fmt;
+
+/// A set of small integers `0..capacity`.
+#[derive(Clone, PartialEq, Eq, Hash)]
+pub struct BitSet {
+    words: Vec<u64>,
+    capacity: usize,
+}
+
+impl BitSet {
+    /// Empty set with room for `capacity` elements.
+    pub fn new(capacity: usize) -> Self {
+        BitSet { words: vec![0; capacity.div_ceil(64)], capacity }
+    }
+
+    /// Set containing the given elements.
+    pub fn from_iter(capacity: usize, items: impl IntoIterator<Item = usize>) -> Self {
+        let mut s = BitSet::new(capacity);
+        for i in items {
+            s.insert(i);
+        }
+        s
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    #[inline]
+    pub fn insert(&mut self, i: usize) {
+        debug_assert!(i < self.capacity, "bit {i} out of capacity {}", self.capacity);
+        self.words[i / 64] |= 1 << (i % 64);
+    }
+
+    #[inline]
+    pub fn remove(&mut self, i: usize) {
+        debug_assert!(i < self.capacity);
+        self.words[i / 64] &= !(1 << (i % 64));
+    }
+
+    #[inline]
+    pub fn contains(&self, i: usize) -> bool {
+        if i >= self.capacity {
+            return false;
+        }
+        self.words[i / 64] & (1 << (i % 64)) != 0
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// In-place union.
+    pub fn union_with(&mut self, other: &BitSet) {
+        debug_assert_eq!(self.capacity, other.capacity);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a |= b;
+        }
+    }
+
+    /// In-place difference (`self \ other`).
+    pub fn difference_with(&mut self, other: &BitSet) {
+        debug_assert_eq!(self.capacity, other.capacity);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a &= !b;
+        }
+    }
+
+    /// Does `self` intersect `other`?
+    pub fn intersects(&self, other: &BitSet) -> bool {
+        debug_assert_eq!(self.capacity, other.capacity);
+        self.words.iter().zip(&other.words).any(|(a, b)| a & b != 0)
+    }
+
+    /// Is `self` a subset of `other`?
+    pub fn is_subset(&self, other: &BitSet) -> bool {
+        debug_assert_eq!(self.capacity, other.capacity);
+        self.words.iter().zip(&other.words).all(|(a, b)| a & !b == 0)
+    }
+
+    /// Iterate elements in increasing order.
+    pub fn iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &w)| {
+            let mut bits = w;
+            std::iter::from_fn(move || {
+                if bits == 0 {
+                    None
+                } else {
+                    let tz = bits.trailing_zeros() as usize;
+                    bits &= bits - 1;
+                    Some(wi * 64 + tz)
+                }
+            })
+        })
+    }
+
+    /// Copy with element `i` inserted.
+    pub fn with(&self, i: usize) -> BitSet {
+        let mut s = self.clone();
+        s.insert(i);
+        s
+    }
+
+    /// Copy with element `i` removed.
+    pub fn without(&self, i: usize) -> BitSet {
+        let mut s = self.clone();
+        s.remove(i);
+        s
+    }
+}
+
+impl fmt::Debug for BitSet {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{{")?;
+        for (n, i) in self.iter().enumerate() {
+            if n > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{i}")?;
+        }
+        write!(f, "}}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_remove_contains() {
+        let mut s = BitSet::new(130);
+        s.insert(0);
+        s.insert(64);
+        s.insert(129);
+        assert!(s.contains(0) && s.contains(64) && s.contains(129));
+        assert!(!s.contains(1) && !s.contains(128));
+        s.remove(64);
+        assert!(!s.contains(64));
+        assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn iter_in_order() {
+        let s = BitSet::from_iter(200, [5, 190, 63, 64, 0]);
+        assert_eq!(s.iter().collect::<Vec<_>>(), vec![0, 5, 63, 64, 190]);
+    }
+
+    #[test]
+    fn union_difference() {
+        let a = BitSet::from_iter(100, [1, 2, 3]);
+        let b = BitSet::from_iter(100, [3, 4]);
+        let mut u = a.clone();
+        u.union_with(&b);
+        assert_eq!(u.iter().collect::<Vec<_>>(), vec![1, 2, 3, 4]);
+        let mut d = a.clone();
+        d.difference_with(&b);
+        assert_eq!(d.iter().collect::<Vec<_>>(), vec![1, 2]);
+    }
+
+    #[test]
+    fn subset_intersects() {
+        let a = BitSet::from_iter(70, [1, 65]);
+        let b = BitSet::from_iter(70, [1, 2, 65]);
+        assert!(a.is_subset(&b));
+        assert!(!b.is_subset(&a));
+        assert!(a.intersects(&b));
+        let c = BitSet::from_iter(70, [3]);
+        assert!(!a.intersects(&c));
+    }
+
+    #[test]
+    fn hash_equality_for_same_contents() {
+        use std::collections::HashSet;
+        let mut set = HashSet::new();
+        set.insert(BitSet::from_iter(64, [1, 5]));
+        assert!(set.contains(&BitSet::from_iter(64, [5, 1])));
+        assert!(!set.contains(&BitSet::from_iter(64, [1])));
+    }
+
+    #[test]
+    fn with_without_are_copies() {
+        let a = BitSet::from_iter(10, [1]);
+        let b = a.with(2);
+        assert!(!a.contains(2) && b.contains(2));
+        let c = b.without(1);
+        assert!(b.contains(1) && !c.contains(1));
+    }
+
+    #[test]
+    fn empty_and_len() {
+        let s = BitSet::new(0);
+        assert!(s.is_empty());
+        let s = BitSet::from_iter(10, []);
+        assert!(s.is_empty());
+        assert_eq!(s.len(), 0);
+    }
+}

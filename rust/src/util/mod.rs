@@ -1,0 +1,20 @@
+//! In-tree substrate utilities.
+//!
+//! This environment vendors only the `xla` crate stack, so the facilities a
+//! project would normally pull from crates.io are implemented here:
+//!
+//! - [`json`] — JSON parser/emitter (replaces `serde_json`) for the model
+//!   format, artifact manifests and reports.
+//! - [`rng`] — deterministic xoshiro256** PRNG (replaces `rand`).
+//! - [`prop`] — property-test harness with seeds + coarse shrinking
+//!   (replaces `proptest`).
+//! - [`bench`] — mini-criterion benchmark runner + table printer
+//!   (replaces `criterion`).
+//! - [`stats`] — mean/σ/percentiles/log-histogram/linear-fit helpers.
+
+pub mod bench;
+pub mod bitset;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,168 @@
+//! Property-based testing harness (proptest is not vendored).
+//!
+//! `check(name, cases, |rng| ...)` runs a closure against `cases`
+//! independently-seeded RNGs. On failure it re-raises the panic annotated
+//! with the case seed so the exact failing input can be replayed with
+//! `replay(seed, ...)`. A coarse shrinking pass is supported for generators
+//! that expose a size parameter: `check_sized` retries failing cases at
+//! smaller sizes and reports the smallest size that still fails.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+use super::rng::Rng;
+
+/// Environment knob: `PROP_CASES` overrides the per-property case count.
+fn case_count(default_cases: usize) -> usize {
+    std::env::var("PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(default_cases)
+}
+
+/// Master seed: `PROP_SEED` makes the whole suite reproducible.
+fn master_seed() -> u64 {
+    std::env::var("PROP_SEED").ok().and_then(|v| v.parse().ok()).unwrap_or(0xC0FFEE)
+}
+
+/// Run `prop` against `cases` random cases. Panics (with the failing seed)
+/// if any case panics.
+pub fn check(name: &str, cases: usize, prop: impl Fn(&mut Rng)) {
+    let cases = case_count(cases);
+    let mut master = Rng::new(master_seed() ^ hash_name(name));
+    for case in 0..cases {
+        let seed = master.next_u64();
+        let mut rng = Rng::new(seed);
+        let result = catch_unwind(AssertUnwindSafe(|| prop(&mut rng)));
+        if let Err(payload) = result {
+            let msg = panic_message(&payload);
+            panic!(
+                "property '{name}' failed on case {case}/{cases} (replay seed: {seed:#x})\n  cause: {msg}"
+            );
+        }
+    }
+}
+
+/// Replay a single case of a property by seed (used when debugging a
+/// reported failure).
+pub fn replay(seed: u64, mut prop: impl FnMut(&mut Rng)) {
+    let mut rng = Rng::new(seed);
+    prop(&mut rng);
+}
+
+/// Run `prop(rng, size)` for random sizes in `[min_size, max_size]`. When a
+/// case fails, retries smaller sizes with the same seed to report the
+/// smallest reproduction (coarse shrinking).
+pub fn check_sized(
+    name: &str,
+    cases: usize,
+    min_size: usize,
+    max_size: usize,
+    prop: impl Fn(&mut Rng, usize),
+) {
+    assert!(min_size <= max_size);
+    let cases = case_count(cases);
+    let mut master = Rng::new(master_seed() ^ hash_name(name));
+    for case in 0..cases {
+        let seed = master.next_u64();
+        let size = Rng::new(seed).range(min_size, max_size + 1);
+        let run = |sz: usize| {
+            let mut rng = Rng::new(seed);
+            // burn the size draw so the data stream is identical across sizes
+            let _ = rng.range(min_size, max_size + 1);
+            catch_unwind(AssertUnwindSafe(|| prop(&mut rng, sz)))
+        };
+        if let Err(payload) = run(size) {
+            // Shrink: find the smallest size (same seed) that still fails.
+            let mut smallest = size;
+            let mut last_payload = payload;
+            for sz in min_size..size {
+                match run(sz) {
+                    Err(p) => {
+                        smallest = sz;
+                        last_payload = p;
+                        break;
+                    }
+                    Ok(()) => continue,
+                }
+            }
+            let msg = panic_message(&last_payload);
+            panic!(
+                "property '{name}' failed on case {case}/{cases} at size {smallest} \
+                 (replay seed: {seed:#x})\n  cause: {msg}"
+            );
+        }
+    }
+}
+
+fn hash_name(name: &str) -> u64 {
+    // FNV-1a, enough to decorrelate property streams by name.
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+fn panic_message(payload: &Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        s.to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic payload>".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", 50, |rng| {
+            let a = rng.below(1000);
+            let b = rng.below(1000);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            check("always-fails", 3, |_rng| panic!("boom"));
+        }));
+        let msg = panic_message(&r.unwrap_err());
+        assert!(msg.contains("replay seed"), "got: {msg}");
+        assert!(msg.contains("boom"), "got: {msg}");
+    }
+
+    #[test]
+    fn sized_property_shrinks() {
+        // Fails for any size >= 5; shrinker should report size 5.
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            check_sized("size-ge-5", 50, 1, 20, |_rng, size| {
+                assert!(size < 5, "size too big");
+            });
+        }));
+        let msg = panic_message(&r.unwrap_err());
+        assert!(msg.contains("at size 5"), "got: {msg}");
+    }
+
+    #[test]
+    fn replay_reproduces_stream() {
+        let mut first = Vec::new();
+        replay(0xDEAD, |rng| {
+            for _ in 0..5 {
+                first.push(rng.next_u64());
+            }
+        });
+        let mut second = Vec::new();
+        replay(0xDEAD, |rng| {
+            for _ in 0..5 {
+                second.push(rng.next_u64());
+            }
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,227 @@
+//! Small statistics helpers shared by the bench harness and the coordinator
+//! metrics (mean/stddev, percentiles, simple linear fits for calibration).
+
+/// Arithmetic mean of a sample. Returns 0.0 for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (n-1 denominator). Returns 0.0 for n < 2.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    let var = xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64;
+    var.sqrt()
+}
+
+/// Minimum of a sample; 0.0 when empty.
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::INFINITY, f64::min).min(f64::INFINITY)
+        .pipe_finite()
+}
+
+/// Maximum of a sample; 0.0 when empty.
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max).pipe_finite()
+}
+
+trait PipeFinite {
+    fn pipe_finite(self) -> f64;
+}
+
+impl PipeFinite for f64 {
+    fn pipe_finite(self) -> f64 {
+        if self.is_finite() {
+            self
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Percentile via linear interpolation on the sorted sample (`p` in [0,100]).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut sorted: Vec<f64> = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = rank - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Median (p50).
+pub fn median(xs: &[f64]) -> f64 {
+    percentile(xs, 50.0)
+}
+
+/// Online latency histogram for the serving coordinator: fixed log-spaced
+/// buckets from 1µs to ~67s, O(1) record, approximate percentiles.
+#[derive(Clone, Debug)]
+pub struct LatencyHist {
+    buckets: Vec<u64>,
+    count: u64,
+    sum_us: f64,
+    max_us: f64,
+}
+
+impl Default for LatencyHist {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHist {
+    const NBUCKETS: usize = 64; // bucket i covers [2^(i/2.46)...] — log spaced
+
+    pub fn new() -> Self {
+        LatencyHist { buckets: vec![0; Self::NBUCKETS], count: 0, sum_us: 0.0, max_us: 0.0 }
+    }
+
+    fn bucket_of(us: f64) -> usize {
+        if us <= 1.0 {
+            return 0;
+        }
+        // ~3.9 buckets per decade across 1µs..67s.
+        let idx = (us.log2() * 2.46).floor() as usize;
+        idx.min(Self::NBUCKETS - 1)
+    }
+
+    fn bucket_upper(i: usize) -> f64 {
+        2f64.powf((i + 1) as f64 / 2.46)
+    }
+
+    pub fn record_us(&mut self, us: f64) {
+        self.buckets[Self::bucket_of(us)] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        if us > self.max_us {
+            self.max_us = us;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_us(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_us / self.count as f64
+        }
+    }
+
+    pub fn max_us(&self) -> f64 {
+        self.max_us
+    }
+
+    /// Approximate percentile: upper edge of the bucket holding the p-th
+    /// sample.
+    pub fn percentile_us(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= target {
+                return Self::bucket_upper(i).min(self.max_us.max(1.0));
+            }
+        }
+        self.max_us
+    }
+}
+
+/// Least-squares fit y = a + b*x; returns (a, b). Used to calibrate the MCU
+/// cycle model against reference timing points.
+pub fn linear_fit(xs: &[f64], ys: &[f64]) -> (f64, f64) {
+    assert_eq!(xs.len(), ys.len());
+    let n = xs.len() as f64;
+    if xs.is_empty() {
+        return (0.0, 0.0);
+    }
+    let sx = xs.iter().sum::<f64>();
+    let sy = ys.iter().sum::<f64>();
+    let sxx = xs.iter().map(|x| x * x).sum::<f64>();
+    let sxy = xs.iter().zip(ys).map(|(x, y)| x * y).sum::<f64>();
+    let denom = n * sxx - sx * sx;
+    if denom.abs() < 1e-12 {
+        return (mean(ys), 0.0);
+    }
+    let b = (n * sxy - sx * sy) / denom;
+    let a = (sy - b * sx) / n;
+    (a, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_stddev_basic() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((stddev(&xs) - 2.138089935).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_samples_are_zero() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(stddev(&[]), 0.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+        assert_eq!(min(&[]), 0.0);
+        assert_eq!(max(&[]), 0.0);
+    }
+
+    #[test]
+    fn percentiles_interpolate() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
+        assert!((median(&xs) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn latency_hist_percentiles_ordered() {
+        let mut h = LatencyHist::new();
+        for i in 1..=1000 {
+            h.record_us(i as f64);
+        }
+        let p50 = h.percentile_us(50.0);
+        let p99 = h.percentile_us(99.0);
+        assert!(p50 <= p99, "p50={p50} p99={p99}");
+        assert!(p50 > 300.0 && p50 < 900.0, "p50={p50}");
+        assert_eq!(h.count(), 1000);
+        assert!((h.mean_us() - 500.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn linear_fit_recovers_line() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        let ys = [3.0, 5.0, 7.0, 9.0]; // y = 1 + 2x
+        let (a, b) = linear_fit(&xs, &ys);
+        assert!((a - 1.0).abs() < 1e-9);
+        assert!((b - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn linear_fit_degenerate_x() {
+        let (a, b) = linear_fit(&[2.0, 2.0], &[1.0, 3.0]);
+        assert_eq!(b, 0.0);
+        assert!((a - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,95 @@
+//! Integration over the AOT artifacts: PJRT execution vs the
+//! micro-interpreter, and the serving coordinator on the PJRT engine.
+//!
+//! These tests need `make artifacts` to have run; they are skipped (with a
+//! message) when artifacts/ is absent so `cargo test` stays green in a
+//! fresh checkout.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use mcu_reorder::coordinator::{self, Coordinator, ServeConfig};
+use mcu_reorder::graph::DType;
+use mcu_reorder::interp::{ExecConfig, Interpreter, TensorData, WeightStore};
+use mcu_reorder::models;
+use mcu_reorder::runtime::Runtime;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("tiny.hlo.txt").exists().then_some(dir)
+}
+
+fn ramp(n: usize) -> Vec<f32> {
+    (0..n).map(|i| ((i % 17) as f32 - 8.0) / 8.0).collect()
+}
+
+macro_rules! need_artifacts {
+    () => {
+        match artifacts_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: run `make artifacts` first");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn pjrt_matches_interpreter_on_all_models() {
+    let dir = need_artifacts!();
+    let mut rt = Runtime::cpu().unwrap();
+    for name in ["tiny", "mobilenet", "swiftnet", "resnet"] {
+        if !dir.join(format!("{name}.hlo.txt")).exists() {
+            continue;
+        }
+        rt.load_artifact(name, &dir).unwrap();
+        let g = models::by_name(name, DType::F32).unwrap();
+        rt.get(name).unwrap().manifest.check_against(&g).unwrap();
+
+        let input = ramp(g.tensors[g.inputs[0]].elems());
+        let pjrt_out = rt.execute_f32(name, &[input.clone()]).unwrap();
+
+        let ws = WeightStore::seeded_f32(&g, 42);
+        let interp = Interpreter::new(&g, ws, ExecConfig::with_capacity(1 << 24));
+        let r = interp.run(&[TensorData::F32(input)]).unwrap();
+        let reference = r.outputs[0].as_f32().unwrap();
+
+        assert_eq!(pjrt_out[0].len(), reference.len(), "{name}");
+        for (a, b) in pjrt_out[0].iter().zip(reference) {
+            assert!((a - b).abs() < 1e-4, "{name}: pjrt={a} interp={b}");
+        }
+    }
+}
+
+#[test]
+fn pjrt_rejects_wrong_input_size() {
+    let dir = need_artifacts!();
+    let mut rt = Runtime::cpu().unwrap();
+    rt.load_artifact("tiny", &dir).unwrap();
+    assert!(rt.execute_f32("tiny", &[vec![0.0; 3]]).is_err());
+    assert!(rt.execute_f32("nope", &[vec![0.0; 128]]).is_err());
+}
+
+#[test]
+fn coordinator_serves_pjrt_engine() {
+    let dir = need_artifacts!();
+    let factory = coordinator::pjrt_engine_factory("tiny".into(), dir);
+    let c = Arc::new(
+        Coordinator::start(ServeConfig { workers: 2, ..Default::default() }, factory).unwrap(),
+    );
+    let g = models::tiny_cnn(DType::F32);
+    let input = ramp(g.tensors[g.inputs[0]].elems());
+    let mut rxs = Vec::new();
+    for _ in 0..32 {
+        rxs.push(c.submit(input.clone()).unwrap());
+    }
+    for rx in rxs {
+        let out = rx.recv().unwrap().unwrap();
+        assert_eq!(out.len(), 3);
+        assert!((out.iter().sum::<f32>() - 1.0).abs() < 1e-4);
+    }
+    let m = c.metrics();
+    assert_eq!(m.completed, 32);
+    assert!(m.p99_e2e_us >= m.p50_e2e_us);
+}

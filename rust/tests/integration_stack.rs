@@ -1,0 +1,191 @@
+//! Cross-layer integration tests that do not need AOT artifacts:
+//! scheduler ↔ allocator ↔ interpreter ↔ model zoo ↔ serde ↔ mcu model.
+
+use mcu_reorder::alloc::StaticPlan;
+use mcu_reorder::graph::serde::ModelFile;
+use mcu_reorder::graph::DType;
+use mcu_reorder::interp::{calibrate, ExecConfig, Interpreter, TensorData, WeightStore};
+use mcu_reorder::mcu::{CostModel, DeployReport, OverheadModel, NUCLEO_F767ZI};
+use mcu_reorder::models;
+use mcu_reorder::sched;
+use mcu_reorder::util::prop;
+use mcu_reorder::util::rng::Rng;
+
+fn ramp(n: usize) -> Vec<f32> {
+    (0..n).map(|i| ((i % 17) as f32 - 8.0) / 8.0).collect()
+}
+
+/// Paper Figure 2 + Figure 3: the full working-set tables byte-for-byte.
+#[test]
+fn appendix_a_tables_reproduce() {
+    let g = models::figure1();
+    let fig2 = sched::simulate(&g, &g.default_order());
+    assert_eq!(
+        fig2.steps.iter().map(|s| s.bytes).collect::<Vec<_>>(),
+        vec![4704, 4704, 5216, 4160, 1280, 1024, 1024]
+    );
+    let fig3 = sched::simulate(&g, &[0, 3, 5, 1, 2, 4, 6]);
+    assert_eq!(
+        fig3.steps.iter().map(|s| s.bytes).collect::<Vec<_>>(),
+        vec![4704, 3648, 3904, 4960, 2336, 1024, 1024]
+    );
+    let (opt, _) = sched::optimal(&g).unwrap();
+    assert_eq!(opt.peak_bytes, 4960);
+}
+
+/// Full tool flow: zoo model → optimize → embed order → reload → the
+/// embedded order beats the default in the interpreter's real arena.
+#[test]
+fn optimize_embed_reload_execute() {
+    let g = models::swiftnet_cell(DType::I8);
+    let (opt, _) = sched::optimal(&g).unwrap();
+    let mf = ModelFile { graph: g, execution_order: Some(opt.order.clone()) };
+    let json = mf.to_json();
+    let back = ModelFile::from_json(&json).unwrap();
+    assert_eq!(back.effective_order(), opt.order);
+    let peak_embedded = sched::peak_of(&back.graph, &back.effective_order());
+    let peak_default = sched::peak_of(&back.graph, &back.graph.default_order());
+    assert!(peak_embedded < peak_default);
+    assert_eq!(peak_embedded, 304_128);
+}
+
+/// The paper's deployment story end-to-end on the arena: with 512KB SRAM
+/// minus framework overhead, the default order OOMs and the optimal order
+/// completes (f32 execution at i8-scaled arena budget).
+#[test]
+fn swiftnet_arena_oom_vs_fit() {
+    // Execute the f32 graph but give the arena exactly the i8 budget × 4
+    // (f32 tensors are 4× the i8 accounting).
+    let g = models::swiftnet_cell(DType::F32);
+    let overhead = OverheadModel::default().bytes(&models::swiftnet_cell(DType::I8));
+    let budget_i8 = NUCLEO_F767ZI.sram_bytes - overhead;
+    let arena = budget_i8 * 4;
+    let ws = WeightStore::seeded_f32(&g, 42);
+    let input = TensorData::F32(ramp(g.tensors[g.inputs[0]].elems()));
+
+    let default = Interpreter::new(&g, ws.clone(), ExecConfig::with_capacity(arena))
+        .run(&[input.clone()]);
+    assert!(default.is_err(), "default order should exceed the SRAM budget");
+
+    let (opt, _) = sched::optimal(&g).unwrap();
+    let cfg = ExecConfig { order: Some(opt.order), ..ExecConfig::with_capacity(arena) };
+    let optimal = Interpreter::new(&g, ws, cfg).run(&[input]).unwrap();
+    assert_eq!(optimal.outputs[0].as_f32().unwrap().len(), 2);
+}
+
+/// Reordering never changes numerics: for random branchy graphs, every
+/// valid execution order produces identical bytes.
+#[test]
+fn reordering_is_output_invariant() {
+    prop::check_sized("order-invariance", 25, 4, 9, |rng, n| {
+        let g = models::synth::random_dag(rng, n);
+        let input = TensorData::U8((0..g.tensors[g.inputs[0]].elems())
+            .map(|i| (i % 251) as u8)
+            .collect());
+        let ws = WeightStore::default();
+        let base = Interpreter::new(&g, ws.clone(), ExecConfig::with_capacity(1 << 22))
+            .run(&[input.clone()])
+            .unwrap();
+        let (opt, _) = sched::optimal(&g).unwrap();
+        let cfg = ExecConfig { order: Some(opt.order), ..ExecConfig::with_capacity(1 << 22) };
+        let reordered = Interpreter::new(&g, ws, cfg).run(&[input]).unwrap();
+        assert_eq!(base.outputs, reordered.outputs);
+        assert!(reordered.alloc.high_water <= base.alloc.high_water);
+    });
+}
+
+/// Arena high-water equals the analytic scheduler peak for every zoo model
+/// and both orders (the accounting and the allocator agree byte-for-byte).
+#[test]
+fn arena_matches_analytics_across_zoo() {
+    for name in ["tiny", "mobilenet", "swiftnet", "resnet"] {
+        let g = models::by_name(name, DType::F32).unwrap();
+        let ws = WeightStore::seeded_f32(&g, 1);
+        let input = TensorData::F32(ramp(g.tensors[g.inputs[0]].elems()));
+        for order in [g.default_order(), sched::optimal(&g).unwrap().0.order] {
+            let analytic = sched::peak_of(&g, &order);
+            let cfg = ExecConfig { order: Some(order), ..ExecConfig::with_capacity(1 << 24) };
+            let run = Interpreter::new(&g, ws.clone(), cfg).run(&[input.clone()]).unwrap();
+            assert_eq!(run.alloc.high_water, analytic, "{name}");
+        }
+    }
+}
+
+/// Table 1 MobileNet memory cells + overhead model + deploy verdicts.
+#[test]
+fn table1_memory_cells() {
+    let mnet = models::mobilenet_v1_025(DType::I8);
+    assert_eq!(StaticPlan::no_reuse(&mnet).arena_bytes, 241_028);
+    assert_eq!(sched::peak_of(&mnet, &mnet.default_order()), 55_296);
+
+    let swift = models::swiftnet_cell(DType::I8);
+    let d = sched::peak_of(&swift, &swift.default_order());
+    let (o, _) = sched::optimal(&swift).unwrap();
+    let ov = OverheadModel::default();
+    assert!(!DeployReport::new(&swift, d, &NUCLEO_F767ZI, &ov).fits_sram);
+    assert!(DeployReport::new(&swift, o.peak_bytes, &NUCLEO_F767ZI, &ov).fits_sram);
+}
+
+/// Table 1 time/energy overhead: the defrag traffic measured on the real
+/// arena run keeps both overheads under 1.5% (paper: +0.68% / +0.97%).
+#[test]
+fn table1_overheads_under_1_5_percent() {
+    let mnet_i8 = models::mobilenet_v1_025(DType::I8);
+    let g_f32 = models::mobilenet_v1_025(DType::F32);
+    let ws_f32 = WeightStore::seeded_f32(&g_f32, 42);
+    let input = TensorData::F32(ramp(g_f32.tensors[g_f32.inputs[0]].elems()));
+    let ranges = calibrate(&g_f32, &ws_f32, &[input.clone()], 1 << 24).unwrap();
+    let ws_i8 = WeightStore::quantize_from(&mnet_i8, &ws_f32, &ranges);
+    let in_q = ws_i8.qparams[&mnet_i8.inputs[0]];
+    let qin = TensorData::I8(in_q.quantize(input.as_f32().unwrap()));
+    let run = Interpreter::new(&mnet_i8, ws_i8, ExecConfig::with_capacity(256 * 1024))
+        .run(&[qin])
+        .unwrap();
+    assert!(run.alloc.bytes_moved > 0, "compaction should move something");
+
+    let mut static_stats = mcu_reorder::alloc::AllocStats::default();
+    static_stats.high_water = mnet_i8.activation_total();
+    let model = CostModel::calibrated(&mnet_i8, &static_stats, &NUCLEO_F767ZI, 1.316, 728.0);
+    let st = model.estimate(&mnet_i8, &static_stats, &NUCLEO_F767ZI);
+    let dy = model.estimate(&mnet_i8, &run.alloc, &NUCLEO_F767ZI);
+    let dt = dy.seconds / st.seconds - 1.0;
+    let de = dy.energy_mj / st.energy_mj - 1.0;
+    assert!(dt > 0.0 && dt < 0.015, "time overhead {dt}");
+    assert!(de > dt && de < 0.015, "energy overhead {de}");
+}
+
+/// Offline best-fit planning (§6) removes the need for run-time compaction
+/// while staying within ~the working-set peak.
+#[test]
+fn offline_plan_close_to_peak_on_zoo() {
+    for name in ["tiny", "mobilenet", "swiftnet", "resnet"] {
+        let g = models::by_name(name, DType::I8).unwrap();
+        let (opt, _) = sched::optimal(&g).unwrap();
+        let plan = StaticPlan::best_fit(&g, &opt.order);
+        plan.check_no_overlap(&g, &opt.order).unwrap();
+        let peak = opt.peak_bytes;
+        assert!(plan.arena_bytes >= peak);
+        assert!(
+            plan.arena_bytes <= peak + peak / 3,
+            "{name}: plan {} vs peak {peak}",
+            plan.arena_bytes
+        );
+    }
+}
+
+/// Random-graph fuzz of the whole pipeline: schedule, plan, execute.
+#[test]
+fn pipeline_fuzz() {
+    let mut rng = Rng::new(0xABCD);
+    for _ in 0..15 {
+        let g = models::synth::series_parallel(&mut rng, 3, 2);
+        let (opt, _) = sched::optimal(&g).unwrap();
+        g.check_order(&opt.order).unwrap();
+        let plan = StaticPlan::best_fit(&g, &opt.order);
+        plan.check_no_overlap(&g, &opt.order).unwrap();
+        let input = TensorData::U8(vec![7; g.tensors[g.inputs[0]].elems()]);
+        let cfg = ExecConfig { order: Some(opt.order), ..ExecConfig::with_capacity(1 << 22) };
+        let run = Interpreter::new(&g, WeightStore::default(), cfg).run(&[input]).unwrap();
+        assert_eq!(run.alloc.high_water, opt.peak_bytes);
+    }
+}
