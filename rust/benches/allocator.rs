@@ -10,7 +10,7 @@ use mcu_reorder::graph::{DType, Graph};
 use mcu_reorder::mcu::{CostModel, NUCLEO_F767ZI};
 use mcu_reorder::models;
 use mcu_reorder::sched;
-use mcu_reorder::util::bench::{black_box, Bencher, Table};
+use mcu_reorder::util::bench::{black_box, write_json_report, Bencher, Table};
 
 /// Replay a schedule's alloc/free pattern through an arena (no kernel
 /// execution — pure allocator behaviour).
@@ -144,4 +144,14 @@ fn main() {
     let sorder = sched::optimal(&swift).unwrap().0.order;
     b.bench("planner/best-fit-swiftnet", || black_box(StaticPlan::best_fit(&swift, &sorder)));
     b.summary();
+
+    let metrics = vec![
+        ("mobilenet_static_bytes".to_string(), g.activation_total() as f64),
+        ("mobilenet_peak".to_string(), peak as f64),
+        ("mobilenet_bestfit_bytes".to_string(), plan.arena_bytes as f64),
+    ];
+    match write_json_report("allocator", &metrics, b.results()) {
+        Ok(p) => println!("\nwrote {p}"),
+        Err(e) => eprintln!("could not write JSON report: {e}"),
+    }
 }

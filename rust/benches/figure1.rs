@@ -6,7 +6,7 @@
 
 use mcu_reorder::models;
 use mcu_reorder::sched;
-use mcu_reorder::util::bench::{black_box, Bencher, Table};
+use mcu_reorder::util::bench::{black_box, write_json_report, Bencher, Table};
 
 fn main() {
     let g = models::figure1();
@@ -38,4 +38,16 @@ fn main() {
     b.bench("figure1/optimal-bnb", || black_box(sched::optimal_bnb(&g).unwrap()));
     b.bench("figure1/bruteforce", || black_box(sched::bruteforce(&g, usize::MAX).unwrap()));
     b.summary();
+
+    let metrics = vec![
+        ("default_peak".to_string(), fig2.peak_bytes as f64),
+        ("optimal_peak".to_string(), fig3.peak_bytes as f64),
+        ("worst_peak".to_string(), bf.worst.peak_bytes as f64),
+        ("orders_enumerated".to_string(), bf.orders_enumerated as f64),
+        ("dp_states".to_string(), stats.states as f64),
+    ];
+    match write_json_report("figure1", &metrics, b.results()) {
+        Ok(p) => println!("\nwrote {p}"),
+        Err(e) => eprintln!("could not write JSON report: {e}"),
+    }
 }

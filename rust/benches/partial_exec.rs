@@ -1,0 +1,97 @@
+//! Bench: partial execution (spatial operator splitting) composed with
+//! operator reordering across the model zoo.
+//!
+//! For every model: peak SRAM under (a) the as-built default order, (b)
+//! reorder-only (Algorithm 1 — the paper's result), (c) split-only (the
+//! split graph in its as-built order), and (d) split+reorder (the full
+//! co-optimization). Also reports the halo-recompute overhead the split
+//! pays. Results are written machine-readably to `BENCH_partial_exec.json`
+//! so the trajectory is tracked across PRs.
+
+use mcu_reorder::graph::{DType, Graph};
+use mcu_reorder::mcu::{CostModel, SplitOverhead, NUCLEO_F767ZI};
+use mcu_reorder::models;
+use mcu_reorder::sched;
+use mcu_reorder::split::{self, SplitOptions};
+use mcu_reorder::util::bench::{black_box, write_json_report, Bencher, Table};
+use mcu_reorder::util::rng::Rng;
+
+fn main() {
+    let mut zoo: Vec<(String, Graph)> = vec![
+        ("figure1".into(), models::figure1()),
+        ("mobilenet".into(), models::mobilenet_v1_025(DType::I8)),
+        ("swiftnet".into(), models::swiftnet_cell(DType::I8)),
+        ("resnet".into(), models::resnet_micro(DType::I8)),
+        ("tiny".into(), models::tiny_cnn(DType::I8)),
+    ];
+    // Synthetic DAGs: their operators are cost-model nodes without spatial
+    // shape, so splitting cannot apply — they are included to show the
+    // search degrades gracefully to reorder-only, not to flatter it.
+    let mut rng = Rng::new(2025);
+    for i in 0..2 {
+        zoo.push((format!("synth-sp{i}"), models::synth::series_parallel(&mut rng, 3, 2)));
+    }
+
+    let opts = SplitOptions::default();
+    let cost = CostModel::cortex_m7_reference();
+    let kb = |b: usize| format!("{:.1}KB", b as f64 / 1000.0);
+    let mut table = Table::new(&[
+        "model",
+        "default",
+        "reorder-only",
+        "split-only",
+        "split+reorder",
+        "vs reorder",
+        "recompute",
+    ]);
+    let mut metrics: Vec<(String, f64)> = Vec::new();
+
+    for (name, g) in &zoo {
+        let default_peak = sched::peak_of(g, &g.default_order());
+        let outcome = split::optimize(g, &opts).expect("split search");
+        let reorder_peak = outcome.base_peak;
+        let split_only = sched::peak_of(&outcome.graph, &outcome.graph.default_order());
+        let both = outcome.schedule.peak_bytes;
+        let ov = SplitOverhead::measure(&cost, g, &outcome.graph, &NUCLEO_F767ZI);
+        let saving = 100.0 * (1.0 - both as f64 / reorder_peak as f64);
+        table.row(&[
+            name.clone(),
+            kb(default_peak),
+            kb(reorder_peak),
+            kb(split_only),
+            kb(both),
+            format!("-{saving:.1}%"),
+            format!("+{:.1}% MACs", 100.0 * ov.recompute_frac()),
+        ]);
+        for (key, v) in [
+            ("default_peak", default_peak as f64),
+            ("reorder_peak", reorder_peak as f64),
+            ("split_only_peak", split_only as f64),
+            ("split_reorder_peak", both as f64),
+            ("segments", outcome.steps.len() as f64),
+            ("recompute_frac", ov.recompute_frac()),
+        ] {
+            metrics.push((format!("{name}.{key}"), v));
+        }
+    }
+    println!("=== partial execution × reordering: peak SRAM ===\n");
+    table.print();
+    println!("\n(reorder-only = the paper's Algorithm 1; split+reorder breaks its single-operator floor)");
+
+    // Timings of the search itself.
+    let mut bch = Bencher::quick();
+    let mnet = models::mobilenet_v1_025(DType::I8);
+    let swift = models::swiftnet_cell(DType::I8);
+    bch.bench("partial_exec/mobilenet-split-search", || {
+        black_box(split::optimize(&mnet, &SplitOptions::quick()).unwrap())
+    });
+    bch.bench("partial_exec/swiftnet-split-search", || {
+        black_box(split::optimize(&swift, &SplitOptions::quick()).unwrap())
+    });
+    bch.summary();
+
+    match write_json_report("partial_exec", &metrics, bch.results()) {
+        Ok(p) => println!("\nwrote {p}"),
+        Err(e) => eprintln!("could not write JSON report: {e}"),
+    }
+}

@@ -9,7 +9,7 @@
 
 use mcu_reorder::models::synth;
 use mcu_reorder::sched;
-use mcu_reorder::util::bench::{black_box, Bencher, Table};
+use mcu_reorder::util::bench::{black_box, write_json_report, Bencher, Table};
 use mcu_reorder::util::rng::Rng;
 use mcu_reorder::util::stats;
 
@@ -102,4 +102,13 @@ fn main() {
     let mnet = mcu_reorder::models::mobilenet_v1_025(DType::I8);
     b.bench("optimal-dp/mobilenet (30 ops)", || black_box(sched::optimal(&mnet).unwrap()));
     b.summary();
+
+    let metrics = vec![
+        ("default_gap_mean".to_string(), stats::mean(&gaps_default)),
+        ("greedy_gap_mean".to_string(), stats::mean(&gaps_greedy)),
+    ];
+    match write_json_report("scheduler_scaling", &metrics, b.results()) {
+        Ok(p) => println!("\nwrote {p}"),
+        Err(e) => eprintln!("could not write JSON report: {e}"),
+    }
 }

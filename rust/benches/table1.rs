@@ -12,7 +12,7 @@ use mcu_reorder::interp::{calibrate, ExecConfig, Interpreter, TensorData, Weight
 use mcu_reorder::mcu::{CostModel, DeployReport, OverheadModel, NUCLEO_F767ZI};
 use mcu_reorder::models;
 use mcu_reorder::sched;
-use mcu_reorder::util::bench::{black_box, Bencher, Table};
+use mcu_reorder::util::bench::{black_box, write_json_report, Bencher, Table};
 
 fn ramp(n: usize) -> Vec<f32> {
     (0..n).map(|i| ((i % 17) as f32 - 8.0) / 8.0).collect()
@@ -97,4 +97,20 @@ fn main() {
         black_box(interp.run(std::slice::from_ref(&qin)).unwrap())
     });
     b.summary();
+
+    let metrics = vec![
+        ("swiftnet_default_peak".to_string(), swift_default as f64),
+        ("swiftnet_optimal_peak".to_string(), swift_opt.peak_bytes as f64),
+        ("mobilenet_static_bytes".to_string(), static_bytes as f64),
+        ("mobilenet_dynamic_peak".to_string(), run.alloc.high_water as f64),
+        ("mobilenet_time_overhead".to_string(), est_dyn.seconds / est_static.seconds - 1.0),
+        (
+            "mobilenet_energy_overhead".to_string(),
+            est_dyn.energy_mj / est_static.energy_mj - 1.0,
+        ),
+    ];
+    match write_json_report("table1", &metrics, b.results()) {
+        Ok(p) => println!("\nwrote {p}"),
+        Err(e) => eprintln!("could not write JSON report: {e}"),
+    }
 }

@@ -26,7 +26,7 @@ use std::sync::{mpsc, Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use crate::util::error::{anyhow, Result};
 
 use crate::util::stats::LatencyHist;
 

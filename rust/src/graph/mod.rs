@@ -139,6 +139,21 @@ pub enum OpKind {
     /// Synthetic operator for generated DAGs: pure cost-model node with an
     /// explicit MAC count; executes as identity-ish mix in the interpreter.
     Synthetic { macs: u64 },
+    /// Row-slab partial evaluation of a spatial operator — emitted by the
+    /// [`crate::split`] subsystem, never by converters. Computes a
+    /// contiguous band of `inner`'s output from a matching input slab.
+    /// `pad_top` is the slab's effective vertical padding (negative when
+    /// the slab stores rows above the band's first tap, i.e. the slab is
+    /// the full unsliced input of the chain head); horizontal padding
+    /// follows `inner`. For a split `Dense`, `offset` is the band's first
+    /// output feature; for spatial ops it records the band's first output
+    /// row (introspection/serde only).
+    Partial { inner: Box<OpKind>, pad_top: isize, offset: usize },
+    /// Concatenation along the row (H) axis: joins the row slabs of a
+    /// split back into the full tensor. Slabs are stacked in input order;
+    /// for 2-D `[1, n]` bands (split `Dense`) this degenerates to last-axis
+    /// concatenation. All inputs must share the output's quantization.
+    ConcatRows,
 }
 
 impl OpKind {
@@ -158,6 +173,8 @@ impl OpKind {
             OpKind::Softmax => "Softmax",
             OpKind::Reshape => "Reshape",
             OpKind::Synthetic { .. } => "Synthetic",
+            OpKind::Partial { .. } => "Partial",
+            OpKind::ConcatRows => "ConcatRows",
         }
     }
 }
@@ -230,8 +247,30 @@ impl Op {
                 out_elems * (*kh as u64) * (*kw as u64)
             }
             OpKind::GlobalAvgPool => g.tensors[self.inputs[0]].elems() as u64,
-            OpKind::Concat | OpKind::Reshape => 0,
+            OpKind::Concat | OpKind::Reshape | OpKind::ConcatRows => 0,
             OpKind::Synthetic { macs } => *macs,
+            // A partial op costs what its band costs; halo overlap between
+            // slices shows up naturally as the sum over slice ops
+            // exceeding the unsplit op's MACs (recompute overhead).
+            OpKind::Partial { inner, .. } => match inner.as_ref() {
+                OpKind::Conv2D { kernel: (kh, kw), .. } => {
+                    let cin =
+                        g.tensors[self.inputs[0]].shape.last().copied().unwrap_or(1) as u64;
+                    out_elems * (*kh as u64) * (*kw as u64) * cin
+                }
+                OpKind::DepthwiseConv2D { kernel: (kh, kw), .. } => {
+                    out_elems * (*kh as u64) * (*kw as u64)
+                }
+                OpKind::Dense { .. } => {
+                    let cin = g.tensors[self.inputs[0]].elems() as u64;
+                    out_elems * cin
+                }
+                OpKind::MaxPool2D { kernel: (kh, kw), .. }
+                | OpKind::AvgPool2D { kernel: (kh, kw), .. } => {
+                    out_elems * (*kh as u64) * (*kw as u64)
+                }
+                _ => out_elems,
+            },
         }
     }
 

@@ -103,6 +103,13 @@ fn kind_to_json(kind: &OpKind) -> (String, Json) {
         OpKind::Synthetic { macs } => {
             attrs.insert("macs".into(), Json::Num(*macs as f64));
         }
+        OpKind::Partial { inner, pad_top, offset } => {
+            let (inner_kind, inner_attrs) = kind_to_json(inner);
+            attrs.insert("inner_kind".into(), Json::Str(inner_kind));
+            attrs.insert("inner_attrs".into(), inner_attrs);
+            attrs.insert("pad_top".into(), Json::Num(*pad_top as f64));
+            attrs.insert("offset".into(), Json::Num(*offset as f64));
+        }
         _ => {}
     }
     (name, Json::Obj(attrs))
@@ -153,6 +160,20 @@ fn kind_from_json(name: &str, attrs: &Json) -> Result<OpKind, String> {
             let macs = attrs.get("macs").as_f64().unwrap_or(0.0) as u64;
             Ok(OpKind::Synthetic { macs })
         }
+        "Partial" => {
+            let inner_kind = attrs
+                .get("inner_kind")
+                .as_str()
+                .ok_or_else(|| "Partial missing inner_kind".to_string())?;
+            if inner_kind == "Partial" {
+                return Err("Partial ops do not nest".into());
+            }
+            let inner = kind_from_json(inner_kind, attrs.get("inner_attrs"))?;
+            let pad_top = attrs.get("pad_top").as_f64().unwrap_or(0.0) as isize;
+            let offset = attrs.get("offset").as_f64().unwrap_or(0.0) as usize;
+            Ok(OpKind::Partial { inner: Box::new(inner), pad_top, offset })
+        }
+        "ConcatRows" => Ok(OpKind::ConcatRows),
         other => Err(format!("unknown op kind {other:?}")),
     }
 }

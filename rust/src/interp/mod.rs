@@ -509,6 +509,97 @@ impl<'g> Interpreter<'g> {
                     OpKind::Synthetic { .. } => {
                         return Err(ExecError::Unsupported("synthetic op with f32 dtype".into()))
                     }
+                    OpKind::Partial { inner, pad_top, offset } => match inner.as_ref() {
+                        OpKind::Conv2D { kernel, stride, padding, act } => {
+                            fused_act = *act;
+                            let ish = Hwc::from_shape(&in0_t.unwrap().shape);
+                            let osh = Hwc::from_shape(&out_t.shape);
+                            let pad_x =
+                                ops::pad_amounts(ish.w, kernel.1, stride.1, *padding, osh.w)
+                                    as isize;
+                            ops::conv2d_with_pads(
+                                xs[0],
+                                ish,
+                                self.weights.f32_of(op.weights[0]),
+                                self.weights.f32_of(op.weights[1]),
+                                &mut out,
+                                osh,
+                                *kernel,
+                                *stride,
+                                *pad_top,
+                                pad_x,
+                            );
+                        }
+                        OpKind::DepthwiseConv2D { kernel, stride, padding, act } => {
+                            fused_act = *act;
+                            let ish = Hwc::from_shape(&in0_t.unwrap().shape);
+                            let osh = Hwc::from_shape(&out_t.shape);
+                            let pad_x =
+                                ops::pad_amounts(ish.w, kernel.1, stride.1, *padding, osh.w)
+                                    as isize;
+                            ops::dwconv2d_with_pads(
+                                xs[0],
+                                ish,
+                                self.weights.f32_of(op.weights[0]),
+                                self.weights.f32_of(op.weights[1]),
+                                &mut out,
+                                osh,
+                                *kernel,
+                                *stride,
+                                *pad_top,
+                                pad_x,
+                            );
+                        }
+                        OpKind::MaxPool2D { kernel, stride, padding } => {
+                            let ish = Hwc::from_shape(&in0_t.unwrap().shape);
+                            let osh = Hwc::from_shape(&out_t.shape);
+                            let pad_x =
+                                ops::pad_amounts(ish.w, kernel.1, stride.1, *padding, osh.w)
+                                    as isize;
+                            ops::maxpool2d_with_pads(
+                                xs[0], ish, &mut out, osh, *kernel, *stride, *pad_top, pad_x,
+                            );
+                        }
+                        OpKind::AvgPool2D { kernel, stride, padding } => {
+                            let ish = Hwc::from_shape(&in0_t.unwrap().shape);
+                            let osh = Hwc::from_shape(&out_t.shape);
+                            let pad_x =
+                                ops::pad_amounts(ish.w, kernel.1, stride.1, *padding, osh.w)
+                                    as isize;
+                            ops::avgpool2d_with_pads(
+                                xs[0], ish, &mut out, osh, *kernel, *stride, *pad_top, pad_x,
+                            );
+                        }
+                        OpKind::Dense { act } => {
+                            fused_act = *act;
+                            let n_cols = g.tensors[op.weights[0]].shape[1];
+                            ops::dense_cols(
+                                xs[0],
+                                self.weights.f32_of(op.weights[0]),
+                                self.weights.f32_of(op.weights[1]),
+                                &mut out,
+                                *offset,
+                                n_cols,
+                            );
+                        }
+                        other => {
+                            return Err(ExecError::Unsupported(format!(
+                                "partial {} (f32)",
+                                other.name()
+                            )))
+                        }
+                    },
+                    // Row slabs are contiguous NHWC bands, so stacking them
+                    // along H is a flat append in input order (also covers
+                    // the 2-D dense-band case).
+                    OpKind::ConcatRows => {
+                        let mut cursor = 0usize;
+                        for x in &xs {
+                            out[cursor..cursor + x.len()].copy_from_slice(x);
+                            cursor += x.len();
+                        }
+                        debug_assert_eq!(cursor, out.len(), "concat-rows size mismatch");
+                    }
                 }
                 match fused_act {
                     Act::Linear => {}
@@ -635,6 +726,96 @@ impl<'g> Interpreter<'g> {
                     OpKind::Reshape => out.copy_from_slice(xs[0]),
                     OpKind::Synthetic { .. } => {
                         return Err(ExecError::Unsupported("synthetic op with i8 dtype".into()))
+                    }
+                    OpKind::Partial { inner, pad_top, offset } => match inner.as_ref() {
+                        OpKind::Conv2D { kernel, stride, padding, act } => {
+                            fused_act = *act;
+                            let ish = Hwc::from_shape(&in0_t.unwrap().shape);
+                            let osh = Hwc::from_shape(&out_t.shape);
+                            let pad_x =
+                                ops::pad_amounts(ish.w, kernel.1, stride.1, *padding, osh.w)
+                                    as isize;
+                            quant::conv2d_i8_with_pads(
+                                xs[0],
+                                ish,
+                                self.qp(op.inputs[0]),
+                                self.weights.i8_of(op.weights[0]),
+                                self.qp(op.weights[0]).scale,
+                                self.weights.i32_of(op.weights[1]),
+                                &mut out,
+                                osh,
+                                out_q,
+                                *kernel,
+                                *stride,
+                                *pad_top,
+                                pad_x,
+                            );
+                        }
+                        OpKind::DepthwiseConv2D { kernel, stride, padding, act } => {
+                            fused_act = *act;
+                            let ish = Hwc::from_shape(&in0_t.unwrap().shape);
+                            let osh = Hwc::from_shape(&out_t.shape);
+                            let pad_x =
+                                ops::pad_amounts(ish.w, kernel.1, stride.1, *padding, osh.w)
+                                    as isize;
+                            quant::dwconv2d_i8_with_pads(
+                                xs[0],
+                                ish,
+                                self.qp(op.inputs[0]),
+                                self.weights.i8_of(op.weights[0]),
+                                self.qp(op.weights[0]).scale,
+                                self.weights.i32_of(op.weights[1]),
+                                &mut out,
+                                osh,
+                                out_q,
+                                *kernel,
+                                *stride,
+                                *pad_top,
+                                pad_x,
+                            );
+                        }
+                        OpKind::MaxPool2D { kernel, stride, padding } => {
+                            let ish = Hwc::from_shape(&in0_t.unwrap().shape);
+                            let osh = Hwc::from_shape(&out_t.shape);
+                            let pad_x =
+                                ops::pad_amounts(ish.w, kernel.1, stride.1, *padding, osh.w)
+                                    as isize;
+                            quant::maxpool2d_i8_with_pads(
+                                xs[0], ish, &mut out, osh, *kernel, *stride, *pad_top, pad_x,
+                            );
+                        }
+                        OpKind::Dense { act } => {
+                            fused_act = *act;
+                            let n_cols = g.tensors[op.weights[0]].shape[1];
+                            quant::dense_cols_i8(
+                                xs[0],
+                                self.qp(op.inputs[0]),
+                                self.weights.i8_of(op.weights[0]),
+                                self.qp(op.weights[0]).scale,
+                                self.weights.i32_of(op.weights[1]),
+                                &mut out,
+                                out_q,
+                                *offset,
+                                n_cols,
+                            );
+                        }
+                        other => {
+                            return Err(ExecError::Unsupported(format!(
+                                "partial {} (i8)",
+                                other.name()
+                            )))
+                        }
+                    },
+                    // The split subsystem gives every slab the qparams of
+                    // the tensor it is a band of, so stacking bands along H
+                    // is a flat copy — no requantization, bit-exact.
+                    OpKind::ConcatRows => {
+                        let mut cursor = 0usize;
+                        for x in &xs {
+                            out[cursor..cursor + x.len()].copy_from_slice(x);
+                            cursor += x.len();
+                        }
+                        debug_assert_eq!(cursor, out.len(), "concat-rows size mismatch");
                     }
                 }
                 match fused_act {

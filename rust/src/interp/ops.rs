@@ -59,6 +59,28 @@ pub fn conv2d(
     stride: (usize, usize),
     padding: Padding,
 ) {
+    let pad_y = pad_amounts(in_shape.h, kernel.0, stride.0, padding, out_shape.h) as isize;
+    let pad_x = pad_amounts(in_shape.w, kernel.1, stride.1, padding, out_shape.w) as isize;
+    conv2d_with_pads(input, in_shape, weights, bias, out, out_shape, kernel, stride, pad_y, pad_x);
+}
+
+/// [`conv2d`] with explicit padding offsets instead of a [`Padding`] mode.
+/// Out-of-bounds taps are skipped (zero padding). A negative `pad_y` shifts
+/// the tap window *down* into the input — how the split subsystem evaluates
+/// an output band against a taller input slab.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_with_pads(
+    input: &[f32],
+    in_shape: Hwc,
+    weights: &[f32],
+    bias: &[f32],
+    out: &mut [f32],
+    out_shape: Hwc,
+    kernel: (usize, usize),
+    stride: (usize, usize),
+    pad_y: isize,
+    pad_x: isize,
+) {
     let (kh, kw) = kernel;
     let (sh, sw) = stride;
     let cin = in_shape.c;
@@ -67,8 +89,6 @@ pub fn conv2d(
     debug_assert_eq!(weights.len(), kh * kw * cin * cout);
     debug_assert_eq!(bias.len(), cout);
     debug_assert_eq!(out.len(), out_shape.elems());
-    let pad_y = pad_amounts(in_shape.h, kh, sh, padding, out_shape.h);
-    let pad_x = pad_amounts(in_shape.w, kw, sw, padding, out_shape.w);
 
     // Perf pass (mirrors the i8 kernels): accumulator row per output pixel,
     // contiguous weight rows in the innermost loop.
@@ -77,12 +97,12 @@ pub fn conv2d(
         for ox in 0..out_shape.w {
             acc_row.copy_from_slice(bias);
             for ky in 0..kh {
-                let iy = (oy * sh + ky) as isize - pad_y as isize;
+                let iy = (oy * sh + ky) as isize - pad_y;
                 if iy < 0 || iy as usize >= in_shape.h {
                     continue;
                 }
                 for kx in 0..kw {
-                    let ix = (ox * sw + kx) as isize - pad_x as isize;
+                    let ix = (ox * sw + kx) as isize - pad_x;
                     if ix < 0 || ix as usize >= in_shape.w {
                         continue;
                     }
@@ -117,14 +137,31 @@ pub fn dwconv2d(
     stride: (usize, usize),
     padding: Padding,
 ) {
+    let pad_y = pad_amounts(in_shape.h, kernel.0, stride.0, padding, out_shape.h) as isize;
+    let pad_x = pad_amounts(in_shape.w, kernel.1, stride.1, padding, out_shape.w) as isize;
+    dwconv2d_with_pads(input, in_shape, weights, bias, out, out_shape, kernel, stride, pad_y, pad_x);
+}
+
+/// [`dwconv2d`] with explicit padding offsets (see [`conv2d_with_pads`]).
+#[allow(clippy::too_many_arguments)]
+pub fn dwconv2d_with_pads(
+    input: &[f32],
+    in_shape: Hwc,
+    weights: &[f32],
+    bias: &[f32],
+    out: &mut [f32],
+    out_shape: Hwc,
+    kernel: (usize, usize),
+    stride: (usize, usize),
+    pad_y: isize,
+    pad_x: isize,
+) {
     let (kh, kw) = kernel;
     let (sh, sw) = stride;
     let c = in_shape.c;
     debug_assert_eq!(out_shape.c, c);
     debug_assert_eq!(weights.len(), kh * kw * c);
     debug_assert_eq!(bias.len(), c);
-    let pad_y = pad_amounts(in_shape.h, kh, sh, padding, out_shape.h);
-    let pad_x = pad_amounts(in_shape.w, kw, sw, padding, out_shape.w);
 
     // Channels innermost: contiguous input and weight rows (perf pass).
     let mut acc_row = vec![0.0f32; c];
@@ -132,12 +169,12 @@ pub fn dwconv2d(
         for ox in 0..out_shape.w {
             acc_row.copy_from_slice(bias);
             for ky in 0..kh {
-                let iy = (oy * sh + ky) as isize - pad_y as isize;
+                let iy = (oy * sh + ky) as isize - pad_y;
                 if iy < 0 || iy as usize >= in_shape.h {
                     continue;
                 }
                 for kx in 0..kw {
-                    let ix = (ox * sw + kx) as isize - pad_x as isize;
+                    let ix = (ox * sw + kx) as isize - pad_x;
                     if ix < 0 || ix as usize >= in_shape.w {
                         continue;
                     }
@@ -157,14 +194,32 @@ pub fn dwconv2d(
 
 /// Fully connected: `weights` layout `[in, out]` (row-major), bias `[out]`.
 pub fn dense(input: &[f32], weights: &[f32], bias: &[f32], out: &mut [f32]) {
+    let n_out = out.len();
+    dense_cols(input, weights, bias, out, 0, n_out);
+}
+
+/// Output-feature band of a fully-connected layer: computes features
+/// `[col0, col0 + out.len())` of a dense layer whose full weight matrix is
+/// `[in, n_cols]` row-major with a full-length bias. The accumulation order
+/// per feature matches [`dense`] exactly, so bands are bit-identical to the
+/// corresponding slice of the full output.
+pub fn dense_cols(
+    input: &[f32],
+    weights: &[f32],
+    bias: &[f32],
+    out: &mut [f32],
+    col0: usize,
+    n_cols: usize,
+) {
     let n_in = input.len();
     let n_out = out.len();
-    debug_assert_eq!(weights.len(), n_in * n_out);
-    debug_assert_eq!(bias.len(), n_out);
+    debug_assert!(col0 + n_out <= n_cols, "band [{col0}, {}) exceeds {n_cols}", col0 + n_out);
+    debug_assert_eq!(weights.len(), n_in * n_cols);
+    debug_assert_eq!(bias.len(), n_cols);
     for o in 0..n_out {
-        let mut acc = bias[o];
+        let mut acc = bias[col0 + o];
         for i in 0..n_in {
-            acc += input[i] * weights[i * n_out + o];
+            acc += input[i] * weights[i * n_cols + col0 + o];
         }
         out[o] = acc;
     }
@@ -223,21 +278,37 @@ pub fn maxpool2d(
     stride: (usize, usize),
     padding: Padding,
 ) {
+    let pad_y = pad_amounts(in_shape.h, kernel.0, stride.0, padding, out_shape.h) as isize;
+    let pad_x = pad_amounts(in_shape.w, kernel.1, stride.1, padding, out_shape.w) as isize;
+    maxpool2d_with_pads(input, in_shape, out, out_shape, kernel, stride, pad_y, pad_x);
+}
+
+/// [`maxpool2d`] with explicit padding offsets (see [`conv2d_with_pads`]).
+/// Out-of-bounds taps are ignored, exactly as in the full kernel.
+#[allow(clippy::too_many_arguments)]
+pub fn maxpool2d_with_pads(
+    input: &[f32],
+    in_shape: Hwc,
+    out: &mut [f32],
+    out_shape: Hwc,
+    kernel: (usize, usize),
+    stride: (usize, usize),
+    pad_y: isize,
+    pad_x: isize,
+) {
     let (kh, kw) = kernel;
     let (sh, sw) = stride;
-    let pad_y = pad_amounts(in_shape.h, kh, sh, padding, out_shape.h);
-    let pad_x = pad_amounts(in_shape.w, kw, sw, padding, out_shape.w);
     for oy in 0..out_shape.h {
         for ox in 0..out_shape.w {
             for ch in 0..in_shape.c {
                 let mut m = f32::NEG_INFINITY;
                 for ky in 0..kh {
-                    let iy = (oy * sh + ky) as isize - pad_y as isize;
+                    let iy = (oy * sh + ky) as isize - pad_y;
                     if iy < 0 || iy as usize >= in_shape.h {
                         continue;
                     }
                     for kx in 0..kw {
-                        let ix = (ox * sw + kx) as isize - pad_x as isize;
+                        let ix = (ox * sw + kx) as isize - pad_x;
                         if ix < 0 || ix as usize >= in_shape.w {
                             continue;
                         }
@@ -261,22 +332,39 @@ pub fn avgpool2d(
     stride: (usize, usize),
     padding: Padding,
 ) {
+    let pad_y = pad_amounts(in_shape.h, kernel.0, stride.0, padding, out_shape.h) as isize;
+    let pad_x = pad_amounts(in_shape.w, kernel.1, stride.1, padding, out_shape.w) as isize;
+    avgpool2d_with_pads(input, in_shape, out, out_shape, kernel, stride, pad_y, pad_x);
+}
+
+/// [`avgpool2d`] with explicit padding offsets. The divisor counts valid
+/// taps only — identical to the full kernel, so bands divide by the same
+/// counts the unsplit op would.
+#[allow(clippy::too_many_arguments)]
+pub fn avgpool2d_with_pads(
+    input: &[f32],
+    in_shape: Hwc,
+    out: &mut [f32],
+    out_shape: Hwc,
+    kernel: (usize, usize),
+    stride: (usize, usize),
+    pad_y: isize,
+    pad_x: isize,
+) {
     let (kh, kw) = kernel;
     let (sh, sw) = stride;
-    let pad_y = pad_amounts(in_shape.h, kh, sh, padding, out_shape.h);
-    let pad_x = pad_amounts(in_shape.w, kw, sw, padding, out_shape.w);
     for oy in 0..out_shape.h {
         for ox in 0..out_shape.w {
             for ch in 0..in_shape.c {
                 let mut acc = 0.0f32;
                 let mut taps = 0usize;
                 for ky in 0..kh {
-                    let iy = (oy * sh + ky) as isize - pad_y as isize;
+                    let iy = (oy * sh + ky) as isize - pad_y;
                     if iy < 0 || iy as usize >= in_shape.h {
                         continue;
                     }
                     for kx in 0..kw {
-                        let ix = (ox * sw + kx) as isize - pad_x as isize;
+                        let ix = (ox * sw + kx) as isize - pad_x;
                         if ix < 0 || ix as usize >= in_shape.w {
                             continue;
                         }

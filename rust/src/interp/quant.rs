@@ -128,12 +128,38 @@ pub fn conv2d_i8(
     stride: (usize, usize),
     padding: Padding,
 ) {
+    let pad_y = pad_amounts(in_shape.h, kernel.0, stride.0, padding, out_shape.h) as isize;
+    let pad_x = pad_amounts(in_shape.w, kernel.1, stride.1, padding, out_shape.w) as isize;
+    conv2d_i8_with_pads(
+        input, in_shape, in_q, weights, w_scale, bias, out, out_shape, out_q, kernel, stride,
+        pad_y, pad_x,
+    );
+}
+
+/// [`conv2d_i8`] with explicit padding offsets. Out-of-bounds taps are
+/// skipped (integer-exact zero padding), so a row band computed against an
+/// input slab is bit-identical to the corresponding rows of the full op —
+/// the property the split subsystem's int8 validation relies on.
+#[allow(clippy::too_many_arguments)]
+pub fn conv2d_i8_with_pads(
+    input: &[i8],
+    in_shape: Hwc,
+    in_q: QuantParams,
+    weights: &[i8],
+    w_scale: f32,
+    bias: &[i32],
+    out: &mut [i8],
+    out_shape: Hwc,
+    out_q: QuantParams,
+    kernel: (usize, usize),
+    stride: (usize, usize),
+    pad_y: isize,
+    pad_x: isize,
+) {
     let (kh, kw) = kernel;
     let (sh, sw) = stride;
     let cin = in_shape.c;
     let cout = out_shape.c;
-    let pad_y = pad_amounts(in_shape.h, kh, sh, padding, out_shape.h);
-    let pad_x = pad_amounts(in_shape.w, kw, sw, padding, out_shape.w);
     let fm = FixedMult::new((in_q.scale as f64) * (w_scale as f64) / (out_q.scale as f64));
     let zp_in = in_q.zero_point;
 
@@ -144,7 +170,7 @@ pub fn conv2d_i8(
     // the top bottleneck. The pointwise (1×1, stride 1) case — most of
     // MobileNet's MACs — skips the padding arithmetic entirely.
     let mut acc_row: Vec<i32> = vec![0; cout];
-    if kh == 1 && kw == 1 && sh == 1 && sw == 1 {
+    if kh == 1 && kw == 1 && sh == 1 && sw == 1 && pad_y == 0 && pad_x == 0 {
         for p in 0..out_shape.h * out_shape.w {
             acc_row.copy_from_slice(bias);
             let ibase = p * cin;
@@ -170,12 +196,12 @@ pub fn conv2d_i8(
         for ox in 0..out_shape.w {
             acc_row.copy_from_slice(bias);
             for ky in 0..kh {
-                let iy = (oy * sh + ky) as isize - pad_y as isize;
+                let iy = (oy * sh + ky) as isize - pad_y;
                 if iy < 0 || iy as usize >= in_shape.h {
                     continue;
                 }
                 for kx in 0..kw {
-                    let ix = (ox * sw + kx) as isize - pad_x as isize;
+                    let ix = (ox * sw + kx) as isize - pad_x;
                     if ix < 0 || ix as usize >= in_shape.w {
                         continue;
                     }
@@ -218,11 +244,35 @@ pub fn dwconv2d_i8(
     stride: (usize, usize),
     padding: Padding,
 ) {
+    let pad_y = pad_amounts(in_shape.h, kernel.0, stride.0, padding, out_shape.h) as isize;
+    let pad_x = pad_amounts(in_shape.w, kernel.1, stride.1, padding, out_shape.w) as isize;
+    dwconv2d_i8_with_pads(
+        input, in_shape, in_q, weights, w_scale, bias, out, out_shape, out_q, kernel, stride,
+        pad_y, pad_x,
+    );
+}
+
+/// [`dwconv2d_i8`] with explicit padding offsets (see
+/// [`conv2d_i8_with_pads`]).
+#[allow(clippy::too_many_arguments)]
+pub fn dwconv2d_i8_with_pads(
+    input: &[i8],
+    in_shape: Hwc,
+    in_q: QuantParams,
+    weights: &[i8],
+    w_scale: f32,
+    bias: &[i32],
+    out: &mut [i8],
+    out_shape: Hwc,
+    out_q: QuantParams,
+    kernel: (usize, usize),
+    stride: (usize, usize),
+    pad_y: isize,
+    pad_x: isize,
+) {
     let (kh, kw) = kernel;
     let (sh, sw) = stride;
     let c = in_shape.c;
-    let pad_y = pad_amounts(in_shape.h, kh, sh, padding, out_shape.h);
-    let pad_x = pad_amounts(in_shape.w, kw, sw, padding, out_shape.w);
     let fm = FixedMult::new((in_q.scale as f64) * (w_scale as f64) / (out_q.scale as f64));
 
     // Perf pass: channels innermost so both the input row and the weight
@@ -234,12 +284,12 @@ pub fn dwconv2d_i8(
         for ox in 0..out_shape.w {
             acc_row.copy_from_slice(bias);
             for ky in 0..kh {
-                let iy = (oy * sh + ky) as isize - pad_y as isize;
+                let iy = (oy * sh + ky) as isize - pad_y;
                 if iy < 0 || iy as usize >= in_shape.h {
                     continue;
                 }
                 for kx in 0..kw {
-                    let ix = (ox * sw + kx) as isize - pad_x as isize;
+                    let ix = (ox * sw + kx) as isize - pad_x;
                     if ix < 0 || ix as usize >= in_shape.w {
                         continue;
                     }
@@ -271,18 +321,41 @@ pub fn dense_i8(
     out: &mut [i8],
     out_q: QuantParams,
 ) {
+    let n_out = out.len();
+    dense_cols_i8(input, in_q, weights, w_scale, bias, out, out_q, 0, n_out);
+}
+
+/// Output-feature band of a quantized dense layer: features
+/// `[col0, col0 + out.len())` against the full `[in, n_cols]` weight matrix
+/// and full bias. Accumulation order matches [`dense_i8`], so bands are
+/// bit-identical to the corresponding slice of the full output.
+#[allow(clippy::too_many_arguments)]
+pub fn dense_cols_i8(
+    input: &[i8],
+    in_q: QuantParams,
+    weights: &[i8],
+    w_scale: f32,
+    bias: &[i32],
+    out: &mut [i8],
+    out_q: QuantParams,
+    col0: usize,
+    n_cols: usize,
+) {
     let n_in = input.len();
     let n_out = out.len();
+    debug_assert!(col0 + n_out <= n_cols);
+    debug_assert_eq!(weights.len(), n_in * n_cols);
+    debug_assert_eq!(bias.len(), n_cols);
     let fm = FixedMult::new((in_q.scale as f64) * (w_scale as f64) / (out_q.scale as f64));
     // Contiguous weight rows (perf pass): accumulate over outputs with the
     // input element hoisted.
-    let mut acc: Vec<i32> = bias.to_vec();
+    let mut acc: Vec<i32> = bias[col0..col0 + n_out].to_vec();
     for i in 0..n_in {
         let iv = input[i] as i32 - in_q.zero_point;
         if iv == 0 {
             continue;
         }
-        let wrow = &weights[i * n_out..(i + 1) * n_out];
+        let wrow = &weights[i * n_cols + col0..i * n_cols + col0 + n_out];
         for (a, &w) in acc.iter_mut().zip(wrow) {
             *a += iv * w as i32;
         }
@@ -339,21 +412,37 @@ pub fn maxpool2d_i8(
     stride: (usize, usize),
     padding: Padding,
 ) {
+    let pad_y = pad_amounts(in_shape.h, kernel.0, stride.0, padding, out_shape.h) as isize;
+    let pad_x = pad_amounts(in_shape.w, kernel.1, stride.1, padding, out_shape.w) as isize;
+    maxpool2d_i8_with_pads(input, in_shape, out, out_shape, kernel, stride, pad_y, pad_x);
+}
+
+/// [`maxpool2d_i8`] with explicit padding offsets; out-of-bounds taps are
+/// ignored exactly as in the full kernel.
+#[allow(clippy::too_many_arguments)]
+pub fn maxpool2d_i8_with_pads(
+    input: &[i8],
+    in_shape: Hwc,
+    out: &mut [i8],
+    out_shape: Hwc,
+    kernel: (usize, usize),
+    stride: (usize, usize),
+    pad_y: isize,
+    pad_x: isize,
+) {
     let (kh, kw) = kernel;
     let (sh, sw) = stride;
-    let pad_y = pad_amounts(in_shape.h, kh, sh, padding, out_shape.h);
-    let pad_x = pad_amounts(in_shape.w, kw, sw, padding, out_shape.w);
     for oy in 0..out_shape.h {
         for ox in 0..out_shape.w {
             for ch in 0..in_shape.c {
                 let mut m = i8::MIN;
                 for ky in 0..kh {
-                    let iy = (oy * sh + ky) as isize - pad_y as isize;
+                    let iy = (oy * sh + ky) as isize - pad_y;
                     if iy < 0 || iy as usize >= in_shape.h {
                         continue;
                     }
                     for kx in 0..kw {
-                        let ix = (ox * sw + kx) as isize - pad_x as isize;
+                        let ix = (ox * sw + kx) as isize - pad_x;
                         if ix < 0 || ix as usize >= in_shape.w {
                             continue;
                         }

@@ -12,6 +12,11 @@
 //!   memoized dynamic program over tensor sets that finds the execution
 //!   order minimizing peak SRAM usage, plus brute-force and greedy
 //!   baselines.
+//! - [`split`] — the partial-execution subsystem: spatial (row) operator
+//!   splitting with byte-exact halo accounting, co-optimized with
+//!   reordering. Breaks the single-operator working-set floor that
+//!   reordering alone cannot cross (the Pex / patch-based-inference
+//!   workload class) while keeping outputs bit-exact.
 //! - [`alloc`] — SRAM arena allocators: the paper's dynamic allocator with
 //!   post-operator compaction/defragmentation, the static no-reuse planner
 //!   it replaces, and an offline lifetime-aware offset planner (§6).
@@ -27,8 +32,9 @@
 //!   artifacts (Python never runs at inference time).
 //! - [`coordinator`] — a small serving layer (request queue, batcher,
 //!   worker pool, metrics) driving the runtime.
-//! - [`util`] — in-tree substrates for JSON, RNG, property testing and
-//!   benchmarking (their crates.io equivalents are not vendored here).
+//! - [`util`] — in-tree substrates for JSON, RNG, property testing,
+//!   benchmarking and error handling (their crates.io equivalents are not
+//!   vendored here).
 
 pub mod alloc;
 pub mod graph;
@@ -39,4 +45,5 @@ pub mod nas;
 pub mod runtime;
 pub mod coordinator;
 pub mod sched;
+pub mod split;
 pub mod util;

@@ -7,13 +7,13 @@ use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use anyhow::{anyhow, bail, Context, Result};
+use mcu_reorder::util::error::{anyhow, bail, Context, Result};
 
 use mcu_reorder::coordinator::{self, Coordinator, ServeConfig};
 use mcu_reorder::graph::serde::ModelFile;
 use mcu_reorder::graph::{DType, Graph};
 use mcu_reorder::interp::{ExecConfig, Interpreter, TensorData, WeightStore};
-use mcu_reorder::mcu::{CostModel, DeployReport, OverheadModel, NUCLEO_F767ZI};
+use mcu_reorder::mcu::{CostModel, DeployReport, OverheadModel, SplitOverhead, NUCLEO_F767ZI};
 use mcu_reorder::models;
 use mcu_reorder::sched;
 use mcu_reorder::util::bench::Table;
@@ -31,6 +31,14 @@ COMMANDS:
             [--dtype i8|f32] [--order default|optimal|greedy|dfs] [--file F]
   optimize  --model M --out F  Embed the optimal execution order into a
             [--dtype i8|f32]   model JSON file (like tflite-tools)
+  split     --model M          Partial execution: split spatial operators
+            [--dtype i8|f32] [--sram-budget B] [--max-factor K]
+            [--rounds N] [--out F]
+                               into row slices (halo-exact) co-optimized
+                               with Algorithm-1 reordering; reports the
+                               peak-SRAM floor broken and the recompute
+                               overhead, optionally writing the split
+                               model + schedule to F
   export    --model M --json F --weights F [--dtype f32]
                                Export graph JSON + seeded weights for the
                                AOT pipeline (python/compile/aot.py)
@@ -181,6 +189,70 @@ fn cmd_optimize(flags: &HashMap<String, String>) -> Result<()> {
         "wrote {out}: peak {} B → {} B ({} states, {} expansions)",
         default_peak, opt.peak_bytes, stats.states, stats.expansions
     );
+    Ok(())
+}
+
+fn cmd_split(flags: &HashMap<String, String>) -> Result<()> {
+    let (g, _) = load_graph(flags, DType::I8)?;
+    let budget: Option<usize> = flags.get("sram-budget").map(|s| s.parse()).transpose()?;
+    let max_factor: usize =
+        flags.get("max-factor").map(|s| s.parse()).transpose()?.unwrap_or(4);
+    let max_rounds: usize = flags.get("rounds").map(|s| s.parse()).transpose()?.unwrap_or(3);
+    let opts = mcu_reorder::split::SplitOptions {
+        max_factor,
+        sram_budget: budget,
+        max_rounds,
+        ..Default::default()
+    };
+
+    let default_peak = sched::peak_of(&g, &g.default_order());
+    let t0 = std::time::Instant::now();
+    let outcome = mcu_reorder::split::optimize(&g, &opts).map_err(|e| anyhow!("{e}"))?;
+    let elapsed = t0.elapsed().as_secs_f64();
+
+    println!("model: {}  ({} ops → {} after splitting)\n", g.name, g.n_ops(), outcome.graph.n_ops());
+    println!("default order peak    : {:>9} B", default_peak);
+    println!("reorder-only optimal  : {:>9} B", outcome.base_peak);
+    println!(
+        "split+reorder optimal : {:>9} B  ({} segment(s), {:.2}s search)",
+        outcome.schedule.peak_bytes,
+        outcome.steps.len(),
+        elapsed
+    );
+    for st in &outcome.steps {
+        println!(
+            "  split [{}] ×{}: {} B → {} B",
+            st.segment.join(" → "),
+            st.factor,
+            st.peak_before,
+            st.peak_after
+        );
+    }
+    if outcome.steps.is_empty() {
+        println!("  (no split improved on reorder-only scheduling)");
+    }
+    let cost = CostModel::cortex_m7_reference();
+    let ov = SplitOverhead::measure(&cost, &g, &outcome.graph, &NUCLEO_F767ZI);
+    println!(
+        "recompute overhead    : {:+.2}% MACs, modeled time ×{:.4}",
+        100.0 * ov.recompute_frac(),
+        ov.time_ratio
+    );
+    if let Some(b) = budget {
+        println!(
+            "SRAM budget {} B     : {}",
+            b,
+            if outcome.schedule.peak_bytes <= b { "MET" } else { "NOT MET" }
+        );
+    }
+    if let Some(out) = flags.get("out") {
+        let mf = ModelFile {
+            graph: outcome.graph,
+            execution_order: Some(outcome.schedule.order.clone()),
+        };
+        std::fs::write(out, mf.to_json()).with_context(|| format!("writing {out}"))?;
+        println!("wrote split model + schedule to {out}");
+    }
     Ok(())
 }
 
@@ -442,6 +514,7 @@ fn main() {
         }
         "analyze" => cmd_analyze(&flags),
         "optimize" => cmd_optimize(&flags),
+        "split" => cmd_split(&flags),
         "export" => cmd_export(&flags),
         "run" => cmd_run(&flags),
         "serve" => cmd_serve(&flags),

@@ -129,6 +129,50 @@ impl CostModel {
     }
 }
 
+/// Execution-cost overhead of a split (partially-executed) graph relative
+/// to its unsplit baseline: halo rows recomputed by adjacent slices and
+/// the extra activation traffic of re-read inputs and the row-concat join.
+/// Memory is what splitting buys; this is what it pays.
+#[derive(Clone, Copy, Debug)]
+pub struct SplitOverhead {
+    pub base_macs: u64,
+    pub split_macs: u64,
+    pub base_bytes: u64,
+    pub split_bytes: u64,
+    /// Modeled execution-time ratio (split / base) under `model`/`board`,
+    /// with identical allocator stats for both sides.
+    pub time_ratio: f64,
+}
+
+impl SplitOverhead {
+    /// Compare a split graph against its unsplit baseline.
+    pub fn measure(
+        model: &CostModel,
+        base: &Graph,
+        split: &Graph,
+        board: &Board,
+    ) -> SplitOverhead {
+        let stats = AllocStats::default();
+        let est_base = model.estimate(base, &stats, board);
+        let est_split = model.estimate(split, &stats, board);
+        SplitOverhead {
+            base_macs: base.total_macs(),
+            split_macs: split.total_macs(),
+            base_bytes: base.ops.iter().map(|o| o.bytes_touched(base)).sum(),
+            split_bytes: split.ops.iter().map(|o| o.bytes_touched(split)).sum(),
+            time_ratio: est_split.seconds / est_base.seconds,
+        }
+    }
+
+    /// Fraction of MACs recomputed (0.0 = no halo overlap).
+    pub fn recompute_frac(&self) -> f64 {
+        if self.base_macs == 0 {
+            return 0.0;
+        }
+        self.split_macs as f64 / self.base_macs as f64 - 1.0
+    }
+}
+
 /// Cycle breakdown of an estimate.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct CostBreakdown {
@@ -201,6 +245,27 @@ mod tests {
         let est = m.estimate(&g, &stats, &NUCLEO_F767ZI);
         assert!((est.seconds - 1.316).abs() < 1e-6, "seconds={}", est.seconds);
         assert!((est.energy_mj - 728.0).abs() < 0.01, "mj={}", est.energy_mj);
+    }
+
+    #[test]
+    fn split_overhead_counts_recompute() {
+        use crate::graph::{Act, Padding};
+        use crate::split::{apply_segment, SegmentSplit};
+        let mut b = GraphBuilder::new("g");
+        let x = b.input("x", &[1, 16, 16, 4], DType::I8);
+        let c1 = b.conv2d("c1", x, 8, (3, 3), (1, 1), Padding::Same, Act::Relu6);
+        let c2 = b.conv2d("c2", c1, 8, (3, 3), (1, 1), Padding::Same, Act::Relu6);
+        b.output(c2);
+        let g = b.finish().unwrap();
+        let res = apply_segment(&g, &SegmentSplit { ops: vec![0, 1], factor: 4 }).unwrap();
+        let m = CostModel::cortex_m7_reference();
+        let ov = SplitOverhead::measure(&m, &g, &res.graph, &NUCLEO_F767ZI);
+        // Halo rows of c1 are recomputed by adjacent slices…
+        assert!(ov.split_macs > ov.base_macs);
+        assert!(ov.recompute_frac() > 0.0 && ov.recompute_frac() < 0.5);
+        // …and the chain input is re-read per slice, so time goes up.
+        assert!(ov.split_bytes > ov.base_bytes);
+        assert!(ov.time_ratio > 1.0);
     }
 
     #[test]

@@ -13,7 +13,7 @@ pub mod boards;
 mod cost;
 
 pub use boards::{Board, NUCLEO_F767ZI, SPARKFUN_EDGE, STM32F446RE, STM32H743ZI};
-pub use cost::{CostBreakdown, CostModel, Estimate};
+pub use cost::{CostBreakdown, CostModel, Estimate, SplitOverhead};
 
 use crate::graph::Graph;
 

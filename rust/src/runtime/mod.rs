@@ -16,7 +16,7 @@
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::error::{anyhow, bail, Context, Result};
 
 use crate::graph::Graph;
 use crate::util::json::Json;
@@ -102,31 +102,63 @@ impl Manifest {
     }
 }
 
+/// Compiled-executable handle: the real PJRT executable under
+/// `--features pjrt`, an uninhabitable placeholder otherwise (the stub
+/// [`Runtime::cpu`] fails before one could ever be constructed).
+#[cfg(feature = "pjrt")]
+type Exe = xla::PjRtLoadedExecutable;
+#[cfg(not(feature = "pjrt"))]
+type Exe = std::convert::Infallible;
+
 /// A compiled model artifact resident on the PJRT client.
 pub struct LoadedModel {
     pub name: String,
     pub manifest: Manifest,
-    exe: xla::PjRtLoadedExecutable,
+    #[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
+    exe: Exe,
 }
 
 /// The PJRT runtime: one CPU client, many compiled executables.
+///
+/// Built without the `pjrt` feature this is a stub: [`Runtime::cpu`]
+/// returns an error explaining how to enable the backend, and the rest of
+/// the crate (interpreter engine, scheduler, splitter) works unchanged.
 pub struct Runtime {
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
     models: HashMap<String, LoadedModel>,
 }
 
 impl Runtime {
     /// Create a CPU PJRT client.
+    #[cfg(feature = "pjrt")]
     pub fn cpu() -> Result<Runtime> {
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
         Ok(Runtime { client, models: HashMap::new() })
     }
 
+    /// Stub: the PJRT backend is not compiled in.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn cpu() -> Result<Runtime> {
+        bail!(
+            "PJRT backend not built: rebuild with `--features pjrt` \
+             (requires the vendored `xla` crate stack)"
+        )
+    }
+
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        #[cfg(feature = "pjrt")]
+        {
+            self.client.platform_name()
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            "unavailable (built without the pjrt feature)".to_string()
+        }
     }
 
     /// Load + compile `artifacts/<name>.hlo.txt` (+ its manifest).
+    #[cfg(feature = "pjrt")]
     pub fn load_artifact(&mut self, name: &str, dir: &Path) -> Result<&LoadedModel> {
         let hlo_path: PathBuf = dir.join(format!("{name}.hlo.txt"));
         let man_path: PathBuf = dir.join(format!("{name}.manifest.json"));
@@ -143,6 +175,15 @@ impl Runtime {
         self.models
             .insert(name.to_string(), LoadedModel { name: name.to_string(), manifest, exe });
         Ok(&self.models[name])
+    }
+
+    /// Stub: validates the manifest exists, then reports the missing
+    /// backend (a stub `Runtime` cannot exist, but the method must).
+    #[cfg(not(feature = "pjrt"))]
+    pub fn load_artifact(&mut self, name: &str, dir: &Path) -> Result<&LoadedModel> {
+        let man_path: PathBuf = dir.join(format!("{name}.manifest.json"));
+        let _ = Manifest::load(&man_path)?;
+        bail!("PJRT backend not built: cannot compile artifact {name:?}")
     }
 
     pub fn get(&self, name: &str) -> Option<&LoadedModel> {
@@ -164,6 +205,7 @@ impl Runtime {
 
 impl LoadedModel {
     /// Execute on f32 inputs.
+    #[cfg(feature = "pjrt")]
     pub fn execute_f32(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
         if inputs.len() != self.manifest.inputs.len() {
             bail!(
@@ -202,6 +244,13 @@ impl LoadedModel {
             .iter()
             .map(|p| p.to_vec::<f32>().map_err(|e| anyhow!("read output: {e:?}")))
             .collect()
+    }
+
+    /// Stub: unreachable (a stub [`Runtime`] holds no models), kept so the
+    /// API is feature-independent.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn execute_f32(&self, _inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        match self.exe {}
     }
 }
 

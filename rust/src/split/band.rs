@@ -1,0 +1,186 @@
+//! Row-band geometry: which input rows a slice needs (halo/overlap
+//! accounting) and the effective padding its slab executes with.
+//!
+//! The invariant (cross-checked numerically in the interpreter tests):
+//! executing an output band `[a, b)` against an input slab that starts at
+//! logical row `in_start` with vertical padding
+//! `pad_eff = pad_full − a·stride + in_start` takes *exactly* the taps the
+//! full operator takes for those rows — out-of-slab taps coincide with the
+//! full operator's out-of-image (zero-padding) taps, because the slab
+//! covers every real row the band touches.
+
+use crate::graph::{Graph, Op, OpKind};
+use crate::interp::ops::pad_amounts;
+
+/// A contiguous row range `[start, end)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Band {
+    pub start: usize,
+    pub end: usize,
+}
+
+impl Band {
+    pub fn rows(&self) -> usize {
+        self.end - self.start
+    }
+}
+
+/// Partition `n` rows into `k` near-equal contiguous bands (the leading
+/// `n % k` bands get the extra row). Requires `1 <= k <= n`.
+pub fn partition(n: usize, k: usize) -> Vec<Band> {
+    assert!(k >= 1 && k <= n, "cannot partition {n} rows into {k} bands");
+    let base = n / k;
+    let rem = n % k;
+    let mut out = Vec::with_capacity(k);
+    let mut start = 0usize;
+    for j in 0..k {
+        let rows = base + usize::from(j < rem);
+        out.push(Band { start, end: start + rows });
+        start += rows;
+    }
+    out
+}
+
+/// Vertical tap geometry of a sliceable operator.
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum VertGeom {
+    /// Elementwise: output row `j` reads input row `j`.
+    Pointwise,
+    /// Kernelled: kernel height, row stride and the *full-geometry* top
+    /// padding (as the unsplit operator would compute it).
+    Windowed { kh: usize, stride: usize, pad: usize },
+}
+
+fn nhwc1(shape: &[usize]) -> bool {
+    shape.len() == 4 && shape[0] == 1
+}
+
+/// Vertical geometry of `op`, or `None` if the operator cannot be sliced
+/// along rows (multi-input, non-spatial, or already a split artifact).
+pub(crate) fn vert_geom(g: &Graph, op: &Op) -> Option<VertGeom> {
+    if op.inputs.len() != 1 {
+        return None;
+    }
+    let in_shape = &g.tensors[op.inputs[0]].shape;
+    let out_shape = &g.tensors[op.output].shape;
+    if !nhwc1(in_shape) || !nhwc1(out_shape) {
+        return None;
+    }
+    match &op.kind {
+        OpKind::Conv2D { kernel, stride, padding, .. }
+        | OpKind::DepthwiseConv2D { kernel, stride, padding, .. } => Some(VertGeom::Windowed {
+            kh: kernel.0,
+            stride: stride.0,
+            pad: pad_amounts(in_shape[1], kernel.0, stride.0, *padding, out_shape[1]),
+        }),
+        OpKind::MaxPool2D { kernel, stride, padding }
+        | OpKind::AvgPool2D { kernel, stride, padding } => Some(VertGeom::Windowed {
+            kh: kernel.0,
+            stride: stride.0,
+            pad: pad_amounts(in_shape[1], kernel.0, stride.0, *padding, out_shape[1]),
+        }),
+        OpKind::Relu | OpKind::Relu6 | OpKind::BatchNorm { .. } => Some(VertGeom::Pointwise),
+        _ => None,
+    }
+}
+
+/// Input rows an output band `[out.start, out.end)` needs, clamped to the
+/// real input — taps falling outside are the full operator's zero padding
+/// and stay implicit.
+pub(crate) fn in_band(geom: VertGeom, h_in: usize, out: Band) -> Band {
+    debug_assert!(out.end > out.start, "empty output band");
+    match geom {
+        VertGeom::Pointwise => out,
+        VertGeom::Windowed { kh, stride, pad } => {
+            let lo = ((out.start * stride) as isize - pad as isize).max(0) as usize;
+            let lo = lo.min(h_in.saturating_sub(1));
+            let hi_raw = ((out.end - 1) * stride + kh) as isize - pad as isize;
+            let mut hi = hi_raw.clamp(1, h_in as isize) as usize;
+            if hi <= lo {
+                hi = lo + 1;
+            }
+            Band { start: lo, end: hi }
+        }
+    }
+}
+
+/// Effective vertical padding for computing output rows starting at
+/// `out_start` against a slab whose first stored row is logical row
+/// `in_start`. Negative when the slab keeps rows above the band's first
+/// tap (the chain head reads its full, unsliced input).
+pub(crate) fn pad_eff(geom: VertGeom, out_start: usize, in_start: usize) -> isize {
+    match geom {
+        VertGeom::Pointwise => 0,
+        VertGeom::Windowed { stride, pad, .. } => {
+            pad as isize + in_start as isize - (out_start * stride) as isize
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Act, DType, GraphBuilder, Padding};
+
+    #[test]
+    fn partition_covers_exactly() {
+        for (n, k) in [(7, 2), (48, 4), (5, 5), (10, 3)] {
+            let bands = partition(n, k);
+            assert_eq!(bands.len(), k);
+            assert_eq!(bands[0].start, 0);
+            assert_eq!(bands.last().unwrap().end, n);
+            for w in bands.windows(2) {
+                assert_eq!(w[0].end, w[1].start);
+                assert!(w[0].rows() >= w[1].rows());
+            }
+        }
+    }
+
+    #[test]
+    fn same_conv_band_includes_halo() {
+        // 3x3 stride-1 SAME conv over 8 rows: pad = 1.
+        let geom = VertGeom::Windowed { kh: 3, stride: 1, pad: 1 };
+        // Top band [0,4): row 3's taps reach rows 2..5 → slab [0, 5).
+        assert_eq!(in_band(geom, 8, Band { start: 0, end: 4 }), Band { start: 0, end: 5 });
+        // Bottom band [4,8): taps reach rows 3..10 → slab [3, 8).
+        assert_eq!(in_band(geom, 8, Band { start: 4, end: 8 }), Band { start: 3, end: 8 });
+    }
+
+    #[test]
+    fn strided_conv_band() {
+        // 3x3 stride-2 SAME over 8 rows → 4 out rows, pad total = 1, top 0.
+        let geom = VertGeom::Windowed { kh: 3, stride: 2, pad: 0 };
+        assert_eq!(in_band(geom, 8, Band { start: 0, end: 2 }), Band { start: 0, end: 5 });
+        assert_eq!(in_band(geom, 8, Band { start: 2, end: 4 }), Band { start: 4, end: 8 });
+    }
+
+    #[test]
+    fn pad_eff_signs() {
+        let geom = VertGeom::Windowed { kh: 3, stride: 1, pad: 1 };
+        // Top slice against its own slab: full padding preserved.
+        assert_eq!(pad_eff(geom, 0, 0), 1);
+        // Interior slice against its slab starting at its first tap row.
+        assert_eq!(pad_eff(geom, 4, 3), 0);
+        // Interior slice against the FULL input (chain head): negative.
+        assert_eq!(pad_eff(geom, 4, 0), -3);
+    }
+
+    #[test]
+    fn vert_geom_classifies_ops() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[1, 8, 8, 2], DType::F32);
+        let c = b.conv2d("c", x, 4, (3, 3), (1, 1), Padding::Same, Act::Linear);
+        let r = b.relu("r", c);
+        let gap = b.global_avgpool("gap", r);
+        let fc = b.dense("fc", gap, 2, Act::Linear);
+        b.output(fc);
+        let g = b.finish().unwrap();
+        assert!(matches!(
+            vert_geom(&g, g.op_by_name("c").unwrap()),
+            Some(VertGeom::Windowed { kh: 3, stride: 1, pad: 1 })
+        ));
+        assert!(matches!(vert_geom(&g, g.op_by_name("r").unwrap()), Some(VertGeom::Pointwise)));
+        assert!(vert_geom(&g, g.op_by_name("gap").unwrap()).is_none());
+        assert!(vert_geom(&g, g.op_by_name("fc").unwrap()).is_none());
+    }
+}

@@ -1,0 +1,535 @@
+//! Graph rewriting: evaluate a chain of operators in `k` row slices.
+//!
+//! A segment `o_1 → … → o_m` (each interior output consumed only by the
+//! next op) is replaced by `k` slice pipelines plus a
+//! [`OpKind::ConcatRows`] join producing the original output tensor. The
+//! chain head reads its full, unsliced input (kept live across slices and
+//! reclaimed by the scheduler after the last head slice); every other
+//! slice op reads the slab the previous slice op produced. Interior slabs
+//! include halo rows, so adjacent slices recompute the overlap — that cost
+//! is visible in `Op::macs`, not hidden.
+//!
+//! A single-op segment whose op is `Dense` splits along output features
+//! instead of rows (the weight matrix columns partition; the input is read
+//! whole by every slice).
+
+use super::band::{in_band, pad_eff, partition, vert_geom, Band, VertGeom};
+use super::SplitError;
+use crate::graph::{DType, Graph, Op, OpId, OpKind, Tensor, TensorId};
+use crate::interp::WeightStore;
+
+/// One split instruction: a chain of ops (in execution order) to evaluate
+/// in `factor` row slices.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SegmentSplit {
+    pub ops: Vec<OpId>,
+    pub factor: usize,
+}
+
+/// A sequence of segment splits applied one after another. Op ids in step
+/// `i` refer to the graph produced by steps `0..i`.
+#[derive(Clone, Debug, Default)]
+pub struct SplitPlan {
+    pub steps: Vec<SegmentSplit>,
+}
+
+/// A rewritten graph plus the provenance of every tensor.
+#[derive(Clone, Debug)]
+pub struct SplitResult {
+    pub graph: Graph,
+    /// `sources[new_tensor_id]` is the tensor of the *input* graph this
+    /// tensor derives from: itself for untouched tensors and weights, the
+    /// full tensor a slab is a band of otherwise. Used to remap weight
+    /// stores and quantization parameters (slabs share their source's
+    /// qparams, which is what makes the int8 path bit-exact).
+    pub sources: Vec<TensorId>,
+}
+
+fn err(m: impl Into<String>) -> SplitError {
+    SplitError::InvalidSegment(m.into())
+}
+
+fn activation_consumers(g: &Graph, t: TensorId) -> usize {
+    g.tensors[t].consumers.iter().filter(|&&c| g.ops[c].inputs.contains(&t)).count()
+}
+
+/// Incremental construction of the rewritten graph.
+struct Builder {
+    ng: Graph,
+    sources: Vec<TensorId>,
+    tmap: Vec<Option<TensorId>>,
+}
+
+impl Builder {
+    /// Copy every tensor of `g` except the dropped ones (interior chain
+    /// outputs), preserving order, names and shapes.
+    fn new(g: &Graph, dropped: &[bool]) -> Builder {
+        let mut ng = Graph::new(g.name.clone());
+        let mut sources = Vec::new();
+        let mut tmap = vec![None; g.tensors.len()];
+        for t in &g.tensors {
+            if dropped[t.id] {
+                continue;
+            }
+            let id = ng.tensors.len();
+            tmap[t.id] = Some(id);
+            sources.push(t.id);
+            ng.tensors.push(Tensor {
+                id,
+                name: t.name.clone(),
+                shape: t.shape.clone(),
+                dtype: t.dtype,
+                producer: None,
+                consumers: Vec::new(),
+                is_weight: t.is_weight,
+            });
+        }
+        Builder { ng, sources, tmap }
+    }
+
+    fn map(&self, t: TensorId) -> TensorId {
+        self.tmap[t].expect("tensor was kept by the rewrite")
+    }
+
+    /// New slab tensor banded out of old tensor `source`.
+    fn slab(&mut self, name: String, shape: Vec<usize>, dtype: DType, source: TensorId) -> TensorId {
+        let id = self.ng.tensors.len();
+        self.sources.push(source);
+        self.ng.tensors.push(Tensor {
+            id,
+            name,
+            shape,
+            dtype,
+            producer: None,
+            consumers: Vec::new(),
+            is_weight: false,
+        });
+        id
+    }
+
+    fn op(
+        &mut self,
+        name: String,
+        kind: OpKind,
+        inputs: Vec<TensorId>,
+        weights: Vec<TensorId>,
+        output: TensorId,
+    ) {
+        let id = self.ng.ops.len();
+        self.ng.tensors[output].producer = Some(id);
+        for &t in inputs.iter().chain(&weights) {
+            self.ng.tensors[t].consumers.push(id);
+        }
+        self.ng.ops.push(Op { id, name, kind, inputs, weights, output });
+    }
+
+    fn copy_op(&mut self, op: &Op) {
+        let inputs: Vec<TensorId> = op.inputs.iter().map(|&t| self.map(t)).collect();
+        let weights: Vec<TensorId> = op.weights.iter().map(|&t| self.map(t)).collect();
+        let output = self.map(op.output);
+        self.op(op.name.clone(), op.kind.clone(), inputs, weights, output);
+    }
+
+    fn finish(mut self, g: &Graph) -> Result<SplitResult, SplitError> {
+        self.ng.inputs = g.inputs.iter().map(|&t| self.map(t)).collect();
+        self.ng.outputs = g.outputs.iter().map(|&t| self.map(t)).collect();
+        self.ng
+            .validate()
+            .map_err(|e| err(format!("rewrite produced an invalid graph: {e}")))?;
+        Ok(SplitResult { graph: self.ng, sources: self.sources })
+    }
+}
+
+/// Split one chain segment of `g` into `seg.factor` slices.
+pub fn apply_segment(g: &Graph, seg: &SegmentSplit) -> Result<SplitResult, SplitError> {
+    let m = seg.ops.len();
+    let k = seg.factor;
+    if m == 0 {
+        return Err(err("empty segment"));
+    }
+    if k < 2 {
+        return Err(err("split factor must be >= 2"));
+    }
+    for &o in &seg.ops {
+        if o >= g.ops.len() {
+            return Err(err(format!("op {o} out of range")));
+        }
+        if matches!(g.ops[o].kind, OpKind::Partial { .. } | OpKind::ConcatRows) {
+            return Err(err(format!("op {} is already a split artifact", g.ops[o].name)));
+        }
+    }
+    let head = &g.ops[seg.ops[0]];
+    if head.inputs.len() != 1 {
+        return Err(err(format!("segment head {} must have one activation input", head.name)));
+    }
+    for w in seg.ops.windows(2) {
+        let out = g.ops[w[0]].output;
+        let next = &g.ops[w[1]];
+        if next.inputs.len() != 1 || next.inputs[0] != out {
+            return Err(err(format!(
+                "ops {} -> {} are not chained",
+                g.ops[w[0]].name, next.name
+            )));
+        }
+        if activation_consumers(g, out) != 1 || g.outputs.contains(&out) {
+            return Err(err(format!(
+                "interior tensor {} must have exactly one consumer",
+                g.tensors[out].name
+            )));
+        }
+    }
+    if let OpKind::Dense { .. } = head.kind {
+        if m != 1 {
+            return Err(err("dense split must be a single-op segment"));
+        }
+        return apply_dense(g, seg.ops[0], k);
+    }
+    apply_spatial(g, seg)
+}
+
+fn apply_spatial(g: &Graph, seg: &SegmentSplit) -> Result<SplitResult, SplitError> {
+    let m = seg.ops.len();
+    let k = seg.factor;
+
+    let mut geoms: Vec<VertGeom> = Vec::with_capacity(m);
+    for (i, &oid) in seg.ops.iter().enumerate() {
+        let op = &g.ops[oid];
+        let geom = vert_geom(g, op).ok_or_else(|| {
+            SplitError::Unsupported(format!(
+                "op {} ({}) cannot be sliced along rows",
+                op.name,
+                op.kind.name()
+            ))
+        })?;
+        if i == 0 && matches!(geom, VertGeom::Pointwise) {
+            return Err(SplitError::Unsupported(format!(
+                "segment head {} must be a windowed spatial op",
+                op.name
+            )));
+        }
+        geoms.push(geom);
+    }
+
+    let h_in: Vec<usize> =
+        seg.ops.iter().map(|&o| g.tensors[g.ops[o].inputs[0]].shape[1]).collect();
+    let last_old = *seg.ops.last().unwrap();
+    let h_out_last = g.tensors[g.ops[last_old].output].shape[1];
+    if k > h_out_last {
+        return Err(err(format!("factor {k} exceeds the {h_out_last} output rows")));
+    }
+
+    // bands[j][i]: output band of segment op i in slice j, propagated
+    // backwards from an even partition of the final output's rows.
+    let mut bands: Vec<Vec<Band>> = Vec::with_capacity(k);
+    for part in partition(h_out_last, k) {
+        let mut row = vec![part; m];
+        for i in (1..m).rev() {
+            row[i - 1] = in_band(geoms[i], h_in[i], row[i]);
+        }
+        bands.push(row);
+    }
+
+    let mut dropped = vec![false; g.tensors.len()];
+    for &o in &seg.ops[..m - 1] {
+        dropped[g.ops[o].output] = true;
+    }
+    let mut in_seg = vec![false; g.ops.len()];
+    for &o in &seg.ops {
+        in_seg[o] = true;
+    }
+    let first = seg.ops[0];
+
+    let mut b = Builder::new(g, &dropped);
+    for op in &g.ops {
+        if in_seg[op.id] {
+            if op.id != first {
+                continue;
+            }
+            // Emit the k slice pipelines, then the join, in place of the
+            // chain head (the old id order was topological, so everything
+            // the pipelines read is already emitted).
+            let chain_in = b.map(g.ops[first].inputs[0]);
+            let mut slabs: Vec<TensorId> = Vec::with_capacity(k);
+            for (j, band_row) in bands.iter().enumerate() {
+                let mut cur = chain_in;
+                let mut cur_start = 0usize; // logical first row held by `cur`
+                for (i, &oid) in seg.ops.iter().enumerate() {
+                    let o = &g.ops[oid];
+                    let band = band_row[i];
+                    let full_out = &g.tensors[o.output];
+                    let shape = vec![1, band.rows(), full_out.shape[2], full_out.shape[3]];
+                    let kind = match geoms[i] {
+                        VertGeom::Pointwise => o.kind.clone(),
+                        VertGeom::Windowed { .. } => OpKind::Partial {
+                            inner: Box::new(o.kind.clone()),
+                            pad_top: pad_eff(geoms[i], band.start, cur_start),
+                            offset: band.start,
+                        },
+                    };
+                    let name = format!("{}#s{j}", o.name);
+                    let slab = b.slab(name.clone(), shape, full_out.dtype, o.output);
+                    let weights: Vec<TensorId> = o.weights.iter().map(|&t| b.map(t)).collect();
+                    b.op(name, kind, vec![cur], weights, slab);
+                    cur = slab;
+                    cur_start = band.start;
+                }
+                slabs.push(cur);
+            }
+            let join_out = b.map(g.ops[last_old].output);
+            b.op(format!("{}#cat", g.ops[last_old].name), OpKind::ConcatRows, slabs, vec![], join_out);
+            continue;
+        }
+        b.copy_op(op);
+    }
+    b.finish(g)
+}
+
+fn apply_dense(g: &Graph, oid: OpId, k: usize) -> Result<SplitResult, SplitError> {
+    let op = &g.ops[oid];
+    let out_t = &g.tensors[op.output];
+    if out_t.shape.len() != 2 || out_t.shape[0] != 1 {
+        return Err(SplitError::Unsupported(format!(
+            "dense output shape {:?} is not [1, n]",
+            out_t.shape
+        )));
+    }
+    let n = out_t.shape[1];
+    if k > n {
+        return Err(err(format!("factor {k} exceeds the {n} output features")));
+    }
+    let act = match op.kind {
+        OpKind::Dense { act } => act,
+        _ => unreachable!("apply_dense called on a non-dense op"),
+    };
+
+    let dropped = vec![false; g.tensors.len()];
+    let mut b = Builder::new(g, &dropped);
+    for o in &g.ops {
+        if o.id != oid {
+            b.copy_op(o);
+            continue;
+        }
+        let cur = b.map(op.inputs[0]);
+        let mut slabs: Vec<TensorId> = Vec::with_capacity(k);
+        for (j, band) in partition(n, k).iter().enumerate() {
+            let name = format!("{}#s{j}", op.name);
+            let slab = b.slab(name.clone(), vec![1, band.rows()], out_t.dtype, op.output);
+            let weights: Vec<TensorId> = op.weights.iter().map(|&t| b.map(t)).collect();
+            b.op(
+                name,
+                OpKind::Partial {
+                    inner: Box::new(OpKind::Dense { act }),
+                    pad_top: 0,
+                    offset: band.start,
+                },
+                vec![cur],
+                weights,
+                slab,
+            );
+            slabs.push(slab);
+        }
+        let join_out = b.map(op.output);
+        b.op(format!("{}#cat", op.name), OpKind::ConcatRows, slabs, vec![], join_out);
+    }
+    b.finish(g)
+}
+
+/// Apply a sequence of segment splits, composing tensor provenance back to
+/// the original graph.
+pub fn apply_plan(g: &Graph, plan: &SplitPlan) -> Result<SplitResult, SplitError> {
+    let mut cur =
+        SplitResult { graph: g.clone(), sources: (0..g.tensors.len()).collect() };
+    for step in &plan.steps {
+        let next = apply_segment(&cur.graph, step)?;
+        let sources = next.sources.iter().map(|&mid| cur.sources[mid]).collect();
+        cur = SplitResult { graph: next.graph, sources };
+    }
+    Ok(cur)
+}
+
+/// Carry a weight store across a split: weights keep their payloads,
+/// activation slabs inherit the quantization parameters of the full tensor
+/// they are a band of.
+pub fn remap_weight_store(ws: &WeightStore, res: &SplitResult) -> WeightStore {
+    remap_weights_by_sources(ws, &res.sources)
+}
+
+pub(crate) fn remap_weights_by_sources(ws: &WeightStore, sources: &[TensorId]) -> WeightStore {
+    let mut out = WeightStore::default();
+    for (new_id, &src) in sources.iter().enumerate() {
+        if let Some(d) = ws.data.get(&src) {
+            out.data.insert(new_id, d.clone());
+        }
+        if let Some(q) = ws.qparams.get(&src) {
+            out.qparams.insert(new_id, *q);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Act, GraphBuilder, Padding};
+    use crate::interp::{ExecConfig, Interpreter, TensorData};
+    use crate::sched;
+
+    fn chain_cnn() -> Graph {
+        let mut b = GraphBuilder::new("chain-cnn");
+        let x = b.input("x", &[1, 12, 12, 2], DType::F32);
+        let c1 = b.conv2d("c1", x, 6, (3, 3), (1, 1), Padding::Same, Act::Relu6);
+        let dw = b.dwconv2d("dw", c1, (3, 3), (2, 2), Padding::Same, Act::Relu6);
+        let pw = b.conv2d("pw", dw, 4, (1, 1), (1, 1), Padding::Same, Act::Relu6);
+        let gap = b.global_avgpool("gap", pw);
+        let fc = b.dense("fc", gap, 3, Act::Linear);
+        b.output(fc);
+        b.finish().unwrap()
+    }
+
+    fn seg_of(g: &Graph, names: &[&str], factor: usize) -> SegmentSplit {
+        SegmentSplit {
+            ops: names.iter().map(|n| g.op_by_name(n).unwrap().id).collect(),
+            factor,
+        }
+    }
+
+    #[test]
+    fn split_graph_is_valid_and_shapes_cover() {
+        let g = chain_cnn();
+        let res = apply_segment(&g, &seg_of(&g, &["c1", "dw", "pw"], 3)).unwrap();
+        let ng = &res.graph;
+        ng.validate().unwrap();
+        // 3 slices × 3 ops + join replace the 3 chain ops.
+        assert_eq!(ng.n_ops(), g.n_ops() - 3 + 3 * 3 + 1);
+        // The final output tensor survives with its name and full shape.
+        let pw = ng.tensor_by_name("pw").unwrap();
+        assert_eq!(pw.shape, vec![1, 6, 6, 4]);
+        // Slice output rows of the last segment op partition the full rows.
+        let rows: usize = (0..3)
+            .map(|j| ng.tensor_by_name(&format!("pw#s{j}")).unwrap().shape[1])
+            .sum();
+        assert_eq!(rows, 6);
+        // Default order of the rewritten graph stays topological.
+        ng.check_order(&ng.default_order()).unwrap();
+    }
+
+    #[test]
+    fn split_execution_matches_unsplit_f32() {
+        let g = chain_cnn();
+        let ws = crate::interp::WeightStore::seeded_f32(&g, 11);
+        let input =
+            TensorData::F32((0..288).map(|i| ((i % 23) as f32 - 11.0) / 7.0).collect());
+        let base = Interpreter::new(&g, ws.clone(), ExecConfig::with_capacity(1 << 20))
+            .run(&[input.clone()])
+            .unwrap();
+        for factor in [2, 3] {
+            let res = apply_segment(&g, &seg_of(&g, &["c1", "dw", "pw"], factor)).unwrap();
+            let ws2 = remap_weight_store(&ws, &res);
+            let out = Interpreter::new(&res.graph, ws2, ExecConfig::with_capacity(1 << 20))
+                .run(&[input.clone()])
+                .unwrap();
+            assert_eq!(base.outputs, out.outputs, "factor {factor}");
+        }
+    }
+
+    #[test]
+    fn dense_split_matches_unsplit_f32() {
+        let g = chain_cnn();
+        let ws = crate::interp::WeightStore::seeded_f32(&g, 5);
+        let input =
+            TensorData::F32((0..288).map(|i| ((i % 19) as f32 - 9.0) / 5.0).collect());
+        let base = Interpreter::new(&g, ws.clone(), ExecConfig::with_capacity(1 << 20))
+            .run(&[input.clone()])
+            .unwrap();
+        let res = apply_segment(&g, &seg_of(&g, &["fc"], 3)).unwrap();
+        let ws2 = remap_weight_store(&ws, &res);
+        let out = Interpreter::new(&res.graph, ws2, ExecConfig::with_capacity(1 << 20))
+            .run(&[input])
+            .unwrap();
+        assert_eq!(base.outputs, out.outputs);
+    }
+
+    #[test]
+    fn split_lowers_peak_on_a_fat_chain() {
+        // A chain whose middle tensor dominates: splitting it must beat
+        // reorder-only (which cannot help a pure chain at all).
+        let mut b = GraphBuilder::new("fat");
+        let x = b.input("x", &[1, 16, 16, 4], DType::I8);
+        let c1 = b.conv2d("c1", x, 16, (3, 3), (1, 1), Padding::Same, Act::Relu6);
+        let c2 = b.conv2d("c2", c1, 4, (3, 3), (2, 2), Padding::Same, Act::Relu6);
+        b.output(c2);
+        let g = b.finish().unwrap();
+        let (base, _) = sched::optimal(&g).unwrap();
+        let res = apply_segment(&g, &seg_of(&g, &["c1", "c2"], 4)).unwrap();
+        let (split_sched, _) = sched::optimal(&res.graph).unwrap();
+        assert!(
+            split_sched.peak_bytes < base.peak_bytes,
+            "split {} vs reorder-only {}",
+            split_sched.peak_bytes,
+            base.peak_bytes
+        );
+    }
+
+    #[test]
+    fn rejects_bad_segments() {
+        let g = chain_cnn();
+        // Not chained (c1 -> pw skips dw).
+        assert!(apply_segment(&g, &seg_of(&g, &["c1", "pw"], 2)).is_err());
+        // Factor 1 is not a split.
+        assert!(apply_segment(&g, &seg_of(&g, &["c1"], 1)).is_err());
+        // Factor exceeding output rows.
+        assert!(apply_segment(&g, &seg_of(&g, &["dw"], 7)).is_err());
+        // Non-sliceable op.
+        assert!(apply_segment(&g, &seg_of(&g, &["gap"], 2)).is_err());
+        // Dense must be single-op.
+        assert!(apply_segment(&g, &seg_of(&g, &["gap", "fc"], 2)).is_err());
+        // Empty.
+        assert!(apply_segment(&g, &SegmentSplit { ops: vec![], factor: 2 }).is_err());
+    }
+
+    #[test]
+    fn double_split_is_rejected() {
+        let g = chain_cnn();
+        let res = apply_segment(&g, &seg_of(&g, &["c1", "dw"], 2)).unwrap();
+        let ng = &res.graph;
+        let slice = ng.op_by_name("c1#s0").unwrap().id;
+        let e = apply_segment(ng, &SegmentSplit { ops: vec![slice], factor: 2 });
+        assert!(e.is_err());
+    }
+
+    #[test]
+    fn plan_composes_sources_to_the_original_graph() {
+        let g = chain_cnn();
+        let plan = SplitPlan {
+            steps: vec![seg_of(&g, &["c1", "dw"], 2)],
+        };
+        let res = apply_plan(&g, &plan).unwrap();
+        assert_eq!(res.sources.len(), res.graph.n_tensors());
+        // Every slab of dw maps back to the original dw tensor.
+        let old_dw = g.tensor_by_name("dw").unwrap().id;
+        for j in 0..2 {
+            let slab = res.graph.tensor_by_name(&format!("dw#s{j}")).unwrap();
+            assert_eq!(res.sources[slab.id], old_dw);
+        }
+        // Untouched weights map to themselves by name.
+        let old_w = g.tensor_by_name("pw.w").unwrap().id;
+        let new_w = res.graph.tensor_by_name("pw.w").unwrap();
+        assert_eq!(res.sources[new_w.id], old_w);
+    }
+
+    #[test]
+    fn serde_roundtrips_split_graphs() {
+        let g = chain_cnn();
+        let res = apply_segment(&g, &seg_of(&g, &["c1", "dw", "pw"], 2)).unwrap();
+        let mf = crate::graph::serde::ModelFile::new(res.graph.clone());
+        let back = crate::graph::serde::ModelFile::from_json(&mf.to_json()).unwrap();
+        assert_eq!(back.graph.n_ops(), res.graph.n_ops());
+        for (a, b) in res.graph.ops.iter().zip(&back.graph.ops) {
+            assert_eq!(a.kind, b.kind, "op {}", a.name);
+        }
+        assert_eq!(
+            sched::peak_of(&back.graph, &back.graph.default_order()),
+            sched::peak_of(&res.graph, &res.graph.default_order())
+        );
+    }
+}

@@ -1,0 +1,382 @@
+//! `SplitPlan` search: co-optimize split factors and execution order.
+//!
+//! The outer loop is greedy and bottleneck-driven. Each round: simulate
+//! the current optimal schedule, anchor candidate chain segments at the
+//! operators touching the peak step, try every factor up to
+//! [`SplitOptions::max_factor`], score each rewrite by re-running
+//! Algorithm 1 ([`crate::sched::optimal`]) on the rewritten graph, and
+//! commit the strictly best improvement. Rounds stop when the SRAM budget
+//! is met, no candidate improves the peak, or `max_rounds` is reached.
+//! Scoring by the *scheduler's* optimum on the *whole* graph is the
+//! co-optimization: a split only survives if it helps after reordering.
+
+use super::rewrite::{apply_segment, SegmentSplit, SplitPlan, SplitResult};
+use super::SplitError;
+use crate::graph::{Graph, OpId, OpKind, TensorId};
+use crate::sched::{self, MemTrace, Schedule};
+
+/// Knobs for the greedy split search.
+#[derive(Clone, Debug)]
+pub struct SplitOptions {
+    /// Largest slice count tried per segment.
+    pub max_factor: usize,
+    /// Longest chain segment (in ops) considered.
+    pub max_segment: usize,
+    /// Stop as soon as the optimal peak fits this many bytes
+    /// (`None` = squeeze as far as the rounds allow).
+    pub sram_budget: Option<usize>,
+    /// Greedy rounds (= maximum number of segments introduced).
+    pub max_rounds: usize,
+    /// Cap on candidate segments scored per round.
+    pub max_candidates: usize,
+}
+
+impl Default for SplitOptions {
+    fn default() -> Self {
+        SplitOptions {
+            max_factor: 4,
+            max_segment: 4,
+            sram_budget: None,
+            max_rounds: 3,
+            max_candidates: 48,
+        }
+    }
+}
+
+impl SplitOptions {
+    /// Cheaper preset for tests and quick CLI runs.
+    pub fn quick() -> Self {
+        SplitOptions { max_factor: 3, max_rounds: 1, max_candidates: 24, ..Self::default() }
+    }
+}
+
+/// One committed greedy round.
+#[derive(Clone, Debug)]
+pub struct SplitStep {
+    /// Names of the segment's ops at the time of the split.
+    pub segment: Vec<String>,
+    pub factor: usize,
+    pub peak_before: usize,
+    pub peak_after: usize,
+}
+
+/// Result of the split search.
+#[derive(Clone, Debug)]
+pub struct SplitOutcome {
+    /// The rewritten graph (identical to the input when no split helped).
+    pub graph: Graph,
+    /// Tensor provenance back to the *original* graph (see
+    /// [`SplitResult::sources`]).
+    pub sources: Vec<TensorId>,
+    /// Optimal schedule of `graph`.
+    pub schedule: Schedule,
+    /// Reorder-only optimal peak of the input graph (the baseline).
+    pub base_peak: usize,
+    pub steps: Vec<SplitStep>,
+    /// The committed plan (op ids are per intermediate graph; replay with
+    /// [`super::apply_plan`]).
+    pub plan: SplitPlan,
+}
+
+impl SplitOutcome {
+    /// Did splitting beat reorder-only scheduling?
+    pub fn improved(&self) -> bool {
+        self.schedule.peak_bytes < self.base_peak
+    }
+
+    /// Carry a weight store of the *original* graph onto the split graph
+    /// (see [`super::remap_weight_store`]).
+    pub fn remap_weights(&self, ws: &crate::interp::WeightStore) -> crate::interp::WeightStore {
+        super::rewrite::remap_weights_by_sources(ws, &self.sources)
+    }
+}
+
+fn is_windowed(kind: &OpKind) -> bool {
+    matches!(
+        kind,
+        OpKind::Conv2D { .. }
+            | OpKind::DepthwiseConv2D { .. }
+            | OpKind::MaxPool2D { .. }
+            | OpKind::AvgPool2D { .. }
+    )
+}
+
+fn is_pointwise(kind: &OpKind) -> bool {
+    matches!(kind, OpKind::Relu | OpKind::Relu6 | OpKind::BatchNorm { .. })
+}
+
+fn nhwc1(shape: &[usize]) -> bool {
+    shape.len() == 4 && shape[0] == 1
+}
+
+/// Can `o` sit inside a row-split chain?
+fn sliceable(g: &Graph, o: OpId) -> bool {
+    let op = &g.ops[o];
+    op.inputs.len() == 1
+        && (is_windowed(&op.kind) || is_pointwise(&op.kind))
+        && nhwc1(&g.tensors[op.inputs[0]].shape)
+        && nhwc1(&g.tensors[op.output].shape)
+}
+
+/// The unique activation consumer of `t`, unless `t` is a graph output.
+fn sole_consumer(g: &Graph, t: TensorId) -> Option<OpId> {
+    if g.outputs.contains(&t) {
+        return None;
+    }
+    let mut it = g.tensors[t].consumers.iter().filter(|&&c| g.ops[c].inputs.contains(&t));
+    let first = *it.next()?;
+    if it.next().is_some() {
+        return None;
+    }
+    Some(first)
+}
+
+/// Maximal sliceable single-consumer chain through `anchor`, in execution
+/// order. Empty if `anchor` itself is not sliceable.
+fn chain_through(g: &Graph, anchor: OpId) -> Vec<OpId> {
+    if !sliceable(g, anchor) {
+        return Vec::new();
+    }
+    let mut chain = vec![anchor];
+    loop {
+        let head = chain[0];
+        let input = g.ops[head].inputs[0];
+        let Some(prev) = g.tensors[input].producer else { break };
+        if !sliceable(g, prev) || sole_consumer(g, g.ops[prev].output) != Some(head) {
+            break;
+        }
+        chain.insert(0, prev);
+    }
+    loop {
+        let tail = *chain.last().unwrap();
+        let Some(next) = sole_consumer(g, g.ops[tail].output) else { break };
+        if !sliceable(g, next) {
+            break;
+        }
+        chain.push(next);
+    }
+    chain
+}
+
+/// All maximal sliceable chains of `g` (each op appears in at most one).
+pub fn find_chains(g: &Graph) -> Vec<Vec<OpId>> {
+    let mut seen = vec![false; g.ops.len()];
+    let mut out = Vec::new();
+    for o in 0..g.ops.len() {
+        if seen[o] || !sliceable(g, o) {
+            continue;
+        }
+        let chain = chain_through(g, o);
+        for &c in &chain {
+            seen[c] = true;
+        }
+        out.push(chain);
+    }
+    out
+}
+
+/// Sub-segments (windowed head, length ≤ `max_segment`) of the chain
+/// through `anchor` that contain `anchor`.
+fn segments_around(g: &Graph, anchor: OpId, max_segment: usize) -> Vec<Vec<OpId>> {
+    let chain = chain_through(g, anchor);
+    let Some(pos) = chain.iter().position(|&o| o == anchor) else {
+        return Vec::new();
+    };
+    let mut segs = Vec::new();
+    for s in 0..=pos {
+        if !is_windowed(&g.ops[chain[s]].kind) {
+            continue;
+        }
+        for e in pos..chain.len() {
+            if e + 1 - s > max_segment {
+                break;
+            }
+            segs.push(chain[s..=e].to_vec());
+        }
+    }
+    segs
+}
+
+/// Candidate segments for one greedy round: chains anchored at the ops
+/// touching the peak step of `trace` (the op executing there, plus the
+/// producers and consumers of every tensor resident there), and every
+/// splittable `Dense`.
+pub fn candidate_segments(
+    g: &Graph,
+    trace: &MemTrace,
+    opts: &SplitOptions,
+) -> Vec<Vec<OpId>> {
+    let step = &trace.steps[trace.peak_step];
+    let mut anchors: Vec<OpId> = vec![step.op];
+    for &t in &step.resident {
+        if let Some(p) = g.tensors[t].producer {
+            anchors.push(p);
+        }
+        for &c in &g.tensors[t].consumers {
+            if g.ops[c].inputs.contains(&t) {
+                anchors.push(c);
+            }
+        }
+    }
+    anchors.sort_unstable();
+    anchors.dedup();
+
+    let mut segs: Vec<Vec<OpId>> = Vec::new();
+    for a in anchors {
+        for s in segments_around(g, a, opts.max_segment) {
+            if !segs.contains(&s) {
+                segs.push(s);
+            }
+        }
+    }
+    // The cap applies to the combinatorial chain segments only; Dense
+    // candidates (at most one per dense op) are always scored.
+    segs.truncate(opts.max_candidates);
+    for op in &g.ops {
+        if let OpKind::Dense { .. } = op.kind {
+            let out = &g.tensors[op.output].shape;
+            if out.len() == 2 && out[1] >= 2 {
+                let s = vec![op.id];
+                if !segs.contains(&s) {
+                    segs.push(s);
+                }
+            }
+        }
+    }
+    segs
+}
+
+/// Greedy split search (see module docs). The outcome's `graph` equals the
+/// input graph when no split strictly improves the reorder-only peak.
+pub fn optimize(g: &Graph, opts: &SplitOptions) -> Result<SplitOutcome, SplitError> {
+    let (base, _) = sched::optimal(g).map_err(|e| SplitError::Schedule(e.to_string()))?;
+    let base_peak = base.peak_bytes;
+
+    let mut cur_graph = g.clone();
+    let mut cur_sources: Vec<TensorId> = (0..g.tensors.len()).collect();
+    let mut cur_sched = base;
+    let mut steps: Vec<SplitStep> = Vec::new();
+    let mut plan = SplitPlan::default();
+
+    for _round in 0..opts.max_rounds {
+        if let Some(budget) = opts.sram_budget {
+            if cur_sched.peak_bytes <= budget {
+                break;
+            }
+        }
+        let trace = sched::simulate(&cur_graph, &cur_sched.order);
+        let mut best: Option<(SplitResult, Schedule, SegmentSplit)> = None;
+        for seg_ops in candidate_segments(&cur_graph, &trace, opts) {
+            for factor in 2..=opts.max_factor {
+                let seg = SegmentSplit { ops: seg_ops.clone(), factor };
+                let Ok(res) = apply_segment(&cur_graph, &seg) else { continue };
+                let Ok((s, _)) = sched::optimal(&res.graph) else { continue };
+                let to_beat =
+                    best.as_ref().map_or(cur_sched.peak_bytes, |(_, b, _)| b.peak_bytes);
+                if s.peak_bytes < to_beat {
+                    best = Some((res, s, seg));
+                }
+            }
+        }
+        let Some((res, s, seg)) = best else { break };
+        steps.push(SplitStep {
+            segment: seg.ops.iter().map(|&o| cur_graph.ops[o].name.clone()).collect(),
+            factor: seg.factor,
+            peak_before: cur_sched.peak_bytes,
+            peak_after: s.peak_bytes,
+        });
+        plan.steps.push(seg);
+        let composed: Vec<TensorId> =
+            res.sources.iter().map(|&mid| cur_sources[mid]).collect();
+        cur_sources = composed;
+        cur_graph = res.graph;
+        cur_sched = s;
+    }
+
+    Ok(SplitOutcome {
+        graph: cur_graph,
+        sources: cur_sources,
+        schedule: cur_sched,
+        base_peak,
+        steps,
+        plan,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::DType;
+    use crate::models;
+
+    #[test]
+    fn mobilenet_is_one_long_chain() {
+        let g = models::mobilenet_v1_025(DType::I8);
+        let chains = find_chains(&g);
+        // conv1 .. pw13 — everything except gap/fc/softmax.
+        assert_eq!(chains.len(), 1);
+        assert_eq!(chains[0].len(), 27);
+        assert_eq!(chains[0][0], g.op_by_name("conv1").unwrap().id);
+    }
+
+    #[test]
+    fn swiftnet_chains_follow_branches() {
+        let g = models::swiftnet_cell(DType::I8);
+        let chains = find_chains(&g);
+        // Branch a of cell 1 (a1→a2→a3) is one chain.
+        let a1 = g.op_by_name("c1.a1").unwrap().id;
+        let a3 = g.op_by_name("c1.a3").unwrap().id;
+        let chain = chains.iter().find(|c| c.contains(&a1)).unwrap();
+        assert!(chain.contains(&a3));
+        // Chains never cross the concat.
+        let cat = g.op_by_name("c1.cat").unwrap().id;
+        assert!(!chain.contains(&cat));
+    }
+
+    #[test]
+    fn segments_have_windowed_heads_and_contain_anchor() {
+        let g = models::mobilenet_v1_025(DType::I8);
+        let anchor = g.op_by_name("pw1").unwrap().id;
+        let segs = segments_around(&g, anchor, 4);
+        assert!(!segs.is_empty());
+        for s in &segs {
+            assert!(s.len() <= 4);
+            assert!(s.contains(&anchor));
+            assert!(is_windowed(&g.ops[s[0]].kind));
+        }
+    }
+
+    #[test]
+    fn optimize_beats_reorder_only_on_mobilenet() {
+        let g = models::mobilenet_v1_025(DType::I8);
+        let out = optimize(&g, &SplitOptions::quick()).unwrap();
+        assert!(
+            out.improved(),
+            "split+reorder {} should beat reorder-only {}",
+            out.schedule.peak_bytes,
+            out.base_peak
+        );
+        assert!(!out.steps.is_empty());
+        out.graph.validate().unwrap();
+        out.graph.check_order(&out.schedule.order).unwrap();
+    }
+
+    #[test]
+    fn optimize_respects_budget_and_stops() {
+        let g = models::mobilenet_v1_025(DType::I8);
+        // Budget already met by reorder-only → no splits.
+        let lax = SplitOptions { sram_budget: Some(1 << 20), ..SplitOptions::quick() };
+        let out = optimize(&g, &lax).unwrap();
+        assert!(out.steps.is_empty());
+        assert_eq!(out.schedule.peak_bytes, out.base_peak);
+    }
+
+    #[test]
+    fn optimize_leaves_unsplittable_graphs_alone() {
+        let g = models::figure1();
+        let out = optimize(&g, &SplitOptions::quick()).unwrap();
+        assert!(out.steps.is_empty());
+        assert_eq!(out.schedule.peak_bytes, out.base_peak);
+        assert_eq!(out.graph.n_ops(), g.n_ops());
+    }
+}

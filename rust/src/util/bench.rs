@@ -207,6 +207,53 @@ pub fn fmt_kb(bytes: usize) -> String {
     format!("{:.1}KB", bytes as f64 / 1024.0)
 }
 
+/// Write a machine-readable benchmark report `BENCH_<name>.json` into the
+/// current directory: named scalar metrics plus every recorded timing row.
+/// The perf/memory trajectory across PRs is tracked from these files.
+pub fn write_json_report(
+    name: &str,
+    metrics: &[(String, f64)],
+    timings: &[BenchResult],
+) -> std::io::Result<String> {
+    write_json_report_to(std::path::Path::new("."), name, metrics, timings)
+}
+
+/// [`write_json_report`] into an explicit directory.
+pub fn write_json_report_to(
+    dir: &std::path::Path,
+    name: &str,
+    metrics: &[(String, f64)],
+    timings: &[BenchResult],
+) -> std::io::Result<String> {
+    use crate::util::json::Json;
+    use std::collections::BTreeMap;
+    let mut m: BTreeMap<String, Json> = BTreeMap::new();
+    for (k, v) in metrics {
+        m.insert(k.clone(), Json::Num(*v));
+    }
+    let rows: Vec<Json> = timings
+        .iter()
+        .map(|r| {
+            Json::obj(vec![
+                ("name", Json::Str(r.name.clone())),
+                ("mean_ns", Json::Num(r.mean_ns)),
+                ("stddev_ns", Json::Num(r.stddev_ns)),
+                ("min_ns", Json::Num(r.min_ns)),
+                ("max_ns", Json::Num(r.max_ns)),
+                ("iters", Json::Num(r.iters as f64)),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("bench", Json::Str(name.to_string())),
+        ("metrics", Json::Obj(m)),
+        ("timings", Json::Arr(rows)),
+    ]);
+    let path = dir.join(format!("BENCH_{name}.json"));
+    std::fs::write(&path, doc.to_pretty())?;
+    Ok(path.display().to_string())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -244,5 +291,27 @@ mod tests {
         assert_eq!(fmt_ns(12.3), "12.3 ns");
         assert_eq!(fmt_ns(12_300.0), "12.30 µs");
         assert_eq!(fmt_kb(2048), "2.0KB");
+    }
+
+    #[test]
+    fn json_report_roundtrips() {
+        use crate::util::json::Json;
+        let dir = std::env::temp_dir();
+        let timings = [BenchResult {
+            name: "x/y".into(),
+            iters: 10,
+            mean_ns: 1.5,
+            stddev_ns: 0.1,
+            min_ns: 1.0,
+            max_ns: 2.0,
+        }];
+        let metrics = [("model.peak".to_string(), 55296.0)];
+        let path = write_json_report_to(&dir, "unit_test", &metrics, &timings).unwrap();
+        let src = std::fs::read_to_string(&path).unwrap();
+        let v = Json::parse(&src).unwrap();
+        assert_eq!(v.get("bench").as_str(), Some("unit_test"));
+        assert_eq!(v.get("metrics").get("model.peak").as_f64(), Some(55296.0));
+        assert_eq!(v.get("timings").as_arr().unwrap().len(), 1);
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -1,0 +1,127 @@
+//! Minimal `anyhow`-style error handling (the `anyhow` crate is not
+//! vendored in this environment).
+//!
+//! Provides exactly the pieces the CLI, runtime and serving layers use: an
+//! opaque [`Error`] any `std::error::Error` converts into, a [`Result`]
+//! alias whose error type defaults to it, a [`Context`] extension trait,
+//! and the [`anyhow!`]/[`bail!`] macros.
+//!
+//! `Error` deliberately does *not* implement `std::error::Error`: that is
+//! what keeps the blanket `From<E: std::error::Error>` impl coherent with
+//! the reflexive `From<T> for T` (the same trick `anyhow` itself uses).
+
+use std::fmt;
+
+/// Opaque error value: a flattened message chain.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable (what `anyhow!` expands to).
+    pub fn msg(m: impl fmt::Display) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prepend context to the message chain.
+    pub fn context(self, c: impl fmt::Display) -> Error {
+        Error { msg: format!("{c}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `Result` with a defaulted error type, like `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context()` / `.with_context()` to results.
+pub trait Context<T> {
+    /// Wrap the error with a fixed context message.
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error>;
+    /// Wrap the error with a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T, Error> {
+        self.map_err(|e| Error::msg(format!("{c}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+/// Format an [`Error`] from format-string arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($($t:tt)*) => { $crate::util::error::Error::msg(format!($($t)*)) };
+}
+
+/// Early-return with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => { return Err($crate::anyhow!($($t)*)) };
+}
+
+pub use crate::{anyhow, bail};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Result<u32> {
+        Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"))
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<u32> {
+            let v = io_err()?;
+            Ok(v)
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("gone"));
+    }
+
+    #[test]
+    fn macros_format() {
+        let e = anyhow!("bad {} of {}", 3, "five");
+        assert_eq!(e.to_string(), "bad 3 of five");
+        fn bails() -> Result<()> {
+            bail!("stop {}", 42)
+        }
+        assert_eq!(bails().unwrap_err().to_string(), "stop 42");
+    }
+
+    #[test]
+    fn context_prepends() {
+        let r: Result<u32> = io_err().with_context(|| "reading config");
+        let msg = r.unwrap_err().to_string();
+        assert!(msg.starts_with("reading config: "), "{msg}");
+        let r2: Result<u32> = io_err().context("fixed");
+        assert!(r2.unwrap_err().to_string().starts_with("fixed: "));
+    }
+
+    #[test]
+    fn defaulted_result_alias_is_two_param() {
+        let r: Result<u32, String> = Err("plain".into());
+        assert_eq!(r.unwrap_err(), "plain");
+    }
+}

@@ -3,6 +3,8 @@
 //! This environment vendors only the `xla` crate stack, so the facilities a
 //! project would normally pull from crates.io are implemented here:
 //!
+//! - [`error`] — `anyhow`-style error value + context trait + macros
+//!   (replaces `anyhow`).
 //! - [`json`] — JSON parser/emitter (replaces `serde_json`) for the model
 //!   format, artifact manifests and reports.
 //! - [`rng`] — deterministic xoshiro256** PRNG (replaces `rand`).
@@ -14,6 +16,7 @@
 
 pub mod bench;
 pub mod bitset;
+pub mod error;
 pub mod json;
 pub mod prop;
 pub mod rng;

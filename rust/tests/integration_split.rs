@@ -1,0 +1,227 @@
+//! Cross-layer integration of the partial-execution subsystem:
+//! splitter ↔ scheduler ↔ interpreter ↔ allocator/planner ↔ transforms.
+//!
+//! The acceptance properties of the subsystem live here:
+//! - split+reorder achieves *strictly* lower peak SRAM than reorder-only
+//!   on a zoo model (MobileNet — a pure chain, where reordering alone is
+//!   provably useless);
+//! - split-graph execution matches the unsplit graph bit-exactly for int8
+//!   and within 1e-5 for f32;
+//! - split graphs flow through the offline planner and the dynamic arena
+//!   with byte-exact accounting;
+//! - fused/BN-folded graphs round-trip through splitting numerically.
+
+use mcu_reorder::alloc::StaticPlan;
+use mcu_reorder::graph::{transform, Act, DType, GraphBuilder, Padding};
+use mcu_reorder::interp::{calibrate, ExecConfig, Interpreter, TensorData, WeightStore};
+use mcu_reorder::models;
+use mcu_reorder::sched;
+use mcu_reorder::split::{self, SegmentSplit, SplitOptions};
+
+fn ramp(n: usize) -> Vec<f32> {
+    (0..n).map(|i| ((i % 17) as f32 - 8.0) / 8.0).collect()
+}
+
+/// MobileNet is sequential, so Algorithm 1 cannot improve on the default
+/// order (asserted in the seed tests). Splitting must break that floor.
+#[test]
+fn split_plus_reorder_beats_reorder_only_on_mobilenet() {
+    let g = models::mobilenet_v1_025(DType::I8);
+    let reorder_only = sched::optimal(&g).unwrap().0.peak_bytes;
+    assert_eq!(reorder_only, 55_296, "baseline drifted");
+
+    let out = split::optimize(&g, &SplitOptions::quick()).unwrap();
+    assert!(
+        out.schedule.peak_bytes < reorder_only,
+        "split+reorder {} must be strictly below reorder-only {reorder_only}",
+        out.schedule.peak_bytes
+    );
+    // The broken floor is substantial, not epsilon.
+    assert!(
+        out.schedule.peak_bytes <= reorder_only * 95 / 100,
+        "expected >=5% saving, got {} vs {reorder_only}",
+        out.schedule.peak_bytes
+    );
+    out.graph.validate().unwrap();
+    out.graph.check_order(&out.schedule.order).unwrap();
+}
+
+/// f32: the full split pipeline (search → rewrite → remap → execute)
+/// reproduces the unsplit outputs within 1e-5 (they are bit-equal in
+/// practice — the slice kernels take identical taps in identical order).
+#[test]
+fn split_mobilenet_f32_matches_unsplit() {
+    let g = models::mobilenet_v1_025(DType::F32);
+    let ws = WeightStore::seeded_f32(&g, 42);
+    let input = TensorData::F32(ramp(g.tensors[g.inputs[0]].elems()));
+
+    let base = Interpreter::new(&g, ws.clone(), ExecConfig::with_capacity(1 << 24))
+        .run(&[input.clone()])
+        .unwrap();
+
+    let out = split::optimize(&g, &SplitOptions::quick()).unwrap();
+    assert!(!out.steps.is_empty(), "expected at least one split on mobilenet f32");
+    let ws_split = out.remap_weights(&ws);
+    let cfg = ExecConfig {
+        order: Some(out.schedule.order.clone()),
+        ..ExecConfig::with_capacity(1 << 24)
+    };
+    let split_run = Interpreter::new(&out.graph, ws_split, cfg).run(&[input]).unwrap();
+
+    let a = base.outputs[0].as_f32().unwrap();
+    let b = split_run.outputs[0].as_f32().unwrap();
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(b) {
+        assert!((x - y).abs() < 1e-5, "f32 drift: {x} vs {y}");
+    }
+}
+
+/// int8: quantize the unsplit graph, split it, remap weights + qparams —
+/// outputs must be bit-exact.
+#[test]
+fn split_mobilenet_i8_is_bit_exact() {
+    let g_f32 = models::mobilenet_v1_025(DType::F32);
+    let ws_f32 = WeightStore::seeded_f32(&g_f32, 42);
+    let input_f = TensorData::F32(ramp(g_f32.tensors[g_f32.inputs[0]].elems()));
+    let ranges = calibrate(&g_f32, &ws_f32, &[input_f.clone()], 1 << 24).unwrap();
+
+    let g_i8 = models::mobilenet_v1_025(DType::I8);
+    let ws_i8 = WeightStore::quantize_from(&g_i8, &ws_f32, &ranges);
+    let in_q = ws_i8.qparams[&g_i8.inputs[0]];
+    let input_q = TensorData::I8(in_q.quantize(input_f.as_f32().unwrap()));
+
+    let base = Interpreter::new(&g_i8, ws_i8.clone(), ExecConfig::with_capacity(1 << 22))
+        .run(&[input_q.clone()])
+        .unwrap();
+
+    let out = split::optimize(&g_i8, &SplitOptions::quick()).unwrap();
+    assert!(!out.steps.is_empty());
+    let ws_split = out.remap_weights(&ws_i8);
+    let cfg = ExecConfig {
+        order: Some(out.schedule.order.clone()),
+        ..ExecConfig::with_capacity(1 << 22)
+    };
+    let split_run =
+        Interpreter::new(&out.graph, ws_split, cfg).run(&[input_q]).unwrap();
+
+    assert_eq!(base.outputs, split_run.outputs, "int8 split output must be bit-exact");
+    // And the arena agrees with the analytic accounting on the split graph.
+    assert_eq!(split_run.alloc.high_water, out.schedule.peak_bytes);
+    assert!(split_run.alloc.high_water < base.alloc.high_water);
+}
+
+/// The split graph's slice tensors flow through the §6 offline best-fit
+/// planner: no overlaps, arena between the peak and the activation total.
+#[test]
+fn planner_places_slice_tensors() {
+    let g = models::mobilenet_v1_025(DType::I8);
+    let out = split::optimize(&g, &SplitOptions::quick()).unwrap();
+    let plan = StaticPlan::best_fit(&out.graph, &out.schedule.order);
+    plan.check_no_overlap(&out.graph, &out.schedule.order).unwrap();
+    assert!(plan.arena_bytes >= out.schedule.peak_bytes);
+    assert!(plan.arena_bytes <= out.graph.activation_total());
+}
+
+/// Budget-driven search: ask for a budget between split+reorder and
+/// reorder-only; the search must meet it and then stop splitting.
+#[test]
+fn budget_driven_search_meets_target() {
+    let g = models::mobilenet_v1_025(DType::I8);
+    let unconstrained = split::optimize(&g, &SplitOptions::quick()).unwrap();
+    let budget = (unconstrained.schedule.peak_bytes + unconstrained.base_peak) / 2;
+    let opts = SplitOptions { sram_budget: Some(budget), max_rounds: 4, ..SplitOptions::quick() };
+    let out = split::optimize(&g, &opts).unwrap();
+    assert!(
+        out.schedule.peak_bytes <= budget,
+        "budget {budget} not met: {}",
+        out.schedule.peak_bytes
+    );
+}
+
+/// Satellite: graph::transform + split interaction. A conv→bn→relu network
+/// is BN-folded and activation-fused first, then split; the composed
+/// pipeline must stay numerically equivalent end to end.
+#[test]
+fn folded_fused_graphs_split_equivalently() {
+    let mut b = GraphBuilder::new("bnspy");
+    let x = b.input("x", &[1, 10, 10, 3], DType::F32);
+    let c1 = b.conv2d("c1", x, 8, (3, 3), (1, 1), Padding::Same, Act::Linear);
+    let bn1 = b.batchnorm("bn1", c1, 1e-3);
+    let r1 = b.relu6("r1", bn1);
+    let c2 = b.conv2d("c2", r1, 4, (3, 3), (2, 2), Padding::Same, Act::Linear);
+    let bn2 = b.batchnorm("bn2", c2, 1e-3);
+    let r2 = b.relu("r2", bn2);
+    let gap = b.global_avgpool("gap", r2);
+    let fc = b.dense("fc", gap, 3, Act::Linear);
+    b.output(fc);
+    let g = b.finish().unwrap();
+
+    let ws = WeightStore::seeded_f32(&g, 31);
+    let input = TensorData::F32(ramp(300));
+    let base = Interpreter::new(&g, ws.clone(), ExecConfig::with_capacity(1 << 20))
+        .run(&[input.clone()])
+        .unwrap();
+
+    // Fold BN, fuse activations (the converter pipeline)…
+    let (folded, tmap1, folds, n_bn) = transform::fold_batchnorm(&g);
+    assert_eq!(n_bn, 2);
+    let mut ws_folded = transform::remap_weights(&ws, &tmap1);
+    transform::fold_batchnorm_weights(&folded, &mut ws_folded, &ws, &folds);
+    let (fused, tmap2, n_act) = transform::fuse_activations(&folded);
+    assert_eq!(n_act, 2);
+    let ws_fused = transform::remap_weights(&ws_folded, &tmap2);
+
+    // …then split the fused chain c1→c2.
+    let seg = SegmentSplit {
+        ops: vec![
+            fused.op_by_name("c1").unwrap().id,
+            fused.op_by_name("c2").unwrap().id,
+        ],
+        factor: 2,
+    };
+    let res = split::apply_segment(&fused, &seg).unwrap();
+    let ws_split = split::remap_weight_store(&ws_fused, &res);
+    let out = Interpreter::new(&res.graph, ws_split, ExecConfig::with_capacity(1 << 20))
+        .run(&[input.clone()])
+        .unwrap();
+
+    let a = base.outputs[0].as_f32().unwrap();
+    let c = out.outputs[0].as_f32().unwrap();
+    for (x, y) in a.iter().zip(c) {
+        assert!((x - y).abs() < 1e-4, "fold+fuse+split drift: {x} vs {y}");
+    }
+
+    // The fused split graph must also beat the unsplit fused graph's
+    // reorder-only peak (it is a pure chain).
+    let base_peak = sched::optimal(&fused).unwrap().0.peak_bytes;
+    let split_peak = sched::optimal(&res.graph).unwrap().0.peak_bytes;
+    assert!(split_peak < base_peak, "{split_peak} vs {base_peak}");
+}
+
+/// SwiftNet: splitting composes with a branchy graph where reordering
+/// already helps — the combination must not be worse than reorder-only.
+#[test]
+fn swiftnet_split_never_hurts() {
+    let g = models::swiftnet_cell(DType::I8);
+    let out = split::optimize(&g, &SplitOptions::quick()).unwrap();
+    assert!(out.schedule.peak_bytes <= out.base_peak);
+    out.graph.validate().unwrap();
+}
+
+/// The split CLI surface: a split model file round-trips with its embedded
+/// schedule and reproduces the same peak.
+#[test]
+fn split_model_file_roundtrip() {
+    let g = models::mobilenet_v1_025(DType::I8);
+    let out = split::optimize(&g, &SplitOptions::quick()).unwrap();
+    let mf = mcu_reorder::graph::serde::ModelFile {
+        graph: out.graph.clone(),
+        execution_order: Some(out.schedule.order.clone()),
+    };
+    let back = mcu_reorder::graph::serde::ModelFile::from_json(&mf.to_json()).unwrap();
+    assert_eq!(back.effective_order(), out.schedule.order);
+    assert_eq!(
+        sched::peak_of(&back.graph, &back.effective_order()),
+        out.schedule.peak_bytes
+    );
+}
