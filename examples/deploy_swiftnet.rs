@@ -43,7 +43,12 @@ fn main() {
 
     let kb = |b: usize| format!("{:.0}KB", b as f64 / 1000.0);
     let mut t = Table::new(&["", "default order", "optimal order", "paper"]);
-    t.row(&["peak memory (excl. overheads)".into(), kb(default_peak), kb(opt.peak_bytes), "351KB / 301KB".into()]);
+    t.row(&[
+        "peak memory (excl. overheads)".into(),
+        kb(default_peak),
+        kb(opt.peak_bytes),
+        "351KB / 301KB".into(),
+    ]);
     t.row(&[
         "framework overhead".into(),
         kb(rep_d.overhead_bytes),
@@ -77,7 +82,9 @@ fn main() {
     let n = g32.tensors[g32.inputs[0]].elems();
     let input = TensorData::F32((0..n).map(|i| ((i % 17) as f32 - 8.0) / 8.0).collect());
 
-    match Interpreter::new(&g32, ws.clone(), ExecConfig::with_capacity(arena)).run(&[input.clone()]) {
+    let default_run = Interpreter::new(&g32, ws.clone(), ExecConfig::with_capacity(arena))
+        .run(&[input.clone()]);
+    match default_run {
         Err(e) => println!("\ndefault order in the SRAM-budget arena: OOM as expected ({e})"),
         Ok(_) => println!("\nunexpected: default order fit"),
     }

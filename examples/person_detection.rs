@@ -53,8 +53,8 @@ fn main() {
 
     // Static allocation baseline (old TFLM: every tensor pre-allocated).
     let static_plan = StaticPlan::no_reuse(&g_i8);
-    let mut static_stats = AllocStats::default();
-    static_stats.high_water = static_plan.arena_bytes;
+    let static_stats =
+        AllocStats { high_water: static_plan.arena_bytes, ..AllocStats::default() };
 
     // Cost model calibrated to the paper's measured static row.
     let board = &NUCLEO_F767ZI;

@@ -51,7 +51,10 @@ fn main() {
         )
         .expect("coordinator start"),
     );
-    println!("workers ready in {:.2}s (artifact compiled per worker)\n", t0.elapsed().as_secs_f64());
+    println!(
+        "workers ready in {:.2}s (artifact compiled per worker)\n",
+        t0.elapsed().as_secs_f64()
+    );
 
     // Synthetic camera frames: deterministic per request id.
     let frame = |req: usize| -> Vec<f32> {

@@ -46,13 +46,20 @@ fn main() {
     let peak = sched::peak_of(&g, &order);
     let board = &NUCLEO_F767ZI;
 
-    let mut static_stats = AllocStats::default();
-    static_stats.high_water = g.activation_total();
+    let static_stats =
+        AllocStats { high_water: g.activation_total(), ..AllocStats::default() };
     let model = CostModel::calibrated(&g, &static_stats, board, 1.316, 728.0);
     let base = model.estimate(&g, &static_stats, board);
 
     println!("=== allocation-strategy ablation (MobileNet trace) ===\n");
-    let mut t = Table::new(&["strategy", "arena needed", "bytes moved", "compactions", "time overhead", "energy overhead"]);
+    let mut t = Table::new(&[
+        "strategy",
+        "arena needed",
+        "bytes moved",
+        "compactions",
+        "time overhead",
+        "energy overhead",
+    ]);
 
     // Static no-reuse.
     t.row(&[

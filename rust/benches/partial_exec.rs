@@ -1,12 +1,13 @@
-//! Bench: partial execution (spatial operator splitting) composed with
-//! operator reordering across the model zoo.
+//! Bench: partial execution (operator splitting along rows / columns /
+//! channels) composed with operator reordering across the model zoo.
 //!
 //! For every model: peak SRAM under (a) the as-built default order, (b)
-//! reorder-only (Algorithm 1 — the paper's result), (c) split-only (the
-//! split graph in its as-built order), and (d) split+reorder (the full
-//! co-optimization). Also reports the halo-recompute overhead the split
-//! pays. Results are written machine-readably to `BENCH_partial_exec.json`
-//! so the trajectory is tracked across PRs.
+//! reorder-only (Algorithm 1 — the paper's result), (c) the best
+//! *row-only* plan (the same beam planner restricted to the row axis),
+//! and (d) the beam planner over all (segment, factor, axis) moves, plus which axes
+//! the winning plan uses and the halo-recompute overhead it pays. Results
+//! are written machine-readably to `BENCH_partial_exec.json` so the
+//! trajectory is tracked across PRs and gated in CI (tools/bench_compare).
 
 use mcu_reorder::graph::{DType, Graph};
 use mcu_reorder::mcu::{CostModel, SplitOverhead, NUCLEO_F767ZI};
@@ -22,6 +23,7 @@ fn main() {
         ("mobilenet".into(), models::mobilenet_v1_025(DType::I8)),
         ("swiftnet".into(), models::swiftnet_cell(DType::I8)),
         ("resnet".into(), models::resnet_micro(DType::I8)),
+        ("audionet".into(), models::audionet(DType::I8)),
         ("tiny".into(), models::tiny_cnn(DType::I8)),
     ];
     // Synthetic DAGs: their operators are cost-model nodes without spatial
@@ -39,54 +41,80 @@ fn main() {
         "model",
         "default",
         "reorder-only",
-        "split-only",
-        "split+reorder",
-        "vs reorder",
+        "rows-only",
+        "beam (all axes)",
+        "axes",
+        "vs rows",
         "recompute",
     ]);
     let mut metrics: Vec<(String, f64)> = Vec::new();
+    let mut beam_wins = 0usize;
 
     for (name, g) in &zoo {
         let default_peak = sched::peak_of(g, &g.default_order());
-        let outcome = split::optimize(g, &opts).expect("split search");
+        let rows = split::optimize(g, &opts.clone().rows_only()).expect("rows-only search");
+        let outcome = split::optimize(g, &opts).expect("beam split search");
         let reorder_peak = outcome.base_peak;
-        let split_only = sched::peak_of(&outcome.graph, &outcome.graph.default_order());
+        let rows_peak = rows.schedule.peak_bytes;
         let both = outcome.schedule.peak_bytes;
         let ov = SplitOverhead::measure(&cost, g, &outcome.graph, &NUCLEO_F767ZI);
-        let saving = 100.0 * (1.0 - both as f64 / reorder_peak as f64);
+        let axes = if outcome.steps.is_empty() {
+            "-".to_string()
+        } else {
+            outcome
+                .axes_used()
+                .iter()
+                .map(|a| a.name())
+                .collect::<Vec<_>>()
+                .join("+")
+        };
+        let vs_rows = 100.0 * (1.0 - both as f64 / rows_peak as f64);
+        if both < rows_peak {
+            beam_wins += 1;
+        }
         table.row(&[
             name.clone(),
             kb(default_peak),
             kb(reorder_peak),
-            kb(split_only),
+            kb(rows_peak),
             kb(both),
-            format!("-{saving:.1}%"),
+            axes,
+            format!("-{vs_rows:.1}%"),
             format!("+{:.1}% MACs", 100.0 * ov.recompute_frac()),
         ]);
         for (key, v) in [
             ("default_peak", default_peak as f64),
             ("reorder_peak", reorder_peak as f64),
-            ("split_only_peak", split_only as f64),
+            ("rows_only_peak", rows_peak as f64),
             ("split_reorder_peak", both as f64),
             ("segments", outcome.steps.len() as f64),
             ("recompute_frac", ov.recompute_frac()),
+            ("weight_traffic_ratio", ov.weight_traffic_ratio()),
         ] {
             metrics.push((format!("{name}.{key}"), v));
         }
     }
-    println!("=== partial execution × reordering: peak SRAM ===\n");
+    println!("=== partial execution × reordering: peak SRAM per split axis ===\n");
     table.print();
-    println!("\n(reorder-only = the paper's Algorithm 1; split+reorder breaks its single-operator floor)");
+    println!(
+        "\n(reorder-only = the paper's Algorithm 1; rows-only = the same beam planner \
+         restricted to the row axis; the full beam explores (segment, factor, axis) \
+         with axis ∈ {{rows, cols, channels}})"
+    );
+    println!("beam plan strictly beats the best row-only plan on {beam_wins} model(s)");
 
     // Timings of the search itself.
     let mut bch = Bencher::quick();
     let mnet = models::mobilenet_v1_025(DType::I8);
-    let swift = models::swiftnet_cell(DType::I8);
+    let audio = models::audionet(DType::I8);
     bch.bench("partial_exec/mobilenet-split-search", || {
         black_box(split::optimize(&mnet, &SplitOptions::quick()).unwrap())
     });
-    bch.bench("partial_exec/swiftnet-split-search", || {
-        black_box(split::optimize(&swift, &SplitOptions::quick()).unwrap())
+    bch.bench("partial_exec/audionet-beam-search", || {
+        black_box(
+            split::optimize(&audio, &SplitOptions { max_rounds: 2, ..SplitOptions::quick() })
+                .unwrap(),
+        )
     });
     bch.summary();
 

@@ -15,7 +15,8 @@ use mcu_reorder::util::stats;
 
 fn main() {
     println!("=== scheduler ablation: optimality gap (peak / optimal peak) ===\n");
-    let mut quality = Table::new(&["graph", "ops", "orders", "default", "greedy", "dfs", "optimal=1.0"]);
+    let mut quality =
+        Table::new(&["graph", "ops", "orders", "default", "greedy", "dfs", "optimal=1.0"]);
     let mut rng = Rng::new(2024);
     for (depth, width) in [(2, 2), (2, 3), (3, 2), (3, 3)] {
         let g = synth::series_parallel(&mut rng, depth, width);

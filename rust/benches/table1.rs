@@ -25,7 +25,8 @@ fn main() {
     let (swift_opt, _) = sched::optimal(&swift).unwrap();
     let overhead = OverheadModel::default();
     let fits_d = DeployReport::new(&swift, swift_default, &NUCLEO_F767ZI, &overhead).fits_sram;
-    let fits_o = DeployReport::new(&swift, swift_opt.peak_bytes, &NUCLEO_F767ZI, &overhead).fits_sram;
+    let fits_o =
+        DeployReport::new(&swift, swift_opt.peak_bytes, &NUCLEO_F767ZI, &overhead).fits_sram;
 
     // --- MobileNet columns -------------------------------------------------
     let mnet = models::mobilenet_v1_025(DType::I8);
@@ -40,8 +41,7 @@ fn main() {
     let interp = Interpreter::new(&mnet, ws_i8.clone(), ExecConfig::with_capacity(256 * 1024));
     let run = interp.run(&[qin.clone()]).unwrap();
 
-    let mut static_stats = AllocStats::default();
-    static_stats.high_water = static_bytes;
+    let static_stats = AllocStats { high_water: static_bytes, ..AllocStats::default() };
     let model = CostModel::calibrated(&mnet, &static_stats, &NUCLEO_F767ZI, 1.316, 728.0);
     let est_static = model.estimate(&mnet, &static_stats, &NUCLEO_F767ZI);
     let est_dyn = model.estimate(&mnet, &run.alloc, &NUCLEO_F767ZI);
@@ -75,14 +75,22 @@ fn main() {
         "N/A".into(),
         format!("{:.0} ms", est_swift.millis()),
         format!("{:.0} ms", est_static.millis()),
-        format!("{:.0} ms (+{:.2}%)", est_dyn.millis(), 100.0 * (est_dyn.seconds / est_static.seconds - 1.0)),
+        format!(
+            "{:.0} ms (+{:.2}%)",
+            est_dyn.millis(),
+            100.0 * (est_dyn.seconds / est_static.seconds - 1.0)
+        ),
     ]);
     t.row(&[
         "Energy use".into(),
         "N/A".into(),
         format!("{:.0} mJ", est_swift.energy_mj),
         format!("{:.0} mJ", est_static.energy_mj),
-        format!("{:.0} mJ (+{:.2}%)", est_dyn.energy_mj, 100.0 * (est_dyn.energy_mj / est_static.energy_mj - 1.0)),
+        format!(
+            "{:.0} mJ (+{:.2}%)",
+            est_dyn.energy_mj,
+            100.0 * (est_dyn.energy_mj / est_static.energy_mj - 1.0)
+        ),
     ]);
     t.print();
     println!("\npaper: 351KB/301KB (no/yes) · 241KB/55KB · 1316/1325ms (+0.68%) · 728/735mJ (+0.97%)\n");
@@ -90,7 +98,9 @@ fn main() {
     // --- timings of the pieces that generate the table ---------------------
     let mut b = Bencher::quick();
     b.bench("table1/swiftnet-optimal-schedule", || black_box(sched::optimal(&swift).unwrap()));
-    b.bench("table1/swiftnet-default-peak", || black_box(sched::peak_of(&swift, &swift.default_order())));
+    b.bench("table1/swiftnet-default-peak", || {
+        black_box(sched::peak_of(&swift, &swift.default_order()))
+    });
     b.bench("table1/mobilenet-static-plan", || black_box(StaticPlan::no_reuse(&mnet)));
     b.bench("table1/mobilenet-i8-arena-inference", || {
         let interp = Interpreter::new(&mnet, ws_i8.clone(), ExecConfig::with_capacity(256 * 1024));

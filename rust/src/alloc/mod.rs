@@ -75,9 +75,32 @@ mod tests {
     fn planner_bounds() {
         let mut b = GraphBuilder::new("t");
         let x = b.input("x", &[1, 16, 16, 4], DType::I8);
-        let c1 = b.conv2d("c1", x, 8, (3, 3), (2, 2), crate::graph::Padding::Same, crate::graph::Act::Linear);
-        let l = b.dwconv2d("dw", c1, (3, 3), (1, 1), crate::graph::Padding::Same, crate::graph::Act::Linear);
-        let r = b.conv2d("pw", c1, 8, (1, 1), (1, 1), crate::graph::Padding::Same, crate::graph::Act::Linear);
+        let c1 = b.conv2d(
+            "c1",
+            x,
+            8,
+            (3, 3),
+            (2, 2),
+            crate::graph::Padding::Same,
+            crate::graph::Act::Linear,
+        );
+        let l = b.dwconv2d(
+            "dw",
+            c1,
+            (3, 3),
+            (1, 1),
+            crate::graph::Padding::Same,
+            crate::graph::Act::Linear,
+        );
+        let r = b.conv2d(
+            "pw",
+            c1,
+            8,
+            (1, 1),
+            (1, 1),
+            crate::graph::Padding::Same,
+            crate::graph::Act::Linear,
+        );
         let cat = b.concat("cat", &[l, r]);
         b.output(cat);
         let g = b.finish().unwrap();

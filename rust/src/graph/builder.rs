@@ -29,7 +29,13 @@ impl GraphBuilder {
 
     // ---- tensors -------------------------------------------------------
 
-    fn add_tensor(&mut self, name: String, shape: Vec<usize>, dtype: DType, is_weight: bool) -> TensorId {
+    fn add_tensor(
+        &mut self,
+        name: String,
+        shape: Vec<usize>,
+        dtype: DType,
+        is_weight: bool,
+    ) -> TensorId {
         let id = self.g.tensors.len();
         self.g.tensors.push(Tensor {
             id,
@@ -77,7 +83,14 @@ impl GraphBuilder {
         for &t in inputs.iter().chain(&weights) {
             self.g.tensors[t].consumers.push(opid);
         }
-        self.g.ops.push(Op { id: opid, name: name.to_string(), kind, inputs, weights, output: out });
+        self.g.ops.push(Op {
+            id: opid,
+            name: name.to_string(),
+            kind,
+            inputs,
+            weights,
+            output: out,
+        });
         out
     }
 
@@ -145,12 +158,25 @@ impl GraphBuilder {
     }
 
     /// Fully-connected layer over a flattened input.
-    pub fn dense(&mut self, name: &str, input: TensorId, out_features: usize, act: Act) -> TensorId {
+    pub fn dense(
+        &mut self,
+        name: &str,
+        input: TensorId,
+        out_features: usize,
+        act: Act,
+    ) -> TensorId {
         let in_features = self.g.tensors[input].elems();
         let dt = self.dtype(input);
         let wt = self.weight(&format!("{name}.w"), &[in_features, out_features], dt);
         let bias = self.weight(&format!("{name}.b"), &[out_features], DType::I32.pick_bias(dt));
-        self.add_op(name, OpKind::Dense { act }, vec![input], vec![wt, bias], vec![1, out_features], dt)
+        self.add_op(
+            name,
+            OpKind::Dense { act },
+            vec![input],
+            vec![wt, bias],
+            vec![1, out_features],
+            dt,
+        )
     }
 
     /// Elementwise add; shapes must match.
@@ -169,7 +195,11 @@ impl GraphBuilder {
         for &p in parts {
             let s = self.shape(p);
             assert_eq!(s.len(), first.len(), "concat rank mismatch at {name}");
-            assert_eq!(&s[..s.len() - 1], &first[..first.len() - 1], "concat spatial mismatch at {name}");
+            assert_eq!(
+                &s[..s.len() - 1],
+                &first[..first.len() - 1],
+                "concat spatial mismatch at {name}"
+            );
             c_total += s[s.len() - 1];
         }
         let mut shape = first;
@@ -205,7 +235,14 @@ impl GraphBuilder {
         let oh = conv_out_dim(h, kernel.0, stride.0, padding);
         let ow = conv_out_dim(w, kernel.1, stride.1, padding);
         let dt = self.dtype(input);
-        self.add_op(name, OpKind::MaxPool2D { kernel, stride, padding }, vec![input], vec![], vec![n, oh, ow, c], dt)
+        self.add_op(
+            name,
+            OpKind::MaxPool2D { kernel, stride, padding },
+            vec![input],
+            vec![],
+            vec![n, oh, ow, c],
+            dt,
+        )
     }
 
     /// 2D average pooling.
@@ -221,7 +258,14 @@ impl GraphBuilder {
         let oh = conv_out_dim(h, kernel.0, stride.0, padding);
         let ow = conv_out_dim(w, kernel.1, stride.1, padding);
         let dt = self.dtype(input);
-        self.add_op(name, OpKind::AvgPool2D { kernel, stride, padding }, vec![input], vec![], vec![n, oh, ow, c], dt)
+        self.add_op(
+            name,
+            OpKind::AvgPool2D { kernel, stride, padding },
+            vec![input],
+            vec![],
+            vec![n, oh, ow, c],
+            dt,
+        )
     }
 
     /// Global average pool to `[1,1,1,C]`.
@@ -240,7 +284,14 @@ impl GraphBuilder {
         let beta = self.weight(&format!("{name}.beta"), &[c], DType::F32);
         let mean = self.weight(&format!("{name}.mean"), &[c], DType::F32);
         let var = self.weight(&format!("{name}.var"), &[c], DType::F32);
-        self.add_op(name, OpKind::BatchNorm { eps }, vec![input], vec![gamma, beta, mean, var], shape, dt)
+        self.add_op(
+            name,
+            OpKind::BatchNorm { eps },
+            vec![input],
+            vec![gamma, beta, mean, var],
+            shape,
+            dt,
+        )
     }
 
     /// Softmax over the last axis.
@@ -263,8 +314,21 @@ impl GraphBuilder {
 
     /// Synthetic op for generated DAGs: arbitrary inputs, explicit output
     /// byte size (as a `[bytes]` u8 tensor) and MAC count.
-    pub fn synthetic(&mut self, name: &str, inputs: &[TensorId], out_bytes: usize, macs: u64) -> TensorId {
-        self.add_op(name, OpKind::Synthetic { macs }, inputs.to_vec(), vec![], vec![out_bytes], DType::U8)
+    pub fn synthetic(
+        &mut self,
+        name: &str,
+        inputs: &[TensorId],
+        out_bytes: usize,
+        macs: u64,
+    ) -> TensorId {
+        self.add_op(
+            name,
+            OpKind::Synthetic { macs },
+            inputs.to_vec(),
+            vec![],
+            vec![out_bytes],
+            DType::U8,
+        )
     }
 
     /// Validate and return the finished graph.

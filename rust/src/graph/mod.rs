@@ -103,6 +103,50 @@ impl Act {
     }
 }
 
+/// Axis along which the split subsystem slices an operator.
+///
+/// `Rows`/`Cols` band the spatial H/W dimension of an NHWC tensor (with
+/// halo overlap for windowed operators); `Channels` bands the output
+/// channel dimension — channel slices partition the work *and* the weight
+/// columns exactly, so they carry no halo and no recompute.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SplitAxis {
+    Rows,
+    Cols,
+    Channels,
+}
+
+impl SplitAxis {
+    /// Every axis, in the order the split search tries them.
+    pub const ALL: [SplitAxis; 3] = [SplitAxis::Rows, SplitAxis::Cols, SplitAxis::Channels];
+
+    /// Dimension index of this axis in an NHWC activation shape.
+    pub fn dim(self) -> usize {
+        match self {
+            SplitAxis::Rows => 1,
+            SplitAxis::Cols => 2,
+            SplitAxis::Channels => 3,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SplitAxis::Rows => "rows",
+            SplitAxis::Cols => "cols",
+            SplitAxis::Channels => "channels",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<SplitAxis> {
+        match s {
+            "rows" | "h" => Some(SplitAxis::Rows),
+            "cols" | "w" => Some(SplitAxis::Cols),
+            "channels" | "c" => Some(SplitAxis::Channels),
+            _ => None,
+        }
+    }
+}
+
 /// Operator kind. Shapes follow NHWC with N == 1 (single-image MCU
 /// inference).
 #[derive(Clone, Debug, PartialEq)]
@@ -139,21 +183,26 @@ pub enum OpKind {
     /// Synthetic operator for generated DAGs: pure cost-model node with an
     /// explicit MAC count; executes as identity-ish mix in the interpreter.
     Synthetic { macs: u64 },
-    /// Row-slab partial evaluation of a spatial operator — emitted by the
-    /// [`crate::split`] subsystem, never by converters. Computes a
+    /// Slab partial evaluation of an operator along `axis` — emitted by
+    /// the [`crate::split`] subsystem, never by converters. Computes a
     /// contiguous band of `inner`'s output from a matching input slab.
-    /// `pad_top` is the slab's effective vertical padding (negative when
-    /// the slab stores rows above the band's first tap, i.e. the slab is
-    /// the full unsliced input of the chain head); horizontal padding
-    /// follows `inner`. For a split `Dense`, `offset` is the band's first
-    /// output feature; for spatial ops it records the band's first output
-    /// row (introspection/serde only).
-    Partial { inner: Box<OpKind>, pad_top: isize, offset: usize },
-    /// Concatenation along the row (H) axis: joins the row slabs of a
-    /// split back into the full tensor. Slabs are stacked in input order;
-    /// for 2-D `[1, n]` bands (split `Dense`) this degenerates to last-axis
-    /// concatenation. All inputs must share the output's quantization.
-    ConcatRows,
+    ///
+    /// For `axis == Rows`/`Cols`, `pad` is the slab's effective padding
+    /// along that axis (negative when the slab stores rows/columns above
+    /// the band's first tap, i.e. the slab is the full unsliced input of
+    /// the chain head); the orthogonal spatial padding follows `inner`.
+    /// For `axis == Channels` (and split `Dense`), `pad` is 0 and
+    /// `offset` is the band's first output channel/feature — the kernels
+    /// read only that column band of the full weight/bias tensors. For
+    /// spatial axes `offset` records the band's first output row/column
+    /// (introspection/serde only).
+    Partial { inner: Box<OpKind>, axis: SplitAxis, pad: isize, offset: usize },
+    /// Concatenation along `axis`: joins the slabs of a split back into
+    /// the full tensor. Slabs are stacked in input order; for 2-D `[1, n]`
+    /// bands (split `Dense`) this degenerates to last-axis concatenation.
+    /// All inputs share the output's quantization, so the join is a pure
+    /// copy — no requantization, bit-exact.
+    ConcatSlices { axis: SplitAxis },
 }
 
 impl OpKind {
@@ -174,7 +223,7 @@ impl OpKind {
             OpKind::Reshape => "Reshape",
             OpKind::Synthetic { .. } => "Synthetic",
             OpKind::Partial { .. } => "Partial",
-            OpKind::ConcatRows => "ConcatRows",
+            OpKind::ConcatSlices { .. } => "ConcatSlices",
         }
     }
 }
@@ -247,7 +296,7 @@ impl Op {
                 out_elems * (*kh as u64) * (*kw as u64)
             }
             OpKind::GlobalAvgPool => g.tensors[self.inputs[0]].elems() as u64,
-            OpKind::Concat | OpKind::Reshape | OpKind::ConcatRows => 0,
+            OpKind::Concat | OpKind::Reshape | OpKind::ConcatSlices { .. } => 0,
             OpKind::Synthetic { macs } => *macs,
             // A partial op costs what its band costs; halo overlap between
             // slices shows up naturally as the sum over slice ops
@@ -269,16 +318,41 @@ impl Op {
                 | OpKind::AvgPool2D { kernel: (kh, kw), .. } => {
                     out_elems * (*kh as u64) * (*kw as u64)
                 }
+                OpKind::BatchNorm { .. } => 2 * out_elems,
                 _ => out_elems,
             },
         }
     }
 
-    /// Bytes read + written by this operator (activation traffic only).
+    /// Flash weight bytes this operator reads. The per-axis asymmetry of
+    /// splitting shows up here: a row/column slice re-reads the *full*
+    /// weight tensor (a k-way spatial split costs k× the flash weight
+    /// traffic), while a channel slice addresses only the weight/bias
+    /// column band `[offset, offset+band)` of the full tensor — channel
+    /// splits partition weight traffic exactly. The band size is the
+    /// output's last dim; the full column count is the weight tensor's
+    /// last dim (HWIO/HWC/`[in,out]`/`[C]` alike).
+    pub fn weight_bytes(&self, g: &Graph) -> u64 {
+        if let OpKind::Partial { axis: SplitAxis::Channels, .. } = &self.kind {
+            let band = g.tensors[self.output].shape.last().copied().unwrap_or(1);
+            self.weights
+                .iter()
+                .map(|&t| {
+                    let wt = &g.tensors[t];
+                    let full = wt.shape.last().copied().unwrap_or(1).max(1);
+                    (wt.bytes() * band.min(full) / full) as u64
+                })
+                .sum()
+        } else {
+            self.weights.iter().map(|&t| g.tensors[t].bytes() as u64).sum()
+        }
+    }
+
+    /// Bytes read + written by this operator (activation + weight
+    /// traffic).
     pub fn bytes_touched(&self, g: &Graph) -> u64 {
         let read: usize = self.inputs.iter().map(|&t| g.tensors[t].bytes()).sum();
-        let weights: usize = self.weights.iter().map(|&t| g.tensors[t].bytes()).sum();
-        (read + weights + g.tensors[self.output].bytes()) as u64
+        (read + g.tensors[self.output].bytes()) as u64 + self.weight_bytes(g)
     }
 }
 
@@ -324,7 +398,13 @@ pub struct Graph {
 
 impl Graph {
     pub fn new(name: impl Into<String>) -> Self {
-        Graph { name: name.into(), tensors: Vec::new(), ops: Vec::new(), inputs: Vec::new(), outputs: Vec::new() }
+        Graph {
+            name: name.into(),
+            tensors: Vec::new(),
+            ops: Vec::new(),
+            inputs: Vec::new(),
+            outputs: Vec::new(),
+        }
     }
 
     pub fn n_tensors(&self) -> usize {

@@ -8,7 +8,7 @@
 
 use std::collections::BTreeMap;
 
-use super::{Act, DType, Graph, Op, OpId, OpKind, Padding, Tensor};
+use super::{Act, DType, Graph, Op, OpId, OpKind, Padding, SplitAxis, Tensor};
 use crate::util::json::Json;
 
 /// A graph plus an optional embedded execution order — the on-disk model.
@@ -103,16 +103,29 @@ fn kind_to_json(kind: &OpKind) -> (String, Json) {
         OpKind::Synthetic { macs } => {
             attrs.insert("macs".into(), Json::Num(*macs as f64));
         }
-        OpKind::Partial { inner, pad_top, offset } => {
+        OpKind::Partial { inner, axis, pad, offset } => {
             let (inner_kind, inner_attrs) = kind_to_json(inner);
             attrs.insert("inner_kind".into(), Json::Str(inner_kind));
             attrs.insert("inner_attrs".into(), inner_attrs);
-            attrs.insert("pad_top".into(), Json::Num(*pad_top as f64));
+            attrs.insert("axis".into(), Json::Str(axis.name().into()));
+            attrs.insert("pad".into(), Json::Num(*pad as f64));
             attrs.insert("offset".into(), Json::Num(*offset as f64));
+        }
+        OpKind::ConcatSlices { axis } => {
+            attrs.insert("axis".into(), Json::Str(axis.name().into()));
         }
         _ => {}
     }
     (name, Json::Obj(attrs))
+}
+
+/// Split axis from an op's attrs (absent = `default`, for files written
+/// by the row-only splitter).
+fn axis_from(attrs: &Json, default: SplitAxis) -> Result<SplitAxis, String> {
+    match attrs.get("axis").as_str() {
+        None => Ok(default),
+        Some(s) => SplitAxis::from_name(s).ok_or_else(|| format!("unknown split axis {s:?}")),
+    }
 }
 
 fn kind_from_json(name: &str, attrs: &Json) -> Result<OpKind, String> {
@@ -169,11 +182,20 @@ fn kind_from_json(name: &str, attrs: &Json) -> Result<OpKind, String> {
                 return Err("Partial ops do not nest".into());
             }
             let inner = kind_from_json(inner_kind, attrs.get("inner_attrs"))?;
-            let pad_top = attrs.get("pad_top").as_f64().unwrap_or(0.0) as isize;
+            let axis = axis_from(attrs, SplitAxis::Rows)?;
+            // Files written before the axis generalization stored the
+            // effective padding under "pad_top" (rows was the only axis).
+            let pad = attrs
+                .get("pad")
+                .as_f64()
+                .or_else(|| attrs.get("pad_top").as_f64())
+                .unwrap_or(0.0) as isize;
             let offset = attrs.get("offset").as_f64().unwrap_or(0.0) as usize;
-            Ok(OpKind::Partial { inner: Box::new(inner), pad_top, offset })
+            Ok(OpKind::Partial { inner: Box::new(inner), axis, pad, offset })
         }
-        "ConcatRows" => Ok(OpKind::ConcatRows),
+        "ConcatSlices" => Ok(OpKind::ConcatSlices { axis: axis_from(attrs, SplitAxis::Rows)? }),
+        // Legacy name from the row-only splitter.
+        "ConcatRows" => Ok(OpKind::ConcatSlices { axis: SplitAxis::Rows }),
         other => Err(format!("unknown op kind {other:?}")),
     }
 }

@@ -19,7 +19,7 @@ pub mod quant;
 use std::collections::HashMap;
 
 use crate::alloc::{AllocError, AllocStats, BufId, CompactPolicy, DynamicArena};
-use crate::graph::{Act, DType, Graph, OpId, OpKind, Tensor, TensorId};
+use crate::graph::{Act, DType, Graph, OpId, OpKind, Padding, SplitAxis, Tensor, TensorId};
 use crate::util::rng::Rng;
 use ops::Hwc;
 use quant::QuantParams;
@@ -192,6 +192,28 @@ impl WeightStore {
             TensorData::I32(v) => v,
             _ => panic!("expected i32 bias"),
         }
+    }
+}
+
+/// Resolve the `(pad_y, pad_x)` pair of a `Partial` slice: the split axis
+/// stores its effective padding on the op; the orthogonal spatial axis is
+/// full-size on the slab, so its padding derives from the inner op's mode
+/// exactly as the unsplit kernel would compute it.
+fn partial_pads(
+    axis: SplitAxis,
+    pad: isize,
+    ish: Hwc,
+    osh: Hwc,
+    kernel: (usize, usize),
+    stride: (usize, usize),
+    padding: Padding,
+) -> (isize, isize) {
+    let dy = ops::pad_amounts(ish.h, kernel.0, stride.0, padding, osh.h) as isize;
+    let dx = ops::pad_amounts(ish.w, kernel.1, stride.1, padding, osh.w) as isize;
+    match axis {
+        SplitAxis::Rows => (pad, dx),
+        SplitAxis::Cols => (dy, pad),
+        SplitAxis::Channels => (dy, dx),
     }
 }
 
@@ -405,7 +427,11 @@ impl<'g> Interpreter<'g> {
             .unwrap_or(QuantParams { scale: 1.0, zero_point: 0 })
     }
 
-    fn dispatch(&self, op: &crate::graph::Op, inputs: &[TensorData]) -> Result<TensorData, ExecError> {
+    fn dispatch(
+        &self,
+        op: &crate::graph::Op,
+        inputs: &[TensorData],
+    ) -> Result<TensorData, ExecError> {
         let g = self.g;
         let out_t = &g.tensors[op.output];
         let in0_t = op.inputs.first().map(|&t| &g.tensors[t]);
@@ -509,14 +535,19 @@ impl<'g> Interpreter<'g> {
                     OpKind::Synthetic { .. } => {
                         return Err(ExecError::Unsupported("synthetic op with f32 dtype".into()))
                     }
-                    OpKind::Partial { inner, pad_top, offset } => match inner.as_ref() {
+                    OpKind::Partial { inner, axis, pad, offset } => match inner.as_ref() {
                         OpKind::Conv2D { kernel, stride, padding, act } => {
                             fused_act = *act;
                             let ish = Hwc::from_shape(&in0_t.unwrap().shape);
                             let osh = Hwc::from_shape(&out_t.shape);
-                            let pad_x =
-                                ops::pad_amounts(ish.w, kernel.1, stride.1, *padding, osh.w)
-                                    as isize;
+                            let (pad_y, pad_x) =
+                                partial_pads(*axis, *pad, ish, osh, *kernel, *stride, *padding);
+                            let (c0, c_total) = match axis {
+                                SplitAxis::Channels => {
+                                    (*offset, g.tensors[op.weights[0]].shape[3])
+                                }
+                                _ => (0, osh.c),
+                            };
                             ops::conv2d_with_pads(
                                 xs[0],
                                 ish,
@@ -526,17 +557,24 @@ impl<'g> Interpreter<'g> {
                                 osh,
                                 *kernel,
                                 *stride,
-                                *pad_top,
+                                pad_y,
                                 pad_x,
+                                c0,
+                                c_total,
                             );
                         }
                         OpKind::DepthwiseConv2D { kernel, stride, padding, act } => {
                             fused_act = *act;
                             let ish = Hwc::from_shape(&in0_t.unwrap().shape);
                             let osh = Hwc::from_shape(&out_t.shape);
-                            let pad_x =
-                                ops::pad_amounts(ish.w, kernel.1, stride.1, *padding, osh.w)
-                                    as isize;
+                            let (pad_y, pad_x) =
+                                partial_pads(*axis, *pad, ish, osh, *kernel, *stride, *padding);
+                            let (c0, c_total) = match axis {
+                                SplitAxis::Channels => {
+                                    (*offset, g.tensors[op.weights[0]].shape[2])
+                                }
+                                _ => (0, ish.c),
+                            };
                             ops::dwconv2d_with_pads(
                                 xs[0],
                                 ish,
@@ -546,28 +584,28 @@ impl<'g> Interpreter<'g> {
                                 osh,
                                 *kernel,
                                 *stride,
-                                *pad_top,
+                                pad_y,
                                 pad_x,
+                                c0,
+                                c_total,
                             );
                         }
                         OpKind::MaxPool2D { kernel, stride, padding } => {
                             let ish = Hwc::from_shape(&in0_t.unwrap().shape);
                             let osh = Hwc::from_shape(&out_t.shape);
-                            let pad_x =
-                                ops::pad_amounts(ish.w, kernel.1, stride.1, *padding, osh.w)
-                                    as isize;
+                            let (pad_y, pad_x) =
+                                partial_pads(*axis, *pad, ish, osh, *kernel, *stride, *padding);
                             ops::maxpool2d_with_pads(
-                                xs[0], ish, &mut out, osh, *kernel, *stride, *pad_top, pad_x,
+                                xs[0], ish, &mut out, osh, *kernel, *stride, pad_y, pad_x,
                             );
                         }
                         OpKind::AvgPool2D { kernel, stride, padding } => {
                             let ish = Hwc::from_shape(&in0_t.unwrap().shape);
                             let osh = Hwc::from_shape(&out_t.shape);
-                            let pad_x =
-                                ops::pad_amounts(ish.w, kernel.1, stride.1, *padding, osh.w)
-                                    as isize;
+                            let (pad_y, pad_x) =
+                                partial_pads(*axis, *pad, ish, osh, *kernel, *stride, *padding);
                             ops::avgpool2d_with_pads(
-                                xs[0], ish, &mut out, osh, *kernel, *stride, *pad_top, pad_x,
+                                xs[0], ish, &mut out, osh, *kernel, *stride, pad_y, pad_x,
                             );
                         }
                         OpKind::Dense { act } => {
@@ -582,6 +620,26 @@ impl<'g> Interpreter<'g> {
                                 n_cols,
                             );
                         }
+                        // Pointwise slices: the band maps 1:1 onto the slab;
+                        // only BatchNorm's per-channel parameters need the
+                        // channel-band offset.
+                        OpKind::Relu => ops::relu(xs[0], &mut out),
+                        OpKind::Relu6 => ops::relu6(xs[0], &mut out),
+                        OpKind::BatchNorm { eps } => {
+                            let gamma = self.weights.f32_of(op.weights[0]);
+                            let beta = self.weights.f32_of(op.weights[1]);
+                            let mean = self.weights.f32_of(op.weights[2]);
+                            let var = self.weights.f32_of(op.weights[3]);
+                            let c = out_t.shape.last().copied().unwrap_or(1);
+                            let c0 =
+                                if *axis == SplitAxis::Channels { *offset } else { 0 };
+                            for (i, v) in xs[0].iter().enumerate() {
+                                let ch = c0 + i % c;
+                                out[i] = gamma[ch] * (v - mean[ch])
+                                    / (var[ch] + eps).sqrt()
+                                    + beta[ch];
+                            }
+                        }
                         other => {
                             return Err(ExecError::Unsupported(format!(
                                 "partial {} (f32)",
@@ -589,16 +647,14 @@ impl<'g> Interpreter<'g> {
                             )))
                         }
                     },
-                    // Row slabs are contiguous NHWC bands, so stacking them
-                    // along H is a flat append in input order (also covers
-                    // the 2-D dense-band case).
-                    OpKind::ConcatRows => {
-                        let mut cursor = 0usize;
-                        for x in &xs {
-                            out[cursor..cursor + x.len()].copy_from_slice(x);
-                            cursor += x.len();
-                        }
-                        debug_assert_eq!(cursor, out.len(), "concat-rows size mismatch");
+                    OpKind::ConcatSlices { axis } => {
+                        let parts: Vec<(&[f32], &[usize])> = op
+                            .inputs
+                            .iter()
+                            .zip(&xs)
+                            .map(|(&t, x)| (*x, g.tensors[t].shape.as_slice()))
+                            .collect();
+                        ops::concat_slices(&parts, &mut out, &out_t.shape, *axis);
                     }
                 }
                 match fused_act {
@@ -727,14 +783,19 @@ impl<'g> Interpreter<'g> {
                     OpKind::Synthetic { .. } => {
                         return Err(ExecError::Unsupported("synthetic op with i8 dtype".into()))
                     }
-                    OpKind::Partial { inner, pad_top, offset } => match inner.as_ref() {
+                    OpKind::Partial { inner, axis, pad, offset } => match inner.as_ref() {
                         OpKind::Conv2D { kernel, stride, padding, act } => {
                             fused_act = *act;
                             let ish = Hwc::from_shape(&in0_t.unwrap().shape);
                             let osh = Hwc::from_shape(&out_t.shape);
-                            let pad_x =
-                                ops::pad_amounts(ish.w, kernel.1, stride.1, *padding, osh.w)
-                                    as isize;
+                            let (pad_y, pad_x) =
+                                partial_pads(*axis, *pad, ish, osh, *kernel, *stride, *padding);
+                            let (c0, c_total) = match axis {
+                                SplitAxis::Channels => {
+                                    (*offset, g.tensors[op.weights[0]].shape[3])
+                                }
+                                _ => (0, osh.c),
+                            };
                             quant::conv2d_i8_with_pads(
                                 xs[0],
                                 ish,
@@ -747,17 +808,24 @@ impl<'g> Interpreter<'g> {
                                 out_q,
                                 *kernel,
                                 *stride,
-                                *pad_top,
+                                pad_y,
                                 pad_x,
+                                c0,
+                                c_total,
                             );
                         }
                         OpKind::DepthwiseConv2D { kernel, stride, padding, act } => {
                             fused_act = *act;
                             let ish = Hwc::from_shape(&in0_t.unwrap().shape);
                             let osh = Hwc::from_shape(&out_t.shape);
-                            let pad_x =
-                                ops::pad_amounts(ish.w, kernel.1, stride.1, *padding, osh.w)
-                                    as isize;
+                            let (pad_y, pad_x) =
+                                partial_pads(*axis, *pad, ish, osh, *kernel, *stride, *padding);
+                            let (c0, c_total) = match axis {
+                                SplitAxis::Channels => {
+                                    (*offset, g.tensors[op.weights[0]].shape[2])
+                                }
+                                _ => (0, ish.c),
+                            };
                             quant::dwconv2d_i8_with_pads(
                                 xs[0],
                                 ish,
@@ -770,18 +838,19 @@ impl<'g> Interpreter<'g> {
                                 out_q,
                                 *kernel,
                                 *stride,
-                                *pad_top,
+                                pad_y,
                                 pad_x,
+                                c0,
+                                c_total,
                             );
                         }
                         OpKind::MaxPool2D { kernel, stride, padding } => {
                             let ish = Hwc::from_shape(&in0_t.unwrap().shape);
                             let osh = Hwc::from_shape(&out_t.shape);
-                            let pad_x =
-                                ops::pad_amounts(ish.w, kernel.1, stride.1, *padding, osh.w)
-                                    as isize;
+                            let (pad_y, pad_x) =
+                                partial_pads(*axis, *pad, ish, osh, *kernel, *stride, *padding);
                             quant::maxpool2d_i8_with_pads(
-                                xs[0], ish, &mut out, osh, *kernel, *stride, *pad_top, pad_x,
+                                xs[0], ish, &mut out, osh, *kernel, *stride, pad_y, pad_x,
                             );
                         }
                         OpKind::Dense { act } => {
@@ -799,6 +868,12 @@ impl<'g> Interpreter<'g> {
                                 n_cols,
                             );
                         }
+                        // Pointwise slices map 1:1 onto their slab (the
+                        // slab shares its source tensor's qparams).
+                        OpKind::Relu => quant::relu_i8(xs[0], self.qp(op.inputs[0]), &mut out),
+                        OpKind::Relu6 => {
+                            quant::relu6_i8(xs[0], self.qp(op.inputs[0]), &mut out)
+                        }
                         other => {
                             return Err(ExecError::Unsupported(format!(
                                 "partial {} (i8)",
@@ -807,15 +882,16 @@ impl<'g> Interpreter<'g> {
                         }
                     },
                     // The split subsystem gives every slab the qparams of
-                    // the tensor it is a band of, so stacking bands along H
-                    // is a flat copy — no requantization, bit-exact.
-                    OpKind::ConcatRows => {
-                        let mut cursor = 0usize;
-                        for x in &xs {
-                            out[cursor..cursor + x.len()].copy_from_slice(x);
-                            cursor += x.len();
-                        }
-                        debug_assert_eq!(cursor, out.len(), "concat-rows size mismatch");
+                    // the tensor it is a band of, so the join is a pure
+                    // copy — no requantization, bit-exact.
+                    OpKind::ConcatSlices { axis } => {
+                        let parts: Vec<(&[i8], &[usize])> = op
+                            .inputs
+                            .iter()
+                            .zip(&xs)
+                            .map(|(&t, x)| (*x, g.tensors[t].shape.as_slice()))
+                            .collect();
+                        ops::concat_slices(&parts, &mut out, &out_t.shape, *axis);
                     }
                 }
                 match fused_act {
@@ -972,9 +1048,10 @@ mod tests {
         let ws_f32 = WeightStore::seeded_f32(&g_f32, 42);
         let input_f = ramp_input(128);
         let ranges = calibrate(&g_f32, &ws_f32, &[input_f.clone()], 256 * 1024).unwrap();
-        let f32_out = Interpreter::new(&g_f32, ws_f32.clone(), ExecConfig::with_capacity(256 * 1024))
-            .run(&[input_f.clone()])
-            .unwrap();
+        let f32_out =
+            Interpreter::new(&g_f32, ws_f32.clone(), ExecConfig::with_capacity(256 * 1024))
+                .run(&[input_f.clone()])
+                .unwrap();
 
         let g_i8 = tiny_cnn(DType::I8);
         let ws_i8 = WeightStore::quantize_from(&g_i8, &ws_f32, &ranges);

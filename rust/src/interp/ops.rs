@@ -6,7 +6,7 @@
 //! TensorFlow). They double as the ground truth the PJRT-executed HLO
 //! artifacts are compared against in integration tests.
 
-use crate::graph::Padding;
+use crate::graph::{Padding, SplitAxis};
 
 /// NHWC activation shape (N fixed at 1).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -61,13 +61,32 @@ pub fn conv2d(
 ) {
     let pad_y = pad_amounts(in_shape.h, kernel.0, stride.0, padding, out_shape.h) as isize;
     let pad_x = pad_amounts(in_shape.w, kernel.1, stride.1, padding, out_shape.w) as isize;
-    conv2d_with_pads(input, in_shape, weights, bias, out, out_shape, kernel, stride, pad_y, pad_x);
+    conv2d_with_pads(
+        input,
+        in_shape,
+        weights,
+        bias,
+        out,
+        out_shape,
+        kernel,
+        stride,
+        pad_y,
+        pad_x,
+        0,
+        out_shape.c,
+    );
 }
 
 /// [`conv2d`] with explicit padding offsets instead of a [`Padding`] mode.
 /// Out-of-bounds taps are skipped (zero padding). A negative `pad_y` shifts
 /// the tap window *down* into the input — how the split subsystem evaluates
 /// an output band against a taller input slab.
+///
+/// The output channel band `[c0, c0 + out_shape.c)` is computed against
+/// the *full* weight tensor `[kh, kw, cin, cout_total]` and full bias —
+/// how a channel slice reads only its weight columns. Whole-tensor calls
+/// pass `c0 = 0, cout_total = out_shape.c`. Per-channel accumulation
+/// order is identical to the full kernel, so bands are bit-exact.
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d_with_pads(
     input: &[f32],
@@ -80,14 +99,17 @@ pub fn conv2d_with_pads(
     stride: (usize, usize),
     pad_y: isize,
     pad_x: isize,
+    c0: usize,
+    cout_total: usize,
 ) {
     let (kh, kw) = kernel;
     let (sh, sw) = stride;
     let cin = in_shape.c;
     let cout = out_shape.c;
     debug_assert_eq!(input.len(), in_shape.elems());
-    debug_assert_eq!(weights.len(), kh * kw * cin * cout);
-    debug_assert_eq!(bias.len(), cout);
+    debug_assert_eq!(weights.len(), kh * kw * cin * cout_total);
+    debug_assert_eq!(bias.len(), cout_total);
+    debug_assert!(c0 + cout <= cout_total);
     debug_assert_eq!(out.len(), out_shape.elems());
 
     // Perf pass (mirrors the i8 kernels): accumulator row per output pixel,
@@ -95,7 +117,7 @@ pub fn conv2d_with_pads(
     let mut acc_row = vec![0.0f32; cout];
     for oy in 0..out_shape.h {
         for ox in 0..out_shape.w {
-            acc_row.copy_from_slice(bias);
+            acc_row.copy_from_slice(&bias[c0..c0 + cout]);
             for ky in 0..kh {
                 let iy = (oy * sh + ky) as isize - pad_y;
                 if iy < 0 || iy as usize >= in_shape.h {
@@ -107,10 +129,10 @@ pub fn conv2d_with_pads(
                         continue;
                     }
                     let ibase = in_shape.at(iy as usize, ix as usize, 0);
-                    let wbase = ((ky * kw + kx) * cin) * cout;
+                    let wbase = ((ky * kw + kx) * cin) * cout_total + c0;
                     for ic in 0..cin {
                         let iv = input[ibase + ic];
-                        let wrow = &weights[wbase + ic * cout..wbase + (ic + 1) * cout];
+                        let wrow = &weights[wbase + ic * cout_total..][..cout];
                         for (a, &w) in acc_row.iter_mut().zip(wrow) {
                             *a += iv * w;
                         }
@@ -139,10 +161,28 @@ pub fn dwconv2d(
 ) {
     let pad_y = pad_amounts(in_shape.h, kernel.0, stride.0, padding, out_shape.h) as isize;
     let pad_x = pad_amounts(in_shape.w, kernel.1, stride.1, padding, out_shape.w) as isize;
-    dwconv2d_with_pads(input, in_shape, weights, bias, out, out_shape, kernel, stride, pad_y, pad_x);
+    dwconv2d_with_pads(
+        input,
+        in_shape,
+        weights,
+        bias,
+        out,
+        out_shape,
+        kernel,
+        stride,
+        pad_y,
+        pad_x,
+        0,
+        in_shape.c,
+    );
 }
 
 /// [`dwconv2d`] with explicit padding offsets (see [`conv2d_with_pads`]).
+/// The channel band `[c0, c0 + in_shape.c)` runs against the full
+/// `[kh, kw, c_total]` weights and full bias — depthwise channels are
+/// independent, so a channel slab (input channels already banded) uses
+/// only its own weight columns. Whole-tensor calls pass
+/// `c0 = 0, c_total = in_shape.c`.
 #[allow(clippy::too_many_arguments)]
 pub fn dwconv2d_with_pads(
     input: &[f32],
@@ -155,19 +195,22 @@ pub fn dwconv2d_with_pads(
     stride: (usize, usize),
     pad_y: isize,
     pad_x: isize,
+    c0: usize,
+    c_total: usize,
 ) {
     let (kh, kw) = kernel;
     let (sh, sw) = stride;
     let c = in_shape.c;
     debug_assert_eq!(out_shape.c, c);
-    debug_assert_eq!(weights.len(), kh * kw * c);
-    debug_assert_eq!(bias.len(), c);
+    debug_assert_eq!(weights.len(), kh * kw * c_total);
+    debug_assert_eq!(bias.len(), c_total);
+    debug_assert!(c0 + c <= c_total);
 
     // Channels innermost: contiguous input and weight rows (perf pass).
     let mut acc_row = vec![0.0f32; c];
     for oy in 0..out_shape.h {
         for ox in 0..out_shape.w {
-            acc_row.copy_from_slice(bias);
+            acc_row.copy_from_slice(&bias[c0..c0 + c]);
             for ky in 0..kh {
                 let iy = (oy * sh + ky) as isize - pad_y;
                 if iy < 0 || iy as usize >= in_shape.h {
@@ -180,7 +223,7 @@ pub fn dwconv2d_with_pads(
                     }
                     let ibase = in_shape.at(iy as usize, ix as usize, 0);
                     let irow = &input[ibase..ibase + c];
-                    let wrow = &weights[(ky * kw + kx) * c..(ky * kw + kx + 1) * c];
+                    let wrow = &weights[(ky * kw + kx) * c_total + c0..][..c];
                     for ((a, &iv), &w) in acc_row.iter_mut().zip(irow).zip(wrow) {
                         *a += iv * w;
                     }
@@ -251,6 +294,69 @@ pub fn concat_channels(parts: &[(&[f32], Hwc)], out: &mut [f32], out_shape: Hwc)
         c_off += shape.c;
     }
     debug_assert_eq!(c_off, out_shape.c);
+}
+
+/// Join the slabs of a split back into the full tensor along `axis`
+/// (see [`crate::graph::OpKind::ConcatSlices`]). Works for any element
+/// type because the join is a pure copy — the split subsystem gives every
+/// slab the quantization of the tensor it is a band of, so no
+/// requantization happens here (bit-exact for i8).
+///
+/// `parts` pairs each slab's data with its tensor shape. Non-NHWC shapes
+/// (the 2-D `[1, n]` bands of a split `Dense`) degenerate to a flat
+/// append, as do row slabs (contiguous bands of NHWC storage).
+pub fn concat_slices<T: Copy>(
+    parts: &[(&[T], &[usize])],
+    out: &mut [T],
+    out_shape: &[usize],
+    axis: SplitAxis,
+) {
+    let flat = out_shape.len() != 4 || axis == SplitAxis::Rows;
+    if flat {
+        let mut cursor = 0usize;
+        for (data, _) in parts {
+            out[cursor..cursor + data.len()].copy_from_slice(data);
+            cursor += data.len();
+        }
+        debug_assert_eq!(cursor, out.len(), "concat-slices size mismatch");
+        return;
+    }
+    let (h, w, c) = (out_shape[1], out_shape[2], out_shape[3]);
+    match axis {
+        SplitAxis::Rows => unreachable!("handled by the flat path"),
+        SplitAxis::Cols => {
+            // Column slabs interleave per output row.
+            for y in 0..h {
+                let mut x_off = 0usize;
+                for (data, shape) in parts {
+                    let (wj, cj) = (shape[2], shape[3]);
+                    debug_assert_eq!(cj, c);
+                    let src = y * wj * cj;
+                    let dst = (y * w + x_off) * c;
+                    out[dst..dst + wj * cj].copy_from_slice(&data[src..src + wj * cj]);
+                    x_off += wj;
+                }
+                debug_assert_eq!(x_off, w);
+            }
+        }
+        SplitAxis::Channels => {
+            // Channel slabs interleave per output pixel.
+            for y in 0..h {
+                for x in 0..w {
+                    let mut c_off = 0usize;
+                    for (data, shape) in parts {
+                        let (wj, cj) = (shape[2], shape[3]);
+                        debug_assert_eq!(wj, w);
+                        let src = (y * wj + x) * cj;
+                        let dst = (y * w + x) * c + c_off;
+                        out[dst..dst + cj].copy_from_slice(&data[src..src + cj]);
+                        c_off += cj;
+                    }
+                    debug_assert_eq!(c_off, c);
+                }
+            }
+        }
+    }
 }
 
 /// ReLU.
@@ -471,7 +577,17 @@ mod tests {
         let weights = vec![1.0]; // 1x1
         let bias = vec![0.0];
         let mut out = vec![0.0; 4];
-        conv2d(&input, in_shape, &weights, &bias, &mut out, out_shape, (1, 1), (2, 2), Padding::Same);
+        conv2d(
+            &input,
+            in_shape,
+            &weights,
+            &bias,
+            &mut out,
+            out_shape,
+            (1, 1),
+            (2, 2),
+            Padding::Same,
+        );
         assert_eq!(out, vec![0.0, 2.0, 8.0, 10.0]);
     }
 
@@ -484,7 +600,17 @@ mod tests {
         let bias = vec![0.0, 0.0];
         let out_shape = Hwc { h: 1, w: 1, c: 2 };
         let mut out = vec![0.0; 2];
-        dwconv2d(&input, shape, &weights, &bias, &mut out, out_shape, (1, 2), (1, 1), Padding::Valid);
+        dwconv2d(
+            &input,
+            shape,
+            &weights,
+            &bias,
+            &mut out,
+            out_shape,
+            (1, 2),
+            (1, 1),
+            Padding::Valid,
+        );
         assert_eq!(out, vec![3.0, 15.0]);
     }
 

@@ -132,7 +132,7 @@ pub fn conv2d_i8(
     let pad_x = pad_amounts(in_shape.w, kernel.1, stride.1, padding, out_shape.w) as isize;
     conv2d_i8_with_pads(
         input, in_shape, in_q, weights, w_scale, bias, out, out_shape, out_q, kernel, stride,
-        pad_y, pad_x,
+        pad_y, pad_x, 0, out_shape.c,
     );
 }
 
@@ -140,6 +140,12 @@ pub fn conv2d_i8(
 /// skipped (integer-exact zero padding), so a row band computed against an
 /// input slab is bit-identical to the corresponding rows of the full op —
 /// the property the split subsystem's int8 validation relies on.
+///
+/// The output channel band `[c0, c0 + out_shape.c)` runs against the full
+/// `[kh, kw, cin, cout_total]` weights and full bias (see the f32
+/// `conv2d_with_pads`); per-channel accumulation and requantization are
+/// independent, so channel bands are bit-exact too. Whole-tensor calls
+/// pass `c0 = 0, cout_total = out_shape.c`.
 #[allow(clippy::too_many_arguments)]
 pub fn conv2d_i8_with_pads(
     input: &[i8],
@@ -155,11 +161,16 @@ pub fn conv2d_i8_with_pads(
     stride: (usize, usize),
     pad_y: isize,
     pad_x: isize,
+    c0: usize,
+    cout_total: usize,
 ) {
     let (kh, kw) = kernel;
     let (sh, sw) = stride;
     let cin = in_shape.c;
     let cout = out_shape.c;
+    debug_assert_eq!(weights.len(), kh * kw * cin * cout_total);
+    debug_assert_eq!(bias.len(), cout_total);
+    debug_assert!(c0 + cout <= cout_total);
     let fm = FixedMult::new((in_q.scale as f64) * (w_scale as f64) / (out_q.scale as f64));
     let zp_in = in_q.zero_point;
 
@@ -172,14 +183,14 @@ pub fn conv2d_i8_with_pads(
     let mut acc_row: Vec<i32> = vec![0; cout];
     if kh == 1 && kw == 1 && sh == 1 && sw == 1 && pad_y == 0 && pad_x == 0 {
         for p in 0..out_shape.h * out_shape.w {
-            acc_row.copy_from_slice(bias);
+            acc_row.copy_from_slice(&bias[c0..c0 + cout]);
             let ibase = p * cin;
             for ic in 0..cin {
                 let iv = input[ibase + ic] as i32 - zp_in;
                 if iv == 0 {
                     continue;
                 }
-                let wrow = &weights[ic * cout..(ic + 1) * cout];
+                let wrow = &weights[ic * cout_total + c0..][..cout];
                 for (a, &w) in acc_row.iter_mut().zip(wrow) {
                     *a += iv * w as i32;
                 }
@@ -194,7 +205,7 @@ pub fn conv2d_i8_with_pads(
 
     for oy in 0..out_shape.h {
         for ox in 0..out_shape.w {
-            acc_row.copy_from_slice(bias);
+            acc_row.copy_from_slice(&bias[c0..c0 + cout]);
             for ky in 0..kh {
                 let iy = (oy * sh + ky) as isize - pad_y;
                 if iy < 0 || iy as usize >= in_shape.h {
@@ -206,13 +217,13 @@ pub fn conv2d_i8_with_pads(
                         continue;
                     }
                     let ibase = in_shape.at(iy as usize, ix as usize, 0);
-                    let wbase = ((ky * kw + kx) * cin) * cout;
+                    let wbase = ((ky * kw + kx) * cin) * cout_total + c0;
                     for ic in 0..cin {
                         let iv = input[ibase + ic] as i32 - zp_in;
                         if iv == 0 {
                             continue;
                         }
-                        let wrow = &weights[wbase + ic * cout..wbase + (ic + 1) * cout];
+                        let wrow = &weights[wbase + ic * cout_total..][..cout];
                         for (a, &w) in acc_row.iter_mut().zip(wrow) {
                             *a += iv * w as i32;
                         }
@@ -248,12 +259,14 @@ pub fn dwconv2d_i8(
     let pad_x = pad_amounts(in_shape.w, kernel.1, stride.1, padding, out_shape.w) as isize;
     dwconv2d_i8_with_pads(
         input, in_shape, in_q, weights, w_scale, bias, out, out_shape, out_q, kernel, stride,
-        pad_y, pad_x,
+        pad_y, pad_x, 0, in_shape.c,
     );
 }
 
 /// [`dwconv2d_i8`] with explicit padding offsets (see
-/// [`conv2d_i8_with_pads`]).
+/// [`conv2d_i8_with_pads`]). The channel band `[c0, c0 + in_shape.c)`
+/// runs against the full `[kh, kw, c_total]` weights and full bias;
+/// whole-tensor calls pass `c0 = 0, c_total = in_shape.c`.
 #[allow(clippy::too_many_arguments)]
 pub fn dwconv2d_i8_with_pads(
     input: &[i8],
@@ -269,10 +282,15 @@ pub fn dwconv2d_i8_with_pads(
     stride: (usize, usize),
     pad_y: isize,
     pad_x: isize,
+    c0: usize,
+    c_total: usize,
 ) {
     let (kh, kw) = kernel;
     let (sh, sw) = stride;
     let c = in_shape.c;
+    debug_assert_eq!(weights.len(), kh * kw * c_total);
+    debug_assert_eq!(bias.len(), c_total);
+    debug_assert!(c0 + c <= c_total);
     let fm = FixedMult::new((in_q.scale as f64) * (w_scale as f64) / (out_q.scale as f64));
 
     // Perf pass: channels innermost so both the input row and the weight
@@ -282,7 +300,7 @@ pub fn dwconv2d_i8_with_pads(
     let mut acc_row: Vec<i32> = vec![0; c];
     for oy in 0..out_shape.h {
         for ox in 0..out_shape.w {
-            acc_row.copy_from_slice(bias);
+            acc_row.copy_from_slice(&bias[c0..c0 + c]);
             for ky in 0..kh {
                 let iy = (oy * sh + ky) as isize - pad_y;
                 if iy < 0 || iy as usize >= in_shape.h {
@@ -295,7 +313,7 @@ pub fn dwconv2d_i8_with_pads(
                     }
                     let ibase = in_shape.at(iy as usize, ix as usize, 0);
                     let irow = &input[ibase..ibase + c];
-                    let wrow = &weights[(ky * kw + kx) * c..(ky * kw + kx + 1) * c];
+                    let wrow = &weights[(ky * kw + kx) * c_total + c0..][..c];
                     for ((a, &iv), &w) in acc_row.iter_mut().zip(irow).zip(wrow) {
                         *a += (iv as i32 - zp_in) * w as i32;
                     }

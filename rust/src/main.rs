@@ -11,7 +11,7 @@ use mcu_reorder::util::error::{anyhow, bail, Context, Result};
 
 use mcu_reorder::coordinator::{self, Coordinator, ServeConfig};
 use mcu_reorder::graph::serde::ModelFile;
-use mcu_reorder::graph::{DType, Graph};
+use mcu_reorder::graph::{DType, Graph, SplitAxis};
 use mcu_reorder::interp::{ExecConfig, Interpreter, TensorData, WeightStore};
 use mcu_reorder::mcu::{CostModel, DeployReport, OverheadModel, SplitOverhead, NUCLEO_F767ZI};
 use mcu_reorder::models;
@@ -31,14 +31,18 @@ COMMANDS:
             [--dtype i8|f32] [--order default|optimal|greedy|dfs] [--file F]
   optimize  --model M --out F  Embed the optimal execution order into a
             [--dtype i8|f32]   model JSON file (like tflite-tools)
-  split     --model M          Partial execution: split spatial operators
+  split     --model M          Partial execution: beam-search operator
             [--dtype i8|f32] [--sram-budget B] [--max-factor K]
-            [--rounds N] [--out F]
-                               into row slices (halo-exact) co-optimized
-                               with Algorithm-1 reordering; reports the
-                               peak-SRAM floor broken and the recompute
-                               overhead, optionally writing the split
-                               model + schedule to F
+            [--rounds N] [--beam-width W] [--axes rows,cols,channels]
+            [--out F]
+                               splitting over (segment, factor, axis) —
+                               row/column slices are halo-exact, channel
+                               slices partition weights with zero
+                               recompute — co-optimized with Algorithm-1
+                               reordering; reports the peak-SRAM floor
+                               broken and the per-axis overhead,
+                               optionally writing the split model +
+                               schedule to F
   export    --model M --json F --weights F [--dtype f32]
                                Export graph JSON + seeded weights for the
                                AOT pipeline (python/compile/aot.py)
@@ -92,7 +96,10 @@ fn dtype_flag(flags: &HashMap<String, String>, default: DType) -> Result<DType> 
 }
 
 /// Resolve a model graph from `--model <zoo-name>` or `--file <model.json>`.
-fn load_graph(flags: &HashMap<String, String>, default_dtype: DType) -> Result<(Graph, Option<Vec<usize>>)> {
+fn load_graph(
+    flags: &HashMap<String, String>,
+    default_dtype: DType,
+) -> Result<(Graph, Option<Vec<usize>>)> {
     if let Some(path) = flags.get("file") {
         let src = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
         let mf = ModelFile::from_json(&src).map_err(|e| anyhow!("{e}"))?;
@@ -120,7 +127,10 @@ fn order_for(g: &Graph, spec: &str) -> Result<sched::Schedule> {
 }
 
 fn cmd_list() {
-    println!("{:<12} {:>6} {:>8} {:>12} {:>12}", "model", "ops", "tensors", "params", "activations");
+    println!(
+        "{:<12} {:>6} {:>8} {:>12} {:>12}",
+        "model", "ops", "tensors", "params", "activations"
+    );
     for name in models::MODEL_NAMES {
         let g = models::by_name(name, DType::I8).unwrap();
         println!(
@@ -164,9 +174,17 @@ fn cmd_analyze(flags: &HashMap<String, String>) -> Result<()> {
         println!("\nwrote memory trace to {path}");
     }
     println!();
-    println!("peak working set : {} B ({:.1} KB)", trace.peak_bytes, trace.peak_bytes as f64 / 1000.0);
+    println!(
+        "peak working set : {} B ({:.1} KB)",
+        trace.peak_bytes,
+        trace.peak_bytes as f64 / 1000.0
+    );
     println!("model size       : {} B ({:.1} KB)", g.model_size(), g.model_size() as f64 / 1000.0);
-    println!("activation total : {} B ({:.1} KB)", g.activation_total(), g.activation_total() as f64 / 1000.0);
+    println!(
+        "activation total : {} B ({:.1} KB)",
+        g.activation_total(),
+        g.activation_total() as f64 / 1000.0
+    );
     let report = DeployReport::new(&g, trace.peak_bytes, &NUCLEO_F767ZI, &OverheadModel::default());
     println!(
         "deploy ({:>14}): peak + overhead = {} B of {} B SRAM → {}",
@@ -198,10 +216,31 @@ fn cmd_split(flags: &HashMap<String, String>) -> Result<()> {
     let max_factor: usize =
         flags.get("max-factor").map(|s| s.parse()).transpose()?.unwrap_or(4);
     let max_rounds: usize = flags.get("rounds").map(|s| s.parse()).transpose()?.unwrap_or(3);
+    let beam_width: usize =
+        flags.get("beam-width").map(|s| s.parse()).transpose()?.unwrap_or(2);
+    let axes: Vec<SplitAxis> = match flags.get("axes") {
+        None => SplitAxis::ALL.to_vec(),
+        Some(spec) => {
+            let mut axes = Vec::new();
+            for part in spec.split(',').filter(|p| !p.is_empty()) {
+                let axis = SplitAxis::from_name(part.trim())
+                    .ok_or_else(|| anyhow!("unknown axis {part:?} (rows|cols|channels)"))?;
+                if !axes.contains(&axis) {
+                    axes.push(axis);
+                }
+            }
+            if axes.is_empty() {
+                bail!("--axes needs at least one of rows|cols|channels");
+            }
+            axes
+        }
+    };
     let opts = mcu_reorder::split::SplitOptions {
         max_factor,
         sram_budget: budget,
         max_rounds,
+        beam_width,
+        axes,
         ..Default::default()
     };
 
@@ -210,7 +249,12 @@ fn cmd_split(flags: &HashMap<String, String>) -> Result<()> {
     let outcome = mcu_reorder::split::optimize(&g, &opts).map_err(|e| anyhow!("{e}"))?;
     let elapsed = t0.elapsed().as_secs_f64();
 
-    println!("model: {}  ({} ops → {} after splitting)\n", g.name, g.n_ops(), outcome.graph.n_ops());
+    println!(
+        "model: {}  ({} ops → {} after splitting)\n",
+        g.name,
+        g.n_ops(),
+        outcome.graph.n_ops()
+    );
     println!("default order peak    : {:>9} B", default_peak);
     println!("reorder-only optimal  : {:>9} B", outcome.base_peak);
     println!(
@@ -221,9 +265,10 @@ fn cmd_split(flags: &HashMap<String, String>) -> Result<()> {
     );
     for st in &outcome.steps {
         println!(
-            "  split [{}] ×{}: {} B → {} B",
+            "  split [{}] ×{} along {}: {} B → {} B",
             st.segment.join(" → "),
             st.factor,
+            st.axis.name(),
             st.peak_before,
             st.peak_after
         );
@@ -237,6 +282,17 @@ fn cmd_split(flags: &HashMap<String, String>) -> Result<()> {
         "recompute overhead    : {:+.2}% MACs, modeled time ×{:.4}",
         100.0 * ov.recompute_frac(),
         ov.time_ratio
+    );
+    for axis in SplitAxis::ALL {
+        let frac = ov.recompute_frac_of(axis);
+        if frac > 0.0 {
+            println!("  recompute along {:<8}: {:+.2}% MACs", axis.name(), 100.0 * frac);
+        }
+    }
+    println!(
+        "weight flash traffic  : ×{:.2} ({} B join copies)",
+        ov.weight_traffic_ratio(),
+        ov.join_bytes
     );
     if let Some(b) = budget {
         println!(
@@ -276,7 +332,11 @@ fn cmd_export(flags: &HashMap<String, String>) -> Result<()> {
         blob.extend_from_slice(&data.to_bytes());
     }
     std::fs::write(weights_path, &blob).with_context(|| format!("writing {weights_path}"))?;
-    println!("exported {} ({} weight bytes, seed {seed}) → {json_path}, {weights_path}", g.name, blob.len());
+    println!(
+        "exported {} ({} weight bytes, seed {seed}) → {json_path}, {weights_path}",
+        g.name,
+        blob.len()
+    );
     Ok(())
 }
 
@@ -334,8 +394,9 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
 
     let factory = match engine.as_str() {
         "pjrt" => {
-            let dir =
-                PathBuf::from(flags.get("artifacts").cloned().unwrap_or_else(|| "artifacts".into()));
+            let dir = PathBuf::from(
+                flags.get("artifacts").cloned().unwrap_or_else(|| "artifacts".into()),
+            );
             coordinator::pjrt_engine_factory(name.clone(), dir)
         }
         "interp" => {
@@ -381,8 +442,10 @@ fn cmd_table1() -> Result<()> {
     let interp = Interpreter::new(&mnet, ws_i8, ExecConfig::with_capacity(256 * 1024));
     let run = interp.run(&[qin])?;
 
-    let mut static_stats = mcu_reorder::alloc::AllocStats::default();
-    static_stats.high_water = static_bytes;
+    let static_stats = mcu_reorder::alloc::AllocStats {
+        high_water: static_bytes,
+        ..Default::default()
+    };
     let dynamic_stats = run.alloc.clone();
 
     let model = CostModel::calibrated(&mnet, &static_stats, &NUCLEO_F767ZI, 1.316, 728.0);
@@ -391,7 +454,13 @@ fn cmd_table1() -> Result<()> {
     let est_swift = model.estimate(&swift, &dynamic_stats, &NUCLEO_F767ZI);
 
     let kb = |b: usize| format!("{:.0}KB", b as f64 / 1000.0);
-    let mut t = Table::new(&["", "SwiftNet default", "SwiftNet optimal", "MobileNet static", "MobileNet dynamic"]);
+    let mut t = Table::new(&[
+        "",
+        "SwiftNet default",
+        "SwiftNet optimal",
+        "MobileNet static",
+        "MobileNet dynamic",
+    ]);
     t.row(&[
         "Peak memory (excl. overheads)".into(),
         kb(swift_default),
@@ -404,14 +473,22 @@ fn cmd_table1() -> Result<()> {
         "N/A (doesn't fit)".into(),
         format!("{:.0} ms", est_swift.millis()),
         format!("{:.0} ms", est_static.millis()),
-        format!("{:.0} ms (+{:.2}%)", est_dyn.millis(), 100.0 * (est_dyn.seconds / est_static.seconds - 1.0)),
+        format!(
+            "{:.0} ms (+{:.2}%)",
+            est_dyn.millis(),
+            100.0 * (est_dyn.seconds / est_static.seconds - 1.0)
+        ),
     ]);
     t.row(&[
         "Energy use".into(),
         "N/A (doesn't fit)".into(),
         format!("{:.0} mJ", est_swift.energy_mj),
         format!("{:.0} mJ", est_static.energy_mj),
-        format!("{:.0} mJ (+{:.2}%)", est_dyn.energy_mj, 100.0 * (est_dyn.energy_mj / est_static.energy_mj - 1.0)),
+        format!(
+            "{:.0} mJ (+{:.2}%)",
+            est_dyn.energy_mj,
+            100.0 * (est_dyn.energy_mj / est_static.energy_mj - 1.0)
+        ),
     ]);
     t.print();
     println!("\npaper (Table 1): 351KB/301KB; 241KB/55KB; 1316ms/1325ms (+0.68%); 728mJ/735mJ (+0.97%)");

@@ -28,9 +28,11 @@
 //! The *relative* Table-1 claims (sub-1% overhead of dynamic allocation)
 //! come out of the model rather than going into it.
 
+use std::collections::HashMap;
+
 use super::Board;
 use crate::alloc::AllocStats;
-use crate::graph::Graph;
+use crate::graph::{Graph, OpKind, SplitAxis};
 
 /// Cost-model constants.
 #[derive(Clone, Copy, Debug)]
@@ -130,18 +132,39 @@ impl CostModel {
 }
 
 /// Execution-cost overhead of a split (partially-executed) graph relative
-/// to its unsplit baseline: halo rows recomputed by adjacent slices and
-/// the extra activation traffic of re-read inputs and the row-concat join.
-/// Memory is what splitting buys; this is what it pays.
+/// to its unsplit baseline: halo elements recomputed by adjacent slices,
+/// weight tensors re-read per spatial slice, and the extra activation
+/// traffic of re-read inputs and the concat joins. Memory is what
+/// splitting buys; this is what it pays — and it pays differently per
+/// axis: `Rows`/`Cols` slices overlap (recompute) and re-read full
+/// weights, while `Channels` slices partition work and weight columns
+/// exactly (zero recompute, no extra weight traffic).
 #[derive(Clone, Copy, Debug)]
 pub struct SplitOverhead {
     pub base_macs: u64,
     pub split_macs: u64,
     pub base_bytes: u64,
     pub split_bytes: u64,
+    /// Flash weight traffic of one inference, unsplit vs split.
+    pub base_weight_bytes: u64,
+    pub split_weight_bytes: u64,
+    /// Bytes written by the `ConcatSlices` joins (the price of
+    /// re-materializing each split segment's output).
+    pub join_bytes: u64,
+    /// Extra MACs attributable to each axis's slices (halo recompute),
+    /// indexed `[Rows, Cols, Channels]`.
+    pub recompute_by_axis: [u64; 3],
     /// Modeled execution-time ratio (split / base) under `model`/`board`,
     /// with identical allocator stats for both sides.
     pub time_ratio: f64,
+}
+
+fn axis_index(axis: SplitAxis) -> usize {
+    match axis {
+        SplitAxis::Rows => 0,
+        SplitAxis::Cols => 1,
+        SplitAxis::Channels => 2,
+    }
 }
 
 impl SplitOverhead {
@@ -155,11 +178,42 @@ impl SplitOverhead {
         let stats = AllocStats::default();
         let est_base = model.estimate(base, &stats, board);
         let est_split = model.estimate(split, &stats, board);
+
+        // Attribute slice MACs back to the original op by name (slices are
+        // "<orig>#s<j>"; split artifacts are never re-split, so all slices
+        // of an op share one axis). The excess over the original op's MACs
+        // is that axis's halo recompute.
+        let mut per_op: HashMap<(&str, SplitAxis), u64> = HashMap::new();
+        let mut join_bytes = 0u64;
+        for op in &split.ops {
+            match &op.kind {
+                OpKind::Partial { axis, .. } => {
+                    if let Some((orig, _)) = op.name.split_once("#s") {
+                        *per_op.entry((orig, *axis)).or_insert(0) += op.macs(split);
+                    }
+                }
+                OpKind::ConcatSlices { .. } => {
+                    join_bytes += split.tensors[op.output].bytes() as u64;
+                }
+                _ => {}
+            }
+        }
+        let mut recompute_by_axis = [0u64; 3];
+        for ((orig, axis), macs) in per_op {
+            if let Some(op) = base.op_by_name(orig) {
+                recompute_by_axis[axis_index(axis)] += macs.saturating_sub(op.macs(base));
+            }
+        }
+
         SplitOverhead {
             base_macs: base.total_macs(),
             split_macs: split.total_macs(),
             base_bytes: base.ops.iter().map(|o| o.bytes_touched(base)).sum(),
             split_bytes: split.ops.iter().map(|o| o.bytes_touched(split)).sum(),
+            base_weight_bytes: base.ops.iter().map(|o| o.weight_bytes(base)).sum(),
+            split_weight_bytes: split.ops.iter().map(|o| o.weight_bytes(split)).sum(),
+            join_bytes,
+            recompute_by_axis,
             time_ratio: est_split.seconds / est_base.seconds,
         }
     }
@@ -170,6 +224,23 @@ impl SplitOverhead {
             return 0.0;
         }
         self.split_macs as f64 / self.base_macs as f64 - 1.0
+    }
+
+    /// Extra MACs of one axis's slices as a fraction of the base MACs.
+    pub fn recompute_frac_of(&self, axis: SplitAxis) -> f64 {
+        if self.base_macs == 0 {
+            return 0.0;
+        }
+        self.recompute_by_axis[axis_index(axis)] as f64 / self.base_macs as f64
+    }
+
+    /// Flash weight-traffic ratio (split / base): > 1 when spatial slices
+    /// re-read weights, 1.0 for pure channel plans.
+    pub fn weight_traffic_ratio(&self) -> f64 {
+        if self.base_weight_bytes == 0 {
+            return 1.0;
+        }
+        self.split_weight_bytes as f64 / self.base_weight_bytes as f64
     }
 }
 
@@ -223,9 +294,8 @@ mod tests {
         let g = g_with_macs();
         let m = CostModel::cortex_m7_reference();
         let no_moves = AllocStats::default();
-        let mut with_moves = AllocStats::default();
-        with_moves.bytes_moved = 1_000_000;
-        with_moves.compactions = 100;
+        let with_moves =
+            AllocStats { bytes_moved: 1_000_000, compactions: 100, ..AllocStats::default() };
         let a = m.estimate(&g, &no_moves, &NUCLEO_F767ZI);
         let b = m.estimate(&g, &with_moves, &NUCLEO_F767ZI);
         assert!(b.seconds > a.seconds);
@@ -257,15 +327,53 @@ mod tests {
         let c2 = b.conv2d("c2", c1, 8, (3, 3), (1, 1), Padding::Same, Act::Relu6);
         b.output(c2);
         let g = b.finish().unwrap();
-        let res = apply_segment(&g, &SegmentSplit { ops: vec![0, 1], factor: 4 }).unwrap();
+        let seg = SegmentSplit { ops: vec![0, 1], factor: 4, axis: SplitAxis::Rows };
+        let res = apply_segment(&g, &seg).unwrap();
         let m = CostModel::cortex_m7_reference();
         let ov = SplitOverhead::measure(&m, &g, &res.graph, &NUCLEO_F767ZI);
         // Halo rows of c1 are recomputed by adjacent slices…
         assert!(ov.split_macs > ov.base_macs);
         assert!(ov.recompute_frac() > 0.0 && ov.recompute_frac() < 0.5);
+        // …attributed to the row axis…
+        assert_eq!(
+            ov.recompute_by_axis[0],
+            ov.split_macs - ov.base_macs,
+            "recompute must be attributed to Rows"
+        );
+        assert_eq!(ov.recompute_by_axis[1], 0);
+        assert_eq!(ov.recompute_by_axis[2], 0);
+        // …each slice re-reads the full weights from flash…
+        assert_eq!(ov.split_weight_bytes, ov.base_weight_bytes * 4);
+        assert!(ov.weight_traffic_ratio() > 3.9);
+        // …the join re-materializes the segment output…
+        assert_eq!(ov.join_bytes as usize, g.tensors[g.op_by_name("c2").unwrap().output].bytes());
         // …and the chain input is re-read per slice, so time goes up.
         assert!(ov.split_bytes > ov.base_bytes);
         assert!(ov.time_ratio > 1.0);
+    }
+
+    #[test]
+    fn channel_split_overhead_is_recompute_free() {
+        use crate::graph::{Act, Padding};
+        use crate::split::{apply_segment, SegmentSplit};
+        let mut b = GraphBuilder::new("g");
+        let x = b.input("x", &[1, 16, 16, 4], DType::I8);
+        let c1 = b.conv2d("c1", x, 8, (3, 3), (1, 1), Padding::Same, Act::Relu6);
+        let d1 = b.dwconv2d("d1", c1, (3, 3), (2, 2), Padding::Same, Act::Relu6);
+        b.output(d1);
+        let g = b.finish().unwrap();
+        let seg = SegmentSplit { ops: vec![0, 1], factor: 4, axis: SplitAxis::Channels };
+        let res = apply_segment(&g, &seg).unwrap();
+        let m = CostModel::cortex_m7_reference();
+        let ov = SplitOverhead::measure(&m, &g, &res.graph, &NUCLEO_F767ZI);
+        // Channel slices partition the work and the weight columns exactly.
+        assert_eq!(ov.split_macs, ov.base_macs);
+        assert_eq!(ov.recompute_by_axis, [0, 0, 0]);
+        assert_eq!(ov.split_weight_bytes, ov.base_weight_bytes);
+        assert!((ov.weight_traffic_ratio() - 1.0).abs() < 1e-12);
+        // The input is still re-read per slice and the join still copies.
+        assert!(ov.split_bytes > ov.base_bytes);
+        assert!(ov.join_bytes > 0);
     }
 
     #[test]

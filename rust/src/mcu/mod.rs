@@ -123,13 +123,25 @@ mod tests {
         use crate::graph::DType;
         let g = crate::models::swiftnet_cell(DType::I8);
         let overhead = OverheadModel::default();
-        assert!((195_000..205_000).contains(&overhead.bytes(&g)), "overhead = {}", overhead.bytes(&g));
+        assert!(
+            (195_000..205_000).contains(&overhead.bytes(&g)),
+            "overhead = {}",
+            overhead.bytes(&g)
+        );
         let default_peak = crate::sched::peak_of(&g, &g.default_order());
         let (opt, _) = crate::sched::optimal(&g).unwrap();
         let default_report = DeployReport::new(&g, default_peak, &NUCLEO_F767ZI, &overhead);
         let optimal_report = DeployReport::new(&g, opt.peak_bytes, &NUCLEO_F767ZI, &overhead);
-        assert!(!default_report.fits_sram, "default order must NOT fit ({}B)", default_report.total_sram());
-        assert!(optimal_report.fits_sram, "optimal order must fit ({}B)", optimal_report.total_sram());
+        assert!(
+            !default_report.fits_sram,
+            "default order must NOT fit ({}B)",
+            default_report.total_sram()
+        );
+        assert!(
+            optimal_report.fits_sram,
+            "optimal order must fit ({}B)",
+            optimal_report.total_sram()
+        );
         assert!(default_report.fits_flash && optimal_report.fits_flash);
     }
 

@@ -13,6 +13,9 @@
 //!   calibrated to the published characteristics: ~250KB int8 parameters,
 //!   many branched cells, default-order peak ≈351KB and optimal-order peak
 //!   ≈301KB (see DESIGN.md substitution ledger).
+//! - [`audionet`] — a keyword-spotting-style audio CNN whose tall-kernel
+//!   front block makes the channel split axis strictly better than rows
+//!   (the split planner's multi-axis showcase).
 //! - [`tiny_cnn`] — a small branchy CNN for quickstarts and fast tests.
 //! - [`synth`] — random DAG generators for property tests and the
 //!   scheduler-scaling ablation.
@@ -164,8 +167,17 @@ pub fn resnet_micro(dtype: DType) -> Graph {
             // sum) is the block's memory bottleneck — exactly where
             // in-place accumulation pays.
             let name = format!("s{stage}.b{blk}");
-            let c1 = b.conv2d(&format!("{name}.c1"), t, c / 2, (3, 3), (1, 1), Padding::Same, Act::Relu);
-            let c2 = b.conv2d(&format!("{name}.c2"), c1, c, (3, 3), (1, 1), Padding::Same, Act::Linear);
+            let c1 =
+                b.conv2d(&format!("{name}.c1"), t, c / 2, (3, 3), (1, 1), Padding::Same, Act::Relu);
+            let c2 = b.conv2d(
+                &format!("{name}.c2"),
+                c1,
+                c,
+                (3, 3),
+                (1, 1),
+                Padding::Same,
+                Act::Linear,
+            );
             t = b.add(&format!("{name}.add"), c2, t);
         }
     }
@@ -174,6 +186,31 @@ pub fn resnet_micro(dtype: DType) -> Graph {
     let sm = b.softmax("softmax", fc);
     b.output(sm);
     b.finish().expect("resnet graph is valid")
+}
+
+/// Keyword-spotting-style audio CNN over a time×frequency input
+/// (64 frames × 16 mel bins × 4 channels). The front block is the
+/// classic DS-CNN shape: a channel-expanding conv with a tall temporal
+/// kernel, a tall-kernel strided depthwise aggregation, and a pooled
+/// transition. That geometry is the split planner's channel-axis
+/// showcase: the fat `c1` intermediate is consumed by a 12×3 depthwise,
+/// so row slabs carry a 10-row halo per slice while channel slabs carry
+/// none — a channel-axis plan beats every row-only plan on peak SRAM
+/// *and* pays zero recompute (see `benches/partial_exec.rs`).
+pub fn audionet(dtype: DType) -> Graph {
+    let mut b = GraphBuilder::new("audionet");
+    let x = b.input("input", &[1, 64, 16, 4], dtype);
+    let c1 = b.conv2d("c1", x, 32, (8, 3), (1, 1), Padding::Same, Act::Relu6);
+    let d1 = b.dwconv2d("d1", c1, (12, 3), (2, 2), Padding::Same, Act::Relu6);
+    let m1 = b.maxpool("m1", d1, (2, 2), (2, 2), Padding::Valid);
+    let p1 = b.conv2d("p1", m1, 32, (1, 1), (1, 1), Padding::Same, Act::Relu6);
+    let d2 = b.dwconv2d("d2", p1, (3, 3), (1, 1), Padding::Same, Act::Relu6);
+    let p2 = b.conv2d("p2", d2, 32, (1, 1), (1, 1), Padding::Same, Act::Relu6);
+    let gap = b.global_avgpool("gap", p2);
+    let fc = b.dense("fc", gap, 4, Act::Linear);
+    let sm = b.softmax("softmax", fc);
+    b.output(sm);
+    b.finish().expect("audionet graph is valid")
 }
 
 /// Small branchy CNN for quickstarts and fast integration tests
@@ -199,13 +236,15 @@ pub fn by_name(name: &str, dtype: DType) -> Option<Graph> {
         "mobilenet" | "mobilenet-v1-0.25-96" => Some(mobilenet_v1_025(dtype)),
         "swiftnet" | "swiftnet-cell" => Some(swiftnet_cell(dtype)),
         "resnet" | "resnet-micro" => Some(resnet_micro(dtype)),
+        "audionet" => Some(audionet(dtype)),
         "tiny" | "tiny-cnn" => Some(tiny_cnn(dtype)),
         _ => None,
     }
 }
 
 /// Names accepted by [`by_name`].
-pub const MODEL_NAMES: [&str; 5] = ["figure1", "mobilenet", "swiftnet", "resnet", "tiny"];
+pub const MODEL_NAMES: [&str; 6] =
+    ["figure1", "mobilenet", "swiftnet", "resnet", "audionet", "tiny"];
 
 #[cfg(test)]
 mod tests {
@@ -286,7 +325,9 @@ mod tests {
             .tensors
             .iter()
             .filter(|t| !t.is_weight)
-            .filter(|t| t.consumers.iter().filter(|&&c| g.ops[c].inputs.contains(&t.id)).count() > 1)
+            .filter(|t| {
+                t.consumers.iter().filter(|&&c| g.ops[c].inputs.contains(&t.id)).count() > 1
+            })
             .count();
         assert!(branch_points >= 6, "branch points = {branch_points}");
     }
@@ -329,5 +370,19 @@ mod tests {
     #[test]
     fn by_name_rejects_unknown() {
         assert!(by_name("resnet152", DType::I8).is_none());
+    }
+
+    #[test]
+    fn audionet_shapes_and_floor() {
+        let g = audionet(DType::I8);
+        assert_eq!(g.tensor_by_name("c1").unwrap().shape, vec![1, 64, 16, 32]);
+        assert_eq!(g.tensor_by_name("d1").unwrap().shape, vec![1, 32, 8, 32]);
+        assert_eq!(g.tensor_by_name("m1").unwrap().shape, vec![1, 16, 4, 32]);
+        // Pure chain: reordering alone cannot improve on the default
+        // order, and the peak is the c1→d1 working set.
+        let default_peak = peak_of(&g, &g.default_order());
+        let (sched, _) = optimal(&g).unwrap();
+        assert_eq!(sched.peak_bytes, default_peak);
+        assert_eq!(default_peak, 32_768 + 8_192);
     }
 }

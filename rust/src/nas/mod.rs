@@ -68,7 +68,15 @@ impl CellConfig {
                     Padding::Same,
                     Act::Relu6,
                 );
-                t = b.conv2d(&format!("t{si}.pw"), d, tc, (1, 1), (1, 1), Padding::Same, Act::Relu6);
+                t = b.conv2d(
+                    &format!("t{si}.pw"),
+                    d,
+                    tc,
+                    (1, 1),
+                    (1, 1),
+                    Padding::Same,
+                    Act::Relu6,
+                );
             }
         }
         let gap = b.global_avgpool("gap", t);

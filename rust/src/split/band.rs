@@ -1,18 +1,24 @@
-//! Row-band geometry: which input rows a slice needs (halo/overlap
-//! accounting) and the effective padding its slab executes with.
+//! Band geometry along a split axis: which input slice a band needs
+//! (halo/overlap accounting for the spatial axes) and the effective
+//! padding its slab executes with.
 //!
 //! The invariant (cross-checked numerically in the interpreter tests):
-//! executing an output band `[a, b)` against an input slab that starts at
-//! logical row `in_start` with vertical padding
+//! executing an output band `[a, b)` along a spatial axis against an input
+//! slab that starts at logical index `in_start` with effective padding
 //! `pad_eff = pad_full − a·stride + in_start` takes *exactly* the taps the
-//! full operator takes for those rows — out-of-slab taps coincide with the
-//! full operator's out-of-image (zero-padding) taps, because the slab
-//! covers every real row the band touches.
+//! full operator takes for those rows/columns — out-of-slab taps coincide
+//! with the full operator's out-of-image (zero-padding) taps, because the
+//! slab covers every real element the band touches.
+//!
+//! The channel axis has no tap geometry at all: a channel band of the
+//! output maps 1:1 onto the same channel band of the input (depthwise
+//! conv, pooling, pointwise) or onto a column band of the weight tensor
+//! (a `Conv2D`/`Dense` projection head) — no halo, no recompute.
 
-use crate::graph::{Graph, Op, OpKind};
+use crate::graph::{Graph, Op, OpKind, SplitAxis};
 use crate::interp::ops::pad_amounts;
 
-/// A contiguous row range `[start, end)`.
+/// A contiguous index range `[start, end)` along the split axis.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Band {
     pub start: usize,
@@ -25,10 +31,10 @@ impl Band {
     }
 }
 
-/// Partition `n` rows into `k` near-equal contiguous bands (the leading
-/// `n % k` bands get the extra row). Requires `1 <= k <= n`.
+/// Partition `n` indices into `k` near-equal contiguous bands (the leading
+/// `n % k` bands get the extra element). Requires `1 <= k <= n`.
 pub fn partition(n: usize, k: usize) -> Vec<Band> {
-    assert!(k >= 1 && k <= n, "cannot partition {n} rows into {k} bands");
+    assert!((1..=n).contains(&k), "cannot partition {n} rows into {k} bands");
     let base = n / k;
     let rem = n % k;
     let mut out = Vec::with_capacity(k);
@@ -41,23 +47,33 @@ pub fn partition(n: usize, k: usize) -> Vec<Band> {
     out
 }
 
-/// Vertical tap geometry of a sliceable operator.
+/// Tap geometry of a sliceable operator along one split axis.
 #[derive(Clone, Copy, Debug)]
-pub(crate) enum VertGeom {
-    /// Elementwise: output row `j` reads input row `j`.
+pub(crate) enum SliceGeom {
+    /// Elementwise along the axis: output index `j` reads input index `j`.
     Pointwise,
-    /// Kernelled: kernel height, row stride and the *full-geometry* top
-    /// padding (as the unsplit operator would compute it).
-    Windowed { kh: usize, stride: usize, pad: usize },
+    /// Kernelled along a spatial axis: kernel extent, stride and the
+    /// *full-geometry* leading padding (as the unsplit operator would
+    /// compute it).
+    Windowed { k: usize, stride: usize, pad: usize },
+    /// Channel projection (`Conv2D` along `Channels`): reads its full
+    /// input, writes an output-channel band via a weight-column band.
+    /// Only valid at the head of a segment.
+    ChanProject,
+    /// Channel-parallel (depthwise conv, pooling, pointwise along
+    /// `Channels`): channel band in = channel band out, weights/params
+    /// banded by the same range.
+    ChanParallel,
 }
 
 fn nhwc1(shape: &[usize]) -> bool {
     shape.len() == 4 && shape[0] == 1
 }
 
-/// Vertical geometry of `op`, or `None` if the operator cannot be sliced
-/// along rows (multi-input, non-spatial, or already a split artifact).
-pub(crate) fn vert_geom(g: &Graph, op: &Op) -> Option<VertGeom> {
+/// Geometry of `op` along `axis`, or `None` if the operator cannot be
+/// sliced that way (multi-input, non-spatial, or already a split
+/// artifact).
+pub(crate) fn slice_geom(g: &Graph, op: &Op, axis: SplitAxis) -> Option<SliceGeom> {
     if op.inputs.len() != 1 {
         return None;
     }
@@ -66,36 +82,49 @@ pub(crate) fn vert_geom(g: &Graph, op: &Op) -> Option<VertGeom> {
     if !nhwc1(in_shape) || !nhwc1(out_shape) {
         return None;
     }
+    if axis == SplitAxis::Channels {
+        return match &op.kind {
+            OpKind::Conv2D { .. } => Some(SliceGeom::ChanProject),
+            OpKind::DepthwiseConv2D { .. }
+            | OpKind::MaxPool2D { .. }
+            | OpKind::AvgPool2D { .. }
+            | OpKind::Relu
+            | OpKind::Relu6
+            | OpKind::BatchNorm { .. } => Some(SliceGeom::ChanParallel),
+            _ => None,
+        };
+    }
+    let d = axis.dim();
+    let pick = |p: (usize, usize)| if axis == SplitAxis::Rows { p.0 } else { p.1 };
     match &op.kind {
         OpKind::Conv2D { kernel, stride, padding, .. }
-        | OpKind::DepthwiseConv2D { kernel, stride, padding, .. } => Some(VertGeom::Windowed {
-            kh: kernel.0,
-            stride: stride.0,
-            pad: pad_amounts(in_shape[1], kernel.0, stride.0, *padding, out_shape[1]),
+        | OpKind::DepthwiseConv2D { kernel, stride, padding, .. }
+        | OpKind::MaxPool2D { kernel, stride, padding }
+        | OpKind::AvgPool2D { kernel, stride, padding } => Some(SliceGeom::Windowed {
+            k: pick(*kernel),
+            stride: pick(*stride),
+            pad: pad_amounts(in_shape[d], pick(*kernel), pick(*stride), *padding, out_shape[d]),
         }),
-        OpKind::MaxPool2D { kernel, stride, padding }
-        | OpKind::AvgPool2D { kernel, stride, padding } => Some(VertGeom::Windowed {
-            kh: kernel.0,
-            stride: stride.0,
-            pad: pad_amounts(in_shape[1], kernel.0, stride.0, *padding, out_shape[1]),
-        }),
-        OpKind::Relu | OpKind::Relu6 | OpKind::BatchNorm { .. } => Some(VertGeom::Pointwise),
+        OpKind::Relu | OpKind::Relu6 | OpKind::BatchNorm { .. } => Some(SliceGeom::Pointwise),
         _ => None,
     }
 }
 
-/// Input rows an output band `[out.start, out.end)` needs, clamped to the
-/// real input — taps falling outside are the full operator's zero padding
-/// and stay implicit.
-pub(crate) fn in_band(geom: VertGeom, h_in: usize, out: Band) -> Band {
+/// Input band an output band `[out.start, out.end)` needs, clamped to the
+/// real input extent `n_in` — taps falling outside are the full operator's
+/// zero padding and stay implicit.
+pub(crate) fn in_band(geom: SliceGeom, n_in: usize, out: Band) -> Band {
     debug_assert!(out.end > out.start, "empty output band");
     match geom {
-        VertGeom::Pointwise => out,
-        VertGeom::Windowed { kh, stride, pad } => {
+        // ChanProject only ever heads a segment (validated by the
+        // rewriter), where the slab is the full input — its in-band is
+        // never propagated.
+        SliceGeom::Pointwise | SliceGeom::ChanParallel | SliceGeom::ChanProject => out,
+        SliceGeom::Windowed { k, stride, pad } => {
             let lo = ((out.start * stride) as isize - pad as isize).max(0) as usize;
-            let lo = lo.min(h_in.saturating_sub(1));
-            let hi_raw = ((out.end - 1) * stride + kh) as isize - pad as isize;
-            let mut hi = hi_raw.clamp(1, h_in as isize) as usize;
+            let lo = lo.min(n_in.saturating_sub(1));
+            let hi_raw = ((out.end - 1) * stride + k) as isize - pad as isize;
+            let mut hi = hi_raw.clamp(1, n_in as isize) as usize;
             if hi <= lo {
                 hi = lo + 1;
             }
@@ -104,16 +133,17 @@ pub(crate) fn in_band(geom: VertGeom, h_in: usize, out: Band) -> Band {
     }
 }
 
-/// Effective vertical padding for computing output rows starting at
-/// `out_start` against a slab whose first stored row is logical row
-/// `in_start`. Negative when the slab keeps rows above the band's first
-/// tap (the chain head reads its full, unsliced input).
-pub(crate) fn pad_eff(geom: VertGeom, out_start: usize, in_start: usize) -> isize {
+/// Effective leading padding for computing an output band starting at
+/// `out_start` against a slab whose first stored index is `in_start`.
+/// Negative when the slab keeps elements above the band's first tap (the
+/// chain head reads its full, unsliced input). Zero for non-windowed
+/// geometry.
+pub(crate) fn pad_eff(geom: SliceGeom, out_start: usize, in_start: usize) -> isize {
     match geom {
-        VertGeom::Pointwise => 0,
-        VertGeom::Windowed { stride, pad, .. } => {
+        SliceGeom::Windowed { stride, pad, .. } => {
             pad as isize + in_start as isize - (out_start * stride) as isize
         }
+        _ => 0,
     }
 }
 
@@ -139,7 +169,7 @@ mod tests {
     #[test]
     fn same_conv_band_includes_halo() {
         // 3x3 stride-1 SAME conv over 8 rows: pad = 1.
-        let geom = VertGeom::Windowed { kh: 3, stride: 1, pad: 1 };
+        let geom = SliceGeom::Windowed { k: 3, stride: 1, pad: 1 };
         // Top band [0,4): row 3's taps reach rows 2..5 → slab [0, 5).
         assert_eq!(in_band(geom, 8, Band { start: 0, end: 4 }), Band { start: 0, end: 5 });
         // Bottom band [4,8): taps reach rows 3..10 → slab [3, 8).
@@ -149,14 +179,14 @@ mod tests {
     #[test]
     fn strided_conv_band() {
         // 3x3 stride-2 SAME over 8 rows → 4 out rows, pad total = 1, top 0.
-        let geom = VertGeom::Windowed { kh: 3, stride: 2, pad: 0 };
+        let geom = SliceGeom::Windowed { k: 3, stride: 2, pad: 0 };
         assert_eq!(in_band(geom, 8, Band { start: 0, end: 2 }), Band { start: 0, end: 5 });
         assert_eq!(in_band(geom, 8, Band { start: 2, end: 4 }), Band { start: 4, end: 8 });
     }
 
     #[test]
     fn pad_eff_signs() {
-        let geom = VertGeom::Windowed { kh: 3, stride: 1, pad: 1 };
+        let geom = SliceGeom::Windowed { k: 3, stride: 1, pad: 1 };
         // Top slice against its own slab: full padding preserved.
         assert_eq!(pad_eff(geom, 0, 0), 1);
         // Interior slice against its slab starting at its first tap row.
@@ -166,7 +196,7 @@ mod tests {
     }
 
     #[test]
-    fn vert_geom_classifies_ops() {
+    fn slice_geom_classifies_ops_along_rows() {
         let mut b = GraphBuilder::new("t");
         let x = b.input("x", &[1, 8, 8, 2], DType::F32);
         let c = b.conv2d("c", x, 4, (3, 3), (1, 1), Padding::Same, Act::Linear);
@@ -176,11 +206,51 @@ mod tests {
         b.output(fc);
         let g = b.finish().unwrap();
         assert!(matches!(
-            vert_geom(&g, g.op_by_name("c").unwrap()),
-            Some(VertGeom::Windowed { kh: 3, stride: 1, pad: 1 })
+            slice_geom(&g, g.op_by_name("c").unwrap(), SplitAxis::Rows),
+            Some(SliceGeom::Windowed { k: 3, stride: 1, pad: 1 })
         ));
-        assert!(matches!(vert_geom(&g, g.op_by_name("r").unwrap()), Some(VertGeom::Pointwise)));
-        assert!(vert_geom(&g, g.op_by_name("gap").unwrap()).is_none());
-        assert!(vert_geom(&g, g.op_by_name("fc").unwrap()).is_none());
+        assert!(matches!(
+            slice_geom(&g, g.op_by_name("r").unwrap(), SplitAxis::Rows),
+            Some(SliceGeom::Pointwise)
+        ));
+        assert!(slice_geom(&g, g.op_by_name("gap").unwrap(), SplitAxis::Rows).is_none());
+        assert!(slice_geom(&g, g.op_by_name("fc").unwrap(), SplitAxis::Rows).is_none());
+    }
+
+    #[test]
+    fn slice_geom_uses_horizontal_geometry_along_cols() {
+        // Asymmetric kernel/stride: rows see (5, 1), cols see (3, 2).
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[1, 12, 8, 2], DType::F32);
+        let c = b.conv2d("c", x, 4, (5, 3), (1, 2), Padding::Same, Act::Linear);
+        b.output(c);
+        let g = b.finish().unwrap();
+        let op = g.op_by_name("c").unwrap();
+        assert!(matches!(
+            slice_geom(&g, op, SplitAxis::Rows),
+            Some(SliceGeom::Windowed { k: 5, stride: 1, pad: 2 })
+        ));
+        // SAME over W=8, kw=3, sw=2 → out 4, total pad = 1, low 0.
+        assert!(matches!(
+            slice_geom(&g, op, SplitAxis::Cols),
+            Some(SliceGeom::Windowed { k: 3, stride: 2, pad: 0 })
+        ));
+    }
+
+    #[test]
+    fn slice_geom_classifies_channel_axis() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", &[1, 8, 8, 4], DType::F32);
+        let c = b.conv2d("c", x, 8, (3, 3), (1, 1), Padding::Same, Act::Relu6);
+        let d = b.dwconv2d("d", c, (3, 3), (2, 2), Padding::Same, Act::Relu6);
+        let m = b.maxpool("m", d, (2, 2), (2, 2), Padding::Valid);
+        let gap = b.global_avgpool("gap", m);
+        b.output(gap);
+        let g = b.finish().unwrap();
+        let geom = |n: &str| slice_geom(&g, g.op_by_name(n).unwrap(), SplitAxis::Channels);
+        assert!(matches!(geom("c"), Some(SliceGeom::ChanProject)));
+        assert!(matches!(geom("d"), Some(SliceGeom::ChanParallel)));
+        assert!(matches!(geom("m"), Some(SliceGeom::ChanParallel)));
+        assert!(geom("gap").is_none());
     }
 }

@@ -1,39 +1,48 @@
-//! Partial-execution subsystem: spatial operator splitting co-optimized
-//! with operator reordering.
+//! Partial-execution subsystem: operator splitting along rows, columns or
+//! output channels, co-optimized with operator reordering.
 //!
 //! Operator reordering (§4 of the paper) cannot push peak SRAM below the
 //! working set of the single largest operator — the input and output of
 //! that operator must coexist. Partial execution breaks that floor: an
-//! eligible operator (conv / depthwise conv / pooling / dense /
-//! elementwise) is *split along the spatial row dimension* into `k` slice
-//! operators plus a [`crate::graph::OpKind::ConcatRows`] join, so only a
-//! band of the big intermediate is ever resident. This is the scheduling
-//! move behind Pex (Liberis & Lane, 2022) and MCUNet's patch-based
-//! inference, and it composes orthogonally with Algorithm 1: the split
-//! graph is an ordinary [`crate::graph::Graph`], so
-//! [`crate::sched::optimal`] reorders the slice pipelines for free.
+//! eligible operator chain is split along a [`crate::graph::SplitAxis`]
+//! into `k` slice operators plus a [`crate::graph::OpKind::ConcatSlices`]
+//! join, so only a band of the big intermediates is ever resident. This is
+//! the scheduling move behind Pex (Liberis & Lane, 2022), Unlu's
+//! multi-axis layer splitting, and MCUNet's patch-based inference, and it
+//! composes orthogonally with Algorithm 1: the split graph is an ordinary
+//! [`crate::graph::Graph`], so [`crate::sched::optimal`] reorders the
+//! slice pipelines for free.
+//!
+//! The three axes trade differently:
+//!
+//! - `Rows`/`Cols` slice the spatial extent. Windowed operators overlap at
+//!   band boundaries (halo), so adjacent slices recompute the overlap and
+//!   every slice re-reads the full weight tensor from flash.
+//! - `Channels` slices the output-channel extent. Slices partition the
+//!   work *and* the weight columns exactly — zero halo, zero recompute —
+//!   but a regular `Conv2D` can only *head* a channel segment (it reads
+//!   all input channels), so channel chains are shorter.
 //!
 //! The subsystem has three layers:
 //!
-//! - [`band`]-level geometry (internal): byte-exact per-slice row ranges
+//! - [`band`]-level geometry (internal): byte-exact per-slice index ranges
 //!   with halo/overlap accounting for strided and kernelled operators.
-//!   A slice's input band includes every real row its taps touch, and the
-//!   slice op carries the *effective* vertical padding for its slab, so
-//!   slice outputs are bit-identical to the corresponding rows of the
+//!   A slice's input band includes every real row/column its taps touch,
+//!   and the slice op carries the *effective* padding for its slab, so
+//!   slice outputs are bit-identical to the corresponding band of the
 //!   unsplit operator (both f32 and int8 — validated in tests).
 //! - [`apply_segment`] / [`apply_plan`] — graph rewriting: evaluate a
-//!   single-consumer *chain* of operators in `k` row slices. Splitting a
+//!   single-consumer *chain* of operators in `k` slices. Splitting a
 //!   chain rather than one operator is what makes the transform profitable:
 //!   the chain's big intermediates are only ever materialized one band at a
 //!   time, while the join only re-materializes the (smaller) chain output.
 //!   [`remap_weight_store`] carries weights and quantization parameters
 //!   onto the rewritten graph (slabs inherit the qparams of the tensor
 //!   they are a band of).
-//! - [`optimize`] — the `SplitPlan` search: a greedy outer loop that
-//!   anchors candidate segments at the current schedule's peak step, tries
-//!   split factors up to [`SplitOptions::max_factor`], re-runs Algorithm 1
-//!   on each rewritten graph, and keeps the strictly best improvement —
-//!   repeating until an optional SRAM budget is met or no candidate helps.
+//! - [`optimize`] — the `SplitPlan` search: a beam search over
+//!   `(segment, factor, axis)` moves anchored at the current schedule's
+//!   peak step, scoring each rewrite by re-running Algorithm 1 and pruning
+//!   the beam by `(peak SRAM, recompute)` — see [`search`] module docs.
 //!
 //! Recompute overhead is not hidden: halo rows are re-evaluated by
 //! adjacent slices, which shows up in [`crate::graph::Op::macs`] and
@@ -48,7 +57,10 @@ pub use band::{partition, Band};
 pub use rewrite::{
     apply_plan, apply_segment, remap_weight_store, SegmentSplit, SplitPlan, SplitResult,
 };
-pub use search::{candidate_segments, find_chains, optimize, SplitOptions, SplitOutcome, SplitStep};
+pub use search::{
+    candidate_moves, find_chains, find_chains_along, optimize, SplitOptions, SplitOutcome,
+    SplitStep,
+};
 
 /// Why a split could not be applied or searched.
 #[derive(Debug, Clone, PartialEq, Eq)]

@@ -1,29 +1,37 @@
-//! Graph rewriting: evaluate a chain of operators in `k` row slices.
+//! Graph rewriting: evaluate a chain of operators in `k` slices along a
+//! chosen axis.
 //!
 //! A segment `o_1 → … → o_m` (each interior output consumed only by the
 //! next op) is replaced by `k` slice pipelines plus a
-//! [`OpKind::ConcatRows`] join producing the original output tensor. The
+//! [`OpKind::ConcatSlices`] join producing the original output tensor. The
 //! chain head reads its full, unsliced input (kept live across slices and
 //! reclaimed by the scheduler after the last head slice); every other
-//! slice op reads the slab the previous slice op produced. Interior slabs
-//! include halo rows, so adjacent slices recompute the overlap — that cost
-//! is visible in `Op::macs`, not hidden.
+//! slice op reads the slab the previous slice op produced.
+//!
+//! Along the spatial axes (`Rows`/`Cols`) interior slabs include halo
+//! rows/columns, so adjacent slices recompute the overlap — that cost is
+//! visible in `Op::macs`, not hidden. Along `Channels` there is no halo:
+//! slices partition the output channels and the weight columns exactly
+//! (zero recompute), at the price that a regular `Conv2D` can only *head*
+//! a channel segment (it reads all input channels), while depthwise
+//! convs, pooling and pointwise ops compose channel-parallel behind it.
 //!
 //! A single-op segment whose op is `Dense` splits along output features
-//! instead of rows (the weight matrix columns partition; the input is read
-//! whole by every slice).
+//! (the weight matrix columns partition; the input is read whole by every
+//! slice) — the degenerate channel-axis case.
 
-use super::band::{in_band, pad_eff, partition, vert_geom, Band, VertGeom};
+use super::band::{in_band, pad_eff, partition, slice_geom, Band, SliceGeom};
 use super::SplitError;
-use crate::graph::{DType, Graph, Op, OpId, OpKind, Tensor, TensorId};
+use crate::graph::{DType, Graph, Op, OpId, OpKind, SplitAxis, Tensor, TensorId};
 use crate::interp::WeightStore;
 
 /// One split instruction: a chain of ops (in execution order) to evaluate
-/// in `factor` row slices.
+/// in `factor` slices along `axis`.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct SegmentSplit {
     pub ops: Vec<OpId>,
     pub factor: usize,
+    pub axis: SplitAxis,
 }
 
 /// A sequence of segment splits applied one after another. Op ids in step
@@ -92,7 +100,13 @@ impl Builder {
     }
 
     /// New slab tensor banded out of old tensor `source`.
-    fn slab(&mut self, name: String, shape: Vec<usize>, dtype: DType, source: TensorId) -> TensorId {
+    fn slab(
+        &mut self,
+        name: String,
+        shape: Vec<usize>,
+        dtype: DType,
+        source: TensorId,
+    ) -> TensorId {
         let id = self.ng.tensors.len();
         self.sources.push(source);
         self.ng.tensors.push(Tensor {
@@ -140,7 +154,8 @@ impl Builder {
     }
 }
 
-/// Split one chain segment of `g` into `seg.factor` slices.
+/// Split one chain segment of `g` into `seg.factor` slices along
+/// `seg.axis`.
 pub fn apply_segment(g: &Graph, seg: &SegmentSplit) -> Result<SplitResult, SplitError> {
     let m = seg.ops.len();
     let k = seg.factor;
@@ -154,7 +169,7 @@ pub fn apply_segment(g: &Graph, seg: &SegmentSplit) -> Result<SplitResult, Split
         if o >= g.ops.len() {
             return Err(err(format!("op {o} out of range")));
         }
-        if matches!(g.ops[o].kind, OpKind::Partial { .. } | OpKind::ConcatRows) {
+        if matches!(g.ops[o].kind, OpKind::Partial { .. } | OpKind::ConcatSlices { .. }) {
             return Err(err(format!("op {} is already a split artifact", g.ops[o].name)));
         }
     }
@@ -184,47 +199,63 @@ pub fn apply_segment(g: &Graph, seg: &SegmentSplit) -> Result<SplitResult, Split
         }
         return apply_dense(g, seg.ops[0], k);
     }
-    apply_spatial(g, seg)
+    apply_chain(g, seg)
 }
 
-fn apply_spatial(g: &Graph, seg: &SegmentSplit) -> Result<SplitResult, SplitError> {
+fn apply_chain(g: &Graph, seg: &SegmentSplit) -> Result<SplitResult, SplitError> {
     let m = seg.ops.len();
     let k = seg.factor;
+    let axis = seg.axis;
 
-    let mut geoms: Vec<VertGeom> = Vec::with_capacity(m);
+    let mut geoms: Vec<SliceGeom> = Vec::with_capacity(m);
     for (i, &oid) in seg.ops.iter().enumerate() {
         let op = &g.ops[oid];
-        let geom = vert_geom(g, op).ok_or_else(|| {
+        let geom = slice_geom(g, op, axis).ok_or_else(|| {
             SplitError::Unsupported(format!(
-                "op {} ({}) cannot be sliced along rows",
+                "op {} ({}) cannot be sliced along {}",
                 op.name,
-                op.kind.name()
+                op.kind.name(),
+                axis.name()
             ))
         })?;
-        if i == 0 && matches!(geom, VertGeom::Pointwise) {
-            return Err(SplitError::Unsupported(format!(
-                "segment head {} must be a windowed spatial op",
-                op.name
-            )));
+        match geom {
+            SliceGeom::Pointwise | SliceGeom::ChanParallel if i == 0 => {
+                return Err(SplitError::Unsupported(format!(
+                    "segment head {} must anchor the band (windowed spatial op or \
+                     Conv2D channel projection)",
+                    op.name
+                )));
+            }
+            SliceGeom::ChanProject if i > 0 => {
+                return Err(SplitError::Unsupported(format!(
+                    "op {} reads all input channels; Conv2D can only head a channel split",
+                    op.name
+                )));
+            }
+            _ => {}
         }
         geoms.push(geom);
     }
 
-    let h_in: Vec<usize> =
-        seg.ops.iter().map(|&o| g.tensors[g.ops[o].inputs[0]].shape[1]).collect();
+    let d = axis.dim();
+    let dim_in: Vec<usize> =
+        seg.ops.iter().map(|&o| g.tensors[g.ops[o].inputs[0]].shape[d]).collect();
     let last_old = *seg.ops.last().unwrap();
-    let h_out_last = g.tensors[g.ops[last_old].output].shape[1];
-    if k > h_out_last {
-        return Err(err(format!("factor {k} exceeds the {h_out_last} output rows")));
+    let n_out_last = g.tensors[g.ops[last_old].output].shape[d];
+    if k > n_out_last {
+        return Err(err(format!(
+            "factor {k} exceeds the {n_out_last} output {} of the segment",
+            axis.name()
+        )));
     }
 
     // bands[j][i]: output band of segment op i in slice j, propagated
-    // backwards from an even partition of the final output's rows.
+    // backwards from an even partition of the final output along the axis.
     let mut bands: Vec<Vec<Band>> = Vec::with_capacity(k);
-    for part in partition(h_out_last, k) {
+    for part in partition(n_out_last, k) {
         let mut row = vec![part; m];
         for i in (1..m).rev() {
-            row[i - 1] = in_band(geoms[i], h_in[i], row[i]);
+            row[i - 1] = in_band(geoms[i], dim_in[i], row[i]);
         }
         bands.push(row);
     }
@@ -252,19 +283,18 @@ fn apply_spatial(g: &Graph, seg: &SegmentSplit) -> Result<SplitResult, SplitErro
             let mut slabs: Vec<TensorId> = Vec::with_capacity(k);
             for (j, band_row) in bands.iter().enumerate() {
                 let mut cur = chain_in;
-                let mut cur_start = 0usize; // logical first row held by `cur`
+                let mut cur_start = 0usize; // logical first index held by `cur`
                 for (i, &oid) in seg.ops.iter().enumerate() {
                     let o = &g.ops[oid];
                     let band = band_row[i];
                     let full_out = &g.tensors[o.output];
-                    let shape = vec![1, band.rows(), full_out.shape[2], full_out.shape[3]];
-                    let kind = match geoms[i] {
-                        VertGeom::Pointwise => o.kind.clone(),
-                        VertGeom::Windowed { .. } => OpKind::Partial {
-                            inner: Box::new(o.kind.clone()),
-                            pad_top: pad_eff(geoms[i], band.start, cur_start),
-                            offset: band.start,
-                        },
+                    let mut shape = full_out.shape.clone();
+                    shape[d] = band.rows();
+                    let kind = OpKind::Partial {
+                        inner: Box::new(o.kind.clone()),
+                        axis,
+                        pad: pad_eff(geoms[i], band.start, cur_start),
+                        offset: band.start,
                     };
                     let name = format!("{}#s{j}", o.name);
                     let slab = b.slab(name.clone(), shape, full_out.dtype, o.output);
@@ -276,7 +306,13 @@ fn apply_spatial(g: &Graph, seg: &SegmentSplit) -> Result<SplitResult, SplitErro
                 slabs.push(cur);
             }
             let join_out = b.map(g.ops[last_old].output);
-            b.op(format!("{}#cat", g.ops[last_old].name), OpKind::ConcatRows, slabs, vec![], join_out);
+            b.op(
+                format!("{}#cat", g.ops[last_old].name),
+                OpKind::ConcatSlices { axis },
+                slabs,
+                vec![],
+                join_out,
+            );
             continue;
         }
         b.copy_op(op);
@@ -319,7 +355,8 @@ fn apply_dense(g: &Graph, oid: OpId, k: usize) -> Result<SplitResult, SplitError
                 name,
                 OpKind::Partial {
                     inner: Box::new(OpKind::Dense { act }),
-                    pad_top: 0,
+                    axis: SplitAxis::Channels,
+                    pad: 0,
                     offset: band.start,
                 },
                 vec![cur],
@@ -329,7 +366,13 @@ fn apply_dense(g: &Graph, oid: OpId, k: usize) -> Result<SplitResult, SplitError
             slabs.push(slab);
         }
         let join_out = b.map(op.output);
-        b.op(format!("{}#cat", op.name), OpKind::ConcatRows, slabs, vec![], join_out);
+        b.op(
+            format!("{}#cat", op.name),
+            OpKind::ConcatSlices { axis: SplitAxis::Channels },
+            slabs,
+            vec![],
+            join_out,
+        );
     }
     b.finish(g)
 }
@@ -337,8 +380,7 @@ fn apply_dense(g: &Graph, oid: OpId, k: usize) -> Result<SplitResult, SplitError
 /// Apply a sequence of segment splits, composing tensor provenance back to
 /// the original graph.
 pub fn apply_plan(g: &Graph, plan: &SplitPlan) -> Result<SplitResult, SplitError> {
-    let mut cur =
-        SplitResult { graph: g.clone(), sources: (0..g.tensors.len()).collect() };
+    let mut cur = SplitResult { graph: g.clone(), sources: (0..g.tensors.len()).collect() };
     for step in &plan.steps {
         let next = apply_segment(&cur.graph, step)?;
         let sources = next.sources.iter().map(|&mid| cur.sources[mid]).collect();
@@ -349,7 +391,8 @@ pub fn apply_plan(g: &Graph, plan: &SplitPlan) -> Result<SplitResult, SplitError
 
 /// Carry a weight store across a split: weights keep their payloads,
 /// activation slabs inherit the quantization parameters of the full tensor
-/// they are a band of.
+/// they are a band of. (Channel slices address their weight-column band by
+/// offset, so weight payloads are shared, not sliced.)
 pub fn remap_weight_store(ws: &WeightStore, res: &SplitResult) -> WeightStore {
     remap_weights_by_sources(ws, &res.sources)
 }
@@ -386,17 +429,19 @@ mod tests {
         b.finish().unwrap()
     }
 
-    fn seg_of(g: &Graph, names: &[&str], factor: usize) -> SegmentSplit {
+    fn seg_of(g: &Graph, names: &[&str], factor: usize, axis: SplitAxis) -> SegmentSplit {
         SegmentSplit {
             ops: names.iter().map(|n| g.op_by_name(n).unwrap().id).collect(),
             factor,
+            axis,
         }
     }
 
     #[test]
     fn split_graph_is_valid_and_shapes_cover() {
         let g = chain_cnn();
-        let res = apply_segment(&g, &seg_of(&g, &["c1", "dw", "pw"], 3)).unwrap();
+        let res =
+            apply_segment(&g, &seg_of(&g, &["c1", "dw", "pw"], 3, SplitAxis::Rows)).unwrap();
         let ng = &res.graph;
         ng.validate().unwrap();
         // 3 slices × 3 ops + join replace the 3 chain ops.
@@ -414,39 +459,75 @@ mod tests {
     }
 
     #[test]
-    fn split_execution_matches_unsplit_f32() {
+    fn col_split_banding_is_mirrored() {
         let g = chain_cnn();
-        let ws = crate::interp::WeightStore::seeded_f32(&g, 11);
+        let res =
+            apply_segment(&g, &seg_of(&g, &["c1", "dw", "pw"], 3, SplitAxis::Cols)).unwrap();
+        let ng = &res.graph;
+        ng.validate().unwrap();
+        // Slice output cols of the last segment op partition the full cols.
+        let cols: usize = (0..3)
+            .map(|j| ng.tensor_by_name(&format!("pw#s{j}")).unwrap().shape[2])
+            .sum();
+        assert_eq!(cols, 6);
+        // Column slabs keep the full height.
+        for j in 0..3 {
+            assert_eq!(ng.tensor_by_name(&format!("c1#s{j}")).unwrap().shape[1], 12);
+        }
+    }
+
+    #[test]
+    fn channel_split_has_no_halo() {
+        let g = chain_cnn();
+        // c1 (Conv2D head) + dw (channel-parallel): 6 channels into 3.
+        let res =
+            apply_segment(&g, &seg_of(&g, &["c1", "dw"], 3, SplitAxis::Channels)).unwrap();
+        let ng = &res.graph;
+        ng.validate().unwrap();
+        // Channel bands partition exactly — no halo, so the summed slice
+        // MACs equal the unsplit MACs (zero recompute).
+        assert_eq!(ng.total_macs(), g.total_macs());
+        for j in 0..3 {
+            assert_eq!(ng.tensor_by_name(&format!("c1#s{j}")).unwrap().shape[3], 2);
+            assert_eq!(ng.tensor_by_name(&format!("dw#s{j}")).unwrap().shape[3], 2);
+        }
+    }
+
+    fn assert_split_matches_f32(g: &Graph, seg: &SegmentSplit, seed: u64) {
+        let ws = crate::interp::WeightStore::seeded_f32(g, seed);
+        let n_in = g.tensors[g.inputs[0]].elems();
         let input =
-            TensorData::F32((0..288).map(|i| ((i % 23) as f32 - 11.0) / 7.0).collect());
-        let base = Interpreter::new(&g, ws.clone(), ExecConfig::with_capacity(1 << 20))
+            TensorData::F32((0..n_in).map(|i| ((i % 23) as f32 - 11.0) / 7.0).collect());
+        let base = Interpreter::new(g, ws.clone(), ExecConfig::with_capacity(1 << 20))
             .run(&[input.clone()])
             .unwrap();
+        let res = apply_segment(g, seg).unwrap();
+        let ws2 = remap_weight_store(&ws, &res);
+        let out = Interpreter::new(&res.graph, ws2, ExecConfig::with_capacity(1 << 20))
+            .run(&[input])
+            .unwrap();
+        assert_eq!(base.outputs, out.outputs, "axis {:?}", seg.axis);
+    }
+
+    #[test]
+    fn split_execution_matches_unsplit_f32() {
+        let g = chain_cnn();
         for factor in [2, 3] {
-            let res = apply_segment(&g, &seg_of(&g, &["c1", "dw", "pw"], factor)).unwrap();
-            let ws2 = remap_weight_store(&ws, &res);
-            let out = Interpreter::new(&res.graph, ws2, ExecConfig::with_capacity(1 << 20))
-                .run(&[input.clone()])
-                .unwrap();
-            assert_eq!(base.outputs, out.outputs, "factor {factor}");
+            for axis in [SplitAxis::Rows, SplitAxis::Cols] {
+                assert_split_matches_f32(&g, &seg_of(&g, &["c1", "dw", "pw"], factor, axis), 11);
+            }
+            assert_split_matches_f32(
+                &g,
+                &seg_of(&g, &["c1", "dw"], factor, SplitAxis::Channels),
+                11,
+            );
         }
     }
 
     #[test]
     fn dense_split_matches_unsplit_f32() {
         let g = chain_cnn();
-        let ws = crate::interp::WeightStore::seeded_f32(&g, 5);
-        let input =
-            TensorData::F32((0..288).map(|i| ((i % 19) as f32 - 9.0) / 5.0).collect());
-        let base = Interpreter::new(&g, ws.clone(), ExecConfig::with_capacity(1 << 20))
-            .run(&[input.clone()])
-            .unwrap();
-        let res = apply_segment(&g, &seg_of(&g, &["fc"], 3)).unwrap();
-        let ws2 = remap_weight_store(&ws, &res);
-        let out = Interpreter::new(&res.graph, ws2, ExecConfig::with_capacity(1 << 20))
-            .run(&[input])
-            .unwrap();
-        assert_eq!(base.outputs, out.outputs);
+        assert_split_matches_f32(&g, &seg_of(&g, &["fc"], 3, SplitAxis::Channels), 5);
     }
 
     #[test]
@@ -460,7 +541,7 @@ mod tests {
         b.output(c2);
         let g = b.finish().unwrap();
         let (base, _) = sched::optimal(&g).unwrap();
-        let res = apply_segment(&g, &seg_of(&g, &["c1", "c2"], 4)).unwrap();
+        let res = apply_segment(&g, &seg_of(&g, &["c1", "c2"], 4, SplitAxis::Rows)).unwrap();
         let (split_sched, _) = sched::optimal(&res.graph).unwrap();
         assert!(
             split_sched.peak_bytes < base.peak_bytes,
@@ -473,36 +554,54 @@ mod tests {
     #[test]
     fn rejects_bad_segments() {
         let g = chain_cnn();
+        let rows = SplitAxis::Rows;
         // Not chained (c1 -> pw skips dw).
-        assert!(apply_segment(&g, &seg_of(&g, &["c1", "pw"], 2)).is_err());
+        assert!(apply_segment(&g, &seg_of(&g, &["c1", "pw"], 2, rows)).is_err());
         // Factor 1 is not a split.
-        assert!(apply_segment(&g, &seg_of(&g, &["c1"], 1)).is_err());
+        assert!(apply_segment(&g, &seg_of(&g, &["c1"], 1, rows)).is_err());
         // Factor exceeding output rows.
-        assert!(apply_segment(&g, &seg_of(&g, &["dw"], 7)).is_err());
+        assert!(apply_segment(&g, &seg_of(&g, &["dw"], 7, rows)).is_err());
         // Non-sliceable op.
-        assert!(apply_segment(&g, &seg_of(&g, &["gap"], 2)).is_err());
+        assert!(apply_segment(&g, &seg_of(&g, &["gap"], 2, rows)).is_err());
         // Dense must be single-op.
-        assert!(apply_segment(&g, &seg_of(&g, &["gap", "fc"], 2)).is_err());
+        assert!(apply_segment(&g, &seg_of(&g, &["gap", "fc"], 2, rows)).is_err());
         // Empty.
-        assert!(apply_segment(&g, &SegmentSplit { ops: vec![], factor: 2 }).is_err());
+        assert!(apply_segment(
+            &g,
+            &SegmentSplit { ops: vec![], factor: 2, axis: rows }
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn rejects_bad_channel_segments() {
+        let g = chain_cnn();
+        let chans = SplitAxis::Channels;
+        // dw cannot head a channel split (needs an input channel offset).
+        assert!(apply_segment(&g, &seg_of(&g, &["dw"], 2, chans)).is_err());
+        // Conv2D (pw) cannot sit inside a channel chain.
+        assert!(apply_segment(&g, &seg_of(&g, &["c1", "dw", "pw"], 2, chans)).is_err());
+        // Factor exceeding the channel count.
+        assert!(apply_segment(&g, &seg_of(&g, &["c1", "dw"], 7, chans)).is_err());
     }
 
     #[test]
     fn double_split_is_rejected() {
         let g = chain_cnn();
-        let res = apply_segment(&g, &seg_of(&g, &["c1", "dw"], 2)).unwrap();
+        let res = apply_segment(&g, &seg_of(&g, &["c1", "dw"], 2, SplitAxis::Rows)).unwrap();
         let ng = &res.graph;
         let slice = ng.op_by_name("c1#s0").unwrap().id;
-        let e = apply_segment(ng, &SegmentSplit { ops: vec![slice], factor: 2 });
+        let e = apply_segment(
+            ng,
+            &SegmentSplit { ops: vec![slice], factor: 2, axis: SplitAxis::Rows },
+        );
         assert!(e.is_err());
     }
 
     #[test]
     fn plan_composes_sources_to_the_original_graph() {
         let g = chain_cnn();
-        let plan = SplitPlan {
-            steps: vec![seg_of(&g, &["c1", "dw"], 2)],
-        };
+        let plan = SplitPlan { steps: vec![seg_of(&g, &["c1", "dw"], 2, SplitAxis::Rows)] };
         let res = apply_plan(&g, &plan).unwrap();
         assert_eq!(res.sources.len(), res.graph.n_tensors());
         // Every slab of dw maps back to the original dw tensor.
@@ -520,16 +619,23 @@ mod tests {
     #[test]
     fn serde_roundtrips_split_graphs() {
         let g = chain_cnn();
-        let res = apply_segment(&g, &seg_of(&g, &["c1", "dw", "pw"], 2)).unwrap();
-        let mf = crate::graph::serde::ModelFile::new(res.graph.clone());
-        let back = crate::graph::serde::ModelFile::from_json(&mf.to_json()).unwrap();
-        assert_eq!(back.graph.n_ops(), res.graph.n_ops());
-        for (a, b) in res.graph.ops.iter().zip(&back.graph.ops) {
-            assert_eq!(a.kind, b.kind, "op {}", a.name);
+        let segs = [
+            seg_of(&g, &["c1", "dw", "pw"], 2, SplitAxis::Rows),
+            seg_of(&g, &["c1", "dw", "pw"], 2, SplitAxis::Cols),
+            seg_of(&g, &["c1", "dw"], 3, SplitAxis::Channels),
+        ];
+        for seg in &segs {
+            let res = apply_segment(&g, seg).unwrap();
+            let mf = crate::graph::serde::ModelFile::new(res.graph.clone());
+            let back = crate::graph::serde::ModelFile::from_json(&mf.to_json()).unwrap();
+            assert_eq!(back.graph.n_ops(), res.graph.n_ops());
+            for (a, b) in res.graph.ops.iter().zip(&back.graph.ops) {
+                assert_eq!(a.kind, b.kind, "op {} ({:?})", a.name, seg.axis);
+            }
+            assert_eq!(
+                sched::peak_of(&back.graph, &back.graph.default_order()),
+                sched::peak_of(&res.graph, &res.graph.default_order())
+            );
         }
-        assert_eq!(
-            sched::peak_of(&back.graph, &back.graph.default_order()),
-            sched::peak_of(&res.graph, &res.graph.default_order())
-        );
     }
 }

@@ -1,21 +1,35 @@
-//! `SplitPlan` search: co-optimize split factors and execution order.
+//! `SplitPlan` search: co-optimize split segments, factors, axes and the
+//! execution order.
 //!
-//! The outer loop is greedy and bottleneck-driven. Each round: simulate
-//! the current optimal schedule, anchor candidate chain segments at the
-//! operators touching the peak step, try every factor up to
-//! [`SplitOptions::max_factor`], score each rewrite by re-running
-//! Algorithm 1 ([`crate::sched::optimal`]) on the rewritten graph, and
-//! commit the strictly best improvement. Rounds stop when the SRAM budget
-//! is met, no candidate improves the peak, or `max_rounds` is reached.
-//! Scoring by the *scheduler's* optimum on the *whole* graph is the
-//! co-optimization: a split only survives if it helps after reordering.
+//! The planner is a beam search over candidate rewrites. A *move* is a
+//! `(segment, factor, axis)` tuple: a sliceable chain anchored at the
+//! current schedule's peak step, a slice count, and the axis to band
+//! (`Rows`, `Cols` or `Channels`). Each move is scored by re-running
+//! Algorithm 1 ([`crate::sched::optimal`]) on the rewritten graph — a
+//! split only survives if it helps *after* reordering, which is the
+//! co-optimization. Each round every surviving state expands its moves,
+//! and the pool (parents included, so stopping early is always allowed)
+//! is pruned to [`SplitOptions::beam_width`] states by
+//! `(peak SRAM, total MACs)` — the MAC tiebreak prefers plans with less
+//! halo recompute, which is where the channel axis shines (channel slices
+//! partition work and weights exactly, zero overlap).
+//!
+//! Beam width 1 degenerates to the greedy bottleneck-round search of the
+//! row-only splitter; wider beams keep the runner-up *improving* rewrites
+//! alive, so a move that helps less right now (e.g. a smaller-factor or
+//! different-axis split that leaves a better-shaped bottleneck) can still
+//! win after later rounds — the deployment-configuration search spirit of
+//! MCUNet applied to (segment, factor, axis). Moves that do not strictly
+//! lower their state's peak are pruned at generation, so every kept state
+//! is monotonically improving.
 
-use super::rewrite::{apply_segment, SegmentSplit, SplitPlan, SplitResult};
+use super::band::{slice_geom, SliceGeom};
+use super::rewrite::{apply_segment, SegmentSplit, SplitPlan};
 use super::SplitError;
-use crate::graph::{Graph, OpId, OpKind, TensorId};
+use crate::graph::{Graph, OpId, OpKind, SplitAxis, TensorId};
 use crate::sched::{self, MemTrace, Schedule};
 
-/// Knobs for the greedy split search.
+/// Knobs for the beam split search.
 #[derive(Clone, Debug)]
 pub struct SplitOptions {
     /// Largest slice count tried per segment.
@@ -25,10 +39,16 @@ pub struct SplitOptions {
     /// Stop as soon as the optimal peak fits this many bytes
     /// (`None` = squeeze as far as the rounds allow).
     pub sram_budget: Option<usize>,
-    /// Greedy rounds (= maximum number of segments introduced).
+    /// Search rounds (= maximum number of segments in a plan).
     pub max_rounds: usize,
-    /// Cap on candidate segments scored per round.
+    /// Cap on candidate segments scored per axis, per state, per round
+    /// (`Dense` candidates are always scored on top). Per-axis so that
+    /// enabling more axes never shrinks any one axis's search space.
     pub max_candidates: usize,
+    /// States kept per round. 1 = greedy bottleneck rounds.
+    pub beam_width: usize,
+    /// Axes the planner may slice along.
+    pub axes: Vec<SplitAxis>,
 }
 
 impl Default for SplitOptions {
@@ -39,6 +59,8 @@ impl Default for SplitOptions {
             sram_budget: None,
             max_rounds: 3,
             max_candidates: 48,
+            beam_width: 2,
+            axes: SplitAxis::ALL.to_vec(),
         }
     }
 }
@@ -46,16 +68,30 @@ impl Default for SplitOptions {
 impl SplitOptions {
     /// Cheaper preset for tests and quick CLI runs.
     pub fn quick() -> Self {
-        SplitOptions { max_factor: 3, max_rounds: 1, max_candidates: 24, ..Self::default() }
+        SplitOptions {
+            max_factor: 3,
+            max_rounds: 1,
+            max_candidates: 24,
+            beam_width: 1,
+            ..Self::default()
+        }
+    }
+
+    /// Restrict the planner to the spatial row axis, keeping every other
+    /// knob (beam width, rounds, factors) unchanged — the axis-ablation
+    /// baseline the benches compare multi-axis plans against.
+    pub fn rows_only(self) -> Self {
+        SplitOptions { axes: vec![SplitAxis::Rows], ..self }
     }
 }
 
-/// One committed greedy round.
+/// One committed split of a plan.
 #[derive(Clone, Debug)]
 pub struct SplitStep {
     /// Names of the segment's ops at the time of the split.
     pub segment: Vec<String>,
     pub factor: usize,
+    pub axis: SplitAxis,
     pub peak_before: usize,
     pub peak_after: usize,
 }
@@ -66,7 +102,7 @@ pub struct SplitOutcome {
     /// The rewritten graph (identical to the input when no split helped).
     pub graph: Graph,
     /// Tensor provenance back to the *original* graph (see
-    /// [`SplitResult::sources`]).
+    /// [`super::SplitResult::sources`]).
     pub sources: Vec<TensorId>,
     /// Optimal schedule of `graph`.
     pub schedule: Schedule,
@@ -84,6 +120,17 @@ impl SplitOutcome {
         self.schedule.peak_bytes < self.base_peak
     }
 
+    /// The distinct axes the committed plan slices along.
+    pub fn axes_used(&self) -> Vec<SplitAxis> {
+        let mut axes: Vec<SplitAxis> = Vec::new();
+        for s in &self.steps {
+            if !axes.contains(&s.axis) {
+                axes.push(s.axis);
+            }
+        }
+        axes
+    }
+
     /// Carry a weight store of the *original* graph onto the split graph
     /// (see [`super::remap_weight_store`]).
     pub fn remap_weights(&self, ws: &crate::interp::WeightStore) -> crate::interp::WeightStore {
@@ -91,31 +138,21 @@ impl SplitOutcome {
     }
 }
 
-fn is_windowed(kind: &OpKind) -> bool {
+/// Can `o` sit at an interior (non-head) position of a chain along `axis`?
+fn interior_sliceable(g: &Graph, o: OpId, axis: SplitAxis) -> bool {
     matches!(
-        kind,
-        OpKind::Conv2D { .. }
-            | OpKind::DepthwiseConv2D { .. }
-            | OpKind::MaxPool2D { .. }
-            | OpKind::AvgPool2D { .. }
+        slice_geom(g, &g.ops[o], axis),
+        Some(SliceGeom::Windowed { .. } | SliceGeom::Pointwise | SliceGeom::ChanParallel)
     )
 }
 
-fn is_pointwise(kind: &OpKind) -> bool {
-    matches!(kind, OpKind::Relu | OpKind::Relu6 | OpKind::BatchNorm { .. })
-}
-
-fn nhwc1(shape: &[usize]) -> bool {
-    shape.len() == 4 && shape[0] == 1
-}
-
-/// Can `o` sit inside a row-split chain?
-fn sliceable(g: &Graph, o: OpId) -> bool {
-    let op = &g.ops[o];
-    op.inputs.len() == 1
-        && (is_windowed(&op.kind) || is_pointwise(&op.kind))
-        && nhwc1(&g.tensors[op.inputs[0]].shape)
-        && nhwc1(&g.tensors[op.output].shape)
+/// Can `o` head a segment along `axis`? (Spatial axes: windowed ops;
+/// channel axis: a `Conv2D` projection.)
+fn head_sliceable(g: &Graph, o: OpId, axis: SplitAxis) -> bool {
+    matches!(
+        slice_geom(g, &g.ops[o], axis),
+        Some(SliceGeom::Windowed { .. } | SliceGeom::ChanProject)
+    )
 }
 
 /// The unique activation consumer of `t`, unless `t` is a graph output.
@@ -131,26 +168,35 @@ fn sole_consumer(g: &Graph, t: TensorId) -> Option<OpId> {
     Some(first)
 }
 
-/// Maximal sliceable single-consumer chain through `anchor`, in execution
-/// order. Empty if `anchor` itself is not sliceable.
-fn chain_through(g: &Graph, anchor: OpId) -> Vec<OpId> {
-    if !sliceable(g, anchor) {
+/// Maximal sliceable single-consumer chain through `anchor` along `axis`,
+/// in execution order. Empty if `anchor` itself is not sliceable. A
+/// head-only op (`Conv2D` on the channel axis) terminates the upward
+/// extension, so it can only appear at position 0.
+fn chain_through(g: &Graph, anchor: OpId, axis: SplitAxis) -> Vec<OpId> {
+    if !interior_sliceable(g, anchor, axis) && !head_sliceable(g, anchor, axis) {
         return Vec::new();
     }
     let mut chain = vec![anchor];
     loop {
         let head = chain[0];
+        if !interior_sliceable(g, head, axis) {
+            break; // head-only op: nothing can sit above it
+        }
         let input = g.ops[head].inputs[0];
         let Some(prev) = g.tensors[input].producer else { break };
-        if !sliceable(g, prev) || sole_consumer(g, g.ops[prev].output) != Some(head) {
+        if sole_consumer(g, g.ops[prev].output) != Some(head) {
             break;
         }
-        chain.insert(0, prev);
+        if interior_sliceable(g, prev, axis) || head_sliceable(g, prev, axis) {
+            chain.insert(0, prev);
+        } else {
+            break;
+        }
     }
     loop {
         let tail = *chain.last().unwrap();
         let Some(next) = sole_consumer(g, g.ops[tail].output) else { break };
-        if !sliceable(g, next) {
+        if !interior_sliceable(g, next, axis) {
             break;
         }
         chain.push(next);
@@ -158,15 +204,19 @@ fn chain_through(g: &Graph, anchor: OpId) -> Vec<OpId> {
     chain
 }
 
-/// All maximal sliceable chains of `g` (each op appears in at most one).
-pub fn find_chains(g: &Graph) -> Vec<Vec<OpId>> {
+/// All maximal sliceable chains of `g` along `axis` (each op appears in at
+/// most one).
+pub fn find_chains_along(g: &Graph, axis: SplitAxis) -> Vec<Vec<OpId>> {
     let mut seen = vec![false; g.ops.len()];
     let mut out = Vec::new();
     for o in 0..g.ops.len() {
-        if seen[o] || !sliceable(g, o) {
+        if seen[o] {
             continue;
         }
-        let chain = chain_through(g, o);
+        let chain = chain_through(g, o, axis);
+        if chain.is_empty() {
+            continue;
+        }
         for &c in &chain {
             seen[c] = true;
         }
@@ -175,16 +225,21 @@ pub fn find_chains(g: &Graph) -> Vec<Vec<OpId>> {
     out
 }
 
-/// Sub-segments (windowed head, length ≤ `max_segment`) of the chain
-/// through `anchor` that contain `anchor`.
-fn segments_around(g: &Graph, anchor: OpId, max_segment: usize) -> Vec<Vec<OpId>> {
-    let chain = chain_through(g, anchor);
+/// Row-axis chains (the original splitter's view of the graph).
+pub fn find_chains(g: &Graph) -> Vec<Vec<OpId>> {
+    find_chains_along(g, SplitAxis::Rows)
+}
+
+/// Sub-segments (sliceable head, length ≤ `max_segment`) of the chain
+/// through `anchor` along `axis` that contain `anchor`.
+fn segments_around(g: &Graph, anchor: OpId, axis: SplitAxis, max_segment: usize) -> Vec<Vec<OpId>> {
+    let chain = chain_through(g, anchor, axis);
     let Some(pos) = chain.iter().position(|&o| o == anchor) else {
         return Vec::new();
     };
     let mut segs = Vec::new();
     for s in 0..=pos {
-        if !is_windowed(&g.ops[chain[s]].kind) {
+        if !head_sliceable(g, chain[s], axis) {
             continue;
         }
         for e in pos..chain.len() {
@@ -197,15 +252,15 @@ fn segments_around(g: &Graph, anchor: OpId, max_segment: usize) -> Vec<Vec<OpId>
     segs
 }
 
-/// Candidate segments for one greedy round: chains anchored at the ops
+/// Candidate moves for one search round: segments anchored at the ops
 /// touching the peak step of `trace` (the op executing there, plus the
-/// producers and consumers of every tensor resident there), and every
-/// splittable `Dense`.
-pub fn candidate_segments(
+/// producers and consumers of every tensor resident there), enumerated
+/// per axis, and every splittable `Dense` (always scored).
+pub fn candidate_moves(
     g: &Graph,
     trace: &MemTrace,
     opts: &SplitOptions,
-) -> Vec<Vec<OpId>> {
+) -> Vec<(Vec<OpId>, SplitAxis)> {
     let step = &trace.steps[trace.peak_step];
     let mut anchors: Vec<OpId> = vec![step.op];
     for &t in &step.resident {
@@ -221,85 +276,136 @@ pub fn candidate_segments(
     anchors.sort_unstable();
     anchors.dedup();
 
-    let mut segs: Vec<Vec<OpId>> = Vec::new();
-    for a in anchors {
-        for s in segments_around(g, a, opts.max_segment) {
-            if !segs.contains(&s) {
-                segs.push(s);
-            }
-        }
-    }
-    // The cap applies to the combinatorial chain segments only; Dense
-    // candidates (at most one per dense op) are always scored.
-    segs.truncate(opts.max_candidates);
-    for op in &g.ops {
-        if let OpKind::Dense { .. } = op.kind {
-            let out = &g.tensors[op.output].shape;
-            if out.len() == 2 && out[1] >= 2 {
-                let s = vec![op.id];
-                if !segs.contains(&s) {
-                    segs.push(s);
+    // The candidate cap applies per axis, so enabling more axes never
+    // shrinks any single axis's search space — an all-axes run explores a
+    // strict superset of a rows-only run's moves each round. (Dense
+    // candidates, at most one per dense op, are always scored on top.)
+    let mut moves: Vec<(Vec<OpId>, SplitAxis)> = Vec::new();
+    for &axis in &opts.axes {
+        let mut n_axis = 0usize;
+        'anchors: for &a in &anchors {
+            for s in segments_around(g, a, axis, opts.max_segment) {
+                let mv = (s, axis);
+                if !moves.contains(&mv) {
+                    moves.push(mv);
+                    n_axis += 1;
+                    if n_axis >= opts.max_candidates {
+                        break 'anchors;
+                    }
                 }
             }
         }
     }
-    segs
+    for op in &g.ops {
+        if let OpKind::Dense { .. } = op.kind {
+            let out = &g.tensors[op.output].shape;
+            if out.len() == 2 && out[1] >= 2 {
+                let mv = (vec![op.id], SplitAxis::Channels);
+                if !moves.contains(&mv) {
+                    moves.push(mv);
+                }
+            }
+        }
+    }
+    moves
 }
 
-/// Greedy split search (see module docs). The outcome's `graph` equals the
+/// One beam state: a (possibly already split) graph, its optimal
+/// schedule, and the plan that produced it.
+#[derive(Clone)]
+struct BeamState {
+    graph: Graph,
+    sources: Vec<TensorId>,
+    sched: Schedule,
+    macs: u64,
+    steps: Vec<SplitStep>,
+    plan: SplitPlan,
+}
+
+/// Beam split search (see module docs). The outcome's `graph` equals the
 /// input graph when no split strictly improves the reorder-only peak.
 pub fn optimize(g: &Graph, opts: &SplitOptions) -> Result<SplitOutcome, SplitError> {
     let (base, _) = sched::optimal(g).map_err(|e| SplitError::Schedule(e.to_string()))?;
     let base_peak = base.peak_bytes;
 
-    let mut cur_graph = g.clone();
-    let mut cur_sources: Vec<TensorId> = (0..g.tensors.len()).collect();
-    let mut cur_sched = base;
-    let mut steps: Vec<SplitStep> = Vec::new();
-    let mut plan = SplitPlan::default();
+    let mut beam: Vec<BeamState> = vec![BeamState {
+        graph: g.clone(),
+        sources: (0..g.tensors.len()).collect(),
+        sched: base,
+        macs: g.total_macs(),
+        steps: Vec::new(),
+        plan: SplitPlan::default(),
+    }];
+    let met = |peak: usize| opts.sram_budget.is_some_and(|b| peak <= b);
 
     for _round in 0..opts.max_rounds {
-        if let Some(budget) = opts.sram_budget {
-            if cur_sched.peak_bytes <= budget {
-                break;
-            }
+        if met(beam[0].sched.peak_bytes) {
+            break;
         }
-        let trace = sched::simulate(&cur_graph, &cur_sched.order);
-        let mut best: Option<(SplitResult, Schedule, SegmentSplit)> = None;
-        for seg_ops in candidate_segments(&cur_graph, &trace, opts) {
-            for factor in 2..=opts.max_factor {
-                let seg = SegmentSplit { ops: seg_ops.clone(), factor };
-                let Ok(res) = apply_segment(&cur_graph, &seg) else { continue };
-                let Ok((s, _)) = sched::optimal(&res.graph) else { continue };
-                let to_beat =
-                    best.as_ref().map_or(cur_sched.peak_bytes, |(_, b, _)| b.peak_bytes);
-                if s.peak_bytes < to_beat {
-                    best = Some((res, s, seg));
+        // Parents survive into the pool: a state that stops splitting
+        // early is itself a candidate plan.
+        let mut pool: Vec<BeamState> = beam.clone();
+        let mut grew = false;
+        for st in &beam {
+            if met(st.sched.peak_bytes) {
+                continue;
+            }
+            let trace = sched::simulate(&st.graph, &st.sched.order);
+            for (seg_ops, axis) in candidate_moves(&st.graph, &trace, opts) {
+                for factor in 2..=opts.max_factor {
+                    let seg = SegmentSplit { ops: seg_ops.clone(), factor, axis };
+                    let Ok(res) = apply_segment(&st.graph, &seg) else { continue };
+                    let Ok((s, _)) = sched::optimal(&res.graph) else { continue };
+                    if s.peak_bytes >= st.sched.peak_bytes {
+                        continue; // only strictly improving rewrites survive
+                    }
+                    let mut steps = st.steps.clone();
+                    steps.push(SplitStep {
+                        segment: seg
+                            .ops
+                            .iter()
+                            .map(|&o| st.graph.ops[o].name.clone())
+                            .collect(),
+                        factor,
+                        axis,
+                        peak_before: st.sched.peak_bytes,
+                        peak_after: s.peak_bytes,
+                    });
+                    let mut plan = st.plan.clone();
+                    plan.steps.push(seg);
+                    let sources: Vec<TensorId> =
+                        res.sources.iter().map(|&mid| st.sources[mid]).collect();
+                    let macs = res.graph.total_macs();
+                    pool.push(BeamState {
+                        graph: res.graph,
+                        sources,
+                        sched: s,
+                        macs,
+                        steps,
+                        plan,
+                    });
+                    grew = true;
                 }
             }
         }
-        let Some((res, s, seg)) = best else { break };
-        steps.push(SplitStep {
-            segment: seg.ops.iter().map(|&o| cur_graph.ops[o].name.clone()).collect(),
-            factor: seg.factor,
-            peak_before: cur_sched.peak_bytes,
-            peak_after: s.peak_bytes,
-        });
-        plan.steps.push(seg);
-        let composed: Vec<TensorId> =
-            res.sources.iter().map(|&mid| cur_sources[mid]).collect();
-        cur_sources = composed;
-        cur_graph = res.graph;
-        cur_sched = s;
+        // Prune by (peak SRAM, recompute): lower peak first, fewer total
+        // MACs on ties — the cheapest plan among equally-small ones wins.
+        pool.sort_by_key(|s| (s.sched.peak_bytes, s.macs));
+        pool.truncate(opts.beam_width.max(1));
+        beam = pool;
+        if !grew {
+            break;
+        }
     }
 
+    let best = beam.swap_remove(0);
     Ok(SplitOutcome {
-        graph: cur_graph,
-        sources: cur_sources,
-        schedule: cur_sched,
+        graph: best.graph,
+        sources: best.sources,
+        schedule: best.sched,
         base_peak,
-        steps,
-        plan,
+        steps: best.steps,
+        plan: best.plan,
     })
 }
 
@@ -320,6 +426,23 @@ mod tests {
     }
 
     #[test]
+    fn mobilenet_channel_chains_are_conv_headed() {
+        let g = models::mobilenet_v1_025(DType::I8);
+        let chains = find_chains_along(&g, SplitAxis::Channels);
+        // Channel chains cannot cross a pointwise Conv2D (it reads all
+        // input channels), so the long row chain shatters into
+        // [conv, dw] pairs plus the tail pw.
+        assert!(chains.len() > 10, "got {} chains", chains.len());
+        for chain in &chains {
+            assert!(chain.len() <= 2);
+            // Any multi-op chain starts at a Conv2D projection head.
+            if chain.len() == 2 {
+                assert!(head_sliceable(&g, chain[0], SplitAxis::Channels));
+            }
+        }
+    }
+
+    #[test]
     fn swiftnet_chains_follow_branches() {
         let g = models::swiftnet_cell(DType::I8);
         let chains = find_chains(&g);
@@ -334,16 +457,18 @@ mod tests {
     }
 
     #[test]
-    fn segments_have_windowed_heads_and_contain_anchor() {
+    fn segments_have_sliceable_heads_and_contain_anchor() {
         let g = models::mobilenet_v1_025(DType::I8);
         let anchor = g.op_by_name("pw1").unwrap().id;
-        let segs = segments_around(&g, anchor, 4);
-        assert!(!segs.is_empty());
-        for s in &segs {
-            assert!(s.len() <= 4);
-            assert!(s.contains(&anchor));
-            assert!(is_windowed(&g.ops[s[0]].kind));
+        for axis in SplitAxis::ALL {
+            let segs = segments_around(&g, anchor, axis, 4);
+            for s in &segs {
+                assert!(s.len() <= 4);
+                assert!(s.contains(&anchor));
+                assert!(head_sliceable(&g, s[0], axis));
+            }
         }
+        assert!(!segments_around(&g, anchor, SplitAxis::Rows, 4).is_empty());
     }
 
     #[test]
@@ -359,6 +484,36 @@ mod tests {
         assert!(!out.steps.is_empty());
         out.graph.validate().unwrap();
         out.graph.check_order(&out.schedule.order).unwrap();
+    }
+
+    #[test]
+    fn wider_beam_is_never_worse() {
+        let g = models::mobilenet_v1_025(DType::I8);
+        let narrow = optimize(&g, &SplitOptions::quick()).unwrap();
+        let wide =
+            optimize(&g, &SplitOptions { beam_width: 3, ..SplitOptions::quick() }).unwrap();
+        assert!(wide.schedule.peak_bytes <= narrow.schedule.peak_bytes);
+    }
+
+    #[test]
+    fn beam_prefers_channel_axis_on_expand_dw_chain() {
+        // audionet's front block is a channel-split showcase: the fat c1
+        // intermediate is consumed by a tall-kernel (12×3) depthwise, so
+        // row slabs carry a 10-row halo while channel slabs carry none.
+        let g = models::audionet(DType::I8);
+        let rows = optimize(&g, &SplitOptions::default().rows_only()).unwrap();
+        let all = optimize(&g, &SplitOptions::default()).unwrap();
+        assert!(
+            all.schedule.peak_bytes < rows.schedule.peak_bytes,
+            "all-axes {} should beat rows-only {}",
+            all.schedule.peak_bytes,
+            rows.schedule.peak_bytes
+        );
+        assert!(
+            all.steps.iter().any(|s| s.axis != SplitAxis::Rows),
+            "winning plan should use a non-row axis: {:?}",
+            all.steps
+        );
     }
 
     #[test]

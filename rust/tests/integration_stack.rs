@@ -143,8 +143,10 @@ fn table1_overheads_under_1_5_percent() {
         .unwrap();
     assert!(run.alloc.bytes_moved > 0, "compaction should move something");
 
-    let mut static_stats = mcu_reorder::alloc::AllocStats::default();
-    static_stats.high_water = mnet_i8.activation_total();
+    let static_stats = mcu_reorder::alloc::AllocStats {
+        high_water: mnet_i8.activation_total(),
+        ..Default::default()
+    };
     let model = CostModel::calibrated(&mnet_i8, &static_stats, &NUCLEO_F767ZI, 1.316, 728.0);
     let st = model.estimate(&mnet_i8, &static_stats, &NUCLEO_F767ZI);
     let dy = model.estimate(&mnet_i8, &run.alloc, &NUCLEO_F767ZI);

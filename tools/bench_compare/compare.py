@@ -1,0 +1,117 @@
+#!/usr/bin/env python3
+"""Bench-regression gate.
+
+Compares the freshly-written ``BENCH_<name>.json`` reports (produced by
+``cargo bench``) against the committed baselines in ``BENCH_baseline/``
+and fails (exit 1) if any gated metric regressed.
+
+Gated metrics are the ``*_peak`` keys — peak SRAM in bytes, lower is
+better, and fully deterministic (they come from the analytic scheduler,
+not from timing). Timing rows are reported but never gated.
+
+Usage:
+    python3 tools/bench_compare/compare.py <baseline_dir> <current_dir>
+
+Baseline files are named ``<bench>.json`` (e.g. ``partial_exec.json``)
+and share the report schema: ``{"bench": ..., "metrics": {...}}``.
+Current files are the ``BENCH_<bench>.json`` the bench binaries write.
+
+Rules:
+  - current value >  baseline          -> REGRESSION (fail)
+  - current value <= baseline          -> ok (improvement is reported)
+  - baseline key missing from current  -> MISSING (fail: coverage loss)
+  - current key missing from baseline  -> new (reported, not gated)
+
+To refresh a baseline after an intentional change:
+    cargo bench --bench partial_exec
+    python3 tools/bench_compare/compare.py --refresh BENCH_baseline .
+which copies the gated metrics of the current reports over the baseline
+files (review the diff before committing).
+"""
+
+import json
+import pathlib
+import sys
+
+GATED_SUFFIX = "_peak"
+
+
+def load_metrics(path):
+    with open(path, "r", encoding="utf-8") as f:
+        doc = json.load(f)
+    return {k: v for k, v in doc.get("metrics", {}).items()}
+
+
+def gated(metrics):
+    return {k: v for k, v in metrics.items() if k.endswith(GATED_SUFFIX)}
+
+
+def refresh(baseline_dir, current_dir):
+    for base_path in sorted(baseline_dir.glob("*.json")):
+        cur_path = current_dir / f"BENCH_{base_path.stem}.json"
+        if not cur_path.exists():
+            print(f"refresh: {cur_path} not found; run the bench first", file=sys.stderr)
+            return 1
+        cur = gated(load_metrics(cur_path))
+        doc = {"bench": base_path.stem, "metrics": dict(sorted(cur.items())), "timings": []}
+        base_path.write_text(json.dumps(doc, indent=2) + "\n", encoding="utf-8")
+        print(f"refreshed {base_path} ({len(cur)} gated metrics)")
+    return 0
+
+
+def compare(baseline_dir, current_dir):
+    failures = []
+    checked = 0
+    for base_path in sorted(baseline_dir.glob("*.json")):
+        bench = base_path.stem
+        cur_path = current_dir / f"BENCH_{bench}.json"
+        if not cur_path.exists():
+            failures.append(f"{bench}: current report {cur_path} not found (bench not run?)")
+            continue
+        base = gated(load_metrics(base_path))
+        cur = load_metrics(cur_path)
+        for key, base_val in sorted(base.items()):
+            if key not in cur:
+                failures.append(f"{bench}: metric {key} missing from current report")
+                continue
+            checked += 1
+            cur_val = cur[key]
+            if cur_val > base_val:
+                failures.append(
+                    f"{bench}: {key} regressed: {cur_val:.0f} > baseline {base_val:.0f}"
+                )
+            elif cur_val < base_val:
+                print(f"ok  {bench}.{key}: improved {base_val:.0f} -> {cur_val:.0f}")
+            else:
+                print(f"ok  {bench}.{key}: {cur_val:.0f}")
+        for key in sorted(gated(cur)):
+            if key not in base:
+                print(f"new {bench}.{key}: {cur[key]:.0f} (not in baseline; not gated)")
+    print(f"\nchecked {checked} gated metric(s)")
+    if failures:
+        print("\nBENCH REGRESSIONS:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print("bench-regression gate: green")
+    return 0
+
+
+def main(argv):
+    args = [a for a in argv[1:] if a != "--refresh"]
+    do_refresh = "--refresh" in argv[1:]
+    if len(args) != 2:
+        print(__doc__, file=sys.stderr)
+        return 2
+    baseline_dir = pathlib.Path(args[0])
+    current_dir = pathlib.Path(args[1])
+    if not baseline_dir.is_dir():
+        print(f"baseline dir {baseline_dir} not found", file=sys.stderr)
+        return 2
+    if do_refresh:
+        return refresh(baseline_dir, current_dir)
+    return compare(baseline_dir, current_dir)
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
