@@ -4,10 +4,13 @@
 //! For every model: peak SRAM under (a) the as-built default order, (b)
 //! reorder-only (Algorithm 1 — the paper's result), (c) the best
 //! *row-only* plan (the same beam planner restricted to the row axis),
-//! and (d) the beam planner over all (segment, factor, axis) moves, plus which axes
-//! the winning plan uses and the halo-recompute overhead it pays. Results
-//! are written machine-readably to `BENCH_partial_exec.json` so the
-//! trajectory is tracked across PRs and gated in CI (tools/bench_compare).
+//! (d) the PR-3 beam planner over all (segment, factor, axis) moves with
+//! materialized `ConcatSlices` joins, and (e) the full planner with
+//! streaming concat elision (write-through slices, no join copy), plus
+//! which axes the winning plan uses and the halo-recompute overhead it
+//! pays. Results are written machine-readably to
+//! `BENCH_partial_exec.json` so the trajectory is tracked across PRs and
+//! gated in CI (tools/bench_compare).
 
 use mcu_reorder::graph::{DType, Graph};
 use mcu_reorder::mcu::{CostModel, SplitOverhead, NUCLEO_F767ZI};
@@ -24,6 +27,7 @@ fn main() {
         ("swiftnet".into(), models::swiftnet_cell(DType::I8)),
         ("resnet".into(), models::resnet_micro(DType::I8)),
         ("audionet".into(), models::audionet(DType::I8)),
+        ("streamnet".into(), models::streamnet(DType::I8)),
         ("tiny".into(), models::tiny_cnn(DType::I8)),
     ];
     // Synthetic DAGs: their operators are cost-model nodes without spatial
@@ -42,21 +46,26 @@ fn main() {
         "default",
         "reorder-only",
         "rows-only",
-        "beam (all axes)",
+        "beam (PR-3)",
+        "elided",
         "axes",
-        "vs rows",
+        "vs beam",
         "recompute",
     ]);
     let mut metrics: Vec<(String, f64)> = Vec::new();
     let mut beam_wins = 0usize;
+    let mut elide_wins = 0usize;
 
     for (name, g) in &zoo {
         let default_peak = sched::peak_of(g, &g.default_order());
-        let rows = split::optimize(g, &opts.clone().rows_only()).expect("rows-only search");
-        let outcome = split::optimize(g, &opts).expect("beam split search");
+        let rows = split::optimize(g, &opts.clone().rows_only().materialized())
+            .expect("rows-only search");
+        let mat = split::optimize(g, &opts.clone().materialized()).expect("PR-3 beam search");
+        let outcome = split::optimize(g, &opts).expect("elided beam search");
         let reorder_peak = outcome.base_peak;
         let rows_peak = rows.schedule.peak_bytes;
-        let both = outcome.schedule.peak_bytes;
+        let mat_peak = mat.schedule.peak_bytes;
+        let elided_peak = outcome.schedule.peak_bytes;
         let ov = SplitOverhead::measure(&cost, g, &outcome.graph, &NUCLEO_F767ZI);
         let axes = if outcome.steps.is_empty() {
             "-".to_string()
@@ -68,28 +77,35 @@ fn main() {
                 .collect::<Vec<_>>()
                 .join("+")
         };
-        let vs_rows = 100.0 * (1.0 - both as f64 / rows_peak as f64);
-        if both < rows_peak {
+        let vs_mat = 100.0 * (1.0 - elided_peak as f64 / mat_peak as f64);
+        if mat_peak < rows_peak {
             beam_wins += 1;
+        }
+        if elided_peak < mat_peak {
+            elide_wins += 1;
         }
         table.row(&[
             name.clone(),
             kb(default_peak),
             kb(reorder_peak),
             kb(rows_peak),
-            kb(both),
+            kb(mat_peak),
+            kb(elided_peak),
             axes,
-            format!("-{vs_rows:.1}%"),
+            format!("-{vs_mat:.1}%"),
             format!("+{:.1}% MACs", 100.0 * ov.recompute_frac()),
         ]);
         for (key, v) in [
             ("default_peak", default_peak as f64),
             ("reorder_peak", reorder_peak as f64),
             ("rows_only_peak", rows_peak as f64),
-            ("split_reorder_peak", both as f64),
+            ("split_reorder_peak", mat_peak as f64),
+            ("elided_peak", elided_peak as f64),
             ("segments", outcome.steps.len() as f64),
+            ("elided_segments", outcome.elided_steps() as f64),
             ("recompute_frac", ov.recompute_frac()),
             ("weight_traffic_ratio", ov.weight_traffic_ratio()),
+            ("elided_join_bytes", ov.elided_join_bytes as f64),
         ] {
             metrics.push((format!("{name}.{key}"), v));
         }
@@ -98,10 +114,12 @@ fn main() {
     table.print();
     println!(
         "\n(reorder-only = the paper's Algorithm 1; rows-only = the same beam planner \
-         restricted to the row axis; the full beam explores (segment, factor, axis) \
-         with axis ∈ {{rows, cols, channels}})"
+         restricted to the row axis; beam (PR-3) = all axes with materialized \
+         ConcatSlices joins; elided = the full planner, which also streams joins \
+         away through write-through slices when that lowers the peak)"
     );
     println!("beam plan strictly beats the best row-only plan on {beam_wins} model(s)");
+    println!("join elision strictly beats the PR-3 beam plan on {elide_wins} model(s)");
 
     // Timings of the search itself.
     let mut bch = Bencher::quick();

@@ -25,7 +25,7 @@ mod arena;
 mod planner;
 
 pub use arena::{AllocError, AllocStats, BufId, CompactPolicy, DynamicArena};
-pub use planner::{plan_lifetimes, Lifetime, StaticPlan};
+pub use planner::{plan_lifetimes, storage_roots, Lifetime, StaticPlan};
 
 #[cfg(test)]
 mod tests {

@@ -15,6 +15,29 @@ use std::collections::HashMap;
 
 use crate::graph::{Graph, OpId, TensorId};
 
+/// Storage-sharing roots induced by structural in-place accumulators
+/// (streaming join elision): a [`crate::graph::OpKind::PartialInto`]
+/// writes through its accumulator's buffer, so the whole accumulator
+/// chain — intermediate `…#w{j}` tensors plus the final join tensor —
+/// occupies ONE buffer. `root[t]` is the representative tensor of `t`'s
+/// sharing group (`t` itself for ordinary tensors). The offline planners
+/// place one slot per group and point every member at it; their lifetimes
+/// deliberately overlap in both time and address.
+pub fn storage_roots(g: &Graph) -> Vec<TensorId> {
+    let mut root: Vec<TensorId> = (0..g.tensors.len()).collect();
+    for (op, acc) in g.ops.iter().zip(crate::sched::elided_accumulators(g)) {
+        if let Some(acc) = acc {
+            // Resolve transitively (the accumulator may itself share).
+            let mut r = acc;
+            while root[r] != r {
+                r = root[r];
+            }
+            root[op.output] = r;
+        }
+    }
+    root
+}
+
 /// Production/death step of one activation tensor under a given order.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Lifetime {
@@ -91,17 +114,36 @@ impl StaticPlan {
     /// Tensors are placed largest-first; each goes to the lowest offset
     /// where it does not overlap (in address space) any already-placed
     /// tensor with an intersecting lifetime. Zero-byte tensors all sit at
-    /// offset 0.
+    /// offset 0. Tensors in one storage-sharing group (a join-elided
+    /// accumulator chain — see [`storage_roots`]) are placed as a single
+    /// slot spanning the union of their lifetimes: every member gets the
+    /// same offset, which is exactly the overlap the elision promises.
     pub fn best_fit(g: &Graph, order: &[OpId]) -> StaticPlan {
-        let mut lifetimes = plan_lifetimes(g, order);
-        lifetimes.sort_by(|a, b| b.bytes.cmp(&a.bytes).then(a.tensor.cmp(&b.tensor)));
+        let root = storage_roots(g);
+        // Merge each sharing group into one lifetime interval (members
+        // are equal-sized; the interval covers first producer to last
+        // consumer of the chain).
+        let mut merged: HashMap<TensorId, Lifetime> = HashMap::new();
+        for lt in plan_lifetimes(g, order) {
+            let r = root[lt.tensor];
+            merged
+                .entry(r)
+                .and_modify(|m| {
+                    m.start = m.start.min(lt.start);
+                    m.end = m.end.max(lt.end);
+                    m.bytes = m.bytes.max(lt.bytes);
+                })
+                .or_insert(Lifetime { tensor: r, ..lt });
+        }
+        let mut groups: Vec<Lifetime> = merged.into_values().collect();
+        groups.sort_by(|a, b| b.bytes.cmp(&a.bytes).then(a.tensor.cmp(&b.tensor)));
 
         // placed: (offset, lifetime)
         let mut placed: Vec<(usize, Lifetime)> = Vec::new();
-        let mut offsets = HashMap::new();
+        let mut group_offset: HashMap<TensorId, usize> = HashMap::new();
         let mut arena = 0usize;
 
-        for lt in lifetimes {
+        for lt in groups {
             // Collect address intervals of time-overlapping tensors, sorted
             // by offset; first-fit the new tensor into the gaps.
             let mut busy: Vec<(usize, usize)> = placed
@@ -117,16 +159,26 @@ impl StaticPlan {
                 }
                 offset = offset.max(hi);
             }
-            offsets.insert(lt.tensor, offset);
+            group_offset.insert(lt.tensor, offset);
             arena = arena.max(offset + lt.bytes);
             placed.push((offset, lt));
         }
+        let offsets: HashMap<TensorId, usize> = g
+            .tensors
+            .iter()
+            .filter(|t| !t.is_weight)
+            .map(|t| (t.id, group_offset[&root[t.id]]))
+            .collect();
         StaticPlan { offsets, arena_bytes: arena, strategy: "planned-best-fit" }
     }
 
     /// Verify no two simultaneously-live tensors overlap in address space
-    /// and the plan stays within `arena_bytes`.
+    /// and the plan stays within `arena_bytes`. Tensors of one
+    /// storage-sharing group (join-elided accumulator chains) are
+    /// *expected* to overlap — they are the same buffer — and are skipped
+    /// pairwise.
     pub fn check_no_overlap(&self, g: &Graph, order: &[OpId]) -> Result<(), String> {
+        let root = storage_roots(g);
         let lifetimes = plan_lifetimes(g, order);
         for (i, a) in lifetimes.iter().enumerate() {
             let ao = *self
@@ -140,6 +192,9 @@ impl StaticPlan {
                 let time_overlap = !(b.end < a.start || b.start > a.end);
                 if !time_overlap || a.bytes == 0 || b.bytes == 0 {
                     continue;
+                }
+                if root[a.tensor] == root[b.tensor] {
+                    continue; // same buffer by construction
                 }
                 let bo = self.offsets[&b.tensor];
                 let addr_overlap = ao < bo + b.bytes && bo < ao + a.bytes;
@@ -227,6 +282,51 @@ mod tests {
             assert!(plan.arena_bytes >= peak);
             assert!(plan.arena_bytes <= g.activation_total());
         });
+    }
+
+    /// Join-elided accumulator chains place as ONE slot: members share an
+    /// offset, the checker accepts the intentional overlap, and the plan
+    /// stays under the 2×output floor a materialized join would force.
+    #[test]
+    fn best_fit_overlaps_elided_accumulator_chains() {
+        use crate::graph::{Act, Padding, SplitAxis};
+        use crate::split::{apply_segment, SegmentSplit};
+        let mut b = GraphBuilder::new("elide-plan");
+        let x = b.input("x", &[1, 8, 8, 2], DType::I8);
+        let c1 = b.conv2d("c1", x, 16, (3, 3), (1, 1), Padding::Same, Act::Relu6);
+        let dw = b.dwconv2d("dw", c1, (3, 3), (1, 1), Padding::Same, Act::Relu6);
+        b.output(dw);
+        let g = b.finish().unwrap();
+        let seg =
+            SegmentSplit { ops: vec![0, 1], factor: 4, axis: SplitAxis::Rows, elide: true };
+        let res = apply_segment(&g, &seg).unwrap();
+        let (sched, _) = crate::sched::optimal(&res.graph).unwrap();
+
+        // The whole accumulator chain shares one root…
+        let root = storage_roots(&res.graph);
+        let join = res.graph.tensor_by_name("dw").unwrap().id;
+        let shared: Vec<TensorId> = (0..res.graph.n_tensors())
+            .filter(|&t| root[t] == root[join])
+            .collect();
+        assert_eq!(shared.len(), 4, "3 intermediate accumulators + the join tensor");
+
+        // …the plan gives every member the same offset…
+        let plan = StaticPlan::best_fit(&res.graph, &sched.order);
+        plan.check_no_overlap(&res.graph, &sched.order).unwrap();
+        let off = plan.offsets[&join];
+        for &t in &shared {
+            assert_eq!(plan.offsets[&t], off, "tensor {t} not overlapped");
+        }
+
+        // …and the arena stays below what a materialized join would need.
+        let join_bytes = res.graph.tensors[join].bytes();
+        assert!(plan.arena_bytes >= sched.peak_bytes);
+        assert!(
+            plan.arena_bytes < 2 * join_bytes,
+            "planned arena {} should undercut the 2x join floor {}",
+            plan.arena_bytes,
+            2 * join_bytes
+        );
     }
 
     #[test]

@@ -203,6 +203,20 @@ pub enum OpKind {
     /// All inputs share the output's quantization, so the join is a pure
     /// copy — no requantization, bit-exact.
     ConcatSlices { axis: SplitAxis },
+    /// Join-elided slab evaluation (streaming concat elision): computes
+    /// the output band `[offset, offset + len)` of `inner` along `axis`
+    /// from the input slab (`inputs[0]`, with effective padding `pad` as
+    /// in [`OpKind::Partial`]) and writes it *through* into its
+    /// accumulator input (`inputs[1]` — absent for the first slice of a
+    /// chain), whose buffer the output shares. The output is the full
+    /// join tensor, partially filled; chaining `k` of these replaces the
+    /// `k` final [`OpKind::Partial`] slices *and* the
+    /// [`OpKind::ConcatSlices`] join, so the slabs are never materialized
+    /// next to the join copy — the 2×output floor at the join collapses
+    /// to 1×output. The schedulers account the sharing via
+    /// [`crate::sched::elided_accumulators`], and the interpreter reuses
+    /// the accumulator's arena handle.
+    PartialInto { inner: Box<OpKind>, axis: SplitAxis, pad: isize, offset: usize, len: usize },
 }
 
 impl OpKind {
@@ -224,8 +238,26 @@ impl OpKind {
             OpKind::Synthetic { .. } => "Synthetic",
             OpKind::Partial { .. } => "Partial",
             OpKind::ConcatSlices { .. } => "ConcatSlices",
+            OpKind::PartialInto { .. } => "PartialInto",
         }
     }
+}
+
+/// Dimension index `shape` bands along for a split `axis`: the NHWC
+/// dimension for 4-D activations, the trailing (feature) dimension for
+/// the 2-D `[1, n]` tensors of a split `Dense` (which always bands along
+/// `Channels`). The single place this convention lives.
+pub fn axis_dim_of(shape: &[usize], axis: SplitAxis) -> usize {
+    if shape.len() == 4 {
+        axis.dim()
+    } else {
+        shape.len().saturating_sub(1)
+    }
+}
+
+/// Extent of `shape` along a split `axis` (see [`axis_dim_of`]).
+pub fn axis_extent(shape: &[usize], axis: SplitAxis) -> usize {
+    shape.get(axis_dim_of(shape, axis)).copied().unwrap_or(1)
 }
 
 /// A tensor: shape, dtype, and its role in the dataflow.
@@ -300,27 +332,49 @@ impl Op {
             OpKind::Synthetic { macs } => *macs,
             // A partial op costs what its band costs; halo overlap between
             // slices shows up naturally as the sum over slice ops
-            // exceeding the unsplit op's MACs (recompute overhead).
-            OpKind::Partial { inner, .. } => match inner.as_ref() {
-                OpKind::Conv2D { kernel: (kh, kw), .. } => {
-                    let cin =
-                        g.tensors[self.inputs[0]].shape.last().copied().unwrap_or(1) as u64;
-                    out_elems * (*kh as u64) * (*kw as u64) * cin
-                }
-                OpKind::DepthwiseConv2D { kernel: (kh, kw), .. } => {
-                    out_elems * (*kh as u64) * (*kw as u64)
-                }
-                OpKind::Dense { .. } => {
-                    let cin = g.tensors[self.inputs[0]].elems() as u64;
-                    out_elems * cin
-                }
-                OpKind::MaxPool2D { kernel: (kh, kw), .. }
-                | OpKind::AvgPool2D { kernel: (kh, kw), .. } => {
-                    out_elems * (*kh as u64) * (*kw as u64)
-                }
-                OpKind::BatchNorm { .. } => 2 * out_elems,
-                _ => out_elems,
-            },
+            // exceeding the unsplit op's MACs (recompute overhead). For a
+            // `Partial` the output tensor *is* the band; a `PartialInto`
+            // output is the full join tensor, so its band is scaled out.
+            OpKind::Partial { inner, .. } => self.partial_macs(g, inner, out_elems),
+            OpKind::PartialInto { inner, .. } => {
+                self.partial_macs(g, inner, self.band_elems(g) as u64)
+            }
+        }
+    }
+
+    /// MACs of evaluating `band_out_elems` output elements of `inner`.
+    fn partial_macs(&self, g: &Graph, inner: &OpKind, band_out_elems: u64) -> u64 {
+        match inner {
+            OpKind::Conv2D { kernel: (kh, kw), .. } => {
+                let cin = g.tensors[self.inputs[0]].shape.last().copied().unwrap_or(1) as u64;
+                band_out_elems * (*kh as u64) * (*kw as u64) * cin
+            }
+            OpKind::DepthwiseConv2D { kernel: (kh, kw), .. } => {
+                band_out_elems * (*kh as u64) * (*kw as u64)
+            }
+            OpKind::Dense { .. } => {
+                let cin = g.tensors[self.inputs[0]].elems() as u64;
+                band_out_elems * cin
+            }
+            OpKind::MaxPool2D { kernel: (kh, kw), .. }
+            | OpKind::AvgPool2D { kernel: (kh, kw), .. } => {
+                band_out_elems * (*kh as u64) * (*kw as u64)
+            }
+            OpKind::BatchNorm { .. } => 2 * band_out_elems,
+            _ => band_out_elems,
+        }
+    }
+
+    /// Elements of the output band this operator writes: the band
+    /// `[offset, offset + len)` for a [`OpKind::PartialInto`] (its output
+    /// tensor is the full join tensor), the whole output otherwise.
+    pub fn band_elems(&self, g: &Graph) -> usize {
+        let out = &g.tensors[self.output];
+        match &self.kind {
+            OpKind::PartialInto { axis, len, .. } => {
+                out.elems() / axis_extent(&out.shape, *axis).max(1) * len
+            }
+            _ => out.elems(),
         }
     }
 
@@ -333,8 +387,14 @@ impl Op {
     /// output's last dim; the full column count is the weight tensor's
     /// last dim (HWIO/HWC/`[in,out]`/`[C]` alike).
     pub fn weight_bytes(&self, g: &Graph) -> u64 {
-        if let OpKind::Partial { axis: SplitAxis::Channels, .. } = &self.kind {
-            let band = g.tensors[self.output].shape.last().copied().unwrap_or(1);
+        let chan_band = match &self.kind {
+            OpKind::Partial { axis: SplitAxis::Channels, .. } => {
+                Some(g.tensors[self.output].shape.last().copied().unwrap_or(1))
+            }
+            OpKind::PartialInto { axis: SplitAxis::Channels, len, .. } => Some(*len),
+            _ => None,
+        };
+        if let Some(band) = chan_band {
             self.weights
                 .iter()
                 .map(|&t| {
@@ -349,8 +409,16 @@ impl Op {
     }
 
     /// Bytes read + written by this operator (activation + weight
-    /// traffic).
+    /// traffic). A join-elided slice ([`OpKind::PartialInto`]) reads its
+    /// input slab and writes only its band through the shared accumulator
+    /// buffer — the accumulator input is carried, not copied, so it does
+    /// not count as traffic (that is the join copy the elision removes).
     pub fn bytes_touched(&self, g: &Graph) -> u64 {
+        if let OpKind::PartialInto { .. } = &self.kind {
+            let read = g.tensors[self.inputs[0]].bytes();
+            let written = self.band_elems(g) * g.tensors[self.output].dtype.size();
+            return (read + written) as u64 + self.weight_bytes(g);
+        }
         let read: usize = self.inputs.iter().map(|&t| g.tensors[t].bytes()).sum();
         (read + g.tensors[self.output].bytes()) as u64 + self.weight_bytes(g)
     }

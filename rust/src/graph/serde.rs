@@ -111,6 +111,15 @@ fn kind_to_json(kind: &OpKind) -> (String, Json) {
             attrs.insert("pad".into(), Json::Num(*pad as f64));
             attrs.insert("offset".into(), Json::Num(*offset as f64));
         }
+        OpKind::PartialInto { inner, axis, pad, offset, len } => {
+            let (inner_kind, inner_attrs) = kind_to_json(inner);
+            attrs.insert("inner_kind".into(), Json::Str(inner_kind));
+            attrs.insert("inner_attrs".into(), inner_attrs);
+            attrs.insert("axis".into(), Json::Str(axis.name().into()));
+            attrs.insert("pad".into(), Json::Num(*pad as f64));
+            attrs.insert("offset".into(), Json::Num(*offset as f64));
+            attrs.insert("len".into(), Json::Num(*len as f64));
+        }
         OpKind::ConcatSlices { axis } => {
             attrs.insert("axis".into(), Json::Str(axis.name().into()));
         }
@@ -173,13 +182,13 @@ fn kind_from_json(name: &str, attrs: &Json) -> Result<OpKind, String> {
             let macs = attrs.get("macs").as_f64().unwrap_or(0.0) as u64;
             Ok(OpKind::Synthetic { macs })
         }
-        "Partial" => {
+        "Partial" | "PartialInto" => {
             let inner_kind = attrs
                 .get("inner_kind")
                 .as_str()
-                .ok_or_else(|| "Partial missing inner_kind".to_string())?;
-            if inner_kind == "Partial" {
-                return Err("Partial ops do not nest".into());
+                .ok_or_else(|| format!("{name} missing inner_kind"))?;
+            if inner_kind == "Partial" || inner_kind == "PartialInto" {
+                return Err(format!("{name} ops do not nest"));
             }
             let inner = kind_from_json(inner_kind, attrs.get("inner_attrs"))?;
             let axis = axis_from(attrs, SplitAxis::Rows)?;
@@ -191,6 +200,13 @@ fn kind_from_json(name: &str, attrs: &Json) -> Result<OpKind, String> {
                 .or_else(|| attrs.get("pad_top").as_f64())
                 .unwrap_or(0.0) as isize;
             let offset = attrs.get("offset").as_f64().unwrap_or(0.0) as usize;
+            if name == "PartialInto" {
+                let len = attrs
+                    .get("len")
+                    .as_usize()
+                    .ok_or_else(|| "PartialInto missing len".to_string())?;
+                return Ok(OpKind::PartialInto { inner: Box::new(inner), axis, pad, offset, len });
+            }
             Ok(OpKind::Partial { inner: Box::new(inner), axis, pad, offset })
         }
         "ConcatSlices" => Ok(OpKind::ConcatSlices { axis: axis_from(attrs, SplitAxis::Rows)? }),
@@ -384,6 +400,100 @@ mod tests {
         let n = g.n_ops();
         let mf = ModelFile::new(g);
         assert_eq!(mf.effective_order(), (0..n).collect::<Vec<_>>());
+    }
+
+    /// Regression (PR-4 satellite): model files written by the PR-1
+    /// row-only splitter — `ConcatRows` joins and `Partial` ops carrying
+    /// `pad_top` with no `axis` attribute — must still load, and
+    /// re-serialize to the axis-generic names without loss.
+    #[test]
+    fn legacy_row_split_json_upgrades_without_loss() {
+        let mut b = GraphBuilder::new("legacy");
+        let x = b.input("x", &[1, 8, 8, 2], DType::F32);
+        let c1 = b.conv2d("c1", x, 4, (3, 3), (1, 1), Padding::Same, Act::Relu6);
+        let r = b.relu("r", c1);
+        let gap = b.global_avgpool("gap", r);
+        b.output(gap);
+        let g = b.finish().unwrap();
+        let seg = crate::split::SegmentSplit {
+            ops: vec![0, 1],
+            factor: 2,
+            axis: SplitAxis::Rows,
+            elide: false,
+        };
+        let res = crate::split::apply_segment(&g, &seg).unwrap();
+        let modern = ModelFile::new(res.graph.clone()).to_json();
+
+        // Downgrade the document to the legacy field/kind names.
+        let mut json = graph_to_json(&res.graph, None);
+        let mut downgraded = 0usize;
+        if let Json::Obj(ref mut doc) = json {
+            if let Some(Json::Arr(ops)) = doc.get_mut("ops") {
+                for op in ops.iter_mut() {
+                    let Json::Obj(op) = op else { continue };
+                    let kind = op.get("kind").and_then(|k| k.as_str().map(str::to_string));
+                    match kind.as_deref() {
+                        Some("ConcatSlices") => {
+                            op.insert("kind".into(), Json::Str("ConcatRows".into()));
+                            op.insert("attrs".into(), Json::Obj(Default::default()));
+                            downgraded += 1;
+                        }
+                        Some("Partial") => {
+                            let Some(Json::Obj(attrs)) = op.get_mut("attrs") else {
+                                panic!("Partial without attrs")
+                            };
+                            let pad = attrs.remove("pad").expect("pad attr");
+                            attrs.insert("pad_top".into(), pad);
+                            attrs.remove("axis");
+                            downgraded += 1;
+                        }
+                        _ => {}
+                    }
+                }
+            }
+        }
+        assert_eq!(downgraded, 2 * 2 + 1, "2 slices x 2 ops + 1 join");
+
+        // Legacy loads, upgrades to the axis-generic kinds…
+        let back = ModelFile::from_json(&json.to_pretty()).unwrap();
+        for (a, b) in res.graph.ops.iter().zip(&back.graph.ops) {
+            assert_eq!(a.kind, b.kind, "op {}", a.name);
+        }
+        // …and re-serializes byte-identically to the modern document.
+        assert_eq!(back.to_json(), modern);
+    }
+
+    /// PartialInto (join-elided slices) round-trips with its band extent.
+    #[test]
+    fn elided_split_json_roundtrips() {
+        let mut b = GraphBuilder::new("elided");
+        let x = b.input("x", &[1, 8, 8, 2], DType::I8);
+        let c1 = b.conv2d("c1", x, 4, (3, 3), (1, 1), Padding::Same, Act::Relu6);
+        let r = b.relu6("r", c1);
+        let gap = b.global_avgpool("gap", r);
+        b.output(gap);
+        let g = b.finish().unwrap();
+        let seg = crate::split::SegmentSplit {
+            ops: vec![0, 1],
+            factor: 2,
+            axis: SplitAxis::Rows,
+            elide: true,
+        };
+        let res = crate::split::apply_segment(&g, &seg).unwrap();
+        let back = ModelFile::from_json(&ModelFile::new(res.graph.clone()).to_json()).unwrap();
+        assert_eq!(back.graph.n_ops(), res.graph.n_ops());
+        let mut saw_elided = 0;
+        for (a, b) in res.graph.ops.iter().zip(&back.graph.ops) {
+            assert_eq!(a.kind, b.kind, "op {}", a.name);
+            if matches!(a.kind, OpKind::PartialInto { .. }) {
+                saw_elided += 1;
+            }
+        }
+        assert_eq!(saw_elided, 2, "one write-through slice per band");
+        assert_eq!(
+            crate::sched::peak_of(&back.graph, &back.graph.default_order()),
+            crate::sched::peak_of(&res.graph, &res.graph.default_order())
+        );
     }
 
     #[test]

@@ -217,6 +217,16 @@ fn partial_pads(
     }
 }
 
+/// Shape of the band a [`OpKind::PartialInto`] slice computes: the full
+/// join shape with the split-axis extent replaced by `len` (dimension
+/// selection shared with the IR via [`crate::graph::axis_dim_of`]).
+fn band_shape_of(full: &[usize], axis: SplitAxis, len: usize) -> Vec<usize> {
+    let mut s = full.to_vec();
+    let d = crate::graph::axis_dim_of(&s, axis);
+    s[d] = len;
+    s
+}
+
 fn fan_in_of(t: &Tensor) -> usize {
     match t.shape.len() {
         4 => t.shape[0] * t.shape[1] * t.shape[2], // conv HWIO
@@ -345,6 +355,11 @@ impl<'g> Interpreter<'g> {
         for &t in &g.outputs {
             is_output[t] = true;
         }
+        // Streaming join elision: a `PartialInto` writes its band through
+        // its accumulator's buffer, so the handle is transferred instead
+        // of allocating a second full-size buffer — this is what keeps
+        // the measured high-water at the analytic 1×output floor.
+        let acc_of = crate::sched::elided_accumulators(g);
         let mut captured: Vec<Option<TensorData>> = vec![None; n];
 
         // Stage graph inputs into the arena.
@@ -382,7 +397,12 @@ impl<'g> Interpreter<'g> {
                     Ok(TensorData::from_bytes(g.tensors[t].dtype, bytes))
                 })
                 .collect::<Result<_, AllocError>>()?;
-            let out_h = arena.alloc(out_t.bytes())?;
+            let out_h = match acc_of[opid] {
+                // The accumulator dies at this step by construction (sole
+                // consumer); its buffer becomes the output's.
+                Some(acc) => handles[acc].take().expect("accumulator not resident"),
+                None => arena.alloc(out_t.bytes())?,
+            };
             handles[op.output] = Some(out_h);
 
             let out_data = self.dispatch(op, &in_data)?;
@@ -393,11 +413,14 @@ impl<'g> Interpreter<'g> {
             }
             macs += op.macs(g);
 
-            // Reclaim dead inputs.
+            // Reclaim dead inputs (an accumulator's handle was already
+            // transferred to the output above).
             for &t in &op.inputs {
                 remaining[t] -= 1;
                 if remaining[t] == 0 && !is_output[t] {
-                    arena.free(handles[t].take().unwrap())?;
+                    if let Some(h) = handles[t].take() {
+                        arena.free(h)?;
+                    }
                 }
             }
             if remaining[op.output] == 0 && !is_output[op.output] {
@@ -425,6 +448,237 @@ impl<'g> Interpreter<'g> {
             .get(&t)
             .copied()
             .unwrap_or(QuantParams { scale: 1.0, zero_point: 0 })
+    }
+
+    /// Evaluate one output band of a sliced operator (f32): the shared
+    /// kernel dispatch behind both [`OpKind::Partial`] (whose output
+    /// tensor *is* the band) and [`OpKind::PartialInto`] (which computes
+    /// the band into a scratch slab before writing it through). Returns
+    /// the fused activation for the caller to apply.
+    #[allow(clippy::too_many_arguments)]
+    fn partial_band_f32(
+        &self,
+        op: &crate::graph::Op,
+        inner: &OpKind,
+        axis: SplitAxis,
+        pad: isize,
+        offset: usize,
+        x: &[f32],
+        band_shape: &[usize],
+        out: &mut [f32],
+    ) -> Result<Act, ExecError> {
+        let g = self.g;
+        let in_shape = &g.tensors[op.inputs[0]].shape;
+        match inner {
+            OpKind::Conv2D { kernel, stride, padding, act } => {
+                let ish = Hwc::from_shape(in_shape);
+                let osh = Hwc::from_shape(band_shape);
+                let (pad_y, pad_x) = partial_pads(axis, pad, ish, osh, *kernel, *stride, *padding);
+                let (c0, c_total) = match axis {
+                    SplitAxis::Channels => (offset, g.tensors[op.weights[0]].shape[3]),
+                    _ => (0, osh.c),
+                };
+                ops::conv2d_with_pads(
+                    x,
+                    ish,
+                    self.weights.f32_of(op.weights[0]),
+                    self.weights.f32_of(op.weights[1]),
+                    out,
+                    osh,
+                    *kernel,
+                    *stride,
+                    pad_y,
+                    pad_x,
+                    c0,
+                    c_total,
+                );
+                Ok(*act)
+            }
+            OpKind::DepthwiseConv2D { kernel, stride, padding, act } => {
+                let ish = Hwc::from_shape(in_shape);
+                let osh = Hwc::from_shape(band_shape);
+                let (pad_y, pad_x) = partial_pads(axis, pad, ish, osh, *kernel, *stride, *padding);
+                let (c0, c_total) = match axis {
+                    SplitAxis::Channels => (offset, g.tensors[op.weights[0]].shape[2]),
+                    _ => (0, ish.c),
+                };
+                ops::dwconv2d_with_pads(
+                    x,
+                    ish,
+                    self.weights.f32_of(op.weights[0]),
+                    self.weights.f32_of(op.weights[1]),
+                    out,
+                    osh,
+                    *kernel,
+                    *stride,
+                    pad_y,
+                    pad_x,
+                    c0,
+                    c_total,
+                );
+                Ok(*act)
+            }
+            OpKind::MaxPool2D { kernel, stride, padding } => {
+                let ish = Hwc::from_shape(in_shape);
+                let osh = Hwc::from_shape(band_shape);
+                let (pad_y, pad_x) = partial_pads(axis, pad, ish, osh, *kernel, *stride, *padding);
+                ops::maxpool2d_with_pads(x, ish, out, osh, *kernel, *stride, pad_y, pad_x);
+                Ok(Act::Linear)
+            }
+            OpKind::AvgPool2D { kernel, stride, padding } => {
+                let ish = Hwc::from_shape(in_shape);
+                let osh = Hwc::from_shape(band_shape);
+                let (pad_y, pad_x) = partial_pads(axis, pad, ish, osh, *kernel, *stride, *padding);
+                ops::avgpool2d_with_pads(x, ish, out, osh, *kernel, *stride, pad_y, pad_x);
+                Ok(Act::Linear)
+            }
+            OpKind::Dense { act } => {
+                let n_cols = g.tensors[op.weights[0]].shape[1];
+                ops::dense_cols(
+                    x,
+                    self.weights.f32_of(op.weights[0]),
+                    self.weights.f32_of(op.weights[1]),
+                    out,
+                    offset,
+                    n_cols,
+                );
+                Ok(*act)
+            }
+            // Pointwise slices: the band maps 1:1 onto the slab; only
+            // BatchNorm's per-channel parameters need the channel-band
+            // offset.
+            OpKind::Relu => {
+                ops::relu(x, out);
+                Ok(Act::Linear)
+            }
+            OpKind::Relu6 => {
+                ops::relu6(x, out);
+                Ok(Act::Linear)
+            }
+            OpKind::BatchNorm { eps } => {
+                let gamma = self.weights.f32_of(op.weights[0]);
+                let beta = self.weights.f32_of(op.weights[1]);
+                let mean = self.weights.f32_of(op.weights[2]);
+                let var = self.weights.f32_of(op.weights[3]);
+                let c = band_shape.last().copied().unwrap_or(1);
+                let c0 = if axis == SplitAxis::Channels { offset } else { 0 };
+                for (i, v) in x.iter().enumerate() {
+                    let ch = c0 + i % c;
+                    out[i] = gamma[ch] * (v - mean[ch]) / (var[ch] + eps).sqrt() + beta[ch];
+                }
+                Ok(Act::Linear)
+            }
+            other => Err(ExecError::Unsupported(format!("partial {} (f32)", other.name()))),
+        }
+    }
+
+    /// [`Self::partial_band_f32`] for the int8 path. The band is computed
+    /// straight into the output quantization domain (`out_q`), so the
+    /// write-through of a join-elided slice is a pure placement.
+    #[allow(clippy::too_many_arguments)]
+    fn partial_band_i8(
+        &self,
+        op: &crate::graph::Op,
+        inner: &OpKind,
+        axis: SplitAxis,
+        pad: isize,
+        offset: usize,
+        x: &[i8],
+        band_shape: &[usize],
+        out_q: QuantParams,
+        out: &mut [i8],
+    ) -> Result<Act, ExecError> {
+        let g = self.g;
+        let in_shape = &g.tensors[op.inputs[0]].shape;
+        match inner {
+            OpKind::Conv2D { kernel, stride, padding, act } => {
+                let ish = Hwc::from_shape(in_shape);
+                let osh = Hwc::from_shape(band_shape);
+                let (pad_y, pad_x) = partial_pads(axis, pad, ish, osh, *kernel, *stride, *padding);
+                let (c0, c_total) = match axis {
+                    SplitAxis::Channels => (offset, g.tensors[op.weights[0]].shape[3]),
+                    _ => (0, osh.c),
+                };
+                quant::conv2d_i8_with_pads(
+                    x,
+                    ish,
+                    self.qp(op.inputs[0]),
+                    self.weights.i8_of(op.weights[0]),
+                    self.qp(op.weights[0]).scale,
+                    self.weights.i32_of(op.weights[1]),
+                    out,
+                    osh,
+                    out_q,
+                    *kernel,
+                    *stride,
+                    pad_y,
+                    pad_x,
+                    c0,
+                    c_total,
+                );
+                Ok(*act)
+            }
+            OpKind::DepthwiseConv2D { kernel, stride, padding, act } => {
+                let ish = Hwc::from_shape(in_shape);
+                let osh = Hwc::from_shape(band_shape);
+                let (pad_y, pad_x) = partial_pads(axis, pad, ish, osh, *kernel, *stride, *padding);
+                let (c0, c_total) = match axis {
+                    SplitAxis::Channels => (offset, g.tensors[op.weights[0]].shape[2]),
+                    _ => (0, ish.c),
+                };
+                quant::dwconv2d_i8_with_pads(
+                    x,
+                    ish,
+                    self.qp(op.inputs[0]),
+                    self.weights.i8_of(op.weights[0]),
+                    self.qp(op.weights[0]).scale,
+                    self.weights.i32_of(op.weights[1]),
+                    out,
+                    osh,
+                    out_q,
+                    *kernel,
+                    *stride,
+                    pad_y,
+                    pad_x,
+                    c0,
+                    c_total,
+                );
+                Ok(*act)
+            }
+            OpKind::MaxPool2D { kernel, stride, padding } => {
+                let ish = Hwc::from_shape(in_shape);
+                let osh = Hwc::from_shape(band_shape);
+                let (pad_y, pad_x) = partial_pads(axis, pad, ish, osh, *kernel, *stride, *padding);
+                quant::maxpool2d_i8_with_pads(x, ish, out, osh, *kernel, *stride, pad_y, pad_x);
+                Ok(Act::Linear)
+            }
+            OpKind::Dense { act } => {
+                let n_cols = g.tensors[op.weights[0]].shape[1];
+                quant::dense_cols_i8(
+                    x,
+                    self.qp(op.inputs[0]),
+                    self.weights.i8_of(op.weights[0]),
+                    self.qp(op.weights[0]).scale,
+                    self.weights.i32_of(op.weights[1]),
+                    out,
+                    out_q,
+                    offset,
+                    n_cols,
+                );
+                Ok(*act)
+            }
+            // Pointwise slices map 1:1 onto their slab (the slab shares
+            // its source tensor's qparams).
+            OpKind::Relu => {
+                quant::relu_i8(x, self.qp(op.inputs[0]), out);
+                Ok(Act::Linear)
+            }
+            OpKind::Relu6 => {
+                quant::relu6_i8(x, self.qp(op.inputs[0]), out);
+                Ok(Act::Linear)
+            }
+            other => Err(ExecError::Unsupported(format!("partial {} (i8)", other.name()))),
+        }
     }
 
     fn dispatch(
@@ -535,118 +789,59 @@ impl<'g> Interpreter<'g> {
                     OpKind::Synthetic { .. } => {
                         return Err(ExecError::Unsupported("synthetic op with f32 dtype".into()))
                     }
-                    OpKind::Partial { inner, axis, pad, offset } => match inner.as_ref() {
-                        OpKind::Conv2D { kernel, stride, padding, act } => {
-                            fused_act = *act;
-                            let ish = Hwc::from_shape(&in0_t.unwrap().shape);
-                            let osh = Hwc::from_shape(&out_t.shape);
-                            let (pad_y, pad_x) =
-                                partial_pads(*axis, *pad, ish, osh, *kernel, *stride, *padding);
-                            let (c0, c_total) = match axis {
-                                SplitAxis::Channels => {
-                                    (*offset, g.tensors[op.weights[0]].shape[3])
+                    OpKind::Partial { inner, axis, pad, offset } => {
+                        fused_act = self.partial_band_f32(
+                            op,
+                            inner,
+                            *axis,
+                            *pad,
+                            *offset,
+                            xs[0],
+                            &out_t.shape,
+                            &mut out,
+                        )?;
+                    }
+                    OpKind::PartialInto { inner, axis, pad, offset, len } => {
+                        // Streaming join elision: carry the accumulator's
+                        // content forward (the same buffer at run time —
+                        // see `run_inner`), compute the band into a
+                        // scratch slab, then write it through at `offset`.
+                        // The full-buffer carry is a host-side
+                        // simplification of this reference interpreter
+                        // (dispatch is pure over copied inputs); a real
+                        // MCU kernel writes only the band in place, which
+                        // is what `Op::bytes_touched` and the cost model
+                        // charge.
+                        if let Some(acc) = xs.get(1) {
+                            out.copy_from_slice(acc);
+                        }
+                        let band_shape = band_shape_of(&out_t.shape, *axis, *len);
+                        let mut band = vec![0.0f32; band_shape.iter().product()];
+                        let act = self.partial_band_f32(
+                            op,
+                            inner,
+                            *axis,
+                            *pad,
+                            *offset,
+                            xs[0],
+                            &band_shape,
+                            &mut band,
+                        )?;
+                        match act {
+                            Act::Linear => {}
+                            Act::Relu => {
+                                for v in band.iter_mut() {
+                                    *v = v.max(0.0);
                                 }
-                                _ => (0, osh.c),
-                            };
-                            ops::conv2d_with_pads(
-                                xs[0],
-                                ish,
-                                self.weights.f32_of(op.weights[0]),
-                                self.weights.f32_of(op.weights[1]),
-                                &mut out,
-                                osh,
-                                *kernel,
-                                *stride,
-                                pad_y,
-                                pad_x,
-                                c0,
-                                c_total,
-                            );
-                        }
-                        OpKind::DepthwiseConv2D { kernel, stride, padding, act } => {
-                            fused_act = *act;
-                            let ish = Hwc::from_shape(&in0_t.unwrap().shape);
-                            let osh = Hwc::from_shape(&out_t.shape);
-                            let (pad_y, pad_x) =
-                                partial_pads(*axis, *pad, ish, osh, *kernel, *stride, *padding);
-                            let (c0, c_total) = match axis {
-                                SplitAxis::Channels => {
-                                    (*offset, g.tensors[op.weights[0]].shape[2])
+                            }
+                            Act::Relu6 => {
+                                for v in band.iter_mut() {
+                                    *v = v.clamp(0.0, 6.0);
                                 }
-                                _ => (0, ish.c),
-                            };
-                            ops::dwconv2d_with_pads(
-                                xs[0],
-                                ish,
-                                self.weights.f32_of(op.weights[0]),
-                                self.weights.f32_of(op.weights[1]),
-                                &mut out,
-                                osh,
-                                *kernel,
-                                *stride,
-                                pad_y,
-                                pad_x,
-                                c0,
-                                c_total,
-                            );
-                        }
-                        OpKind::MaxPool2D { kernel, stride, padding } => {
-                            let ish = Hwc::from_shape(&in0_t.unwrap().shape);
-                            let osh = Hwc::from_shape(&out_t.shape);
-                            let (pad_y, pad_x) =
-                                partial_pads(*axis, *pad, ish, osh, *kernel, *stride, *padding);
-                            ops::maxpool2d_with_pads(
-                                xs[0], ish, &mut out, osh, *kernel, *stride, pad_y, pad_x,
-                            );
-                        }
-                        OpKind::AvgPool2D { kernel, stride, padding } => {
-                            let ish = Hwc::from_shape(&in0_t.unwrap().shape);
-                            let osh = Hwc::from_shape(&out_t.shape);
-                            let (pad_y, pad_x) =
-                                partial_pads(*axis, *pad, ish, osh, *kernel, *stride, *padding);
-                            ops::avgpool2d_with_pads(
-                                xs[0], ish, &mut out, osh, *kernel, *stride, pad_y, pad_x,
-                            );
-                        }
-                        OpKind::Dense { act } => {
-                            fused_act = *act;
-                            let n_cols = g.tensors[op.weights[0]].shape[1];
-                            ops::dense_cols(
-                                xs[0],
-                                self.weights.f32_of(op.weights[0]),
-                                self.weights.f32_of(op.weights[1]),
-                                &mut out,
-                                *offset,
-                                n_cols,
-                            );
-                        }
-                        // Pointwise slices: the band maps 1:1 onto the slab;
-                        // only BatchNorm's per-channel parameters need the
-                        // channel-band offset.
-                        OpKind::Relu => ops::relu(xs[0], &mut out),
-                        OpKind::Relu6 => ops::relu6(xs[0], &mut out),
-                        OpKind::BatchNorm { eps } => {
-                            let gamma = self.weights.f32_of(op.weights[0]);
-                            let beta = self.weights.f32_of(op.weights[1]);
-                            let mean = self.weights.f32_of(op.weights[2]);
-                            let var = self.weights.f32_of(op.weights[3]);
-                            let c = out_t.shape.last().copied().unwrap_or(1);
-                            let c0 =
-                                if *axis == SplitAxis::Channels { *offset } else { 0 };
-                            for (i, v) in xs[0].iter().enumerate() {
-                                let ch = c0 + i % c;
-                                out[i] = gamma[ch] * (v - mean[ch])
-                                    / (var[ch] + eps).sqrt()
-                                    + beta[ch];
                             }
                         }
-                        other => {
-                            return Err(ExecError::Unsupported(format!(
-                                "partial {} (f32)",
-                                other.name()
-                            )))
-                        }
-                    },
+                        ops::write_band(&band, &band_shape, &mut out, &out_t.shape, *axis, *offset);
+                    }
                     OpKind::ConcatSlices { axis } => {
                         let parts: Vec<(&[f32], &[usize])> = op
                             .inputs
@@ -783,104 +978,58 @@ impl<'g> Interpreter<'g> {
                     OpKind::Synthetic { .. } => {
                         return Err(ExecError::Unsupported("synthetic op with i8 dtype".into()))
                     }
-                    OpKind::Partial { inner, axis, pad, offset } => match inner.as_ref() {
-                        OpKind::Conv2D { kernel, stride, padding, act } => {
-                            fused_act = *act;
-                            let ish = Hwc::from_shape(&in0_t.unwrap().shape);
-                            let osh = Hwc::from_shape(&out_t.shape);
-                            let (pad_y, pad_x) =
-                                partial_pads(*axis, *pad, ish, osh, *kernel, *stride, *padding);
-                            let (c0, c_total) = match axis {
-                                SplitAxis::Channels => {
-                                    (*offset, g.tensors[op.weights[0]].shape[3])
+                    OpKind::Partial { inner, axis, pad, offset } => {
+                        fused_act = self.partial_band_i8(
+                            op,
+                            inner,
+                            *axis,
+                            *pad,
+                            *offset,
+                            xs[0],
+                            &out_t.shape,
+                            out_q,
+                            &mut out,
+                        )?;
+                    }
+                    OpKind::PartialInto { inner, axis, pad, offset, len } => {
+                        // Streaming join elision (see the f32 arm). The
+                        // accumulator shares the output's qparams (both are
+                        // bands of the same join tensor), so carrying it
+                        // forward is a pure copy — bit-exact.
+                        if let Some(acc) = xs.get(1) {
+                            out.copy_from_slice(acc);
+                        }
+                        let band_shape = band_shape_of(&out_t.shape, *axis, *len);
+                        let mut band = vec![0i8; band_shape.iter().product()];
+                        let act = self.partial_band_i8(
+                            op,
+                            inner,
+                            *axis,
+                            *pad,
+                            *offset,
+                            xs[0],
+                            &band_shape,
+                            out_q,
+                            &mut band,
+                        )?;
+                        match act {
+                            Act::Linear => {}
+                            Act::Relu => {
+                                let lo = out_q.zero_point.clamp(-128, 127) as i8;
+                                for v in band.iter_mut() {
+                                    *v = (*v).max(lo);
                                 }
-                                _ => (0, osh.c),
-                            };
-                            quant::conv2d_i8_with_pads(
-                                xs[0],
-                                ish,
-                                self.qp(op.inputs[0]),
-                                self.weights.i8_of(op.weights[0]),
-                                self.qp(op.weights[0]).scale,
-                                self.weights.i32_of(op.weights[1]),
-                                &mut out,
-                                osh,
-                                out_q,
-                                *kernel,
-                                *stride,
-                                pad_y,
-                                pad_x,
-                                c0,
-                                c_total,
-                            );
-                        }
-                        OpKind::DepthwiseConv2D { kernel, stride, padding, act } => {
-                            fused_act = *act;
-                            let ish = Hwc::from_shape(&in0_t.unwrap().shape);
-                            let osh = Hwc::from_shape(&out_t.shape);
-                            let (pad_y, pad_x) =
-                                partial_pads(*axis, *pad, ish, osh, *kernel, *stride, *padding);
-                            let (c0, c_total) = match axis {
-                                SplitAxis::Channels => {
-                                    (*offset, g.tensors[op.weights[0]].shape[2])
+                            }
+                            Act::Relu6 => {
+                                let lo = out_q.zero_point.clamp(-128, 127) as i8;
+                                let hi = out_q.quantize_one(6.0).max(lo);
+                                for v in band.iter_mut() {
+                                    *v = (*v).clamp(lo, hi);
                                 }
-                                _ => (0, ish.c),
-                            };
-                            quant::dwconv2d_i8_with_pads(
-                                xs[0],
-                                ish,
-                                self.qp(op.inputs[0]),
-                                self.weights.i8_of(op.weights[0]),
-                                self.qp(op.weights[0]).scale,
-                                self.weights.i32_of(op.weights[1]),
-                                &mut out,
-                                osh,
-                                out_q,
-                                *kernel,
-                                *stride,
-                                pad_y,
-                                pad_x,
-                                c0,
-                                c_total,
-                            );
+                            }
                         }
-                        OpKind::MaxPool2D { kernel, stride, padding } => {
-                            let ish = Hwc::from_shape(&in0_t.unwrap().shape);
-                            let osh = Hwc::from_shape(&out_t.shape);
-                            let (pad_y, pad_x) =
-                                partial_pads(*axis, *pad, ish, osh, *kernel, *stride, *padding);
-                            quant::maxpool2d_i8_with_pads(
-                                xs[0], ish, &mut out, osh, *kernel, *stride, pad_y, pad_x,
-                            );
-                        }
-                        OpKind::Dense { act } => {
-                            fused_act = *act;
-                            let n_cols = g.tensors[op.weights[0]].shape[1];
-                            quant::dense_cols_i8(
-                                xs[0],
-                                self.qp(op.inputs[0]),
-                                self.weights.i8_of(op.weights[0]),
-                                self.qp(op.weights[0]).scale,
-                                self.weights.i32_of(op.weights[1]),
-                                &mut out,
-                                out_q,
-                                *offset,
-                                n_cols,
-                            );
-                        }
-                        // Pointwise slices map 1:1 onto their slab (the
-                        // slab shares its source tensor's qparams).
-                        OpKind::Relu => quant::relu_i8(xs[0], self.qp(op.inputs[0]), &mut out),
-                        OpKind::Relu6 => {
-                            quant::relu6_i8(xs[0], self.qp(op.inputs[0]), &mut out)
-                        }
-                        other => {
-                            return Err(ExecError::Unsupported(format!(
-                                "partial {} (i8)",
-                                other.name()
-                            )))
-                        }
-                    },
+                        ops::write_band(&band, &band_shape, &mut out, &out_t.shape, *axis, *offset);
+                    }
                     // The split subsystem gives every slab the qparams of
                     // the tensor it is a band of, so the join is a pure
                     // copy — no requantization, bit-exact.

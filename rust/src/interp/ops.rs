@@ -359,6 +359,55 @@ pub fn concat_slices<T: Copy>(
     }
 }
 
+/// Write one band into the full tensor at `offset` along `axis` — the
+/// write-through half of a join-elided slice (see
+/// [`crate::graph::OpKind::PartialInto`]). Placement mirrors
+/// [`concat_slices`] exactly (a chain of `write_band`s over a partition
+/// reproduces the concat bit-for-bit); like the join it is a pure
+/// placement, element type agnostic, no requantization.
+pub fn write_band<T: Copy>(
+    src: &[T],
+    src_shape: &[usize],
+    dst: &mut [T],
+    dst_shape: &[usize],
+    axis: SplitAxis,
+    offset: usize,
+) {
+    if dst_shape.len() != 4 {
+        // 2-D `[1, n]` bands of a split `Dense`: contiguous at `offset`.
+        dst[offset..offset + src.len()].copy_from_slice(src);
+        return;
+    }
+    let (h, w, c) = (dst_shape[1], dst_shape[2], dst_shape[3]);
+    match axis {
+        SplitAxis::Rows => {
+            // Row bands are contiguous in NHWC storage.
+            let start = offset * w * c;
+            dst[start..start + src.len()].copy_from_slice(src);
+        }
+        SplitAxis::Cols => {
+            let (wj, cj) = (src_shape[2], src_shape[3]);
+            debug_assert_eq!(cj, c);
+            for y in 0..h {
+                let s = y * wj * cj;
+                let d = (y * w + offset) * c;
+                dst[d..d + wj * cj].copy_from_slice(&src[s..s + wj * cj]);
+            }
+        }
+        SplitAxis::Channels => {
+            let (wj, cj) = (src_shape[2], src_shape[3]);
+            debug_assert_eq!(wj, w);
+            for y in 0..h {
+                for x in 0..w {
+                    let s = (y * wj + x) * cj;
+                    let d = (y * w + x) * c + offset;
+                    dst[d..d + cj].copy_from_slice(&src[s..s + cj]);
+                }
+            }
+        }
+    }
+}
+
 /// ReLU.
 pub fn relu(input: &[f32], out: &mut [f32]) {
     for i in 0..input.len() {
@@ -530,6 +579,51 @@ pub fn synthetic_bytes(inputs: &[&[u8]], out: &mut [u8]) {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    /// `write_band` over a partition reproduces `concat_slices`
+    /// bit-for-bit on every axis — the invariant that makes join elision a
+    /// pure placement change.
+    #[test]
+    fn write_band_chain_equals_concat_slices() {
+        let out_shape = [1usize, 4, 6, 3];
+        let n: usize = out_shape.iter().product();
+        for (axis, cuts) in [
+            (SplitAxis::Rows, vec![(0usize, 2usize), (2, 2)]),
+            (SplitAxis::Cols, vec![(0, 2), (2, 3), (5, 1)]),
+            (SplitAxis::Channels, vec![(0, 1), (1, 2)]),
+        ] {
+            let d = axis.dim();
+            let mut parts_data: Vec<Vec<f32>> = Vec::new();
+            let mut parts_shape: Vec<Vec<usize>> = Vec::new();
+            for (i, &(_, len)) in cuts.iter().enumerate() {
+                let mut shape = out_shape.to_vec();
+                shape[d] = len;
+                let elems: usize = shape.iter().product();
+                parts_data.push((0..elems).map(|v| (v * 7 + i * 1000) as f32).collect());
+                parts_shape.push(shape);
+            }
+            let parts: Vec<(&[f32], &[usize])> = parts_data
+                .iter()
+                .zip(&parts_shape)
+                .map(|(d, s)| (d.as_slice(), s.as_slice()))
+                .collect();
+            let mut joined = vec![0.0f32; n];
+            concat_slices(&parts, &mut joined, &out_shape, axis);
+            let mut written = vec![0.0f32; n];
+            for ((data, shape), &(off, _)) in parts_data.iter().zip(&parts_shape).zip(&cuts) {
+                write_band(data, shape, &mut written, &out_shape, axis, off);
+            }
+            assert_eq!(joined, written, "axis {axis:?}");
+        }
+    }
+
+    /// Dense `[1, n]` bands write flat at their feature offset.
+    #[test]
+    fn write_band_dense_is_flat() {
+        let mut out = vec![0i8; 6];
+        write_band(&[1i8, 2], &[1, 2], &mut out, &[1, 6], SplitAxis::Channels, 3);
+        assert_eq!(out, vec![0, 0, 0, 1, 2, 0]);
+    }
 
     #[test]
     fn conv2d_identity_kernel() {

@@ -34,15 +34,18 @@ COMMANDS:
   split     --model M          Partial execution: beam-search operator
             [--dtype i8|f32] [--sram-budget B] [--max-factor K]
             [--rounds N] [--beam-width W] [--axes rows,cols,channels]
-            [--out F]
+            [--no-elide] [--out F]
                                splitting over (segment, factor, axis) —
                                row/column slices are halo-exact, channel
                                slices partition weights with zero
                                recompute — co-optimized with Algorithm-1
-                               reordering; reports the peak-SRAM floor
-                               broken and the per-axis overhead,
-                               optionally writing the split model +
-                               schedule to F
+                               reordering; joins are streamed away when
+                               that lowers the peak (write-through slices,
+                               no ConcatSlices copy; --no-elide reproduces
+                               the materialized-join planner); reports the
+                               peak-SRAM floor broken and the per-axis
+                               overhead, optionally writing the split
+                               model + schedule to F
   export    --model M --json F --weights F [--dtype f32]
                                Export graph JSON + seeded weights for the
                                AOT pipeline (python/compile/aot.py)
@@ -71,7 +74,7 @@ fn parse_args(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
     while i < args.len() {
         let a = &args[i];
         if let Some(name) = a.strip_prefix("--") {
-            let boolean = matches!(name, "check" | "table" | "chart" | "inplace");
+            let boolean = matches!(name, "check" | "table" | "chart" | "inplace" | "no-elide");
             if boolean {
                 flags.insert(name.to_string(), "true".to_string());
             } else if i + 1 < args.len() {
@@ -218,22 +221,11 @@ fn cmd_split(flags: &HashMap<String, String>) -> Result<()> {
     let max_rounds: usize = flags.get("rounds").map(|s| s.parse()).transpose()?.unwrap_or(3);
     let beam_width: usize =
         flags.get("beam-width").map(|s| s.parse()).transpose()?.unwrap_or(2);
+    // Unknown, duplicate and empty tokens are hard errors — a silently
+    // dropped axis would quietly shrink the search space.
     let axes: Vec<SplitAxis> = match flags.get("axes") {
         None => SplitAxis::ALL.to_vec(),
-        Some(spec) => {
-            let mut axes = Vec::new();
-            for part in spec.split(',').filter(|p| !p.is_empty()) {
-                let axis = SplitAxis::from_name(part.trim())
-                    .ok_or_else(|| anyhow!("unknown axis {part:?} (rows|cols|channels)"))?;
-                if !axes.contains(&axis) {
-                    axes.push(axis);
-                }
-            }
-            if axes.is_empty() {
-                bail!("--axes needs at least one of rows|cols|channels");
-            }
-            axes
-        }
+        Some(spec) => mcu_reorder::split::parse_axes(spec).map_err(|e| anyhow!("{e}"))?,
     };
     let opts = mcu_reorder::split::SplitOptions {
         max_factor,
@@ -241,6 +233,7 @@ fn cmd_split(flags: &HashMap<String, String>) -> Result<()> {
         max_rounds,
         beam_width,
         axes,
+        elide: !flags.contains_key("no-elide"),
         ..Default::default()
     };
 
@@ -265,10 +258,11 @@ fn cmd_split(flags: &HashMap<String, String>) -> Result<()> {
     );
     for st in &outcome.steps {
         println!(
-            "  split [{}] ×{} along {}: {} B → {} B",
+            "  split [{}] ×{} along {}{}: {} B → {} B",
             st.segment.join(" → "),
             st.factor,
             st.axis.name(),
+            if st.elided { ", join elided" } else { "" },
             st.peak_before,
             st.peak_after
         );
@@ -290,10 +284,18 @@ fn cmd_split(flags: &HashMap<String, String>) -> Result<()> {
         }
     }
     println!(
-        "weight flash traffic  : ×{:.2} ({} B join copies)",
+        "weight flash traffic  : ×{:.2} ({} B join copies, {} B elided)",
         ov.weight_traffic_ratio(),
-        ov.join_bytes
+        ov.join_bytes,
+        ov.elided_join_bytes
     );
+    if outcome.elided_steps() > 0 {
+        println!(
+            "join elision          : {}/{} segment join(s) streamed (no ConcatSlices copy)",
+            outcome.elided_steps(),
+            outcome.steps.len()
+        );
+    }
     if let Some(b) = budget {
         println!(
             "SRAM budget {} B     : {}",

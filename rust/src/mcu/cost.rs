@@ -151,6 +151,12 @@ pub struct SplitOverhead {
     /// Bytes written by the `ConcatSlices` joins (the price of
     /// re-materializing each split segment's output).
     pub join_bytes: u64,
+    /// Join-copy bytes *removed* by streaming concat elision: the bands
+    /// that `PartialInto` slices write through into the join tensor
+    /// directly, instead of materializing slabs and copying them. They
+    /// appear here for the report, not in `join_bytes` — an elided join
+    /// costs no copy.
+    pub elided_join_bytes: u64,
     /// Extra MACs attributable to each axis's slices (halo recompute),
     /// indexed `[Rows, Cols, Channels]`.
     pub recompute_by_axis: [u64; 3],
@@ -185,12 +191,23 @@ impl SplitOverhead {
         // is that axis's halo recompute.
         let mut per_op: HashMap<(&str, SplitAxis), u64> = HashMap::new();
         let mut join_bytes = 0u64;
+        let mut elided_join_bytes = 0u64;
         for op in &split.ops {
             match &op.kind {
                 OpKind::Partial { axis, .. } => {
                     if let Some((orig, _)) = op.name.split_once("#s") {
                         *per_op.entry((orig, *axis)).or_insert(0) += op.macs(split);
                     }
+                }
+                OpKind::PartialInto { axis, .. } => {
+                    if let Some((orig, _)) = op.name.split_once("#s") {
+                        *per_op.entry((orig, *axis)).or_insert(0) += op.macs(split);
+                    }
+                    // The band this slice writes through is exactly the
+                    // join copy the elision removed; summed over a chain
+                    // it is the full join tensor.
+                    elided_join_bytes +=
+                        (op.band_elems(split) * split.tensors[op.output].dtype.size()) as u64;
                 }
                 OpKind::ConcatSlices { .. } => {
                     join_bytes += split.tensors[op.output].bytes() as u64;
@@ -213,6 +230,7 @@ impl SplitOverhead {
             base_weight_bytes: base.ops.iter().map(|o| o.weight_bytes(base)).sum(),
             split_weight_bytes: split.ops.iter().map(|o| o.weight_bytes(split)).sum(),
             join_bytes,
+            elided_join_bytes,
             recompute_by_axis,
             time_ratio: est_split.seconds / est_base.seconds,
         }
@@ -327,7 +345,7 @@ mod tests {
         let c2 = b.conv2d("c2", c1, 8, (3, 3), (1, 1), Padding::Same, Act::Relu6);
         b.output(c2);
         let g = b.finish().unwrap();
-        let seg = SegmentSplit { ops: vec![0, 1], factor: 4, axis: SplitAxis::Rows };
+        let seg = SegmentSplit { ops: vec![0, 1], factor: 4, axis: SplitAxis::Rows, elide: false };
         let res = apply_segment(&g, &seg).unwrap();
         let m = CostModel::cortex_m7_reference();
         let ov = SplitOverhead::measure(&m, &g, &res.graph, &NUCLEO_F767ZI);
@@ -362,7 +380,8 @@ mod tests {
         let d1 = b.dwconv2d("d1", c1, (3, 3), (2, 2), Padding::Same, Act::Relu6);
         b.output(d1);
         let g = b.finish().unwrap();
-        let seg = SegmentSplit { ops: vec![0, 1], factor: 4, axis: SplitAxis::Channels };
+        let seg =
+            SegmentSplit { ops: vec![0, 1], factor: 4, axis: SplitAxis::Channels, elide: false };
         let res = apply_segment(&g, &seg).unwrap();
         let m = CostModel::cortex_m7_reference();
         let ov = SplitOverhead::measure(&m, &g, &res.graph, &NUCLEO_F767ZI);
@@ -374,6 +393,42 @@ mod tests {
         // The input is still re-read per slice and the join still copies.
         assert!(ov.split_bytes > ov.base_bytes);
         assert!(ov.join_bytes > 0);
+    }
+
+    /// Elided joins pay no copy: `join_bytes` drops to zero, the removed
+    /// copy shows up in `elided_join_bytes`, recompute attribution is
+    /// unchanged, and the modeled time is strictly below the
+    /// materialized-join split.
+    #[test]
+    fn elided_split_drops_join_copy_bytes() {
+        use crate::graph::{Act, Padding};
+        use crate::split::{apply_segment, SegmentSplit};
+        let mut b = GraphBuilder::new("g");
+        let x = b.input("x", &[1, 16, 16, 4], DType::I8);
+        let c1 = b.conv2d("c1", x, 8, (3, 3), (1, 1), Padding::Same, Act::Relu6);
+        let c2 = b.conv2d("c2", c1, 8, (3, 3), (1, 1), Padding::Same, Act::Relu6);
+        b.output(c2);
+        let g = b.finish().unwrap();
+        let seg = SegmentSplit { ops: vec![0, 1], factor: 4, axis: SplitAxis::Rows, elide: false };
+        let mat = apply_segment(&g, &seg).unwrap();
+        let eli = apply_segment(&g, &SegmentSplit { elide: true, ..seg }).unwrap();
+        let m = CostModel::cortex_m7_reference();
+        let ov_mat = SplitOverhead::measure(&m, &g, &mat.graph, &NUCLEO_F767ZI);
+        let ov_eli = SplitOverhead::measure(&m, &g, &eli.graph, &NUCLEO_F767ZI);
+        let out_bytes = g.tensors[g.op_by_name("c2").unwrap().output].bytes() as u64;
+        // Same recompute (identical bands), same weight traffic…
+        assert_eq!(ov_eli.split_macs, ov_mat.split_macs);
+        assert_eq!(ov_eli.recompute_by_axis, ov_mat.recompute_by_axis);
+        assert_eq!(ov_eli.split_weight_bytes, ov_mat.split_weight_bytes);
+        // …but the join copy is gone, accounted as elided.
+        assert_eq!(ov_mat.join_bytes, out_bytes);
+        assert_eq!(ov_mat.elided_join_bytes, 0);
+        assert_eq!(ov_eli.join_bytes, 0);
+        assert_eq!(ov_eli.elided_join_bytes, out_bytes);
+        // The write-through slices also skip the slab write + join read,
+        // so the elided split touches strictly fewer bytes.
+        assert!(ov_eli.split_bytes < ov_mat.split_bytes);
+        assert!(ov_eli.time_ratio < ov_mat.time_ratio);
     }
 
     #[test]

@@ -16,6 +16,10 @@
 //! - [`audionet`] — a keyword-spotting-style audio CNN whose tall-kernel
 //!   front block makes the channel split axis strictly better than rows
 //!   (the split planner's multi-axis showcase).
+//! - [`streamnet`] — a streaming-vision front block whose fat stride-1
+//!   stack leaves every materialized split plan stuck at the 2×output
+//!   join floor; only streaming concat elision improves it (the
+//!   join-elision showcase).
 //! - [`tiny_cnn`] — a small branchy CNN for quickstarts and fast tests.
 //! - [`synth`] — random DAG generators for property tests and the
 //!   scheduler-scaling ablation.
@@ -213,6 +217,30 @@ pub fn audionet(dtype: DType) -> Graph {
     b.finish().expect("audionet graph is valid")
 }
 
+/// Streaming-vision front block: a cheap 2-channel input feeding a wide
+/// stride-1 conv → depthwise stack that is pooled globally right after —
+/// the streaming-concat-elision showcase. The whole network is a pure
+/// chain whose two fat stride-1 tensors (`c1`, `d1`, 32 KB each at int8)
+/// must coexist, so reordering saves nothing, and every *materialized*
+/// split plan is stuck at the same floor: any segment's join output is
+/// 32 KB, so `ConcatSlices` pays slabs + join = 2×32 KB — exactly the
+/// reorder-only peak. Only join elision breaks the floor: write-through
+/// channel slices stream `d1` into its buffer band by band (zero halo,
+/// zero recompute), dropping the peak to input + one `c1` slab + the
+/// join buffer (−34% with factor 4). Asserted in tests and tracked in
+/// `benches/partial_exec.rs`.
+pub fn streamnet(dtype: DType) -> Graph {
+    let mut b = GraphBuilder::new("streamnet");
+    let x = b.input("input", &[1, 32, 32, 2], dtype);
+    let c1 = b.conv2d("c1", x, 32, (3, 3), (1, 1), Padding::Same, Act::Relu6);
+    let d1 = b.dwconv2d("d1", c1, (3, 3), (1, 1), Padding::Same, Act::Relu6);
+    let gap = b.global_avgpool("gap", d1);
+    let fc = b.dense("fc", gap, 4, Act::Linear);
+    let sm = b.softmax("softmax", fc);
+    b.output(sm);
+    b.finish().expect("streamnet graph is valid")
+}
+
 /// Small branchy CNN for quickstarts and fast integration tests
 /// (8×8×2 input, one two-way branch, 3-class head).
 pub fn tiny_cnn(dtype: DType) -> Graph {
@@ -237,14 +265,15 @@ pub fn by_name(name: &str, dtype: DType) -> Option<Graph> {
         "swiftnet" | "swiftnet-cell" => Some(swiftnet_cell(dtype)),
         "resnet" | "resnet-micro" => Some(resnet_micro(dtype)),
         "audionet" => Some(audionet(dtype)),
+        "streamnet" => Some(streamnet(dtype)),
         "tiny" | "tiny-cnn" => Some(tiny_cnn(dtype)),
         _ => None,
     }
 }
 
 /// Names accepted by [`by_name`].
-pub const MODEL_NAMES: [&str; 6] =
-    ["figure1", "mobilenet", "swiftnet", "resnet", "audionet", "tiny"];
+pub const MODEL_NAMES: [&str; 7] =
+    ["figure1", "mobilenet", "swiftnet", "resnet", "audionet", "streamnet", "tiny"];
 
 #[cfg(test)]
 mod tests {
@@ -370,6 +399,19 @@ mod tests {
     #[test]
     fn by_name_rejects_unknown() {
         assert!(by_name("resnet152", DType::I8).is_none());
+    }
+
+    #[test]
+    fn streamnet_shapes_and_floor() {
+        let g = streamnet(DType::I8);
+        assert_eq!(g.tensor_by_name("c1").unwrap().shape, vec![1, 32, 32, 32]);
+        assert_eq!(g.tensor_by_name("d1").unwrap().shape, vec![1, 32, 32, 32]);
+        // Pure chain: the two fat stride-1 tensors must coexist, so
+        // reordering cannot move the 64 KB floor.
+        let default_peak = peak_of(&g, &g.default_order());
+        let (sched, _) = optimal(&g).unwrap();
+        assert_eq!(sched.peak_bytes, default_peak);
+        assert_eq!(default_peak, 32_768 + 32_768);
     }
 
     #[test]

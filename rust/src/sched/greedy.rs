@@ -14,6 +14,15 @@ use crate::graph::{Graph, OpId};
 pub fn greedy_min_increase(g: &Graph) -> Schedule {
     let n_t = g.tensors.len();
     let bytes: Vec<usize> = g.tensors.iter().map(|t| t.bytes()).collect();
+    // Join-elided slices write through their accumulator's buffer, so
+    // their output adds no bytes at its own step (live tracking still
+    // carries the full size; the accumulator dies at the same step).
+    let discount: Vec<usize> = g
+        .ops
+        .iter()
+        .zip(super::elided_accumulators(g))
+        .map(|(op, acc)| if acc.is_some() { bytes[op.output] } else { 0 })
+        .collect();
     let mut is_output = vec![false; n_t];
     for &t in &g.outputs {
         is_output[t] = true;
@@ -42,7 +51,7 @@ pub fn greedy_min_increase(g: &Graph) -> Schedule {
                 continue;
             }
             let op = &g.ops[o];
-            let step = live + bytes[op.output];
+            let step = live + bytes[op.output] - discount[o];
             let mut freed: isize = 0;
             for &t in &op.inputs {
                 if remaining[t] == 1 && !is_output[t] {
@@ -56,9 +65,8 @@ pub fn greedy_min_increase(g: &Graph) -> Schedule {
         }
         let (_, _, o) = best.expect("greedy: no ready op (cyclic graph?)");
         let op = &g.ops[o];
-        let step = live + bytes[op.output];
-        peak = peak.max(step);
-        live = step;
+        live += bytes[op.output];
+        peak = peak.max(live - discount[o]);
         for &t in &op.inputs {
             remaining[t] -= 1;
             if remaining[t] == 0 && !is_output[t] {

@@ -108,17 +108,55 @@ pub fn inplace_accumulators(g: &Graph) -> Vec<Option<TensorId>> {
                 return None;
             }
             let out_bytes = g.tensors[op.output].bytes();
-            op.inputs.iter().copied().find(|&t| {
-                let tens = &g.tensors[t];
-                let consumers = tens
-                    .consumers
-                    .iter()
-                    .filter(|&&c| g.ops[c].inputs.contains(&t))
-                    .count();
-                consumers == 1 && !g.outputs.contains(&t) && tens.bytes() == out_bytes
-            })
+            op.inputs.iter().copied().find(|&t| eligible_accumulator(g, t, out_bytes))
         })
         .collect()
+}
+
+fn eligible_accumulator(g: &Graph, t: TensorId, out_bytes: usize) -> bool {
+    let tens = &g.tensors[t];
+    let consumers = tens.consumers.iter().filter(|&&c| g.ops[c].inputs.contains(&t)).count();
+    consumers == 1 && !g.outputs.contains(&t) && tens.bytes() == out_bytes
+}
+
+/// Per-op *structural* accumulator: `Some(tensor)` when the op's kind makes
+/// in-place execution part of its semantics, independent of [`Opts`]. A
+/// [`crate::graph::OpKind::PartialInto`] slice (streaming concat elision)
+/// writes its output band through its accumulator input (`inputs[1]`), so
+/// the output shares that buffer and contributes no bytes of its own at
+/// its step — this is what collapses the 2×output floor at a split join.
+///
+/// The same safety conditions as [`inplace_accumulators`] are verified
+/// (sole consumer, not a graph output, matching size). The split rewriter
+/// guarantees them; if a hand-built graph violates them the accounting
+/// soundly degrades to no sharing (and the interpreter materializes a
+/// fresh buffer instead of reusing the handle).
+pub fn elided_accumulators(g: &Graph) -> Vec<Option<TensorId>> {
+    g.ops
+        .iter()
+        .map(|op| {
+            if !matches!(op.kind, crate::graph::OpKind::PartialInto { .. }) {
+                return None;
+            }
+            let &acc = op.inputs.get(1)?;
+            eligible_accumulator(g, acc, g.tensors[op.output].bytes()).then_some(acc)
+        })
+        .collect()
+}
+
+/// Combined per-op accumulators under `opts`: structural join-elision
+/// accumulators always apply; `Add` accumulation joins them under
+/// [`Opts::inplace_add`].
+pub(crate) fn accumulators(g: &Graph, opts: Opts) -> Vec<Option<TensorId>> {
+    let mut acc = elided_accumulators(g);
+    if opts.inplace_add {
+        for (a, b) in acc.iter_mut().zip(inplace_accumulators(g)) {
+            if a.is_none() {
+                *a = b;
+            }
+        }
+    }
+    acc
 }
 
 impl MemTrace {
@@ -188,7 +226,7 @@ pub fn simulate(g: &Graph, order: &[OpId]) -> MemTrace {
 /// [`simulate`] with scheduling options (in-place accumulation).
 pub fn simulate_opts(g: &Graph, order: &[OpId], opts: Opts) -> MemTrace {
     g.check_order(order).expect("simulate: invalid execution order");
-    let acc = if opts.inplace_add { inplace_accumulators(g) } else { vec![None; g.ops.len()] };
+    let acc = accumulators(g, opts);
     let n = g.tensors.len();
     // Remaining consumer count per tensor (activation consumers only).
     let mut remaining = vec![0usize; n];
@@ -253,7 +291,7 @@ pub fn peak_of(g: &Graph, order: &[OpId]) -> usize {
 
 /// [`peak_of`] with scheduling options.
 pub fn peak_of_opts(g: &Graph, order: &[OpId], opts: Opts) -> usize {
-    let acc = if opts.inplace_add { inplace_accumulators(g) } else { vec![None; g.ops.len()] };
+    let acc = accumulators(g, opts);
     let n = g.tensors.len();
     let mut remaining = vec![0u32; n];
     for op in &g.ops {

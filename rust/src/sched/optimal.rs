@@ -24,7 +24,7 @@
 
 use std::collections::HashMap;
 
-use super::{greedy_min_increase, inplace_accumulators, peak_of, peak_of_opts, Opts, Schedule};
+use super::{greedy_min_increase, peak_of, peak_of_opts, Opts, Schedule};
 use crate::graph::{Graph, TensorId};
 use crate::util::bitset::BitSet;
 
@@ -86,12 +86,12 @@ impl<'g> Dp<'g> {
             has_producer[op.output] = true;
             producer_inputs[op.output] = op.inputs.clone();
         }
+        // Structural (join-elision) accumulators always share their
+        // buffer; `Add` accumulation joins them under `opts.inplace_add`.
         let mut inplace = vec![false; n];
-        if opts.inplace_add {
-            for (op, acc) in g.ops.iter().zip(inplace_accumulators(g)) {
-                if acc.is_some() {
-                    inplace[op.output] = true;
-                }
+        for (op, acc) in g.ops.iter().zip(super::accumulators(g, opts)) {
+            if acc.is_some() {
+                inplace[op.output] = true;
             }
         }
         Dp {
@@ -276,6 +276,11 @@ pub fn optimal_bnb(g: &Graph) -> Result<(Schedule, OptimalStats), OptimalError> 
     struct Search<'g> {
         g: &'g Graph,
         bytes: Vec<usize>,
+        /// Per-op step-peak discount: a join-elided slice's output shares
+        /// its accumulator's buffer, so its bytes don't count at its own
+        /// step (live tracking still carries the full size; the
+        /// accumulator's death at the same step rebalances it).
+        discount: Vec<usize>,
         is_output: Vec<bool>,
         dominance: HashMap<BitSet, usize>,
         stats: OptimalStats,
@@ -334,7 +339,7 @@ pub fn optimal_bnb(g: &Graph) -> Result<(Schedule, OptimalStats), OptimalError> 
             let out = op.output;
             // Apply.
             let step_live = live_bytes + s.bytes[out];
-            let new_peak = run_peak.max(step_live);
+            let new_peak = run_peak.max(step_live - s.discount[o]);
             if new_peak >= *best_peak {
                 continue;
             }
@@ -372,9 +377,17 @@ pub fn optimal_bnb(g: &Graph) -> Result<(Schedule, OptimalStats), OptimalError> 
         }
     }
 
+    let bytes: Vec<usize> = g.tensors.iter().map(|t| t.bytes()).collect();
+    let discount: Vec<usize> = g
+        .ops
+        .iter()
+        .zip(super::elided_accumulators(g))
+        .map(|(op, acc)| if acc.is_some() { bytes[op.output] } else { 0 })
+        .collect();
     let mut s = Search {
         g,
-        bytes: g.tensors.iter().map(|t| t.bytes()).collect(),
+        bytes,
+        discount,
         is_output,
         dominance: HashMap::new(),
         stats: OptimalStats::default(),

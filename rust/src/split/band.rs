@@ -113,6 +113,17 @@ pub(crate) fn slice_geom(g: &Graph, op: &Op, axis: SplitAxis) -> Option<SliceGeo
 /// Input band an output band `[out.start, out.end)` needs, clamped to the
 /// real input extent `n_in` — taps falling outside are the full operator's
 /// zero padding and stay implicit.
+///
+/// The clamp is a plain interval intersection of the band's tap range
+/// `[out.start·stride − pad, (out.end−1)·stride + k − pad)` with the real
+/// input `[0, n_in)`. When the receptive field falls *entirely* outside
+/// the input (large kernel + small slice + SAME padding can do this), the
+/// intersection is empty and the result is an explicit empty band anchored
+/// at the nearest real index — the band is pad-only and needs no real
+/// input. Earlier revisions clamped `lo` to `n_in − 1` and `hi` to at
+/// least `lo + 1`, silently fabricating an inverted or 1-element band the
+/// operator never reads; the rewriter now rejects pad-only bands
+/// explicitly instead (see `apply_chain`).
 pub(crate) fn in_band(geom: SliceGeom, n_in: usize, out: Band) -> Band {
     debug_assert!(out.end > out.start, "empty output band");
     match geom {
@@ -121,13 +132,12 @@ pub(crate) fn in_band(geom: SliceGeom, n_in: usize, out: Band) -> Band {
         // never propagated.
         SliceGeom::Pointwise | SliceGeom::ChanParallel | SliceGeom::ChanProject => out,
         SliceGeom::Windowed { k, stride, pad } => {
-            let lo = ((out.start * stride) as isize - pad as isize).max(0) as usize;
-            let lo = lo.min(n_in.saturating_sub(1));
+            let lo_raw = (out.start * stride) as isize - pad as isize;
             let hi_raw = ((out.end - 1) * stride + k) as isize - pad as isize;
-            let mut hi = hi_raw.clamp(1, n_in as isize) as usize;
-            if hi <= lo {
-                hi = lo + 1;
-            }
+            // `hi_raw > lo_raw` always (the tap range spans at least `k`
+            // elements), and clamping is monotone, so `hi >= lo`.
+            let lo = lo_raw.clamp(0, n_in as isize) as usize;
+            let hi = hi_raw.clamp(0, n_in as isize) as usize;
             Band { start: lo, end: hi }
         }
     }
@@ -182,6 +192,55 @@ mod tests {
         let geom = SliceGeom::Windowed { k: 3, stride: 2, pad: 0 };
         assert_eq!(in_band(geom, 8, Band { start: 0, end: 2 }), Band { start: 0, end: 5 });
         assert_eq!(in_band(geom, 8, Band { start: 2, end: 4 }), Band { start: 4, end: 8 });
+    }
+
+    /// Regression (PR-4 satellite): a kernel taller than the input with
+    /// SAME padding. Every band's tap range must intersect-clamp against
+    /// the real extent — no inverted or fabricated 1-element bands.
+    #[test]
+    fn tall_kernel_bands_clamp_to_real_extent() {
+        // k=12 over 8 rows, stride 2, SAME: out 4, pad_total = 10, top 5.
+        let geom = SliceGeom::Windowed { k: 12, stride: 2, pad: 5 };
+        // Top band [0,2): taps -5..9 → real rows [0, 8) (k > n_in: the
+        // slab is the whole input).
+        assert_eq!(in_band(geom, 8, Band { start: 0, end: 2 }), Band { start: 0, end: 8 });
+        // Bottom band [3,4): taps 1..13 → [1, 8).
+        assert_eq!(in_band(geom, 8, Band { start: 3, end: 4 }), Band { start: 1, end: 8 });
+        // k=7 over 2 rows, stride 1, SAME: out 2, pad_total = 5, top 2.
+        let tiny = SliceGeom::Windowed { k: 7, stride: 1, pad: 2 };
+        assert_eq!(in_band(tiny, 2, Band { start: 0, end: 1 }), Band { start: 0, end: 2 });
+        assert_eq!(in_band(tiny, 2, Band { start: 1, end: 2 }), Band { start: 0, end: 2 });
+    }
+
+    /// A receptive field entirely inside the padding yields an explicit
+    /// empty band (anchored at the nearest real index), not a fabricated
+    /// 1-element band. Such geometry cannot arise from `pad_amounts`
+    /// (leading pad <= k−1), but `in_band` must stay honest for any input
+    /// — the rewriter turns the empty band into a clean error.
+    #[test]
+    fn pad_only_receptive_field_is_an_explicit_empty_band() {
+        // All taps of out[0] fall in [-9, -2): before the input.
+        let geom = SliceGeom::Windowed { k: 7, stride: 1, pad: 9 };
+        let b = in_band(geom, 4, Band { start: 0, end: 1 });
+        assert_eq!(b, Band { start: 0, end: 0 });
+        assert_eq!(b.rows(), 0);
+        // All taps of out[13] fall at rows 4..11, beyond the 4-row input:
+        // anchored at n_in.
+        let b = in_band(geom, 4, Band { start: 13, end: 14 });
+        assert_eq!(b, Band { start: 4, end: 4 });
+        assert_eq!(b.rows(), 0);
+    }
+
+    /// The clamp semantics hold on every axis: rows and cols share the
+    /// windowed geometry (exercised above with asymmetric kernels via
+    /// `slice_geom`); the channel axis has no taps, so a channel band is
+    /// its own in-band even when a spatial kernel dwarfs the input.
+    #[test]
+    fn channel_bands_are_identity_even_with_tall_kernels() {
+        for (n_in, band) in [(8usize, Band { start: 2, end: 5 }), (2, Band { start: 0, end: 2 })] {
+            assert_eq!(in_band(SliceGeom::ChanParallel, n_in, band), band);
+            assert_eq!(in_band(SliceGeom::Pointwise, n_in, band), band);
+        }
     }
 
     #[test]

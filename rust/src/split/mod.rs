@@ -6,7 +6,11 @@
 //! that operator must coexist. Partial execution breaks that floor: an
 //! eligible operator chain is split along a [`crate::graph::SplitAxis`]
 //! into `k` slice operators plus a [`crate::graph::OpKind::ConcatSlices`]
-//! join, so only a band of the big intermediates is ever resident. This is
+//! join — or, with streaming concat elision, into write-through slices
+//! ([`crate::graph::OpKind::PartialInto`]) that stream each band directly
+//! into the join tensor's buffer, so not even the join copy's 2×output
+//! floor is paid — so only a band of the big intermediates is ever
+//! resident. This is
 //! the scheduling move behind Pex (Liberis & Lane, 2022), Unlu's
 //! multi-axis layer splitting, and MCUNet's patch-based inference, and it
 //! composes orthogonally with Algorithm 1: the split graph is an ordinary
@@ -62,6 +66,34 @@ pub use search::{
     SplitStep,
 };
 
+use crate::graph::SplitAxis;
+
+/// Parse a `--axes` CLI spec: comma-separated axis names
+/// (`rows|cols|channels`, with `h|w|c` aliases). Unknown, duplicate and
+/// empty tokens are hard errors — a silently dropped token would quietly
+/// shrink the planner's search space.
+pub fn parse_axes(spec: &str) -> Result<Vec<SplitAxis>, String> {
+    let mut axes: Vec<SplitAxis> = Vec::new();
+    for part in spec.split(',') {
+        let token = part.trim();
+        if token.is_empty() {
+            return Err(format!(
+                "--axes {spec:?}: empty axis token (want rows|cols|channels)"
+            ));
+        }
+        let axis = SplitAxis::from_name(token)
+            .ok_or_else(|| format!("unknown axis {token:?} (rows|cols|channels)"))?;
+        if axes.contains(&axis) {
+            return Err(format!("duplicate axis {token:?} in --axes {spec:?}"));
+        }
+        axes.push(axis);
+    }
+    if axes.is_empty() {
+        return Err("--axes needs at least one of rows|cols|channels".into());
+    }
+    Ok(axes)
+}
+
 /// Why a split could not be applied or searched.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum SplitError {
@@ -84,3 +116,32 @@ impl std::fmt::Display for SplitError {
 }
 
 impl std::error::Error for SplitError {}
+
+#[cfg(test)]
+mod tests {
+    use super::parse_axes;
+    use crate::graph::SplitAxis;
+
+    #[test]
+    fn parse_axes_accepts_names_and_aliases() {
+        assert_eq!(
+            parse_axes("rows,cols,channels").unwrap(),
+            vec![SplitAxis::Rows, SplitAxis::Cols, SplitAxis::Channels]
+        );
+        assert_eq!(parse_axes("h,w,c").unwrap(), SplitAxis::ALL.to_vec());
+        assert_eq!(parse_axes(" rows , cols ").unwrap(), vec![SplitAxis::Rows, SplitAxis::Cols]);
+        assert_eq!(parse_axes("channels").unwrap(), vec![SplitAxis::Channels]);
+    }
+
+    /// Regression (PR-4 satellite): unknown and duplicate tokens used to
+    /// be silently ignored, quietly shrinking the search space.
+    #[test]
+    fn parse_axes_rejects_bad_tokens() {
+        assert!(parse_axes("rows,bogus").unwrap_err().contains("unknown axis"));
+        assert!(parse_axes("rows,rows").unwrap_err().contains("duplicate axis"));
+        assert!(parse_axes("rows,h").unwrap_err().contains("duplicate axis"));
+        assert!(parse_axes("rows,,cols").unwrap_err().contains("empty axis token"));
+        assert!(parse_axes("rows,").unwrap_err().contains("empty axis token"));
+        assert!(parse_axes("").unwrap_err().contains("empty axis token"));
+    }
+}

@@ -19,6 +19,15 @@
 //! A single-op segment whose op is `Dense` splits along output features
 //! (the weight matrix columns partition; the input is read whole by every
 //! slice) — the degenerate channel-axis case.
+//!
+//! With [`SegmentSplit::elide`] the join is streamed away entirely: the
+//! final op of every slice pipeline becomes an [`OpKind::PartialInto`]
+//! writing its band directly into the join tensor's buffer, threaded
+//! through the slices as an accumulator chain (`…#w0 → …#w1 → join`), and
+//! no [`OpKind::ConcatSlices`] op is emitted. The schedulers see the
+//! sharing through [`crate::sched::elided_accumulators`]; the interpreter
+//! reuses the accumulator's arena handle, so the measured peak matches
+//! the analytic one byte-exactly.
 
 use super::band::{in_band, pad_eff, partition, slice_geom, Band, SliceGeom};
 use super::SplitError;
@@ -27,11 +36,25 @@ use crate::interp::WeightStore;
 
 /// One split instruction: a chain of ops (in execution order) to evaluate
 /// in `factor` slices along `axis`.
+///
+/// With `elide`, the join is streamed away: the final op of every slice
+/// pipeline becomes an [`OpKind::PartialInto`] that writes its output band
+/// directly into the join tensor's buffer (threaded through the slices as
+/// an accumulator chain), so the slice outputs are never materialized next
+/// to a [`OpKind::ConcatSlices`] copy — peak SRAM at the join drops from
+/// 2×output to 1×output. Always legal: the join tensor itself still
+/// materializes exactly once, so consumers that read the full tensor
+/// (e.g. a `Conv2D` that reads all channels after a channel split) are
+/// unaffected. The cost is a fixed slice order (the accumulator chain
+/// serializes the pipelines), which can lose to the materialized form
+/// when the chain *input* dominates the join output — the planner scores
+/// both forms.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub struct SegmentSplit {
     pub ops: Vec<OpId>,
     pub factor: usize,
     pub axis: SplitAxis,
+    pub elide: bool,
 }
 
 /// A sequence of segment splits applied one after another. Op ids in step
@@ -169,7 +192,10 @@ pub fn apply_segment(g: &Graph, seg: &SegmentSplit) -> Result<SplitResult, Split
         if o >= g.ops.len() {
             return Err(err(format!("op {o} out of range")));
         }
-        if matches!(g.ops[o].kind, OpKind::Partial { .. } | OpKind::ConcatSlices { .. }) {
+        if matches!(
+            g.ops[o].kind,
+            OpKind::Partial { .. } | OpKind::ConcatSlices { .. } | OpKind::PartialInto { .. }
+        ) {
             return Err(err(format!("op {} is already a split artifact", g.ops[o].name)));
         }
     }
@@ -197,7 +223,7 @@ pub fn apply_segment(g: &Graph, seg: &SegmentSplit) -> Result<SplitResult, Split
         if m != 1 {
             return Err(err("dense split must be a single-op segment"));
         }
-        return apply_dense(g, seg.ops[0], k);
+        return apply_dense(g, seg.ops[0], k, seg.elide);
     }
     apply_chain(g, seg)
 }
@@ -256,6 +282,20 @@ fn apply_chain(g: &Graph, seg: &SegmentSplit) -> Result<SplitResult, SplitError>
         let mut row = vec![part; m];
         for i in (1..m).rev() {
             row[i - 1] = in_band(geoms[i], dim_in[i], row[i]);
+            if row[i - 1].rows() == 0 {
+                // The band's receptive field lies entirely in the padding
+                // (kernel larger than the slice's share of the input) — a
+                // pad-only slab. Refuse explicitly rather than fabricate a
+                // 1-element band the operator never reads.
+                return Err(err(format!(
+                    "slice band [{}, {}) of {} needs no real input along {} \
+                     (receptive field entirely in padding); reduce the factor",
+                    row[i].start,
+                    row[i].end,
+                    g.ops[seg.ops[i]].name,
+                    axis.name()
+                )));
+            }
         }
         bands.push(row);
     }
@@ -278,41 +318,78 @@ fn apply_chain(g: &Graph, seg: &SegmentSplit) -> Result<SplitResult, SplitError>
             }
             // Emit the k slice pipelines, then the join, in place of the
             // chain head (the old id order was topological, so everything
-            // the pipelines read is already emitted).
+            // the pipelines read is already emitted). With `elide` there
+            // is no join op: the final op of each pipeline writes its band
+            // through an accumulator chain that ends in the join tensor.
             let chain_in = b.map(g.ops[first].inputs[0]);
+            let join_out = b.map(g.ops[last_old].output);
+            let full_join = &g.tensors[g.ops[last_old].output];
+            let join_shape = full_join.shape.clone();
+            let join_dtype = full_join.dtype;
             let mut slabs: Vec<TensorId> = Vec::with_capacity(k);
+            let mut acc: Option<TensorId> = None;
             for (j, band_row) in bands.iter().enumerate() {
                 let mut cur = chain_in;
                 let mut cur_start = 0usize; // logical first index held by `cur`
                 for (i, &oid) in seg.ops.iter().enumerate() {
                     let o = &g.ops[oid];
                     let band = band_row[i];
-                    let full_out = &g.tensors[o.output];
-                    let mut shape = full_out.shape.clone();
-                    shape[d] = band.rows();
-                    let kind = OpKind::Partial {
-                        inner: Box::new(o.kind.clone()),
-                        axis,
-                        pad: pad_eff(geoms[i], band.start, cur_start),
-                        offset: band.start,
-                    };
+                    let pad = pad_eff(geoms[i], band.start, cur_start);
                     let name = format!("{}#s{j}", o.name);
-                    let slab = b.slab(name.clone(), shape, full_out.dtype, o.output);
                     let weights: Vec<TensorId> = o.weights.iter().map(|&t| b.map(t)).collect();
-                    b.op(name, kind, vec![cur], weights, slab);
-                    cur = slab;
+                    if seg.elide && i == m - 1 {
+                        // Write-through slice: band [start, end) of the
+                        // join tensor, carried forward as an accumulator.
+                        let out = if j == k - 1 {
+                            join_out
+                        } else {
+                            b.slab(
+                                format!("{}#w{j}", o.name),
+                                join_shape.clone(),
+                                join_dtype,
+                                o.output,
+                            )
+                        };
+                        let kind = OpKind::PartialInto {
+                            inner: Box::new(o.kind.clone()),
+                            axis,
+                            pad,
+                            offset: band.start,
+                            len: band.rows(),
+                        };
+                        let mut inputs = vec![cur];
+                        inputs.extend(acc);
+                        b.op(name, kind, inputs, weights, out);
+                        acc = Some(out);
+                    } else {
+                        let full_out = &g.tensors[o.output];
+                        let mut shape = full_out.shape.clone();
+                        shape[d] = band.rows();
+                        let kind = OpKind::Partial {
+                            inner: Box::new(o.kind.clone()),
+                            axis,
+                            pad,
+                            offset: band.start,
+                        };
+                        let slab = b.slab(name.clone(), shape, full_out.dtype, o.output);
+                        b.op(name, kind, vec![cur], weights, slab);
+                        cur = slab;
+                    }
                     cur_start = band.start;
                 }
-                slabs.push(cur);
+                if !seg.elide {
+                    slabs.push(cur);
+                }
             }
-            let join_out = b.map(g.ops[last_old].output);
-            b.op(
-                format!("{}#cat", g.ops[last_old].name),
-                OpKind::ConcatSlices { axis },
-                slabs,
-                vec![],
-                join_out,
-            );
+            if !seg.elide {
+                b.op(
+                    format!("{}#cat", g.ops[last_old].name),
+                    OpKind::ConcatSlices { axis },
+                    slabs,
+                    vec![],
+                    join_out,
+                );
+            }
             continue;
         }
         b.copy_op(op);
@@ -320,7 +397,7 @@ fn apply_chain(g: &Graph, seg: &SegmentSplit) -> Result<SplitResult, SplitError>
     b.finish(g)
 }
 
-fn apply_dense(g: &Graph, oid: OpId, k: usize) -> Result<SplitResult, SplitError> {
+fn apply_dense(g: &Graph, oid: OpId, k: usize, elide: bool) -> Result<SplitResult, SplitError> {
     let op = &g.ops[oid];
     let out_t = &g.tensors[op.output];
     if out_t.shape.len() != 2 || out_t.shape[0] != 1 {
@@ -346,33 +423,55 @@ fn apply_dense(g: &Graph, oid: OpId, k: usize) -> Result<SplitResult, SplitError
             continue;
         }
         let cur = b.map(op.inputs[0]);
+        let join_out = b.map(op.output);
         let mut slabs: Vec<TensorId> = Vec::with_capacity(k);
+        let mut acc: Option<TensorId> = None;
         for (j, band) in partition(n, k).iter().enumerate() {
             let name = format!("{}#s{j}", op.name);
-            let slab = b.slab(name.clone(), vec![1, band.rows()], out_t.dtype, op.output);
             let weights: Vec<TensorId> = op.weights.iter().map(|&t| b.map(t)).collect();
-            b.op(
-                name,
-                OpKind::Partial {
+            if elide {
+                let out = if j == k - 1 {
+                    join_out
+                } else {
+                    b.slab(format!("{}#w{j}", op.name), vec![1, n], out_t.dtype, op.output)
+                };
+                let kind = OpKind::PartialInto {
                     inner: Box::new(OpKind::Dense { act }),
                     axis: SplitAxis::Channels,
                     pad: 0,
                     offset: band.start,
-                },
-                vec![cur],
-                weights,
-                slab,
-            );
-            slabs.push(slab);
+                    len: band.rows(),
+                };
+                let mut inputs = vec![cur];
+                inputs.extend(acc);
+                b.op(name, kind, inputs, weights, out);
+                acc = Some(out);
+            } else {
+                let slab = b.slab(name.clone(), vec![1, band.rows()], out_t.dtype, op.output);
+                b.op(
+                    name,
+                    OpKind::Partial {
+                        inner: Box::new(OpKind::Dense { act }),
+                        axis: SplitAxis::Channels,
+                        pad: 0,
+                        offset: band.start,
+                    },
+                    vec![cur],
+                    weights,
+                    slab,
+                );
+                slabs.push(slab);
+            }
         }
-        let join_out = b.map(op.output);
-        b.op(
-            format!("{}#cat", op.name),
-            OpKind::ConcatSlices { axis: SplitAxis::Channels },
-            slabs,
-            vec![],
-            join_out,
-        );
+        if !elide {
+            b.op(
+                format!("{}#cat", op.name),
+                OpKind::ConcatSlices { axis: SplitAxis::Channels },
+                slabs,
+                vec![],
+                join_out,
+            );
+        }
     }
     b.finish(g)
 }
@@ -434,7 +533,12 @@ mod tests {
             ops: names.iter().map(|n| g.op_by_name(n).unwrap().id).collect(),
             factor,
             axis,
+            elide: false,
         }
+    }
+
+    fn seg_elided(g: &Graph, names: &[&str], factor: usize, axis: SplitAxis) -> SegmentSplit {
+        SegmentSplit { elide: true, ..seg_of(g, names, factor, axis) }
     }
 
     #[test]
@@ -515,10 +619,20 @@ mod tests {
         for factor in [2, 3] {
             for axis in [SplitAxis::Rows, SplitAxis::Cols] {
                 assert_split_matches_f32(&g, &seg_of(&g, &["c1", "dw", "pw"], factor, axis), 11);
+                assert_split_matches_f32(
+                    &g,
+                    &seg_elided(&g, &["c1", "dw", "pw"], factor, axis),
+                    11,
+                );
             }
             assert_split_matches_f32(
                 &g,
                 &seg_of(&g, &["c1", "dw"], factor, SplitAxis::Channels),
+                11,
+            );
+            assert_split_matches_f32(
+                &g,
+                &seg_elided(&g, &["c1", "dw"], factor, SplitAxis::Channels),
                 11,
             );
         }
@@ -528,6 +642,89 @@ mod tests {
     fn dense_split_matches_unsplit_f32() {
         let g = chain_cnn();
         assert_split_matches_f32(&g, &seg_of(&g, &["fc"], 3, SplitAxis::Channels), 5);
+        assert_split_matches_f32(&g, &seg_elided(&g, &["fc"], 3, SplitAxis::Channels), 5);
+    }
+
+    /// Elided rewrite structure: no `ConcatSlices`, one write-through
+    /// slice per band forming an accumulator chain that ends in the
+    /// original join tensor, and the schedulers see the sharing.
+    #[test]
+    fn elided_split_builds_an_accumulator_chain() {
+        let g = chain_cnn();
+        let res =
+            apply_segment(&g, &seg_elided(&g, &["c1", "dw", "pw"], 3, SplitAxis::Rows)).unwrap();
+        let ng = &res.graph;
+        ng.validate().unwrap();
+        // 3 slices x 3 ops, no join, replace the 3 chain ops.
+        assert_eq!(ng.n_ops(), g.n_ops() - 3 + 3 * 3);
+        assert!(!ng.ops.iter().any(|o| matches!(o.kind, OpKind::ConcatSlices { .. })));
+        // The write-through slices carry the full join shape and chain
+        // through intermediate accumulators into the original tensor.
+        let pw = ng.tensor_by_name("pw").unwrap();
+        assert_eq!(pw.shape, vec![1, 6, 6, 4]);
+        for j in 0..2 {
+            let w = ng.tensor_by_name(&format!("pw#w{j}")).unwrap();
+            assert_eq!(w.shape, pw.shape);
+            assert_eq!(res.sources[w.id], g.tensor_by_name("pw").unwrap().id);
+        }
+        let mut lens = Vec::new();
+        for op in &ng.ops {
+            if let OpKind::PartialInto { len, axis, .. } = op.kind {
+                assert_eq!(axis, SplitAxis::Rows);
+                lens.push(len);
+            }
+        }
+        assert_eq!(lens, vec![2, 2, 2], "three write-through bands partitioning 6 rows");
+        // Structural in-place: slices 1 and 2 share their accumulator's
+        // buffer; slice 0 allocates the join tensor.
+        let accs = crate::sched::elided_accumulators(ng);
+        assert_eq!(accs.iter().filter(|a| a.is_some()).count(), 2);
+        ng.check_order(&ng.default_order()).unwrap();
+    }
+
+    /// On a join-dominated chain the elided form must beat the
+    /// materialized form after reordering: the slabs never sit next to
+    /// the join copy, so the 2×output floor at the join is gone.
+    #[test]
+    fn elided_join_breaks_the_two_x_output_floor() {
+        let mut b = GraphBuilder::new("joiny");
+        let x = b.input("x", &[1, 8, 8, 2], DType::I8);
+        let c1 = b.conv2d("c1", x, 16, (3, 3), (1, 1), Padding::Same, Act::Relu6);
+        let dw = b.dwconv2d("dw", c1, (3, 3), (1, 1), Padding::Same, Act::Relu6);
+        b.output(dw);
+        let g = b.finish().unwrap();
+        let seg = seg_of(&g, &["c1", "dw"], 4, SplitAxis::Rows);
+        let mat = apply_segment(&g, &seg).unwrap();
+        let eli = apply_segment(&g, &SegmentSplit { elide: true, ..seg }).unwrap();
+        let (mat_s, _) = sched::optimal(&mat.graph).unwrap();
+        let (eli_s, _) = sched::optimal(&eli.graph).unwrap();
+        let join_bytes = g.tensor_by_name("dw").unwrap().bytes();
+        assert!(mat_s.peak_bytes >= 2 * join_bytes, "materialized pays the join floor");
+        assert!(
+            eli_s.peak_bytes < mat_s.peak_bytes,
+            "elided {} vs materialized {}",
+            eli_s.peak_bytes,
+            mat_s.peak_bytes
+        );
+        assert!(
+            eli_s.peak_bytes < 2 * join_bytes,
+            "elided peak {} must undercut 2x join output {}",
+            eli_s.peak_bytes,
+            2 * join_bytes
+        );
+    }
+
+    /// The elided slices are themselves split artifacts.
+    #[test]
+    fn elided_artifacts_cannot_be_resplit() {
+        let g = chain_cnn();
+        let res = apply_segment(&g, &seg_elided(&g, &["c1", "dw"], 2, SplitAxis::Rows)).unwrap();
+        let slice = res.graph.op_by_name("dw#s0").unwrap().id;
+        let e = apply_segment(
+            &res.graph,
+            &SegmentSplit { ops: vec![slice], factor: 2, axis: SplitAxis::Rows, elide: false },
+        );
+        assert!(e.is_err());
     }
 
     #[test]
@@ -568,7 +765,7 @@ mod tests {
         // Empty.
         assert!(apply_segment(
             &g,
-            &SegmentSplit { ops: vec![], factor: 2, axis: rows }
+            &SegmentSplit { ops: vec![], factor: 2, axis: rows, elide: false }
         )
         .is_err());
     }
@@ -593,7 +790,7 @@ mod tests {
         let slice = ng.op_by_name("c1#s0").unwrap().id;
         let e = apply_segment(
             ng,
-            &SegmentSplit { ops: vec![slice], factor: 2, axis: SplitAxis::Rows },
+            &SegmentSplit { ops: vec![slice], factor: 2, axis: SplitAxis::Rows, elide: false },
         );
         assert!(e.is_err());
     }
@@ -623,6 +820,9 @@ mod tests {
             seg_of(&g, &["c1", "dw", "pw"], 2, SplitAxis::Rows),
             seg_of(&g, &["c1", "dw", "pw"], 2, SplitAxis::Cols),
             seg_of(&g, &["c1", "dw"], 3, SplitAxis::Channels),
+            seg_elided(&g, &["c1", "dw", "pw"], 2, SplitAxis::Rows),
+            seg_elided(&g, &["c1", "dw"], 3, SplitAxis::Channels),
+            seg_elided(&g, &["fc"], 3, SplitAxis::Channels),
         ];
         for seg in &segs {
             let res = apply_segment(&g, seg).unwrap();

@@ -49,6 +49,13 @@ pub struct SplitOptions {
     pub beam_width: usize,
     /// Axes the planner may slice along.
     pub axes: Vec<SplitAxis>,
+    /// Score join-elided variants of every move (streaming concat
+    /// elision: the final slice of each pipeline writes its band directly
+    /// into the join tensor, so the join copy — and its 2×output floor —
+    /// disappears). Both forms are scored, because eliding fixes the
+    /// slice order and can lose when the chain input outlives the join
+    /// output. `false` reproduces the PR-3 materialized-join planner.
+    pub elide: bool,
 }
 
 impl Default for SplitOptions {
@@ -61,6 +68,7 @@ impl Default for SplitOptions {
             max_candidates: 48,
             beam_width: 2,
             axes: SplitAxis::ALL.to_vec(),
+            elide: true,
         }
     }
 }
@@ -83,6 +91,13 @@ impl SplitOptions {
     pub fn rows_only(self) -> Self {
         SplitOptions { axes: vec![SplitAxis::Rows], ..self }
     }
+
+    /// Disable join elision — every committed split keeps its
+    /// `ConcatSlices` copy, reproducing the PR-3 planner (the ablation
+    /// baseline the benches compare elided plans against).
+    pub fn materialized(self) -> Self {
+        SplitOptions { elide: false, ..self }
+    }
 }
 
 /// One committed split of a plan.
@@ -92,6 +107,9 @@ pub struct SplitStep {
     pub segment: Vec<String>,
     pub factor: usize,
     pub axis: SplitAxis,
+    /// Whether the join was elided (slices write through into the join
+    /// tensor; no `ConcatSlices` copy).
+    pub elided: bool,
     pub peak_before: usize,
     pub peak_after: usize,
 }
@@ -118,6 +136,12 @@ impl SplitOutcome {
     /// Did splitting beat reorder-only scheduling?
     pub fn improved(&self) -> bool {
         self.schedule.peak_bytes < self.base_peak
+    }
+
+    /// Number of committed splits whose join was elided (streamed through
+    /// the accumulator chain instead of a `ConcatSlices` copy).
+    pub fn elided_steps(&self) -> usize {
+        self.steps.iter().filter(|s| s.elided).count()
     }
 
     /// The distinct axes the committed plan slices along.
@@ -351,9 +375,20 @@ pub fn optimize(g: &Graph, opts: &SplitOptions) -> Result<SplitOutcome, SplitErr
                 continue;
             }
             let trace = sched::simulate(&st.graph, &st.sched.order);
+            // Every (factor, join form) variant of a segment move; the
+            // elided form streams the join away, the materialized form
+            // keeps the PR-3 `ConcatSlices` copy. Both are scored — see
+            // [`SplitOptions::elide`].
+            let mut variants: Vec<(usize, bool)> = Vec::new();
+            for factor in 2..=opts.max_factor {
+                variants.push((factor, false));
+                if opts.elide {
+                    variants.push((factor, true));
+                }
+            }
             for (seg_ops, axis) in candidate_moves(&st.graph, &trace, opts) {
-                for factor in 2..=opts.max_factor {
-                    let seg = SegmentSplit { ops: seg_ops.clone(), factor, axis };
+                for &(factor, elide) in &variants {
+                    let seg = SegmentSplit { ops: seg_ops.clone(), factor, axis, elide };
                     let Ok(res) = apply_segment(&st.graph, &seg) else { continue };
                     let Ok((s, _)) = sched::optimal(&res.graph) else { continue };
                     if s.peak_bytes >= st.sched.peak_bytes {
@@ -368,6 +403,7 @@ pub fn optimize(g: &Graph, opts: &SplitOptions) -> Result<SplitOutcome, SplitErr
                             .collect(),
                         factor,
                         axis,
+                        elided: elide,
                         peak_before: st.sched.peak_bytes,
                         peak_after: s.peak_bytes,
                     });

@@ -181,6 +181,7 @@ fn folded_fused_graphs_split_equivalently() {
         ],
         factor: 2,
         axis: SplitAxis::Rows,
+        elide: false,
     };
     let res = split::apply_segment(&fused, &seg).unwrap();
     let ws_split = split::remap_weight_store(&ws_fused, &res);
@@ -254,17 +255,20 @@ fn prop_split_execute_bit_exact_on_every_axis() {
                 if factor > extent {
                     continue;
                 }
-                let seg = SegmentSplit { ops: seg_ops.clone(), factor, axis };
-                let res = split::apply_segment(&g, &seg).unwrap();
-                let ws2 = split::remap_weight_store(&ws, &res);
-                let out = Interpreter::new(&res.graph, ws2, ExecConfig::with_capacity(1 << 20))
-                    .run(&[input.clone()])
-                    .unwrap();
-                assert_eq!(
-                    base.outputs, out.outputs,
-                    "axis {:?} factor {factor} drifted",
-                    axis
-                );
+                for elide in [false, true] {
+                    let seg = SegmentSplit { ops: seg_ops.clone(), factor, axis, elide };
+                    let res = split::apply_segment(&g, &seg).unwrap();
+                    let ws2 = split::remap_weight_store(&ws, &res);
+                    let out =
+                        Interpreter::new(&res.graph, ws2, ExecConfig::with_capacity(1 << 20))
+                            .run(&[input.clone()])
+                            .unwrap();
+                    assert_eq!(
+                        base.outputs, out.outputs,
+                        "axis {:?} factor {factor} elide {elide} drifted",
+                        axis
+                    );
+                }
             }
         }
     });
@@ -306,13 +310,19 @@ fn split_i8_bit_exact_odd_sizes_stride2_same_all_axes() {
             if factor > extent {
                 continue;
             }
-            let seg = SegmentSplit { ops: seg_ops.clone(), factor, axis };
-            let res = split::apply_segment(&g_i8, &seg).unwrap();
-            let ws2 = split::remap_weight_store(&ws_i8, &res);
-            let out = Interpreter::new(&res.graph, ws2, ExecConfig::with_capacity(1 << 20))
-                .run(&[input_q.clone()])
-                .unwrap();
-            assert_eq!(base.outputs, out.outputs, "i8 axis {:?} factor {factor}", axis);
+            for elide in [false, true] {
+                let seg = SegmentSplit { ops: seg_ops.clone(), factor, axis, elide };
+                let res = split::apply_segment(&g_i8, &seg).unwrap();
+                let ws2 = split::remap_weight_store(&ws_i8, &res);
+                let out = Interpreter::new(&res.graph, ws2, ExecConfig::with_capacity(1 << 20))
+                    .run(&[input_q.clone()])
+                    .unwrap();
+                assert_eq!(
+                    base.outputs, out.outputs,
+                    "i8 axis {:?} factor {factor} elide {elide}",
+                    axis
+                );
+            }
         }
     }
 }
@@ -351,6 +361,123 @@ fn audionet_multi_axis_plan_beats_rows_and_executes() {
     }
     // The arena agrees with the analytic accounting on the split graph.
     assert_eq!(split_run.alloc.high_water, out.schedule.peak_bytes);
+}
+
+/// Tentpole acceptance (streaming concat elision): on `streamnet` — a zoo
+/// model whose fat stride-1 stack leaves *every* materialized split plan
+/// stuck at the 2×output join floor — the elided plan breaks the floor:
+/// strictly below the best PR-3 (materialized-join) plan and below
+/// 2×(join output bytes) + inputs. The planned peak equals the value the
+/// exact-schedule DP mirror (tools/schedule_mirror/mirror.py) computes
+/// independently: input + one c1 channel slab + the streamed join buffer.
+#[test]
+fn streamnet_elision_breaks_the_join_floor() {
+    let g = models::streamnet(DType::I8);
+    let reorder_only = sched::optimal(&g).unwrap().0.peak_bytes;
+    assert_eq!(reorder_only, 65_536, "baseline drifted");
+
+    let pr3 = split::optimize(&g, &SplitOptions::default().materialized()).unwrap();
+    assert_eq!(
+        pr3.schedule.peak_bytes, reorder_only,
+        "every materialized plan re-pays the 32KB join next to its slabs"
+    );
+
+    let out = split::optimize(&g, &SplitOptions::default()).unwrap();
+    assert!(out.elided_steps() > 0, "winning plan must elide a join: {:?}", out.steps);
+    assert!(out.schedule.peak_bytes < pr3.schedule.peak_bytes);
+    let join_bytes = g.tensor_by_name("d1").unwrap().bytes();
+    let input_bytes = g.tensors[g.inputs[0]].bytes();
+    assert!(
+        out.schedule.peak_bytes < 2 * join_bytes + input_bytes,
+        "{} must undercut the 2x-join-plus-inputs floor {}",
+        out.schedule.peak_bytes,
+        2 * join_bytes + input_bytes
+    );
+    // DP-mirror value: input (2048) + c1#s3 slab (8 channels, 8192) +
+    // the write-through join buffer (32768).
+    assert_eq!(out.schedule.peak_bytes, 2_048 + 8_192 + 32_768);
+}
+
+/// The elided streamnet plan executes: f32 within 1e-5 and int8 bit-exact
+/// against the unsplit graph, with the measured arena high-water equal to
+/// the analytic peak (the interpreter's write-through handle reuse is what
+/// makes the elision real, not just planned).
+#[test]
+fn streamnet_elided_execution_is_exact_and_measured_at_the_analytic_peak() {
+    // f32 reference path.
+    let g_f32 = models::streamnet(DType::F32);
+    let ws_f32 = WeightStore::seeded_f32(&g_f32, 42);
+    let input_f = TensorData::F32(ramp(g_f32.tensors[g_f32.inputs[0]].elems()));
+    let base_f32 = Interpreter::new(&g_f32, ws_f32.clone(), ExecConfig::with_capacity(1 << 22))
+        .run(&[input_f.clone()])
+        .unwrap();
+    let out_f32 = split::optimize(&g_f32, &SplitOptions::default()).unwrap();
+    assert!(out_f32.elided_steps() > 0);
+    let cfg = ExecConfig {
+        order: Some(out_f32.schedule.order.clone()),
+        ..ExecConfig::with_capacity(1 << 22)
+    };
+    let run_f32 = Interpreter::new(&out_f32.graph, out_f32.remap_weights(&ws_f32), cfg)
+        .run(&[input_f.clone()])
+        .unwrap();
+    let a = base_f32.outputs[0].as_f32().unwrap();
+    let b = run_f32.outputs[0].as_f32().unwrap();
+    for (x, y) in a.iter().zip(b) {
+        assert!((x - y).abs() < 1e-5, "f32 elided drift: {x} vs {y}");
+    }
+    assert_eq!(run_f32.alloc.high_water, out_f32.schedule.peak_bytes);
+
+    // int8: quantize, split with elision, run — bit-exact.
+    let ranges = calibrate(&g_f32, &ws_f32, &[input_f.clone()], 1 << 22).unwrap();
+    let g_i8 = models::streamnet(DType::I8);
+    let ws_i8 = WeightStore::quantize_from(&g_i8, &ws_f32, &ranges);
+    let in_q = ws_i8.qparams[&g_i8.inputs[0]];
+    let input_q = TensorData::I8(in_q.quantize(input_f.as_f32().unwrap()));
+    let base_i8 = Interpreter::new(&g_i8, ws_i8.clone(), ExecConfig::with_capacity(1 << 20))
+        .run(&[input_q.clone()])
+        .unwrap();
+    let out_i8 = split::optimize(&g_i8, &SplitOptions::default()).unwrap();
+    assert!(out_i8.elided_steps() > 0);
+    let cfg = ExecConfig {
+        order: Some(out_i8.schedule.order.clone()),
+        ..ExecConfig::with_capacity(1 << 20)
+    };
+    let run_i8 = Interpreter::new(&out_i8.graph, out_i8.remap_weights(&ws_i8), cfg)
+        .run(&[input_q])
+        .unwrap();
+    assert_eq!(base_i8.outputs, run_i8.outputs, "i8 elided output must be bit-exact");
+    assert_eq!(run_i8.alloc.high_water, out_i8.schedule.peak_bytes);
+    assert!(run_i8.alloc.high_water < base_i8.alloc.high_water);
+}
+
+/// The structural in-place accounting stays *exact*: on randomly elided
+/// split chains, Algorithm 1's peak equals exhaustive enumeration over
+/// all topological orders, and the branch-and-bound scheduler agrees.
+#[test]
+fn prop_elided_dp_matches_enumeration() {
+    prop::check("elided-dp==enum", 15, |rng| {
+        let g = random_chain(rng);
+        let axis = *rng.pick(&SplitAxis::ALL);
+        let extent = g.tensor_by_name("dw").unwrap().shape[axis.dim()];
+        let factor = rng.range(2, 4);
+        if factor > extent {
+            return;
+        }
+        let seg = SegmentSplit {
+            ops: vec![g.op_by_name("c1").unwrap().id, g.op_by_name("dw").unwrap().id],
+            factor,
+            axis,
+            elide: true,
+        };
+        let Ok(res) = split::apply_segment(&g, &seg) else { return };
+        let orders = sched::all_orders(&res.graph, 500_000).expect("small graph");
+        let best =
+            orders.iter().map(|o| sched::peak_of(&res.graph, o)).min().unwrap();
+        let (dp, _) = sched::optimal(&res.graph).unwrap();
+        assert_eq!(dp.peak_bytes, best, "DP vs enumeration on elided graph");
+        let (bnb, _) = sched::optimal_bnb(&res.graph).unwrap();
+        assert_eq!(bnb.peak_bytes, best, "BnB vs enumeration on elided graph");
+    });
 }
 
 /// The split CLI surface: a split model file round-trips with its embedded

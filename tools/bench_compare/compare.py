@@ -87,6 +87,19 @@ def compare(baseline_dir, current_dir):
         for key in sorted(gated(cur)):
             if key not in base:
                 print(f"new {bench}.{key}: {cur[key]:.0f} (not in baseline; not gated)")
+        # Cross-metric invariant: the elided planner scores a superset of
+        # the materialized planner's moves, so its plan should not lose.
+        # Beam pruning makes this a strong expectation rather than a
+        # theorem — surface violations loudly, but do not gate on them.
+        for key, val in sorted(cur.items()):
+            if not key.endswith(".elided_peak"):
+                continue
+            mat_key = key.replace(".elided_peak", ".split_reorder_peak")
+            if mat_key in cur and val > cur[mat_key]:
+                print(
+                    f"WARNING {bench}.{key}: elided plan {val:.0f} above "
+                    f"materialized plan {cur[mat_key]:.0f} (beam pruning artifact?)"
+                )
     print(f"\nchecked {checked} gated metric(s)")
     if failures:
         print("\nBENCH REGRESSIONS:", file=sys.stderr)

@@ -1,0 +1,1140 @@
+#!/usr/bin/env python3
+"""Exact-schedule DP mirror of the Rust analytic stack.
+
+An independent Python implementation of the byte-exact working-set
+accounting (including the structural in-place rule of streaming concat
+elision), Algorithm-1 optimal scheduling, the split-graph rewriter and
+the beam split planner — faithful to `rust/src/sched`, `rust/src/split`
+and `rust/src/models` down to tie-breaking order.
+
+Purpose:
+  * cross-check the Rust scheduler/planner peaks from a second,
+    independently-written implementation (the "exact-schedule DP mirror"
+    the split acceptance tests refer to);
+  * compute the gated `BENCH_baseline/partial_exec.json` values
+    analytically (`python3 tools/schedule_mirror/mirror.py --baseline`).
+
+Everything here is deterministic and analytic — no timing, no RNG beyond
+the mirrored xoshiro256** used by the synthetic model generators.
+"""
+
+import argparse
+import json
+import sys
+
+MASK = (1 << 64) - 1
+
+# ---------------------------------------------------------------------------
+# util::rng — splitmix64-seeded xoshiro256** (bit-exact mirror)
+# ---------------------------------------------------------------------------
+
+
+class Rng:
+    def __init__(self, seed):
+        s = seed & MASK
+        st = []
+        for _ in range(4):
+            s = (s + 0x9E3779B97F4A7C15) & MASK
+            z = s
+            z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+            z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+            st.append(z ^ (z >> 31))
+        self.s = st
+
+    def next_u64(self):
+        s = self.s
+        r = (self._rotl((s[1] * 5) & MASK, 7) * 9) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = self._rotl(s[3], 45)
+        return r
+
+    @staticmethod
+    def _rotl(x, k):
+        return ((x << k) | (x >> (64 - k))) & MASK
+
+    def below(self, bound):
+        threshold = ((-bound) & MASK) % bound
+        while True:
+            x = self.next_u64()
+            m = x * bound
+            if (m & MASK) >= threshold:
+                return m >> 64
+
+    def range(self, lo, hi):
+        return lo + self.below(hi - lo)
+
+
+# ---------------------------------------------------------------------------
+# graph IR (mirrors rust/src/graph)
+# ---------------------------------------------------------------------------
+
+SAME, VALID = "same", "valid"
+ROWS, COLS, CHANNELS = "rows", "cols", "channels"
+AXES = [ROWS, COLS, CHANNELS]
+AXIS_DIM = {ROWS: 1, COLS: 2, CHANNELS: 3}
+
+
+class Tensor:
+    __slots__ = ("id", "name", "shape", "dsize", "is_weight", "producer", "consumers")
+
+    def __init__(self, id, name, shape, dsize, is_weight):
+        self.id, self.name, self.shape, self.dsize, self.is_weight = (
+            id,
+            name,
+            shape,
+            dsize,
+            is_weight,
+        )
+        self.producer = None
+        self.consumers = []
+
+    def elems(self):
+        n = 1
+        for d in self.shape:
+            n *= d
+        return n
+
+    def bytes(self):
+        return self.elems() * self.dsize
+
+
+class Op:
+    __slots__ = ("id", "name", "kind", "inputs", "weights", "output")
+
+    def __init__(self, id, name, kind, inputs, weights, output):
+        self.id, self.name, self.kind = id, name, kind
+        self.inputs, self.weights, self.output = inputs, weights, output
+
+
+class Graph:
+    def __init__(self, name):
+        self.name = name
+        self.tensors = []
+        self.ops = []
+        self.inputs = []
+        self.outputs = []
+
+    def add_tensor(self, name, shape, dsize, is_weight=False):
+        t = Tensor(len(self.tensors), name, list(shape), dsize, is_weight)
+        self.tensors.append(t)
+        return t.id
+
+    def add_op(self, name, kind, inputs, weights, out_shape, dsize):
+        opid = len(self.ops)
+        out = self.add_tensor(name, out_shape, dsize)
+        self.tensors[out].producer = opid
+        for t in list(inputs) + list(weights):
+            self.tensors[t].consumers.append(opid)
+        self.ops.append(Op(opid, name, kind, list(inputs), list(weights), out))
+        return out
+
+    def op_by_name(self, name):
+        for o in self.ops:
+            if o.name == name:
+                return o
+        return None
+
+    def tensor_by_name(self, name):
+        for t in self.tensors:
+            if t.name == name:
+                return t
+        return None
+
+    def default_order(self):
+        return list(range(len(self.ops)))
+
+    def total_macs(self):
+        return sum(op_macs(self, o) for o in self.ops)
+
+
+def conv_out_dim(inp, k, stride, padding):
+    if padding == SAME:
+        return -(-inp // stride)
+    assert inp >= k
+    return (inp - k) // stride + 1
+
+
+def pad_amounts(inp, k, stride, padding, out):
+    if padding == VALID:
+        return 0
+    total = max((out - 1) * stride + k - inp, 0)
+    return total // 2
+
+
+# builder layers (weights mirror GraphBuilder's creation order; bias dtype
+# follows pick_bias: f32 activations -> f32 bias (4B), else i32 (4B))
+
+
+def conv2d(g, name, x, cout, kernel, stride, padding, dsize):
+    n, h, w, cin = g.tensors[x].shape
+    oh = conv_out_dim(h, kernel[0], stride[0], padding)
+    ow = conv_out_dim(w, kernel[1], stride[1], padding)
+    g.add_tensor(name + ".w", [kernel[0], kernel[1], cin, cout], dsize, True)
+    g.add_tensor(name + ".b", [cout], 4, True)
+    wt, bias = len(g.tensors) - 2, len(g.tensors) - 1
+    kind = {"k": "Conv2D", "kernel": kernel, "stride": stride, "padding": padding}
+    return g.add_op(name, kind, [x], [wt, bias], [n, oh, ow, cout], dsize)
+
+
+def dwconv2d(g, name, x, kernel, stride, padding, dsize):
+    n, h, w, c = g.tensors[x].shape
+    oh = conv_out_dim(h, kernel[0], stride[0], padding)
+    ow = conv_out_dim(w, kernel[1], stride[1], padding)
+    g.add_tensor(name + ".w", [kernel[0], kernel[1], c], dsize, True)
+    g.add_tensor(name + ".b", [c], 4, True)
+    wt, bias = len(g.tensors) - 2, len(g.tensors) - 1
+    kind = {"k": "DepthwiseConv2D", "kernel": kernel, "stride": stride, "padding": padding}
+    return g.add_op(name, kind, [x], [wt, bias], [n, oh, ow, c], dsize)
+
+
+def dense(g, name, x, out_features, dsize):
+    in_features = g.tensors[x].elems()
+    g.add_tensor(name + ".w", [in_features, out_features], dsize, True)
+    g.add_tensor(name + ".b", [out_features], 4, True)
+    wt, bias = len(g.tensors) - 2, len(g.tensors) - 1
+    return g.add_op(name, {"k": "Dense"}, [x], [wt, bias], [1, out_features], dsize)
+
+
+def add_(g, name, a, b):
+    return g.add_op(name, {"k": "Add"}, [a, b], [], g.tensors[a].shape, g.tensors[a].dsize)
+
+
+def concat(g, name, parts):
+    shape = list(g.tensors[parts[0]].shape)
+    shape[-1] = sum(g.tensors[p].shape[-1] for p in parts)
+    return g.add_op(name, {"k": "Concat"}, parts, [], shape, g.tensors[parts[0]].dsize)
+
+
+def relu(g, name, x, kind="Relu"):
+    return g.add_op(name, {"k": kind}, [x], [], g.tensors[x].shape, g.tensors[x].dsize)
+
+
+def maxpool(g, name, x, kernel, stride, padding):
+    n, h, w, c = g.tensors[x].shape
+    oh = conv_out_dim(h, kernel[0], stride[0], padding)
+    ow = conv_out_dim(w, kernel[1], stride[1], padding)
+    kind = {"k": "MaxPool2D", "kernel": kernel, "stride": stride, "padding": padding}
+    return g.add_op(name, kind, [x], [], [n, oh, ow, c], g.tensors[x].dsize)
+
+
+def global_avgpool(g, name, x):
+    n, _, _, c = g.tensors[x].shape
+    return g.add_op(name, {"k": "GlobalAvgPool"}, [x], [], [n, 1, 1, c], g.tensors[x].dsize)
+
+
+def softmax(g, name, x):
+    return g.add_op(name, {"k": "Softmax"}, [x], [], g.tensors[x].shape, g.tensors[x].dsize)
+
+
+def synthetic(g, name, inputs, out_bytes, macs):
+    return g.add_op(name, {"k": "Synthetic", "macs": macs}, inputs, [], [out_bytes], 1)
+
+
+# ---------------------------------------------------------------------------
+# model zoo (mirrors rust/src/models)
+# ---------------------------------------------------------------------------
+
+
+def figure1():
+    g = Graph("figure1")
+    t0 = g.add_tensor("t0", [1568], 1)
+    g.inputs.append(t0)
+    t1 = synthetic(g, "op1", [t0], 3136, 0)
+    t2 = synthetic(g, "op2", [t1], 1568, 0)
+    t3 = synthetic(g, "op3", [t2], 512, 0)
+    t4 = synthetic(g, "op4", [t1], 512, 0)
+    t5 = synthetic(g, "op5", [t3], 256, 0)
+    t6 = synthetic(g, "op6", [t4], 256, 0)
+    t7 = synthetic(g, "op7", [t5, t6], 512, 0)
+    g.outputs.append(t7)
+    return g
+
+
+def mobilenet(dsize=1):
+    g = Graph("mobilenet")
+    x = g.add_tensor("input", [1, 96, 96, 1], dsize)
+    g.inputs.append(x)
+    t = conv2d(g, "conv1", x, 8, (3, 3), (2, 2), SAME, dsize)
+    blocks = [(1, 16), (2, 32), (1, 32), (2, 64), (1, 64), (2, 128), (1, 128), (1, 128),
+              (1, 128), (1, 128), (1, 128), (2, 256), (1, 256)]
+    for i, (s, cout) in enumerate(blocks):
+        n = i + 1
+        t = dwconv2d(g, f"dw{n}", t, (3, 3), (s, s), SAME, dsize)
+        t = conv2d(g, f"pw{n}", t, cout, (1, 1), (1, 1), SAME, dsize)
+    gap = global_avgpool(g, "gap", t)
+    fc = dense(g, "fc", gap, 2, dsize)
+    sm = softmax(g, "softmax", fc)
+    g.outputs.append(sm)
+    return g
+
+
+def _swift_cell(g, name, x, ca_mid, ca_out, cb_out, dsize):
+    a1 = conv2d(g, f"{name}.a1", x, ca_mid, (1, 1), (1, 1), SAME, dsize)
+    a2 = dwconv2d(g, f"{name}.a2", a1, (3, 3), (1, 1), SAME, dsize)
+    a3 = conv2d(g, f"{name}.a3", a2, ca_out, (1, 1), (1, 1), SAME, dsize)
+    b1 = dwconv2d(g, f"{name}.b1", x, (3, 3), (1, 1), SAME, dsize)
+    b2 = conv2d(g, f"{name}.b2", b1, cb_out, (1, 1), (1, 1), SAME, dsize)
+    return concat(g, f"{name}.cat", [a3, b2])
+
+
+def _swift_transition(g, name, x, cout, dsize):
+    d = dwconv2d(g, f"{name}.dw", x, (3, 3), (2, 2), SAME, dsize)
+    return conv2d(g, f"{name}.pw", d, cout, (1, 1), (1, 1), SAME, dsize)
+
+
+def swiftnet(dsize=1):
+    g = Graph("swiftnet")
+    x = g.add_tensor("input", [1, 96, 96, 3], dsize)
+    g.inputs.append(x)
+    stem = conv2d(g, "stem", x, 32, (3, 3), (2, 2), SAME, dsize)
+    c1 = _swift_cell(g, "c1", stem, 60, 40, 12, dsize)
+    t1 = _swift_transition(g, "t1", c1, 64, dsize)
+    c2 = _swift_cell(g, "c2", t1, 96, 64, 32, dsize)
+    c3 = _swift_cell(g, "c3", c2, 96, 64, 32, dsize)
+    t2 = _swift_transition(g, "t2", c3, 128, dsize)
+    c4 = _swift_cell(g, "c4", t2, 96, 96, 32, dsize)
+    c5 = _swift_cell(g, "c5", c4, 96, 96, 32, dsize)
+    c6 = _swift_cell(g, "c6", c5, 96, 96, 32, dsize)
+    t3 = _swift_transition(g, "t3", c6, 192, dsize)
+    c7 = _swift_cell(g, "c7", t3, 160, 128, 64, dsize)
+    p1 = conv2d(g, "tail1", c7, 160, (1, 1), (1, 1), SAME, dsize)
+    gap = global_avgpool(g, "gap", p1)
+    fc = dense(g, "fc", gap, 2, dsize)
+    sm = softmax(g, "softmax", fc)
+    g.outputs.append(sm)
+    return g
+
+
+def resnet(dsize=1):
+    g = Graph("resnet")
+    x = g.add_tensor("input", [1, 32, 32, 3], dsize)
+    g.inputs.append(x)
+    t = conv2d(g, "stem", x, 16, (3, 3), (1, 1), SAME, dsize)
+    for stage, (c, stride) in enumerate([(16, 1), (32, 2), (64, 2)]):
+        if stride > 1 or c != 16:
+            t = conv2d(g, f"s{stage}.down", t, c, (1, 1), (stride, stride), SAME, dsize)
+        for blk in range(2):
+            name = f"s{stage}.b{blk}"
+            c1 = conv2d(g, f"{name}.c1", t, c // 2, (3, 3), (1, 1), SAME, dsize)
+            c2 = conv2d(g, f"{name}.c2", c1, c, (3, 3), (1, 1), SAME, dsize)
+            t = add_(g, f"{name}.add", c2, t)
+    gap = global_avgpool(g, "gap", t)
+    fc = dense(g, "fc", gap, 10, dsize)
+    sm = softmax(g, "softmax", fc)
+    g.outputs.append(sm)
+    return g
+
+
+def audionet(dsize=1):
+    g = Graph("audionet")
+    x = g.add_tensor("input", [1, 64, 16, 4], dsize)
+    g.inputs.append(x)
+    c1 = conv2d(g, "c1", x, 32, (8, 3), (1, 1), SAME, dsize)
+    d1 = dwconv2d(g, "d1", c1, (12, 3), (2, 2), SAME, dsize)
+    m1 = maxpool(g, "m1", d1, (2, 2), (2, 2), VALID)
+    p1 = conv2d(g, "p1", m1, 32, (1, 1), (1, 1), SAME, dsize)
+    d2 = dwconv2d(g, "d2", p1, (3, 3), (1, 1), SAME, dsize)
+    p2 = conv2d(g, "p2", d2, 32, (1, 1), (1, 1), SAME, dsize)
+    gap = global_avgpool(g, "gap", p2)
+    fc = dense(g, "fc", gap, 4, dsize)
+    sm = softmax(g, "softmax", fc)
+    g.outputs.append(sm)
+    return g
+
+
+def streamnet(dsize=1):
+    g = Graph("streamnet")
+    x = g.add_tensor("input", [1, 32, 32, 2], dsize)
+    g.inputs.append(x)
+    c1 = conv2d(g, "c1", x, 32, (3, 3), (1, 1), SAME, dsize)
+    d1 = dwconv2d(g, "d1", c1, (3, 3), (1, 1), SAME, dsize)
+    gap = global_avgpool(g, "gap", d1)
+    fc = dense(g, "fc", gap, 4, dsize)
+    sm = softmax(g, "softmax", fc)
+    g.outputs.append(sm)
+    return g
+
+
+def tiny(dsize=1):
+    g = Graph("tiny")
+    x = g.add_tensor("x", [1, 8, 8, 2], dsize)
+    g.inputs.append(x)
+    c1 = conv2d(g, "c1", x, 4, (3, 3), (1, 1), SAME, dsize)
+    dw = dwconv2d(g, "dw", c1, (3, 3), (2, 2), SAME, dsize)
+    pw = conv2d(g, "pw", c1, 4, (1, 1), (2, 2), SAME, dsize)
+    cat = concat(g, "cat", [dw, pw])
+    gap = global_avgpool(g, "gap", cat)
+    fc = dense(g, "fc", gap, 3, dsize)
+    sm = softmax(g, "softmax", fc)
+    g.outputs.append(sm)
+    return g
+
+
+def series_parallel(rng, depth, width):
+    g = Graph("series-parallel")
+    cur = g.add_tensor("x", [256 + 64 * rng.range(0, 8)], 1)
+    g.inputs.append(cur)
+    for d in range(depth):
+        joins = []
+        for w in range(width):
+            t = cur
+            hops = 1 + rng.range(0, 3)
+            for h in range(hops):
+                nbytes = 64 * (1 + rng.range(0, 32))
+                t = synthetic(g, f"d{d}b{w}h{h}", [t], nbytes, 500)
+            joins.append(t)
+        if len(joins) == 1:
+            cur = joins[0]
+        else:
+            nbytes = 64 * (1 + rng.range(0, 16))
+            cur = synthetic(g, f"d{d}join", joins, nbytes, 500)
+    g.outputs.append(cur)
+    return g
+
+
+# ---------------------------------------------------------------------------
+# MACs (mirrors graph::Op::macs, incl. Partial / PartialInto band scaling)
+# ---------------------------------------------------------------------------
+
+
+def axis_extent(shape, axis):
+    return shape[AXIS_DIM[axis]] if len(shape) == 4 else shape[-1]
+
+
+def _inner_macs(g, op, inner, band_out_elems):
+    k = inner["k"]
+    if k == "Conv2D":
+        cin = g.tensors[op.inputs[0]].shape[-1]
+        return band_out_elems * inner["kernel"][0] * inner["kernel"][1] * cin
+    if k == "DepthwiseConv2D":
+        return band_out_elems * inner["kernel"][0] * inner["kernel"][1]
+    if k == "Dense":
+        return band_out_elems * g.tensors[op.inputs[0]].elems()
+    if k in ("MaxPool2D", "AvgPool2D"):
+        return band_out_elems * inner["kernel"][0] * inner["kernel"][1]
+    if k == "BatchNorm":
+        return 2 * band_out_elems
+    return band_out_elems
+
+
+def op_macs(g, op):
+    out = g.tensors[op.output]
+    oe = out.elems()
+    k = op.kind["k"]
+    if k == "Conv2D":
+        return oe * op.kind["kernel"][0] * op.kind["kernel"][1] * g.tensors[op.inputs[0]].shape[-1]
+    if k == "DepthwiseConv2D":
+        return oe * op.kind["kernel"][0] * op.kind["kernel"][1]
+    if k == "Dense":
+        return oe * g.tensors[op.inputs[0]].elems()
+    if k in ("Add", "Relu", "Relu6", "Softmax"):
+        return oe
+    if k == "BatchNorm":
+        return 2 * oe
+    if k in ("MaxPool2D", "AvgPool2D"):
+        return oe * op.kind["kernel"][0] * op.kind["kernel"][1]
+    if k == "GlobalAvgPool":
+        return g.tensors[op.inputs[0]].elems()
+    if k in ("Concat", "Reshape", "ConcatSlices"):
+        return 0
+    if k == "Synthetic":
+        return op.kind["macs"]
+    if k == "Partial":
+        return _inner_macs(g, op, op.kind["inner"], oe)
+    if k == "PartialInto":
+        band = oe // max(axis_extent(out.shape, op.kind["axis"]), 1) * op.kind["len"]
+        return _inner_macs(g, op, op.kind["inner"], band)
+    raise ValueError(k)
+
+
+# ---------------------------------------------------------------------------
+# sched (mirrors rust/src/sched: accumulators, simulate, Algorithm-1 DP)
+# ---------------------------------------------------------------------------
+
+
+def activation_consumers(g, t):
+    return sum(1 for c in g.tensors[t].consumers if t in g.ops[c].inputs)
+
+
+def elided_accumulators(g):
+    acc = []
+    for op in g.ops:
+        a = None
+        if op.kind["k"] == "PartialInto" and len(op.inputs) > 1:
+            cand = op.inputs[1]
+            tens = g.tensors[cand]
+            if (
+                activation_consumers(g, cand) == 1
+                and cand not in g.outputs
+                and tens.bytes() == g.tensors[op.output].bytes()
+            ):
+                a = cand
+        acc.append(a)
+    return acc
+
+
+def simulate(g, order):
+    acc = elided_accumulators(g)
+    n = len(g.tensors)
+    remaining = [0] * n
+    for op in g.ops:
+        for t in op.inputs:
+            remaining[t] += 1
+    is_output = [False] * n
+    for t in g.outputs:
+        is_output[t] = True
+    resident = [False] * n
+    for t in g.inputs:
+        resident[t] = True
+    steps = []
+    peak, peak_step = 0, 0
+    for i, opid in enumerate(order):
+        op = g.ops[opid]
+        resident[op.output] = True
+        live = [t for t in range(n) if resident[t]]
+        nbytes = sum(g.tensors[t].bytes() for t in live)
+        if acc[opid] is not None:
+            nbytes -= g.tensors[op.output].bytes()
+        if nbytes > peak:
+            peak, peak_step = nbytes, i
+        steps.append((opid, live, nbytes))
+        for t in op.inputs:
+            remaining[t] -= 1
+            if remaining[t] == 0 and not is_output[t]:
+                resident[t] = False
+        if remaining[op.output] == 0 and not is_output[op.output]:
+            resident[op.output] = False
+    return steps, peak, peak_step
+
+
+def tensor_ancestors(g):
+    n = len(g.tensors)
+    anc = [0] * n
+    for op in g.ops:  # op ids are topological for builder/rewriter graphs
+        a = 0
+        for i in op.inputs:
+            a |= (1 << i) | anc[i]
+        anc[op.output] = a
+    return anc
+
+
+class Dp:
+    """Algorithm 1 over tensor-set states (bitmask ints)."""
+
+    def __init__(self, g):
+        n = len(g.tensors)
+        self.g = g
+        self.bytes = [t.bytes() for t in g.tensors]
+        self.has_producer = [t.producer is not None for t in g.tensors]
+        self.producer_inputs = [[] for _ in range(n)]
+        for op in g.ops:
+            self.producer_inputs[op.output] = op.inputs
+        self.inplace = [False] * n
+        for op, a in zip(g.ops, elided_accumulators(g)):
+            if a is not None:
+                self.inplace[op.output] = True
+        self.anc = tensor_ancestors(g)
+        self.memo = {}
+
+    def sum_bytes(self, x):
+        s = 0
+        while x:
+            t = (x & -x).bit_length() - 1
+            s += self.bytes[t]
+            x &= x - 1
+        return s
+
+    def mem(self, x):
+        hit = self.memo.get(x)
+        if hit is not None:
+            return hit
+        stack = [(x, None)]
+        # Iterative post-order to dodge Python's recursion limit.
+        while stack:
+            state, _ = stack[-1]
+            if state in self.memo:
+                stack.pop()
+                continue
+            bits = []
+            s = state
+            while s:
+                t = (s & -s).bit_length() - 1
+                bits.append(t)
+                s &= s - 1
+            prods = [t for t in bits if self.has_producer[t]]
+            if not prods:
+                self.memo[state] = (self.sum_bytes(state), None)
+                stack.pop()
+                continue
+            pending = []
+            nexts = {}
+            for xt in prods:
+                if any(r != xt and (self.anc[r] >> xt) & 1 for r in bits):
+                    continue
+                nxt = state & ~(1 << xt)
+                for i in self.producer_inputs[xt]:
+                    nxt |= 1 << i
+                nexts[xt] = nxt
+                if nxt not in self.memo:
+                    pending.append(nxt)
+            if pending:
+                for p in pending:
+                    stack.append((p, None))
+                continue
+            best, choice = None, None
+            for xt in prods:
+                if xt not in nexts:
+                    continue
+                nxt = nexts[xt]
+                x_bytes = 0 if self.inplace[xt] else self.bytes[xt]
+                step = self.sum_bytes(nxt) + x_bytes
+                if (nxt >> xt) & 1:
+                    step -= x_bytes
+                rec = self.memo[nxt][0]
+                m = max(rec, step)
+                if best is None or m < best:
+                    best, choice = m, xt
+            self.memo[state] = (best, choice)
+            stack.pop()
+        return self.memo[x]
+
+    def reconstruct(self, start):
+        order_rev = []
+        state = start
+        while True:
+            _, choice = self.memo[state]
+            if choice is None:
+                break
+            order_rev.append(self.g.tensors[choice].producer)
+            nxt = state & ~(1 << choice)
+            for i in self.producer_inputs[choice]:
+                nxt |= 1 << i
+            state = nxt
+        order_rev.reverse()
+        return order_rev
+
+
+def optimal(g):
+    dp = Dp(g)
+    start = 0
+    for t in g.outputs:
+        start |= 1 << t
+    peak, _ = dp.mem(start)
+    order = dp.reconstruct(start)
+    return order, peak
+
+
+# ---------------------------------------------------------------------------
+# split (mirrors rust/src/split: geometry, rewrite, beam search)
+# ---------------------------------------------------------------------------
+
+WINDOWED_KINDS = ("Conv2D", "DepthwiseConv2D", "MaxPool2D", "AvgPool2D")
+POINTWISE_KINDS = ("Relu", "Relu6", "BatchNorm")
+
+
+def nhwc1(shape):
+    return len(shape) == 4 and shape[0] == 1
+
+
+def slice_geom(g, op, axis):
+    if len(op.inputs) != 1:
+        return None
+    ish = g.tensors[op.inputs[0]].shape
+    osh = g.tensors[op.output].shape
+    if not nhwc1(ish) or not nhwc1(osh):
+        return None
+    k = op.kind["k"]
+    if axis == CHANNELS:
+        if k == "Conv2D":
+            return ("chanproject",)
+        if k in ("DepthwiseConv2D", "MaxPool2D", "AvgPool2D", "Relu", "Relu6", "BatchNorm"):
+            return ("chanparallel",)
+        return None
+    d = AXIS_DIM[axis]
+    pick = 0 if axis == ROWS else 1
+    if k in WINDOWED_KINDS:
+        kk = op.kind["kernel"][pick]
+        ss = op.kind["stride"][pick]
+        pad = pad_amounts(ish[d], kk, ss, op.kind["padding"], osh[d])
+        return ("windowed", kk, ss, pad)
+    if k in POINTWISE_KINDS:
+        return ("pointwise",)
+    return None
+
+
+def in_band(geom, n_in, band):
+    if geom[0] != "windowed":
+        return band
+    _, k, stride, pad = geom
+    lo_raw = band[0] * stride - pad
+    hi_raw = (band[1] - 1) * stride + k - pad
+    lo = min(max(lo_raw, 0), n_in)
+    hi = min(max(hi_raw, 0), n_in)
+    return (lo, hi)
+
+
+def partition(n, k):
+    base, rem = n // k, n % k
+    out, start = [], 0
+    for j in range(k):
+        rows = base + (1 if j < rem else 0)
+        out.append((start, start + rows))
+        start += rows
+    return out
+
+
+def pad_eff(geom, out_start, in_start):
+    if geom[0] != "windowed":
+        return 0
+    _, _, stride, pad = geom
+    return pad + in_start - out_start * stride
+
+
+class SplitError(Exception):
+    pass
+
+
+def apply_segment(g, ops, factor, axis, elide):
+    m, k = len(ops), factor
+    if m == 0 or k < 2:
+        raise SplitError("bad segment")
+    for o in ops:
+        if o >= len(g.ops):
+            raise SplitError("range")
+        if g.ops[o].kind["k"] in ("Partial", "ConcatSlices", "PartialInto"):
+            raise SplitError("artifact")
+    head = g.ops[ops[0]]
+    if len(head.inputs) != 1:
+        raise SplitError("head inputs")
+    for a, b in zip(ops, ops[1:]):
+        out = g.ops[a].output
+        nxt = g.ops[b]
+        if len(nxt.inputs) != 1 or nxt.inputs[0] != out:
+            raise SplitError("not chained")
+        if activation_consumers(g, out) != 1 or out in g.outputs:
+            raise SplitError("interior consumers")
+    if head.kind["k"] == "Dense":
+        if m != 1:
+            raise SplitError("dense multi")
+        return _apply_dense(g, ops[0], k, elide)
+    return _apply_chain(g, ops, factor, axis, elide)
+
+
+def _apply_chain(g, ops, k, axis, elide):
+    m = len(ops)
+    geoms = []
+    for i, oid in enumerate(ops):
+        geom = slice_geom(g, g.ops[oid], axis)
+        if geom is None:
+            raise SplitError("not sliceable")
+        if geom[0] in ("pointwise", "chanparallel") and i == 0:
+            raise SplitError("head must anchor")
+        if geom[0] == "chanproject" and i > 0:
+            raise SplitError("conv inside channel chain")
+        geoms.append(geom)
+    d = AXIS_DIM[axis]
+    dim_in = [g.tensors[g.ops[o].inputs[0]].shape[d] for o in ops]
+    last_old = ops[-1]
+    n_out_last = g.tensors[g.ops[last_old].output].shape[d]
+    if k > n_out_last:
+        raise SplitError("factor too big")
+    bands = []
+    for part in partition(n_out_last, k):
+        row = [part] * m
+        for i in range(m - 1, 0, -1):
+            row[i - 1] = in_band(geoms[i], dim_in[i], row[i])
+            if row[i - 1][1] - row[i - 1][0] == 0:
+                raise SplitError("pad-only band")
+        bands.append(row)
+
+    dropped = set(g.ops[o].output for o in ops[:-1])
+    in_seg = set(ops)
+    first = ops[0]
+
+    ng = Graph(g.name)
+    tmap = {}
+    for t in g.tensors:
+        if t.id in dropped:
+            continue
+        tmap[t.id] = ng.add_tensor(t.name, t.shape, t.dsize, t.is_weight)
+    join_old = g.ops[last_old].output
+
+    def emit(name, kind, inputs, weights, output):
+        opid = len(ng.ops)
+        ng.tensors[output].producer = opid
+        for t in inputs + weights:
+            ng.tensors[t].consumers.append(opid)
+        ng.ops.append(Op(opid, name, kind, inputs, weights, output))
+
+    for op in g.ops:
+        if op.id in in_seg:
+            if op.id != first:
+                continue
+            chain_in = tmap[g.ops[first].inputs[0]]
+            join_out = tmap[join_old]
+            join_shape = list(g.tensors[join_old].shape)
+            join_ds = g.tensors[join_old].dsize
+            slabs = []
+            acc = None
+            for j, band_row in enumerate(bands):
+                cur = chain_in
+                cur_start = 0
+                for i, oid in enumerate(ops):
+                    o = g.ops[oid]
+                    band = band_row[i]
+                    pad = pad_eff(geoms[i], band[0], cur_start)
+                    name = f"{o.name}#s{j}"
+                    weights = [tmap[t] for t in o.weights]
+                    if elide and i == m - 1:
+                        if j == k - 1:
+                            out = join_out
+                        else:
+                            out = ng.add_tensor(f"{o.name}#w{j}", join_shape, join_ds)
+                        kind = {
+                            "k": "PartialInto",
+                            "inner": o.kind,
+                            "axis": axis,
+                            "pad": pad,
+                            "offset": band[0],
+                            "len": band[1] - band[0],
+                        }
+                        inputs = [cur] + ([acc] if acc is not None else [])
+                        emit(name, kind, inputs, weights, out)
+                        acc = out
+                    else:
+                        shape = list(g.tensors[o.output].shape)
+                        shape[d] = band[1] - band[0]
+                        slab = ng.add_tensor(name, shape, g.tensors[o.output].dsize)
+                        kind = {
+                            "k": "Partial",
+                            "inner": o.kind,
+                            "axis": axis,
+                            "pad": pad,
+                            "offset": band[0],
+                        }
+                        emit(name, kind, [cur], weights, slab)
+                        cur = slab
+                    cur_start = band[0]
+                if not elide:
+                    slabs.append(cur)
+            if not elide:
+                emit(f"{g.ops[last_old].name}#cat", {"k": "ConcatSlices", "axis": axis},
+                     slabs, [], join_out)
+            continue
+        emit(op.name, op.kind, [tmap[t] for t in op.inputs],
+             [tmap[t] for t in op.weights], tmap[op.output])
+    ng.inputs = [tmap[t] for t in g.inputs]
+    ng.outputs = [tmap[t] for t in g.outputs]
+    return ng
+
+
+def _apply_dense(g, oid, k, elide):
+    op = g.ops[oid]
+    out_t = g.tensors[op.output]
+    if len(out_t.shape) != 2 or out_t.shape[0] != 1:
+        raise SplitError("dense shape")
+    n = out_t.shape[1]
+    if k > n:
+        raise SplitError("factor too big")
+    ng = Graph(g.name)
+    tmap = {}
+    for t in g.tensors:
+        tmap[t.id] = ng.add_tensor(t.name, t.shape, t.dsize, t.is_weight)
+
+    def emit(name, kind, inputs, weights, output):
+        opid2 = len(ng.ops)
+        ng.tensors[output].producer = opid2
+        for t in inputs + weights:
+            ng.tensors[t].consumers.append(opid2)
+        ng.ops.append(Op(opid2, name, kind, inputs, weights, output))
+
+    for o in g.ops:
+        if o.id != oid:
+            emit(o.name, o.kind, [tmap[t] for t in o.inputs],
+                 [tmap[t] for t in o.weights], tmap[o.output])
+            continue
+        cur = tmap[op.inputs[0]]
+        join_out = tmap[op.output]
+        slabs = []
+        acc = None
+        for j, band in enumerate(partition(n, k)):
+            name = f"{op.name}#s{j}"
+            weights = [tmap[t] for t in op.weights]
+            if elide:
+                if j == k - 1:
+                    out = join_out
+                else:
+                    out = ng.add_tensor(f"{op.name}#w{j}", [1, n], out_t.dsize)
+                kind = {"k": "PartialInto", "inner": op.kind, "axis": CHANNELS,
+                        "pad": 0, "offset": band[0], "len": band[1] - band[0]}
+                inputs = [cur] + ([acc] if acc is not None else [])
+                emit(name, kind, inputs, weights, out)
+                acc = out
+            else:
+                slab = ng.add_tensor(name, [1, band[1] - band[0]], out_t.dsize)
+                kind = {"k": "Partial", "inner": op.kind, "axis": CHANNELS,
+                        "pad": 0, "offset": band[0]}
+                emit(name, kind, [cur], weights, slab)
+                slabs.append(slab)
+        if not elide:
+            emit(f"{op.name}#cat", {"k": "ConcatSlices", "axis": CHANNELS},
+                 slabs, [], join_out)
+    ng.inputs = [tmap[t] for t in g.inputs]
+    ng.outputs = [tmap[t] for t in g.outputs]
+    return ng
+
+
+def interior_sliceable(g, o, axis):
+    geom = slice_geom(g, g.ops[o], axis)
+    return geom is not None and geom[0] in ("windowed", "pointwise", "chanparallel")
+
+
+def head_sliceable(g, o, axis):
+    geom = slice_geom(g, g.ops[o], axis)
+    return geom is not None and geom[0] in ("windowed", "chanproject")
+
+
+def sole_consumer(g, t):
+    if t in g.outputs:
+        return None
+    cons = [c for c in g.tensors[t].consumers if t in g.ops[c].inputs]
+    if len(cons) != 1:
+        return None
+    return cons[0]
+
+
+def chain_through(g, anchor, axis):
+    if not interior_sliceable(g, anchor, axis) and not head_sliceable(g, anchor, axis):
+        return []
+    chain = [anchor]
+    while True:
+        head = chain[0]
+        if not interior_sliceable(g, head, axis):
+            break
+        inp = g.ops[head].inputs[0]
+        prev = g.tensors[inp].producer
+        if prev is None:
+            break
+        if sole_consumer(g, g.ops[prev].output) != head:
+            break
+        if interior_sliceable(g, prev, axis) or head_sliceable(g, prev, axis):
+            chain.insert(0, prev)
+        else:
+            break
+    while True:
+        tail = chain[-1]
+        nxt = sole_consumer(g, g.ops[tail].output)
+        if nxt is None or not interior_sliceable(g, nxt, axis):
+            break
+        chain.append(nxt)
+    return chain
+
+
+def segments_around(g, anchor, axis, max_segment):
+    chain = chain_through(g, anchor, axis)
+    if anchor not in chain:
+        return []
+    pos = chain.index(anchor)
+    segs = []
+    for s in range(pos + 1):
+        if not head_sliceable(g, chain[s], axis):
+            continue
+        for e in range(pos, len(chain)):
+            if e + 1 - s > max_segment:
+                break
+            segs.append(chain[s:e + 1])
+    return segs
+
+
+def candidate_moves(g, steps, peak_step, opts):
+    opid, resident, _ = steps[peak_step]
+    anchors = [opid]
+    for t in resident:
+        p = g.tensors[t].producer
+        if p is not None:
+            anchors.append(p)
+        for c in g.tensors[t].consumers:
+            if t in g.ops[c].inputs:
+                anchors.append(c)
+    anchors = sorted(set(anchors))
+    moves = []
+    for axis in opts["axes"]:
+        n_axis = 0
+        done = False
+        for a in anchors:
+            if done:
+                break
+            for s in segments_around(g, a, axis, opts["max_segment"]):
+                mv = (tuple(s), axis)
+                if mv not in moves:
+                    moves.append(mv)
+                    n_axis += 1
+                    if n_axis >= opts["max_candidates"]:
+                        done = True
+                        break
+    for op in g.ops:
+        if op.kind["k"] == "Dense":
+            out = g.tensors[op.output].shape
+            if len(out) == 2 and out[1] >= 2:
+                mv = ((op.id,), CHANNELS)
+                if mv not in moves:
+                    moves.append(mv)
+    return moves
+
+
+DEFAULT_OPTS = {
+    "max_factor": 4,
+    "max_segment": 4,
+    "sram_budget": None,
+    "max_rounds": 3,
+    "max_candidates": 48,
+    "beam_width": 2,
+    "axes": [ROWS, COLS, CHANNELS],
+    "elide": True,
+}
+
+QUICK_OPTS = dict(DEFAULT_OPTS, max_factor=3, max_rounds=1, max_candidates=24, beam_width=1)
+
+
+def optimize(g, opts):
+    base_order, base_peak = optimal(g)
+    beam = [
+        {"graph": g, "order": base_order, "peak": base_peak,
+         "macs": g.total_macs(), "steps": []}
+    ]
+
+    def met(peak):
+        return opts["sram_budget"] is not None and peak <= opts["sram_budget"]
+
+    for _ in range(opts["max_rounds"]):
+        if met(beam[0]["peak"]):
+            break
+        pool = list(beam)
+        grew = False
+        for st in beam:
+            if met(st["peak"]):
+                continue
+            steps, _, peak_step = simulate(st["graph"], st["order"])
+            variants = []
+            for factor in range(2, opts["max_factor"] + 1):
+                variants.append((factor, False))
+                if opts["elide"]:
+                    variants.append((factor, True))
+            for seg_ops, axis in candidate_moves(st["graph"], steps, peak_step, opts):
+                for factor, elide in variants:
+                    try:
+                        ng = apply_segment(st["graph"], list(seg_ops), factor, axis, elide)
+                    except SplitError:
+                        continue
+                    order, peak = optimal(ng)
+                    if peak >= st["peak"]:
+                        continue
+                    pool.append({
+                        "graph": ng, "order": order, "peak": peak,
+                        "macs": ng.total_macs(),
+                        "steps": st["steps"] + [
+                            ([st["graph"].ops[o].name for o in seg_ops],
+                             factor, axis, elide, st["peak"], peak)
+                        ],
+                    })
+                    grew = True
+        pool.sort(key=lambda s: (s["peak"], s["macs"]))
+        beam = pool[: max(opts["beam_width"], 1)]
+        if not grew:
+            break
+    return beam[0]
+
+
+# ---------------------------------------------------------------------------
+# drivers
+# ---------------------------------------------------------------------------
+
+
+def zoo():
+    models = [
+        ("figure1", figure1()),
+        ("mobilenet", mobilenet()),
+        ("swiftnet", swiftnet()),
+        ("resnet", resnet()),
+        ("audionet", audionet()),
+        ("streamnet", streamnet()),
+        ("tiny", tiny()),
+    ]
+    rng = Rng(2025)
+    for i in range(2):
+        models.append((f"synth-sp{i}", series_parallel(rng, 3, 2)))
+    return models
+
+
+def bench_metrics():
+    metrics = {}
+    for name, g in zoo():
+        _, default_peak = (None, simulate(g, g.default_order())[1])
+        rows = optimize(g, dict(DEFAULT_OPTS, axes=[ROWS], elide=False))
+        mat = optimize(g, dict(DEFAULT_OPTS, elide=False))
+        eli = optimize(g, DEFAULT_OPTS)
+        _, reorder_peak = optimal(g)
+        metrics[f"{name}.default_peak"] = default_peak
+        metrics[f"{name}.reorder_peak"] = reorder_peak
+        metrics[f"{name}.rows_only_peak"] = rows["peak"]
+        metrics[f"{name}.split_reorder_peak"] = mat["peak"]
+        metrics[f"{name}.elided_peak"] = eli["peak"]
+        yield name, g, rows, mat, eli, metrics
+
+
+def main(argv):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", action="store_true",
+                    help="print BENCH_baseline/partial_exec.json gated metrics")
+    ap.add_argument("--report", action="store_true",
+                    help="print the full per-model plan report")
+    ap.add_argument("--check", metavar="BENCH_JSON",
+                    help="recompute every *_peak metric and fail on any "
+                         "mismatch with the given BENCH_partial_exec.json "
+                         "(the Rust-vs-mirror drift gate)")
+    args = ap.parse_args(argv)
+    metrics = {}
+    for name, g, rows, mat, eli, metrics in bench_metrics():
+        if args.report:
+            print(f"== {name}")
+            print(f"   default {simulate(g, g.default_order())[1]}  "
+                  f"reorder {optimal(g)[1]}  rows {rows['peak']}  "
+                  f"mat {mat['peak']}  elided {eli['peak']}")
+            for seg, factor, axis, elide, before, after in eli["steps"]:
+                tag = ", join elided" if elide else ""
+                print(f"   split {seg} x{factor} along {axis}{tag}: {before} -> {after}")
+    if args.baseline:
+        doc = {"bench": "partial_exec",
+               "metrics": {k: v for k, v in sorted(metrics.items())},
+               "timings": []}
+        print(json.dumps(doc, indent=2))
+    if args.check:
+        with open(args.check, "r", encoding="utf-8") as f:
+            reported = json.load(f).get("metrics", {})
+        bad = 0
+        for key, val in sorted(metrics.items()):
+            if not key.endswith("_peak"):
+                continue
+            if key not in reported:
+                print(f"MISSING {key}: mirror {val}, absent from {args.check}")
+                bad += 1
+            elif int(reported[key]) != val:
+                print(f"DRIFT {key}: mirror {val} vs rust {reported[key]:.0f}")
+                bad += 1
+            else:
+                print(f"ok  {key}: {val}")
+        if bad:
+            print(f"\n{bad} metric(s) drifted between the Rust planner and "
+                  "the DP mirror", file=sys.stderr)
+            return 1
+        print("\nexact-schedule DP mirror: all peaks agree")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
