@@ -1263,6 +1263,119 @@ mod tests {
         assert_eq!(b.alloc.high_water, 4960);
     }
 
+    /// Fused-activation graphs vs their de-fused twins (`Conv2D`+`Relu6`
+    /// as separate ops — what the TFLite importer produces) must agree
+    /// bit-exactly. This is the importer's de-fusing contract: the
+    /// pre-activation tensor carries the output's quantization, so the
+    /// clamp commutes with requantization.
+    fn act_pair(dtype: DType, h: usize, w: usize, stride: usize, act: Act) -> (Graph, Graph) {
+        let build = |defused: bool| {
+            let mut b = GraphBuilder::new("pair");
+            let x = b.input("x", &[1, h, w, 3], dtype);
+            let (conv_act, dw_act) = if defused { (Act::Linear, Act::Linear) } else { (act, act) };
+            let mut c = b.conv2d("c", x, 4, (3, 3), (stride, stride), Padding::Same, conv_act);
+            if defused {
+                c = match act {
+                    Act::Relu => b.relu("c.act", c),
+                    Act::Relu6 => b.relu6("c.act", c),
+                    Act::Linear => c,
+                };
+            }
+            let mut d = b.dwconv2d("d", c, (3, 3), (1, 1), Padding::Same, dw_act);
+            if defused {
+                d = match act {
+                    Act::Relu => b.relu("d.act", d),
+                    Act::Relu6 => b.relu6("d.act", d),
+                    Act::Linear => d,
+                };
+            }
+            let gap = b.global_avgpool("gap", d);
+            let mut f = b.dense("f", gap, 3, if defused { Act::Linear } else { act });
+            if defused {
+                f = match act {
+                    Act::Relu => b.relu("f.act", f),
+                    Act::Relu6 => b.relu6("f.act", f),
+                    Act::Linear => f,
+                };
+            }
+            b.output(f);
+            b.finish().unwrap()
+        };
+        (build(false), build(true))
+    }
+
+    fn pair_input(h: usize, w: usize) -> TensorData {
+        TensorData::F32((0..h * w * 3).map(|i| ((i % 23) as f32 - 11.0) / 4.0).collect())
+    }
+
+    #[test]
+    fn defused_activations_match_fused_f32_bit_exact() {
+        // Odd sizes and stride 2 under SAME padding — the geometry the
+        // importer's de-fusing has to survive unchanged.
+        for (h, w, stride) in [(5, 7, 1), (9, 5, 2), (8, 8, 2)] {
+            for act in [Act::Relu, Act::Relu6] {
+                let (fused, defused) = act_pair(DType::F32, h, w, stride, act);
+                // Identical weight streams: same weight-tensor order/shapes.
+                let ws_f = WeightStore::seeded_f32(&fused, 11);
+                let ws_d = WeightStore::seeded_f32(&defused, 11);
+                let cfg = ExecConfig::with_capacity(1 << 20);
+                let a = Interpreter::new(&fused, ws_f, cfg.clone())
+                    .run(&[pair_input(h, w)])
+                    .unwrap();
+                let b = Interpreter::new(&defused, ws_d, cfg).run(&[pair_input(h, w)]).unwrap();
+                assert_eq!(
+                    a.outputs, b.outputs,
+                    "f32 {h}x{w} s{stride} {act:?}: de-fused graph diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn defused_activations_match_fused_i8_bit_exact() {
+        for (h, w, stride) in [(5, 7, 1), (9, 5, 2), (8, 8, 2)] {
+            for act in [Act::Relu, Act::Relu6] {
+                let (fused_f32, defused_f32) = act_pair(DType::F32, h, w, stride, act);
+                let (fused, defused) = act_pair(DType::I8, h, w, stride, act);
+                // Seed per structure: weight-tensor *ids* differ between
+                // the twins (extra act ops shift them) but the rng stream
+                // only advances on weight tensors, so the values coincide.
+                let ws_f32_f = WeightStore::seeded_f32(&fused_f32, 11);
+                let ws_f32_d = WeightStore::seeded_f32(&defused_f32, 11);
+                // Shared calibration ranges; the de-fused intermediate
+                // ("c"/"d"/"f") carries the same range as the fused output,
+                // and the act output ("c.act"…) shares it — the contract.
+                let mut ranges = HashMap::new();
+                for (name, lo, hi) in [
+                    ("x", -3.0f32, 3.0f32),
+                    ("c", -4.0, 4.0),
+                    ("c.act", -4.0, 4.0),
+                    ("d", -8.0, 8.0),
+                    ("d.act", -8.0, 8.0),
+                    ("gap", -8.0, 8.0),
+                    ("f", -6.0, 6.0),
+                    ("f.act", -6.0, 6.0),
+                ] {
+                    ranges.insert(name.to_string(), (lo, hi));
+                }
+                let ws_q_f = WeightStore::quantize_from(&fused, &ws_f32_f, &ranges);
+                let ws_q_d = WeightStore::quantize_from(&defused, &ws_f32_d, &ranges);
+                let in_q = ws_q_f.qparams[&fused.inputs[0]];
+                assert_eq!(in_q, ws_q_d.qparams[&defused.inputs[0]]);
+                let input = TensorData::I8(in_q.quantize(pair_input(h, w).as_f32().unwrap()));
+                let cfg = ExecConfig::with_capacity(1 << 20);
+                let a = Interpreter::new(&fused, ws_q_f, cfg.clone())
+                    .run(&[input.clone()])
+                    .unwrap();
+                let b = Interpreter::new(&defused, ws_q_d, cfg).run(&[input]).unwrap();
+                assert_eq!(
+                    a.outputs, b.outputs,
+                    "i8 {h}x{w} s{stride} {act:?}: de-fused graph diverged"
+                );
+            }
+        }
+    }
+
     #[test]
     fn tensordata_byte_roundtrip() {
         let f = TensorData::F32(vec![1.5, -2.25, 0.0]);

@@ -46,4 +46,5 @@ pub mod runtime;
 pub mod coordinator;
 pub mod sched;
 pub mod split;
+pub mod tflite;
 pub mod util;

@@ -29,6 +29,19 @@ COMMANDS:
   list                         List zoo models
   analyze   --model M          Working-set table + peaks + deploy verdict
             [--dtype i8|f32] [--order default|optimal|greedy|dfs] [--file F]
+  import    MODEL.tflite       Import a TensorFlow Lite flatbuffer: map its
+            [--json F]         subgraph onto the IR (de-fusing activations,
+                               per-tensor quantization), report memory peaks
+                               (file order vs reordered vs split/elided) and
+                               the static/dynamic allocation plans;
+                               optionally write the IR as model JSON for the
+                               rest of the toolchain
+  optimize  MODEL.tflite -o F  The paper's tool: embed the memory-optimal
+            [--budget B]       execution order into a real TFLite model
+                               (weight buffers byte-identical; reports
+                               reorder-only vs split vs elided peaks — the
+                               splits themselves are reported but cannot be
+                               expressed in the flatbuffer)
   optimize  --model M --out F  Embed the optimal execution order into a
             [--dtype i8|f32]   model JSON file (like tflite-tools)
   split     --model M          Partial execution: beam-search operator
@@ -80,8 +93,23 @@ fn parse_args(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
             } else if i + 1 < args.len() {
                 flags.insert(name.to_string(), args[i + 1].clone());
                 i += 1;
+            } else if matches!(name, "out" | "json" | "file" | "csv" | "weights") {
+                // A trailing path-valued flag must not silently write to
+                // (or read from) a file named "true"; record an empty
+                // path so the consumer rejects it loudly.
+                flags.insert(name.to_string(), String::new());
             } else {
                 flags.insert(name.to_string(), "true".to_string());
+            }
+        } else if a == "-o" {
+            // Short alias for --out (the tflite-tools convention). A
+            // trailing `-o` records an empty path so the consumer can
+            // reject it loudly instead of silently writing nothing.
+            if i + 1 < args.len() {
+                flags.insert("out".to_string(), args[i + 1].clone());
+                i += 1;
+            } else {
+                flags.insert("out".to_string(), String::new());
             }
         } else {
             pos.push(a.clone());
@@ -89,6 +117,23 @@ fn parse_args(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
         i += 1;
     }
     (pos, flags)
+}
+
+/// A path-valued flag; an explicitly empty value (a trailing flag with
+/// nothing after it) is a usage error, not a silent no-op.
+fn path_flag<'a>(
+    flags: &'a HashMap<String, String>,
+    name: &str,
+    usage: &str,
+) -> Result<Option<&'a str>> {
+    match flags.get(name).map(|s| s.as_str()) {
+        Some("") => Err(anyhow!("{usage} needs a path")),
+        other => Ok(other),
+    }
+}
+
+fn out_flag(flags: &HashMap<String, String>) -> Result<Option<&str>> {
+    path_flag(flags, "out", "-o/--out")
 }
 
 fn dtype_flag(flags: &HashMap<String, String>, default: DType) -> Result<DType> {
@@ -103,7 +148,14 @@ fn load_graph(
     flags: &HashMap<String, String>,
     default_dtype: DType,
 ) -> Result<(Graph, Option<Vec<usize>>)> {
-    if let Some(path) = flags.get("file") {
+    if let Some(path) = path_flag(flags, "file", "--file")? {
+        // Real TFLite flatbuffers load through the tflite frontend (the
+        // operator vector is the embedded execution order, so the graph's
+        // default order already reflects the file).
+        if is_tflite(path) {
+            let imp = mcu_reorder::tflite::load(path)?;
+            return Ok((imp.graph, None));
+        }
         let src = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
         let mf = ModelFile::from_json(&src).map_err(|e| anyhow!("{e}"))?;
         return Ok((mf.graph, mf.execution_order));
@@ -172,7 +224,7 @@ fn cmd_analyze(flags: &HashMap<String, String>) -> Result<()> {
         println!();
         print!("{}", trace.render_chart(&g, 48));
     }
-    if let Some(path) = flags.get("csv") {
+    if let Some(path) = path_flag(flags, "csv", "--csv")? {
         std::fs::write(path, trace.to_csv(&g)).with_context(|| format!("writing {path}"))?;
         println!("\nwrote memory trace to {path}");
     }
@@ -199,9 +251,158 @@ fn cmd_analyze(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
-fn cmd_optimize(flags: &HashMap<String, String>) -> Result<()> {
+/// Resolve the model path of a tflite-frontend command from the first
+/// positional argument or `--file`.
+fn tflite_path<'a>(
+    pos: &'a [String],
+    flags: &'a HashMap<String, String>,
+) -> Result<Option<&'a str>> {
+    if let Some(p) = pos.first() {
+        return Ok(Some(p.as_str()));
+    }
+    path_flag(flags, "file", "--file")
+}
+
+fn is_tflite(path: &str) -> bool {
+    path.ends_with(".tflite")
+}
+
+fn cmd_import(pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
+    let path = tflite_path(pos, flags)?
+        .ok_or_else(|| anyhow!("usage: mcu-reorder import MODEL.tflite [--json F]"))?;
+    let model = mcu_reorder::tflite::read_model(path)?;
+    let imp = mcu_reorder::tflite::import(&model).map_err(|e| anyhow!("{path}: {e}"))?;
+    let g = &imp.graph;
+    let n_w = g.tensors.iter().filter(|t| t.is_weight).count();
+    println!(
+        "imported {path}: {} ({} operators → {} ops after de-fusing, {} tensors / {} weights)",
+        g.name,
+        model.subgraph.operators.len(),
+        g.n_ops(),
+        g.n_tensors(),
+        n_w,
+    );
+    let dtype = g.inputs.first().map(|&t| g.tensors[t].dtype.name()).unwrap_or("?");
+    println!(
+        "dtype: {}   model size: {} B   activation total: {} B   MACs: {}",
+        dtype,
+        g.model_size(),
+        g.activation_total(),
+        g.total_macs()
+    );
+
+    let file_peak = sched::peak_of(g, &g.default_order());
+    let (opt, _) = sched::optimal(g).map_err(|e| anyhow!("{e}"))?;
+    let static_plan = mcu_reorder::alloc::StaticPlan::no_reuse(g);
+    println!();
+    println!("file-order peak       : {:>9} B", file_peak);
+    println!("reorder-only optimal  : {:>9} B", opt.peak_bytes);
+    println!("static no-reuse arena : {:>9} B", static_plan.arena_bytes);
+    let report = DeployReport::new(g, opt.peak_bytes, &NUCLEO_F767ZI, &OverheadModel::default());
+    println!(
+        "deploy ({:>14}): peak + overhead = {} B of {} B SRAM → {}",
+        report.board,
+        report.total_sram(),
+        NUCLEO_F767ZI.sram_bytes,
+        if report.fits_sram { "FITS" } else { "DOES NOT FIT" }
+    );
+    if let Some(json_path) = path_flag(flags, "json", "--json")? {
+        let mf = ModelFile::new(g.clone());
+        std::fs::write(json_path, mf.to_json()).with_context(|| format!("writing {json_path}"))?;
+        println!("wrote IR model JSON to {json_path}");
+    }
+    Ok(())
+}
+
+/// `optimize` on a real TFLite flatbuffer: report reorder-only vs split vs
+/// elided peaks and write the model back with the optimal operator order
+/// embedded (buffers byte-identical).
+fn cmd_optimize_tflite(path: &str, flags: &HashMap<String, String>) -> Result<()> {
+    let model = mcu_reorder::tflite::read_model(path)?;
+    let imp = mcu_reorder::tflite::import(&model).map_err(|e| anyhow!("{path}: {e}"))?;
+    let g = &imp.graph;
+    let budget: Option<usize> = flags
+        .get("budget")
+        .or_else(|| flags.get("sram-budget"))
+        .map(|s| s.parse())
+        .transpose()?;
+
+    let file_peak = sched::peak_of(g, &g.default_order());
+    let (opt, stats) = sched::optimal(g).map_err(|e| anyhow!("{e}"))?;
+    let split_opts = mcu_reorder::split::SplitOptions {
+        sram_budget: budget,
+        ..Default::default()
+    };
+    let mat = mcu_reorder::split::optimize(g, &split_opts.clone().materialized())
+        .map_err(|e| anyhow!("{e}"))?;
+    let elided = mcu_reorder::split::optimize(g, &split_opts).map_err(|e| anyhow!("{e}"))?;
+
+    println!("model: {} ({} ops de-fused)\n", g.name, g.n_ops());
+    let verdict = |peak: usize| match budget {
+        Some(b) if peak <= b => "  [budget MET]",
+        Some(_) => "  [budget NOT met]",
+        None => "",
+    };
+    println!("file-order peak       : {:>9} B{}", file_peak, verdict(file_peak));
+    println!(
+        "reorder-only optimal  : {:>9} B{}  ({} states, {} expansions)",
+        opt.peak_bytes,
+        verdict(opt.peak_bytes),
+        stats.states,
+        stats.expansions
+    );
+    println!(
+        "split+reorder         : {:>9} B{}  ({} segment(s))",
+        mat.schedule.peak_bytes,
+        verdict(mat.schedule.peak_bytes),
+        mat.steps.len()
+    );
+    println!(
+        "split+reorder, elided : {:>9} B{}  ({} segment(s), {} join(s) streamed)",
+        elided.schedule.peak_bytes,
+        verdict(elided.schedule.peak_bytes),
+        elided.steps.len(),
+        elided.elided_steps()
+    );
+    for st in &elided.steps {
+        println!(
+            "  split [{}] ×{} along {}{}: {} B → {} B",
+            st.segment.join(" → "),
+            st.factor,
+            st.axis.name(),
+            if st.elided { ", join elided" } else { "" },
+            st.peak_before,
+            st.peak_after
+        );
+    }
+    if !elided.steps.is_empty() {
+        println!(
+            "  (splits are reported for planning; the flatbuffer stores the reordered\n   \
+             model only — partial execution needs the interpreter/JSON pipeline)"
+        );
+    }
+
+    if let Some(out) = out_flag(flags)? {
+        let order = imp.operator_order(&opt.order);
+        let reordered =
+            mcu_reorder::tflite::reorder(&model, &order).map_err(|e| anyhow!("{e}"))?;
+        std::fs::write(out, reordered.serialize()).with_context(|| format!("writing {out}"))?;
+        println!(
+            "\nwrote {out}: operator order embedded, peak {} B → {} B (buffers byte-identical)",
+            file_peak, opt.peak_bytes
+        );
+    } else {
+        println!("\n(no -o/--out given: nothing written)");
+    }
+    Ok(())
+}
+
+fn cmd_optimize(pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
+    if let Some(path) = tflite_path(pos, flags)?.filter(|p| is_tflite(p)) {
+        return cmd_optimize_tflite(path, flags);
+    }
     let (g, _) = load_graph(flags, DType::I8)?;
-    let out = flags.get("out").ok_or_else(|| anyhow!("--out required"))?;
+    let out = out_flag(flags)?.ok_or_else(|| anyhow!("--out required"))?;
     let default_peak = sched::peak_of(&g, &g.default_order());
     let (opt, stats) = sched::optimal(&g).map_err(|e| anyhow!("{e}"))?;
     let mf = ModelFile { graph: g, execution_order: Some(opt.order.clone()) };
@@ -303,7 +504,7 @@ fn cmd_split(flags: &HashMap<String, String>) -> Result<()> {
             if outcome.schedule.peak_bytes <= b { "MET" } else { "NOT MET" }
         );
     }
-    if let Some(out) = flags.get("out") {
+    if let Some(out) = out_flag(flags)? {
         let mf = ModelFile {
             graph: outcome.graph,
             execution_order: Some(outcome.schedule.order.clone()),
@@ -316,8 +517,10 @@ fn cmd_split(flags: &HashMap<String, String>) -> Result<()> {
 
 fn cmd_export(flags: &HashMap<String, String>) -> Result<()> {
     let (g, _) = load_graph(flags, DType::F32)?;
-    let json_path = flags.get("json").ok_or_else(|| anyhow!("--json required"))?;
-    let weights_path = flags.get("weights").ok_or_else(|| anyhow!("--weights required"))?;
+    let json_path = path_flag(flags, "json", "--json")?
+        .ok_or_else(|| anyhow!("--json required"))?;
+    let weights_path = path_flag(flags, "weights", "--weights")?
+        .ok_or_else(|| anyhow!("--weights required"))?;
     let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(42);
 
     let mf = ModelFile::new(g.clone());
@@ -585,14 +788,15 @@ fn main() {
         std::process::exit(2);
     }
     let cmd = args[0].clone();
-    let (_pos, flags) = parse_args(&args[1..]);
+    let (pos, flags) = parse_args(&args[1..]);
     let result = match cmd.as_str() {
         "list" => {
             cmd_list();
             Ok(())
         }
         "analyze" => cmd_analyze(&flags),
-        "optimize" => cmd_optimize(&flags),
+        "import" => cmd_import(&pos, &flags),
+        "optimize" => cmd_optimize(&pos, &flags),
         "split" => cmd_split(&flags),
         "export" => cmd_export(&flags),
         "run" => cmd_run(&flags),

@@ -1,0 +1,112 @@
+//! TFLite exporter: write a model back with a new execution order.
+//!
+//! The paper's tool embeds the optimal operator order into the TFLite
+//! flatbuffer; in TFLite the subgraph's `operators` vector *is* the
+//! execution order, so exporting = permuting that vector and
+//! reserializing. Everything else — tensors, quantization, and above all
+//! the weight buffers — is written back from the parsed [`Model`]
+//! verbatim, so buffer payloads are byte-identical across the rewrite.
+
+use super::schema::Model;
+
+type Result<T> = std::result::Result<T, String>;
+
+/// A copy of `model` with its operators permuted into `operator_order`
+/// (indices into the original operator vector; must be a permutation).
+pub fn reorder(model: &Model, operator_order: &[usize]) -> Result<Model> {
+    let n = model.subgraph.operators.len();
+    let mut seen = vec![false; n];
+    if operator_order.len() != n {
+        return Err(format!(
+            "operator order has {} entries, model has {n} operators",
+            operator_order.len()
+        ));
+    }
+    for &i in operator_order {
+        if i >= n || seen[i] {
+            return Err(format!("operator order entry {i} repeated or out of range"));
+        }
+        seen[i] = true;
+    }
+    let mut out = model.clone();
+    out.subgraph.operators =
+        operator_order.iter().map(|&i| model.subgraph.operators[i].clone()).collect();
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::import::import;
+    use super::super::schema::Model;
+    use super::*;
+
+    fn fixture_model() -> Model {
+        // A 3-operator model (relu → relu → softmax over [1, 4]) built
+        // through the schema layer directly.
+        use super::super::schema::*;
+        let t = |name: &str| TensorDef {
+            shape: vec![1, 4],
+            ttype: tensor_type::FLOAT32,
+            buffer: 0,
+            name: name.into(),
+            quantization: Quantization::default(),
+        };
+        Model {
+            version: 3,
+            description: String::new(),
+            operator_codes: vec![
+                OperatorCode { builtin_code: builtin_op::RELU, version: 1 },
+                OperatorCode { builtin_code: builtin_op::SOFTMAX, version: 1 },
+            ],
+            buffers: vec![vec![]],
+            subgraph: SubGraphDef {
+                name: "m".into(),
+                tensors: vec![t("x"), t("a"), t("b"), t("y")],
+                inputs: vec![0],
+                outputs: vec![3],
+                operators: vec![
+                    OperatorDef {
+                        opcode_index: 0,
+                        inputs: vec![0],
+                        outputs: vec![1],
+                        options: BuiltinOptions::None,
+                    },
+                    OperatorDef {
+                        opcode_index: 0,
+                        inputs: vec![1],
+                        outputs: vec![2],
+                        options: BuiltinOptions::None,
+                    },
+                    OperatorDef {
+                        opcode_index: 1,
+                        inputs: vec![2],
+                        outputs: vec![3],
+                        options: BuiltinOptions::Softmax { beta: 1.0 },
+                    },
+                ],
+            },
+            metadata_buffer: vec![],
+            metadata: vec![],
+            signature_defs: vec![],
+        }
+    }
+
+    #[test]
+    fn reorder_permutes_and_preserves_buffers() {
+        let m = fixture_model();
+        let r = reorder(&m, &[0, 1, 2]).unwrap();
+        assert_eq!(r, m);
+        assert!(reorder(&m, &[0, 1]).is_err(), "short order rejected");
+        assert!(reorder(&m, &[0, 0, 1]).is_err(), "duplicate rejected");
+        assert!(reorder(&m, &[0, 1, 9]).is_err(), "out of range rejected");
+    }
+
+    #[test]
+    fn imported_binding_contracts_defused_ops() {
+        let m = fixture_model();
+        let imp = import(&m).unwrap();
+        assert_eq!(imp.graph.n_ops(), 3);
+        // Identity graph order → identity operator order.
+        assert_eq!(imp.operator_order(&[0, 1, 2]), vec![0, 1, 2]);
+    }
+}

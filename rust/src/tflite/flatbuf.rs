@@ -1,0 +1,599 @@
+//! Minimal flatbuffer wire-format reader/writer.
+//!
+//! Implements exactly the subset of the flatbuffers binary format the
+//! TFLite schema needs — tables with vtables, scalar fields, `uoffset`
+//! indirections, vectors (scalar and table), and strings — with no
+//! external crates, matching the in-tree `anyhow`/`json` precedent.
+//!
+//! The reader is fully bounds-checked and never panics on malformed or
+//! truncated input: every access returns `Err` with a position-stamped
+//! message, which the CLI surfaces as a clean nonzero exit. The writer
+//! builds buffers back-to-front (the canonical flatbuffers algorithm):
+//! objects are pushed into a reversed byte stack, alignment is tracked
+//! relative to the buffer end, and `finish` reverses the stack after
+//! prepending the root offset and file identifier.
+//!
+//! Wire format recap (little-endian throughout):
+//! - file: `u32` root table offset (from buffer start), optional 4-byte
+//!   file identifier at bytes 4..8;
+//! - table: `i32` soffset to its vtable (`vtable_pos = table_pos - soffset`),
+//!   then inline field data;
+//! - vtable: `u16` vtable size, `u16` table size, then one `u16` per field
+//!   slot holding the field's offset from the table start (0 = absent);
+//! - vector: `u32` element count, then elements; string: `u32` byte count,
+//!   bytes, NUL terminator;
+//! - reference fields store a `u32` offset from the field position to the
+//!   target object.
+
+/// Reader errors are strings with byte positions baked in; the schema
+/// layer wraps them with which table/field was being read.
+pub type Result<T> = std::result::Result<T, String>;
+
+// ---------------------------------------------------------------------------
+// reader
+// ---------------------------------------------------------------------------
+
+/// Bounds-checked view over a flatbuffer byte slice.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    fn bytes(&self, pos: usize, n: usize) -> Result<&'a [u8]> {
+        let end = pos
+            .checked_add(n)
+            .ok_or_else(|| format!("offset overflow at position {pos}"))?;
+        self.buf
+            .get(pos..end)
+            .ok_or_else(|| format!("truncated: need bytes {pos}..{end}, have {}", self.buf.len()))
+    }
+
+    pub fn u8(&self, pos: usize) -> Result<u8> {
+        Ok(self.bytes(pos, 1)?[0])
+    }
+
+    pub fn i8(&self, pos: usize) -> Result<i8> {
+        Ok(self.u8(pos)? as i8)
+    }
+
+    pub fn u16(&self, pos: usize) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.bytes(pos, 2)?.try_into().unwrap()))
+    }
+
+    pub fn u32(&self, pos: usize) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.bytes(pos, 4)?.try_into().unwrap()))
+    }
+
+    pub fn i32(&self, pos: usize) -> Result<i32> {
+        Ok(i32::from_le_bytes(self.bytes(pos, 4)?.try_into().unwrap()))
+    }
+
+    pub fn i64(&self, pos: usize) -> Result<i64> {
+        Ok(i64::from_le_bytes(self.bytes(pos, 8)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&self, pos: usize) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.bytes(pos, 4)?.try_into().unwrap()))
+    }
+
+    /// Position of the root table.
+    pub fn root(&self) -> Result<Table> {
+        let pos = self.u32(0)? as usize;
+        Table::at(self, pos)
+    }
+
+    /// The 4-byte file identifier, if the buffer is long enough to carry
+    /// one.
+    pub fn identifier(&self) -> Option<&'a [u8]> {
+        self.buf.get(4..8)
+    }
+
+    /// Follow a `uoffset` stored at `pos`.
+    fn indirect(&self, pos: usize) -> Result<usize> {
+        let off = self.u32(pos)? as usize;
+        if off == 0 {
+            return Err(format!("null forward offset at position {pos}"));
+        }
+        pos.checked_add(off)
+            .ok_or_else(|| format!("forward offset overflow at position {pos}"))
+    }
+
+    /// Vector at `pos`: returns (element base position, element count).
+    /// `elem_size` bounds-checks the payload up front so element reads
+    /// can't run past the buffer.
+    pub fn vector(&self, pos: usize, elem_size: usize) -> Result<(usize, usize)> {
+        let n = self.u32(pos)? as usize;
+        let base = pos + 4;
+        let total = n
+            .checked_mul(elem_size)
+            .ok_or_else(|| format!("vector length overflow at position {pos}"))?;
+        self.bytes(base, total)?;
+        Ok((base, n))
+    }
+
+    /// String at `pos` (u32 length + bytes; terminator not included).
+    pub fn string(&self, pos: usize) -> Result<String> {
+        let (base, n) = self.vector(pos, 1)?;
+        let bytes = self.bytes(base, n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| format!("non-UTF-8 string at {pos}"))
+    }
+}
+
+/// A table position plus its resolved vtable.
+#[derive(Clone, Copy, Debug)]
+pub struct Table {
+    pub pos: usize,
+    vtable: usize,
+    vtable_len: usize,
+}
+
+impl Table {
+    /// Resolve the table at `pos`, validating its vtable.
+    pub fn at(r: &Reader, pos: usize) -> Result<Table> {
+        let soffset = r.i32(pos)? as i64;
+        let vtable = (pos as i64)
+            .checked_sub(soffset)
+            .filter(|&v| v >= 0)
+            .ok_or_else(|| format!("table at {pos}: vtable offset out of range"))? as usize;
+        let vtable_len = r.u16(vtable)? as usize;
+        if vtable_len < 4 || vtable_len % 2 != 0 {
+            return Err(format!("table at {pos}: bad vtable size {vtable_len}"));
+        }
+        // Touch the last vtable byte so field lookups can't run out.
+        r.u16(vtable + vtable_len - 2)?;
+        Ok(Table { pos, vtable, vtable_len })
+    }
+
+    /// Position of field `id`'s inline data, or `None` if absent.
+    pub fn field(&self, r: &Reader, id: u16) -> Result<Option<usize>> {
+        let slot = 4 + 2 * id as usize;
+        if slot + 2 > self.vtable_len {
+            return Ok(None);
+        }
+        let off = r.u16(self.vtable + slot)? as usize;
+        if off == 0 {
+            return Ok(None);
+        }
+        Ok(Some(self.pos + off))
+    }
+
+    pub fn u8_field(&self, r: &Reader, id: u16, default: u8) -> Result<u8> {
+        match self.field(r, id)? {
+            Some(p) => r.u8(p),
+            None => Ok(default),
+        }
+    }
+
+    pub fn i8_field(&self, r: &Reader, id: u16, default: i8) -> Result<i8> {
+        match self.field(r, id)? {
+            Some(p) => r.i8(p),
+            None => Ok(default),
+        }
+    }
+
+    pub fn bool_field(&self, r: &Reader, id: u16, default: bool) -> Result<bool> {
+        Ok(self.u8_field(r, id, default as u8)? != 0)
+    }
+
+    pub fn i32_field(&self, r: &Reader, id: u16, default: i32) -> Result<i32> {
+        match self.field(r, id)? {
+            Some(p) => r.i32(p),
+            None => Ok(default),
+        }
+    }
+
+    pub fn u32_field(&self, r: &Reader, id: u16, default: u32) -> Result<u32> {
+        match self.field(r, id)? {
+            Some(p) => r.u32(p),
+            None => Ok(default),
+        }
+    }
+
+    pub fn f32_field(&self, r: &Reader, id: u16, default: f32) -> Result<f32> {
+        match self.field(r, id)? {
+            Some(p) => r.f32(p),
+            None => Ok(default),
+        }
+    }
+
+    /// Follow a reference field (table, vector or string target position).
+    pub fn offset_field(&self, r: &Reader, id: u16) -> Result<Option<usize>> {
+        match self.field(r, id)? {
+            Some(p) => Ok(Some(r.indirect(p)?)),
+            None => Ok(None),
+        }
+    }
+
+    pub fn table_field(&self, r: &Reader, id: u16) -> Result<Option<Table>> {
+        match self.offset_field(r, id)? {
+            Some(p) => Ok(Some(Table::at(r, p)?)),
+            None => Ok(None),
+        }
+    }
+
+    pub fn string_field(&self, r: &Reader, id: u16) -> Result<Option<String>> {
+        match self.offset_field(r, id)? {
+            Some(p) => Ok(Some(r.string(p)?)),
+            None => Ok(None),
+        }
+    }
+
+    /// Scalar vector field decoded with `get` per element.
+    fn scalar_vec<T>(
+        &self,
+        r: &Reader,
+        id: u16,
+        elem_size: usize,
+        get: impl Fn(&Reader, usize) -> Result<T>,
+    ) -> Result<Vec<T>> {
+        match self.offset_field(r, id)? {
+            None => Ok(Vec::new()),
+            Some(p) => {
+                let (base, n) = r.vector(p, elem_size)?;
+                (0..n).map(|i| get(r, base + i * elem_size)).collect()
+            }
+        }
+    }
+
+    pub fn i32_vec_field(&self, r: &Reader, id: u16) -> Result<Vec<i32>> {
+        self.scalar_vec(r, id, 4, |r, p| r.i32(p))
+    }
+
+    pub fn f32_vec_field(&self, r: &Reader, id: u16) -> Result<Vec<f32>> {
+        self.scalar_vec(r, id, 4, |r, p| r.f32(p))
+    }
+
+    pub fn i64_vec_field(&self, r: &Reader, id: u16) -> Result<Vec<i64>> {
+        self.scalar_vec(r, id, 8, |r, p| r.i64(p))
+    }
+
+    /// Byte-vector field, sliced in one go (buffer payloads can be
+    /// megabytes; `vector` has already bounds-checked the whole range).
+    pub fn bytes_field(&self, r: &Reader, id: u16) -> Result<Vec<u8>> {
+        match self.offset_field(r, id)? {
+            None => Ok(Vec::new()),
+            Some(p) => {
+                let (base, n) = r.vector(p, 1)?;
+                Ok(r.bytes(base, n)?.to_vec())
+            }
+        }
+    }
+
+    /// Vector-of-tables field: resolved element tables in order.
+    pub fn tables_field(&self, r: &Reader, id: u16) -> Result<Vec<Table>> {
+        match self.offset_field(r, id)? {
+            None => Ok(Vec::new()),
+            Some(p) => {
+                let (base, n) = r.vector(p, 4)?;
+                (0..n)
+                    .map(|i| Table::at(r, r.indirect(base + i * 4)?))
+                    .collect()
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// writer
+// ---------------------------------------------------------------------------
+
+/// End-offset of an object already written into the builder (distance
+/// from the final buffer end to the object's first byte).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WPos(usize);
+
+/// A present table field: id plus value. Absent fields are simply not
+/// listed (their vtable slot stays 0), which is how flatbuffers encodes
+/// defaults.
+#[derive(Clone, Copy, Debug)]
+pub enum FieldVal {
+    U8(u8),
+    I8(i8),
+    Bool(bool),
+    I32(i32),
+    U32(u32),
+    F32(f32),
+    /// Reference to an already-written object (table/vector/string).
+    Off(WPos),
+}
+
+/// Back-to-front flatbuffer builder.
+#[derive(Default)]
+pub struct Builder {
+    /// Reversed byte stack: `rev[0]` is the final buffer's last byte.
+    rev: Vec<u8>,
+    max_align: usize,
+}
+
+impl Builder {
+    pub fn new() -> Builder {
+        Builder { rev: Vec::with_capacity(1024), max_align: 1 }
+    }
+
+    /// Pad so that after writing `extra` more bytes the position is
+    /// `align`-aligned relative to the buffer end.
+    fn prep(&mut self, align: usize, extra: usize) {
+        self.max_align = self.max_align.max(align);
+        while (self.rev.len() + extra) % align != 0 {
+            self.rev.push(0);
+        }
+    }
+
+    /// Push bytes that must appear in `bytes` order in the final buffer.
+    fn push(&mut self, bytes: &[u8]) {
+        self.rev.extend(bytes.iter().rev());
+    }
+
+    fn push_u16(&mut self, v: u16) {
+        self.push(&v.to_le_bytes());
+    }
+
+    fn push_u32(&mut self, v: u32) {
+        self.push(&v.to_le_bytes());
+    }
+
+    /// Write a forward reference to `target` (4 bytes at the current
+    /// position).
+    fn push_uoffset(&mut self, target: WPos) {
+        debug_assert!(target.0 <= self.rev.len(), "forward reference to unwritten object");
+        let v = (self.rev.len() + 4 - target.0) as u32;
+        self.push_u32(v);
+    }
+
+    /// Byte vector (also used for buffer payloads).
+    pub fn byte_vector(&mut self, data: &[u8]) -> WPos {
+        self.prep(4, data.len() + 4);
+        self.push(data);
+        self.push_u32(data.len() as u32);
+        WPos(self.rev.len())
+    }
+
+    pub fn string(&mut self, s: &str) -> WPos {
+        self.prep(4, s.len() + 1 + 4);
+        self.rev.push(0); // NUL terminator (last byte of the string)
+        self.push(s.as_bytes());
+        self.push_u32(s.len() as u32);
+        WPos(self.rev.len())
+    }
+
+    pub fn i32_vector(&mut self, vals: &[i32]) -> WPos {
+        self.prep(4, vals.len() * 4 + 4);
+        for &v in vals.iter().rev() {
+            self.push(&v.to_le_bytes());
+        }
+        self.push_u32(vals.len() as u32);
+        WPos(self.rev.len())
+    }
+
+    pub fn f32_vector(&mut self, vals: &[f32]) -> WPos {
+        self.prep(4, vals.len() * 4 + 4);
+        for &v in vals.iter().rev() {
+            self.push(&v.to_le_bytes());
+        }
+        self.push_u32(vals.len() as u32);
+        WPos(self.rev.len())
+    }
+
+    pub fn i64_vector(&mut self, vals: &[i64]) -> WPos {
+        // Canonical two-step vector prep: the *elements* must be
+        // 8-aligned (and the buffer end 8-aligned overall), which puts
+        // the u32 length word at 4 mod 8 — exactly how flatbuffers lays
+        // out wide-element vectors.
+        self.prep(4, vals.len() * 8);
+        self.prep(8, vals.len() * 8);
+        for &v in vals.iter().rev() {
+            self.push(&v.to_le_bytes());
+        }
+        self.push_u32(vals.len() as u32);
+        WPos(self.rev.len())
+    }
+
+    /// Vector of references to already-written objects.
+    pub fn offset_vector(&mut self, targets: &[WPos]) -> WPos {
+        self.prep(4, targets.len() * 4 + 4);
+        for &t in targets.iter().rev() {
+            self.push_uoffset(t);
+        }
+        self.push_u32(targets.len() as u32);
+        WPos(self.rev.len())
+    }
+
+    /// Write a table from its present fields (any order; they are laid
+    /// out by descending field id so ids ascend in the file). Each table
+    /// gets its own vtable — no deduplication, slightly larger files but
+    /// identical semantics.
+    pub fn table(&mut self, fields: &[(u16, FieldVal)]) -> WPos {
+        let start = self.rev.len();
+        let mut sorted: Vec<&(u16, FieldVal)> = fields.iter().collect();
+        sorted.sort_by_key(|(id, _)| std::cmp::Reverse(*id));
+        let mut slots: Vec<(u16, usize)> = Vec::with_capacity(sorted.len());
+        for &&(id, val) in &sorted {
+            match val {
+                FieldVal::U8(v) => {
+                    self.prep(1, 0);
+                    self.rev.push(v);
+                }
+                FieldVal::I8(v) => {
+                    self.prep(1, 0);
+                    self.rev.push(v as u8);
+                }
+                FieldVal::Bool(v) => {
+                    self.prep(1, 0);
+                    self.rev.push(v as u8);
+                }
+                FieldVal::I32(v) => {
+                    self.prep(4, 0);
+                    self.push(&v.to_le_bytes());
+                }
+                FieldVal::U32(v) => {
+                    self.prep(4, 0);
+                    self.push_u32(v);
+                }
+                FieldVal::F32(v) => {
+                    self.prep(4, 0);
+                    self.push(&v.to_le_bytes());
+                }
+                FieldVal::Off(t) => {
+                    self.prep(4, 0);
+                    self.push_uoffset(t);
+                }
+            }
+            slots.push((id, self.rev.len()));
+        }
+        let n_slots = fields.iter().map(|&(id, _)| id as usize + 1).max().unwrap_or(0);
+        let vtable_len = 4 + 2 * n_slots;
+        // The vtable is emitted immediately before the table in the file,
+        // so the soffset is simply its size.
+        self.prep(4, 0);
+        self.push(&(vtable_len as i32).to_le_bytes());
+        let table_pos = self.rev.len();
+        let table_len = table_pos - start;
+        for id in (0..n_slots as u16).rev() {
+            let off = slots
+                .iter()
+                .find(|&(fid, _)| *fid == id)
+                .map(|&(_, fo)| (table_pos - fo) as u16)
+                .unwrap_or(0);
+            self.push_u16(off);
+        }
+        self.push_u16(table_len as u16);
+        self.push_u16(vtable_len as u16);
+        WPos(table_pos)
+    }
+
+    /// Finalize: prepend the root offset (and file identifier) and return
+    /// the buffer in file order.
+    pub fn finish(mut self, root: WPos, identifier: &[u8; 4]) -> Vec<u8> {
+        let align = self.max_align.max(4);
+        self.prep(align, 8);
+        self.push(identifier);
+        self.push_uoffset(root);
+        self.rev.reverse();
+        self.rev
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_table_roundtrip() {
+        let mut b = Builder::new();
+        let t = b.table(&[
+            (0, FieldVal::U32(7)),
+            (2, FieldVal::I32(-3)),
+            (3, FieldVal::U8(9)),
+            (5, FieldVal::F32(1.5)),
+        ]);
+        let buf = b.finish(t, b"TST0");
+        let r = Reader::new(&buf);
+        assert_eq!(r.identifier(), Some(&b"TST0"[..]));
+        let root = r.root().unwrap();
+        assert_eq!(root.u32_field(&r, 0, 0).unwrap(), 7);
+        assert_eq!(root.i32_field(&r, 1, 42).unwrap(), 42, "absent field → default");
+        assert_eq!(root.i32_field(&r, 2, 0).unwrap(), -3);
+        assert_eq!(root.u8_field(&r, 3, 0).unwrap(), 9);
+        assert_eq!(root.f32_field(&r, 5, 0.0).unwrap(), 1.5);
+        assert_eq!(root.field(&r, 99).unwrap(), None, "beyond vtable → absent");
+    }
+
+    #[test]
+    fn strings_vectors_and_nesting() {
+        let mut b = Builder::new();
+        let name = b.string("hello");
+        let shape = b.i32_vector(&[1, 8, 8, 3]);
+        let zps = b.i64_vector(&[-128]);
+        let payload = b.byte_vector(&[1, 2, 3, 4, 5]);
+        let inner = b.table(&[(0, FieldVal::Off(name)), (1, FieldVal::Off(shape))]);
+        let inners = b.offset_vector(&[inner, inner]);
+        let root = b.table(&[
+            (0, FieldVal::Off(inners)),
+            (1, FieldVal::Off(payload)),
+            (2, FieldVal::Off(zps)),
+        ]);
+        let buf = b.finish(root, b"TST0");
+
+        let r = Reader::new(&buf);
+        let root = r.root().unwrap();
+        let ts = root.tables_field(&r, 0).unwrap();
+        assert_eq!(ts.len(), 2);
+        for t in &ts {
+            assert_eq!(t.string_field(&r, 0).unwrap().as_deref(), Some("hello"));
+            assert_eq!(t.i32_vec_field(&r, 1).unwrap(), vec![1, 8, 8, 3]);
+        }
+        assert_eq!(root.bytes_field(&r, 1).unwrap(), vec![1, 2, 3, 4, 5]);
+        assert_eq!(root.i64_vec_field(&r, 2).unwrap(), vec![-128]);
+        assert_eq!(root.tables_field(&r, 7).unwrap().len(), 0, "absent vector → empty");
+    }
+
+    #[test]
+    fn alignment_of_every_scalar_access() {
+        // i64 vectors force 8-alignment of the whole buffer; make sure
+        // interior objects stay aligned after the final reversal.
+        let mut b = Builder::new();
+        let zps = b.i64_vector(&[1, 2, 3]);
+        let f = b.f32_vector(&[0.5]);
+        let t = b.table(&[(0, FieldVal::Off(zps)), (1, FieldVal::Off(f))]);
+        let buf = b.finish(t, b"TST0");
+        assert_eq!(buf.len() % 8, 0);
+        let r = Reader::new(&buf);
+        let root = r.root().unwrap();
+        let zp_pos = root.offset_field(&r, 0).unwrap().unwrap();
+        assert_eq!((zp_pos + 4) % 8, 0, "i64 elements must be 8-aligned");
+        assert_eq!(root.i64_vec_field(&r, 0).unwrap(), vec![1, 2, 3]);
+        assert_eq!(root.f32_vec_field(&r, 1).unwrap(), vec![0.5]);
+    }
+
+    #[test]
+    fn truncated_and_corrupt_buffers_error_cleanly() {
+        // Empty, tiny, and garbage buffers must all error, never panic.
+        for bad in [&[][..], &[1u8][..], &[255u8; 4][..], &[0u8; 16][..]] {
+            let r = Reader::new(bad);
+            assert!(r.root().is_err() || r.root().unwrap().field(&r, 0).is_err());
+        }
+        // A valid buffer truncated at every possible length errors cleanly.
+        let mut b = Builder::new();
+        let s = b.string("payload");
+        let v = b.i32_vector(&[1, 2, 3]);
+        let t = b.table(&[(0, FieldVal::Off(s)), (1, FieldVal::Off(v))]);
+        let buf = b.finish(t, b"TST0");
+        for cut in 0..buf.len() {
+            let r = Reader::new(&buf[..cut]);
+            // Any of these may fail; none may panic.
+            if let Ok(root) = r.root() {
+                let _ = root.string_field(&r, 0);
+                let _ = root.i32_vec_field(&r, 1);
+            }
+        }
+    }
+
+    #[test]
+    fn huge_vector_length_is_rejected() {
+        // A vector whose claimed length overflows or exceeds the buffer
+        // must be rejected up front.
+        let mut b = Builder::new();
+        let v = b.i32_vector(&[5]);
+        let t = b.table(&[(0, FieldVal::Off(v))]);
+        let mut buf = b.finish(t, b"TST0");
+        let r = Reader::new(&buf);
+        let root = r.root().unwrap();
+        let vec_pos = root.offset_field(&r, 0).unwrap().unwrap();
+        buf[vec_pos..vec_pos + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        let r = Reader::new(&buf);
+        let root = r.root().unwrap();
+        assert!(root.i32_vec_field(&r, 0).is_err());
+    }
+}

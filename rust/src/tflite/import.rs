@@ -1,0 +1,837 @@
+//! TFLite → `graph::Graph` importer.
+//!
+//! Maps the single subgraph of a parsed [`Model`] onto the in-memory IR:
+//! tensors become [`Tensor`]s (constants with non-empty buffers are
+//! Flash-resident weights), operators become [`Op`]s in file order (the
+//! TFLite operator vector *is* the execution order, so the imported
+//! graph's default order is the model's embedded schedule), and
+//! per-tensor affine quantization becomes [`QuantParams`] in the
+//! [`WeightStore`].
+//!
+//! **De-fusing contract.** TFLite fuses activations into the producing
+//! kernel (`Conv2D` with `fused_activation_function = RELU6`); the
+//! importer materializes them as explicit `Relu`/`Relu6` operators so the
+//! scheduler sees every tensor the de-fused graph would hold. The
+//! intermediate (pre-activation) tensor inherits the *output* tensor's
+//! quantization, which makes the two forms bit-identical on the int8
+//! path: the kernel requantizes into the output domain either way, and
+//! the clamp commutes with it (validated in `interp` tests and the
+//! `integration_tflite` golden tests).
+//!
+//! **Weight layouts.** TFLite stores conv filters OHWI
+//! (`[cout, kh, kw, cin]`) and fully-connected filters `[out, in]`; the
+//! IR and kernels use HWIO (`[kh, kw, cin, cout]`) and `[in, out]`. The
+//! importer transposes the *decoded copies* handed to the interpreter —
+//! the raw buffers in the [`Model`] are never touched, so the exporter
+//! writes them back byte-identically.
+
+use std::collections::HashMap;
+
+use super::schema::{
+    activation, builtin_op, padding, tensor_type, BuiltinOptions, Model, OperatorDef,
+};
+use crate::graph::{Act, DType, Graph, Op, OpKind, Padding, Tensor, TensorId};
+use crate::interp::quant::QuantParams;
+use crate::interp::{TensorData, WeightStore};
+
+type Result<T> = std::result::Result<T, String>;
+
+/// The result of an import: the IR graph, its weights + quantization, and
+/// the binding back to the flatbuffer needed to re-export a new order.
+#[derive(Clone, Debug)]
+pub struct Imported {
+    pub graph: Graph,
+    pub weights: WeightStore,
+    /// For each graph op: the index of the TFLite operator it was
+    /// imported from, or `None` for de-fused activation ops (which have
+    /// no operator of their own — they ride fused on their producer).
+    pub op_binding: Vec<Option<usize>>,
+}
+
+impl Imported {
+    /// Translate an execution order over *graph* ops into a permutation
+    /// of the TFLite operator vector. De-fused activation ops are
+    /// dropped: in the flatbuffer they execute fused inside their
+    /// producer, which the order places. Any topological order of the
+    /// de-fused graph contracts to a topological order of the fused one.
+    pub fn operator_order(&self, graph_order: &[usize]) -> Vec<usize> {
+        graph_order.iter().filter_map(|&op| self.op_binding[op]).collect()
+    }
+}
+
+fn dtype_of(ttype: i8) -> Result<DType> {
+    match ttype {
+        tensor_type::FLOAT32 => Ok(DType::F32),
+        tensor_type::INT32 => Ok(DType::I32),
+        tensor_type::UINT8 => Ok(DType::U8),
+        tensor_type::INT8 => Ok(DType::I8),
+        other => Err(format!("unsupported tensor type {other}")),
+    }
+}
+
+fn act_of(fused: i8) -> Result<Option<Act>> {
+    match fused {
+        activation::NONE => Ok(None),
+        activation::RELU => Ok(Some(Act::Relu)),
+        activation::RELU6 => Ok(Some(Act::Relu6)),
+        other => Err(format!("unsupported fused activation {other}")),
+    }
+}
+
+fn padding_of(p: i8) -> Result<Padding> {
+    match p {
+        padding::SAME => Ok(Padding::Same),
+        padding::VALID => Ok(Padding::Valid),
+        other => Err(format!("unsupported padding {other}")),
+    }
+}
+
+fn decode_buffer(dtype: DType, bytes: &[u8], what: &str) -> Result<TensorData> {
+    let esize = dtype.size();
+    if bytes.len() % esize != 0 {
+        return Err(format!(
+            "{what}: buffer of {} bytes is not a whole number of {} elements",
+            bytes.len(),
+            dtype.name()
+        ));
+    }
+    Ok(TensorData::from_bytes(dtype, bytes))
+}
+
+/// Importer working state.
+struct Importer<'m> {
+    model: &'m Model,
+    g: Graph,
+    ws: WeightStore,
+    op_binding: Vec<Option<usize>>,
+    /// Weight tensors already re-laid-out for the IR (guards against a
+    /// filter consumed by two operators being transposed twice).
+    relaid: HashMap<TensorId, &'static str>,
+    /// Tensor count of the flatbuffer subgraph. File indices are bounded
+    /// against this, not the live (growing) tensor list — a corrupt index
+    /// must never silently bind to a synthesized `.preact` tensor.
+    n_file_tensors: usize,
+}
+
+pub fn import(model: &Model) -> Result<Imported> {
+    let sg = &model.subgraph;
+    let mut g = Graph::new(if sg.name.is_empty() { "tflite" } else { sg.name.as_str() });
+
+    let mut ws = WeightStore::default();
+    for (i, t) in sg.tensors.iter().enumerate() {
+        let dtype = dtype_of(t.ttype).map_err(|e| format!("tensor {} ({}): {e}", i, t.name))?;
+        let shape: Vec<usize> = t
+            .shape
+            .iter()
+            .map(|&d| {
+                usize::try_from(d).map_err(|_| {
+                    format!("tensor {} ({}): dynamic/negative dim {d} unsupported", i, t.name)
+                })
+            })
+            .collect::<Result<_>>()?;
+        let data = model
+            .buffers
+            .get(t.buffer)
+            .ok_or_else(|| format!("tensor {} ({}): buffer {} out of range", i, t.name, t.buffer))?;
+        let is_weight = t.buffer != 0 && !data.is_empty();
+        let q = &t.quantization;
+        if !q.scale.is_empty() {
+            if q.scale.len() != 1 || q.zero_point.len() > 1 {
+                return Err(format!(
+                    "tensor {} ({}): per-channel quantization ({} scales) unsupported \
+                     (per-tensor only)",
+                    i,
+                    t.name,
+                    q.scale.len()
+                ));
+            }
+            let scale = q.scale[0];
+            if !(scale.is_finite() && scale > 0.0) {
+                return Err(format!("tensor {} ({}): bad quant scale {scale}", i, t.name));
+            }
+            let zp = q.zero_point.first().copied().unwrap_or(0);
+            let zp = i32::try_from(zp)
+                .map_err(|_| format!("tensor {} ({}): zero point {zp} out of range", i, t.name))?;
+            ws.qparams.insert(i, QuantParams::new(scale, zp));
+        } else if dtype == DType::I8 {
+            // An int8 tensor without affine parameters would make the
+            // interpreter fall back to scale 1.0 and silently compute in
+            // the wrong domain.
+            return Err(format!(
+                "tensor {} ({}): int8 tensor without quantization parameters",
+                i, t.name
+            ));
+        }
+        let elems: usize = shape.iter().product();
+        if is_weight {
+            let decoded = decode_buffer(dtype, data, &format!("tensor {} ({})", i, t.name))?;
+            if decoded.len() != elems {
+                return Err(format!(
+                    "tensor {} ({}): buffer holds {} elements, shape {:?} wants {}",
+                    i,
+                    t.name,
+                    decoded.len(),
+                    shape,
+                    elems
+                ));
+            }
+            ws.data.insert(i, decoded);
+        }
+        g.tensors.push(Tensor {
+            id: i,
+            name: if t.name.is_empty() { format!("t{i}") } else { t.name.clone() },
+            shape,
+            dtype,
+            producer: None,
+            consumers: Vec::new(),
+            is_weight,
+        });
+    }
+
+    let n_file_tensors = g.tensors.len();
+    let mut imp = Importer {
+        model,
+        g,
+        ws,
+        op_binding: Vec::new(),
+        relaid: HashMap::new(),
+        n_file_tensors,
+    };
+    for (oi, op) in sg.operators.iter().enumerate() {
+        imp.import_operator(oi, op)
+            .map_err(|e| format!("operator {oi} ({}): {e}", imp.opcode_name(op)))?;
+    }
+
+    for &t in &sg.inputs {
+        imp.g.inputs.push(imp.tensor_index(t, "subgraph input")?);
+    }
+    for &t in &sg.outputs {
+        imp.g.outputs.push(imp.tensor_index(t, "subgraph output")?);
+    }
+
+    imp.g.validate().map_err(|e| format!("imported graph invalid: {e}"))?;
+    imp.g
+        .check_order(&imp.g.default_order())
+        .map_err(|e| format!("operators are not topologically ordered: {e}"))?;
+    Ok(Imported { graph: imp.g, weights: imp.ws, op_binding: imp.op_binding })
+}
+
+impl Importer<'_> {
+    fn opcode_name(&self, op: &OperatorDef) -> String {
+        match self.model.operator_codes.get(op.opcode_index) {
+            Some(c) => builtin_op::name(c.builtin_code),
+            None => format!("bad opcode index {}", op.opcode_index),
+        }
+    }
+
+    fn tensor_index(&self, t: i32, what: &str) -> Result<TensorId> {
+        usize::try_from(t)
+            .ok()
+            .filter(|&i| i < self.n_file_tensors)
+            .ok_or_else(|| format!("{what}: tensor index {t} out of range"))
+    }
+
+    fn shape_of(&self, t: TensorId) -> &[usize] {
+        &self.g.tensors[t].shape
+    }
+
+    fn nhwc(&self, t: TensorId, what: &str) -> Result<(usize, usize, usize, usize)> {
+        let s = self.shape_of(t);
+        if s.len() != 4 {
+            return Err(format!("{what}: expected NHWC shape, got {s:?}"));
+        }
+        Ok((s[0], s[1], s[2], s[3]))
+    }
+
+    /// Domain-preserving kernels (standalone relu, max-pool, global mean,
+    /// reshape) write input-domain values unchanged; if the model declares
+    /// a different output quantization the interpreter would silently
+    /// produce values in the wrong domain — reject at import instead.
+    fn require_same_qparams(&self, x: TensorId, out: TensorId, what: &str) -> Result<()> {
+        match (self.ws.qparams.get(&x), self.ws.qparams.get(&out)) {
+            (Some(a), Some(b)) if a != b => Err(format!(
+                "{what}: output quantization (scale {}, zp {}) must equal the input's \
+                 (scale {}, zp {}) — this kernel is domain-preserving",
+                b.scale, b.zero_point, a.scale, a.zero_point
+            )),
+            _ => Ok(()),
+        }
+    }
+
+    fn require_weight(&self, t: TensorId, what: &str) -> Result<()> {
+        if !self.g.tensors[t].is_weight {
+            return Err(format!("{what}: tensor {} is not a constant", self.g.tensors[t].name));
+        }
+        Ok(())
+    }
+
+    /// Re-lay-out a filter tensor for the IR: `role` is `"conv"` (OHWI →
+    /// HWIO), `"dwconv"` (`[1,kh,kw,c]` → `[kh,kw,c]`, layout unchanged)
+    /// or `"dense"` (`[out,in]` → `[in,out]`).
+    fn relayout_filter(&mut self, t: TensorId, role: &'static str) -> Result<()> {
+        if let Some(&prev) = self.relaid.get(&t) {
+            if prev != role {
+                return Err(format!(
+                    "filter {} consumed both as {prev} and as {role}",
+                    self.g.tensors[t].name
+                ));
+            }
+            return Ok(());
+        }
+        let shape = self.g.tensors[t].shape.clone();
+        let name = self.g.tensors[t].name.clone();
+        match role {
+            "conv" => {
+                let [cout, kh, kw, cin]: [usize; 4] = shape
+                    .as_slice()
+                    .try_into()
+                    .map_err(|_| format!("filter {name}: expected OHWI shape, got {shape:?}"))?;
+                let data = self.ws.data.get(&t).ok_or("filter without data")?;
+                let new = match data {
+                    TensorData::F32(v) => TensorData::F32(transpose_ohwi(v, cout, kh, kw, cin)),
+                    TensorData::I8(v) => TensorData::I8(transpose_ohwi(v, cout, kh, kw, cin)),
+                    _ => return Err(format!("filter {name}: unsupported dtype")),
+                };
+                self.ws.data.insert(t, new);
+                self.g.tensors[t].shape = vec![kh, kw, cin, cout];
+            }
+            "dwconv" => {
+                let [one, kh, kw, c]: [usize; 4] = shape
+                    .as_slice()
+                    .try_into()
+                    .map_err(|_| format!("filter {name}: expected 1HWC shape, got {shape:?}"))?;
+                if one != 1 {
+                    return Err(format!("depthwise filter {name}: leading dim {one} != 1"));
+                }
+                self.g.tensors[t].shape = vec![kh, kw, c];
+            }
+            "dense" => {
+                let [out, inp]: [usize; 2] = shape
+                    .as_slice()
+                    .try_into()
+                    .map_err(|_| format!("filter {name}: expected [out,in] shape, got {shape:?}"))?;
+                let data = self.ws.data.get(&t).ok_or("filter without data")?;
+                let new = match data {
+                    TensorData::F32(v) => TensorData::F32(transpose_2d(v, out, inp)),
+                    TensorData::I8(v) => TensorData::I8(transpose_2d(v, out, inp)),
+                    _ => return Err(format!("filter {name}: unsupported dtype")),
+                };
+                self.ws.data.insert(t, new);
+                self.g.tensors[t].shape = vec![inp, out];
+            }
+            _ => unreachable!(),
+        }
+        self.relaid.insert(t, role);
+        Ok(())
+    }
+
+    /// Append an op producing `output`; links producer/consumer edges.
+    fn push_op(
+        &mut self,
+        name: String,
+        kind: OpKind,
+        inputs: Vec<TensorId>,
+        weights: Vec<TensorId>,
+        output: TensorId,
+        binding: Option<usize>,
+    ) -> Result<()> {
+        if self.g.tensors[output].producer.is_some() {
+            return Err(format!("tensor {} produced twice", self.g.tensors[output].name));
+        }
+        let id = self.g.ops.len();
+        self.g.tensors[output].producer = Some(id);
+        for &t in inputs.iter().chain(&weights) {
+            self.g.tensors[t].consumers.push(id);
+        }
+        self.g.ops.push(Op { id, name, kind, inputs, weights, output });
+        self.op_binding.push(binding);
+        Ok(())
+    }
+
+    /// Append `main_kind` for TFLite operator `oi`; when `fused` is an
+    /// activation, route the result through a fresh intermediate tensor
+    /// and a de-fused `Relu`/`Relu6` op (see module docs).
+    #[allow(clippy::too_many_arguments)]
+    fn push_with_act(
+        &mut self,
+        oi: usize,
+        main_kind: OpKind,
+        inputs: Vec<TensorId>,
+        weights: Vec<TensorId>,
+        output: TensorId,
+        fused: Option<Act>,
+    ) -> Result<()> {
+        let out_name = self.g.tensors[output].name.clone();
+        match fused {
+            None => self.push_op(out_name, main_kind, inputs, weights, output, Some(oi)),
+            Some(act) => {
+                // Pre-activation intermediate: same shape/dtype/qparams as
+                // the final output (the de-fusing contract).
+                let mid = self.g.tensors.len();
+                let (shape, dtype) =
+                    (self.g.tensors[output].shape.clone(), self.g.tensors[output].dtype);
+                self.g.tensors.push(Tensor {
+                    id: mid,
+                    name: format!("{out_name}.preact"),
+                    shape,
+                    dtype,
+                    producer: None,
+                    consumers: Vec::new(),
+                    is_weight: false,
+                });
+                if let Some(q) = self.ws.qparams.get(&output).copied() {
+                    self.ws.qparams.insert(mid, q);
+                }
+                let pre = format!("{out_name}.preact");
+                self.push_op(pre, main_kind, inputs, weights, mid, Some(oi))?;
+                let act_kind = match act {
+                    Act::Relu => OpKind::Relu,
+                    Act::Relu6 => OpKind::Relu6,
+                    Act::Linear => unreachable!(),
+                };
+                self.push_op(out_name, act_kind, vec![mid], vec![], output, None)
+            }
+        }
+    }
+
+    fn single_output(&self, op: &OperatorDef) -> Result<TensorId> {
+        if op.outputs.len() != 1 {
+            return Err(format!("expected 1 output, got {}", op.outputs.len()));
+        }
+        self.tensor_index(op.outputs[0], "output")
+    }
+
+    fn input_at(&self, op: &OperatorDef, i: usize, what: &str) -> Result<TensorId> {
+        let &idx = op
+            .inputs
+            .get(i)
+            .ok_or_else(|| format!("{what}: missing input {i}"))?;
+        if idx < 0 {
+            return Err(format!("{what}: optional input {i} absent (required here)"));
+        }
+        self.tensor_index(idx, what)
+    }
+
+    fn check_spatial(
+        &self,
+        input: TensorId,
+        output: TensorId,
+        kernel: (usize, usize),
+        stride: (usize, usize),
+        pad: Padding,
+        cout_expect: Option<usize>,
+    ) -> Result<()> {
+        let (_, ih, iw, _) = self.nhwc(input, "input")?;
+        let (_, oh, ow, oc) = self.nhwc(output, "output")?;
+        let dim = |i: usize, k: usize, s: usize| -> Result<usize> {
+            Ok(match pad {
+                Padding::Same => i.div_ceil(s),
+                Padding::Valid => {
+                    if i < k {
+                        return Err(format!("valid padding with input {i} < kernel {k}"));
+                    }
+                    (i - k) / s + 1
+                }
+            })
+        };
+        let (eh, ew) = (dim(ih, kernel.0, stride.0)?, dim(iw, kernel.1, stride.1)?);
+        if (oh, ow) != (eh, ew) {
+            return Err(format!(
+                "declared output {oh}x{ow} disagrees with computed {eh}x{ew}"
+            ));
+        }
+        if let Some(c) = cout_expect {
+            if oc != c {
+                return Err(format!("declared output channels {oc} != filter's {c}"));
+            }
+        }
+        Ok(())
+    }
+
+    #[allow(clippy::type_complexity)]
+    fn geom(
+        &self,
+        stride_w: i32,
+        stride_h: i32,
+        kh: usize,
+        kw: usize,
+    ) -> Result<((usize, usize), (usize, usize))> {
+        let sh = usize::try_from(stride_h).ok().filter(|&s| s > 0);
+        let sw = usize::try_from(stride_w).ok().filter(|&s| s > 0);
+        match (sh, sw, kh > 0 && kw > 0) {
+            (Some(sh), Some(sw), true) => Ok(((kh, kw), (sh, sw))),
+            _ => Err(format!("bad geometry: kernel {kh}x{kw}, stride {stride_h}x{stride_w}")),
+        }
+    }
+
+    fn import_operator(&mut self, oi: usize, op: &OperatorDef) -> Result<()> {
+        let code = self
+            .model
+            .operator_codes
+            .get(op.opcode_index)
+            .ok_or_else(|| format!("opcode index {} out of range", op.opcode_index))?
+            .builtin_code;
+        let output = self.single_output(op)?;
+        match code {
+            builtin_op::CONV_2D => {
+                let &BuiltinOptions::Conv2D { padding, stride_w, stride_h, fused_activation } =
+                    &op.options
+                else {
+                    return Err(format!("expected Conv2D options, got {:?}", op.options));
+                };
+                let x = self.input_at(op, 0, "conv input")?;
+                let w = self.input_at(op, 1, "conv filter")?;
+                let bias = self.input_at(op, 2, "conv bias")?;
+                self.require_weight(w, "conv filter")?;
+                self.require_weight(bias, "conv bias")?;
+                self.relayout_filter(w, "conv")?;
+                let ws = self.shape_of(w).to_vec(); // now HWIO
+                let (kernel, stride) = self.geom(stride_w, stride_h, ws[0], ws[1])?;
+                let pad = padding_of(padding)?;
+                let (_, _, _, cin) = self.nhwc(x, "conv input")?;
+                if ws[2] != cin {
+                    return Err(format!("filter expects {} input channels, input has {cin}", ws[2]));
+                }
+                self.check_spatial(x, output, kernel, stride, pad, Some(ws[3]))?;
+                let kind = OpKind::Conv2D { kernel, stride, padding: pad, act: Act::Linear };
+                let act = act_of(fused_activation)?;
+                self.push_with_act(oi, kind, vec![x], vec![w, bias], output, act)
+            }
+            builtin_op::DEPTHWISE_CONV_2D => {
+                let &BuiltinOptions::DepthwiseConv2D {
+                    padding,
+                    stride_w,
+                    stride_h,
+                    depth_multiplier,
+                    fused_activation,
+                } = &op.options
+                else {
+                    return Err(format!("expected DepthwiseConv2D options, got {:?}", op.options));
+                };
+                if depth_multiplier != 1 {
+                    return Err(format!("depth multiplier {depth_multiplier} unsupported (want 1)"));
+                }
+                let x = self.input_at(op, 0, "dwconv input")?;
+                let w = self.input_at(op, 1, "dwconv filter")?;
+                let bias = self.input_at(op, 2, "dwconv bias")?;
+                self.require_weight(w, "dwconv filter")?;
+                self.require_weight(bias, "dwconv bias")?;
+                self.relayout_filter(w, "dwconv")?;
+                let ws = self.shape_of(w).to_vec(); // now [kh, kw, c]
+                let (kernel, stride) = self.geom(stride_w, stride_h, ws[0], ws[1])?;
+                let pad = padding_of(padding)?;
+                let (_, _, _, cin) = self.nhwc(x, "dwconv input")?;
+                if ws[2] != cin {
+                    return Err(format!("filter has {} channels, input has {cin}", ws[2]));
+                }
+                self.check_spatial(x, output, kernel, stride, pad, Some(cin))?;
+                let kind =
+                    OpKind::DepthwiseConv2D { kernel, stride, padding: pad, act: Act::Linear };
+                let act = act_of(fused_activation)?;
+                self.push_with_act(oi, kind, vec![x], vec![w, bias], output, act)
+            }
+            builtin_op::FULLY_CONNECTED => {
+                let &BuiltinOptions::FullyConnected { fused_activation } = &op.options else {
+                    return Err(format!("expected FullyConnected options, got {:?}", op.options));
+                };
+                let x = self.input_at(op, 0, "dense input")?;
+                let w = self.input_at(op, 1, "dense filter")?;
+                let bias = self.input_at(op, 2, "dense bias")?;
+                self.require_weight(w, "dense filter")?;
+                self.require_weight(bias, "dense bias")?;
+                self.relayout_filter(w, "dense")?;
+                let ws = self.shape_of(w).to_vec(); // now [in, out]
+                let in_elems = self.g.tensors[x].elems();
+                if ws[0] != in_elems {
+                    return Err(format!(
+                        "filter expects {} input features, input has {in_elems}",
+                        ws[0]
+                    ));
+                }
+                let out_elems = self.g.tensors[output].elems();
+                if ws[1] != out_elems {
+                    return Err(format!(
+                        "filter yields {} features, output holds {out_elems}",
+                        ws[1]
+                    ));
+                }
+                let kind = OpKind::Dense { act: Act::Linear };
+                let act = act_of(fused_activation)?;
+                self.push_with_act(oi, kind, vec![x], vec![w, bias], output, act)
+            }
+            builtin_op::ADD => {
+                let &BuiltinOptions::Add { fused_activation } = &op.options else {
+                    return Err(format!("expected Add options, got {:?}", op.options));
+                };
+                let a = self.input_at(op, 0, "add lhs")?;
+                let bb = self.input_at(op, 1, "add rhs")?;
+                if self.shape_of(a) != self.shape_of(bb) {
+                    return Err("broadcasting Add unsupported (shapes must match)".into());
+                }
+                let act = act_of(fused_activation)?;
+                self.push_with_act(oi, OpKind::Add, vec![a, bb], vec![], output, act)
+            }
+            builtin_op::CONCATENATION => {
+                let &BuiltinOptions::Concatenation { axis, fused_activation } = &op.options else {
+                    return Err(format!("expected Concatenation options, got {:?}", op.options));
+                };
+                if op.inputs.len() < 2 {
+                    return Err("concatenation needs >= 2 inputs".into());
+                }
+                let parts: Vec<TensorId> = (0..op.inputs.len())
+                    .map(|i| self.input_at(op, i, "concat input"))
+                    .collect::<Result<_>>()?;
+                let rank = self.shape_of(parts[0]).len() as i32;
+                if axis != rank - 1 && axis != -1 {
+                    return Err(format!(
+                        "concatenation along axis {axis} unsupported (channel axis {} only)",
+                        rank - 1
+                    ));
+                }
+                let mut c_total = 0;
+                let leading = |s: &[usize]| s.split_last().map(|(_, l)| l.to_vec());
+                let lead = leading(self.shape_of(parts[0]));
+                for &p in &parts {
+                    let s = self.shape_of(p);
+                    if leading(s) != lead {
+                        return Err("concat inputs disagree on leading dims".into());
+                    }
+                    c_total += s.last().copied().unwrap_or(0);
+                }
+                if self.shape_of(output).last().copied().unwrap_or(0) != c_total {
+                    return Err("concat output channels != sum of inputs".into());
+                }
+                let act = act_of(fused_activation)?;
+                self.push_with_act(oi, OpKind::Concat, parts, vec![], output, act)
+            }
+            builtin_op::MAX_POOL_2D | builtin_op::AVERAGE_POOL_2D => {
+                let &BuiltinOptions::Pool2D {
+                    padding,
+                    stride_w,
+                    stride_h,
+                    filter_width,
+                    filter_height,
+                    fused_activation,
+                } = &op.options
+                else {
+                    return Err(format!("expected Pool2D options, got {:?}", op.options));
+                };
+                let x = self.input_at(op, 0, "pool input")?;
+                let kh = usize::try_from(filter_height).map_err(|_| "bad filter height")?;
+                let kw = usize::try_from(filter_width).map_err(|_| "bad filter width")?;
+                let (kernel, stride) = self.geom(stride_w, stride_h, kh, kw)?;
+                let pad = padding_of(padding)?;
+                self.check_spatial(x, output, kernel, stride, pad, None)?;
+                let kind = if code == builtin_op::MAX_POOL_2D {
+                    self.require_same_qparams(x, output, "max pool")?;
+                    OpKind::MaxPool2D { kernel, stride, padding: pad }
+                } else {
+                    if self.g.tensors[output].dtype == DType::I8 {
+                        return Err(
+                            "int8 average pool unsupported (the i8 interpreter has no kernel)"
+                                .into(),
+                        );
+                    }
+                    OpKind::AvgPool2D { kernel, stride, padding: pad }
+                };
+                let act = act_of(fused_activation)?;
+                self.push_with_act(oi, kind, vec![x], vec![], output, act)
+            }
+            builtin_op::MEAN => {
+                let x = self.input_at(op, 0, "mean input")?;
+                let axes_t = self.input_at(op, 1, "mean axes")?;
+                self.require_weight(axes_t, "mean axes")?;
+                let axes = match self.ws.data.get(&axes_t) {
+                    Some(TensorData::I32(v)) => {
+                        let mut a = v.clone();
+                        a.sort_unstable();
+                        a
+                    }
+                    _ => return Err("mean axes must be an i32 constant".into()),
+                };
+                if axes != [1, 2] {
+                    return Err(format!(
+                        "mean over axes {axes:?} unsupported (global spatial mean [1,2] only)"
+                    ));
+                }
+                let (_, _, _, c) = self.nhwc(x, "mean input")?;
+                if self.g.tensors[output].elems() != c {
+                    return Err("mean output must hold one value per channel".into());
+                }
+                self.require_same_qparams(x, output, "mean")?;
+                self.push_op(
+                    self.g.tensors[output].name.clone(),
+                    OpKind::GlobalAvgPool,
+                    vec![x],
+                    vec![],
+                    output,
+                    Some(oi),
+                )
+            }
+            builtin_op::RELU | builtin_op::RELU6 => {
+                let x = self.input_at(op, 0, "relu input")?;
+                self.require_same_qparams(x, output, "relu")?;
+                let kind = if code == builtin_op::RELU { OpKind::Relu } else { OpKind::Relu6 };
+                let name = self.g.tensors[output].name.clone();
+                self.push_op(name, kind, vec![x], vec![], output, Some(oi))
+            }
+            builtin_op::SOFTMAX => {
+                let &BuiltinOptions::Softmax { beta } = &op.options else {
+                    return Err(format!("expected Softmax options, got {:?}", op.options));
+                };
+                if beta != 1.0 {
+                    return Err(format!("softmax beta {beta} unsupported (want 1.0)"));
+                }
+                let x = self.input_at(op, 0, "softmax input")?;
+                // The i8 kernel writes the conventional domain regardless
+                // of what the tensor declares — reject a mismatch rather
+                // than compute values in a silently wrong domain.
+                if let Some(q) = self.ws.qparams.get(&output) {
+                    if (q.scale, q.zero_point) != (1.0 / 256.0, -128) {
+                        return Err(format!(
+                            "softmax output quantization (scale {}, zp {}) unsupported \
+                             (the i8 kernel writes scale 1/256, zp -128)",
+                            q.scale, q.zero_point
+                        ));
+                    }
+                }
+                self.push_op(
+                    self.g.tensors[output].name.clone(),
+                    OpKind::Softmax,
+                    vec![x],
+                    vec![],
+                    output,
+                    Some(oi),
+                )
+            }
+            builtin_op::RESHAPE => {
+                let x = self.input_at(op, 0, "reshape input")?;
+                // The optional second input (the shape as a const tensor)
+                // stays an unreferenced constant; the output tensor's
+                // declared shape is authoritative.
+                if self.g.tensors[x].elems() != self.g.tensors[output].elems() {
+                    return Err("reshape changes element count".into());
+                }
+                self.require_same_qparams(x, output, "reshape")?;
+                self.push_op(
+                    self.g.tensors[output].name.clone(),
+                    OpKind::Reshape,
+                    vec![x],
+                    vec![],
+                    output,
+                    Some(oi),
+                )
+            }
+            other => Err(format!("unsupported builtin operator {}", builtin_op::name(other))),
+        }
+    }
+}
+
+/// OHWI `[cout, kh, kw, cin]` → HWIO `[kh, kw, cin, cout]`.
+fn transpose_ohwi<T: Copy + Default>(
+    v: &[T],
+    cout: usize,
+    kh: usize,
+    kw: usize,
+    cin: usize,
+) -> Vec<T> {
+    let mut out = vec![T::default(); v.len()];
+    for oc in 0..cout {
+        for y in 0..kh {
+            for x in 0..kw {
+                for ic in 0..cin {
+                    out[((y * kw + x) * cin + ic) * cout + oc] =
+                        v[((oc * kh + y) * kw + x) * cin + ic];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// `[rows, cols]` → `[cols, rows]`.
+fn transpose_2d<T: Copy + Default>(v: &[T], rows: usize, cols: usize) -> Vec<T> {
+    let mut out = vec![T::default(); v.len()];
+    for r in 0..rows {
+        for c in 0..cols {
+            out[c * rows + r] = v[r * cols + c];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    use super::super::schema::{
+        builtin_op, tensor_type, BuiltinOptions, Model, OperatorCode, OperatorDef, Quantization,
+        SubGraphDef, TensorDef,
+    };
+
+    /// Tiny int8 `x → relu → y` model with chosen output scale.
+    fn relu_model(out_scale: f32) -> Model {
+        let t = |name: &str, scale: f32| TensorDef {
+            shape: vec![1, 4],
+            ttype: tensor_type::INT8,
+            buffer: 0,
+            name: name.into(),
+            quantization: Quantization {
+                scale: vec![scale],
+                zero_point: vec![0],
+                ..Default::default()
+            },
+        };
+        Model {
+            version: 3,
+            description: String::new(),
+            operator_codes: vec![OperatorCode { builtin_code: builtin_op::RELU, version: 1 }],
+            buffers: vec![vec![]],
+            subgraph: SubGraphDef {
+                name: "m".into(),
+                tensors: vec![t("x", 0.5), t("y", out_scale)],
+                inputs: vec![0],
+                outputs: vec![1],
+                operators: vec![OperatorDef {
+                    opcode_index: 0,
+                    inputs: vec![0],
+                    outputs: vec![1],
+                    options: BuiltinOptions::None,
+                }],
+            },
+            metadata_buffer: vec![],
+            metadata: vec![],
+            signature_defs: vec![],
+        }
+    }
+
+    #[test]
+    fn rejects_domain_preserving_qparams_mismatch() {
+        let err = import(&relu_model(0.25)).unwrap_err();
+        assert!(err.contains("domain-preserving"), "unexpected error: {err}");
+        import(&relu_model(0.5)).expect("matching domains import fine");
+    }
+
+    #[test]
+    fn rejects_out_of_range_tensor_indices() {
+        // Indices are bounded by the *file's* tensor count, never by the
+        // live list that grows with synthesized .preact tensors.
+        let mut m = relu_model(0.5);
+        m.subgraph.outputs = vec![2];
+        let err = import(&m).unwrap_err();
+        assert!(err.contains("out of range"), "unexpected error: {err}");
+        let mut m = relu_model(0.5);
+        m.subgraph.operators[0].inputs = vec![-2];
+        assert!(import(&m).is_err());
+    }
+
+    #[test]
+    fn transposes_are_inverses_of_layout() {
+        // OHWI [2,1,1,3]: filter f[oc][ic]; HWIO index [ic*cout + oc].
+        let ohwi = vec![10, 11, 12, 20, 21, 22];
+        let hwio = transpose_ohwi(&ohwi, 2, 1, 1, 3);
+        assert_eq!(hwio, vec![10, 20, 11, 21, 12, 22]);
+        let t = transpose_2d(&[1, 2, 3, 4, 5, 6], 2, 3);
+        assert_eq!(t, vec![1, 4, 2, 5, 3, 6]);
+    }
+}

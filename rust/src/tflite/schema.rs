@@ -1,0 +1,789 @@
+//! TFLite schema bindings (the subset this repo covers).
+//!
+//! Mirrors `schema.fbs` v3 for the tables the importer/exporter touch:
+//! `Model`, `OperatorCode`, `SubGraph`, `Tensor`, `QuantizationParameters`,
+//! `Operator`, `Buffer`, and the builtin-options tables of the supported
+//! operators. Parsing materializes an owned [`Model`] (buffers are kept as
+//! raw bytes so the exporter can write them back byte-identically);
+//! serialization is deterministic, so export → import → export is
+//! byte-stable.
+
+use super::flatbuf::{Builder, FieldVal, Reader, Result, Table, WPos};
+
+/// `TensorType` enum values (schema.fbs).
+pub mod tensor_type {
+    pub const FLOAT32: i8 = 0;
+    pub const INT32: i8 = 2;
+    pub const UINT8: i8 = 3;
+    pub const INT64: i8 = 4;
+    pub const INT8: i8 = 9;
+}
+
+/// `BuiltinOperator` codes for the supported subset.
+pub mod builtin_op {
+    pub const ADD: i32 = 0;
+    pub const AVERAGE_POOL_2D: i32 = 1;
+    pub const CONCATENATION: i32 = 2;
+    pub const CONV_2D: i32 = 3;
+    pub const DEPTHWISE_CONV_2D: i32 = 4;
+    pub const FULLY_CONNECTED: i32 = 9;
+    pub const MAX_POOL_2D: i32 = 17;
+    pub const RELU: i32 = 19;
+    pub const RELU6: i32 = 21;
+    pub const RESHAPE: i32 = 22;
+    pub const SOFTMAX: i32 = 25;
+    pub const MEAN: i32 = 40;
+
+    pub fn name(code: i32) -> String {
+        match code {
+            ADD => "ADD".into(),
+            AVERAGE_POOL_2D => "AVERAGE_POOL_2D".into(),
+            CONCATENATION => "CONCATENATION".into(),
+            CONV_2D => "CONV_2D".into(),
+            DEPTHWISE_CONV_2D => "DEPTHWISE_CONV_2D".into(),
+            FULLY_CONNECTED => "FULLY_CONNECTED".into(),
+            MAX_POOL_2D => "MAX_POOL_2D".into(),
+            RELU => "RELU".into(),
+            RELU6 => "RELU6".into(),
+            RESHAPE => "RESHAPE".into(),
+            SOFTMAX => "SOFTMAX".into(),
+            MEAN => "MEAN".into(),
+            other => format!("builtin op {other}"),
+        }
+    }
+}
+
+/// `ActivationFunctionType` enum values.
+pub mod activation {
+    pub const NONE: i8 = 0;
+    pub const RELU: i8 = 1;
+    pub const RELU6: i8 = 3;
+}
+
+/// `Padding` enum values.
+pub mod padding {
+    pub const SAME: i8 = 0;
+    pub const VALID: i8 = 1;
+}
+
+/// `BuiltinOptions` union type values for the supported subset.
+pub mod options_type {
+    pub const NONE: u8 = 0;
+    pub const CONV_2D: u8 = 1;
+    pub const DEPTHWISE_CONV_2D: u8 = 2;
+    pub const POOL_2D: u8 = 5;
+    pub const FULLY_CONNECTED: u8 = 8;
+    pub const SOFTMAX: u8 = 9;
+    pub const CONCATENATION: u8 = 10;
+    pub const ADD: u8 = 11;
+    pub const RESHAPE: u8 = 17;
+    pub const REDUCER: u8 = 27;
+}
+
+/// Builtin options of a supported operator, decoded into plain fields.
+#[derive(Clone, Debug, PartialEq)]
+pub enum BuiltinOptions {
+    None,
+    Conv2D { padding: i8, stride_w: i32, stride_h: i32, fused_activation: i8 },
+    DepthwiseConv2D {
+        padding: i8,
+        stride_w: i32,
+        stride_h: i32,
+        depth_multiplier: i32,
+        fused_activation: i8,
+    },
+    Pool2D {
+        padding: i8,
+        stride_w: i32,
+        stride_h: i32,
+        filter_width: i32,
+        filter_height: i32,
+        fused_activation: i8,
+    },
+    FullyConnected { fused_activation: i8 },
+    Softmax { beta: f32 },
+    Concatenation { axis: i32, fused_activation: i8 },
+    Add { fused_activation: i8 },
+    Reshape { new_shape: Vec<i32> },
+    Reducer { keep_dims: bool },
+}
+
+/// `QuantizationParameters` (per-tensor affine; `scale`/`zero_point` may
+/// carry one entry per channel for per-channel-quantized weights, which
+/// the importer rejects with a clear message).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Quantization {
+    pub min: Vec<f32>,
+    pub max: Vec<f32>,
+    pub scale: Vec<f32>,
+    pub zero_point: Vec<i64>,
+    pub quantized_dimension: i32,
+}
+
+impl Quantization {
+    pub fn is_empty(&self) -> bool {
+        self.min.is_empty()
+            && self.max.is_empty()
+            && self.scale.is_empty()
+            && self.zero_point.is_empty()
+    }
+}
+
+/// `Tensor` table.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorDef {
+    pub shape: Vec<i32>,
+    pub ttype: i8,
+    pub buffer: usize,
+    pub name: String,
+    pub quantization: Quantization,
+}
+
+/// `Operator` table.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OperatorDef {
+    pub opcode_index: usize,
+    /// Tensor indices; `-1` marks an optional input that is absent.
+    pub inputs: Vec<i32>,
+    pub outputs: Vec<i32>,
+    pub options: BuiltinOptions,
+}
+
+/// `OperatorCode` table. Readers take the max of the deprecated i8 code
+/// and the extended i32 field (schema evolution for codes > 127).
+#[derive(Clone, Debug, PartialEq)]
+pub struct OperatorCode {
+    pub builtin_code: i32,
+    pub version: i32,
+}
+
+/// `SubGraph` table.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SubGraphDef {
+    pub name: String,
+    pub tensors: Vec<TensorDef>,
+    pub inputs: Vec<i32>,
+    pub outputs: Vec<i32>,
+    pub operators: Vec<OperatorDef>,
+}
+
+/// `Metadata` table entry (e.g. `min_runtime_version`); the payload lives
+/// in `buffers`, which the exporter preserves verbatim.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MetadataDef {
+    pub name: String,
+    pub buffer: usize,
+}
+
+/// `TensorMap` entry of a `SignatureDef`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TensorMap {
+    pub name: String,
+    pub tensor_index: u32,
+}
+
+/// `SignatureDef` table. Reordering operators never renumbers tensors,
+/// so signatures survive an export unchanged.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SignatureDef {
+    pub inputs: Vec<TensorMap>,
+    pub outputs: Vec<TensorMap>,
+    pub signature_key: String,
+    pub subgraph_index: u32,
+}
+
+/// Owned `Model`: everything needed to rewrite the file. Buffer payloads
+/// are raw bytes, preserved verbatim across import → export; metadata and
+/// signature defs are carried through so a converter-produced model keeps
+/// its runtime-version stamp and signature runners after `optimize`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Model {
+    pub version: u32,
+    pub description: String,
+    pub operator_codes: Vec<OperatorCode>,
+    pub buffers: Vec<Vec<u8>>,
+    pub subgraph: SubGraphDef,
+    pub metadata_buffer: Vec<i32>,
+    pub metadata: Vec<MetadataDef>,
+    pub signature_defs: Vec<SignatureDef>,
+}
+
+pub const FILE_IDENTIFIER: &[u8; 4] = b"TFL3";
+
+// ---------------------------------------------------------------------------
+// parse
+// ---------------------------------------------------------------------------
+
+fn parse_quantization(r: &Reader, t: Option<Table>) -> Result<Quantization> {
+    let Some(t) = t else { return Ok(Quantization::default()) };
+    Ok(Quantization {
+        min: t.f32_vec_field(r, 0)?,
+        max: t.f32_vec_field(r, 1)?,
+        scale: t.f32_vec_field(r, 2)?,
+        zero_point: t.i64_vec_field(r, 3)?,
+        quantized_dimension: t.i32_field(r, 6, 0)?,
+    })
+}
+
+fn parse_tensor(r: &Reader, t: Table) -> Result<TensorDef> {
+    Ok(TensorDef {
+        shape: t.i32_vec_field(r, 0)?,
+        ttype: t.i8_field(r, 1, 0)?,
+        buffer: t.u32_field(r, 2, 0)? as usize,
+        name: t.string_field(r, 3)?.unwrap_or_default(),
+        quantization: parse_quantization(r, t.table_field(r, 4)?)?,
+    })
+}
+
+fn parse_options(r: &Reader, op: Table) -> Result<BuiltinOptions> {
+    let ty = op.u8_field(r, 3, options_type::NONE)?;
+    let t = op.table_field(r, 4)?;
+    let need = |what: &str| -> Result<Table> {
+        t.ok_or_else(|| format!("operator declares {what} options but carries none"))
+    };
+    Ok(match ty {
+        options_type::NONE => BuiltinOptions::None,
+        options_type::CONV_2D => {
+            let t = need("Conv2D")?;
+            // Dilation (fields 4/5, default 1) is outside the supported
+            // subset; silently dropping it would import a model that
+            // computes different values.
+            let (dw, dh) = (t.i32_field(r, 4, 1)?, t.i32_field(r, 5, 1)?);
+            if (dw, dh) != (1, 1) {
+                return Err(format!("dilated convolution ({dh}x{dw}) unsupported"));
+            }
+            BuiltinOptions::Conv2D {
+                padding: t.i8_field(r, 0, 0)?,
+                stride_w: t.i32_field(r, 1, 0)?,
+                stride_h: t.i32_field(r, 2, 0)?,
+                fused_activation: t.i8_field(r, 3, 0)?,
+            }
+        }
+        options_type::DEPTHWISE_CONV_2D => {
+            let t = need("DepthwiseConv2D")?;
+            let (dw, dh) = (t.i32_field(r, 5, 1)?, t.i32_field(r, 6, 1)?);
+            if (dw, dh) != (1, 1) {
+                return Err(format!("dilated depthwise convolution ({dh}x{dw}) unsupported"));
+            }
+            BuiltinOptions::DepthwiseConv2D {
+                padding: t.i8_field(r, 0, 0)?,
+                stride_w: t.i32_field(r, 1, 0)?,
+                stride_h: t.i32_field(r, 2, 0)?,
+                depth_multiplier: t.i32_field(r, 3, 0)?,
+                fused_activation: t.i8_field(r, 4, 0)?,
+            }
+        }
+        options_type::POOL_2D => {
+            let t = need("Pool2D")?;
+            BuiltinOptions::Pool2D {
+                padding: t.i8_field(r, 0, 0)?,
+                stride_w: t.i32_field(r, 1, 0)?,
+                stride_h: t.i32_field(r, 2, 0)?,
+                filter_width: t.i32_field(r, 3, 0)?,
+                filter_height: t.i32_field(r, 4, 0)?,
+                fused_activation: t.i8_field(r, 5, 0)?,
+            }
+        }
+        options_type::FULLY_CONNECTED => {
+            let t = need("FullyConnected")?;
+            // weights_format (field 1): 0 = DEFAULT row-major [out, in];
+            // SHUFFLED4x16INT8 would be silently misread as row-major.
+            let wf = t.i8_field(r, 1, 0)?;
+            if wf != 0 {
+                return Err(format!("fully-connected weights format {wf} unsupported"));
+            }
+            BuiltinOptions::FullyConnected { fused_activation: t.i8_field(r, 0, 0)? }
+        }
+        options_type::SOFTMAX => {
+            let t = need("Softmax")?;
+            BuiltinOptions::Softmax { beta: t.f32_field(r, 0, 0.0)? }
+        }
+        options_type::CONCATENATION => {
+            let t = need("Concatenation")?;
+            BuiltinOptions::Concatenation {
+                axis: t.i32_field(r, 0, 0)?,
+                fused_activation: t.i8_field(r, 1, 0)?,
+            }
+        }
+        options_type::ADD => {
+            let t = need("Add")?;
+            BuiltinOptions::Add { fused_activation: t.i8_field(r, 0, 0)? }
+        }
+        options_type::RESHAPE => {
+            let t = need("Reshape")?;
+            BuiltinOptions::Reshape { new_shape: t.i32_vec_field(r, 0)? }
+        }
+        options_type::REDUCER => {
+            let t = need("Reducer")?;
+            BuiltinOptions::Reducer { keep_dims: t.bool_field(r, 0, false)? }
+        }
+        other => return Err(format!("unsupported builtin options type {other}")),
+    })
+}
+
+fn parse_operator(r: &Reader, t: Table) -> Result<OperatorDef> {
+    Ok(OperatorDef {
+        opcode_index: t.u32_field(r, 0, 0)? as usize,
+        inputs: t.i32_vec_field(r, 1)?,
+        outputs: t.i32_vec_field(r, 2)?,
+        options: parse_options(r, t)?,
+    })
+}
+
+fn parse_subgraph(r: &Reader, t: Table) -> Result<SubGraphDef> {
+    let tensors = t
+        .tables_field(r, 0)?
+        .into_iter()
+        .map(|tt| parse_tensor(r, tt))
+        .collect::<Result<Vec<_>>>()?;
+    let operators = t
+        .tables_field(r, 3)?
+        .into_iter()
+        .map(|ot| parse_operator(r, ot))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(SubGraphDef {
+        name: t.string_field(r, 4)?.unwrap_or_default(),
+        tensors,
+        inputs: t.i32_vec_field(r, 1)?,
+        outputs: t.i32_vec_field(r, 2)?,
+        operators,
+    })
+}
+
+impl Model {
+    /// Parse a `.tflite` flatbuffer. Errors (never panics) on anything
+    /// malformed, truncated, or outside the supported subset.
+    pub fn parse(buf: &[u8]) -> Result<Model> {
+        let r = Reader::new(buf);
+        if r.len() < 8 {
+            return Err(format!("not a TFLite flatbuffer: {} bytes", r.len()));
+        }
+        if r.identifier() != Some(&FILE_IDENTIFIER[..]) {
+            return Err("missing TFL3 file identifier".into());
+        }
+        let root = r.root()?;
+        let version = root.u32_field(&r, 0, 0)?;
+        if version != 3 {
+            return Err(format!("unsupported TFLite schema version {version} (want 3)"));
+        }
+        let operator_codes = root
+            .tables_field(&r, 1)?
+            .into_iter()
+            .map(|t| {
+                let deprecated = t.i8_field(&r, 0, 0)? as i32;
+                let extended = t.i32_field(&r, 3, 0)?;
+                Ok(OperatorCode {
+                    builtin_code: deprecated.max(extended),
+                    version: t.i32_field(&r, 2, 1)?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let subgraphs = root.tables_field(&r, 2)?;
+        if subgraphs.len() != 1 {
+            return Err(format!("expected exactly 1 subgraph, found {}", subgraphs.len()));
+        }
+        let subgraph = parse_subgraph(&r, subgraphs[0])?;
+        let buffers = root
+            .tables_field(&r, 4)?
+            .into_iter()
+            .map(|t| t.bytes_field(&r, 0))
+            .collect::<Result<Vec<_>>>()?;
+        let metadata = root
+            .tables_field(&r, 6)?
+            .into_iter()
+            .map(|t| {
+                Ok(MetadataDef {
+                    name: t.string_field(&r, 0)?.unwrap_or_default(),
+                    buffer: t.u32_field(&r, 1, 0)? as usize,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let tensor_maps = |t: Table, id: u16| -> Result<Vec<TensorMap>> {
+            t.tables_field(&r, id)?
+                .into_iter()
+                .map(|m| {
+                    Ok(TensorMap {
+                        name: m.string_field(&r, 0)?.unwrap_or_default(),
+                        tensor_index: m.u32_field(&r, 1, 0)?,
+                    })
+                })
+                .collect()
+        };
+        let signature_defs = root
+            .tables_field(&r, 7)?
+            .into_iter()
+            .map(|t| {
+                Ok(SignatureDef {
+                    inputs: tensor_maps(t, 0)?,
+                    outputs: tensor_maps(t, 1)?,
+                    signature_key: t.string_field(&r, 2)?.unwrap_or_default(),
+                    subgraph_index: t.u32_field(&r, 4, 0)?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Model {
+            version,
+            description: root.string_field(&r, 3)?.unwrap_or_default(),
+            operator_codes,
+            buffers,
+            subgraph,
+            metadata_buffer: root.i32_vec_field(&r, 5)?,
+            metadata,
+            signature_defs,
+        })
+    }
+
+    /// Serialize back to flatbuffer bytes. Deterministic; buffer payloads
+    /// are written verbatim.
+    pub fn serialize(&self) -> Vec<u8> {
+        let mut owned = Builder::new();
+        let b = &mut owned;
+
+        let buffers: Vec<WPos> = self
+            .buffers
+            .iter()
+            .map(|data| {
+                if data.is_empty() {
+                    b.table(&[])
+                } else {
+                    let v = b.byte_vector(data);
+                    b.table(&[(0, FieldVal::Off(v))])
+                }
+            })
+            .collect();
+        let buffers = b.offset_vector(&buffers);
+
+        let codes: Vec<WPos> = self
+            .operator_codes
+            .iter()
+            .map(|c| {
+                b.table(&[
+                    (0, FieldVal::I8(c.builtin_code.clamp(0, 127) as i8)),
+                    (2, FieldVal::I32(c.version)),
+                    (3, FieldVal::I32(c.builtin_code)),
+                ])
+            })
+            .collect();
+        let codes = b.offset_vector(&codes);
+
+        let tensors: Vec<WPos> = self.subgraph.tensors.iter().map(|t| write_tensor(b, t)).collect();
+        let tensors = b.offset_vector(&tensors);
+        let operators: Vec<WPos> =
+            self.subgraph.operators.iter().map(|o| write_operator(b, o)).collect();
+        let operators = b.offset_vector(&operators);
+        let sg_inputs = b.i32_vector(&self.subgraph.inputs);
+        let sg_outputs = b.i32_vector(&self.subgraph.outputs);
+        let sg_name = b.string(&self.subgraph.name);
+        let subgraph = b.table(&[
+            (0, FieldVal::Off(tensors)),
+            (1, FieldVal::Off(sg_inputs)),
+            (2, FieldVal::Off(sg_outputs)),
+            (3, FieldVal::Off(operators)),
+            (4, FieldVal::Off(sg_name)),
+        ]);
+        let subgraphs = b.offset_vector(&[subgraph]);
+
+        let description = b.string(&self.description);
+        let mut root_fields = vec![
+            (0, FieldVal::U32(self.version)),
+            (1, FieldVal::Off(codes)),
+            (2, FieldVal::Off(subgraphs)),
+            (3, FieldVal::Off(description)),
+            (4, FieldVal::Off(buffers)),
+        ];
+        if !self.metadata_buffer.is_empty() {
+            let v = b.i32_vector(&self.metadata_buffer);
+            root_fields.push((5, FieldVal::Off(v)));
+        }
+        if !self.metadata.is_empty() {
+            let entries: Vec<WPos> = self
+                .metadata
+                .iter()
+                .map(|m| {
+                    let name = b.string(&m.name);
+                    b.table(&[(0, FieldVal::Off(name)), (1, FieldVal::U32(m.buffer as u32))])
+                })
+                .collect();
+            let v = b.offset_vector(&entries);
+            root_fields.push((6, FieldVal::Off(v)));
+        }
+        if !self.signature_defs.is_empty() {
+            let write_maps = |b: &mut Builder, maps: &[TensorMap]| {
+                let entries: Vec<WPos> = maps
+                    .iter()
+                    .map(|m| {
+                        let name = b.string(&m.name);
+                        b.table(&[
+                            (0, FieldVal::Off(name)),
+                            (1, FieldVal::U32(m.tensor_index)),
+                        ])
+                    })
+                    .collect();
+                b.offset_vector(&entries)
+            };
+            let sigs: Vec<WPos> = self
+                .signature_defs
+                .iter()
+                .map(|s| {
+                    let inputs = write_maps(b, &s.inputs);
+                    let outputs = write_maps(b, &s.outputs);
+                    let key = b.string(&s.signature_key);
+                    b.table(&[
+                        (0, FieldVal::Off(inputs)),
+                        (1, FieldVal::Off(outputs)),
+                        (2, FieldVal::Off(key)),
+                        (4, FieldVal::U32(s.subgraph_index)),
+                    ])
+                })
+                .collect();
+            let v = b.offset_vector(&sigs);
+            root_fields.push((7, FieldVal::Off(v)));
+        }
+        let root = b.table(&root_fields);
+        owned.finish(root, FILE_IDENTIFIER)
+    }
+}
+
+fn write_tensor(b: &mut Builder, t: &TensorDef) -> WPos {
+    let mut fields: Vec<(u16, FieldVal)> = Vec::new();
+    let shape = b.i32_vector(&t.shape);
+    fields.push((0, FieldVal::Off(shape)));
+    if t.ttype != 0 {
+        fields.push((1, FieldVal::I8(t.ttype)));
+    }
+    if t.buffer != 0 {
+        fields.push((2, FieldVal::U32(t.buffer as u32)));
+    }
+    let name = b.string(&t.name);
+    fields.push((3, FieldVal::Off(name)));
+    if !t.quantization.is_empty() {
+        let mut q: Vec<(u16, FieldVal)> = Vec::new();
+        if !t.quantization.min.is_empty() {
+            let v = b.f32_vector(&t.quantization.min);
+            q.push((0, FieldVal::Off(v)));
+        }
+        if !t.quantization.max.is_empty() {
+            let v = b.f32_vector(&t.quantization.max);
+            q.push((1, FieldVal::Off(v)));
+        }
+        if !t.quantization.scale.is_empty() {
+            let v = b.f32_vector(&t.quantization.scale);
+            q.push((2, FieldVal::Off(v)));
+        }
+        if !t.quantization.zero_point.is_empty() {
+            let v = b.i64_vector(&t.quantization.zero_point);
+            q.push((3, FieldVal::Off(v)));
+        }
+        if t.quantization.quantized_dimension != 0 {
+            q.push((6, FieldVal::I32(t.quantization.quantized_dimension)));
+        }
+        let qt = b.table(&q);
+        fields.push((4, FieldVal::Off(qt)));
+    }
+    b.table(&fields)
+}
+
+fn write_operator(b: &mut Builder, o: &OperatorDef) -> WPos {
+    let (ty, opts): (u8, Option<WPos>) = match &o.options {
+        BuiltinOptions::None => (options_type::NONE, None),
+        BuiltinOptions::Conv2D { padding, stride_w, stride_h, fused_activation } => {
+            let t = b.table(&[
+                (0, FieldVal::I8(*padding)),
+                (1, FieldVal::I32(*stride_w)),
+                (2, FieldVal::I32(*stride_h)),
+                (3, FieldVal::I8(*fused_activation)),
+            ]);
+            (options_type::CONV_2D, Some(t))
+        }
+        BuiltinOptions::DepthwiseConv2D {
+            padding,
+            stride_w,
+            stride_h,
+            depth_multiplier,
+            fused_activation,
+        } => {
+            let t = b.table(&[
+                (0, FieldVal::I8(*padding)),
+                (1, FieldVal::I32(*stride_w)),
+                (2, FieldVal::I32(*stride_h)),
+                (3, FieldVal::I32(*depth_multiplier)),
+                (4, FieldVal::I8(*fused_activation)),
+            ]);
+            (options_type::DEPTHWISE_CONV_2D, Some(t))
+        }
+        BuiltinOptions::Pool2D {
+            padding,
+            stride_w,
+            stride_h,
+            filter_width,
+            filter_height,
+            fused_activation,
+        } => {
+            let t = b.table(&[
+                (0, FieldVal::I8(*padding)),
+                (1, FieldVal::I32(*stride_w)),
+                (2, FieldVal::I32(*stride_h)),
+                (3, FieldVal::I32(*filter_width)),
+                (4, FieldVal::I32(*filter_height)),
+                (5, FieldVal::I8(*fused_activation)),
+            ]);
+            (options_type::POOL_2D, Some(t))
+        }
+        BuiltinOptions::FullyConnected { fused_activation } => {
+            let t = b.table(&[(0, FieldVal::I8(*fused_activation))]);
+            (options_type::FULLY_CONNECTED, Some(t))
+        }
+        BuiltinOptions::Softmax { beta } => {
+            let t = b.table(&[(0, FieldVal::F32(*beta))]);
+            (options_type::SOFTMAX, Some(t))
+        }
+        BuiltinOptions::Concatenation { axis, fused_activation } => {
+            let t = b.table(&[
+                (0, FieldVal::I32(*axis)),
+                (1, FieldVal::I8(*fused_activation)),
+            ]);
+            (options_type::CONCATENATION, Some(t))
+        }
+        BuiltinOptions::Add { fused_activation } => {
+            let t = b.table(&[(0, FieldVal::I8(*fused_activation))]);
+            (options_type::ADD, Some(t))
+        }
+        BuiltinOptions::Reshape { new_shape } => {
+            let v = b.i32_vector(new_shape);
+            let t = b.table(&[(0, FieldVal::Off(v))]);
+            (options_type::RESHAPE, Some(t))
+        }
+        BuiltinOptions::Reducer { keep_dims } => {
+            let t = b.table(&[(0, FieldVal::Bool(*keep_dims))]);
+            (options_type::REDUCER, Some(t))
+        }
+    };
+    let inputs = b.i32_vector(&o.inputs);
+    let outputs = b.i32_vector(&o.outputs);
+    let mut fields = vec![
+        (0, FieldVal::U32(o.opcode_index as u32)),
+        (1, FieldVal::Off(inputs)),
+        (2, FieldVal::Off(outputs)),
+    ];
+    if let Some(t) = opts {
+        fields.push((3, FieldVal::U8(ty)));
+        fields.push((4, FieldVal::Off(t)));
+    }
+    b.table(&fields)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_model() -> Model {
+        Model {
+            version: 3,
+            description: "test model".into(),
+            operator_codes: vec![
+                OperatorCode { builtin_code: builtin_op::CONV_2D, version: 1 },
+                OperatorCode { builtin_code: builtin_op::SOFTMAX, version: 1 },
+            ],
+            buffers: vec![vec![], vec![1, 2, 3, 4], vec![5, 6, 7, 8, 9, 10, 11, 12]],
+            subgraph: SubGraphDef {
+                name: "main".into(),
+                tensors: vec![
+                    TensorDef {
+                        shape: vec![1, 4, 4, 1],
+                        ttype: tensor_type::INT8,
+                        buffer: 0,
+                        name: "input".into(),
+                        quantization: Quantization {
+                            scale: vec![0.5],
+                            zero_point: vec![-3],
+                            ..Default::default()
+                        },
+                    },
+                    TensorDef {
+                        shape: vec![2, 1, 1, 1],
+                        ttype: tensor_type::INT8,
+                        buffer: 1,
+                        name: "w".into(),
+                        quantization: Quantization {
+                            scale: vec![0.25],
+                            zero_point: vec![0],
+                            ..Default::default()
+                        },
+                    },
+                    TensorDef {
+                        shape: vec![1, 4, 4, 2],
+                        ttype: tensor_type::INT8,
+                        buffer: 0,
+                        name: "out".into(),
+                        quantization: Quantization {
+                            scale: vec![0.125],
+                            zero_point: vec![4],
+                            ..Default::default()
+                        },
+                    },
+                ],
+                inputs: vec![0],
+                outputs: vec![2],
+                operators: vec![OperatorDef {
+                    opcode_index: 0,
+                    inputs: vec![0, 1, -1],
+                    outputs: vec![2],
+                    options: BuiltinOptions::Conv2D {
+                        padding: padding::SAME,
+                        stride_w: 1,
+                        stride_h: 1,
+                        fused_activation: activation::RELU6,
+                    },
+                }],
+            },
+            metadata_buffer: vec![2],
+            metadata: vec![MetadataDef { name: "min_runtime_version".into(), buffer: 2 }],
+            signature_defs: vec![SignatureDef {
+                inputs: vec![TensorMap { name: "in".into(), tensor_index: 0 }],
+                outputs: vec![TensorMap { name: "out".into(), tensor_index: 2 }],
+                signature_key: "serving_default".into(),
+                subgraph_index: 0,
+            }],
+        }
+    }
+
+    #[test]
+    fn model_roundtrips_through_bytes() {
+        let m = tiny_model();
+        let bytes = m.serialize();
+        let back = Model::parse(&bytes).expect("parse back");
+        assert_eq!(back, m);
+    }
+
+    #[test]
+    fn serialization_is_deterministic_and_stable() {
+        let m = tiny_model();
+        let a = m.serialize();
+        let b = Model::parse(&a).unwrap().serialize();
+        assert_eq!(a, b, "export → import → export must be byte-stable");
+    }
+
+    #[test]
+    fn rejects_wrong_identifier_and_version() {
+        let mut bytes = tiny_model().serialize();
+        bytes[4..8].copy_from_slice(b"NOPE");
+        assert!(Model::parse(&bytes).unwrap_err().contains("TFL3"));
+        assert!(Model::parse(&[0u8; 6]).is_err());
+    }
+
+    #[test]
+    fn truncation_never_panics() {
+        let bytes = tiny_model().serialize();
+        for cut in 0..bytes.len() {
+            let _ = Model::parse(&bytes[..cut]);
+        }
+        // Random byte corruption must error or parse — never panic.
+        let mut rng = crate::util::rng::Rng::new(7);
+        for _ in 0..200 {
+            let mut m = bytes.clone();
+            let i = (rng.next_u64() as usize) % m.len();
+            m[i] ^= (rng.next_u64() as u8) | 1;
+            let _ = Model::parse(&m);
+        }
+    }
+}

@@ -1,0 +1,421 @@
+//! End-to-end tests of the TFLite flatbuffer frontend.
+//!
+//! Golden fixtures: `tools/tflite_fixtures/gen.py` builds two tiny CNN
+//! models (`cnn_f32.tflite`, `cnn_int8.tflite`) through a *hand-rolled
+//! Python flatbuffer builder* with formula-defined weights. The tests
+//! reconstruct the same network through [`GraphBuilder`] from the same
+//! integer formulas and require the imported model to interpret
+//! **bit-exactly** against it — every activation tensor, not just the
+//! output. Two independent flatbuffer implementations and two independent
+//! graph constructions agreeing byte-for-byte is the import contract.
+//!
+//! Also covered: import → export → import round-trip stability (buffers
+//! byte-identical, serialization deterministic), the reorder exporter,
+//! split/elide planning on the imported graph (the paper's end-to-end
+//! flow), and CLI error paths on malformed files.
+
+use std::collections::HashMap;
+
+use mcu_reorder::graph::{Act, DType, Graph, GraphBuilder, Padding};
+use mcu_reorder::interp::quant::QuantParams;
+use mcu_reorder::interp::{ExecConfig, Interpreter, TensorData, WeightStore};
+use mcu_reorder::sched;
+use mcu_reorder::split::{self, SplitOptions};
+use mcu_reorder::tflite::{self, fixtures};
+
+// ---------------------------------------------------------------------------
+// the fixture spec, re-derived (mirrors tools/tflite_fixtures/gen.py)
+// ---------------------------------------------------------------------------
+
+/// Deterministic int8 weight stream: `((i*mul + add) % 253) - 126`.
+fn wq(i: usize, mul: usize, add: usize) -> i64 {
+    ((i * mul + add) % 253) as i64 - 126
+}
+
+/// Deterministic small bias stream: `((i*mul) % 21) - 10`.
+fn bq(i: usize, mul: usize) -> i64 {
+    ((i * mul) % 21) as i64 - 10
+}
+
+/// Conv filter in the IR's HWIO layout, from the fixture's OHWI stream.
+fn conv_w(mul: usize, add: usize, cout: usize, kh: usize, kw: usize, cin: usize) -> Vec<i64> {
+    let n = cout * kh * kw * cin;
+    let mut hwio = vec![0i64; n];
+    for oc in 0..cout {
+        for y in 0..kh {
+            for x in 0..kw {
+                for ic in 0..cin {
+                    hwio[((y * kw + x) * cin + ic) * cout + oc] =
+                        wq(((oc * kh + y) * kw + x) * cin + ic, mul, add);
+                }
+            }
+        }
+    }
+    hwio
+}
+
+/// Dense filter `[in, out]` from the fixture's `[out, in]` stream.
+fn dense_w(mul: usize, add: usize, out: usize, inp: usize) -> Vec<i64> {
+    let mut w = vec![0i64; out * inp];
+    for o in 0..out {
+        for i in 0..inp {
+            w[i * out + o] = wq(o * inp + i, mul, add);
+        }
+    }
+    w
+}
+
+/// Depthwise filter `[kh, kw, c]` (fixture layout `[1, kh, kw, c]` is the
+/// same stream).
+fn dw_w(mul: usize, add: usize, n: usize) -> Vec<i64> {
+    (0..n).map(|i| wq(i, mul, add)).collect()
+}
+
+/// (name, weight values, bias values) per layer, in IR layout.
+fn fixture_filters() -> Vec<(&'static str, Vec<i64>, Vec<i64>)> {
+    vec![
+        ("conv1.preact", conv_w(37, 11, 8, 3, 3, 2), (0..8).map(|i| bq(i, 19)).collect()),
+        ("dw1.preact", dw_w(53, 7, 3 * 3 * 8), (0..8).map(|i| bq(i, 5)).collect()),
+        ("pwa.preact", conv_w(71, 3, 8, 1, 1, 8), (0..8).map(|i| bq(i, 13)).collect()),
+        ("fc", dense_w(89, 5, 4, 16), (0..4).map(|i| bq(i, 7)).collect()),
+    ]
+}
+
+/// Activation quantization of the int8 fixture: (tensor name, scale, zp).
+/// De-fused preact tensors share their activation output's parameters.
+const QPARAMS: &[(&str, f32, i32)] = &[
+    ("input", 0.0625, 1),
+    ("conv1.preact", 0.046875, -10),
+    ("conv1", 0.046875, -10),
+    ("dw1.preact", 0.03125, 4),
+    ("dw1", 0.03125, 4),
+    ("pwa.preact", 0.0625, 0),
+    ("pwa", 0.0625, 0),
+    ("add1", 0.0625, 0),
+    ("cat", 0.0625, 0),
+    ("pool", 0.0625, 0),
+    ("mean", 0.0625, 0),
+    ("reshape", 0.0625, 0),
+    ("fc", 0.125, 3),
+    ("softmax", 0.00390625, -128),
+];
+
+const W_SCALE: f32 = 0.015625;
+
+/// All activation tensor names of the de-fused graph, in producer order.
+const ACTIVATIONS: &[&str] = &[
+    "input", "conv1.preact", "conv1", "dw1.preact", "dw1", "pwa.preact", "pwa", "add1", "cat",
+    "pool", "mean", "reshape", "fc", "softmax",
+];
+
+/// The builder-constructed twin of the de-fused import.
+fn builder_twin(dtype: DType) -> Graph {
+    let mut b = GraphBuilder::new("tflitecnn");
+    let x = b.input("input", &[1, 16, 16, 2], dtype);
+    let c1p = b.conv2d("conv1.preact", x, 8, (3, 3), (1, 1), Padding::Same, Act::Linear);
+    let c1 = b.relu6("conv1", c1p);
+    let dwp = b.dwconv2d("dw1.preact", c1, (3, 3), (2, 2), Padding::Same, Act::Linear);
+    let dw = b.relu6("dw1", dwp);
+    let pwp = b.conv2d("pwa.preact", dw, 8, (1, 1), (1, 1), Padding::Same, Act::Linear);
+    let pw = b.relu("pwa", pwp);
+    let a = b.add("add1", dw, pw);
+    let c = b.concat("cat", &[a, pw]);
+    let p = b.maxpool("pool", c, (2, 2), (2, 2), Padding::Valid);
+    let m = b.global_avgpool("mean", p);
+    let r = b.reshape("reshape", m, &[1, 16]);
+    let f = b.dense("fc", r, 4, Act::Linear);
+    let s = b.softmax("softmax", f);
+    b.output(s);
+    b.finish().expect("twin validates")
+}
+
+fn twin_weights(g: &Graph, dtype: DType) -> WeightStore {
+    let mut ws = WeightStore::default();
+    for (layer, w, bias) in fixture_filters() {
+        let wt = g.tensor_by_name(&format!("{layer}.w")).expect("weight tensor");
+        let bt = g.tensor_by_name(&format!("{layer}.b")).expect("bias tensor");
+        match dtype {
+            DType::F32 => {
+                ws.data.insert(
+                    wt.id,
+                    TensorData::F32(w.iter().map(|&v| v as f32 / 128.0).collect()),
+                );
+                ws.data.insert(
+                    bt.id,
+                    TensorData::F32(bias.iter().map(|&v| v as f32 / 16.0).collect()),
+                );
+            }
+            DType::I8 => {
+                ws.data.insert(wt.id, TensorData::I8(w.iter().map(|&v| v as i8).collect()));
+                ws.data
+                    .insert(bt.id, TensorData::I32(bias.iter().map(|&v| v as i32).collect()));
+                ws.qparams.insert(wt.id, QuantParams::new(W_SCALE, 0));
+            }
+            _ => unreachable!(),
+        }
+    }
+    if dtype == DType::I8 {
+        for &(name, scale, zp) in QPARAMS {
+            let t = g.tensor_by_name(name).expect("activation tensor");
+            ws.qparams.insert(t.id, QuantParams::new(scale, zp));
+        }
+    }
+    ws
+}
+
+fn fixture_input(dtype: DType) -> TensorData {
+    let n = 16 * 16 * 2;
+    let vals: Vec<i64> = (0..n).map(|i| ((i * 29 + 3) % 255) as i64 - 127).collect();
+    match dtype {
+        DType::F32 => TensorData::F32(vals.iter().map(|&v| v as f32 / 128.0).collect()),
+        DType::I8 => TensorData::I8(vals.iter().map(|&v| v as i8).collect()),
+        _ => unreachable!(),
+    }
+}
+
+/// Run one inference capturing every activation, keyed by tensor name.
+fn run_named(g: &Graph, ws: WeightStore, input: TensorData) -> HashMap<String, TensorData> {
+    let interp = Interpreter::new(g, ws, ExecConfig::with_capacity(1 << 20));
+    let (_, captured) = interp.run_capture(&[input]).expect("run");
+    captured
+        .into_iter()
+        .enumerate()
+        .filter_map(|(i, d)| d.map(|d| (g.tensors[i].name.clone(), d)))
+        .collect()
+}
+
+fn load_fixture(name: &str) -> tflite::Imported {
+    let path = fixtures::ensure(name).expect("fixture generation (needs python3 on PATH)");
+    tflite::load(path.to_str().unwrap()).expect("fixture imports")
+}
+
+// ---------------------------------------------------------------------------
+// golden import tests
+// ---------------------------------------------------------------------------
+
+fn golden_bit_exact(fixture: &str, dtype: DType) {
+    let imp = load_fixture(fixture);
+    let g = &imp.graph;
+    assert_eq!(g.n_ops(), 13, "10 operators, 3 de-fused activations");
+    assert_eq!(g.name, "tflitecnn");
+
+    let twin = builder_twin(dtype);
+    assert_eq!(g.n_ops(), twin.n_ops());
+    for (a, b) in g.ops.iter().zip(&twin.ops) {
+        assert_eq!(a.kind, b.kind, "op {} kind drifted from the twin", a.name);
+    }
+
+    let got = run_named(g, imp.weights.clone(), fixture_input(dtype));
+    let want = run_named(&twin, twin_weights(&twin, dtype), fixture_input(dtype));
+    for &name in ACTIVATIONS {
+        let a = got.get(name).unwrap_or_else(|| panic!("import missing tensor {name}"));
+        let b = want.get(name).unwrap_or_else(|| panic!("twin missing tensor {name}"));
+        assert_eq!(a, b, "tensor {name} is not bit-exact vs the builder twin");
+    }
+}
+
+#[test]
+fn f32_fixture_imports_and_interprets_bit_exact() {
+    golden_bit_exact(fixtures::F32_FIXTURE, DType::F32);
+}
+
+#[test]
+fn int8_fixture_imports_and_interprets_bit_exact() {
+    golden_bit_exact(fixtures::INT8_FIXTURE, DType::I8);
+}
+
+#[test]
+fn int8_quantization_maps_onto_qparams() {
+    let imp = load_fixture(fixtures::INT8_FIXTURE);
+    let g = &imp.graph;
+    for &(name, scale, zp) in QPARAMS {
+        if name.ends_with(".preact") {
+            continue; // synthesized tensors, checked via their source below
+        }
+        let t = g.tensor_by_name(name).unwrap_or_else(|| panic!("missing {name}"));
+        let q = imp.weights.qparams.get(&t.id).unwrap_or_else(|| panic!("no qparams for {name}"));
+        assert_eq!((q.scale, q.zero_point), (scale, zp), "qparams of {name}");
+    }
+    // De-fused preact tensors share their output's parameters.
+    for pre in ["conv1.preact", "dw1.preact", "pwa.preact"] {
+        let base = pre.strip_suffix(".preact").unwrap();
+        let tp = g.tensor_by_name(pre).unwrap();
+        let tb = g.tensor_by_name(base).unwrap();
+        assert_eq!(imp.weights.qparams[&tp.id], imp.weights.qparams[&tb.id]);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// export / round-trip
+// ---------------------------------------------------------------------------
+
+#[test]
+fn export_roundtrip_is_byte_stable_and_buffer_identical() {
+    let path = fixtures::ensure(fixtures::INT8_FIXTURE).expect("fixtures");
+    let original = tflite::read_model(path.to_str().unwrap()).expect("parse");
+    let imp = tflite::import(&original).expect("import");
+
+    let (opt, _) = sched::optimal(&imp.graph).expect("schedule");
+    let order = imp.operator_order(&opt.order);
+    let reordered = tflite::reorder(&original, &order).expect("reorder");
+
+    // Buffers byte-identical through the rewrite.
+    assert_eq!(reordered.buffers, original.buffers);
+
+    // import → export → import: the model survives unchanged (modulo
+    // operator order), and serialization is deterministic (byte-stable).
+    let bytes1 = reordered.serialize();
+    let back = tflite::Model::parse(&bytes1).expect("reparse");
+    assert_eq!(back, reordered);
+    assert_eq!(back.serialize(), bytes1, "export → import → export must be byte-stable");
+
+    // The reordered model still imports and computes the same outputs.
+    let imp2 = tflite::import(&back).expect("reimport");
+    let out1 = run_named(&imp.graph, imp.weights.clone(), fixture_input(DType::I8));
+    let out2 = run_named(&imp2.graph, imp2.weights.clone(), fixture_input(DType::I8));
+    assert_eq!(out1["softmax"], out2["softmax"], "reordering must not change outputs");
+}
+
+#[test]
+fn operator_order_contracts_defused_ops() {
+    let imp = load_fixture(fixtures::F32_FIXTURE);
+    // Graph order = default (13 ops incl. de-fused); operator order must
+    // contract to the 10 original operators, in file order.
+    let order = imp.operator_order(&imp.graph.default_order());
+    assert_eq!(order, (0..10).collect::<Vec<_>>());
+}
+
+// ---------------------------------------------------------------------------
+// optimize: reorder vs split vs elided on the imported model
+// ---------------------------------------------------------------------------
+
+#[test]
+fn split_breaks_the_reorder_floor_on_the_imported_model() {
+    let imp = load_fixture(fixtures::INT8_FIXTURE);
+    let g = &imp.graph;
+    let default_peak = sched::peak_of(g, &g.default_order());
+    let (opt, _) = sched::optimal(g).expect("schedule");
+    let outcome = split::optimize(g, &SplitOptions::default()).expect("split search");
+
+    // The fixture's conv chain is linear: reordering alone cannot beat the
+    // de-fused conv1 working set, but splitting can (acceptance criterion:
+    // split/elided peak strictly below the reorder-only peak). Exact values
+    // are gated against the DP mirror in BENCH_baseline/partial_exec.json.
+    assert_eq!(opt.peak_bytes, default_peak, "reordering alone is stuck on a chain");
+    assert!(
+        outcome.schedule.peak_bytes < opt.peak_bytes,
+        "split peak {} must beat reorder-only {}",
+        outcome.schedule.peak_bytes,
+        opt.peak_bytes
+    );
+
+    // The split graph still computes bit-exactly (channel/row slices are
+    // exact by construction; validated end-to-end here).
+    let ws2 = outcome.remap_weights(&imp.weights);
+    let cfg = ExecConfig {
+        arena_bytes: 1 << 20,
+        policy: mcu_reorder::alloc::CompactPolicy::EveryOp,
+        order: Some(outcome.schedule.order.clone()),
+    };
+    let split_run = Interpreter::new(&outcome.graph, ws2, cfg)
+        .run(&[fixture_input(DType::I8)])
+        .expect("split graph runs");
+    let base_run =
+        Interpreter::new(g, imp.weights.clone(), ExecConfig::with_capacity(1 << 20))
+            .run(&[fixture_input(DType::I8)])
+            .expect("base graph runs");
+    assert_eq!(split_run.outputs, base_run.outputs, "splitting must not change outputs");
+}
+
+// ---------------------------------------------------------------------------
+// CLI robustness: malformed inputs exit nonzero with a clean error
+// ---------------------------------------------------------------------------
+
+fn run_cli(args: &[&str]) -> (i32, String, String) {
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_mcu-reorder"))
+        .args(args)
+        .output()
+        .expect("spawn mcu-reorder");
+    (
+        out.status.code().unwrap_or(-1),
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+#[test]
+fn cli_rejects_malformed_models_without_panicking() {
+    let dir = std::env::temp_dir().join(format!("mcu-reorder-cli-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // Truncated flatbuffer.
+    let fixture = fixtures::ensure(fixtures::F32_FIXTURE).expect("fixtures");
+    let bytes = std::fs::read(&fixture).unwrap();
+    let trunc = dir.join("trunc.tflite");
+    std::fs::write(&trunc, &bytes[..bytes.len() / 3]).unwrap();
+    // Garbage flatbuffer.
+    let garbage = dir.join("garbage.tflite");
+    std::fs::write(&garbage, b"definitely not a flatbuffer").unwrap();
+    // Malformed JSON model.
+    let badjson = dir.join("bad.json");
+    std::fs::write(&badjson, "{\"format\": \"mcu-reorder/v1\", \"tensors\": [").unwrap();
+    // Missing file.
+    let missing = dir.join("nope.tflite");
+
+    for (args, what) in [
+        (vec!["import", trunc.to_str().unwrap()], "truncated flatbuffer"),
+        (vec!["import", garbage.to_str().unwrap()], "garbage flatbuffer"),
+        (vec!["optimize", trunc.to_str().unwrap(), "-o", "/dev/null"], "optimize truncated"),
+        (vec!["import", missing.to_str().unwrap()], "missing file"),
+        (vec!["analyze", "--file", badjson.to_str().unwrap()], "malformed JSON"),
+    ] {
+        let (code, stdout, stderr) = run_cli(&args);
+        assert_eq!(code, 1, "{what}: expected exit 1, got {code}\nstdout: {stdout}");
+        assert!(stderr.contains("error:"), "{what}: stderr should explain: {stderr}");
+        assert!(
+            !stderr.contains("panicked"),
+            "{what}: must fail cleanly, not panic: {stderr}"
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cli_optimize_writes_a_reordered_model() {
+    let fixture = fixtures::ensure(fixtures::INT8_FIXTURE).expect("fixtures");
+    let dir = std::env::temp_dir().join(format!("mcu-reorder-opt-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let out = dir.join("reordered.tflite");
+
+    let (code, stdout, stderr) = run_cli(&[
+        "optimize",
+        fixture.to_str().unwrap(),
+        "-o",
+        out.to_str().unwrap(),
+        "--budget",
+        "3000",
+    ]);
+    assert_eq!(code, 0, "optimize failed: {stderr}");
+    assert!(stdout.contains("reorder-only optimal"), "report missing: {stdout}");
+    assert!(stdout.contains("elided"), "elided peak missing: {stdout}");
+    assert!(stdout.contains("budget"), "budget verdict missing: {stdout}");
+    // The written model parses, its buffers match the input's, and the
+    // converter-style metadata survives the rewrite.
+    let a = tflite::read_model(fixture.to_str().unwrap()).unwrap();
+    let b = tflite::read_model(out.to_str().unwrap()).unwrap();
+    assert_eq!(a.buffers, b.buffers, "weight buffers must survive byte-identically");
+    assert_eq!(a.metadata, b.metadata, "metadata must survive the rewrite");
+    assert_eq!(a.metadata[0].name, "min_runtime_version");
+
+    // A trailing path flag is a loud usage error, not a silent write to
+    // a file named "true".
+    for flag in ["-o", "--out"] {
+        let (code, _, stderr) = run_cli(&["optimize", fixture.to_str().unwrap(), flag]);
+        assert_eq!(code, 1, "trailing {flag} must fail");
+        assert!(stderr.contains("-o/--out needs a path"), "{flag}: {stderr}");
+    }
+    let (code, _, stderr) = run_cli(&["import", fixture.to_str().unwrap(), "--json"]);
+    assert_eq!(code, 1, "trailing --json must fail");
+    assert!(stderr.contains("--json needs a path"), "{stderr}");
+    std::fs::remove_dir_all(&dir).ok();
+}

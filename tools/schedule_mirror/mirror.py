@@ -231,6 +231,10 @@ def softmax(g, name, x):
     return g.add_op(name, {"k": "Softmax"}, [x], [], g.tensors[x].shape, g.tensors[x].dsize)
 
 
+def reshape(g, name, x, shape):
+    return g.add_op(name, {"k": "Reshape"}, [x], [], list(shape), g.tensors[x].dsize)
+
+
 def synthetic(g, name, inputs, out_bytes, macs):
     return g.add_op(name, {"k": "Synthetic", "macs": macs}, inputs, [], [out_bytes], 1)
 
@@ -372,6 +376,34 @@ def tiny(dsize=1):
     fc = dense(g, "fc", gap, 3, dsize)
     sm = softmax(g, "softmax", fc)
     g.outputs.append(sm)
+    return g
+
+
+def tflitecnn(dsize=1):
+    """The de-fused import of tools/tflite_fixtures cnn_int8.tflite.
+
+    Mirrors what rust/src/tflite/import.rs produces for the fixture: the
+    TFLite operator list with every fused activation materialized as an
+    explicit Relu/Relu6 op (the importer's de-fusing contract), executed
+    in flatbuffer operator order.
+    """
+    g = Graph("tflitecnn")
+    x = g.add_tensor("input", [1, 16, 16, 2], dsize)
+    g.inputs.append(x)
+    c1p = conv2d(g, "conv1.preact", x, 8, (3, 3), (1, 1), SAME, dsize)
+    c1 = relu(g, "conv1", c1p, "Relu6")
+    dwp = dwconv2d(g, "dw1.preact", c1, (3, 3), (2, 2), SAME, dsize)
+    dw = relu(g, "dw1", dwp, "Relu6")
+    pwp = conv2d(g, "pwa.preact", dw, 8, (1, 1), (1, 1), SAME, dsize)
+    pw = relu(g, "pwa", pwp)
+    a = add_(g, "add1", dw, pw)
+    c = concat(g, "cat", [a, pw])
+    p = maxpool(g, "pool", c, (2, 2), (2, 2), VALID)
+    m = global_avgpool(g, "mean", p)
+    r = reshape(g, "reshape", m, [1, 16])
+    f = dense(g, "fc", r, 4, dsize)
+    s = softmax(g, "softmax", f)
+    g.outputs.append(s)
     return g
 
 
@@ -1064,6 +1096,7 @@ def zoo():
         ("audionet", audionet()),
         ("streamnet", streamnet()),
         ("tiny", tiny()),
+        ("tflitecnn", tflitecnn()),
     ]
     rng = Rng(2025)
     for i in range(2):

@@ -1,0 +1,443 @@
+#!/usr/bin/env python3
+"""Hermetic .tflite fixture generator (no TensorFlow dependency).
+
+Writes two tiny CNN models with fully deterministic, formula-defined
+weights through a hand-rolled flatbuffer builder:
+
+  cnn_f32.tflite   float32 weights/activations
+  cnn_int8.tflite  int8 weights + per-tensor affine quantization
+
+The builder here is an implementation of the flatbuffers wire format
+*independent* from the Rust reader/writer in ``rust/src/tflite/flatbuf.rs``
+— that independence is what makes the golden import tests meaningful
+(two implementations agreeing on the bytes, not one talking to itself).
+
+The model ("tflitecnn") covers the full supported operator subset:
+CONV_2D (+fused RELU6), DEPTHWISE_CONV_2D (+fused RELU6), CONV_2D 1x1
+(+fused RELU), ADD, CONCATENATION, MAX_POOL_2D, MEAN (global spatial),
+RESHAPE, FULLY_CONNECTED, SOFTMAX.
+
+Weight values use only dyadic rationals (k / 2^n), which are exactly
+representable in f32, so the Rust test suite re-derives bit-identical
+expectations from the same integer formulas (see WEIGHT_FORMULAS below
+and rust/tests/integration_tflite.rs).
+
+Usage:
+    python3 tools/tflite_fixtures/gen.py --out-dir target/tflite_fixtures
+"""
+
+import argparse
+import os
+import struct
+import sys
+
+# ---------------------------------------------------------------------------
+# flatbuffer builder (back-to-front, mirrors the canonical algorithm)
+# ---------------------------------------------------------------------------
+
+
+class Builder:
+    """Byte stack in reverse order: rev[0] is the final file's last byte."""
+
+    def __init__(self):
+        self.rev = bytearray()
+        self.max_align = 1
+
+    def prep(self, align, extra):
+        self.max_align = max(self.max_align, align)
+        while (len(self.rev) + extra) % align != 0:
+            self.rev.append(0)
+
+    def push(self, data):
+        """Push bytes that must appear in `data` order in the file."""
+        self.rev.extend(reversed(data))
+
+    def push_u16(self, v):
+        self.push(struct.pack("<H", v))
+
+    def push_u32(self, v):
+        self.push(struct.pack("<I", v))
+
+    def push_uoffset(self, target):
+        assert target <= len(self.rev), "forward reference to unwritten object"
+        self.push_u32(len(self.rev) + 4 - target)
+
+    def byte_vector(self, data):
+        self.prep(4, len(data) + 4)
+        self.push(bytes(data))
+        self.push_u32(len(data))
+        return len(self.rev)
+
+    def string(self, s):
+        raw = s.encode("utf-8")
+        self.prep(4, len(raw) + 1 + 4)
+        self.rev.append(0)  # NUL terminator
+        self.push(raw)
+        self.push_u32(len(raw))
+        return len(self.rev)
+
+    def _scalar_vector(self, fmt, size, vals):
+        # Canonical two-step vector prep: elements `size`-aligned, which
+        # leaves the u32 length word at 4 mod max(size, 4).
+        self.prep(4, len(vals) * size)
+        self.prep(size, len(vals) * size)
+        for v in reversed(vals):
+            self.push(struct.pack(fmt, v))
+        self.push_u32(len(vals))
+        return len(self.rev)
+
+    def i32_vector(self, vals):
+        return self._scalar_vector("<i", 4, vals)
+
+    def f32_vector(self, vals):
+        return self._scalar_vector("<f", 4, vals)
+
+    def i64_vector(self, vals):
+        return self._scalar_vector("<q", 8, vals)
+
+    def offset_vector(self, targets):
+        self.prep(4, len(targets) * 4 + 4)
+        for t in reversed(targets):
+            self.push_uoffset(t)
+        self.push_u32(len(targets))
+        return len(self.rev)
+
+    def table(self, fields):
+        """fields: list of (field_id, kind, value); kind in
+        {u8,i8,bool,i32,u32,f32,off}. Absent fields are simply omitted."""
+        start = len(self.rev)
+        slots = []
+        for fid, kind, val in sorted(fields, key=lambda f: -f[0]):
+            if kind in ("u8", "i8", "bool"):
+                self.prep(1, 0)
+                self.rev.append(val & 0xFF)  # two's complement for i8
+            elif kind == "i32":
+                self.prep(4, 0)
+                self.push(struct.pack("<i", val))
+            elif kind == "u32":
+                self.prep(4, 0)
+                self.push(struct.pack("<I", val))
+            elif kind == "f32":
+                self.prep(4, 0)
+                self.push(struct.pack("<f", val))
+            elif kind == "off":
+                self.prep(4, 0)
+                self.push_uoffset(val)
+            else:
+                raise ValueError(kind)
+            slots.append((fid, len(self.rev)))
+        n_slots = max((fid + 1 for fid, _, _ in fields), default=0)
+        vtable_len = 4 + 2 * n_slots
+        self.prep(4, 0)
+        self.push(struct.pack("<i", vtable_len))  # soffset: vtable sits just before
+        table_pos = len(self.rev)
+        table_len = table_pos - start
+        by_id = dict(slots)
+        for fid in reversed(range(n_slots)):
+            self.push_u16(table_pos - by_id[fid] if fid in by_id else 0)
+        self.push_u16(table_len)
+        self.push_u16(vtable_len)
+        return table_pos
+
+    def finish(self, root, ident=b"TFL3"):
+        self.prep(max(self.max_align, 4), 8)
+        self.push(ident)
+        self.push_uoffset(root)
+        return bytes(reversed(self.rev))
+
+
+# ---------------------------------------------------------------------------
+# TFLite schema constants (subset)
+# ---------------------------------------------------------------------------
+
+FLOAT32, INT32, INT8 = 0, 2, 9
+
+ADD, AVERAGE_POOL_2D, CONCATENATION, CONV_2D, DEPTHWISE_CONV_2D = 0, 1, 2, 3, 4
+FULLY_CONNECTED, MAX_POOL_2D, RELU, RELU6, RESHAPE, SOFTMAX, MEAN = 9, 17, 19, 21, 22, 25, 40
+
+OPT_NONE, OPT_CONV2D, OPT_DWCONV2D, OPT_POOL2D = 0, 1, 2, 5
+OPT_FULLY_CONNECTED, OPT_SOFTMAX, OPT_CONCATENATION, OPT_ADD = 8, 9, 10, 11
+OPT_RESHAPE, OPT_REDUCER = 17, 27
+
+ACT_NONE, ACT_RELU, ACT_RELU6 = 0, 1, 3
+PAD_SAME, PAD_VALID = 0, 1
+
+# ---------------------------------------------------------------------------
+# deterministic weights (WEIGHT_FORMULAS — mirrored by the Rust tests)
+# ---------------------------------------------------------------------------
+
+
+def wq(i, mul, add):
+    """Deterministic int8 weight stream: ((i*mul + add) % 253) - 126."""
+    return ((i * mul + add) % 253) - 126
+
+
+def bq(i, mul):
+    """Deterministic small bias stream: ((i*mul) % 21) - 10."""
+    return ((i * mul) % 21) - 10
+
+
+def weights_i8(n, mul, add):
+    return [wq(i, mul, add) for i in range(n)]
+
+
+def weights_f32(n, mul, add):
+    return [wq(i, mul, add) / 128.0 for i in range(n)]
+
+
+def bias_i32(n, mul):
+    return [bq(i, mul) for i in range(n)]
+
+
+def bias_f32(n, mul):
+    return [bq(i, mul) / 16.0 for i in range(n)]
+
+
+def pack_i8(vals):
+    return struct.pack(f"{len(vals)}b", *vals)
+
+
+def pack_i32(vals):
+    return struct.pack(f"<{len(vals)}i", *vals)
+
+
+def pack_f32(vals):
+    return struct.pack(f"<{len(vals)}f", *vals)
+
+
+# (mul, add) per weight tensor — the single source of truth.
+FORMULAS = {
+    "conv1.w": (37, 11),
+    "conv1.b": (19, 0),
+    "dw1.w": (53, 7),
+    "dw1.b": (5, 0),
+    "pwa.w": (71, 3),
+    "pwa.b": (13, 0),
+    "fc.w": (89, 5),
+    "fc.b": (7, 0),
+}
+
+# Per-tensor quantization of the int8 fixture: (scale, zero_point).
+# Scales are dyadic (exact in f32). MaxPool/Mean/Reshape outputs share
+# their input's parameters (domain-preserving kernels); the softmax
+# output uses the TFLite convention 1/256, zp -128.
+QPARAMS = {
+    "input": (0.0625, 1),
+    "conv1": (0.046875, -10),
+    "dw1": (0.03125, 4),
+    # Concatenation inputs must share the output's quantization (a real
+    # TFLite kernel constraint — concatenation.cc refuses to prepare
+    # otherwise), so pwa lives in the cat/add1 domain.
+    "pwa": (0.0625, 0),
+    "add1": (0.0625, 0),
+    "cat": (0.0625, 0),
+    "pool": (0.0625, 0),
+    "mean": (0.0625, 0),
+    "reshape": (0.0625, 0),
+    "fc": (0.125, 3),
+    "softmax": (0.00390625, -128),
+    # weight scales (zero point 0, symmetric)
+    "conv1.w": (0.015625, 0),
+    "dw1.w": (0.015625, 0),
+    "pwa.w": (0.015625, 0),
+    "fc.w": (0.015625, 0),
+}
+
+
+def model_bytes(dtype):
+    """Build the tflitecnn fixture; dtype is 'f32' or 'int8'."""
+    int8 = dtype == "int8"
+    b = Builder()
+
+    # --- buffers (index 0 is the canonical empty sentinel) -----------------
+    buffers = [b""]
+
+    def buf(data):
+        buffers.append(data)
+        return len(buffers) - 1
+
+    def wbuf(name, n):
+        mul, add = FORMULAS[name]
+        if name.endswith(".b"):
+            return buf(pack_i32(bias_i32(n, mul)) if int8 else pack_f32(bias_f32(n, mul)))
+        return buf(pack_i8(weights_i8(n, mul, add)) if int8 else pack_f32(weights_f32(n, mul, add)))
+
+    # --- tensors -----------------------------------------------------------
+    ttype = INT8 if int8 else FLOAT32
+    tensors = []  # (shape, type, buffer, name, qname)
+
+    def tensor(name, shape, ty=None, buffer=0, qname=None):
+        tensors.append((shape, ttype if ty is None else ty, buffer, name, qname))
+        return len(tensors) - 1
+
+    t_in = tensor("input", [1, 16, 16, 2], qname="input")
+    t_conv1_w = tensor("conv1.w", [8, 3, 3, 2], buffer=wbuf("conv1.w", 8 * 3 * 3 * 2),
+                       qname="conv1.w")
+    t_conv1_b = tensor("conv1.b", [8], ty=INT32 if int8 else FLOAT32,
+                       buffer=wbuf("conv1.b", 8))
+    t_conv1 = tensor("conv1", [1, 16, 16, 8], qname="conv1")
+    t_dw1_w = tensor("dw1.w", [1, 3, 3, 8], buffer=wbuf("dw1.w", 3 * 3 * 8), qname="dw1.w")
+    t_dw1_b = tensor("dw1.b", [8], ty=INT32 if int8 else FLOAT32, buffer=wbuf("dw1.b", 8))
+    t_dw1 = tensor("dw1", [1, 8, 8, 8], qname="dw1")
+    t_pwa_w = tensor("pwa.w", [8, 1, 1, 8], buffer=wbuf("pwa.w", 8 * 8), qname="pwa.w")
+    t_pwa_b = tensor("pwa.b", [8], ty=INT32 if int8 else FLOAT32, buffer=wbuf("pwa.b", 8))
+    t_pwa = tensor("pwa", [1, 8, 8, 8], qname="pwa")
+    t_add1 = tensor("add1", [1, 8, 8, 8], qname="add1")
+    t_cat = tensor("cat", [1, 8, 8, 16], qname="cat")
+    t_pool = tensor("pool", [1, 4, 4, 16], qname="pool")
+    t_mean_axes = tensor("mean.axes", [2], ty=INT32, buffer=buf(pack_i32([1, 2])))
+    t_mean = tensor("mean", [1, 1, 1, 16], qname="mean")
+    t_shape = tensor("reshape.shape", [2], ty=INT32, buffer=buf(pack_i32([1, 16])))
+    t_reshape = tensor("reshape", [1, 16], qname="reshape")
+    t_fc_w = tensor("fc.w", [4, 16], buffer=wbuf("fc.w", 4 * 16), qname="fc.w")
+    t_fc_b = tensor("fc.b", [4], ty=INT32 if int8 else FLOAT32, buffer=wbuf("fc.b", 4))
+    t_fc = tensor("fc", [1, 4], qname="fc")
+    t_sm = tensor("softmax", [1, 4], qname="softmax")
+
+    # Converter-style metadata stamp (16-byte buffer, like TF's
+    # min_runtime_version) — exercises the exporter's metadata
+    # preservation end to end.
+    meta_buf = buf(b"1.5.0" + b"\x00" * 11)
+
+    # --- operators (vector order == execution order) -----------------------
+    opcodes = [CONV_2D, DEPTHWISE_CONV_2D, ADD, CONCATENATION, MAX_POOL_2D,
+               MEAN, RESHAPE, FULLY_CONNECTED, SOFTMAX]
+    oc_index = {c: i for i, c in enumerate(opcodes)}
+
+    def conv_opts(bld, act, stride):
+        return OPT_CONV2D, bld.table([
+            (0, "i8", PAD_SAME), (1, "i32", stride), (2, "i32", stride), (3, "i8", act),
+        ])
+
+    operators = [
+        # (opcode, inputs, outputs, options_builder)
+        (CONV_2D, [t_in, t_conv1_w, t_conv1_b], [t_conv1],
+         lambda bld: conv_opts(bld, ACT_RELU6, 1)),
+        (DEPTHWISE_CONV_2D, [t_conv1, t_dw1_w, t_dw1_b], [t_dw1],
+         lambda bld: (OPT_DWCONV2D, bld.table([
+             (0, "i8", PAD_SAME), (1, "i32", 2), (2, "i32", 2),
+             (3, "i32", 1), (4, "i8", ACT_RELU6)]))),
+        (CONV_2D, [t_dw1, t_pwa_w, t_pwa_b], [t_pwa],
+         lambda bld: conv_opts(bld, ACT_RELU, 1)),
+        (ADD, [t_dw1, t_pwa], [t_add1],
+         lambda bld: (OPT_ADD, bld.table([(0, "i8", ACT_NONE)]))),
+        (CONCATENATION, [t_add1, t_pwa], [t_cat],
+         lambda bld: (OPT_CONCATENATION, bld.table([(0, "i32", 3), (1, "i8", ACT_NONE)]))),
+        (MAX_POOL_2D, [t_cat], [t_pool],
+         lambda bld: (OPT_POOL2D, bld.table([
+             (0, "i8", PAD_VALID), (1, "i32", 2), (2, "i32", 2),
+             (3, "i32", 2), (4, "i32", 2), (5, "i8", ACT_NONE)]))),
+        (MEAN, [t_pool, t_mean_axes], [t_mean],
+         lambda bld: (OPT_REDUCER, bld.table([(0, "bool", 1)]))),
+        (RESHAPE, [t_mean, t_shape], [t_reshape],
+         lambda bld: (OPT_RESHAPE, bld.table([(0, "off", bld.i32_vector([1, 16]))]))),
+        (FULLY_CONNECTED, [t_reshape, t_fc_w, t_fc_b], [t_fc],
+         lambda bld: (OPT_FULLY_CONNECTED, bld.table([(0, "i8", ACT_NONE)]))),
+        (SOFTMAX, [t_fc], [t_sm],
+         lambda bld: (OPT_SOFTMAX, bld.table([(0, "f32", 1.0)]))),
+    ]
+
+    # --- serialize ---------------------------------------------------------
+    buffer_offs = []
+    for data in buffers:
+        if data:
+            v = b.byte_vector(data)
+            buffer_offs.append(b.table([(0, "off", v)]))
+        else:
+            buffer_offs.append(b.table([]))
+    buffers_vec = b.offset_vector(buffer_offs)
+
+    code_offs = [
+        b.table([(0, "i8", c), (2, "i32", 1), (3, "i32", c)]) for c in opcodes
+    ]
+    codes_vec = b.offset_vector(code_offs)
+
+    tensor_offs = []
+    for shape, ty, buffer, name, qname in tensors:
+        fields = [(0, "off", b.i32_vector(shape)), (3, "off", b.string(name))]
+        if ty != 0:
+            fields.append((1, "i8", ty))
+        if buffer != 0:
+            fields.append((2, "u32", buffer))
+        if int8 and qname is not None:
+            scale, zp = QPARAMS[qname]
+            q = b.table([
+                (2, "off", b.f32_vector([scale])),
+                (3, "off", b.i64_vector([zp])),
+            ])
+            fields.append((4, "off", q))
+        tensor_offs.append(b.table(fields))
+    tensors_vec = b.offset_vector(tensor_offs)
+
+    op_offs = []
+    for code, ins, outs, mkopts in operators:
+        ty, opts = mkopts(b)
+        fields = [
+            (0, "u32", oc_index[code]),
+            (1, "off", b.i32_vector(ins)),
+            (2, "off", b.i32_vector(outs)),
+            (3, "u8", ty),
+            (4, "off", opts),
+        ]
+        op_offs.append(b.table(fields))
+    ops_vec = b.offset_vector(op_offs)
+
+    sg = b.table([
+        (0, "off", tensors_vec),
+        (1, "off", b.i32_vector([t_in])),
+        (2, "off", b.i32_vector([t_sm])),
+        (3, "off", ops_vec),
+        (4, "off", b.string("tflitecnn")),
+    ])
+    subgraphs_vec = b.offset_vector([sg])
+
+    meta_name = b.string("min_runtime_version")
+    meta = b.table([(0, "off", meta_name), (1, "u32", meta_buf)])
+    metadata_vec = b.offset_vector([meta])
+
+    root = b.table([
+        (0, "u32", 3),
+        (1, "off", codes_vec),
+        (2, "off", subgraphs_vec),
+        (3, "off", b.string(f"tflitecnn {dtype} fixture (mcu-reorder)")),
+        (4, "off", buffers_vec),
+        (6, "off", metadata_vec),
+    ])
+    return b.finish(root)
+
+
+def write_atomic(path, data):
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "wb") as f:
+        f.write(data)
+    os.replace(tmp, path)
+
+
+def fingerprint(data):
+    """FNV-1a 64 — must match fixtures::fingerprint in rust/src/tflite/mod.rs."""
+    h = 0xCBF29CE484222325
+    for byte in data:
+        h = ((h ^ byte) * 0x100000001B3) & ((1 << 64) - 1)
+    return h
+
+
+def main(argv):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="target/tflite_fixtures")
+    args = ap.parse_args(argv)
+    os.makedirs(args.out_dir, exist_ok=True)
+    for dtype, name in [("f32", "cnn_f32.tflite"), ("int8", "cnn_int8.tflite")]:
+        data = model_bytes(dtype)
+        path = os.path.join(args.out_dir, name)
+        write_atomic(path, data)
+        print(f"wrote {path} ({len(data)} bytes)")
+    # Freshness stamp: the Rust fixtures::ensure() helper regenerates
+    # whenever this does not match the generator source's fingerprint.
+    with open(__file__, "rb") as f:
+        stamp = f"{fingerprint(f.read()):016x}"
+    write_atomic(os.path.join(args.out_dir, "gen.py.stamp"), stamp.encode())
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
