@@ -14,6 +14,7 @@
 use std::collections::HashMap;
 
 use crate::graph::{Graph, OpId, TensorId};
+use crate::trace::{Event, NullSink, TraceSink};
 
 /// Storage-sharing roots induced by structural in-place accumulators
 /// (streaming join elision): a [`crate::graph::OpKind::PartialInto`]
@@ -119,12 +120,26 @@ impl StaticPlan {
     /// slot spanning the union of their lifetimes: every member gets the
     /// same offset, which is exactly the overlap the elision promises.
     pub fn best_fit(g: &Graph, order: &[OpId]) -> StaticPlan {
+        Self::best_fit_traced(g, order, &mut NullSink)
+    }
+
+    /// [`Self::best_fit`] with an observability sink: emits one
+    /// [`Event::SlotPlaced`] per activation tensor carrying its assigned
+    /// offset, its *own* lifetime (not the merged group interval) and its
+    /// storage-sharing root, so a trace shows both the placement and which
+    /// tensors alias one slot.
+    pub fn best_fit_traced(
+        g: &Graph,
+        order: &[OpId],
+        sink: &mut dyn TraceSink,
+    ) -> StaticPlan {
         let root = storage_roots(g);
+        let lifetimes = plan_lifetimes(g, order);
         // Merge each sharing group into one lifetime interval (members
         // are equal-sized; the interval covers first producer to last
         // consumer of the chain).
         let mut merged: HashMap<TensorId, Lifetime> = HashMap::new();
-        for lt in plan_lifetimes(g, order) {
+        for &lt in &lifetimes {
             let r = root[lt.tensor];
             merged
                 .entry(r)
@@ -169,6 +184,19 @@ impl StaticPlan {
             .filter(|t| !t.is_weight)
             .map(|t| (t.id, group_offset[&root[t.id]]))
             .collect();
+        if sink.enabled() {
+            for lt in &lifetimes {
+                sink.record(Event::SlotPlaced {
+                    tensor: lt.tensor,
+                    name: g.tensors[lt.tensor].name.clone(),
+                    offset: offsets[&lt.tensor],
+                    bytes: lt.bytes,
+                    start: lt.start,
+                    end: lt.end,
+                    root: root[lt.tensor],
+                });
+            }
+        }
         StaticPlan { offsets, arena_bytes: arena, strategy: "planned-best-fit" }
     }
 

@@ -20,6 +20,7 @@ use std::collections::HashMap;
 
 use crate::alloc::{AllocError, AllocStats, BufId, CompactPolicy, DynamicArena};
 use crate::graph::{Act, DType, Graph, OpId, OpKind, Padding, SplitAxis, Tensor, TensorId};
+use crate::trace::{Event, NullSink, TraceSink};
 use crate::util::rng::Rng;
 use ops::Hwc;
 use quant::QuantParams;
@@ -308,7 +309,7 @@ impl<'g> Interpreter<'g> {
 
     /// Run one inference.
     pub fn run(&self, inputs: &[TensorData]) -> Result<RunResult, ExecError> {
-        Ok(self.run_inner(inputs, false)?.0)
+        Ok(self.run_inner(inputs, false, &mut NullSink)?.0)
     }
 
     /// Run one inference, additionally capturing every activation tensor
@@ -317,8 +318,20 @@ impl<'g> Interpreter<'g> {
         &self,
         inputs: &[TensorData],
     ) -> Result<(RunResult, Vec<Option<TensorData>>), ExecError> {
-        let (r, c) = self.run_inner(inputs, true)?;
+        let (r, c) = self.run_inner(inputs, true, &mut NullSink)?;
         Ok((r, c.expect("capture requested")))
+    }
+
+    /// Run one inference with an observability sink: emits one
+    /// [`Event::ArenaOp`] per executed operator carrying the dynamic
+    /// arena's *measured* high-water mark after that op — the series the
+    /// audit compares against the analytic working-set peak.
+    pub fn run_traced(
+        &self,
+        inputs: &[TensorData],
+        sink: &mut dyn TraceSink,
+    ) -> Result<RunResult, ExecError> {
+        Ok(self.run_inner(inputs, false, sink)?.0)
     }
 
     fn order(&self) -> Vec<OpId> {
@@ -330,6 +343,7 @@ impl<'g> Interpreter<'g> {
         &self,
         inputs: &[TensorData],
         capture: bool,
+        sink: &mut dyn TraceSink,
     ) -> Result<(RunResult, Option<Vec<Option<TensorData>>>), ExecError> {
         let g = self.g;
         let order = self.order();
@@ -383,8 +397,9 @@ impl<'g> Interpreter<'g> {
             }
         }
 
+        let traced = sink.enabled();
         let mut macs = 0u64;
-        for &opid in &order {
+        for (step, &opid) in order.iter().enumerate() {
             let op = &g.ops[opid];
             let out_t = &g.tensors[op.output];
             // Read inputs out of the arena (copies: handles may move under
@@ -427,6 +442,14 @@ impl<'g> Interpreter<'g> {
                 arena.free(handles[op.output].take().unwrap())?;
             }
             arena.after_op();
+            if traced {
+                sink.record(Event::ArenaOp {
+                    step,
+                    op: opid,
+                    name: op.name.clone(),
+                    high_water: arena.stats().high_water,
+                });
+            }
         }
 
         let outputs: Vec<TensorData> = g

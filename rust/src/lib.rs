@@ -32,6 +32,10 @@
 //!   artifacts (Python never runs at inference time).
 //! - [`coordinator`] — a small serving layer (request queue, batcher,
 //!   worker pool, metrics) driving the runtime.
+//! - [`trace`] — memory-timeline tracing and planner telemetry: a
+//!   zero-cost-when-off event recorder threaded through `sched`, `alloc`,
+//!   `interp` and `split`, with Chrome trace-event (Perfetto) export and
+//!   an analytic-vs-measured peak audit.
 //! - [`util`] — in-tree substrates for JSON, RNG, property testing,
 //!   benchmarking and error handling (their crates.io equivalents are not
 //!   vendored here).
@@ -47,4 +51,5 @@ pub mod coordinator;
 pub mod sched;
 pub mod split;
 pub mod tflite;
+pub mod trace;
 pub mod util;

@@ -16,7 +16,9 @@ use mcu_reorder::interp::{ExecConfig, Interpreter, TensorData, WeightStore};
 use mcu_reorder::mcu::{CostModel, DeployReport, OverheadModel, SplitOverhead, NUCLEO_F767ZI};
 use mcu_reorder::models;
 use mcu_reorder::sched;
+use mcu_reorder::trace;
 use mcu_reorder::util::bench::Table;
+use mcu_reorder::util::json::Json;
 
 const USAGE: &str = "\
 mcu-reorder — memory-optimal operator reordering for MCU inference
@@ -44,6 +46,17 @@ COMMANDS:
                                expressed in the flatbuffer)
   optimize  --model M --out F  Embed the optimal execution order into a
             [--dtype i8|f32]   model JSON file (like tflite-tools)
+            Both optimize forms take --json [F]: structured output (peaks
+            per mode, chosen order/plan) to stdout or F instead of text
+  trace     <model|M.tflite>   Memory timeline of a schedule: ASCII chart,
+            [--order O]        Chrome trace-event JSON for Perfetto
+            [--format chrome|csv|json] [--out F]
+            [--compare O2]     op-by-op diff of two schedules
+            [--measured]       overlay the interpreter's measured arena
+                               high-water as a second counter track
+            [--audit]          assert measured == analytic peak across
+                               {default,reordered,split,elided} × dtypes
+                               (exits non-zero on any mismatch)
   split     --model M          Partial execution: beam-search operator
             [--dtype i8|f32] [--sram-budget B] [--max-factor K]
             [--rounds N] [--beam-width W] [--axes rows,cols,channels]
@@ -87,16 +100,21 @@ fn parse_args(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
     while i < args.len() {
         let a = &args[i];
         if let Some(name) = a.strip_prefix("--") {
-            let boolean = matches!(name, "check" | "table" | "chart" | "inplace" | "no-elide");
+            let boolean = matches!(
+                name,
+                "check" | "table" | "chart" | "inplace" | "no-elide" | "audit" | "measured"
+            );
             if boolean {
                 flags.insert(name.to_string(), "true".to_string());
-            } else if i + 1 < args.len() {
+            } else if i + 1 < args.len() && !args[i + 1].starts_with("--") {
                 flags.insert(name.to_string(), args[i + 1].clone());
                 i += 1;
             } else if matches!(name, "out" | "json" | "file" | "csv" | "weights") {
-                // A trailing path-valued flag must not silently write to
-                // (or read from) a file named "true"; record an empty
-                // path so the consumer rejects it loudly.
+                // A path-valued flag with no value (trailing, or followed
+                // by another flag) must not silently write to a file named
+                // "true"; record an empty path so path consumers reject it
+                // loudly. `optimize --json` deliberately reads the empty
+                // value as "JSON to stdout".
                 flags.insert(name.to_string(), String::new());
             } else {
                 flags.insert(name.to_string(), "true".to_string());
@@ -314,6 +332,52 @@ fn cmd_import(pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// `optimize --json` mode: `None` = human output; `Some(None)` = JSON to
+/// stdout (bare `--json`); `Some(Some(path))` = JSON to a file.
+fn json_mode(flags: &HashMap<String, String>) -> Option<Option<&str>> {
+    flags.get("json").map(|v| match v.as_str() {
+        "" | "true" => None,
+        path => Some(path),
+    })
+}
+
+/// Emit an `optimize --json` document to stdout or a file.
+fn emit_json(doc: &Json, dest: Option<&str>) -> Result<()> {
+    match dest {
+        Some(path) => {
+            std::fs::write(path, doc.to_pretty())
+                .with_context(|| format!("writing {path}"))?;
+        }
+        None => println!("{}", doc.to_pretty()),
+    }
+    Ok(())
+}
+
+fn order_json(order: &[usize]) -> Json {
+    Json::Arr(order.iter().map(|&o| Json::Num(o as f64)).collect())
+}
+
+fn steps_json(steps: &[mcu_reorder::split::SplitStep]) -> Json {
+    Json::Arr(
+        steps
+            .iter()
+            .map(|st| {
+                Json::obj(vec![
+                    (
+                        "segment",
+                        Json::Arr(st.segment.iter().map(|s| Json::Str(s.clone())).collect()),
+                    ),
+                    ("factor", Json::Num(st.factor as f64)),
+                    ("axis", Json::Str(st.axis.name().to_string())),
+                    ("elided", Json::Bool(st.elided)),
+                    ("peak_before", Json::Num(st.peak_before as f64)),
+                    ("peak_after", Json::Num(st.peak_after as f64)),
+                ])
+            })
+            .collect(),
+    )
+}
+
 /// `optimize` on a real TFLite flatbuffer: report reorder-only vs split vs
 /// elided peaks and write the model back with the optimal operator order
 /// embedded (buffers byte-identical).
@@ -337,62 +401,108 @@ fn cmd_optimize_tflite(path: &str, flags: &HashMap<String, String>) -> Result<()
         .map_err(|e| anyhow!("{e}"))?;
     let elided = mcu_reorder::split::optimize(g, &split_opts).map_err(|e| anyhow!("{e}"))?;
 
-    println!("model: {} ({} ops de-fused)\n", g.name, g.n_ops());
-    let verdict = |peak: usize| match budget {
-        Some(b) if peak <= b => "  [budget MET]",
-        Some(_) => "  [budget NOT met]",
-        None => "",
-    };
-    println!("file-order peak       : {:>9} B{}", file_peak, verdict(file_peak));
-    println!(
-        "reorder-only optimal  : {:>9} B{}  ({} states, {} expansions)",
-        opt.peak_bytes,
-        verdict(opt.peak_bytes),
-        stats.states,
-        stats.expansions
-    );
-    println!(
-        "split+reorder         : {:>9} B{}  ({} segment(s))",
-        mat.schedule.peak_bytes,
-        verdict(mat.schedule.peak_bytes),
-        mat.steps.len()
-    );
-    println!(
-        "split+reorder, elided : {:>9} B{}  ({} segment(s), {} join(s) streamed)",
-        elided.schedule.peak_bytes,
-        verdict(elided.schedule.peak_bytes),
-        elided.steps.len(),
-        elided.elided_steps()
-    );
-    for st in &elided.steps {
+    let json = json_mode(flags);
+    if json.is_none() {
+        println!("model: {} ({} ops de-fused)\n", g.name, g.n_ops());
+        let verdict = |peak: usize| match budget {
+            Some(b) if peak <= b => "  [budget MET]",
+            Some(_) => "  [budget NOT met]",
+            None => "",
+        };
+        println!("file-order peak       : {:>9} B{}", file_peak, verdict(file_peak));
         println!(
-            "  split [{}] ×{} along {}{}: {} B → {} B",
-            st.segment.join(" → "),
-            st.factor,
-            st.axis.name(),
-            if st.elided { ", join elided" } else { "" },
-            st.peak_before,
-            st.peak_after
+            "reorder-only optimal  : {:>9} B{}  ({} states, {} expansions)",
+            opt.peak_bytes,
+            verdict(opt.peak_bytes),
+            stats.states,
+            stats.expansions
         );
-    }
-    if !elided.steps.is_empty() {
         println!(
-            "  (splits are reported for planning; the flatbuffer stores the reordered\n   \
-             model only — partial execution needs the interpreter/JSON pipeline)"
+            "split+reorder         : {:>9} B{}  ({} segment(s))",
+            mat.schedule.peak_bytes,
+            verdict(mat.schedule.peak_bytes),
+            mat.steps.len()
         );
+        println!(
+            "split+reorder, elided : {:>9} B{}  ({} segment(s), {} join(s) streamed)",
+            elided.schedule.peak_bytes,
+            verdict(elided.schedule.peak_bytes),
+            elided.steps.len(),
+            elided.elided_steps()
+        );
+        for st in &elided.steps {
+            println!(
+                "  split [{}] ×{} along {}{}: {} B → {} B",
+                st.segment.join(" → "),
+                st.factor,
+                st.axis.name(),
+                if st.elided { ", join elided" } else { "" },
+                st.peak_before,
+                st.peak_after
+            );
+        }
+        if !elided.steps.is_empty() {
+            println!(
+                "  (splits are reported for planning; the flatbuffer stores the reordered\n   \
+                 model only — partial execution needs the interpreter/JSON pipeline)"
+            );
+        }
     }
 
-    if let Some(out) = out_flag(flags)? {
+    let out = out_flag(flags)?;
+    if let Some(out) = out {
         let order = imp.operator_order(&opt.order);
         let reordered =
             mcu_reorder::tflite::reorder(&model, &order).map_err(|e| anyhow!("{e}"))?;
         std::fs::write(out, reordered.serialize()).with_context(|| format!("writing {out}"))?;
-        println!(
-            "\nwrote {out}: operator order embedded, peak {} B → {} B (buffers byte-identical)",
-            file_peak, opt.peak_bytes
-        );
-    } else {
+        if json.is_none() {
+            println!(
+                "\nwrote {out}: operator order embedded, peak {} B → {} B (buffers byte-identical)",
+                file_peak, opt.peak_bytes
+            );
+        }
+    } else if json.is_none() {
         println!("\n(no -o/--out given: nothing written)");
+    }
+
+    if let Some(dest) = json {
+        let doc = Json::obj(vec![
+            ("model", Json::Str(g.name.clone())),
+            ("source", Json::Str(path.to_string())),
+            (
+                "peaks",
+                Json::obj(vec![
+                    ("file", Json::Num(file_peak as f64)),
+                    ("reordered", Json::Num(opt.peak_bytes as f64)),
+                    ("split", Json::Num(mat.schedule.peak_bytes as f64)),
+                    ("elided", Json::Num(elided.schedule.peak_bytes as f64)),
+                ]),
+            ),
+            (
+                "budget",
+                match budget {
+                    Some(b) => Json::Num(b as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("order", order_json(&opt.order)),
+            (
+                "search",
+                Json::obj(vec![
+                    ("states", Json::Num(stats.states as f64)),
+                    ("expansions", Json::Num(stats.expansions as f64)),
+                ]),
+            ),
+            ("plan", steps_json(&elided.steps)),
+            (
+                "out",
+                match out {
+                    Some(p) => Json::Str(p.to_string()),
+                    None => Json::Null,
+                },
+            ),
+        ]);
+        emit_json(&doc, dest)?;
     }
     Ok(())
 }
@@ -402,15 +512,171 @@ fn cmd_optimize(pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
         return cmd_optimize_tflite(path, flags);
     }
     let (g, _) = load_graph(flags, DType::I8)?;
+    let json = json_mode(flags);
     let out = out_flag(flags)?.ok_or_else(|| anyhow!("--out required"))?;
     let default_peak = sched::peak_of(&g, &g.default_order());
     let (opt, stats) = sched::optimal(&g).map_err(|e| anyhow!("{e}"))?;
     let mf = ModelFile { graph: g, execution_order: Some(opt.order.clone()) };
+    let name = mf.graph.name.clone();
     std::fs::write(out, mf.to_json()).with_context(|| format!("writing {out}"))?;
-    println!(
-        "wrote {out}: peak {} B → {} B ({} states, {} expansions)",
-        default_peak, opt.peak_bytes, stats.states, stats.expansions
-    );
+    match json {
+        None => println!(
+            "wrote {out}: peak {} B → {} B ({} states, {} expansions)",
+            default_peak, opt.peak_bytes, stats.states, stats.expansions
+        ),
+        Some(dest) => {
+            let doc = Json::obj(vec![
+                ("model", Json::Str(name)),
+                (
+                    "peaks",
+                    Json::obj(vec![
+                        ("default", Json::Num(default_peak as f64)),
+                        ("reordered", Json::Num(opt.peak_bytes as f64)),
+                    ]),
+                ),
+                ("order", order_json(&opt.order)),
+                (
+                    "search",
+                    Json::obj(vec![
+                        ("states", Json::Num(stats.states as f64)),
+                        ("expansions", Json::Num(stats.expansions as f64)),
+                    ]),
+                ),
+                ("out", Json::Str(out.to_string())),
+            ]);
+            emit_json(&doc, dest)?;
+        }
+    }
+    Ok(())
+}
+
+/// Weights for `trace --measured/--audit`: zoo models are prepared in the
+/// requested dtype (synthetic u8 graphs as-is; CNNs seeded f32 or
+/// calibrated+quantized i8); `.tflite` files carry their own weights.
+fn trace_prepared(flags: &HashMap<String, String>) -> Result<trace::audit::Prepared> {
+    if let Some(path) = path_flag(flags, "file", "--file")? {
+        if is_tflite(path) {
+            let imp = mcu_reorder::tflite::load(path)?;
+            let label = imp.graph.name.clone();
+            return Ok(trace::audit::prepare_imported(imp, &label));
+        }
+        bail!("--measured/--audit need weights: use a zoo model or a .tflite file");
+    }
+    let name = flags.get("model").ok_or_else(|| anyhow!("--model or --file required"))?;
+    let dtype = dtype_flag(flags, DType::I8)?;
+    let mut preps = trace_audit_err(trace::audit::prepare_zoo(name))?;
+    let idx = preps.iter().position(|p| p.dtype == dtype.name()).unwrap_or(0);
+    Ok(preps.swap_remove(idx))
+}
+
+fn trace_audit_err<T>(r: std::result::Result<T, String>) -> Result<T> {
+    r.map_err(|e| anyhow!("{e}"))
+}
+
+/// `mcu-reorder trace`: render a schedule as a memory timeline — ASCII
+/// chart by default, Chrome trace-event JSON (Perfetto), the per-op
+/// live-set CSV the Python mirror diffs against, or the raw event stream.
+/// `--compare` diffs two schedules op-by-op; `--measured` overlays the
+/// interpreter's arena high-water; `--audit` gates on measured == analytic.
+fn cmd_trace(pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
+    let mut flags = flags.clone();
+    if let Some(p) = pos.first() {
+        if p.contains('.') && std::path::Path::new(p).extension().is_some() {
+            flags.insert("file".to_string(), p.clone());
+        } else {
+            flags.insert("model".to_string(), p.clone());
+        }
+    }
+    let (g, embedded) = load_graph(&flags, DType::I8)?;
+    let spec = flags.get("order").map(|s| s.as_str()).unwrap_or("default");
+    let schedule = if spec == "default" && embedded.is_some() {
+        let order = embedded.unwrap();
+        let peak = sched::peak_of(&g, &order);
+        sched::Schedule { order, peak_bytes: peak }
+    } else {
+        order_for(&g, spec)?
+    };
+    let mt = sched::simulate(&g, &schedule.order);
+
+    if let Some(cmp) = flags.get("compare") {
+        let other = order_for(&g, cmp)?;
+        let b = sched::simulate(&g, &other.order);
+        println!("model: {}  A = {spec}, B = {cmp}\n", g.name);
+        print!("{}", trace::schedule_diff(&g, &mt, &b));
+        return Ok(());
+    }
+
+    let measured: Option<Vec<usize>> = if flags.contains_key("measured") {
+        let p = trace_prepared(&flags)?;
+        Some(trace_audit_err(trace::audit::measured_series(&p.graph, &p.ws, &schedule.order))?)
+    } else {
+        None
+    };
+
+    let emit = |content: String| -> Result<()> {
+        match path_flag(&flags, "out", "--out")? {
+            Some(path) => {
+                std::fs::write(path, content).with_context(|| format!("writing {path}"))?;
+                println!("wrote trace to {path}");
+            }
+            None => print!("{content}"),
+        }
+        Ok(())
+    };
+    match flags.get("format").map(|s| s.as_str()) {
+        None => {
+            println!("model: {}  order: {spec}  ({} ops)\n", g.name, g.n_ops());
+            print!("{}", mt.render_chart(&g, 48));
+            println!(
+                "\npeak working set : {} B at step {} ({})",
+                mt.peak_bytes,
+                mt.peak_step,
+                g.ops[mt.steps[mt.peak_step].op].name
+            );
+            if let Some(m) = &measured {
+                let mm = m.last().copied().unwrap_or(0);
+                println!(
+                    "measured arena   : {} B high-water ({})",
+                    mm,
+                    if mm == mt.peak_bytes { "== analytic" } else { "≠ analytic!" }
+                );
+            }
+        }
+        Some("chrome") => {
+            emit(trace::chrome::chrome_trace(&g, &mt, measured.as_deref()).to_pretty())?
+        }
+        Some("csv") => emit(trace::live_csv(&g, &mt))?,
+        Some("json") => {
+            let mut sink = trace::JsonSink::new();
+            sched::simulate_traced(&g, &schedule.order, sched::Opts::default(), &mut sink);
+            mcu_reorder::alloc::StaticPlan::best_fit_traced(&g, &schedule.order, &mut sink);
+            let doc = Json::obj(vec![
+                ("model", Json::Str(g.name.clone())),
+                ("order", order_json(&schedule.order)),
+                ("peak_bytes", Json::Num(mt.peak_bytes as f64)),
+                ("peak_step", Json::Num(mt.peak_step as f64)),
+                ("events", sink.into_json()),
+            ]);
+            emit(doc.to_pretty())?
+        }
+        Some(other) => bail!("unknown format {other:?} (chrome|csv|json)"),
+    }
+
+    if flags.contains_key("audit") {
+        let entries = if flags.contains_key("model") && !flags.contains_key("file") {
+            trace_audit_err(trace::audit::audit_zoo_model(
+                flags.get("model").unwrap(),
+            ))?
+        } else {
+            trace::audit::audit_prepared(&trace_prepared(&flags)?)
+        };
+        println!();
+        print!("{}", trace::audit::render(&entries));
+        if !trace::audit::all_ok(&entries) {
+            bail!("audit FAILED: measured arena high-water != analytic peak");
+        }
+        println!("audit ok: measured == analytic for all {} entries", entries.len());
+    }
     Ok(())
 }
 
@@ -797,6 +1063,7 @@ fn main() {
         "analyze" => cmd_analyze(&flags),
         "import" => cmd_import(&pos, &flags),
         "optimize" => cmd_optimize(&pos, &flags),
+        "trace" => cmd_trace(&pos, &flags),
         "split" => cmd_split(&flags),
         "export" => cmd_export(&flags),
         "run" => cmd_run(&flags),

@@ -25,6 +25,7 @@ pub use greedy::{greedy_depth_first, greedy_min_increase};
 pub use optimal::{optimal, optimal_bnb, optimal_opts, OptimalError, OptimalStats};
 
 use crate::graph::{Graph, OpId, TensorId};
+use crate::trace::{Event, NullSink, TraceSink};
 
 /// One step of a working-set trace: the operator executed and the tensors
 /// resident in SRAM *during* its execution (inputs + output + held).
@@ -225,7 +226,26 @@ pub fn simulate(g: &Graph, order: &[OpId]) -> MemTrace {
 
 /// [`simulate`] with scheduling options (in-place accumulation).
 pub fn simulate_opts(g: &Graph, order: &[OpId], opts: Opts) -> MemTrace {
+    simulate_traced(g, order, opts, &mut NullSink)
+}
+
+/// [`simulate_opts`] with an observability sink: emits one
+/// [`Event::TensorAlloc`] when a tensor becomes resident, one
+/// [`Event::OpExec`] per executed step (live-set bytes *during* the op),
+/// one [`Event::ElidedAccum`] per in-place-accumulation hit, and one
+/// [`Event::TensorFree`] when a tensor is reclaimed. Tensors still
+/// resident after the last op (graph outputs and held inputs) are freed
+/// at `step == order.len()`, so the event stream is balanced: every
+/// alloc has exactly one free. With a [`NullSink`] no event is built and
+/// this is byte-for-byte the untraced simulation.
+pub fn simulate_traced(
+    g: &Graph,
+    order: &[OpId],
+    opts: Opts,
+    sink: &mut dyn TraceSink,
+) -> MemTrace {
     g.check_order(order).expect("simulate: invalid execution order");
+    let traced = sink.enabled();
     let acc = accumulators(g, opts);
     let n = g.tensors.len();
     // Remaining consumer count per tensor (activation consumers only).
@@ -246,6 +266,15 @@ pub fn simulate_opts(g: &Graph, order: &[OpId], opts: Opts) -> MemTrace {
     let mut resident = vec![false; n];
     for &t in &g.inputs {
         resident[t] = true;
+        if traced {
+            sink.record(Event::TensorAlloc {
+                step: 0,
+                tensor: t,
+                name: g.tensors[t].name.clone(),
+                bytes: g.tensors[t].bytes(),
+                shared: false,
+            });
+        }
     }
 
     let mut steps = Vec::with_capacity(order.len());
@@ -254,29 +283,89 @@ pub fn simulate_opts(g: &Graph, order: &[OpId], opts: Opts) -> MemTrace {
 
     for (i, &opid) in order.iter().enumerate() {
         let op = &g.ops[opid];
+        let elided = acc[opid].is_some();
+        if traced && !resident[op.output] {
+            sink.record(Event::TensorAlloc {
+                step: i,
+                tensor: op.output,
+                name: g.tensors[op.output].name.clone(),
+                bytes: g.tensors[op.output].bytes(),
+                shared: elided,
+            });
+        }
         resident[op.output] = true;
         let live: Vec<TensorId> = (0..n).filter(|&t| resident[t]).collect();
         let mut bytes: usize = live.iter().map(|&t| g.tensors[t].bytes()).sum();
         // In-place accumulation: the output shares its accumulator's buffer.
-        if acc[opid].is_some() {
-            bytes -= g.tensors[op.output].bytes();
+        if let Some(a) = acc[opid] {
+            let saved = g.tensors[op.output].bytes();
+            bytes -= saved;
+            if traced {
+                sink.record(Event::ElidedAccum {
+                    step: i,
+                    op: opid,
+                    name: op.name.clone(),
+                    acc: a,
+                    saved_bytes: saved,
+                });
+            }
         }
         if bytes > peak {
             peak = bytes;
             peak_step = i;
         }
+        if traced {
+            sink.record(Event::OpExec {
+                step: i,
+                op: opid,
+                name: op.name.clone(),
+                bytes,
+                elided,
+            });
+        }
         steps.push(Step { op: opid, resident: live, bytes });
         // Reclaim inputs whose consumers are all done.
         for &t in &op.inputs {
             remaining[t] -= 1;
-            if remaining[t] == 0 && !is_output[t] {
+            if remaining[t] == 0 && !is_output[t] && resident[t] {
                 resident[t] = false;
+                if traced {
+                    sink.record(Event::TensorFree {
+                        step: i,
+                        tensor: t,
+                        name: g.tensors[t].name.clone(),
+                        bytes: g.tensors[t].bytes(),
+                    });
+                }
             }
         }
         // An output with no consumers that is not a graph output would be
         // dead on arrival; reclaim it to keep accounting consistent.
-        if remaining[op.output] == 0 && !is_output[op.output] {
+        if remaining[op.output] == 0 && !is_output[op.output] && resident[op.output] {
             resident[op.output] = false;
+            if traced {
+                sink.record(Event::TensorFree {
+                    step: i,
+                    tensor: op.output,
+                    name: g.tensors[op.output].name.clone(),
+                    bytes: g.tensors[op.output].bytes(),
+                });
+            }
+        }
+    }
+
+    // Balance the stream: whatever survives the schedule (graph outputs,
+    // held inputs) is released past the last step.
+    if traced {
+        for t in 0..n {
+            if resident[t] {
+                sink.record(Event::TensorFree {
+                    step: order.len(),
+                    tensor: t,
+                    name: g.tensors[t].name.clone(),
+                    bytes: g.tensors[t].bytes(),
+                });
+            }
         }
     }
 

@@ -28,6 +28,7 @@ use super::rewrite::{apply_segment, SegmentSplit, SplitPlan};
 use super::SplitError;
 use crate::graph::{Graph, OpId, OpKind, SplitAxis, TensorId};
 use crate::sched::{self, MemTrace, Schedule};
+use crate::trace::{Event, NullSink, TraceSink};
 
 /// Knobs for the beam split search.
 #[derive(Clone, Debug)]
@@ -349,8 +350,30 @@ struct BeamState {
 /// Beam split search (see module docs). The outcome's `graph` equals the
 /// input graph when no split strictly improves the reorder-only peak.
 pub fn optimize(g: &Graph, opts: &SplitOptions) -> Result<SplitOutcome, SplitError> {
+    optimize_traced(g, opts, &mut NullSink)
+}
+
+/// [`optimize`] with planner telemetry: emits one [`Event::Candidate`]
+/// per scored `(segment, factor, axis, join form)` variant (with the
+/// prune reason — `apply-failed`, `schedule-failed`, `no-improvement` —
+/// or `improved`), one [`Event::SearchRound`] summary per beam round,
+/// and [`Event::Phase`] wall-clock marks for the baseline reorder and
+/// each round (the measurement substrate for planner-scaling work).
+pub fn optimize_traced(
+    g: &Graph,
+    opts: &SplitOptions,
+    sink: &mut dyn TraceSink,
+) -> Result<SplitOutcome, SplitError> {
+    let traced = sink.enabled();
+    let t_base = std::time::Instant::now();
     let (base, _) = sched::optimal(g).map_err(|e| SplitError::Schedule(e.to_string()))?;
     let base_peak = base.peak_bytes;
+    if traced {
+        sink.record(Event::Phase {
+            name: "baseline-reorder".to_string(),
+            wall_ms: t_base.elapsed().as_secs_f64() * 1e3,
+        });
+    }
 
     let mut beam: Vec<BeamState> = vec![BeamState {
         graph: g.clone(),
@@ -362,10 +385,13 @@ pub fn optimize(g: &Graph, opts: &SplitOptions) -> Result<SplitOutcome, SplitErr
     }];
     let met = |peak: usize| opts.sram_budget.is_some_and(|b| peak <= b);
 
-    for _round in 0..opts.max_rounds {
+    for round in 0..opts.max_rounds {
         if met(beam[0].sched.peak_bytes) {
             break;
         }
+        let t_round = std::time::Instant::now();
+        let mut n_scored = 0usize;
+        let mut n_kept = 0usize;
         // Parents survive into the pool: a state that stops splitting
         // early is itself a candidate plan.
         let mut pool: Vec<BeamState> = beam.clone();
@@ -388,11 +414,49 @@ pub fn optimize(g: &Graph, opts: &SplitOptions) -> Result<SplitOutcome, SplitErr
             }
             for (seg_ops, axis) in candidate_moves(&st.graph, &trace, opts) {
                 for &(factor, elide) in &variants {
+                    n_scored += 1;
+                    // Candidate telemetry: the segment by op names (ids are
+                    // per intermediate graph and meaningless downstream).
+                    let mut candidate = |peak: Option<usize>,
+                                         kept: bool,
+                                         reason: &'static str,
+                                         sink: &mut dyn TraceSink| {
+                        sink.record(Event::Candidate {
+                            round,
+                            segment: seg_ops
+                                .iter()
+                                .map(|&o| st.graph.ops[o].name.clone())
+                                .collect(),
+                            factor,
+                            axis: axis.name(),
+                            elided: elide,
+                            peak,
+                            kept,
+                            reason,
+                        });
+                    };
                     let seg = SegmentSplit { ops: seg_ops.clone(), factor, axis, elide };
-                    let Ok(res) = apply_segment(&st.graph, &seg) else { continue };
-                    let Ok((s, _)) = sched::optimal(&res.graph) else { continue };
+                    let Ok(res) = apply_segment(&st.graph, &seg) else {
+                        if traced {
+                            candidate(None, false, "apply-failed", sink);
+                        }
+                        continue;
+                    };
+                    let Ok((s, _)) = sched::optimal(&res.graph) else {
+                        if traced {
+                            candidate(None, false, "schedule-failed", sink);
+                        }
+                        continue;
+                    };
                     if s.peak_bytes >= st.sched.peak_bytes {
+                        if traced {
+                            candidate(Some(s.peak_bytes), false, "no-improvement", sink);
+                        }
                         continue; // only strictly improving rewrites survive
+                    }
+                    n_kept += 1;
+                    if traced {
+                        candidate(Some(s.peak_bytes), true, "improved", sink);
                     }
                     let mut steps = st.steps.clone();
                     steps.push(SplitStep {
@@ -427,6 +491,19 @@ pub fn optimize(g: &Graph, opts: &SplitOptions) -> Result<SplitOutcome, SplitErr
         // Prune by (peak SRAM, recompute): lower peak first, fewer total
         // MACs on ties — the cheapest plan among equally-small ones wins.
         pool.sort_by_key(|s| (s.sched.peak_bytes, s.macs));
+        if traced {
+            sink.record(Event::SearchRound {
+                round,
+                scored: n_scored,
+                kept: n_kept,
+                pool: pool.len(),
+                best_peak: pool[0].sched.peak_bytes,
+            });
+            sink.record(Event::Phase {
+                name: format!("round-{round}"),
+                wall_ms: t_round.elapsed().as_secs_f64() * 1e3,
+            });
+        }
         pool.truncate(opts.beam_width.max(1));
         beam = pool;
         if !grew {

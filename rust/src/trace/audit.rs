@@ -1,0 +1,293 @@
+//! Analytic-vs-measured peak cross-check.
+//!
+//! The scheduler's byte accounting ([`crate::sched::peak_of`]) and the
+//! interpreter's dynamic arena ([`crate::interp`]) compute the same
+//! quantity by entirely different mechanisms — one simulates live sets,
+//! the other actually allocates, compacts and frees buffers. The audit
+//! executes every model at an arena sized to *exactly* the analytic
+//! peak and asserts the measured high-water equals it, across four
+//! scheduling modes (`default`, `reordered`, `split`, `elided`) and
+//! every quantization the model supports. Any drift — an accounting bug,
+//! a leaked handle, fragmentation the compactor misses — fails the
+//! equality, and the exact-capacity arena additionally proves the
+//! analytic number is *sufficient*, not merely matched.
+//!
+//! CI runs this as a gating step over the whole zoo plus the imported
+//! TFLite fixture (`mcu-reorder trace --audit`); the bench surfaces the
+//! same table in `benches/partial_exec.rs` output.
+
+use crate::alloc::CompactPolicy;
+use crate::graph::{DType, Graph};
+use crate::interp::{calibrate, ExecConfig, Interpreter, TensorData, WeightStore};
+use crate::models;
+use crate::sched;
+use crate::split::{self, SplitOptions};
+use crate::trace::{Event, VecSink};
+
+/// A graph plus the weights needed to execute it (one per quantization).
+pub struct Prepared {
+    pub label: String,
+    pub dtype: &'static str,
+    pub graph: Graph,
+    pub ws: WeightStore,
+}
+
+/// One audited (model, mode, dtype) cell.
+#[derive(Clone, Debug)]
+pub struct AuditEntry {
+    pub model: String,
+    pub mode: &'static str,
+    pub dtype: &'static str,
+    /// The scheduler's peak for the executed (graph, order).
+    pub analytic: usize,
+    /// The interpreter's arena high-water, or the execution error.
+    pub measured: Result<usize, String>,
+}
+
+impl AuditEntry {
+    /// Exact equality — the audit's pass condition.
+    pub fn ok(&self) -> bool {
+        self.measured.as_ref().is_ok_and(|&m| m == self.analytic)
+    }
+}
+
+/// Deterministic synthetic inputs for `g` (the ramp the CLI/benches use;
+/// i8 inputs are quantized through the store's input qparams so the
+/// payload is in-domain).
+pub fn inputs_for(g: &Graph, ws: &WeightStore) -> Result<Vec<TensorData>, String> {
+    g.inputs
+        .iter()
+        .map(|&tid| {
+            let t = &g.tensors[tid];
+            let n = t.elems();
+            let ramp: Vec<f32> = (0..n).map(|i| ((i % 17) as f32 - 8.0) / 8.0).collect();
+            Ok(match t.dtype {
+                DType::U8 => TensorData::U8((0..n).map(|i| (i % 251) as u8).collect()),
+                DType::F32 => TensorData::F32(ramp),
+                DType::I8 => match ws.qparams.get(&tid) {
+                    Some(q) => TensorData::I8(q.quantize(&ramp)),
+                    None => {
+                        TensorData::I8((0..n).map(|i| ((i % 255) as i32 - 127) as i8).collect())
+                    }
+                },
+                DType::I32 => return Err(format!("input {} has i32 dtype", t.name)),
+            })
+        })
+        .collect()
+}
+
+/// Execute `(g, ws)` under `order` at an arena of exactly `analytic`
+/// bytes; return the measured high-water.
+fn run_at_exact_capacity(
+    g: &Graph,
+    ws: &WeightStore,
+    order: &[usize],
+    analytic: usize,
+) -> Result<usize, String> {
+    let inputs = inputs_for(g, ws)?;
+    let cfg = ExecConfig {
+        arena_bytes: analytic,
+        policy: CompactPolicy::EveryOp,
+        order: Some(order.to_vec()),
+    };
+    let interp = Interpreter::new(g, ws.clone(), cfg);
+    let r = interp.run(&inputs).map_err(|e| e.to_string())?;
+    Ok(r.alloc.high_water)
+}
+
+/// The measured arena high-water after each executed op (the Chrome
+/// export's second counter track), via [`Interpreter::run_traced`].
+pub fn measured_series(
+    g: &Graph,
+    ws: &WeightStore,
+    order: &[usize],
+) -> Result<Vec<usize>, String> {
+    let inputs = inputs_for(g, ws)?;
+    let cfg = ExecConfig {
+        arena_bytes: sched::peak_of(g, order),
+        policy: CompactPolicy::EveryOp,
+        order: Some(order.to_vec()),
+    };
+    let interp = Interpreter::new(g, ws.clone(), cfg);
+    let mut sink = VecSink::new();
+    interp.run_traced(&inputs, &mut sink).map_err(|e| e.to_string())?;
+    Ok(sink
+        .events
+        .iter()
+        .filter_map(|e| match e {
+            Event::ArenaOp { high_water, .. } => Some(*high_water),
+            _ => None,
+        })
+        .collect())
+}
+
+/// Audit one prepared (graph, weights) pair across the four scheduling
+/// modes. `split`/`elided` rewrite the graph with the quick beam preset
+/// (the plan flavor is irrelevant to the audit; the accounting must hold
+/// for *any* plan the planner emits) and carry the weights across via
+/// [`split::SplitOutcome::remap_weights`].
+pub fn audit_prepared(p: &Prepared) -> Vec<AuditEntry> {
+    let g = &p.graph;
+    let entry = |mode: &'static str, analytic: usize, measured: Result<usize, String>| {
+        AuditEntry { model: p.label.clone(), mode, dtype: p.dtype, analytic, measured }
+    };
+    let mut out = Vec::with_capacity(4);
+
+    let default_order = g.default_order();
+    let analytic = sched::peak_of(g, &default_order);
+    out.push(entry("default", analytic, run_at_exact_capacity(g, &p.ws, &default_order, analytic)));
+
+    match sched::optimal(g) {
+        Ok((s, _)) => {
+            out.push(entry(
+                "reordered",
+                s.peak_bytes,
+                run_at_exact_capacity(g, &p.ws, &s.order, s.peak_bytes),
+            ));
+        }
+        Err(e) => out.push(entry("reordered", 0, Err(e.to_string()))),
+    }
+
+    for (mode, opts) in [
+        ("split", SplitOptions::quick().materialized()),
+        ("elided", SplitOptions::quick()),
+    ] {
+        match split::optimize(g, &opts) {
+            Ok(o) => {
+                let ws = o.remap_weights(&p.ws);
+                let analytic = o.schedule.peak_bytes;
+                out.push(entry(
+                    mode,
+                    analytic,
+                    run_at_exact_capacity(&o.graph, &ws, &o.schedule.order, analytic),
+                ));
+            }
+            Err(e) => out.push(entry(mode, 0, Err(e.to_string()))),
+        }
+    }
+    out
+}
+
+/// Prepare a zoo model for auditing: synthetic byte graphs audit once as
+/// `u8`; CNN models audit as `f32` (seeded weights) and `i8` (calibrated
+/// on the f32 twin, then quantized — the deployment pipeline).
+pub fn prepare_zoo(name: &str) -> Result<Vec<Prepared>, String> {
+    let probe =
+        models::by_name(name, DType::I8).ok_or_else(|| format!("unknown zoo model {name:?}"))?;
+    if probe.inputs.iter().any(|&t| probe.tensors[t].dtype == DType::U8) {
+        return Ok(vec![Prepared {
+            label: name.to_string(),
+            dtype: "u8",
+            graph: probe,
+            ws: WeightStore::default(),
+        }]);
+    }
+    let g_f32 = models::by_name(name, DType::F32).unwrap();
+    let ws_f32 = WeightStore::seeded_f32(&g_f32, 42);
+    let cal_inputs = inputs_for(&g_f32, &ws_f32)?;
+    let ranges =
+        calibrate(&g_f32, &ws_f32, &cal_inputs, 1 << 24).map_err(|e| e.to_string())?;
+    let ws_i8 = WeightStore::quantize_from(&probe, &ws_f32, &ranges);
+    Ok(vec![
+        Prepared { label: name.to_string(), dtype: "f32", graph: g_f32, ws: ws_f32 },
+        Prepared { label: name.to_string(), dtype: "i8", graph: probe, ws: ws_i8 },
+    ])
+}
+
+/// Prepare an imported TFLite model (quantization and weights come from
+/// the flatbuffer itself).
+pub fn prepare_imported(imp: crate::tflite::Imported, label: &str) -> Prepared {
+    let dtype = match imp.graph.inputs.first().map(|&t| imp.graph.tensors[t].dtype) {
+        Some(DType::F32) => "f32",
+        Some(DType::U8) => "u8",
+        _ => "i8",
+    };
+    Prepared { label: label.to_string(), dtype, graph: imp.graph, ws: imp.weights }
+}
+
+/// Audit a zoo model end to end (all quantizations × all modes).
+pub fn audit_zoo_model(name: &str) -> Result<Vec<AuditEntry>, String> {
+    let mut out = Vec::new();
+    for p in prepare_zoo(name)? {
+        out.extend(audit_prepared(&p));
+    }
+    Ok(out)
+}
+
+/// `true` iff every entry measured exactly its analytic peak.
+pub fn all_ok(entries: &[AuditEntry]) -> bool {
+    entries.iter().all(AuditEntry::ok)
+}
+
+/// Fixed-width report (`model mode dtype analytic measured verdict`).
+pub fn render(entries: &[AuditEntry]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<12} {:<10} {:<5} {:>10} {:>10}  {}\n",
+        "model", "mode", "dtype", "analytic", "measured", "verdict"
+    ));
+    for e in entries {
+        let (measured, verdict) = match &e.measured {
+            Ok(m) if e.ok() => (m.to_string(), "ok".to_string()),
+            Ok(m) => (m.to_string(), format!("MISMATCH ({:+} B)", *m as i64 - e.analytic as i64)),
+            Err(err) => ("-".to_string(), format!("ERROR: {err}")),
+        };
+        out.push_str(&format!(
+            "{:<12} {:<10} {:<5} {:>10} {:>10}  {}\n",
+            e.model, e.mode, e.dtype, e.analytic, measured, verdict
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn figure1_audits_exactly() {
+        let entries = audit_zoo_model("figure1").unwrap();
+        assert_eq!(entries.len(), 4); // u8 only: 4 modes
+        assert!(all_ok(&entries), "{}", render(&entries));
+        // default order of figure1 peaks at 5216, reordered at 4960.
+        assert_eq!(entries[0].analytic, 5216);
+        assert_eq!(entries[1].analytic, 4960);
+    }
+
+    #[test]
+    fn tiny_audits_exactly_in_both_quantizations() {
+        let entries = audit_zoo_model("tiny").unwrap();
+        assert_eq!(entries.len(), 8); // {f32, i8} × 4 modes
+        assert!(all_ok(&entries), "{}", render(&entries));
+        // f32 peaks are exactly 4× the i8 peaks mode-for-mode when the
+        // planner picks the same shape of plan; at minimum the default
+        // mode must hold the 4× dtype ratio.
+        let f32_default = &entries[0];
+        let i8_default = &entries[4];
+        assert_eq!(f32_default.analytic, 4 * i8_default.analytic);
+    }
+
+    #[test]
+    fn measured_series_is_monotone_and_ends_at_peak() {
+        let g = models::by_name("tiny", DType::F32).unwrap();
+        let ws = WeightStore::seeded_f32(&g, 42);
+        let order = g.default_order();
+        let series = measured_series(&g, &ws, &order).unwrap();
+        assert_eq!(series.len(), g.n_ops());
+        assert!(series.windows(2).all(|w| w[0] <= w[1]), "high-water is monotone");
+        assert_eq!(*series.last().unwrap(), sched::peak_of(&g, &order));
+    }
+
+    #[test]
+    fn render_marks_mismatches() {
+        let e = AuditEntry {
+            model: "m".into(),
+            mode: "default",
+            dtype: "i8",
+            analytic: 100,
+            measured: Ok(96),
+        };
+        assert!(!e.ok());
+        assert!(render(&[e]).contains("MISMATCH (-4 B)"));
+    }
+}

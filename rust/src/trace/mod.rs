@@ -1,0 +1,405 @@
+//! Memory-timeline tracing and planner telemetry.
+//!
+//! The paper's claim is a memory number; this module is the lens that
+//! turns the single scalar per model into an inspectable timeline. A
+//! [`TraceSink`] is threaded through the four layers that compute memory
+//! silently:
+//!
+//! - [`crate::sched::simulate_traced`] — per-op alloc/free/live-set
+//!   events and elided-accumulator hits;
+//! - [`crate::alloc::StaticPlan::best_fit_traced`] — slot placements
+//!   (offset, lifetime, sharing root);
+//! - [`crate::interp::Interpreter::run_traced`] — the *measured* arena
+//!   high-water after every operator;
+//! - [`crate::split::optimize_traced`] — beam-search telemetry
+//!   (candidates scored/kept, prune reasons, wall time per phase).
+//!
+//! Tracing is zero-cost when off: every producer takes `&mut dyn
+//! TraceSink`, checks [`TraceSink::enabled`] before constructing an
+//! event, and the untraced entry points delegate with a [`NullSink`]
+//! (whose `enabled()` is `false`, so no event is ever built).
+//!
+//! Exports: Chrome trace-event JSON ([`chrome::chrome_trace`], loadable
+//! in Perfetto / `chrome://tracing`), a compact per-op live-set CSV
+//! ([`live_csv`], diffed byte-for-byte against the Python DP mirror in
+//! CI), and an op-by-op schedule diff ([`schedule_diff`]). The
+//! load-bearing correctness payoff is [`audit`]: measured interpreter
+//! high-water must equal the analytic `peak_of` on every zoo model and
+//! both quantizations.
+
+pub mod audit;
+pub mod chrome;
+
+use crate::graph::{Graph, OpId, TensorId};
+use crate::sched::MemTrace;
+use crate::util::json::Json;
+
+/// One observability event. Byte counts are exact (the same accounting
+/// the scheduler's tables are made of); search events carry enough to
+/// reconstruct why the planner kept or dropped a move.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Event {
+    /// A tensor became resident (scheduler accounting). `shared` marks an
+    /// output that writes through an in-place accumulator's buffer and
+    /// therefore contributes no new bytes at its step.
+    TensorAlloc { step: usize, tensor: TensorId, name: String, bytes: usize, shared: bool },
+    /// A tensor was reclaimed. Graph outputs (and anything still resident)
+    /// are freed at `step == order.len()`, so every alloc has a free.
+    TensorFree { step: usize, tensor: TensorId, name: String, bytes: usize },
+    /// One executed step of the working-set simulation: the live-set byte
+    /// total *during* the op (the Appendix-A "Usage" column).
+    OpExec { step: usize, op: OpId, name: String, bytes: usize, elided: bool },
+    /// An in-place accumulator hit: the op's output shares `acc`'s buffer,
+    /// saving `saved_bytes` at this step.
+    ElidedAccum { step: usize, op: OpId, name: String, acc: TensorId, saved_bytes: usize },
+    /// Offline placement of one activation tensor by the best-fit planner.
+    /// `root` is the tensor's storage-sharing representative (elided
+    /// accumulator chains share one slot; `root == tensor` otherwise).
+    SlotPlaced {
+        tensor: TensorId,
+        name: String,
+        offset: usize,
+        bytes: usize,
+        start: usize,
+        end: usize,
+        root: TensorId,
+    },
+    /// Measured arena state after one interpreted operator: the dynamic
+    /// allocator's high-water mark so far (what the audit compares to the
+    /// analytic peak).
+    ArenaOp { step: usize, op: OpId, name: String, high_water: usize },
+    /// One scored beam-search move: `peak` is `None` when the rewrite or
+    /// its schedule failed; `kept` moves strictly improved their state.
+    Candidate {
+        round: usize,
+        segment: Vec<String>,
+        factor: usize,
+        axis: &'static str,
+        elided: bool,
+        peak: Option<usize>,
+        kept: bool,
+        reason: &'static str,
+    },
+    /// End-of-round beam summary: `scored` candidates expanded, `kept`
+    /// survived generation pruning, `pool` states before truncation to the
+    /// beam width, and the best peak so far.
+    SearchRound { round: usize, scored: usize, kept: usize, pool: usize, best_peak: usize },
+    /// Wall-clock of one named search phase (the measurement substrate for
+    /// planner-scaling work).
+    Phase { name: String, wall_ms: f64 },
+}
+
+impl Event {
+    /// Stable discriminant name (the `"ev"` field of the JSON encoding).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Event::TensorAlloc { .. } => "alloc",
+            Event::TensorFree { .. } => "free",
+            Event::OpExec { .. } => "op",
+            Event::ElidedAccum { .. } => "elided",
+            Event::SlotPlaced { .. } => "slot",
+            Event::ArenaOp { .. } => "arena",
+            Event::Candidate { .. } => "candidate",
+            Event::SearchRound { .. } => "round",
+            Event::Phase { .. } => "phase",
+        }
+    }
+
+    /// JSON encoding (one object per event; `"ev"` is [`Self::kind`]).
+    pub fn to_json(&self) -> Json {
+        let num = |v: usize| Json::Num(v as f64);
+        let mut fields: Vec<(&str, Json)> = vec![("ev", Json::Str(self.kind().to_string()))];
+        match self {
+            Event::TensorAlloc { step, tensor, name, bytes, shared } => fields.extend([
+                ("step", num(*step)),
+                ("tensor", num(*tensor)),
+                ("name", Json::Str(name.clone())),
+                ("bytes", num(*bytes)),
+                ("shared", Json::Bool(*shared)),
+            ]),
+            Event::TensorFree { step, tensor, name, bytes } => fields.extend([
+                ("step", num(*step)),
+                ("tensor", num(*tensor)),
+                ("name", Json::Str(name.clone())),
+                ("bytes", num(*bytes)),
+            ]),
+            Event::OpExec { step, op, name, bytes, elided } => fields.extend([
+                ("step", num(*step)),
+                ("op", num(*op)),
+                ("name", Json::Str(name.clone())),
+                ("bytes", num(*bytes)),
+                ("elided", Json::Bool(*elided)),
+            ]),
+            Event::ElidedAccum { step, op, name, acc, saved_bytes } => fields.extend([
+                ("step", num(*step)),
+                ("op", num(*op)),
+                ("name", Json::Str(name.clone())),
+                ("acc", num(*acc)),
+                ("saved_bytes", num(*saved_bytes)),
+            ]),
+            Event::SlotPlaced { tensor, name, offset, bytes, start, end, root } => fields
+                .extend([
+                    ("tensor", num(*tensor)),
+                    ("name", Json::Str(name.clone())),
+                    ("offset", num(*offset)),
+                    ("bytes", num(*bytes)),
+                    ("start", num(*start)),
+                    ("end", num(*end)),
+                    ("root", num(*root)),
+                ]),
+            Event::ArenaOp { step, op, name, high_water } => fields.extend([
+                ("step", num(*step)),
+                ("op", num(*op)),
+                ("name", Json::Str(name.clone())),
+                ("high_water", num(*high_water)),
+            ]),
+            Event::Candidate { round, segment, factor, axis, elided, peak, kept, reason } => {
+                fields.extend([
+                    ("round", num(*round)),
+                    (
+                        "segment",
+                        Json::Arr(segment.iter().map(|s| Json::Str(s.clone())).collect()),
+                    ),
+                    ("factor", num(*factor)),
+                    ("axis", Json::Str(axis.to_string())),
+                    ("elided", Json::Bool(*elided)),
+                    (
+                        "peak",
+                        match peak {
+                            Some(p) => num(*p),
+                            None => Json::Null,
+                        },
+                    ),
+                    ("kept", Json::Bool(*kept)),
+                    ("reason", Json::Str(reason.to_string())),
+                ])
+            }
+            Event::SearchRound { round, scored, kept, pool, best_peak } => fields.extend([
+                ("round", num(*round)),
+                ("scored", num(*scored)),
+                ("kept", num(*kept)),
+                ("pool", num(*pool)),
+                ("best_peak", num(*best_peak)),
+            ]),
+            Event::Phase { name, wall_ms } => fields.extend([
+                ("name", Json::Str(name.clone())),
+                ("wall_ms", Json::Num(*wall_ms)),
+            ]),
+        }
+        Json::obj(fields)
+    }
+}
+
+/// Where events go. Producers call [`Self::enabled`] before constructing
+/// an event, so a disabled sink costs one virtual call per site and zero
+/// allocations.
+pub trait TraceSink {
+    /// `false` skips event construction entirely (the zero-cost-when-off
+    /// contract).
+    fn enabled(&self) -> bool {
+        true
+    }
+    fn record(&mut self, ev: Event);
+}
+
+/// Discards everything; `enabled()` is `false`. The default sink behind
+/// every untraced entry point.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NullSink;
+
+impl TraceSink for NullSink {
+    fn enabled(&self) -> bool {
+        false
+    }
+    fn record(&mut self, _ev: Event) {}
+}
+
+/// Buffers events in memory (tests, telemetry summaries, CLI `--format
+/// json`).
+#[derive(Clone, Debug, Default)]
+pub struct VecSink {
+    pub events: Vec<Event>,
+}
+
+impl VecSink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Count events of one [`Event::kind`].
+    pub fn count(&self, kind: &str) -> usize {
+        self.events.iter().filter(|e| e.kind() == kind).count()
+    }
+}
+
+impl TraceSink for VecSink {
+    fn record(&mut self, ev: Event) {
+        self.events.push(ev);
+    }
+}
+
+/// Encodes each event to JSON as it arrives (streaming export; the
+/// original `Event` is dropped after encoding).
+#[derive(Clone, Debug, Default)]
+pub struct JsonSink {
+    rows: Vec<Json>,
+}
+
+impl JsonSink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// The recorded stream as a JSON array.
+    pub fn into_json(self) -> Json {
+        Json::Arr(self.rows)
+    }
+}
+
+impl TraceSink for JsonSink {
+    fn record(&mut self, ev: Event) {
+        self.rows.push(ev.to_json());
+    }
+}
+
+/// Per-op live-set CSV keyed by tensor *names* (`step,op,bytes,resident`;
+/// resident names sorted lexicographically, space-joined). Names — not
+/// ids — are the portable identity: the TFLite importer and the Python DP
+/// mirror assign different tensor ids to the same model, but agree on
+/// names, so CI can diff this output byte-for-byte against
+/// `tools/schedule_mirror/mirror.py --trace`.
+pub fn live_csv(g: &Graph, trace: &MemTrace) -> String {
+    let mut out = String::from("step,op,bytes,resident\n");
+    for (i, step) in trace.steps.iter().enumerate() {
+        let mut names: Vec<&str> =
+            step.resident.iter().map(|&t| g.tensors[t].name.as_str()).collect();
+        names.sort_unstable();
+        out.push_str(&format!(
+            "{},{},{},{}\n",
+            i,
+            g.ops[step.op].name,
+            step.bytes,
+            names.join(" ")
+        ));
+    }
+    out
+}
+
+/// Op-by-op diff of two schedules of the same graph: per step, the op and
+/// live bytes under each order plus the byte delta, with both peaks
+/// marked. This is the `trace --compare` rendering.
+pub fn schedule_diff(g: &Graph, a: &MemTrace, b: &MemTrace) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<5} {:<20} {:>10}  {:<20} {:>10} {:>10}\n",
+        "step", "op (A)", "bytes (A)", "op (B)", "bytes (B)", "delta"
+    ));
+    let n = a.steps.len().max(b.steps.len());
+    for i in 0..n {
+        let (an, ab, am) = match a.steps.get(i) {
+            Some(s) => {
+                (g.ops[s.op].name.as_str(), s.bytes as i64, if i == a.peak_step { "*" } else { "" })
+            }
+            None => ("-", 0, ""),
+        };
+        let (bn, bb, bm) = match b.steps.get(i) {
+            Some(s) => {
+                (g.ops[s.op].name.as_str(), s.bytes as i64, if i == b.peak_step { "*" } else { "" })
+            }
+            None => ("-", 0, ""),
+        };
+        out.push_str(&format!(
+            "{:<5} {:<20} {:>10}{} {:<20} {:>10}{} {:>+10}\n",
+            i,
+            an,
+            ab,
+            if am.is_empty() { " " } else { am },
+            bn,
+            bb,
+            if bm.is_empty() { " " } else { bm },
+            bb - ab
+        ));
+    }
+    out.push_str(&format!(
+        "peak: A = {} B (step {}), B = {} B (step {}), delta = {:+} B\n",
+        a.peak_bytes,
+        a.peak_step,
+        b.peak_bytes,
+        b.peak_step,
+        b.peak_bytes as i64 - a.peak_bytes as i64
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched;
+
+    #[test]
+    fn nullsink_reports_disabled() {
+        assert!(!NullSink.enabled());
+        let mut s = NullSink;
+        s.record(Event::Phase { name: "x".into(), wall_ms: 1.0 }); // no-op
+    }
+
+    #[test]
+    fn vecsink_buffers_and_counts() {
+        let mut s = VecSink::new();
+        assert!(s.enabled());
+        s.record(Event::Phase { name: "a".into(), wall_ms: 0.5 });
+        s.record(Event::SearchRound { round: 0, scored: 3, kept: 1, pool: 2, best_peak: 100 });
+        assert_eq!(s.events.len(), 2);
+        assert_eq!(s.count("phase"), 1);
+        assert_eq!(s.count("round"), 1);
+    }
+
+    #[test]
+    fn event_json_roundtrips_through_parser() {
+        let ev = Event::Candidate {
+            round: 1,
+            segment: vec!["c1".into(), "dw".into()],
+            factor: 2,
+            axis: "rows",
+            elided: true,
+            peak: Some(4096),
+            kept: true,
+            reason: "improved",
+        };
+        let j = Json::parse(&ev.to_json().to_string()).unwrap();
+        assert_eq!(j.get("ev").as_str(), Some("candidate"));
+        assert_eq!(j.get("peak").as_f64(), Some(4096.0));
+        assert_eq!(j.get("segment").as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn live_csv_is_name_keyed_and_sorted() {
+        let g = sched::tests::figure1_graph();
+        let trace = sched::simulate(&g, &g.default_order());
+        let csv = live_csv(&g, &trace);
+        let lines: Vec<&str> = csv.lines().collect();
+        assert_eq!(lines[0], "step,op,bytes,resident");
+        assert_eq!(lines.len(), trace.steps.len() + 1);
+        // Step 2 (op3): resident = op1, op2, op3 at 5216 B.
+        assert_eq!(lines[3], "2,op3,5216,op1 op2 op3");
+    }
+
+    #[test]
+    fn schedule_diff_reports_both_peaks() {
+        let g = sched::tests::figure1_graph();
+        let a = sched::simulate(&g, &g.default_order());
+        let b = sched::simulate(&g, &[0, 3, 5, 1, 2, 4, 6]);
+        let d = schedule_diff(&g, &a, &b);
+        assert!(d.contains("5216"));
+        assert!(d.contains("4960"));
+        assert!(d.contains("-256"));
+    }
+}

@@ -1,0 +1,282 @@
+//! Cross-layer integration of the trace subsystem: event-stream
+//! invariants, analytic-vs-measured equality, zero-cost-when-off
+//! structural equality, and the Chrome export contract.
+//!
+//! The acceptance properties live here:
+//! - the scheduler's event stream is *balanced*: every `TensorAlloc` has
+//!   exactly one `TensorFree`, frees never precede allocs, and the
+//!   residual live set is released at `step == order.len()`;
+//! - the traced simulation equals the untraced one field-for-field (the
+//!   `NullSink` paths are the production paths);
+//! - traced peak == `peak_of` across the zoo × {default, reordered,
+//!   split, elided} × {f32, i8};
+//! - the audit (measured interpreter high-water == analytic peak at an
+//!   exact-capacity arena) passes on representative models — CI runs the
+//!   full zoo through `mcu-reorder trace --audit`;
+//! - the Chrome trace-event export is valid JSON with the documented
+//!   event shapes for every zoo model;
+//! - the best-fit planner's `SlotPlaced` events reproduce the plan.
+
+use mcu_reorder::alloc::StaticPlan;
+use mcu_reorder::graph::DType;
+use mcu_reorder::interp::WeightStore;
+use mcu_reorder::models;
+use mcu_reorder::sched;
+use mcu_reorder::split::{self, SplitOptions};
+use mcu_reorder::trace::{self, audit, Event, NullSink, VecSink};
+use mcu_reorder::util::json::Json;
+
+use std::collections::HashMap;
+
+/// Per-tensor alloc/free bookkeeping over one event stream.
+fn balance_of(events: &[Event]) -> HashMap<usize, (Vec<usize>, Vec<usize>)> {
+    let mut per: HashMap<usize, (Vec<usize>, Vec<usize>)> = HashMap::new();
+    for ev in events {
+        match ev {
+            Event::TensorAlloc { step, tensor, .. } => {
+                per.entry(*tensor).or_default().0.push(*step)
+            }
+            Event::TensorFree { step, tensor, .. } => {
+                per.entry(*tensor).or_default().1.push(*step)
+            }
+            _ => {}
+        }
+    }
+    per
+}
+
+#[test]
+fn event_stream_is_balanced_on_every_zoo_model() {
+    for name in models::MODEL_NAMES {
+        let g = models::by_name(name, DType::I8).unwrap();
+        for order in [g.default_order(), sched::optimal(&g).unwrap().0.order] {
+            let mut sink = VecSink::new();
+            let mt = sched::simulate_traced(&g, &order, sched::Opts::default(), &mut sink);
+
+            assert_eq!(sink.count("op"), order.len(), "{name}: one OpExec per step");
+            let n_end_frees = sink
+                .events
+                .iter()
+                .filter(|e| matches!(e, Event::TensorFree { step, .. } if *step == order.len()))
+                .count();
+            assert!(n_end_frees >= g.outputs.len(), "{name}: outputs freed at the end");
+
+            for (tensor, (allocs, frees)) in balance_of(&sink.events) {
+                assert_eq!(
+                    allocs.len(),
+                    frees.len(),
+                    "{name}: tensor {tensor} has {} allocs but {} frees",
+                    allocs.len(),
+                    frees.len()
+                );
+                assert_eq!(allocs.len(), 1, "{name}: tensor {tensor} allocated once");
+                assert!(
+                    allocs[0] <= frees[0],
+                    "{name}: tensor {tensor} freed before allocated"
+                );
+            }
+
+            // The stream reproduces the trace's byte accounting.
+            let exec_bytes: Vec<usize> = sink
+                .events
+                .iter()
+                .filter_map(|e| match e {
+                    Event::OpExec { bytes, .. } => Some(*bytes),
+                    _ => None,
+                })
+                .collect();
+            let step_bytes: Vec<usize> = mt.steps.iter().map(|s| s.bytes).collect();
+            assert_eq!(exec_bytes, step_bytes, "{name}");
+        }
+    }
+}
+
+/// The NullSink path IS the production path: traced and untraced
+/// simulation must agree on every field.
+#[test]
+fn nullsink_simulation_is_structurally_identical() {
+    for name in models::MODEL_NAMES {
+        let g = models::by_name(name, DType::I8).unwrap();
+        let order = g.default_order();
+        let a = sched::simulate_opts(&g, &order, sched::Opts::default());
+        let b = sched::simulate_traced(&g, &order, sched::Opts::default(), &mut NullSink);
+        assert_eq!(a.peak_bytes, b.peak_bytes, "{name}");
+        assert_eq!(a.peak_step, b.peak_step, "{name}");
+        assert_eq!(a.order, b.order, "{name}");
+        assert_eq!(a.steps.len(), b.steps.len(), "{name}");
+        for (sa, sb) in a.steps.iter().zip(&b.steps) {
+            assert_eq!(sa.op, sb.op, "{name}");
+            assert_eq!(sa.bytes, sb.bytes, "{name}");
+            assert_eq!(sa.resident, sb.resident, "{name}");
+        }
+    }
+}
+
+#[test]
+fn traced_peak_matches_peak_of_across_zoo_and_dtypes() {
+    for name in models::MODEL_NAMES {
+        for dtype in [DType::I8, DType::F32] {
+            let g = models::by_name(name, dtype).unwrap();
+            for order in [g.default_order(), sched::optimal(&g).unwrap().0.order] {
+                let mut sink = VecSink::new();
+                let mt = sched::simulate_traced(&g, &order, sched::Opts::default(), &mut sink);
+                assert_eq!(
+                    mt.peak_bytes,
+                    sched::peak_of(&g, &order),
+                    "{name}/{}",
+                    dtype.name()
+                );
+            }
+        }
+    }
+}
+
+/// Split and elided rewrites flow through the traced simulation with the
+/// same accounting the planner promised.
+#[test]
+fn traced_peak_matches_schedule_on_split_and_elided_graphs() {
+    for name in ["mobilenet", "audionet", "tiny"] {
+        for dtype in [DType::I8, DType::F32] {
+            let g = models::by_name(name, dtype).unwrap();
+            for opts in [SplitOptions::quick(), SplitOptions::quick().materialized()] {
+                let out = split::optimize(&g, &opts).unwrap();
+                let mt = sched::simulate(&out.graph, &out.schedule.order);
+                assert_eq!(
+                    mt.peak_bytes,
+                    out.schedule.peak_bytes,
+                    "{name}/{} elide={}",
+                    dtype.name(),
+                    opts.elide
+                );
+            }
+        }
+    }
+}
+
+/// The audit's core claim on representative models: the interpreter,
+/// running at an arena of exactly the analytic peak, measures a
+/// high-water equal to it, for all four modes and every dtype the model
+/// supports. CI gates the full zoo (release build) via
+/// `mcu-reorder trace --audit`.
+#[test]
+fn audit_passes_on_representative_models() {
+    for name in ["figure1", "tiny", "streamnet"] {
+        let entries = audit::audit_zoo_model(name).unwrap();
+        assert!(
+            audit::all_ok(&entries),
+            "audit failed for {name}:\n{}",
+            audit::render(&entries)
+        );
+    }
+}
+
+#[test]
+fn optimize_traced_telemetry_is_consistent() {
+    let g = models::by_name("mobilenet", DType::I8).unwrap();
+    let opts = SplitOptions::quick();
+    let mut sink = VecSink::new();
+    let traced = split::optimize_traced(&g, &opts, &mut sink).unwrap();
+    let untraced = split::optimize(&g, &opts).unwrap();
+    assert_eq!(traced.schedule.peak_bytes, untraced.schedule.peak_bytes);
+    assert_eq!(traced.schedule.order, untraced.schedule.order);
+
+    assert!(sink.count("phase") >= 2, "baseline + at least one round phase");
+    assert!(sink.count("candidate") > 0);
+    assert_eq!(sink.count("round"), 1, "quick() runs one beam round");
+
+    // The round summary agrees with the per-candidate events.
+    let kept_candidates = sink
+        .events
+        .iter()
+        .filter(|e| matches!(e, Event::Candidate { kept: true, .. }))
+        .count();
+    let scored_candidates = sink.count("candidate");
+    match sink.events.iter().find(|e| matches!(e, Event::SearchRound { .. })) {
+        Some(Event::SearchRound { scored, kept, best_peak, .. }) => {
+            assert_eq!(*scored, scored_candidates);
+            assert_eq!(*kept, kept_candidates);
+            assert_eq!(*best_peak, traced.schedule.peak_bytes);
+        }
+        _ => unreachable!(),
+    }
+    // Every kept candidate strictly improved something: its peak is below
+    // the reorder-only baseline of its state.
+    for ev in &sink.events {
+        if let Event::Candidate { kept: true, peak, reason, .. } = ev {
+            assert_eq!(*reason, "improved");
+            assert!(peak.unwrap() < traced.base_peak);
+        }
+    }
+}
+
+#[test]
+fn chrome_export_is_valid_for_every_zoo_model() {
+    for name in models::MODEL_NAMES {
+        let g = models::by_name(name, DType::I8).unwrap();
+        let order = g.default_order();
+        let mt = sched::simulate(&g, &order);
+        let doc = trace::chrome::chrome_trace(&g, &mt, None);
+        let j = Json::parse(&doc.to_pretty()).unwrap_or_else(|e| {
+            panic!("{name}: chrome export is not valid JSON: {e:?}")
+        });
+        let evs = j.get("traceEvents").as_arr().unwrap();
+        assert_eq!(evs.len(), 2 + 2 * mt.steps.len() + 1, "{name}");
+        assert_eq!(
+            j.get("otherData").get("peak_bytes").as_f64(),
+            Some(mt.peak_bytes as f64),
+            "{name}"
+        );
+        // Counter samples reproduce the analytic byte series.
+        let counters: Vec<usize> = evs
+            .iter()
+            .filter(|e| e.get("ph").as_str() == Some("C"))
+            .map(|e| e.get("args").get("bytes").as_f64().unwrap() as usize)
+            .collect();
+        let series: Vec<usize> = mt.steps.iter().map(|s| s.bytes).collect();
+        assert_eq!(counters, series, "{name}");
+    }
+}
+
+#[test]
+fn best_fit_traced_slot_events_reproduce_the_plan() {
+    let g = models::by_name("swiftnet", DType::I8).unwrap();
+    let order = sched::optimal(&g).unwrap().0.order;
+    let mut sink = VecSink::new();
+    let plan = StaticPlan::best_fit_traced(&g, &order, &mut sink);
+    let untraced = StaticPlan::best_fit(&g, &order);
+    assert_eq!(plan.arena_bytes, untraced.arena_bytes);
+
+    let n_act = g.tensors.iter().filter(|t| !t.is_weight).count();
+    assert_eq!(sink.count("slot"), n_act, "one SlotPlaced per activation tensor");
+    for ev in &sink.events {
+        if let Event::SlotPlaced { tensor, offset, bytes, .. } = ev {
+            assert_eq!(plan.offsets[tensor], *offset);
+            assert!(offset + bytes <= plan.arena_bytes);
+        }
+    }
+}
+
+#[test]
+fn run_traced_arena_series_hits_the_analytic_peak() {
+    let g = models::by_name("tiny", DType::F32).unwrap();
+    let ws = WeightStore::seeded_f32(&g, 42);
+    let order = sched::optimal(&g).unwrap().0.order;
+    let series = audit::measured_series(&g, &ws, &order).unwrap();
+    assert_eq!(series.len(), g.n_ops());
+    assert_eq!(*series.last().unwrap(), sched::peak_of(&g, &order));
+}
+
+/// `schedule_diff` + `live_csv` smoke over a real model (their exact
+/// formats are pinned by unit tests; this checks they stay usable on a
+/// big graph and agree on the peak).
+#[test]
+fn diff_and_csv_render_on_mobilenet() {
+    let g = models::by_name("mobilenet", DType::I8).unwrap();
+    let a = sched::simulate(&g, &g.default_order());
+    let b = sched::simulate(&g, &sched::optimal(&g).unwrap().0.order);
+    let d = trace::schedule_diff(&g, &a, &b);
+    assert!(d.contains(&format!("peak: A = {} B", a.peak_bytes)));
+    let csv = trace::live_csv(&g, &a);
+    assert_eq!(csv.lines().count(), a.steps.len() + 1);
+    assert!(csv.lines().nth(1).unwrap().starts_with("0,conv1,"));
+}

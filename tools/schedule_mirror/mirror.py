@@ -1120,6 +1120,25 @@ def bench_metrics():
         yield name, g, rows, mat, eli, metrics
 
 
+def live_csv(g, order):
+    """Per-op live-set CSV keyed by tensor names.
+
+    Byte-identical to `rust/src/trace/mod.rs::live_csv`: header
+    `step,op,bytes,resident`, one row per scheduled op, resident tensor
+    names sorted lexicographically and space-joined. Names — not ids —
+    are the portable identity (the Rust TFLite importer and this mirror
+    assign different tensor ids to tflitecnn but agree on names), which
+    is what lets CI `diff` this output against
+    `mcu-reorder trace --model M --format csv`.
+    """
+    steps, _, _ = simulate(g, order)
+    out = ["step,op,bytes,resident"]
+    for i, (opid, live, nbytes) in enumerate(steps):
+        names = sorted(g.tensors[t].name for t in live)
+        out.append(f"{i},{g.ops[opid].name},{nbytes},{' '.join(names)}")
+    return "\n".join(out) + "\n"
+
+
 def main(argv):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", action="store_true",
@@ -1130,7 +1149,24 @@ def main(argv):
                     help="recompute every *_peak metric and fail on any "
                          "mismatch with the given BENCH_partial_exec.json "
                          "(the Rust-vs-mirror drift gate)")
+    ap.add_argument("--trace", metavar="MODEL",
+                    help="print the per-op live-set CSV for MODEL, "
+                         "byte-identical to `mcu-reorder trace --model "
+                         "MODEL --format csv` (the Rust-vs-mirror "
+                         "timeline gate)")
+    ap.add_argument("--order", choices=["default", "optimal"],
+                    default="default",
+                    help="schedule used by --trace (default: default)")
     args = ap.parse_args(argv)
+    if args.trace:
+        for name, g in zoo():
+            if name == args.trace:
+                order = g.default_order() if args.order == "default" else optimal(g)[0]
+                sys.stdout.write(live_csv(g, order))
+                return 0
+        print(f"unknown model {args.trace!r} (want one of "
+              f"{', '.join(n for n, _ in zoo())})", file=sys.stderr)
+        return 1
     metrics = {}
     for name, g, rows, mat, eli, metrics in bench_metrics():
         if args.report:
