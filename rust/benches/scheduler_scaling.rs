@@ -6,9 +6,21 @@
 //! - branch-and-bound with dominance memo — optimal, different constants;
 //! - greedy min-increase / depth-first — heuristics (optimality gap);
 //! - exhaustive enumeration — ground truth (small sizes only).
+//!
+//! Plus the planner-scaling section: full beam split searches over
+//! deterministic `synth::layered` graphs at 100/300/1000 ops. The
+//! layered peaks are gated against `BENCH_baseline/scheduler_scaling.json`
+//! (computed independently by `tools/schedule_mirror/mirror.py
+//! --scaling-baseline`); wall-times and work counters are reported but
+//! not gated. Hard in-bench acceptance: the 1000-op graph must plan in
+//! under 5 s and spend ≥ 10× fewer full-schedule evaluations than the
+//! naive strategy would on the same candidate stream.
+
+use std::time::Instant;
 
 use mcu_reorder::models::synth;
 use mcu_reorder::sched;
+use mcu_reorder::split::{optimize, SplitOptions};
 use mcu_reorder::util::bench::{black_box, write_json_report, Bencher, Table};
 use mcu_reorder::util::rng::Rng;
 use mcu_reorder::util::stats;
@@ -104,10 +116,86 @@ fn main() {
     b.bench("optimal-dp/mobilenet (30 ops)", || black_box(sched::optimal(&mnet).unwrap()));
     b.summary();
 
-    let metrics = vec![
+    let mut metrics = vec![
         ("default_gap_mean".to_string(), stats::mean(&gaps_default)),
         ("greedy_gap_mean".to_string(), stats::mean(&gaps_greedy)),
     ];
+
+    println!("\n=== planner scaling: layered graphs, incremental fast path ===\n");
+    let mut scaling = Table::new(&[
+        "graph", "default", "reorder", "planned", "wall", "scored", "dedup", "full-DP",
+        "cache h/m", "÷naive",
+    ]);
+    for n in [100usize, 300, 1000] {
+        let g = synth::layered(&mut Rng::new(n as u64), n);
+        assert_eq!(g.n_ops(), n);
+        let default_peak = sched::peak_of(&g, &g.default_order());
+        let (opt, _) = sched::optimal(&g).unwrap();
+        // layered100 runs the small preset the Python mirror re-plans
+        // with naive full-DP scoring (its planned peak is gated against
+        // the mirror); the bigger sizes run the full default search,
+        // which only the incremental fast path makes tractable.
+        let opts = if n == 100 {
+            SplitOptions {
+                max_factor: 2,
+                max_rounds: 2,
+                max_candidates: 8,
+                beam_width: 2,
+                ..SplitOptions::default()
+            }
+        } else {
+            SplitOptions::default()
+        }
+        .with_threads(4);
+        let t0 = Instant::now();
+        let out = optimize(&g, &opts).unwrap();
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let st = out.stats;
+        if n == 100 {
+            // The incremental path must reproduce the naive reference
+            // bit for bit — same plan, same schedule, same peak.
+            let t1 = Instant::now();
+            let naive = optimize(&g, &opts.clone().naive()).unwrap();
+            let naive_ms = t1.elapsed().as_secs_f64() * 1e3;
+            assert_eq!(naive.schedule, out.schedule);
+            assert_eq!(naive.steps, out.steps);
+            metrics.push((format!("layered{n}.naive_wall_ms"), naive_ms));
+        }
+        if n == 1000 {
+            assert!(wall_ms < 5_000.0, "layered1000 planned in {wall_ms:.0} ms (budget 5 s)");
+            assert!(
+                st.naive_evals() >= 10 * st.full_evals.max(1),
+                "eval ratio {:.1} below the 10× acceptance floor ({} naive-equivalent vs {} full)",
+                st.eval_ratio(),
+                st.naive_evals(),
+                st.full_evals
+            );
+        }
+        scaling.row(&[
+            format!("layered{n}"),
+            format!("{default_peak}"),
+            format!("{}", opt.peak_bytes),
+            format!("{}", out.schedule.peak_bytes),
+            format!("{wall_ms:.0}ms"),
+            format!("{}", st.scored),
+            format!("{}", st.deduped),
+            format!("{}", st.full_evals),
+            format!("{}/{}", st.cache_hits, st.cache_misses),
+            format!("{:.0}×", st.eval_ratio()),
+        ]);
+        metrics.push((format!("layered{n}.default_peak"), default_peak as f64));
+        metrics.push((format!("layered{n}.reorder_peak"), opt.peak_bytes as f64));
+        metrics.push((format!("layered{n}.planned_peak"), out.schedule.peak_bytes as f64));
+        metrics.push((format!("layered{n}.plan_wall_ms"), wall_ms));
+        metrics.push((format!("layered{n}.candidates_scored"), st.scored as f64));
+        metrics.push((format!("layered{n}.deduped"), st.deduped as f64));
+        metrics.push((format!("layered{n}.full_evals"), st.full_evals as f64));
+        metrics.push((format!("layered{n}.cache_hits"), st.cache_hits as f64));
+        metrics.push((format!("layered{n}.cache_misses"), st.cache_misses as f64));
+        metrics.push((format!("layered{n}.eval_ratio"), st.eval_ratio()));
+    }
+    scaling.print();
+
     match write_json_report("scheduler_scaling", &metrics, b.results()) {
         Ok(p) => println!("\nwrote {p}"),
         Err(e) => eprintln!("could not write JSON report: {e}"),

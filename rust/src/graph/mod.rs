@@ -261,7 +261,7 @@ pub fn axis_extent(shape: &[usize], axis: SplitAxis) -> usize {
 }
 
 /// A tensor: shape, dtype, and its role in the dataflow.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Tensor {
     pub id: TensorId,
     pub name: String,
@@ -290,7 +290,7 @@ impl Tensor {
 }
 
 /// A single-output operator.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Op {
     pub id: OpId,
     pub name: String,
@@ -452,8 +452,11 @@ impl std::fmt::Display for GraphError {
 
 impl std::error::Error for GraphError {}
 
-/// The computation graph.
-#[derive(Clone, Debug)]
+/// The computation graph. Structural equality (`PartialEq`) is what the
+/// beam planner's frontier dedup keys on: two states reached through
+/// different rewrite interleavings compare equal exactly when every
+/// tensor, op and boundary list matches.
+#[derive(Clone, Debug, PartialEq)]
 pub struct Graph {
     pub name: String,
     pub tensors: Vec<Tensor>,

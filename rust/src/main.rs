@@ -40,6 +40,7 @@ COMMANDS:
                                rest of the toolchain
   optimize  MODEL.tflite -o F  The paper's tool: embed the memory-optimal
             [--budget B]       execution order into a real TFLite model
+            [--threads N]
                                (weight buffers byte-identical; reports
                                reorder-only vs split vs elided peaks — the
                                splits themselves are reported but cannot be
@@ -47,7 +48,8 @@ COMMANDS:
   optimize  --model M --out F  Embed the optimal execution order into a
             [--dtype i8|f32]   model JSON file (like tflite-tools)
             Both optimize forms take --json [F]: structured output (peaks
-            per mode, chosen order/plan) to stdout or F instead of text
+            per mode, chosen order/plan, planner/cache telemetry) to
+            stdout or F instead of text
   trace     <model|M.tflite>   Memory timeline of a schedule: ASCII chart,
             [--order O]        Chrome trace-event JSON for Perfetto
             [--format chrome|csv|json] [--out F]
@@ -60,7 +62,7 @@ COMMANDS:
   split     --model M          Partial execution: beam-search operator
             [--dtype i8|f32] [--sram-budget B] [--max-factor K]
             [--rounds N] [--beam-width W] [--axes rows,cols,channels]
-            [--no-elide] [--out F]
+            [--no-elide] [--threads N] [--out F]
                                splitting over (segment, factor, axis) —
                                row/column slices are halo-exact, channel
                                slices partition weights with zero
@@ -69,9 +71,13 @@ COMMANDS:
                                that lowers the peak (write-through slices,
                                no ConcatSlices copy; --no-elide reproduces
                                the materialized-join planner); reports the
-                               peak-SRAM floor broken and the per-axis
-                               overhead, optionally writing the split
-                               model + schedule to F
+                               peak-SRAM floor broken, the per-axis
+                               overhead and the planner's work counters
+                               (candidates scored/deduped, full-DP runs,
+                               region-cache hits), optionally writing the
+                               split model + schedule to F; --threads N
+                               scores beam candidates on N threads with
+                               bit-identical results
   export    --model M --json F --weights F [--dtype f32]
                                Export graph JSON + seeded weights for the
                                AOT pipeline (python/compile/aot.py)
@@ -378,6 +384,27 @@ fn steps_json(steps: &[mcu_reorder::split::SplitStep]) -> Json {
     )
 }
 
+/// Planner work counters for `optimize --json` / `split`: how much the
+/// incremental fast path saved over naive full-DP candidate scoring.
+fn planner_json(st: &mcu_reorder::split::PlannerStats) -> Json {
+    Json::obj(vec![
+        ("scored", Json::Num(st.scored as f64)),
+        ("deduped", Json::Num(st.deduped as f64)),
+        ("improved", Json::Num(st.improved as f64)),
+        ("bounded", Json::Num(st.bounded as f64)),
+        ("full_evals", Json::Num(st.full_evals as f64)),
+        ("cache_lookups", Json::Num(st.cache_lookups as f64)),
+        ("cache_hits", Json::Num(st.cache_hits as f64)),
+        ("cache_misses", Json::Num(st.cache_misses as f64)),
+        ("eval_ratio", Json::Num(st.eval_ratio())),
+        ("threads", Json::Num(st.threads as f64)),
+    ])
+}
+
+fn threads_flag(flags: &HashMap<String, String>) -> Result<usize> {
+    Ok(flags.get("threads").map(|s| s.parse()).transpose()?.unwrap_or(1))
+}
+
 /// `optimize` on a real TFLite flatbuffer: report reorder-only vs split vs
 /// elided peaks and write the model back with the optimal operator order
 /// embedded (buffers byte-identical).
@@ -396,7 +423,8 @@ fn cmd_optimize_tflite(path: &str, flags: &HashMap<String, String>) -> Result<()
     let split_opts = mcu_reorder::split::SplitOptions {
         sram_budget: budget,
         ..Default::default()
-    };
+    }
+    .with_threads(threads_flag(flags)?);
     let mat = mcu_reorder::split::optimize(g, &split_opts.clone().materialized())
         .map_err(|e| anyhow!("{e}"))?;
     let elided = mcu_reorder::split::optimize(g, &split_opts).map_err(|e| anyhow!("{e}"))?;
@@ -447,6 +475,18 @@ fn cmd_optimize_tflite(path: &str, flags: &HashMap<String, String>) -> Result<()
                  model only — partial execution needs the interpreter/JSON pipeline)"
             );
         }
+        let st = &elided.stats;
+        println!(
+            "planner               : {} scored ({} deduped), {} full DP, cache {}/{} hit/miss, \
+             {:.0}× vs naive, {} thread(s)",
+            st.scored,
+            st.deduped,
+            st.full_evals,
+            st.cache_hits,
+            st.cache_misses,
+            st.eval_ratio(),
+            st.threads
+        );
     }
 
     let out = out_flag(flags)?;
@@ -494,6 +534,7 @@ fn cmd_optimize_tflite(path: &str, flags: &HashMap<String, String>) -> Result<()
                 ]),
             ),
             ("plan", steps_json(&elided.steps)),
+            ("planner", planner_json(&elided.stats)),
             (
                 "out",
                 match out {
@@ -702,7 +743,8 @@ fn cmd_split(flags: &HashMap<String, String>) -> Result<()> {
         axes,
         elide: !flags.contains_key("no-elide"),
         ..Default::default()
-    };
+    }
+    .with_threads(threads_flag(flags)?);
 
     let default_peak = sched::peak_of(&g, &g.default_order());
     let t0 = std::time::Instant::now();
@@ -737,6 +779,18 @@ fn cmd_split(flags: &HashMap<String, String>) -> Result<()> {
     if outcome.steps.is_empty() {
         println!("  (no split improved on reorder-only scheduling)");
     }
+    let st = &outcome.stats;
+    println!(
+        "planner               : {} scored ({} deduped), {} full DP, cache {}/{} hit/miss, \
+         {:.0}× vs naive, {} thread(s)",
+        st.scored,
+        st.deduped,
+        st.full_evals,
+        st.cache_hits,
+        st.cache_misses,
+        st.eval_ratio(),
+        st.threads
+    );
     let cost = CostModel::cortex_m7_reference();
     let ov = SplitOverhead::measure(&cost, &g, &outcome.graph, &NUCLEO_F767ZI);
     println!(

@@ -1,6 +1,6 @@
 //! Synthetic DAG generators for property tests and scheduler ablations.
 
-use crate::graph::{DType, Graph, GraphBuilder, TensorId};
+use crate::graph::{Act, DType, Graph, GraphBuilder, Padding, TensorId};
 use crate::util::rng::Rng;
 
 /// Random single-output DAG of `n_ops` synthetic operators; each consumes
@@ -65,6 +65,80 @@ pub fn series_parallel(rng: &mut Rng, depth: usize, width: usize) -> Graph {
     b.finish().expect("series-parallel dag is valid")
 }
 
+/// Deterministic layered CNN of exactly `n_ops` operators, for the
+/// planner-scaling bench (100/300/1000 ops). An MBConv-style
+/// expand→depthwise→contract stem (×4 channel expansion) followed by a
+/// random walk over realistic block types — plain conv, depthwise+
+/// pointwise pair, standalone ReLU, residual pair, stride-2 downsample —
+/// on a 32×32×8 input, capped at 64 channels / 4×4 spatial, closed by
+/// `global_avgpool → dense(10) → softmax`.
+///
+/// Two deliberate shape choices keep the graph *plannable*, so the
+/// scaling bench's split-planner runs have real work to do:
+///
+/// - the stem's ×4-expanded intermediates are the fattest tensors in the
+///   graph and sit interior to a short sliceable chain — exactly the
+///   partial-execution sweet spot (a fat graph *input* would be
+///   unsplittable: it stays fully resident under any banding);
+/// - residual pairs only appear once the spatial extent has dropped to
+///   ≤ 8: a residual `Add` keeps three same-shape tensors live at once
+///   and no split can shrink that, so full-resolution residuals would
+///   floor the peak at an unimprovable value.
+///
+/// Uses only [`Rng::range`] so `tools/schedule_mirror/mirror.py` can
+/// regenerate it bit-exactly (same xoshiro stream, same names, same
+/// shapes) — the mirror recomputes this generator's gated bench peaks
+/// independently. Any change here must be made in lockstep with the
+/// mirror's `layered`.
+pub fn layered(rng: &mut Rng, n_ops: usize) -> Graph {
+    assert!(n_ops >= 7, "layered graphs need the 3-op stem, a body and the 3-op tail");
+    let mut b = GraphBuilder::new("layered");
+    let mut cur = b.input("x", &[1, 32, 32, 8], DType::I8);
+    let mut h = 32usize;
+    let mut c = 8usize;
+    cur = b.conv2d("stem.ex", cur, 4 * c, (1, 1), (1, 1), Padding::Same, Act::Relu);
+    cur = b.dwconv2d("stem.dw", cur, (3, 3), (1, 1), Padding::Same, Act::Relu);
+    cur = b.conv2d("stem.pw", cur, c, (1, 1), (1, 1), Padding::Same, Act::Linear);
+    let body = n_ops - 6;
+    let mut emitted = 0usize;
+    let mut i = 0usize;
+    while emitted < body {
+        let left = body - emitted;
+        let r = rng.range(0, 8);
+        if r <= 2 || left == 1 {
+            cur = b.conv2d(&format!("l{i}.conv"), cur, c, (3, 3), (1, 1), Padding::Same, Act::Relu);
+            emitted += 1;
+        } else if r <= 4 && left >= 2 {
+            cur = b.dwconv2d(&format!("l{i}.dw"), cur, (3, 3), (1, 1), Padding::Same, Act::Relu);
+            cur = b.conv2d(&format!("l{i}.pw"), cur, c, (1, 1), (1, 1), Padding::Same, Act::Relu);
+            emitted += 2;
+        } else if r == 5 {
+            cur = b.relu(&format!("l{i}.relu"), cur);
+            emitted += 1;
+        } else if r == 6 && left >= 3 && h <= 8 {
+            let a = b.conv2d(&format!("l{i}.ra"), cur, c, (3, 3), (1, 1), Padding::Same, Act::Relu);
+            let z =
+                b.conv2d(&format!("l{i}.rb"), a, c, (3, 3), (1, 1), Padding::Same, Act::Linear);
+            cur = b.add(&format!("l{i}.add"), cur, z);
+            emitted += 3;
+        } else if h > 4 {
+            h = h.div_ceil(2);
+            c = (c * 2).min(64);
+            cur = b.conv2d(&format!("l{i}.down"), cur, c, (3, 3), (2, 2), Padding::Same, Act::Relu);
+            emitted += 1;
+        } else {
+            cur = b.conv2d(&format!("l{i}.conv"), cur, c, (3, 3), (1, 1), Padding::Same, Act::Relu);
+            emitted += 1;
+        }
+        i += 1;
+    }
+    let gap = b.global_avgpool("gap", cur);
+    let fc = b.dense("fc", gap, 10, Act::Linear);
+    let sm = b.softmax("softmax", fc);
+    b.output(sm);
+    b.finish().expect("layered graph is valid")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -92,6 +166,23 @@ mod tests {
         let bf = bruteforce(&g, 2_000_000);
         if let Some(bf) = bf {
             assert_eq!(sched.peak_bytes, bf.best.peak_bytes);
+        }
+    }
+
+    #[test]
+    fn layered_has_exact_op_count_and_many_regions() {
+        for n in [20usize, 100] {
+            let mut rng = Rng::new(n as u64);
+            let g = layered(&mut rng, n);
+            g.validate().unwrap();
+            assert_eq!(g.n_ops(), n);
+            let (sched, _) = optimal(&g).unwrap();
+            g.check_order(&sched.order).unwrap();
+            // The generator is chain-heavy, so series decomposition must
+            // find many independent regions (that's what the planner's
+            // incremental fast path banks on).
+            let regions = crate::sched::decompose(&g);
+            assert!(regions.len() > n / 4, "{} regions for {} ops", regions.len(), n);
         }
     }
 

@@ -15,14 +15,23 @@
 //!   (Knuth–Szwarcfiter-style backtracking); ground truth for tests.
 //! - [`greedy`] — cheap heuristics (min-increase, depth-first) used as
 //!   incumbents and baselines.
+//! - [`region`](self::decompose) — series decomposition of the graph into
+//!   independently schedulable regions, a structural region-peak memo
+//!   ([`RegionCache`]) and an admissible working-set lower bound
+//!   ([`peak_lower_bound`]); together these are the split planner's
+//!   incremental evaluation fast path.
 
 pub(crate) mod bruteforce;
 mod greedy;
 mod optimal;
+mod region;
 
 pub use bruteforce::{all_orders, bruteforce, BruteForceResult};
 pub use greedy::{greedy_depth_first, greedy_min_increase};
 pub use optimal::{optimal, optimal_bnb, optimal_opts, OptimalError, OptimalStats};
+pub use region::{
+    decompose, fast_optimal_peak, fast_optimal_peak_opts, peak_lower_bound, Region, RegionCache,
+};
 
 use crate::graph::{Graph, OpId, TensorId};
 use crate::trace::{Event, NullSink, TraceSink};

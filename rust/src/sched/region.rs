@@ -1,0 +1,491 @@
+//! Series decomposition of a graph into independently schedulable regions.
+//!
+//! The planner's hot path re-evaluates the exact scheduler DP for every
+//! split candidate. Most rewrites only perturb a small stretch of the
+//! graph, so we cut the op sequence at *series points* — boundaries that
+//! exactly one tensor crosses — and evaluate each region's DP in
+//! isolation. The global optimal peak is then the max over regions, and
+//! unchanged regions are served from a structural memo cache instead of
+//! being re-solved.
+//!
+//! Soundness of the cut: let boundary `p` sit after op `p` (ops are
+//! id-topological, a precondition checked by [`decompose`]). If the only
+//! tensor crossing `p` is op `p`'s output `out_p`, then in *any* valid
+//! schedule every op `≤ p` runs before every op `> p`:
+//!
+//! - every op `> p` is a transitive consumer of `out_p` (its activation
+//!   inputs are either `out_p` itself or outputs of ops in `(p, ·)` —
+//!   anything produced at `≤ p` and consumed later would be a second
+//!   crosser), so it runs after op `p`;
+//! - every op `< p` is a transitive ancestor of op `p` (its output is not
+//!   a graph output and all its consumers are `≤ p`, again because a
+//!   later consumer would make it a second crosser; walking consumers
+//!   reaches op `p`), so it runs before op `p`.
+//!
+//! Regions therefore cannot interleave, the live set at the boundary is
+//! exactly `{out_p}`, and `optimal(g).peak == max_k region_peak(k)`
+//! *exactly* — not a bound. Graphs violating the preconditions (non
+//! id-topological, dead tensors, zero-input ops) degrade to a single
+//! whole-graph region, which is just the ordinary DP.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use super::optimal::DEFAULT_STATE_LIMIT;
+use super::{accumulators, Opts, OptimalError};
+use crate::graph::{Graph, OpId, TensorId};
+use crate::util::bitset::BitSet;
+
+/// A maximal run of consecutive ops `[lo, hi]` whose schedule is
+/// independent of the rest of the graph, plus the tensors that must be
+/// held at its end (`out_hi`, or the graph outputs for the last region).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Region {
+    pub lo: OpId,
+    pub hi: OpId,
+    pub hold: Vec<TensorId>,
+}
+
+/// Cut the graph at series points. Always returns at least one region
+/// covering every op; returns a single whole-graph region when the
+/// decomposition preconditions do not hold.
+pub fn decompose(g: &Graph) -> Vec<Region> {
+    let n = g.ops.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let whole = || {
+        vec![Region { lo: 0, hi: n - 1, hold: g.outputs.clone() }]
+    };
+
+    // Activation-consumer steps, computed from op inputs (the tensor
+    // `consumers` field may also record weight uses).
+    let nt = g.tensors.len();
+    let mut last_use = vec![None::<usize>; nt];
+    let mut used = vec![false; nt];
+    for op in &g.ops {
+        for &t in &op.inputs {
+            used[t] = true;
+            last_use[t] = Some(last_use[t].map_or(op.id, |l: usize| l.max(op.id)));
+            // Precondition: op ids are topological.
+            if let Some(p) = g.tensors[t].producer {
+                if p >= op.id {
+                    return whole();
+                }
+            }
+        }
+    }
+
+    // Boundaries before an op with no activation inputs are invalid: such
+    // an op is not a descendant of any cut tensor and could legally run
+    // anywhere, so regions before it could interleave with it.
+    let mut min_boundary = 0usize;
+    for op in &g.ops {
+        if op.inputs.is_empty() {
+            min_boundary = min_boundary.max(op.id);
+        }
+    }
+
+    // Crossing count per boundary p (p separates op p from op p+1).
+    // Tensor t crosses p iff produced at ≤ p and still needed after p.
+    let mut diff = vec![0isize; n + 1];
+    for t in &g.tensors {
+        if t.is_weight {
+            continue;
+        }
+        let participates = t.producer.is_some() || g.inputs.contains(&t.id);
+        if !participates {
+            continue;
+        }
+        let is_output = g.outputs.contains(&t.id);
+        if !used[t.id] && !is_output {
+            // Dead tensor: the DP never schedules its producer (and a
+            // consumerless graph input never enters any DP state), so the
+            // region accounting would diverge from `optimal`. Bail out.
+            return whole();
+        }
+        // Crosses boundaries [produced, last-1]: alive at boundary p iff
+        // produced at ≤ p (inputs count as produced before op 0) and
+        // still needed by an op > p (outputs are needed past every op).
+        let produced = t.producer.unwrap_or(0);
+        let last = if is_output { n } else { last_use[t.id].unwrap_or(0) };
+        if last == 0 {
+            continue;
+        }
+        let hi = (last - 1).min(n.saturating_sub(2));
+        if produced <= hi {
+            diff[produced] += 1;
+            diff[hi + 1] -= 1;
+        }
+    }
+
+    let mut cuts = Vec::new();
+    let mut running = 0isize;
+    for p in 0..n.saturating_sub(1) {
+        running += diff[p];
+        if running == 1 && p >= min_boundary {
+            cuts.push(p);
+        }
+    }
+
+    let mut regions = Vec::with_capacity(cuts.len() + 1);
+    let mut lo = 0usize;
+    for &p in &cuts {
+        regions.push(Region { lo, hi: p, hold: vec![g.ops[p].output] });
+        lo = p + 1;
+    }
+    regions.push(Region { lo, hi: n - 1, hold: g.outputs.clone() });
+    regions
+}
+
+/// A region re-expressed over dense local tensor ids, together with its
+/// canonical structural key. Two regions with equal keys have identical
+/// DP subproblems (tensor sizes, producer structure, in-place flags and
+/// end state all match), independent of op/tensor numbering and names —
+/// which is what lets the memo survive the id renumbering a split
+/// rewrite applies to everything downstream of the rewritten segment.
+struct LocalRegion {
+    key: Vec<u64>,
+    bytes: Vec<usize>,
+    ops: Vec<LocalOp>,
+    hold: Vec<usize>,
+}
+
+struct LocalOp {
+    inputs: Vec<usize>,
+    output: usize,
+    inplace: bool,
+}
+
+fn build_local(g: &Graph, r: &Region, acc: &[Option<TensorId>]) -> LocalRegion {
+    let mut ids: HashMap<TensorId, usize> = HashMap::new();
+    let mut bytes = Vec::new();
+    let mut local = |t: TensorId, bytes: &mut Vec<usize>, ids: &mut HashMap<TensorId, usize>| {
+        *ids.entry(t).or_insert_with(|| {
+            bytes.push(g.tensors[t].bytes());
+            bytes.len() - 1
+        })
+    };
+    let mut ops = Vec::with_capacity(r.hi - r.lo + 1);
+    for op in &g.ops[r.lo..=r.hi] {
+        let inputs = op.inputs.iter().map(|&t| local(t, &mut bytes, &mut ids)).collect();
+        let output = local(op.output, &mut bytes, &mut ids);
+        ops.push(LocalOp { inputs, output, inplace: acc[op.id].is_some() });
+    }
+    let hold: Vec<usize> = r.hold.iter().map(|&t| local(t, &mut bytes, &mut ids)).collect();
+
+    let mut key = Vec::with_capacity(2 * bytes.len() + 4 * ops.len() + hold.len() + 3);
+    key.push(bytes.len() as u64);
+    key.extend(bytes.iter().map(|&b| b as u64));
+    key.push(ops.len() as u64);
+    for op in &ops {
+        key.push(op.inputs.len() as u64);
+        key.extend(op.inputs.iter().map(|&i| i as u64));
+        key.push(op.output as u64);
+        key.push(op.inplace as u64);
+    }
+    key.push(hold.len() as u64);
+    key.extend(hold.iter().map(|&i| i as u64));
+
+    LocalRegion { key, bytes, ops, hold }
+}
+
+/// Peak-only Algorithm-1 DP over a region's local ids — the same
+/// recurrence as [`super::optimal`], minus order reconstruction.
+fn local_peak(r: &LocalRegion, limit: usize) -> Result<usize, OptimalError> {
+    let n = r.bytes.len();
+    let mut has_producer = vec![false; n];
+    let mut producer_inputs: Vec<Vec<usize>> = vec![Vec::new(); n];
+    let mut inplace = vec![false; n];
+    let mut ancestors: Vec<BitSet> = (0..n).map(|_| BitSet::new(n)).collect();
+    for op in &r.ops {
+        has_producer[op.output] = true;
+        producer_inputs[op.output] = op.inputs.clone();
+        inplace[op.output] = op.inplace;
+        let mut a = BitSet::new(n);
+        for &i in &op.inputs {
+            a.insert(i);
+            a.union_with(&ancestors[i]);
+        }
+        ancestors[op.output] = a;
+    }
+
+    struct Rec<'a> {
+        bytes: &'a [usize],
+        has_producer: Vec<bool>,
+        producer_inputs: Vec<Vec<usize>>,
+        inplace: Vec<bool>,
+        ancestors: Vec<BitSet>,
+        memo: HashMap<BitSet, usize>,
+        limit: usize,
+    }
+    impl Rec<'_> {
+        fn sum_bytes(&self, x: &BitSet) -> usize {
+            x.iter().map(|t| self.bytes[t]).sum()
+        }
+        fn mem(&mut self, x: &BitSet) -> Result<usize, OptimalError> {
+            if let Some(&v) = self.memo.get(x) {
+                return Ok(v);
+            }
+            if self.memo.len() >= self.limit {
+                return Err(OptimalError::StateLimitExceeded {
+                    states: self.memo.len(),
+                    limit: self.limit,
+                });
+            }
+            if !x.iter().any(|t| self.has_producer[t]) {
+                let v = self.sum_bytes(x);
+                self.memo.insert(x.clone(), v);
+                return Ok(v);
+            }
+            let mut best = usize::MAX;
+            let candidates: Vec<usize> = x.iter().filter(|&t| self.has_producer[t]).collect();
+            for xt in candidates {
+                if x.iter().any(|r| r != xt && self.ancestors[r].contains(xt)) {
+                    continue;
+                }
+                let mut next = x.without(xt);
+                for &i in &self.producer_inputs[xt] {
+                    next.insert(i);
+                }
+                let x_bytes = if self.inplace[xt] { 0 } else { self.bytes[xt] };
+                let step = self.sum_bytes(&next) + x_bytes
+                    - next.contains(xt).then_some(x_bytes).unwrap_or(0);
+                let rec = self.mem(&next)?;
+                best = best.min(rec.max(step));
+            }
+            if best == usize::MAX {
+                return Err(OptimalError::InvalidGraph(format!(
+                    "region DP: no valid un-application for state {x:?}"
+                )));
+            }
+            self.memo.insert(x.clone(), best);
+            Ok(best)
+        }
+    }
+
+    let mut rec = Rec {
+        bytes: &r.bytes,
+        has_producer,
+        producer_inputs,
+        inplace,
+        ancestors,
+        memo: HashMap::new(),
+        limit,
+    };
+    let start = BitSet::from_iter(n, r.hold.iter().copied());
+    rec.mem(&start)
+}
+
+/// Cross-candidate memo of region peaks, keyed by canonical region
+/// structure. Shared across planner threads; hit/miss counters feed the
+/// planner telemetry. A concurrent duplicate compute is benign (both
+/// threads derive the identical value).
+#[derive(Debug, Default)]
+pub struct RegionCache {
+    map: Mutex<HashMap<Vec<u64>, usize>>,
+    lookups: AtomicUsize,
+    hits: AtomicUsize,
+    misses: AtomicUsize,
+}
+
+impl RegionCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    pub fn lookups(&self) -> usize {
+        self.lookups.load(Ordering::Relaxed)
+    }
+    pub fn hits(&self) -> usize {
+        self.hits.load(Ordering::Relaxed)
+    }
+    pub fn misses(&self) -> usize {
+        self.misses.load(Ordering::Relaxed)
+    }
+    pub fn len(&self) -> usize {
+        self.map.lock().unwrap().len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Exact optimal peak via series decomposition and the region memo.
+/// Equals `optimal(g)?.0.peak_bytes` whenever both succeed; errors
+/// (state-limit blowups) propagate so callers can fall back to the full
+/// scheduler.
+pub fn fast_optimal_peak(g: &Graph, cache: &RegionCache) -> Result<usize, OptimalError> {
+    fast_optimal_peak_opts(g, Opts::default(), cache)
+}
+
+/// [`fast_optimal_peak`] under explicit accumulator options.
+pub fn fast_optimal_peak_opts(
+    g: &Graph,
+    opts: Opts,
+    cache: &RegionCache,
+) -> Result<usize, OptimalError> {
+    if g.ops.is_empty() {
+        return Ok(g.outputs.iter().map(|&t| g.tensors[t].bytes()).sum());
+    }
+    let acc = accumulators(g, opts);
+    let mut peak = 0usize;
+    for r in decompose(g) {
+        let local = build_local(g, &r, &acc);
+        cache.lookups.fetch_add(1, Ordering::Relaxed);
+        let cached = cache.map.lock().unwrap().get(&local.key).copied();
+        let v = match cached {
+            Some(v) => {
+                cache.hits.fetch_add(1, Ordering::Relaxed);
+                v
+            }
+            None => {
+                cache.misses.fetch_add(1, Ordering::Relaxed);
+                let v = local_peak(&local, DEFAULT_STATE_LIMIT)?;
+                cache.map.lock().unwrap().insert(local.key, v);
+                v
+            }
+        };
+        peak = peak.max(v);
+    }
+    Ok(peak)
+}
+
+/// Admissible lower bound on the optimal peak, from working sets alone:
+/// every op must hold its distinct activation inputs plus its output
+/// (zero when the output shares an accumulator buffer per
+/// [`super::elided_accumulators`]); all consumed graph inputs coexist
+/// before the first op; all graph outputs coexist after the last. Never
+/// exceeds `optimal(g)?.0.peak_bytes`, so pruning a candidate whose
+/// bound already meets the incumbent peak is lossless.
+pub fn peak_lower_bound(g: &Graph) -> usize {
+    let acc = accumulators(g, Opts::default());
+    let mut lb = 0usize;
+    for op in &g.ops {
+        let mut ins: Vec<TensorId> = op.inputs.clone();
+        ins.sort_unstable();
+        ins.dedup();
+        let mut step: usize = ins.iter().map(|&t| g.tensors[t].bytes()).sum();
+        if acc[op.id].is_none() {
+            step += g.tensors[op.output].bytes();
+        }
+        lb = lb.max(step);
+    }
+    let mut used = vec![false; g.tensors.len()];
+    for op in &g.ops {
+        for &t in &op.inputs {
+            used[t] = true;
+        }
+    }
+    let inputs: usize =
+        g.inputs.iter().filter(|&&t| used[t]).map(|&t| g.tensors[t].bytes()).sum();
+    let outputs: usize = g.outputs.iter().map(|&t| g.tensors[t].bytes()).sum();
+    lb.max(inputs).max(outputs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::DType;
+    use crate::models;
+    use crate::sched;
+    use crate::util::rng::Rng;
+
+    fn assert_fast_matches_optimal(g: &Graph) {
+        let cache = RegionCache::new();
+        let fast = fast_optimal_peak(g, &cache).expect("fast peak");
+        let (s, _) = sched::optimal(g).expect("optimal");
+        assert_eq!(fast, s.peak_bytes, "fast != optimal on {}", g.name);
+        // Second evaluation of the same graph is served fully from cache.
+        let before = cache.misses();
+        let again = fast_optimal_peak(g, &cache).expect("fast peak (cached)");
+        assert_eq!(again, fast);
+        assert_eq!(cache.misses(), before, "unexpected recompute on {}", g.name);
+        assert_eq!(cache.lookups(), cache.hits() + cache.misses());
+    }
+
+    #[test]
+    fn figure1_decomposes_at_the_first_conv() {
+        let g = sched::tests::figure1_graph();
+        let regions = decompose(&g);
+        assert_eq!(regions.len(), 2, "{regions:?}");
+        assert_eq!((regions[0].lo, regions[0].hi), (0, 0));
+        assert_eq!((regions[1].lo, regions[1].hi), (1, 6));
+        assert_fast_matches_optimal(&g);
+        let cache = RegionCache::new();
+        assert_eq!(fast_optimal_peak(&g, &cache).unwrap(), 4960);
+    }
+
+    #[test]
+    fn fast_peak_matches_optimal_on_the_zoo() {
+        for g in [
+            models::figure1(),
+            models::mobilenet_v1_025(DType::I8),
+            models::swiftnet_cell(DType::I8),
+            models::resnet_micro(DType::I8),
+            models::audionet(DType::I8),
+            models::streamnet(DType::I8),
+            models::tiny_cnn(DType::I8),
+        ] {
+            assert_fast_matches_optimal(&g);
+        }
+    }
+
+    #[test]
+    fn fast_peak_matches_optimal_on_random_graphs() {
+        let mut rng = Rng::new(41);
+        for i in 0..40 {
+            let g = models::synth::random_dag(&mut rng, 4 + i % 9);
+            assert_fast_matches_optimal(&g);
+        }
+        let mut rng = Rng::new(42);
+        for _ in 0..10 {
+            let g = models::synth::series_parallel(&mut rng, 3, 2);
+            assert_fast_matches_optimal(&g);
+        }
+    }
+
+    #[test]
+    fn lower_bound_is_admissible() {
+        let mut rng = Rng::new(43);
+        let mut graphs = vec![
+            models::figure1(),
+            models::mobilenet_v1_025(DType::I8),
+            models::audionet(DType::I8),
+            models::streamnet(DType::I8),
+        ];
+        for i in 0..30 {
+            graphs.push(models::synth::random_dag(&mut rng, 4 + i % 9));
+        }
+        for g in graphs {
+            let (s, _) = sched::optimal(&g).expect("optimal");
+            let lb = peak_lower_bound(&g);
+            assert!(lb <= s.peak_bytes, "lb {} > optimal {} on {}", lb, s.peak_bytes, g.name);
+            assert!(lb > 0);
+        }
+    }
+
+    #[test]
+    fn chain_graphs_cut_at_every_boundary() {
+        let g = models::mobilenet_v1_025(DType::I8);
+        let regions = decompose(&g);
+        // One long chain: every boundary is a series point.
+        assert_eq!(regions.len(), g.ops.len());
+    }
+
+    #[test]
+    fn residual_blocks_stay_in_one_region() {
+        let g = models::resnet_micro(DType::I8);
+        let regions = decompose(&g);
+        assert!(regions.len() > 1, "{regions:?}");
+        for r in &regions {
+            assert!(r.lo <= r.hi);
+        }
+        // Regions tile the op range exactly.
+        assert_eq!(regions[0].lo, 0);
+        assert_eq!(regions.last().unwrap().hi, g.ops.len() - 1);
+        for w in regions.windows(2) {
+            assert_eq!(w[0].hi + 1, w[1].lo);
+        }
+    }
+}

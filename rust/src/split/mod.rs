@@ -62,8 +62,8 @@ pub use rewrite::{
     apply_plan, apply_segment, remap_weight_store, SegmentSplit, SplitPlan, SplitResult,
 };
 pub use search::{
-    candidate_moves, find_chains, find_chains_along, optimize, optimize_traced, SplitOptions,
-    SplitOutcome, SplitStep,
+    candidate_moves, find_chains, find_chains_along, optimize, optimize_traced, EvalStrategy,
+    PlannerStats, SplitOptions, SplitOutcome, SplitStep,
 };
 
 use crate::graph::SplitAxis;

@@ -59,7 +59,7 @@ pub struct SegmentSplit {
 
 /// A sequence of segment splits applied one after another. Op ids in step
 /// `i` refer to the graph produced by steps `0..i`.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct SplitPlan {
     pub steps: Vec<SegmentSplit>,
 }

@@ -22,13 +22,56 @@
 //! MCUNet applied to (segment, factor, axis). Moves that do not strictly
 //! lower their state's peak are pruned at generation, so every kept state
 //! is monotonically improving.
+//!
+//! # Scaling beyond the zoo
+//!
+//! Scoring a candidate with a full DP run is fine at 10 ops and hopeless
+//! at 1000. The planner therefore evaluates candidates through a layered
+//! fast path ([`EvalStrategy::Incremental`], the default) that keeps the
+//! selected plans bit-identical to the naive reference:
+//!
+//! 1. **frontier dedup** — duplicate `(parent graph, segment, factor,
+//!    axis, join form)` candidates reached through different rewrite
+//!    interleavings are dropped before any scoring;
+//! 2. **admissible bound** — [`crate::sched::peak_lower_bound`] prunes
+//!    candidates that provably cannot beat their parent's peak without
+//!    touching the scheduler;
+//! 3. **incremental, memoized peak** — [`crate::sched::fast_optimal_peak`]
+//!    series-decomposes the rewritten graph into regions and re-solves
+//!    only regions whose structure is new; unchanged regions (everything
+//!    the rewrite didn't touch) hit the [`crate::sched::RegionCache`];
+//! 4. **deferred ordering** — the exact execution *order* is materialized
+//!    only for the states that survive beam pruning, so full-DP runs per
+//!    round collapse from `O(candidates)` to `O(beam width)`;
+//! 5. **parallel scoring** — candidate evaluations are independent pure
+//!    functions; [`SplitOptions::threads`] stripes them across a
+//!    `std::thread::scope` and merges results in job order, so any thread
+//!    count yields bit-identical plans.
+//!
+//! [`PlannerStats`] counts every pruning layer and is surfaced through
+//! [`Event::PlannerStats`] telemetry and [`SplitOutcome::stats`].
+
+use std::collections::HashSet;
 
 use super::band::{slice_geom, SliceGeom};
-use super::rewrite::{apply_segment, SegmentSplit, SplitPlan};
+use super::rewrite::{apply_segment, SegmentSplit, SplitPlan, SplitResult};
 use super::SplitError;
 use crate::graph::{Graph, OpId, OpKind, SplitAxis, TensorId};
-use crate::sched::{self, MemTrace, Schedule};
+use crate::sched::{self, MemTrace, RegionCache, Schedule};
 use crate::trace::{Event, NullSink, TraceSink};
+
+/// How the planner scores a candidate rewrite.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum EvalStrategy {
+    /// Re-run the full Algorithm-1 DP for every candidate (the reference
+    /// path; what PRs 1–6 always did).
+    Naive,
+    /// Admissible-bound early cut, then series-decomposed region DP with
+    /// a structural memo, then a full DP only for beam survivors.
+    /// Selected plans and peaks are identical to [`EvalStrategy::Naive`].
+    #[default]
+    Incremental,
+}
 
 /// Knobs for the beam split search.
 #[derive(Clone, Debug)]
@@ -57,6 +100,12 @@ pub struct SplitOptions {
     /// slice order and can lose when the chain input outlives the join
     /// output. `false` reproduces the PR-3 materialized-join planner.
     pub elide: bool,
+    /// Worker threads scoring the candidate frontier (1 = serial).
+    /// Results are bit-identical at any thread count: jobs are built
+    /// serially, striped across threads, and merged back in job order.
+    pub threads: usize,
+    /// Candidate evaluation strategy (see [`EvalStrategy`]).
+    pub eval: EvalStrategy,
 }
 
 impl Default for SplitOptions {
@@ -70,6 +119,8 @@ impl Default for SplitOptions {
             beam_width: 2,
             axes: SplitAxis::ALL.to_vec(),
             elide: true,
+            threads: 1,
+            eval: EvalStrategy::Incremental,
         }
     }
 }
@@ -99,10 +150,21 @@ impl SplitOptions {
     pub fn materialized(self) -> Self {
         SplitOptions { elide: false, ..self }
     }
+
+    /// Score every candidate with the full DP (the reference evaluation
+    /// path; the equivalence tests and benches compare against it).
+    pub fn naive(self) -> Self {
+        SplitOptions { eval: EvalStrategy::Naive, ..self }
+    }
+
+    /// Stripe candidate scoring across `n` threads.
+    pub fn with_threads(self, n: usize) -> Self {
+        SplitOptions { threads: n.max(1), ..self }
+    }
 }
 
 /// One committed split of a plan.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct SplitStep {
     /// Names of the segment's ops at the time of the split.
     pub segment: Vec<String>,
@@ -113,6 +175,56 @@ pub struct SplitStep {
     pub elided: bool,
     pub peak_before: usize,
     pub peak_after: usize,
+}
+
+/// Planner work counters for one [`optimize`] run. Every scored
+/// candidate lands in exactly one of the outcome buckets, so
+/// `scored == improved + no_improve + bounded + apply_failed +
+/// schedule_failed`; `cache_lookups == cache_hits + cache_misses` by
+/// construction. Surfaced on [`SplitOutcome::stats`] and, when tracing,
+/// as a single [`Event::PlannerStats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PlannerStats {
+    /// Candidates evaluated (after frontier dedup).
+    pub scored: usize,
+    /// Duplicate candidates dropped before scoring.
+    pub deduped: usize,
+    /// Candidates kept (strictly improving).
+    pub improved: usize,
+    /// Candidates whose exact peak did not beat their parent.
+    pub no_improve: usize,
+    /// Candidates pruned by the admissible lower bound alone.
+    pub bounded: usize,
+    /// Candidates whose rewrite failed to apply.
+    pub apply_failed: usize,
+    /// Candidates whose rewritten graph the scheduler rejected.
+    pub schedule_failed: usize,
+    /// Full Algorithm-1 DP runs (candidate scoring fallbacks + beam
+    /// survivor order materialization). The naive strategy pays one per
+    /// candidate surviving `apply_segment`; see [`Self::naive_evals`].
+    pub full_evals: usize,
+    /// Region-memo lookups (one per region per fast-path evaluation).
+    pub cache_lookups: usize,
+    pub cache_hits: usize,
+    pub cache_misses: usize,
+    /// Scoring threads used.
+    pub threads: usize,
+}
+
+impl PlannerStats {
+    /// Full-DP evaluations the naive strategy would have spent on the
+    /// same candidate stream: one per candidate that survives
+    /// `apply_segment`.
+    pub fn naive_evals(&self) -> usize {
+        self.scored - self.apply_failed
+    }
+
+    /// How many times fewer full-schedule evaluations this run performed
+    /// than the naive strategy would have (≥ 1.0; the acceptance target
+    /// at 1000 ops is ≥ 10×).
+    pub fn eval_ratio(&self) -> f64 {
+        self.naive_evals() as f64 / self.full_evals.max(1) as f64
+    }
 }
 
 /// Result of the split search.
@@ -131,6 +243,8 @@ pub struct SplitOutcome {
     /// The committed plan (op ids are per intermediate graph; replay with
     /// [`super::apply_plan`]).
     pub plan: SplitPlan,
+    /// Planner work counters (scored / pruned / cached / threaded).
+    pub stats: PlannerStats,
 }
 
 impl SplitOutcome {
@@ -335,16 +449,182 @@ pub fn candidate_moves(
     moves
 }
 
-/// One beam state: a (possibly already split) graph, its optimal
-/// schedule, and the plan that produced it.
+/// One beam state: a (possibly already split) graph, its optimal peak,
+/// and the plan that produced it. The execution `order` is deferred:
+/// candidates scored through the incremental fast path know their exact
+/// peak long before anyone needs their order, so it is only materialized
+/// (one full DP) for states that survive beam pruning.
 #[derive(Clone)]
 struct BeamState {
     graph: Graph,
     sources: Vec<TensorId>,
-    sched: Schedule,
+    peak: usize,
+    order: Option<Vec<OpId>>,
     macs: u64,
     steps: Vec<SplitStep>,
     plan: SplitPlan,
+}
+
+/// One deduped unit of scoring work: which beam state to rewrite, and how.
+struct Job {
+    parent: usize,
+    seg: SegmentSplit,
+}
+
+/// Serially enumerate the round's candidate frontier with duplicates
+/// removed. Two beam states with structurally identical graphs (the same
+/// rewrites reached through different interleavings) enumerate identical
+/// moves; the dedup key maps each parent to its first identical beam slot
+/// so only the first copy generates jobs. Returns the jobs in the exact
+/// order the pre-dedup serial planner would have scored them, plus the
+/// number of duplicates dropped.
+fn build_jobs(
+    beam: &[BeamState],
+    opts: &SplitOptions,
+    met: impl Fn(usize) -> bool,
+) -> (Vec<Job>, usize) {
+    let canon: Vec<usize> = (0..beam.len())
+        .map(|i| (0..i).find(|&j| beam[j].graph == beam[i].graph).unwrap_or(i))
+        .collect();
+    // Every (factor, join form) variant of a segment move; the elided
+    // form streams the join away, the materialized form keeps the PR-3
+    // `ConcatSlices` copy. Both are scored — see [`SplitOptions::elide`].
+    let mut variants: Vec<(usize, bool)> = Vec::new();
+    for factor in 2..=opts.max_factor {
+        variants.push((factor, false));
+        if opts.elide {
+            variants.push((factor, true));
+        }
+    }
+    let mut jobs = Vec::new();
+    let mut deduped = 0usize;
+    let mut seen: HashSet<(usize, Vec<OpId>, usize, SplitAxis, bool)> = HashSet::new();
+    for (pi, st) in beam.iter().enumerate() {
+        if met(st.peak) {
+            continue;
+        }
+        let order = st.order.as_ref().expect("beam states have materialized orders");
+        let trace = sched::simulate(&st.graph, order);
+        for (seg_ops, axis) in candidate_moves(&st.graph, &trace, opts) {
+            for &(factor, elide) in &variants {
+                if !seen.insert((canon[pi], seg_ops.clone(), factor, axis, elide)) {
+                    deduped += 1;
+                    continue;
+                }
+                jobs.push(Job {
+                    parent: pi,
+                    seg: SegmentSplit { ops: seg_ops.clone(), factor, axis, elide },
+                });
+            }
+        }
+    }
+    (jobs, deduped)
+}
+
+/// What scoring one job concluded.
+enum Outcome {
+    ApplyFailed,
+    /// The admissible bound already meets the parent peak: the exact peak
+    /// can only be ≥ the bound, so the candidate provably cannot improve.
+    Bounded(usize),
+    ScheduleFailed,
+    NoImprove(usize),
+    Improved { res: SplitResult, peak: usize, order: Option<Vec<OpId>> },
+}
+
+struct Scored {
+    outcome: Outcome,
+    /// Whether a full Algorithm-1 DP ran for this candidate.
+    full_eval: bool,
+}
+
+/// Score one candidate. Pure: reads the parent state, the options and
+/// the shared region memo — safe to run on any thread in any order.
+///
+/// The incremental path decides improvement from the *exact* region-
+/// decomposed peak, so its kept/pruned classification matches the naive
+/// full-DP path candidate for candidate. (Known, deliberate divergence:
+/// a graph whose region DP succeeds but whose whole-graph DP would blow
+/// the state limit — unreachable at the default 4M-state limit for any
+/// graph family the planner handles — would here be kept with its order
+/// deferred, while the naive path would have dropped it.)
+fn eval_job(
+    parent: &BeamState,
+    seg: &SegmentSplit,
+    eval: EvalStrategy,
+    cache: &RegionCache,
+) -> Scored {
+    let Ok(res) = apply_segment(&parent.graph, seg) else {
+        return Scored { outcome: Outcome::ApplyFailed, full_eval: false };
+    };
+    if eval == EvalStrategy::Incremental {
+        let lb = sched::peak_lower_bound(&res.graph);
+        if lb >= parent.peak {
+            return Scored { outcome: Outcome::Bounded(lb), full_eval: false };
+        }
+        match sched::fast_optimal_peak(&res.graph, cache) {
+            Ok(peak) if peak >= parent.peak => {
+                return Scored { outcome: Outcome::NoImprove(peak), full_eval: false };
+            }
+            Ok(peak) => {
+                return Scored {
+                    outcome: Outcome::Improved { res, peak, order: None },
+                    full_eval: false,
+                };
+            }
+            // Region DP state blowup: fall back to the full scheduler.
+            Err(_) => {}
+        }
+    }
+    let Ok((s, _)) = sched::optimal(&res.graph) else {
+        return Scored { outcome: Outcome::ScheduleFailed, full_eval: true };
+    };
+    if s.peak_bytes >= parent.peak {
+        return Scored { outcome: Outcome::NoImprove(s.peak_bytes), full_eval: true };
+    }
+    Scored {
+        outcome: Outcome::Improved { res, peak: s.peak_bytes, order: Some(s.order) },
+        full_eval: true,
+    }
+}
+
+/// Score `jobs` with `threads` workers. Jobs are striped `idx % threads`
+/// and results merged back by index, so the returned vector is in job
+/// order regardless of scheduling — the source of the planner's
+/// bit-identical-at-any-thread-count guarantee.
+fn score_jobs(
+    jobs: &[Job],
+    beam: &[BeamState],
+    opts: &SplitOptions,
+    cache: &RegionCache,
+) -> Vec<Scored> {
+    let threads = opts.threads.max(1).min(jobs.len().max(1));
+    if threads <= 1 {
+        return jobs.iter().map(|j| eval_job(&beam[j.parent], &j.seg, opts.eval, cache)).collect();
+    }
+    let mut slots: Vec<Option<Scored>> = Vec::with_capacity(jobs.len());
+    slots.resize_with(jobs.len(), || None);
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|tid| {
+                scope.spawn(move || {
+                    jobs.iter()
+                        .enumerate()
+                        .filter(|(idx, _)| idx % threads == tid)
+                        .map(|(idx, j)| {
+                            (idx, eval_job(&beam[j.parent], &j.seg, opts.eval, cache))
+                        })
+                        .collect::<Vec<_>>()
+                })
+            })
+            .collect();
+        for h in handles {
+            for (idx, scored) in h.join().expect("planner worker panicked") {
+                slots[idx] = Some(scored);
+            }
+        }
+    });
+    slots.into_iter().map(|s| s.expect("every job scored exactly once")).collect()
 }
 
 /// Beam split search (see module docs). The outcome's `graph` equals the
@@ -355,10 +635,12 @@ pub fn optimize(g: &Graph, opts: &SplitOptions) -> Result<SplitOutcome, SplitErr
 
 /// [`optimize`] with planner telemetry: emits one [`Event::Candidate`]
 /// per scored `(segment, factor, axis, join form)` variant (with the
-/// prune reason — `apply-failed`, `schedule-failed`, `no-improvement` —
-/// or `improved`), one [`Event::SearchRound`] summary per beam round,
-/// and [`Event::Phase`] wall-clock marks for the baseline reorder and
-/// each round (the measurement substrate for planner-scaling work).
+/// prune reason — `apply-failed`, `bounded`, `schedule-failed`,
+/// `no-improvement` — or `improved`), one [`Event::SearchRound`] summary
+/// per beam round, [`Event::Phase`] wall-clock marks for the baseline
+/// reorder and each round, and one final [`Event::PlannerStats`] with
+/// the run's work counters (the measurement substrate for the
+/// `scheduler_scaling` bench).
 pub fn optimize_traced(
     g: &Graph,
     opts: &SplitOptions,
@@ -375,10 +657,13 @@ pub fn optimize_traced(
         });
     }
 
+    let cache = RegionCache::new();
+    let mut stats = PlannerStats { threads: opts.threads.max(1), ..PlannerStats::default() };
     let mut beam: Vec<BeamState> = vec![BeamState {
         graph: g.clone(),
         sources: (0..g.tensors.len()).collect(),
-        sched: base,
+        peak: base.peak_bytes,
+        order: Some(base.order),
         macs: g.total_macs(),
         steps: Vec::new(),
         plan: SplitPlan::default(),
@@ -386,139 +671,153 @@ pub fn optimize_traced(
     let met = |peak: usize| opts.sram_budget.is_some_and(|b| peak <= b);
 
     for round in 0..opts.max_rounds {
-        if met(beam[0].sched.peak_bytes) {
+        if met(beam[0].peak) {
             break;
         }
         let t_round = std::time::Instant::now();
-        let mut n_scored = 0usize;
-        let mut n_kept = 0usize;
+        let (jobs, deduped) = build_jobs(&beam, opts, met);
+        stats.deduped += deduped;
+        let results = score_jobs(&jobs, &beam, opts, &cache);
+
+        // Merge serially, in job order: telemetry and the pool are built
+        // exactly as the serial planner would, whatever scored the jobs.
         // Parents survive into the pool: a state that stops splitting
         // early is itself a candidate plan.
         let mut pool: Vec<BeamState> = beam.clone();
+        let mut n_kept = 0usize;
         let mut grew = false;
-        for st in &beam {
-            if met(st.sched.peak_bytes) {
-                continue;
+        for (job, scored) in jobs.iter().zip(results) {
+            let st = &beam[job.parent];
+            stats.scored += 1;
+            if scored.full_eval {
+                stats.full_evals += 1;
             }
-            let trace = sched::simulate(&st.graph, &st.sched.order);
-            // Every (factor, join form) variant of a segment move; the
-            // elided form streams the join away, the materialized form
-            // keeps the PR-3 `ConcatSlices` copy. Both are scored — see
-            // [`SplitOptions::elide`].
-            let mut variants: Vec<(usize, bool)> = Vec::new();
-            for factor in 2..=opts.max_factor {
-                variants.push((factor, false));
-                if opts.elide {
-                    variants.push((factor, true));
-                }
+            let (peak, kept, reason) = match &scored.outcome {
+                Outcome::ApplyFailed => (None, false, "apply-failed"),
+                Outcome::Bounded(lb) => (Some(*lb), false, "bounded"),
+                Outcome::ScheduleFailed => (None, false, "schedule-failed"),
+                Outcome::NoImprove(p) => (Some(*p), false, "no-improvement"),
+                Outcome::Improved { peak, .. } => (Some(*peak), true, "improved"),
+            };
+            if traced {
+                // Candidate telemetry: the segment by op names (ids are
+                // per intermediate graph and meaningless downstream).
+                sink.record(Event::Candidate {
+                    round,
+                    segment: job.seg.ops.iter().map(|&o| st.graph.ops[o].name.clone()).collect(),
+                    factor: job.seg.factor,
+                    axis: job.seg.axis.name(),
+                    elided: job.seg.elide,
+                    peak,
+                    kept,
+                    reason,
+                });
             }
-            for (seg_ops, axis) in candidate_moves(&st.graph, &trace, opts) {
-                for &(factor, elide) in &variants {
-                    n_scored += 1;
-                    // Candidate telemetry: the segment by op names (ids are
-                    // per intermediate graph and meaningless downstream).
-                    let mut candidate = |peak: Option<usize>,
-                                         kept: bool,
-                                         reason: &'static str,
-                                         sink: &mut dyn TraceSink| {
-                        sink.record(Event::Candidate {
-                            round,
-                            segment: seg_ops
-                                .iter()
-                                .map(|&o| st.graph.ops[o].name.clone())
-                                .collect(),
-                            factor,
-                            axis: axis.name(),
-                            elided: elide,
-                            peak,
-                            kept,
-                            reason,
-                        });
-                    };
-                    let seg = SegmentSplit { ops: seg_ops.clone(), factor, axis, elide };
-                    let Ok(res) = apply_segment(&st.graph, &seg) else {
-                        if traced {
-                            candidate(None, false, "apply-failed", sink);
-                        }
-                        continue;
-                    };
-                    let Ok((s, _)) = sched::optimal(&res.graph) else {
-                        if traced {
-                            candidate(None, false, "schedule-failed", sink);
-                        }
-                        continue;
-                    };
-                    if s.peak_bytes >= st.sched.peak_bytes {
-                        if traced {
-                            candidate(Some(s.peak_bytes), false, "no-improvement", sink);
-                        }
-                        continue; // only strictly improving rewrites survive
-                    }
+            let outcome = scored.outcome;
+            match outcome {
+                Outcome::ApplyFailed => stats.apply_failed += 1,
+                Outcome::Bounded(_) => stats.bounded += 1,
+                Outcome::ScheduleFailed => stats.schedule_failed += 1,
+                Outcome::NoImprove(_) => stats.no_improve += 1,
+                Outcome::Improved { res, peak, order } => {
+                    stats.improved += 1;
                     n_kept += 1;
-                    if traced {
-                        candidate(Some(s.peak_bytes), true, "improved", sink);
-                    }
                     let mut steps = st.steps.clone();
                     steps.push(SplitStep {
-                        segment: seg
+                        segment: job
+                            .seg
                             .ops
                             .iter()
                             .map(|&o| st.graph.ops[o].name.clone())
                             .collect(),
-                        factor,
-                        axis,
-                        elided: elide,
-                        peak_before: st.sched.peak_bytes,
-                        peak_after: s.peak_bytes,
+                        factor: job.seg.factor,
+                        axis: job.seg.axis,
+                        elided: job.seg.elide,
+                        peak_before: st.peak,
+                        peak_after: peak,
                     });
                     let mut plan = st.plan.clone();
-                    plan.steps.push(seg);
+                    plan.steps.push(job.seg.clone());
                     let sources: Vec<TensorId> =
                         res.sources.iter().map(|&mid| st.sources[mid]).collect();
                     let macs = res.graph.total_macs();
-                    pool.push(BeamState {
-                        graph: res.graph,
-                        sources,
-                        sched: s,
-                        macs,
-                        steps,
-                        plan,
-                    });
+                    pool.push(BeamState { graph: res.graph, sources, peak, order, macs, steps, plan });
                     grew = true;
                 }
             }
         }
         // Prune by (peak SRAM, recompute): lower peak first, fewer total
         // MACs on ties — the cheapest plan among equally-small ones wins.
-        pool.sort_by_key(|s| (s.sched.peak_bytes, s.macs));
+        pool.sort_by_key(|s| (s.peak, s.macs));
         if traced {
             sink.record(Event::SearchRound {
                 round,
-                scored: n_scored,
+                scored: jobs.len(),
                 kept: n_kept,
                 pool: pool.len(),
-                best_peak: pool[0].sched.peak_bytes,
+                best_peak: pool[0].peak,
             });
+        }
+        pool.truncate(opts.beam_width.max(1));
+        beam = pool;
+        // Deferred ordering: only now that the round's survivors are
+        // known does anyone need an execution order, so the full DP runs
+        // O(beam width) times instead of once per kept candidate.
+        for st in beam.iter_mut() {
+            if st.order.is_none() {
+                let (s, _) =
+                    sched::optimal(&st.graph).map_err(|e| SplitError::Schedule(e.to_string()))?;
+                debug_assert_eq!(
+                    s.peak_bytes, st.peak,
+                    "region-decomposed peak diverged from the full DP"
+                );
+                st.order = Some(s.order);
+                stats.full_evals += 1;
+            }
+        }
+        if traced {
             sink.record(Event::Phase {
                 name: format!("round-{round}"),
                 wall_ms: t_round.elapsed().as_secs_f64() * 1e3,
             });
         }
-        pool.truncate(opts.beam_width.max(1));
-        beam = pool;
         if !grew {
             break;
         }
+    }
+
+    stats.cache_lookups = cache.lookups();
+    stats.cache_hits = cache.hits();
+    stats.cache_misses = cache.misses();
+    if traced {
+        sink.record(Event::PlannerStats {
+            scored: stats.scored,
+            deduped: stats.deduped,
+            improved: stats.improved,
+            no_improve: stats.no_improve,
+            bounded: stats.bounded,
+            apply_failed: stats.apply_failed,
+            schedule_failed: stats.schedule_failed,
+            full_evals: stats.full_evals,
+            cache_lookups: stats.cache_lookups,
+            cache_hits: stats.cache_hits,
+            cache_misses: stats.cache_misses,
+            threads: stats.threads,
+        });
     }
 
     let best = beam.swap_remove(0);
     Ok(SplitOutcome {
         graph: best.graph,
         sources: best.sources,
-        schedule: best.sched,
+        schedule: Schedule {
+            order: best.order.expect("beam states have materialized orders"),
+            peak_bytes: best.peak,
+        },
         base_peak,
         steps: best.steps,
         plan: best.plan,
+        stats,
     })
 }
 
@@ -646,5 +945,100 @@ mod tests {
         assert!(out.steps.is_empty());
         assert_eq!(out.schedule.peak_bytes, out.base_peak);
         assert_eq!(out.graph.n_ops(), g.n_ops());
+    }
+
+    fn root_state(g: &Graph) -> BeamState {
+        let (base, _) = crate::sched::optimal(g).unwrap();
+        BeamState {
+            graph: g.clone(),
+            sources: (0..g.tensors.len()).collect(),
+            peak: base.peak_bytes,
+            order: Some(base.order),
+            macs: g.total_macs(),
+            steps: Vec::new(),
+            plan: SplitPlan::default(),
+        }
+    }
+
+    #[test]
+    fn duplicate_beam_states_generate_unique_jobs() {
+        let g = models::mobilenet_v1_025(DType::I8);
+        let opts = SplitOptions::default();
+        let st = root_state(&g);
+        let (solo, solo_dedup) = build_jobs(&[st.clone()], &opts, |_| false);
+        assert!(!solo.is_empty());
+        assert_eq!(solo_dedup, 0);
+        // A structurally identical twin state (same graph reached via a
+        // different interleaving) must contribute nothing new.
+        let (dup, dup_dedup) = build_jobs(&[st.clone(), st.clone()], &opts, |_| false);
+        assert_eq!(dup.len(), solo.len());
+        assert_eq!(dup_dedup, solo.len());
+        assert!(dup.iter().all(|j| j.parent == 0));
+        // Job keys are globally unique after dedup.
+        let mut keys = std::collections::HashSet::new();
+        for j in &dup {
+            assert!(keys.insert((
+                j.parent,
+                j.seg.ops.clone(),
+                j.seg.factor,
+                j.seg.axis,
+                j.seg.elide
+            )));
+        }
+    }
+
+    fn assert_same_outcome(a: &SplitOutcome, b: &SplitOutcome) {
+        assert_eq!(a.schedule, b.schedule);
+        assert_eq!(a.base_peak, b.base_peak);
+        assert_eq!(a.steps, b.steps);
+        assert_eq!(a.plan, b.plan);
+        assert_eq!(a.graph, b.graph);
+        assert_eq!(a.sources, b.sources);
+    }
+
+    #[test]
+    fn incremental_matches_naive_on_mobilenet() {
+        let g = models::mobilenet_v1_025(DType::I8);
+        for opts in [SplitOptions::quick(), SplitOptions::default()] {
+            let naive = optimize(&g, &opts.clone().naive()).unwrap();
+            let fast = optimize(&g, &opts).unwrap();
+            assert_same_outcome(&fast, &naive);
+            assert!(fast.stats.full_evals <= naive.stats.full_evals);
+        }
+    }
+
+    #[test]
+    fn parallel_scoring_is_bit_identical() {
+        let g = models::audionet(DType::I8);
+        let serial = optimize(&g, &SplitOptions::default()).unwrap();
+        for threads in [2, 5] {
+            let par = optimize(&g, &SplitOptions::default().with_threads(threads)).unwrap();
+            assert_same_outcome(&par, &serial);
+            assert_eq!(par.stats.threads, threads);
+        }
+    }
+
+    #[test]
+    fn planner_stats_reconcile() {
+        let g = models::audionet(DType::I8);
+        let mut sink = crate::trace::VecSink::new();
+        let out = optimize_traced(&g, &SplitOptions::default(), &mut sink).unwrap();
+        let st = out.stats;
+        assert_eq!(st.scored, sink.count("candidate"));
+        assert_eq!(
+            st.scored,
+            st.improved + st.no_improve + st.bounded + st.apply_failed + st.schedule_failed
+        );
+        assert_eq!(st.cache_lookups, st.cache_hits + st.cache_misses);
+        assert_eq!(sink.count("planner"), 1);
+        assert!(out.improved());
+        assert!(st.full_evals > 0);
+        assert!(
+            st.full_evals <= st.naive_evals(),
+            "fast path did more DP work ({}) than naive would ({})",
+            st.full_evals,
+            st.naive_evals()
+        );
+        assert!(st.eval_ratio() >= 1.0);
     }
 }

@@ -87,6 +87,24 @@ pub enum Event {
     /// Wall-clock of one named search phase (the measurement substrate for
     /// planner-scaling work).
     Phase { name: String, wall_ms: f64 },
+    /// End-of-run planner work counters (one per [`crate::split::optimize_traced`]
+    /// run): how the candidate stream split across outcome buckets, how
+    /// many full-DP evaluations actually ran, and how the region memo
+    /// performed. Mirrors [`crate::split::PlannerStats`].
+    PlannerStats {
+        scored: usize,
+        deduped: usize,
+        improved: usize,
+        no_improve: usize,
+        bounded: usize,
+        apply_failed: usize,
+        schedule_failed: usize,
+        full_evals: usize,
+        cache_lookups: usize,
+        cache_hits: usize,
+        cache_misses: usize,
+        threads: usize,
+    },
 }
 
 impl Event {
@@ -102,6 +120,7 @@ impl Event {
             Event::Candidate { .. } => "candidate",
             Event::SearchRound { .. } => "round",
             Event::Phase { .. } => "phase",
+            Event::PlannerStats { .. } => "planner",
         }
     }
 
@@ -184,6 +203,33 @@ impl Event {
             Event::Phase { name, wall_ms } => fields.extend([
                 ("name", Json::Str(name.clone())),
                 ("wall_ms", Json::Num(*wall_ms)),
+            ]),
+            Event::PlannerStats {
+                scored,
+                deduped,
+                improved,
+                no_improve,
+                bounded,
+                apply_failed,
+                schedule_failed,
+                full_evals,
+                cache_lookups,
+                cache_hits,
+                cache_misses,
+                threads,
+            } => fields.extend([
+                ("scored", num(*scored)),
+                ("deduped", num(*deduped)),
+                ("improved", num(*improved)),
+                ("no_improve", num(*no_improve)),
+                ("bounded", num(*bounded)),
+                ("apply_failed", num(*apply_failed)),
+                ("schedule_failed", num(*schedule_failed)),
+                ("full_evals", num(*full_evals)),
+                ("cache_lookups", num(*cache_lookups)),
+                ("cache_hits", num(*cache_hits)),
+                ("cache_misses", num(*cache_misses)),
+                ("threads", num(*threads)),
             ]),
         }
         Json::obj(fields)

@@ -1,0 +1,154 @@
+//! Planner fast-path equivalence: the incremental, memoized, parallel
+//! evaluation pipeline (frontier dedup → admissible bound → region-memo
+//! peak → deferred ordering → thread-striped scoring) must return results
+//! *byte-identical* to the naive serial reference — same plan, same
+//! steps, same schedule, same rewritten graph — on every zoo model, every
+//! axis preset, every beam width and any thread count. The work counters
+//! it reports must reconcile exactly (every scored candidate lands in one
+//! outcome bucket; every cache lookup is a hit or a miss).
+
+use mcu_reorder::graph::DType;
+use mcu_reorder::models::{self, synth};
+use mcu_reorder::split::{self, PlannerStats, SplitOptions, SplitOutcome};
+use mcu_reorder::util::rng::Rng;
+
+/// Everything the caller can observe must match; only `stats` (how the
+/// answer was computed) is allowed to differ between strategies.
+fn assert_identical(naive: &SplitOutcome, fast: &SplitOutcome, label: &str) {
+    assert_eq!(naive.schedule, fast.schedule, "{label}: schedule diverged");
+    assert_eq!(naive.steps, fast.steps, "{label}: steps diverged");
+    assert_eq!(naive.plan, fast.plan, "{label}: plan diverged");
+    assert_eq!(naive.graph, fast.graph, "{label}: rewritten graph diverged");
+    assert_eq!(naive.sources, fast.sources, "{label}: tensor provenance diverged");
+    assert_eq!(naive.base_peak, fast.base_peak, "{label}: base peak diverged");
+}
+
+fn assert_reconciled(st: &PlannerStats, label: &str) {
+    assert_eq!(
+        st.scored,
+        st.improved + st.no_improve + st.bounded + st.apply_failed + st.schedule_failed,
+        "{label}: outcome buckets must sum to scored ({st:?})"
+    );
+    assert_eq!(
+        st.cache_lookups,
+        st.cache_hits + st.cache_misses,
+        "{label}: cache counters must reconcile ({st:?})"
+    );
+}
+
+/// The whole zoo × {rows-only, all axes} × beam widths {1, 2, 3} ×
+/// threads {1, 2}: the fast path is indistinguishable from the naive
+/// reference everywhere.
+#[test]
+fn fast_path_matches_naive_reference_across_the_zoo() {
+    for name in models::MODEL_NAMES {
+        let g = models::by_name(name, DType::I8).unwrap();
+        for rows_only in [false, true] {
+            for beam_width in [1usize, 2, 3] {
+                let base =
+                    SplitOptions { beam_width, max_rounds: 2, ..SplitOptions::quick() };
+                let base = if rows_only { base.rows_only() } else { base };
+                let label = format!("{name} rows_only={rows_only} beam={beam_width}");
+                let naive = split::optimize(&g, &base.clone().naive()).unwrap();
+                assert_reconciled(&naive.stats, &label);
+                // Naive scoring never consults the bound or the cache.
+                assert_eq!(naive.stats.bounded, 0, "{label}: naive must not bound");
+                assert_eq!(naive.stats.cache_lookups, 0, "{label}: naive must not cache");
+                for threads in [1usize, 2] {
+                    let fast =
+                        split::optimize(&g, &base.clone().with_threads(threads)).unwrap();
+                    assert_identical(&naive, &fast, &format!("{label} threads={threads}"));
+                    assert_reconciled(&fast.stats, &format!("{label} threads={threads}"));
+                    assert_eq!(fast.stats.threads, threads);
+                }
+            }
+        }
+    }
+}
+
+/// The imported TFLite fixture (the real-model path the issue's scaling
+/// work targets) takes the same gate at the full default search.
+#[test]
+fn fast_path_matches_naive_on_imported_tflite() {
+    let fixture =
+        mcu_reorder::tflite::fixtures::ensure(mcu_reorder::tflite::fixtures::INT8_FIXTURE)
+            .expect("tflite fixture generation (python3 required)");
+    let g = mcu_reorder::tflite::load(fixture.to_str().unwrap()).expect("tflite import").graph;
+    let opts = SplitOptions::default();
+    let naive = split::optimize(&g, &opts.clone().naive()).unwrap();
+    for threads in [1usize, 4] {
+        let fast = split::optimize(&g, &opts.clone().with_threads(threads)).unwrap();
+        assert_identical(&naive, &fast, &format!("tflitecnn threads={threads}"));
+        assert_reconciled(&fast.stats, "tflitecnn");
+    }
+}
+
+/// The synthetic layered graphs of the scaling bench, at the exact preset
+/// the Python mirror re-plans with naive full-DP scoring. Beyond
+/// bit-identity, the fast path must demonstrably *work less*: fewer full
+/// Algorithm-1 runs than the reference (the 10× acceptance floor at 1000
+/// ops lives in the scaling bench; this guards the mechanism at test
+/// sizes).
+#[test]
+fn fast_path_matches_naive_on_layered_graphs_and_saves_full_evals() {
+    for n in [40usize, 100] {
+        let g = synth::layered(&mut Rng::new(n as u64), n);
+        assert_eq!(g.n_ops(), n);
+        let opts = SplitOptions {
+            max_factor: 2,
+            max_rounds: 2,
+            max_candidates: 8,
+            beam_width: 2,
+            ..SplitOptions::default()
+        };
+        let naive = split::optimize(&g, &opts.clone().naive()).unwrap();
+        // The naive reference pays one full DP per candidate surviving
+        // apply — its counters are the definition of `naive_evals`.
+        assert_eq!(naive.stats.full_evals, naive.stats.naive_evals());
+        let fast = split::optimize(&g, &opts.clone().with_threads(3)).unwrap();
+        assert_identical(&naive, &fast, &format!("layered{n}"));
+        assert_reconciled(&fast.stats, &format!("layered{n}"));
+        assert!(
+            fast.stats.full_evals < naive.stats.full_evals,
+            "layered{n}: fast path ran {} full DPs vs naive {}",
+            fast.stats.full_evals,
+            naive.stats.full_evals
+        );
+        assert!(fast.stats.cache_hits > 0, "layered{n}: region memo never hit");
+    }
+}
+
+/// Budget-driven early stopping keys off intermediate peaks; both
+/// strategies must stop at the same point with the same plan.
+#[test]
+fn budgeted_search_stops_identically_across_strategies() {
+    let g = models::mobilenet_v1_025(DType::I8);
+    let unconstrained = split::optimize(&g, &SplitOptions::quick()).unwrap();
+    let budget = (unconstrained.schedule.peak_bytes + unconstrained.base_peak) / 2;
+    let opts =
+        SplitOptions { sram_budget: Some(budget), max_rounds: 4, ..SplitOptions::quick() };
+    let naive = split::optimize(&g, &opts.clone().naive()).unwrap();
+    let fast = split::optimize(&g, &opts.clone().with_threads(2)).unwrap();
+    assert_identical(&naive, &fast, "budgeted mobilenet");
+    assert!(fast.schedule.peak_bytes <= budget, "budget {budget} not met");
+}
+
+/// Join-elision on and off (streamnet's winning plan hinges on elision;
+/// audionet's on the channel axis): the strategies agree in both modes.
+#[test]
+fn materialized_and_elided_presets_take_the_same_gate() {
+    for name in ["streamnet", "audionet"] {
+        let g = models::by_name(name, DType::I8).unwrap();
+        for materialized in [false, true] {
+            let opts = if materialized {
+                SplitOptions::default().materialized()
+            } else {
+                SplitOptions::default()
+            };
+            let naive = split::optimize(&g, &opts.clone().naive()).unwrap();
+            let fast = split::optimize(&g, &opts.clone().with_threads(2)).unwrap();
+            assert_identical(&naive, &fast, &format!("{name} materialized={materialized}"));
+            assert_reconciled(&fast.stats, &format!("{name} materialized={materialized}"));
+        }
+    }
+}

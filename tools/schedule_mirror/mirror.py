@@ -12,7 +12,10 @@ Purpose:
     independently-written implementation (the "exact-schedule DP mirror"
     the split acceptance tests refer to);
   * compute the gated `BENCH_baseline/partial_exec.json` values
-    analytically (`python3 tools/schedule_mirror/mirror.py --baseline`).
+    analytically (`python3 tools/schedule_mirror/mirror.py --baseline`);
+  * compute the gated `BENCH_baseline/scheduler_scaling.json` values for
+    the layered synthetic models (`--scaling-baseline`), and check the
+    Rust scaling bench against them (`--check BENCH_scheduler_scaling.json`).
 
 Everything here is deterministic and analytic — no timing, no RNG beyond
 the mirrored xoshiro256** used by the synthetic model generators.
@@ -426,6 +429,65 @@ def series_parallel(rng, depth, width):
             nbytes = 64 * (1 + rng.range(0, 16))
             cur = synthetic(g, f"d{d}join", joins, nbytes, 500)
     g.outputs.append(cur)
+    return g
+
+
+def layered(rng, n_ops):
+    """Bit-exact twin of `rust/src/models/synth.rs::layered`.
+
+    Exactly `n_ops` operators: an MBConv-style expand/depthwise/contract
+    stem (x4 channel expansion — the fat, splittable intermediates the
+    planner runs of the scaling bench bank on) followed by a random walk
+    over realistic block types (conv / dw+pw pair / relu / residual pair
+    / stride-2 downsample) on a 32x32x8 input, closed by gap ->
+    dense(10) -> softmax. Consumes one `rng.range(0, 8)` per loop
+    iteration, so the Rust generator and this one stay on the same
+    xoshiro stream call for call — any change here must be made in
+    lockstep with the Rust side.
+    """
+    assert n_ops >= 7, "layered graphs need the 3-op stem, a body and the 3-op tail"
+    g = Graph("layered")
+    cur = g.add_tensor("x", [1, 32, 32, 8], 1)
+    g.inputs.append(cur)
+    h = 32
+    c = 8
+    cur = conv2d(g, "stem.ex", cur, 4 * c, (1, 1), (1, 1), SAME, 1)
+    cur = dwconv2d(g, "stem.dw", cur, (3, 3), (1, 1), SAME, 1)
+    cur = conv2d(g, "stem.pw", cur, c, (1, 1), (1, 1), SAME, 1)
+    body = n_ops - 6
+    emitted = 0
+    i = 0
+    while emitted < body:
+        left = body - emitted
+        r = rng.range(0, 8)
+        if r <= 2 or left == 1:
+            cur = conv2d(g, f"l{i}.conv", cur, c, (3, 3), (1, 1), SAME, 1)
+            emitted += 1
+        elif r <= 4 and left >= 2:
+            cur = dwconv2d(g, f"l{i}.dw", cur, (3, 3), (1, 1), SAME, 1)
+            cur = conv2d(g, f"l{i}.pw", cur, c, (1, 1), (1, 1), SAME, 1)
+            emitted += 2
+        elif r == 5:
+            cur = relu(g, f"l{i}.relu", cur)
+            emitted += 1
+        elif r == 6 and left >= 3 and h <= 8:
+            a = conv2d(g, f"l{i}.ra", cur, c, (3, 3), (1, 1), SAME, 1)
+            z = conv2d(g, f"l{i}.rb", a, c, (3, 3), (1, 1), SAME, 1)
+            cur = add_(g, f"l{i}.add", cur, z)
+            emitted += 3
+        elif h > 4:
+            h = -(-h // 2)
+            c = min(c * 2, 64)
+            cur = conv2d(g, f"l{i}.down", cur, c, (3, 3), (2, 2), SAME, 1)
+            emitted += 1
+        else:
+            cur = conv2d(g, f"l{i}.conv", cur, c, (3, 3), (1, 1), SAME, 1)
+            emitted += 1
+        i += 1
+    gap = global_avgpool(g, "gap", cur)
+    fc = dense(g, "fc", gap, 10, 1)
+    sm = softmax(g, "softmax", fc)
+    g.outputs.append(sm)
     return g
 
 
@@ -1032,6 +1094,33 @@ DEFAULT_OPTS = {
 
 QUICK_OPTS = dict(DEFAULT_OPTS, max_factor=3, max_rounds=1, max_candidates=24, beam_width=1)
 
+# The preset the layered-100 planner run of the scheduler_scaling bench
+# uses (mirrors `rust/benches/scheduler_scaling.rs`): small factors and
+# rounds so the mirror's naive full-DP scoring stays tractable at 100 ops.
+SCALING_OPTS = dict(DEFAULT_OPTS, max_factor=2, max_rounds=2, max_candidates=8, beam_width=2)
+
+
+def graph_eq(a, b):
+    """Structural graph equality (mirrors the Rust `Graph` PartialEq):
+    same tensors, ops, inputs and outputs, field for field. The planner's
+    frontier dedup keys on this, so it must declare two mirror graphs
+    equal exactly when the corresponding Rust graphs are equal."""
+    if a is b:
+        return True
+    if a.name != b.name or a.inputs != b.inputs or a.outputs != b.outputs:
+        return False
+    if len(a.tensors) != len(b.tensors) or len(a.ops) != len(b.ops):
+        return False
+    for t, u in zip(a.tensors, b.tensors):
+        if (t.name, t.shape, t.dsize, t.is_weight, t.producer, t.consumers) != (
+                u.name, u.shape, u.dsize, u.is_weight, u.producer, u.consumers):
+            return False
+    for o, p in zip(a.ops, b.ops):
+        if (o.name, o.kind, o.inputs, o.weights, o.output) != (
+                p.name, p.kind, p.inputs, p.weights, p.output):
+            return False
+    return True
+
 
 def optimize(g, opts):
     base_order, base_peak = optimal(g)
@@ -1046,9 +1135,24 @@ def optimize(g, opts):
     for _ in range(opts["max_rounds"]):
         if met(beam[0]["peak"]):
             break
+        # Frontier dedup (mirrors the Rust planner's build_jobs): beam
+        # states with structurally identical graphs — the same rewrites
+        # reached through different interleavings — enumerate identical
+        # moves, so each parent maps to its first identical beam slot and
+        # only the first copy of a (parent, segment, factor, axis, elide)
+        # candidate is scored.
+        canon = []
+        for idx, st in enumerate(beam):
+            ci = idx
+            for j in range(idx):
+                if graph_eq(beam[j]["graph"], st["graph"]):
+                    ci = j
+                    break
+            canon.append(ci)
+        seen = set()
         pool = list(beam)
         grew = False
-        for st in beam:
+        for pi, st in enumerate(beam):
             if met(st["peak"]):
                 continue
             steps, _, peak_step = simulate(st["graph"], st["order"])
@@ -1059,6 +1163,10 @@ def optimize(g, opts):
                     variants.append((factor, True))
             for seg_ops, axis in candidate_moves(st["graph"], steps, peak_step, opts):
                 for factor, elide in variants:
+                    key = (canon[pi], seg_ops, factor, axis, elide)
+                    if key in seen:
+                        continue
+                    seen.add(key)
                     try:
                         ng = apply_segment(st["graph"], list(seg_ops), factor, axis, elide)
                     except SplitError:
@@ -1120,6 +1228,24 @@ def bench_metrics():
         yield name, g, rows, mat, eli, metrics
 
 
+def scaling_metrics():
+    """Gated peaks of the `scheduler_scaling` bench's layered models
+    (mirrors `rust/benches/scheduler_scaling.rs`): default and optimal
+    peaks at 100/300/1000 ops, plus the planned peak at 100 ops under
+    SCALING_OPTS. The 300/1000-op planned peaks are deliberately not
+    mirrored — the naive full-DP scoring here is too slow at those sizes,
+    which is exactly the gap the Rust incremental planner closes."""
+    metrics = {}
+    for n in (100, 300, 1000):
+        g = layered(Rng(n), n)
+        name = f"layered{n}"
+        metrics[f"{name}.default_peak"] = simulate(g, g.default_order())[1]
+        metrics[f"{name}.reorder_peak"] = optimal(g)[1]
+        if n == 100:
+            metrics[f"{name}.planned_peak"] = optimize(g, SCALING_OPTS)["peak"]
+    return metrics
+
+
 def live_csv(g, order):
     """Per-op live-set CSV keyed by tensor names.
 
@@ -1143,12 +1269,16 @@ def main(argv):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--baseline", action="store_true",
                     help="print BENCH_baseline/partial_exec.json gated metrics")
+    ap.add_argument("--scaling-baseline", action="store_true",
+                    help="print BENCH_baseline/scheduler_scaling.json gated "
+                         "metrics (layered synthetic models)")
     ap.add_argument("--report", action="store_true",
                     help="print the full per-model plan report")
     ap.add_argument("--check", metavar="BENCH_JSON",
                     help="recompute every *_peak metric and fail on any "
-                         "mismatch with the given BENCH_partial_exec.json "
-                         "(the Rust-vs-mirror drift gate)")
+                         "mismatch with the given BENCH_*.json (the "
+                         "Rust-vs-mirror drift gate; dispatches on the "
+                         "report's \"bench\" field)")
     ap.add_argument("--trace", metavar="MODEL",
                     help="print the per-op live-set CSV for MODEL, "
                          "byte-identical to `mcu-reorder trace --model "
@@ -1167,26 +1297,43 @@ def main(argv):
         print(f"unknown model {args.trace!r} (want one of "
               f"{', '.join(n for n, _ in zoo())})", file=sys.stderr)
         return 1
+    check_doc = None
+    check_bench = None
+    if args.check:
+        with open(args.check, "r", encoding="utf-8") as f:
+            check_doc = json.load(f)
+        check_bench = check_doc.get("bench", "partial_exec")
+    need_zoo = (args.report or args.baseline
+                or (args.check and check_bench != "scheduler_scaling"))
     metrics = {}
-    for name, g, rows, mat, eli, metrics in bench_metrics():
-        if args.report:
-            print(f"== {name}")
-            print(f"   default {simulate(g, g.default_order())[1]}  "
-                  f"reorder {optimal(g)[1]}  rows {rows['peak']}  "
-                  f"mat {mat['peak']}  elided {eli['peak']}")
-            for seg, factor, axis, elide, before, after in eli["steps"]:
-                tag = ", join elided" if elide else ""
-                print(f"   split {seg} x{factor} along {axis}{tag}: {before} -> {after}")
+    if need_zoo:
+        for name, g, rows, mat, eli, metrics in bench_metrics():
+            if args.report:
+                print(f"== {name}")
+                print(f"   default {simulate(g, g.default_order())[1]}  "
+                      f"reorder {optimal(g)[1]}  rows {rows['peak']}  "
+                      f"mat {mat['peak']}  elided {eli['peak']}")
+                for seg, factor, axis, elide, before, after in eli["steps"]:
+                    tag = ", join elided" if elide else ""
+                    print(f"   split {seg} x{factor} along {axis}{tag}: {before} -> {after}")
     if args.baseline:
         doc = {"bench": "partial_exec",
                "metrics": {k: v for k, v in sorted(metrics.items())},
                "timings": []}
         print(json.dumps(doc, indent=2))
+    if args.scaling_baseline:
+        doc = {"bench": "scheduler_scaling",
+               "metrics": {k: v for k, v in sorted(scaling_metrics().items())},
+               "timings": []}
+        print(json.dumps(doc, indent=2))
     if args.check:
-        with open(args.check, "r", encoding="utf-8") as f:
-            reported = json.load(f).get("metrics", {})
+        if check_bench == "scheduler_scaling":
+            mirror_metrics = scaling_metrics()
+        else:
+            mirror_metrics = metrics
+        reported = check_doc.get("metrics", {})
         bad = 0
-        for key, val in sorted(metrics.items()):
+        for key, val in sorted(mirror_metrics.items()):
             if not key.endswith("_peak"):
                 continue
             if key not in reported:
