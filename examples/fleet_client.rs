@@ -1,0 +1,137 @@
+//! Fleet-client walkthrough for the plan-serving coordinator.
+//!
+//! Plays the role of a fleet of MCU devices against `mcu-reorder
+//! plan-serve`: discovers the board profiles and the model zoo, asks for
+//! a reorder+split+elide plan, uploads a real `.tflite` model and plans
+//! it for every board, downloads one full plan document, and reads the
+//! cache statistics back. The coordinator is started in-process on an
+//! OS-chosen port so the example runs anywhere; every line it sends
+//! behaves identically when typed over `nc` against a standalone
+//! `mcu-reorder plan-serve --port 7879`.
+//!
+//! ```text
+//! cargo run --release --example fleet_client
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::mpsc;
+
+use mcu_reorder::coordinator::{serve_plans_tcp, PlanServeConfig, PlanService};
+use mcu_reorder::mcu::boards;
+use mcu_reorder::split::SplitOptions;
+use mcu_reorder::tflite::fixtures;
+use mcu_reorder::util::json::Json;
+
+/// One protocol round-trip: send a line, read the one-line reply.
+fn send(writer: &mut TcpStream, reader: &mut BufReader<TcpStream>, line: &str) -> String {
+    writer.write_all(line.as_bytes()).expect("send line");
+    writer.write_all(b"\n").expect("send newline");
+    let mut reply = String::new();
+    reader.read_line(&mut reply).expect("recv reply");
+    reply
+}
+
+fn num(doc: &Json, key: &str) -> f64 {
+    doc.get(key).as_f64().unwrap_or(f64::NAN)
+}
+
+fn main() {
+    // In production this is `mcu-reorder plan-serve`; the walkthrough
+    // starts the identical service in-process.
+    let svc = PlanService::start(PlanServeConfig {
+        workers: 2,
+        split: SplitOptions::quick(),
+        ..Default::default()
+    });
+    let (addr_tx, addr_rx) = mpsc::channel();
+    let server = {
+        let svc = svc.clone();
+        std::thread::spawn(move || {
+            serve_plans_tcp(svc, "127.0.0.1:0", Some(1), move |a| {
+                let _ = addr_tx.send(a);
+            })
+            .expect("plan server")
+        })
+    };
+    let addr = addr_rx.recv().expect("server address");
+    println!("plan server listening on {addr}\n");
+
+    let stream = TcpStream::connect(addr).expect("connect");
+    let mut writer = stream.try_clone().expect("clone stream");
+    let mut reader = BufReader::new(stream);
+
+    // --- 1. Discovery: what can this coordinator plan for? ---
+    let reply = send(&mut writer, &mut reader, "BOARDS");
+    println!("BOARDS → {}", reply.trim_end());
+    let reply = send(&mut writer, &mut reader, "MODELS");
+    println!("MODELS → {}\n", reply.trim_end());
+
+    // --- 2. A zoo model on one device's board, default budget (the
+    //        board's SRAM). The summary is a single JSON line. ---
+    let reply = send(&mut writer, &mut reader, "PLAN streamnet NUCLEO-F446RE");
+    let summary = Json::parse(reply.trim_start_matches("OK ").trim()).expect("summary json");
+    println!(
+        "streamnet @ NUCLEO-F446RE: peak {:.0} B (reorder-only {:.0} B), \
+         {:.0} segment(s), budget_met={}",
+        num(&summary, "peak"),
+        num(&summary, "reordered"),
+        num(&summary, "segments"),
+        summary.get("budget_met").as_bool().unwrap_or(false),
+    );
+
+    // --- 3. Upload a real TFLite model; the returned content hash is the
+    //        model reference every device in the fleet can plan against. ---
+    let path = fixtures::ensure(fixtures::INT8_FIXTURE).expect("tflite fixture");
+    let bytes = std::fs::read(path).expect("reading fixture");
+    writer
+        .write_all(format!("UPLOAD cnn_int8.tflite {}\n", bytes.len()).as_bytes())
+        .expect("upload header");
+    writer.write_all(&bytes).expect("upload body");
+    let mut reply = String::new();
+    reader.read_line(&mut reply).expect("upload reply");
+    let hash = reply.trim().strip_prefix("OK ").expect("upload accepted").to_string();
+    println!("\nuploaded cnn_int8.tflite ({} B) → hash:{hash}", bytes.len());
+
+    // --- 4. Plan the uploaded model for every board profile. Repeat
+    //        requests are cache hits — bit-identical, served instantly. ---
+    for board in boards::ALL_BOARDS {
+        let reply = send(&mut writer, &mut reader, &format!("PLAN hash:{hash} {}", board.name));
+        let doc = Json::parse(reply.trim_start_matches("OK ").trim()).expect("summary json");
+        println!(
+            "  {:>16}: {:>7.0} B SRAM budget, peak {:>6.0} B, fits_sram={}",
+            board.name,
+            board.sram_bytes as f64,
+            num(&doc, "peak"),
+            doc.get("fits_sram").as_bool().unwrap_or(false),
+        );
+    }
+
+    // --- 5. GET downloads the full plan document (execution order, split
+    //        steps, planner telemetry) for the device to apply. ---
+    let reply = send(&mut writer, &mut reader, &format!("GET hash:{hash} SparkFun-Edge"));
+    let plan = Json::parse(reply.trim_start_matches("OK ").trim()).expect("plan json");
+    println!(
+        "\nGET full plan: {} B of JSON, schema_version {:.0}, model {:?}",
+        reply.trim_end().len(),
+        num(&plan, "schema_version"),
+        plan.get("model").as_str().unwrap_or("?"),
+    );
+
+    // --- 6. Service telemetry: cache hit/miss/eviction counters. ---
+    let reply = send(&mut writer, &mut reader, "STATS");
+    let stats = Json::parse(reply.trim_start_matches("OK ").trim()).expect("stats json");
+    let cache = stats.get("cache");
+    println!(
+        "STATS: served {:.0}, cache {:.0} hit / {:.0} miss / {:.0} evicted",
+        num(&stats, "served"),
+        num(cache, "hits"),
+        num(cache, "misses"),
+        num(cache, "evictions"),
+    );
+
+    send(&mut writer, &mut reader, "QUIT");
+    server.join().expect("server thread");
+    svc.shutdown();
+    println!("\nfleet-client walkthrough complete.");
+}

@@ -1,0 +1,316 @@
+//! Bench: the plan-serving coordinator under a simulated fleet.
+//!
+//! Phase A drives the service in-process: every zoo model plus the
+//! imported int8 TFLite fixture across all four board profiles (32
+//! distinct plan keys), first as a full coverage sweep, then under a
+//! zipf-distributed request stream (rank r drawn with weight 1/(r+1))
+//! against an LRU plan cache that is deliberately smaller than the
+//! working set. Because the cache uses a strictly-increasing recency
+//! tick and the draw sequence is a fixed xoshiro256** stream, the
+//! hit/miss/eviction counters are exactly reproducible — the Python
+//! mirror (tools/schedule_mirror --serving-baseline) simulates the same
+//! stream and CI cross-checks the counts.
+//!
+//! Phase B serves the same workload over the TCP front-end (UPLOAD +
+//! PLAN lines from concurrent clients) and reports plans/sec and
+//! p50/p99 round-trip latency. Phase C exercises admission control on a
+//! paused service (bounded queue, explicit shed). Cached-vs-fresh
+//! bit-identity and service-vs-direct-API bit-identity are asserted on
+//! a separate service so they cannot disturb the mirrored counters.
+//!
+//! Results land in `BENCH_serving.json`; tools/bench_compare gates the
+//! `_floor` metrics (served plans, zipf hits, coverage, sheds).
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use mcu_reorder::api::{ModelSource, OptimizeRequest};
+use mcu_reorder::coordinator::{
+    serve_plans_tcp, ModelRef, PlanRequest, PlanServeConfig, PlanService, Submission,
+};
+use mcu_reorder::graph::DType;
+use mcu_reorder::mcu::boards;
+use mcu_reorder::models;
+use mcu_reorder::split::SplitOptions;
+use mcu_reorder::util::bench::{write_json_report, BenchResult, Table};
+use mcu_reorder::util::rng::Rng;
+use mcu_reorder::util::stats;
+
+/// Seed shared with the Python mirror (arXiv:1910.05110 backwards).
+const SEED: u64 = 19_100_511;
+/// Cache capacity — deliberately smaller than the 32-key working set.
+const CACHE_CAP: usize = 24;
+const ZIPF_DRAWS: usize = 400;
+const TCP_CLIENTS: usize = 4;
+const TCP_REQS_PER_CLIENT: usize = 100;
+
+fn cfg(workers: usize) -> PlanServeConfig {
+    PlanServeConfig {
+        workers,
+        cache_cap: CACHE_CAP,
+        queue_cap: 64,
+        split: SplitOptions::quick(),
+        ..Default::default()
+    }
+}
+
+/// The fleet's model set: the full zoo plus the uploaded TFLite fixture.
+fn model_refs(upload_hash: u64) -> Vec<ModelRef> {
+    let mut refs: Vec<ModelRef> =
+        models::MODEL_NAMES.iter().map(|n| ModelRef::Zoo(n.to_string())).collect();
+    refs.push(ModelRef::Uploaded(upload_hash));
+    refs
+}
+
+/// Rank r maps to (model r % n_models, board r / n_models), budget = board
+/// SRAM. Each rank is a distinct plan-cache key.
+fn req_for(refs: &[ModelRef], rank: usize) -> PlanRequest {
+    PlanRequest {
+        model: refs[rank % refs.len()].clone(),
+        board: boards::ALL_BOARDS[rank / refs.len()],
+        budget: None,
+    }
+}
+
+/// Integer zipf(1) weights, identical to the Python mirror: w_r = 1e6/(r+1).
+fn zipf_weights(n: usize) -> Vec<u64> {
+    (0..n).map(|r| 1_000_000 / (r as u64 + 1)).collect()
+}
+
+fn zipf_rank(rng: &mut Rng, weights: &[u64]) -> usize {
+    let total: u64 = weights.iter().sum();
+    let mut draw = rng.below(total);
+    for (r, w) in weights.iter().enumerate() {
+        if draw < *w {
+            return r;
+        }
+        draw -= w;
+    }
+    weights.len() - 1
+}
+
+fn main() {
+    let fixture = mcu_reorder::tflite::fixtures::ensure(mcu_reorder::tflite::fixtures::INT8_FIXTURE)
+        .expect("tflite fixture generation (python3 required)");
+    let fixture_bytes = std::fs::read(&fixture).expect("reading tflite fixture");
+    let mut metrics: Vec<(String, f64)> = Vec::new();
+
+    // --- Phase A: fleet coverage + zipf stream, in-process. ---
+    let svc = PlanService::start(cfg(1));
+    let hash = svc
+        .upload("cnn_int8.tflite".to_string(), fixture_bytes.clone())
+        .expect("fixture upload");
+    let refs = model_refs(hash);
+    let n_ranks = refs.len() * boards::ALL_BOARDS.len();
+
+    println!("=== plan serving: fleet coverage (zoo + tflite × all boards) ===\n");
+    let mut table =
+        Table::new(&["model", "board", "budget", "peak", "reordered", "segments", "fits"]);
+    for rank in 0..n_ranks {
+        let plan = svc.plan(&req_for(&refs, rank)).expect("coverage plan");
+        table.row(&[
+            plan.model.clone(),
+            plan.board.to_string(),
+            format!("{}", plan.budget),
+            format!("{}", plan.peak_bytes),
+            format!("{}", plan.reordered_peak),
+            format!("{}", plan.segments),
+            format!("{}", plan.fits),
+        ]);
+    }
+    table.print();
+    let s1 = svc.stats();
+    assert_eq!(s1.served as usize, n_ranks, "every coverage request must be served");
+    assert_eq!(s1.cache.misses as usize, n_ranks, "coverage keys are all distinct");
+    assert_eq!(
+        s1.cache.evictions as usize,
+        n_ranks - CACHE_CAP,
+        "working set exceeds the cache by exactly n_ranks - cap"
+    );
+
+    let weights = zipf_weights(n_ranks);
+    let mut rng = Rng::new(SEED);
+    for _ in 0..ZIPF_DRAWS {
+        let rank = zipf_rank(&mut rng, &weights);
+        svc.plan(&req_for(&refs, rank)).expect("zipf plan");
+    }
+    let s2 = svc.stats();
+    svc.shutdown();
+    let zipf_hits = s2.cache.hits - s1.cache.hits;
+    let zipf_misses = ZIPF_DRAWS as u64 - zipf_hits;
+    let hit_rate = zipf_hits as f64 / ZIPF_DRAWS as f64;
+    println!(
+        "\nzipf stream: {ZIPF_DRAWS} draws over {n_ranks} ranks, cache {CACHE_CAP} → \
+         {zipf_hits} hits / {zipf_misses} misses ({:.1}% hit rate), {} evictions",
+        100.0 * hit_rate,
+        s2.cache.evictions
+    );
+    assert_eq!(s2.served as usize, n_ranks + ZIPF_DRAWS);
+    assert!(hit_rate >= 0.8, "zipf hit rate {hit_rate:.3} below the 0.8 acceptance floor");
+
+    metrics.push(("fleet.plans_served_floor".into(), s2.served as f64));
+    metrics.push(("fleet.zipf_hits_floor".into(), zipf_hits as f64));
+    metrics.push(("fleet.zipf_hit_rate_pct".into(), 100.0 * hit_rate));
+    metrics.push(("fleet.zipf_misses".into(), zipf_misses as f64));
+    metrics.push(("fleet.coverage_models_floor".into(), refs.len() as f64));
+    metrics.push(("fleet.coverage_boards_floor".into(), boards::ALL_BOARDS.len() as f64));
+    metrics.push(("fleet.cache_evictions".into(), s2.cache.evictions as f64));
+    metrics.push(("fleet.cache_entries".into(), s2.cache.entries as f64));
+
+    // --- Cached == fresh bit-identity, on a separate service so the
+    //     mirrored counters above stay untouched. ---
+    let svc2 = PlanService::start(cfg(1));
+    let h2 = svc2
+        .upload("cnn_int8.tflite".to_string(), fixture_bytes.clone())
+        .expect("fixture re-upload");
+    assert_eq!(h2, hash, "content hash must be a pure function of the bytes");
+    for rank in [0usize, 9, 7] {
+        let req = req_for(&refs, rank);
+        let fresh = svc2.plan(&req).expect("fresh plan");
+        let cached = svc2.plan(&req).expect("cached plan");
+        assert_eq!(*fresh.json, *cached.json, "rank {rank}: cached JSON must be bit-identical");
+        assert_eq!(*fresh.summary, *cached.summary, "rank {rank}: cached summary must match");
+    }
+    // Service plan == direct API facade call, byte for byte.
+    let board = boards::ALL_BOARDS[1];
+    let via_service = svc2
+        .plan(&PlanRequest {
+            model: ModelRef::Zoo("mobilenet".to_string()),
+            board,
+            budget: None,
+        })
+        .expect("service plan");
+    let direct = OptimizeRequest {
+        source: ModelSource::Zoo { name: "mobilenet".to_string(), dtype: DType::I8 },
+        budget: Some(board.sram_bytes),
+        board,
+        split: Some(SplitOptions::quick()),
+        compare_materialized: false,
+        trace: false,
+    }
+    .run()
+    .expect("direct optimize");
+    assert_eq!(
+        direct.to_json().to_string(),
+        *via_service.json,
+        "service plans must be byte-identical to direct api::OptimizeRequest runs"
+    );
+    svc2.shutdown();
+    println!("bit-identity: cached == fresh == direct API (3 ranks + mobilenet probe)");
+
+    // --- Phase B: the TCP front-end under concurrent clients. ---
+    let svc3 = PlanService::start(cfg(2));
+    let (addr_tx, addr_rx) = mpsc::channel();
+    let srv = svc3.clone();
+    let server = std::thread::spawn(move || {
+        serve_plans_tcp(srv, "127.0.0.1:0", Some(TCP_CLIENTS), move |a| {
+            let _ = addr_tx.send(a);
+        })
+        .expect("plan server");
+    });
+    let addr = addr_rx.recv().expect("server address");
+
+    let t0 = Instant::now();
+    let mut clients = Vec::new();
+    for c in 0..TCP_CLIENTS {
+        let bytes = fixture_bytes.clone();
+        clients.push(std::thread::spawn(move || -> Vec<f64> {
+            let stream = TcpStream::connect(addr).expect("connect");
+            let mut writer = stream.try_clone().expect("clone stream");
+            let mut reader = BufReader::new(stream);
+            let mut line = String::new();
+
+            writer
+                .write_all(format!("UPLOAD cnn_int8.tflite {}\n", bytes.len()).as_bytes())
+                .expect("upload header");
+            writer.write_all(&bytes).expect("upload body");
+            reader.read_line(&mut line).expect("upload reply");
+            let hash = line.trim().strip_prefix("OK ").expect("upload accepted").to_string();
+
+            let refs = model_refs(u64::from_str_radix(&hash, 16).expect("upload hash"));
+            let weights = zipf_weights(refs.len() * boards::ALL_BOARDS.len());
+            let mut rng = Rng::new(SEED ^ (c as u64 + 1));
+            let mut lat_us = Vec::with_capacity(TCP_REQS_PER_CLIENT);
+            for _ in 0..TCP_REQS_PER_CLIENT {
+                let rank = zipf_rank(&mut rng, &weights);
+                let req = req_for(&refs, rank);
+                let model = match &req.model {
+                    ModelRef::Zoo(name) => name.clone(),
+                    ModelRef::Uploaded(h) => format!("hash:{h:016x}"),
+                };
+                let t = Instant::now();
+                writer
+                    .write_all(format!("PLAN {model} {}\n", req.board.name).as_bytes())
+                    .expect("plan request");
+                line.clear();
+                reader.read_line(&mut line).expect("plan reply");
+                lat_us.push(t.elapsed().as_secs_f64() * 1e6);
+                assert!(line.starts_with("OK "), "PLAN failed: {line}");
+            }
+            writer.write_all(b"QUIT\n").expect("quit");
+            lat_us
+        }));
+    }
+    server.join().expect("server thread");
+    let mut lat_us: Vec<f64> = Vec::new();
+    for c in clients {
+        lat_us.extend(c.join().expect("client thread"));
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let s3 = svc3.stats();
+    svc3.shutdown();
+    let total_reqs = (TCP_CLIENTS * TCP_REQS_PER_CLIENT) as f64;
+    let plans_per_sec = total_reqs / wall;
+    let p50 = stats::percentile(&lat_us, 50.0);
+    let p99 = stats::percentile(&lat_us, 99.0);
+    println!(
+        "\ntcp: {TCP_CLIENTS} clients × {TCP_REQS_PER_CLIENT} reqs → {:.0} plans/sec, \
+         p50 {:.0} µs, p99 {:.0} µs ({} coalesced, cache {}/{} hit/miss)",
+        plans_per_sec, p50, p99, s3.coalesced, s3.cache.hits, s3.cache.misses
+    );
+    assert_eq!(s3.served, total_reqs as u64, "every TCP request must be served");
+    metrics.push(("tcp.plans_per_sec".into(), plans_per_sec));
+    metrics.push(("tcp.p50_us".into(), p50));
+    metrics.push(("tcp.p99_us".into(), p99));
+    metrics.push(("tcp.coalesced".into(), s3.coalesced as f64));
+
+    // --- Phase C: admission control on a paused service. ---
+    let svc4 = PlanService::start_paused(PlanServeConfig { queue_cap: 8, ..cfg(1) });
+    let mut shed = 0usize;
+    let mut pending = Vec::new();
+    for i in 0..12usize {
+        let req = PlanRequest {
+            model: ModelRef::Zoo("figure1".to_string()),
+            board: boards::ALL_BOARDS[0],
+            budget: Some(4_000_000 + i),
+        };
+        match svc4.submit(&req).expect("submit") {
+            Submission::Shed { .. } => shed += 1,
+            Submission::Pending(rx) => pending.push(rx),
+            Submission::Ready(_) => unreachable!("paused service cannot have cached plans"),
+        }
+    }
+    svc4.shutdown();
+    for rx in pending {
+        let reply = rx.recv().expect("queued jobs must be failed on shutdown, not dropped");
+        assert!(reply.is_err(), "a paused service cannot have produced a plan");
+    }
+    println!("admission control: 12 submits into queue_cap 8 → {shed} shed");
+    assert_eq!(shed, 4, "queue_cap 8 must shed exactly the 4 overflow requests");
+    metrics.push(("fleet.shed_floor".into(), shed as f64));
+
+    let timings = [BenchResult {
+        name: "serving/tcp-plan-roundtrip".into(),
+        iters: lat_us.len() as u64,
+        mean_ns: stats::mean(&lat_us) * 1e3,
+        stddev_ns: stats::stddev(&lat_us) * 1e3,
+        min_ns: stats::min(&lat_us) * 1e3,
+        max_ns: stats::max(&lat_us) * 1e3,
+    }];
+    match write_json_report("serving", &metrics, &timings) {
+        Ok(p) => println!("\nwrote {p}"),
+        Err(e) => eprintln!("could not write JSON report: {e}"),
+    }
+}

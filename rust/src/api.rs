@@ -1,0 +1,909 @@
+//! The library-level optimize facade: [`OptimizeRequest`] → [`OptimizeReport`].
+//!
+//! Every front-end — the `import`/`optimize`/`split` CLI subcommands and the
+//! plan-serving coordinator ([`crate::coordinator`]) — builds one
+//! [`OptimizeRequest`] and calls [`OptimizeRequest::run`], so the planning
+//! pipeline (resolve model → reorder DP → split/elide beam search → deploy
+//! verdict) exists in exactly one place. The CLI renderers live here too
+//! ([`render_import`], [`render_optimize_tflite`], [`render_split`], …) so
+//! a cached plan serialized by the coordinator is bit-identical to what a
+//! fresh CLI run would print.
+//!
+//! Serialization stability: every JSON document produced from an
+//! [`OptimizeReport`] carries a `schema_version` field ([`SCHEMA_VERSION`]).
+//! The number is bumped whenever a key is renamed, removed, or changes
+//! meaning; adding new keys is not a bump. Coordinator clients and the
+//! Python mirror check it to detect drift.
+
+use crate::graph::serde::ModelFile;
+use crate::graph::{DType, Graph, SplitAxis};
+use crate::mcu::{
+    Board, CostModel, DeployReport, OverheadModel, SplitOverhead, NUCLEO_F767ZI,
+};
+use crate::models;
+use crate::sched;
+use crate::split::{self, PlannerStats, SplitOptions, SplitOutcome, SplitStep};
+use crate::trace::{Event, VecSink};
+use crate::util::error::{anyhow, Context, Result};
+use crate::util::json::Json;
+
+/// Version of the `OptimizeReport` JSON encodings (the `optimize --json`
+/// document, the coordinator's plan/summary documents). Bumped on any
+/// incompatible change; additions of new keys are compatible.
+pub const SCHEMA_VERSION: u64 = 1;
+
+/// FNV-1a 64-bit hash — the crate's content fingerprint (same constants as
+/// the TFLite fixture stamp). Used for model content hashes and option
+/// fingerprints in plan-cache keys.
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Where the model comes from. All variants resolve to the same
+/// [`ResolvedModel`], so downstream planning is source-agnostic.
+#[derive(Clone)]
+pub enum ModelSource {
+    /// A zoo model by name ([`crate::models::by_name`]).
+    Zoo { name: String, dtype: DType },
+    /// A `.tflite` flatbuffer on disk.
+    TflitePath(String),
+    /// A `.tflite` flatbuffer already in memory (coordinator uploads).
+    TfliteBytes { label: String, bytes: std::sync::Arc<Vec<u8>> },
+    /// A model JSON file ([`ModelFile`]) on disk.
+    JsonPath(String),
+    /// An already-built graph (embedders, tests).
+    Graph(Graph),
+}
+
+impl ModelSource {
+    /// Dispatch a `--file` path on its extension: `.tflite` loads through
+    /// the flatbuffer frontend, anything else as model JSON.
+    pub fn from_path(path: &str) -> ModelSource {
+        if path.ends_with(".tflite") {
+            ModelSource::TflitePath(path.to_string())
+        } else {
+            ModelSource::JsonPath(path.to_string())
+        }
+    }
+
+    /// Human-readable source label (path, zoo name, or upload label).
+    pub fn label(&self) -> &str {
+        match self {
+            ModelSource::Zoo { name, .. } => name,
+            ModelSource::TflitePath(p) => p,
+            ModelSource::TfliteBytes { label, .. } => label,
+            ModelSource::JsonPath(p) => p,
+            ModelSource::Graph(g) => &g.name,
+        }
+    }
+
+    /// Load the model. Error messages match the historical CLI wording.
+    pub fn resolve(&self) -> Result<ResolvedModel> {
+        match self {
+            ModelSource::Zoo { name, dtype } => {
+                let g = models::by_name(name, *dtype).ok_or_else(|| {
+                    anyhow!(
+                        "unknown model {name:?}; try: {}",
+                        models::MODEL_NAMES.join(", ")
+                    )
+                })?;
+                Ok(ResolvedModel::plain(g, None, name.clone()))
+            }
+            ModelSource::TflitePath(path) => {
+                let bytes =
+                    std::fs::read(path).with_context(|| format!("reading {path}"))?;
+                let model = crate::tflite::Model::parse(&bytes)
+                    .map_err(|e| anyhow!("{path}: not a loadable TFLite model: {e}"))?;
+                let imported =
+                    crate::tflite::import(&model).map_err(|e| anyhow!("{path}: {e}"))?;
+                Ok(ResolvedModel::tflite(model, imported, path.clone(), fnv64(&bytes)))
+            }
+            ModelSource::TfliteBytes { label, bytes } => {
+                let model = crate::tflite::Model::parse(bytes)
+                    .map_err(|e| anyhow!("{label}: not a loadable TFLite model: {e}"))?;
+                let imported =
+                    crate::tflite::import(&model).map_err(|e| anyhow!("{label}: {e}"))?;
+                Ok(ResolvedModel::tflite(model, imported, label.clone(), fnv64(bytes)))
+            }
+            ModelSource::JsonPath(path) => {
+                let src = std::fs::read_to_string(path)
+                    .with_context(|| format!("reading {path}"))?;
+                let mf = ModelFile::from_json(&src).map_err(|e| anyhow!("{e}"))?;
+                Ok(ResolvedModel::plain(mf.graph, mf.execution_order, path.clone()))
+            }
+            ModelSource::Graph(g) => {
+                Ok(ResolvedModel::plain(g.clone(), None, g.name.clone()))
+            }
+        }
+    }
+}
+
+/// A retained `.tflite` source: the parsed flatbuffer plus the import
+/// binding, kept so the optimized operator order can be written back
+/// ([`OptimizeReport::write_reordered_tflite`]).
+pub struct TfliteSource {
+    pub model: crate::tflite::Model,
+    pub imported: crate::tflite::Imported,
+}
+
+/// A loaded model, source-agnostic.
+pub struct ResolvedModel {
+    pub graph: Graph,
+    /// Execution order embedded in the source file, if any (model JSON
+    /// containers may carry one; `.tflite` operator order is already the
+    /// graph's default order).
+    pub embedded_order: Option<Vec<usize>>,
+    /// Source label (path / zoo name / upload label).
+    pub label: String,
+    /// Flatbuffer operator count before activation de-fusing.
+    pub file_operators: Option<usize>,
+    /// FNV-1a of the model content: the raw flatbuffer bytes for `.tflite`
+    /// sources (so an upload and the file it came from hash identically),
+    /// canonical [`ModelFile`] JSON otherwise. The plan-cache identity of
+    /// the model.
+    pub content_hash: u64,
+    /// Retained flatbuffer source, when the model came from one.
+    pub tflite: Option<Box<TfliteSource>>,
+}
+
+impl ResolvedModel {
+    fn plain(graph: Graph, embedded_order: Option<Vec<usize>>, label: String) -> ResolvedModel {
+        let content_hash = fnv64(ModelFile::new(graph.clone()).to_json().as_bytes());
+        ResolvedModel {
+            graph,
+            embedded_order,
+            label,
+            file_operators: None,
+            content_hash,
+            tflite: None,
+        }
+    }
+
+    fn tflite(
+        model: crate::tflite::Model,
+        imported: crate::tflite::Imported,
+        label: String,
+        content_hash: u64,
+    ) -> ResolvedModel {
+        ResolvedModel {
+            graph: imported.graph.clone(),
+            embedded_order: None,
+            label,
+            file_operators: Some(model.subgraph.operators.len()),
+            content_hash,
+            tflite: Some(Box::new(TfliteSource { model, imported })),
+        }
+    }
+}
+
+/// One planning request: a model, an SRAM budget, and the knobs.
+#[derive(Clone)]
+pub struct OptimizeRequest {
+    pub source: ModelSource,
+    /// Peak-SRAM budget in bytes. Overrides `split.sram_budget` when a
+    /// split search is configured; `None` plans without a target.
+    pub budget: Option<usize>,
+    /// Target board for the deploy verdict (overhead model + SRAM size).
+    pub board: &'static Board,
+    /// Split/elide beam search configuration; `None` = reorder only.
+    pub split: Option<SplitOptions>,
+    /// Additionally run the materialized-join twin of the split search
+    /// (the `optimize MODEL.tflite` report shows both).
+    pub compare_materialized: bool,
+    /// Record planner telemetry events into [`OptimizeReport::events`].
+    pub trace: bool,
+}
+
+impl OptimizeRequest {
+    /// Full pipeline with default split options under `board`'s SRAM.
+    pub fn new(source: ModelSource) -> OptimizeRequest {
+        OptimizeRequest {
+            source,
+            budget: None,
+            board: &NUCLEO_F767ZI,
+            split: Some(SplitOptions::default()),
+            compare_materialized: false,
+            trace: false,
+        }
+    }
+
+    /// Reorder-only request (no split search).
+    pub fn reorder_only(source: ModelSource) -> OptimizeRequest {
+        OptimizeRequest { split: None, ..OptimizeRequest::new(source) }
+    }
+
+    pub fn with_budget(mut self, budget: Option<usize>) -> Self {
+        self.budget = budget;
+        self
+    }
+
+    pub fn with_board(mut self, board: &'static Board) -> Self {
+        self.board = board;
+        self
+    }
+
+    pub fn with_split(mut self, split: Option<SplitOptions>) -> Self {
+        self.split = split;
+        self
+    }
+
+    pub fn with_trace(mut self, trace: bool) -> Self {
+        self.trace = trace;
+        self
+    }
+
+    /// Fingerprint of everything that affects the produced plan *except*
+    /// the model content: schema version, board, budget, and every split
+    /// knob. Together with [`ResolvedModel::content_hash`] this is the
+    /// plan-cache key, so two requests with equal fingerprints and equal
+    /// model hashes are guaranteed to produce bit-identical reports.
+    pub fn options_fingerprint(&self) -> u64 {
+        let split = match &self.split {
+            None => "none".to_string(),
+            Some(o) => {
+                let axes: Vec<&str> = o.axes.iter().map(|a| a.name()).collect();
+                format!(
+                    "f{} s{} b{:?} r{} c{} w{} a[{}] e{} t{} {:?}",
+                    o.max_factor,
+                    o.max_segment,
+                    o.sram_budget,
+                    o.max_rounds,
+                    o.max_candidates,
+                    o.beam_width,
+                    axes.join(","),
+                    o.elide,
+                    o.threads,
+                    o.eval,
+                )
+            }
+        };
+        let key = format!(
+            "v{}|board={}|budget={:?}|mat={}|split={}",
+            SCHEMA_VERSION, self.board.name, self.budget, self.compare_materialized, split
+        );
+        fnv64(key.as_bytes())
+    }
+
+    /// Run the pipeline: resolve → Algorithm-1 reorder DP → optional
+    /// split/elide beam search → static-arena and deploy accounting.
+    pub fn run(&self) -> Result<OptimizeReport> {
+        let resolved = self.source.resolve()?;
+        let g = &resolved.graph;
+        let default_order =
+            resolved.embedded_order.clone().unwrap_or_else(|| g.default_order());
+        let default_peak = sched::peak_of(g, &default_order);
+        let (reordered, search) = sched::optimal(g).map_err(|e| anyhow!("{e}"))?;
+        let static_arena_bytes = crate::alloc::StaticPlan::no_reuse(g).arena_bytes;
+
+        let mut events: Vec<Event> = Vec::new();
+        let mut materialized_peak = None;
+        let split_report = match &self.split {
+            None => None,
+            Some(base) => {
+                let mut opts = base.clone();
+                if self.budget.is_some() {
+                    opts.sram_budget = self.budget;
+                }
+                if self.compare_materialized {
+                    let mat = split::optimize(g, &opts.clone().materialized())
+                        .map_err(|e| anyhow!("{e}"))?;
+                    materialized_peak = Some(mat.schedule.peak_bytes);
+                }
+                let outcome = if self.trace {
+                    let mut sink = VecSink::new();
+                    let o = split::optimize_traced(g, &opts, &mut sink)
+                        .map_err(|e| anyhow!("{e}"))?;
+                    events = sink.events;
+                    o
+                } else {
+                    split::optimize(g, &opts).map_err(|e| anyhow!("{e}"))?
+                };
+                let overhead = SplitOverhead::measure(
+                    &CostModel::cortex_m7_reference(),
+                    g,
+                    &outcome.graph,
+                    self.board,
+                );
+                Some(SplitReport { outcome, overhead })
+            }
+        };
+
+        Ok(OptimizeReport {
+            schema_version: SCHEMA_VERSION,
+            model: g.name.clone(),
+            source: resolved.label.clone(),
+            graph: resolved.graph.clone(),
+            embedded_order: resolved.embedded_order.clone(),
+            file_operators: resolved.file_operators,
+            content_hash: resolved.content_hash,
+            default_peak,
+            reordered,
+            search,
+            static_arena_bytes,
+            budget: self.budget,
+            board: self.board,
+            split: split_report,
+            materialized_peak,
+            events,
+            tflite: resolved.tflite,
+        })
+    }
+}
+
+/// Split-search result plus the modeled recompute/flash overheads of the
+/// committed plan.
+pub struct SplitReport {
+    pub outcome: SplitOutcome,
+    pub overhead: SplitOverhead,
+}
+
+/// Everything a front-end needs to render, serialize, or deploy the plan.
+pub struct OptimizeReport {
+    pub schema_version: u64,
+    /// Graph name.
+    pub model: String,
+    /// Source label (path / zoo name / upload label).
+    pub source: String,
+    pub graph: Graph,
+    pub embedded_order: Option<Vec<usize>>,
+    pub file_operators: Option<usize>,
+    pub content_hash: u64,
+    /// Peak of the source's own execution order (file order for `.tflite`).
+    pub default_peak: usize,
+    /// The Algorithm-1 reorder-only optimum.
+    pub reordered: sched::Schedule,
+    pub search: sched::OptimalStats,
+    /// Static no-reuse arena size (the allocator the paper replaces).
+    pub static_arena_bytes: usize,
+    pub budget: Option<usize>,
+    pub board: &'static Board,
+    pub split: Option<SplitReport>,
+    /// Peak of the materialized-join split twin, when requested.
+    pub materialized_peak: Option<usize>,
+    /// Planner telemetry, when requested.
+    pub events: Vec<Event>,
+    /// Retained flatbuffer source, when the model came from one.
+    pub tflite: Option<Box<TfliteSource>>,
+}
+
+impl OptimizeReport {
+    /// Lowest peak achieved by the pipeline (split optimum when a split
+    /// search ran, reorder-only optimum otherwise).
+    pub fn best_peak(&self) -> usize {
+        match &self.split {
+            Some(s) => s.outcome.schedule.peak_bytes,
+            None => self.reordered.peak_bytes,
+        }
+    }
+
+    /// Did the best peak meet the requested budget? `None` when no budget
+    /// was requested.
+    pub fn fits_budget(&self) -> Option<bool> {
+        self.budget.map(|b| self.best_peak() <= b)
+    }
+
+    /// Deploy verdict at the reorder-only peak (the `import` rendering).
+    pub fn deploy(&self) -> DeployReport {
+        self.deploy_at(self.reordered.peak_bytes)
+    }
+
+    /// Deploy verdict at an arbitrary peak on the request's board.
+    pub fn deploy_at(&self, peak_bytes: usize) -> DeployReport {
+        DeployReport::new(&self.graph, peak_bytes, self.board, &OverheadModel::default())
+    }
+
+    /// Write the source flatbuffer back with the reorder-only optimal
+    /// operator order embedded (buffers byte-identical). Errors unless the
+    /// model came from a `.tflite` source.
+    pub fn write_reordered_tflite(&self, out: &str) -> Result<()> {
+        let src = self
+            .tflite
+            .as_ref()
+            .ok_or_else(|| anyhow!("model did not come from a .tflite source"))?;
+        let order = src.imported.operator_order(&self.reordered.order);
+        let reordered =
+            crate::tflite::reorder(&src.model, &order).map_err(|e| anyhow!("{e}"))?;
+        std::fs::write(out, reordered.serialize())
+            .with_context(|| format!("writing {out}"))?;
+        Ok(())
+    }
+
+    /// The full plan document the coordinator serves (`GET`). Canonical:
+    /// a cached plan and a fresh run of the same request serialize to the
+    /// same bytes.
+    pub fn to_json(&self) -> Json {
+        let mut peaks = vec![
+            ("default", Json::Num(self.default_peak as f64)),
+            ("reordered", Json::Num(self.reordered.peak_bytes as f64)),
+        ];
+        if let Some(s) = &self.split {
+            peaks.push(("split", Json::Num(s.outcome.schedule.peak_bytes as f64)));
+        }
+        let (order, plan, planner) = match &self.split {
+            Some(s) => (
+                order_json(&s.outcome.schedule.order),
+                steps_json(&s.outcome.steps),
+                planner_json(&s.outcome.stats),
+            ),
+            None => (
+                order_json(&self.reordered.order),
+                steps_json(&[]),
+                planner_json(&PlannerStats::default()),
+            ),
+        };
+        let deploy = self.deploy_at(self.best_peak());
+        Json::obj(vec![
+            ("schema_version", Json::Num(self.schema_version as f64)),
+            ("model", Json::Str(self.model.clone())),
+            ("source", Json::Str(self.source.clone())),
+            ("content_hash", Json::Str(format!("{:016x}", self.content_hash))),
+            (
+                "board",
+                Json::obj(vec![
+                    ("name", Json::Str(self.board.name.to_string())),
+                    ("sram_bytes", Json::Num(self.board.sram_bytes as f64)),
+                ]),
+            ),
+            (
+                "budget",
+                match self.budget {
+                    Some(b) => Json::Num(b as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("peaks", Json::obj(peaks)),
+            ("order", order),
+            ("plan", plan),
+            ("planner", planner),
+            (
+                "search",
+                Json::obj(vec![
+                    ("states", Json::Num(self.search.states as f64)),
+                    ("expansions", Json::Num(self.search.expansions as f64)),
+                ]),
+            ),
+            ("static_arena", Json::Num(self.static_arena_bytes as f64)),
+            (
+                "deploy",
+                Json::obj(vec![
+                    ("overhead_bytes", Json::Num(deploy.overhead_bytes as f64)),
+                    ("total_sram", Json::Num(deploy.total_sram() as f64)),
+                    ("fits_sram", Json::Bool(deploy.fits_sram)),
+                    ("fits_flash", Json::Bool(deploy.fits_flash)),
+                ]),
+            ),
+        ])
+    }
+
+    /// One-line plan summary (the coordinator's `PLAN` reply).
+    pub fn summary_json(&self) -> Json {
+        let deploy = self.deploy_at(self.best_peak());
+        Json::obj(vec![
+            ("schema_version", Json::Num(self.schema_version as f64)),
+            ("model", Json::Str(self.model.clone())),
+            ("board", Json::Str(self.board.name.to_string())),
+            (
+                "budget",
+                match self.budget {
+                    Some(b) => Json::Num(b as f64),
+                    None => Json::Null,
+                },
+            ),
+            ("peak", Json::Num(self.best_peak() as f64)),
+            ("reordered", Json::Num(self.reordered.peak_bytes as f64)),
+            (
+                "segments",
+                Json::Num(self.split.as_ref().map(|s| s.outcome.steps.len()).unwrap_or(0)
+                    as f64),
+            ),
+            ("fits_sram", Json::Bool(deploy.fits_sram)),
+            (
+                "budget_met",
+                match self.fits_budget() {
+                    Some(ok) => Json::Bool(ok),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JSON fragments shared by the CLI and the coordinator.
+// ---------------------------------------------------------------------------
+
+/// An execution order as a JSON array of op ids.
+pub fn order_json(order: &[usize]) -> Json {
+    Json::Arr(order.iter().map(|&o| Json::Num(o as f64)).collect())
+}
+
+/// Committed split steps as JSON.
+pub fn steps_json(steps: &[SplitStep]) -> Json {
+    Json::Arr(
+        steps
+            .iter()
+            .map(|st| {
+                Json::obj(vec![
+                    (
+                        "segment",
+                        Json::Arr(st.segment.iter().map(|s| Json::Str(s.clone())).collect()),
+                    ),
+                    ("factor", Json::Num(st.factor as f64)),
+                    ("axis", Json::Str(st.axis.name().to_string())),
+                    ("elided", Json::Bool(st.elided)),
+                    ("peak_before", Json::Num(st.peak_before as f64)),
+                    ("peak_after", Json::Num(st.peak_after as f64)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// Planner work counters for `optimize --json` / `split`: how much the
+/// incremental fast path saved over naive full-DP candidate scoring.
+pub fn planner_json(st: &PlannerStats) -> Json {
+    Json::obj(vec![
+        ("scored", Json::Num(st.scored as f64)),
+        ("deduped", Json::Num(st.deduped as f64)),
+        ("improved", Json::Num(st.improved as f64)),
+        ("bounded", Json::Num(st.bounded as f64)),
+        ("full_evals", Json::Num(st.full_evals as f64)),
+        ("cache_lookups", Json::Num(st.cache_lookups as f64)),
+        ("cache_hits", Json::Num(st.cache_hits as f64)),
+        ("cache_misses", Json::Num(st.cache_misses as f64)),
+        ("eval_ratio", Json::Num(st.eval_ratio())),
+        ("threads", Json::Num(st.threads as f64)),
+    ])
+}
+
+/// The `optimize MODEL.tflite --json` document. Requires a report produced
+/// with `compare_materialized` and a split search (the CLI request shape).
+pub fn optimize_tflite_json(r: &OptimizeReport, out: Option<&str>) -> Json {
+    let split = r.split.as_ref().expect("optimize_tflite_json needs a split report");
+    let mat_peak = r.materialized_peak.unwrap_or(split.outcome.schedule.peak_bytes);
+    Json::obj(vec![
+        ("schema_version", Json::Num(r.schema_version as f64)),
+        ("model", Json::Str(r.model.clone())),
+        ("source", Json::Str(r.source.clone())),
+        (
+            "peaks",
+            Json::obj(vec![
+                ("file", Json::Num(r.default_peak as f64)),
+                ("reordered", Json::Num(r.reordered.peak_bytes as f64)),
+                ("split", Json::Num(mat_peak as f64)),
+                ("elided", Json::Num(split.outcome.schedule.peak_bytes as f64)),
+            ]),
+        ),
+        (
+            "budget",
+            match r.budget {
+                Some(b) => Json::Num(b as f64),
+                None => Json::Null,
+            },
+        ),
+        ("order", order_json(&r.reordered.order)),
+        (
+            "search",
+            Json::obj(vec![
+                ("states", Json::Num(r.search.states as f64)),
+                ("expansions", Json::Num(r.search.expansions as f64)),
+            ]),
+        ),
+        ("plan", steps_json(&split.outcome.steps)),
+        ("planner", planner_json(&split.outcome.stats)),
+        (
+            "out",
+            match out {
+                Some(p) => Json::Str(p.to_string()),
+                None => Json::Null,
+            },
+        ),
+    ])
+}
+
+/// The `optimize --model M --json` document.
+pub fn optimize_model_json(r: &OptimizeReport, out: &str) -> Json {
+    Json::obj(vec![
+        ("schema_version", Json::Num(r.schema_version as f64)),
+        ("model", Json::Str(r.model.clone())),
+        (
+            "peaks",
+            Json::obj(vec![
+                ("default", Json::Num(r.default_peak as f64)),
+                ("reordered", Json::Num(r.reordered.peak_bytes as f64)),
+            ]),
+        ),
+        ("order", order_json(&r.reordered.order)),
+        (
+            "search",
+            Json::obj(vec![
+                ("states", Json::Num(r.search.states as f64)),
+                ("expansions", Json::Num(r.search.expansions as f64)),
+            ]),
+        ),
+        ("out", Json::Str(out.to_string())),
+    ])
+}
+
+// ---------------------------------------------------------------------------
+// CLI text renderers (byte-identical to the historical subcommand output).
+// ---------------------------------------------------------------------------
+
+/// The `import MODEL.tflite` report body (everything except the optional
+/// `wrote IR model JSON to …` line, which depends on a CLI-side write).
+pub fn render_import(r: &OptimizeReport) -> String {
+    let g = &r.graph;
+    let path = &r.source;
+    let n_w = g.tensors.iter().filter(|t| t.is_weight).count();
+    let mut out = String::new();
+    out.push_str(&format!(
+        "imported {path}: {} ({} operators → {} ops after de-fusing, {} tensors / {} weights)\n",
+        g.name,
+        r.file_operators.unwrap_or_else(|| g.n_ops()),
+        g.n_ops(),
+        g.n_tensors(),
+        n_w,
+    ));
+    let dtype = g.inputs.first().map(|&t| g.tensors[t].dtype.name()).unwrap_or("?");
+    out.push_str(&format!(
+        "dtype: {}   model size: {} B   activation total: {} B   MACs: {}\n",
+        dtype,
+        g.model_size(),
+        g.activation_total(),
+        g.total_macs()
+    ));
+    out.push('\n');
+    out.push_str(&format!("file-order peak       : {:>9} B\n", r.default_peak));
+    out.push_str(&format!("reorder-only optimal  : {:>9} B\n", r.reordered.peak_bytes));
+    out.push_str(&format!("static no-reuse arena : {:>9} B\n", r.static_arena_bytes));
+    let report = r.deploy();
+    out.push_str(&format!(
+        "deploy ({:>14}): peak + overhead = {} B of {} B SRAM → {}\n",
+        report.board,
+        report.total_sram(),
+        r.board.sram_bytes,
+        if report.fits_sram { "FITS" } else { "DOES NOT FIT" }
+    ));
+    out
+}
+
+/// The `optimize MODEL.tflite` text body (peaks + plan + planner line; the
+/// trailing `wrote …`/`nothing written` lines depend on CLI-side writes).
+pub fn render_optimize_tflite(r: &OptimizeReport) -> String {
+    let split = r.split.as_ref().expect("render_optimize_tflite needs a split report");
+    let elided = &split.outcome;
+    let mat_peak = r.materialized_peak.unwrap_or(elided.schedule.peak_bytes);
+    let mut out = String::new();
+    out.push_str(&format!("model: {} ({} ops de-fused)\n\n", r.model, r.graph.n_ops()));
+    let verdict = |peak: usize| match r.budget {
+        Some(b) if peak <= b => "  [budget MET]",
+        Some(_) => "  [budget NOT met]",
+        None => "",
+    };
+    out.push_str(&format!(
+        "file-order peak       : {:>9} B{}\n",
+        r.default_peak,
+        verdict(r.default_peak)
+    ));
+    out.push_str(&format!(
+        "reorder-only optimal  : {:>9} B{}  ({} states, {} expansions)\n",
+        r.reordered.peak_bytes,
+        verdict(r.reordered.peak_bytes),
+        r.search.states,
+        r.search.expansions
+    ));
+    out.push_str(&format!(
+        "split+reorder         : {:>9} B{}  ({} segment(s))\n",
+        mat_peak,
+        verdict(mat_peak),
+        elided.steps.len()
+    ));
+    out.push_str(&format!(
+        "split+reorder, elided : {:>9} B{}  ({} segment(s), {} join(s) streamed)\n",
+        elided.schedule.peak_bytes,
+        verdict(elided.schedule.peak_bytes),
+        elided.steps.len(),
+        elided.elided_steps()
+    ));
+    for st in &elided.steps {
+        out.push_str(&format!(
+            "  split [{}] ×{} along {}{}: {} B → {} B\n",
+            st.segment.join(" → "),
+            st.factor,
+            st.axis.name(),
+            if st.elided { ", join elided" } else { "" },
+            st.peak_before,
+            st.peak_after
+        ));
+    }
+    if !elided.steps.is_empty() {
+        out.push_str(
+            "  (splits are reported for planning; the flatbuffer stores the reordered\n   \
+             model only — partial execution needs the interpreter/JSON pipeline)\n",
+        );
+    }
+    let st = &elided.stats;
+    out.push_str(&format!(
+        "planner               : {} scored ({} deduped), {} full DP, cache {}/{} hit/miss, \
+         {:.0}× vs naive, {} thread(s)\n",
+        st.scored,
+        st.deduped,
+        st.full_evals,
+        st.cache_hits,
+        st.cache_misses,
+        st.eval_ratio(),
+        st.threads
+    ));
+    out
+}
+
+/// The `optimize --model M --out F` confirmation line.
+pub fn render_optimize_model(r: &OptimizeReport, out: &str) -> String {
+    format!(
+        "wrote {out}: peak {} B → {} B ({} states, {} expansions)\n",
+        r.default_peak, r.reordered.peak_bytes, r.search.states, r.search.expansions
+    )
+}
+
+/// The `split --model M` report body (everything except the optional
+/// `wrote split model + schedule to …` line). `elapsed_secs` is the
+/// caller-measured search wall time.
+pub fn render_split(r: &OptimizeReport, elapsed_secs: f64) -> String {
+    let split = r.split.as_ref().expect("render_split needs a split report");
+    let outcome = &split.outcome;
+    let ov = &split.overhead;
+    let mut out = String::new();
+    out.push_str(&format!(
+        "model: {}  ({} ops → {} after splitting)\n\n",
+        r.model,
+        r.graph.n_ops(),
+        outcome.graph.n_ops()
+    ));
+    out.push_str(&format!("default order peak    : {:>9} B\n", r.default_peak));
+    out.push_str(&format!("reorder-only optimal  : {:>9} B\n", outcome.base_peak));
+    out.push_str(&format!(
+        "split+reorder optimal : {:>9} B  ({} segment(s), {:.2}s search)\n",
+        outcome.schedule.peak_bytes,
+        outcome.steps.len(),
+        elapsed_secs
+    ));
+    for st in &outcome.steps {
+        out.push_str(&format!(
+            "  split [{}] ×{} along {}{}: {} B → {} B\n",
+            st.segment.join(" → "),
+            st.factor,
+            st.axis.name(),
+            if st.elided { ", join elided" } else { "" },
+            st.peak_before,
+            st.peak_after
+        ));
+    }
+    if outcome.steps.is_empty() {
+        out.push_str("  (no split improved on reorder-only scheduling)\n");
+    }
+    let st = &outcome.stats;
+    out.push_str(&format!(
+        "planner               : {} scored ({} deduped), {} full DP, cache {}/{} hit/miss, \
+         {:.0}× vs naive, {} thread(s)\n",
+        st.scored,
+        st.deduped,
+        st.full_evals,
+        st.cache_hits,
+        st.cache_misses,
+        st.eval_ratio(),
+        st.threads
+    ));
+    out.push_str(&format!(
+        "recompute overhead    : {:+.2}% MACs, modeled time ×{:.4}\n",
+        100.0 * ov.recompute_frac(),
+        ov.time_ratio
+    ));
+    for axis in SplitAxis::ALL {
+        let frac = ov.recompute_frac_of(axis);
+        if frac > 0.0 {
+            out.push_str(&format!(
+                "  recompute along {:<8}: {:+.2}% MACs\n",
+                axis.name(),
+                100.0 * frac
+            ));
+        }
+    }
+    out.push_str(&format!(
+        "weight flash traffic  : ×{:.2} ({} B join copies, {} B elided)\n",
+        ov.weight_traffic_ratio(),
+        ov.join_bytes,
+        ov.elided_join_bytes
+    ));
+    if outcome.elided_steps() > 0 {
+        out.push_str(&format!(
+            "join elision          : {}/{} segment join(s) streamed (no ConcatSlices copy)\n",
+            outcome.elided_steps(),
+            outcome.steps.len()
+        ));
+    }
+    if let Some(b) = r.budget {
+        out.push_str(&format!(
+            "SRAM budget {} B     : {}\n",
+            b,
+            if outcome.schedule.peak_bytes <= b { "MET" } else { "NOT MET" }
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fingerprint_depends_on_board_and_budget() {
+        let req = OptimizeRequest::new(ModelSource::Zoo {
+            name: "figure1".into(),
+            dtype: DType::I8,
+        });
+        let base = req.options_fingerprint();
+        let other_board = req.clone().with_board(&crate::mcu::STM32F446RE);
+        assert_ne!(base, other_board.options_fingerprint());
+        let other_budget = req.clone().with_budget(Some(4096));
+        assert_ne!(base, other_budget.options_fingerprint());
+        assert_eq!(base, req.clone().options_fingerprint());
+    }
+
+    #[test]
+    fn zoo_resolve_hashes_content_not_name() {
+        let a = ModelSource::Zoo { name: "figure1".into(), dtype: DType::I8 }
+            .resolve()
+            .unwrap();
+        let b = ModelSource::Zoo { name: "tiny".into(), dtype: DType::I8 }
+            .resolve()
+            .unwrap();
+        assert_ne!(a.content_hash, b.content_hash);
+        let a2 = ModelSource::Zoo { name: "figure1".into(), dtype: DType::I8 }
+            .resolve()
+            .unwrap();
+        assert_eq!(a.content_hash, a2.content_hash);
+    }
+
+    #[test]
+    fn figure1_report_reproduces_paper_peaks() {
+        let r = OptimizeRequest::reorder_only(ModelSource::Zoo {
+            name: "figure1".into(),
+            dtype: DType::I8,
+        })
+        .run()
+        .unwrap();
+        assert_eq!(r.default_peak, 5216);
+        assert_eq!(r.reordered.peak_bytes, 4960);
+        assert_eq!(r.best_peak(), 4960);
+        assert_eq!(r.schema_version, SCHEMA_VERSION);
+    }
+
+    #[test]
+    fn report_json_carries_schema_version() {
+        let r = OptimizeRequest::new(ModelSource::Zoo {
+            name: "figure1".into(),
+            dtype: DType::I8,
+        })
+        .with_budget(Some(5000))
+        .run()
+        .unwrap();
+        let doc = r.to_json();
+        assert_eq!(doc.get("schema_version").as_f64(), Some(SCHEMA_VERSION as f64));
+        let summary = r.summary_json();
+        assert_eq!(summary.get("schema_version").as_f64(), Some(SCHEMA_VERSION as f64));
+        assert_eq!(summary.get("budget_met").as_bool(), Some(true));
+    }
+
+    #[test]
+    fn unknown_zoo_model_is_a_clean_error() {
+        let err = ModelSource::Zoo { name: "nope".into(), dtype: DType::I8 }
+            .resolve()
+            .unwrap_err();
+        assert!(format!("{err}").contains("unknown model"));
+    }
+}

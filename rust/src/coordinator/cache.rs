@@ -1,0 +1,183 @@
+//! LRU plan cache.
+//!
+//! Keys are [`PlanKey`] — `(model content-hash, effective SRAM budget,
+//! options fingerprint)` — so the cache can never conflate two requests
+//! that would plan differently (see
+//! [`crate::api::OptimizeRequest::options_fingerprint`]). Recency is a
+//! strictly-increasing tick counter: `get` promotes, `insert` evicts the
+//! minimum-tick entry when full. Because ticks never repeat, eviction
+//! order is fully deterministic, which the serving bench's Python mirror
+//! relies on to predict hit/miss/eviction counts exactly.
+
+use std::collections::HashMap;
+
+/// Identity of a cached plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    /// FNV-1a of the model content ([`crate::api::fnv64`]).
+    pub model_hash: u64,
+    /// Effective SRAM budget in bytes (explicit budget, or the board's).
+    pub budget: usize,
+    /// Fingerprint of board + split options + schema version.
+    pub opts_fp: u64,
+}
+
+/// Hit/miss/eviction counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PlanCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// Entries currently resident.
+    pub entries: usize,
+    /// Configured capacity.
+    pub cap: usize,
+}
+
+/// A fixed-capacity LRU map from [`PlanKey`] to a plan value.
+pub struct PlanCache<V: Clone> {
+    map: HashMap<PlanKey, (u64, V)>,
+    tick: u64,
+    cap: usize,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+impl<V: Clone> PlanCache<V> {
+    /// Capacity is clamped to at least 1.
+    pub fn new(cap: usize) -> PlanCache<V> {
+        PlanCache {
+            map: HashMap::new(),
+            tick: 0,
+            cap: cap.max(1),
+            hits: 0,
+            misses: 0,
+            evictions: 0,
+        }
+    }
+
+    /// Look up a plan, promoting it to most-recently-used on hit.
+    pub fn get(&mut self, key: &PlanKey) -> Option<V> {
+        self.tick += 1;
+        match self.map.get_mut(key) {
+            Some((tick, v)) => {
+                *tick = self.tick;
+                self.hits += 1;
+                Some(v.clone())
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert (or refresh) a plan. Returns the evicted entry when the
+    /// cache was full and a least-recently-used victim had to go.
+    pub fn insert(&mut self, key: PlanKey, value: V) -> Option<(PlanKey, V)> {
+        self.tick += 1;
+        if self.map.contains_key(&key) {
+            self.map.insert(key, (self.tick, value));
+            return None;
+        }
+        let mut evicted = None;
+        if self.map.len() >= self.cap {
+            let victim = self.map.iter().min_by_key(|(_, (t, _))| *t).map(|(k, _)| *k);
+            if let Some(k) = victim {
+                if let Some((_, v)) = self.map.remove(&k) {
+                    self.evictions += 1;
+                    evicted = Some((k, v));
+                }
+            }
+        }
+        self.map.insert(key, (self.tick, value));
+        evicted
+    }
+
+    pub fn contains(&self, key: &PlanKey) -> bool {
+        self.map.contains_key(key)
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn stats(&self) -> PlanCacheStats {
+        PlanCacheStats {
+            hits: self.hits,
+            misses: self.misses,
+            evictions: self.evictions,
+            entries: self.map.len(),
+            cap: self.cap,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(n: u64) -> PlanKey {
+        PlanKey { model_hash: n, budget: 1024, opts_fp: 7 }
+    }
+
+    #[test]
+    fn hit_miss_counting() {
+        let mut c: PlanCache<u32> = PlanCache::new(2);
+        assert_eq!(c.get(&key(1)), None);
+        c.insert(key(1), 10);
+        assert_eq!(c.get(&key(1)), Some(10));
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.evictions, s.entries), (1, 1, 0, 1));
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut c: PlanCache<u32> = PlanCache::new(2);
+        c.insert(key(1), 10);
+        c.insert(key(2), 20);
+        assert_eq!(c.get(&key(1)), Some(10)); // promote 1; 2 is now LRU
+        let evicted = c.insert(key(3), 30);
+        assert_eq!(evicted.map(|(k, v)| (k.model_hash, v)), Some((2, 20)));
+        assert_eq!(c.get(&key(2)), None);
+        assert_eq!(c.get(&key(1)), Some(10));
+        assert_eq!(c.get(&key(3)), Some(30));
+        assert_eq!(c.stats().evictions, 1);
+    }
+
+    #[test]
+    fn reinsert_refreshes_without_eviction() {
+        let mut c: PlanCache<u32> = PlanCache::new(2);
+        c.insert(key(1), 10);
+        c.insert(key(2), 20);
+        assert!(c.insert(key(1), 11).is_none()); // refresh, not a new entry
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.get(&key(1)), Some(11));
+    }
+
+    #[test]
+    fn distinct_budgets_are_distinct_keys() {
+        let mut c: PlanCache<u32> = PlanCache::new(4);
+        let a = PlanKey { model_hash: 1, budget: 1024, opts_fp: 7 };
+        let b = PlanKey { model_hash: 1, budget: 2048, opts_fp: 7 };
+        c.insert(a, 1);
+        c.insert(b, 2);
+        assert_eq!(c.get(&a), Some(1));
+        assert_eq!(c.get(&b), Some(2));
+    }
+
+    #[test]
+    fn zero_cap_clamps_to_one() {
+        let mut c: PlanCache<u32> = PlanCache::new(0);
+        c.insert(key(1), 10);
+        assert_eq!(c.get(&key(1)), Some(10));
+        c.insert(key(2), 20);
+        assert_eq!(c.get(&key(1)), None);
+        assert_eq!(c.stats().cap, 1);
+    }
+}

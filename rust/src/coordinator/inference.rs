@@ -1,0 +1,546 @@
+//! Serving coordinator: request queue, batcher, worker pool, metrics.
+//!
+//! The paper's system is single-image MCU inference; this layer is the
+//! deployment harness around it — the piece a fleet operator runs on the
+//! gateway: accept inference requests, group them into micro-batches to
+//! amortize dispatch, execute them on a pool of workers (each owning its
+//! own PJRT runtime, since the FFI handles are thread-local), and report
+//! latency percentiles and throughput.
+//!
+//! Workers are engine-agnostic via the [`Engine`] trait:
+//! - [`pjrt_engine_factory`] — the production path: each worker compiles
+//!   the AOT HLO artifact on its own CPU PJRT client.
+//! - [`interp_engine_factory`] — the MCU-faithful path: the in-crate
+//!   micro-interpreter with arena + defragmentation (also what tests use,
+//!   since it needs no artifacts).
+//!
+//! A minimal TCP front-end ([`serve_tcp`]) speaks a newline-delimited CSV
+//! protocol for the end-to-end example.
+
+use std::collections::VecDeque;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::util::error::{anyhow, Result};
+
+use crate::util::stats::LatencyHist;
+
+/// A model-execution backend owned by one worker thread.
+pub trait Engine {
+    /// Run one inference: input tensor (flattened f32) → output tensor.
+    fn infer(&mut self, input: &[f32]) -> Result<Vec<f32>, String>;
+}
+
+/// Factory that builds an engine *inside* the worker thread (PJRT handles
+/// are not `Send`, so construction must happen on the owning thread).
+pub type EngineFactory = Arc<dyn Fn(usize) -> Result<Box<dyn Engine>, String> + Send + Sync>;
+
+/// Engine factory for the PJRT artifact path.
+pub fn pjrt_engine_factory(model: String, artifacts_dir: PathBuf) -> EngineFactory {
+    Arc::new(move |_worker| {
+        struct PjrtEngine {
+            rt: crate::runtime::Runtime,
+            model: String,
+        }
+        impl Engine for PjrtEngine {
+            fn infer(&mut self, input: &[f32]) -> Result<Vec<f32>, String> {
+                let outs = self
+                    .rt
+                    .execute_f32(&self.model, &[input.to_vec()])
+                    .map_err(|e| e.to_string())?;
+                Ok(outs.into_iter().next().unwrap_or_default())
+            }
+        }
+        let mut rt = crate::runtime::Runtime::cpu().map_err(|e| e.to_string())?;
+        rt.load_artifact(&model, &artifacts_dir).map_err(|e| e.to_string())?;
+        Ok(Box::new(PjrtEngine { rt, model: model.clone() }) as Box<dyn Engine>)
+    })
+}
+
+/// Engine factory for the micro-interpreter path (MCU-faithful execution
+/// inside an SRAM-sized arena with defragmentation).
+pub fn interp_engine_factory(
+    graph: crate::graph::Graph,
+    seed: u64,
+    arena_bytes: usize,
+) -> EngineFactory {
+    let g = Arc::new(graph);
+    Arc::new(move |_worker| {
+        struct InterpEngine {
+            g: Arc<crate::graph::Graph>,
+            ws: crate::interp::WeightStore,
+            arena_bytes: usize,
+        }
+        impl Engine for InterpEngine {
+            fn infer(&mut self, input: &[f32]) -> Result<Vec<f32>, String> {
+                let interp = crate::interp::Interpreter::new(
+                    &self.g,
+                    self.ws.clone(),
+                    crate::interp::ExecConfig::with_capacity(self.arena_bytes),
+                );
+                let r = interp
+                    .run(&[crate::interp::TensorData::F32(input.to_vec())])
+                    .map_err(|e| e.to_string())?;
+                r.outputs[0]
+                    .as_f32()
+                    .map(|v| v.to_vec())
+                    .ok_or_else(|| "non-f32 output".to_string())
+            }
+        }
+        let ws = crate::interp::WeightStore::seeded_f32(&g, seed);
+        Ok(Box::new(InterpEngine { g: g.clone(), ws, arena_bytes }) as Box<dyn Engine>)
+    })
+}
+
+/// Coordinator configuration.
+#[derive(Clone)]
+pub struct ServeConfig {
+    /// Worker threads (each with its own engine instance).
+    pub workers: usize,
+    /// Maximum requests a worker drains per queue lock (micro-batch).
+    pub max_batch: usize,
+    /// How long a worker waits to fill a batch once one request is pending.
+    pub max_wait: Duration,
+    /// Queue depth limit; beyond it, submissions are rejected
+    /// (backpressure).
+    pub queue_cap: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            workers: 2,
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            queue_cap: 1024,
+        }
+    }
+}
+
+struct Job {
+    input: Vec<f32>,
+    reply: mpsc::Sender<Result<Vec<f32>, String>>,
+    enqueued: Instant,
+}
+
+#[derive(Default)]
+struct Metrics {
+    e2e: LatencyHist,
+    exec: LatencyHist,
+    queue: LatencyHist,
+    batches: u64,
+    batched_requests: u64,
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    notify: Condvar,
+    stop: AtomicBool,
+    metrics: Mutex<Metrics>,
+    rejected: AtomicU64,
+    queue_cap: usize,
+}
+
+/// Latency/throughput snapshot.
+#[derive(Clone, Debug)]
+pub struct MetricsSnapshot {
+    pub completed: u64,
+    pub rejected: u64,
+    pub mean_e2e_us: f64,
+    pub p50_e2e_us: f64,
+    pub p95_e2e_us: f64,
+    pub p99_e2e_us: f64,
+    pub mean_exec_us: f64,
+    pub mean_queue_us: f64,
+    /// Mean requests per drained batch (batching effectiveness).
+    pub mean_batch: f64,
+}
+
+/// The serving coordinator.
+pub struct Coordinator {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    started: Instant,
+}
+
+impl Coordinator {
+    /// Start `config.workers` threads, each constructing its engine via
+    /// `factory`. Fails if any engine fails to construct.
+    pub fn start(config: ServeConfig, factory: EngineFactory) -> Result<Coordinator> {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            notify: Condvar::new(),
+            stop: AtomicBool::new(false),
+            metrics: Mutex::new(Metrics::default()),
+            rejected: AtomicU64::new(0),
+            queue_cap: config.queue_cap,
+        });
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let mut workers = Vec::with_capacity(config.workers);
+        for w in 0..config.workers {
+            let shared = shared.clone();
+            let factory = factory.clone();
+            let ready = ready_tx.clone();
+            let max_batch = config.max_batch;
+            let max_wait = config.max_wait;
+            workers.push(std::thread::spawn(move || {
+                let mut engine = match factory(w) {
+                    Ok(e) => {
+                        let _ = ready.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready.send(Err(e));
+                        return;
+                    }
+                };
+                worker_loop(&shared, engine.as_mut(), max_batch, max_wait);
+            }));
+        }
+        drop(ready_tx);
+        for _ in 0..config.workers {
+            ready_rx
+                .recv()
+                .map_err(|_| anyhow!("worker died during startup"))?
+                .map_err(|e| anyhow!("engine construction failed: {e}"))?;
+        }
+        Ok(Coordinator { shared, workers, started: Instant::now() })
+    }
+
+    /// Submit a request; returns a receiver for the reply. Errs immediately
+    /// when the queue is full (backpressure).
+    pub fn submit(&self, input: Vec<f32>) -> Result<mpsc::Receiver<Result<Vec<f32>, String>>> {
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            if q.len() >= self.shared.queue_cap {
+                self.shared.rejected.fetch_add(1, Ordering::Relaxed);
+                return Err(anyhow!("queue full ({} pending)", q.len()));
+            }
+            q.push_back(Job { input, reply: tx, enqueued: Instant::now() });
+        }
+        self.shared.notify.notify_one();
+        Ok(rx)
+    }
+
+    /// Blocking convenience wrapper around [`submit`](Self::submit).
+    pub fn infer(&self, input: Vec<f32>) -> Result<Vec<f32>> {
+        let rx = self.submit(input)?;
+        rx.recv()
+            .map_err(|_| anyhow!("worker dropped reply"))?
+            .map_err(|e| anyhow!("inference failed: {e}"))
+    }
+
+    /// Current metrics snapshot.
+    pub fn metrics(&self) -> MetricsSnapshot {
+        let m = self.shared.metrics.lock().unwrap();
+        MetricsSnapshot {
+            completed: m.e2e.count(),
+            rejected: self.shared.rejected.load(Ordering::Relaxed),
+            mean_e2e_us: m.e2e.mean_us(),
+            p50_e2e_us: m.e2e.percentile_us(50.0),
+            p95_e2e_us: m.e2e.percentile_us(95.0),
+            p99_e2e_us: m.e2e.percentile_us(99.0),
+            mean_exec_us: m.exec.mean_us(),
+            mean_queue_us: m.queue.mean_us(),
+            mean_batch: if m.batches == 0 {
+                0.0
+            } else {
+                m.batched_requests as f64 / m.batches as f64
+            },
+        }
+    }
+
+    /// Requests per second since start.
+    pub fn throughput_rps(&self) -> f64 {
+        let done = self.metrics().completed as f64;
+        done / self.started.elapsed().as_secs_f64().max(1e-9)
+    }
+
+    /// Stop workers and join them. Pending requests get an error reply.
+    pub fn shutdown(mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        self.shared.notify.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        // Drain leftovers with an error.
+        let mut q = self.shared.queue.lock().unwrap();
+        while let Some(job) = q.pop_front() {
+            let _ = job.reply.send(Err("coordinator shut down".into()));
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared, engine: &mut dyn Engine, max_batch: usize, max_wait: Duration) {
+    loop {
+        // Grab a batch: wait for one job, then linger up to `max_wait` for
+        // more (micro-batching).
+        let mut batch: Vec<Job> = Vec::with_capacity(max_batch);
+        {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if shared.stop.load(Ordering::SeqCst) {
+                    return;
+                }
+                if !q.is_empty() {
+                    break;
+                }
+                let (guard, _) =
+                    shared.notify.wait_timeout(q, Duration::from_millis(50)).unwrap();
+                q = guard;
+            }
+            let deadline = Instant::now() + max_wait;
+            loop {
+                while batch.len() < max_batch {
+                    match q.pop_front() {
+                        Some(j) => batch.push(j),
+                        None => break,
+                    }
+                }
+                if batch.len() >= max_batch || Instant::now() >= deadline {
+                    break;
+                }
+                let (guard, _) = shared
+                    .notify
+                    .wait_timeout(q, deadline.saturating_duration_since(Instant::now()))
+                    .unwrap();
+                q = guard;
+                if q.is_empty() && Instant::now() >= deadline {
+                    break;
+                }
+            }
+        }
+
+        let batch_size = batch.len() as u64;
+        for job in batch {
+            let queue_us = job.enqueued.elapsed().as_secs_f64() * 1e6;
+            let t = Instant::now();
+            let result = engine.infer(&job.input);
+            let exec_us = t.elapsed().as_secs_f64() * 1e6;
+            let e2e_us = job.enqueued.elapsed().as_secs_f64() * 1e6;
+            {
+                let mut m = shared.metrics.lock().unwrap();
+                m.queue.record_us(queue_us);
+                m.exec.record_us(exec_us);
+                m.e2e.record_us(e2e_us);
+            }
+            let _ = job.reply.send(result);
+        }
+        let mut m = shared.metrics.lock().unwrap();
+        m.batches += 1;
+        m.batched_requests += batch_size;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TCP front-end: newline-delimited CSV floats in, CSV floats out.
+// ---------------------------------------------------------------------------
+
+/// Handle one TCP client: each line is `v0,v1,...`; the reply is
+/// `OK p0,p1,...` or `ERR message`.
+fn handle_client(coord: &Coordinator, stream: TcpStream) {
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) => l,
+            Err(_) => break,
+        };
+        if line.trim().is_empty() || line.trim() == "QUIT" {
+            break;
+        }
+        let parsed: Result<Vec<f32>, _> =
+            line.trim().split(',').map(|s| s.trim().parse::<f32>()).collect();
+        let reply = match parsed {
+            Err(e) => format!("ERR bad input: {e}\n"),
+            Ok(input) => match coord.infer(input) {
+                Ok(out) => {
+                    let csv: Vec<String> = out.iter().map(|v| format!("{v}")).collect();
+                    format!("OK {}\n", csv.join(","))
+                }
+                Err(e) => format!("ERR {e}\n"),
+            },
+        };
+        if writer.write_all(reply.as_bytes()).is_err() {
+            break;
+        }
+    }
+}
+
+/// Serve until `max_conns` connections have been accepted (`None` = run
+/// forever). The bound address is reported through `on_ready` (useful with
+/// port 0).
+pub fn serve_tcp(
+    coord: Arc<Coordinator>,
+    addr: &str,
+    max_conns: Option<usize>,
+    on_ready: impl FnOnce(std::net::SocketAddr),
+) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    on_ready(listener.local_addr()?);
+    let mut handled = 0usize;
+    for stream in listener.incoming() {
+        let stream = stream?;
+        let coord = coord.clone();
+        std::thread::spawn(move || handle_client(&coord, stream));
+        handled += 1;
+        if let Some(max) = max_conns {
+            if handled >= max {
+                break;
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic toy engine: output = [sum, max] of the input.
+    fn toy_factory() -> EngineFactory {
+        Arc::new(|_w| {
+            struct Toy;
+            impl Engine for Toy {
+                fn infer(&mut self, input: &[f32]) -> Result<Vec<f32>, String> {
+                    if input.is_empty() {
+                        return Err("empty input".into());
+                    }
+                    let sum: f32 = input.iter().sum();
+                    let max = input.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                    Ok(vec![sum, max])
+                }
+            }
+            Ok(Box::new(Toy) as Box<dyn Engine>)
+        })
+    }
+
+    #[test]
+    fn infer_roundtrip() {
+        let c = Coordinator::start(ServeConfig::default(), toy_factory()).unwrap();
+        let out = c.infer(vec![1.0, 2.0, 3.0]).unwrap();
+        assert_eq!(out, vec![6.0, 3.0]);
+        c.shutdown();
+    }
+
+    #[test]
+    fn parallel_submissions_all_complete() {
+        let c = Arc::new(
+            Coordinator::start(ServeConfig { workers: 4, ..Default::default() }, toy_factory())
+                .unwrap(),
+        );
+        let mut rxs = Vec::new();
+        for i in 0..200 {
+            rxs.push((i, c.submit(vec![i as f32, 1.0]).unwrap()));
+        }
+        for (i, rx) in rxs {
+            let out = rx.recv().unwrap().unwrap();
+            assert_eq!(out[0], i as f32 + 1.0);
+        }
+        let m = c.metrics();
+        assert_eq!(m.completed, 200);
+        assert!(m.mean_batch >= 1.0);
+        if let Ok(c) = Arc::try_unwrap(c) {
+            c.shutdown();
+        }
+    }
+
+    #[test]
+    fn engine_errors_propagate() {
+        let c = Coordinator::start(ServeConfig::default(), toy_factory()).unwrap();
+        assert!(c.infer(vec![]).is_err());
+        c.shutdown();
+    }
+
+    #[test]
+    fn failing_factory_fails_start() {
+        let bad: EngineFactory = Arc::new(|_| Err("no backend".into()));
+        assert!(Coordinator::start(ServeConfig::default(), bad).is_err());
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        // Slow engine + tiny queue: part of the burst must be rejected.
+        let slow: EngineFactory = Arc::new(|_| {
+            struct Slow;
+            impl Engine for Slow {
+                fn infer(&mut self, _input: &[f32]) -> Result<Vec<f32>, String> {
+                    std::thread::sleep(Duration::from_millis(30));
+                    Ok(vec![1.0])
+                }
+            }
+            Ok(Box::new(Slow) as Box<dyn Engine>)
+        });
+        let c = Coordinator::start(
+            ServeConfig { workers: 1, queue_cap: 2, ..Default::default() },
+            slow,
+        )
+        .unwrap();
+        let mut rejected = 0;
+        let mut rxs = Vec::new();
+        for _ in 0..20 {
+            match c.submit(vec![0.0]) {
+                Ok(rx) => rxs.push(rx),
+                Err(_) => rejected += 1,
+            }
+        }
+        assert!(rejected > 0, "expected backpressure rejections");
+        for rx in rxs {
+            let _ = rx.recv();
+        }
+        assert_eq!(c.metrics().rejected as usize, rejected);
+        c.shutdown();
+    }
+
+    #[test]
+    fn interp_engine_serves_tiny_cnn() {
+        let g = crate::models::tiny_cnn(crate::graph::DType::F32);
+        let factory = interp_engine_factory(g, 42, 64 * 1024);
+        let c =
+            Coordinator::start(ServeConfig { workers: 2, ..Default::default() }, factory).unwrap();
+        let input: Vec<f32> = (0..128).map(|i| ((i % 17) as f32 - 8.0) / 8.0).collect();
+        let out = c.infer(input).unwrap();
+        assert_eq!(out.len(), 3);
+        assert!((out.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+        c.shutdown();
+    }
+
+    #[test]
+    fn tcp_roundtrip() {
+        let g = crate::models::tiny_cnn(crate::graph::DType::F32);
+        let factory = interp_engine_factory(g, 42, 64 * 1024);
+        let c = Arc::new(Coordinator::start(ServeConfig::default(), factory).unwrap());
+        let (addr_tx, addr_rx) = mpsc::channel();
+        let server = {
+            let c = c.clone();
+            std::thread::spawn(move || {
+                serve_tcp(c, "127.0.0.1:0", Some(1), move |a| {
+                    let _ = addr_tx.send(a);
+                })
+            })
+        };
+        let addr = addr_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let input: Vec<String> =
+            (0..128).map(|i| format!("{}", ((i % 17) as f32 - 8.0) / 8.0)).collect();
+        stream.write_all(format!("{}\n", input.join(",")).as_bytes()).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("OK "), "got: {line}");
+        let probs: Vec<f32> = line[3..].trim().split(',').map(|s| s.parse().unwrap()).collect();
+        assert_eq!(probs.len(), 3);
+        stream.write_all(b"QUIT\n").unwrap();
+        drop(stream);
+        server.join().unwrap().unwrap();
+    }
+}

@@ -1,0 +1,914 @@
+//! The plan-serving coordinator.
+//!
+//! A long-running service the fleet gateway runs: devices (or a fleet
+//! manager acting for them) ask for a memory plan for `(model, board)` and
+//! get back the same JSON documents `mcu-reorder optimize` produces —
+//! because both run the identical [`crate::api::OptimizeRequest`]
+//! pipeline. Plans are cached in an LRU ([`super::cache`]) keyed by
+//! `(model content-hash, effective budget, options fingerprint)`, so a
+//! cached reply is bit-identical to a fresh one. Duplicate in-flight
+//! requests coalesce onto one planning job; when the bounded queue is
+//! full, submissions are shed with an explicit response instead of
+//! queueing unboundedly.
+//!
+//! ## TCP protocol (newline-delimited; see [`serve_plans_tcp`])
+//!
+//! ```text
+//! PLAN <model> <board> [budget]   → OK <summary-json> | SHED … | ERR …
+//! GET <model> <board> [budget]    → OK <plan-json> | SHED … | ERR …
+//! UPLOAD <label> <nbytes>\n<raw bytes> → OK <hash16> | ERR …
+//! STATS                           → OK <stats-json>
+//! BOARDS                          → OK <boards-json>
+//! MODELS                          → OK <name,name,…>
+//! QUIT / empty line               → close
+//! ```
+//!
+//! `<model>` is a zoo name or `hash:<16-hex>` naming a prior upload;
+//! `<board>` is a [`crate::mcu::boards`] name (case-insensitive);
+//! `[budget]` is an explicit SRAM budget in bytes (default: the board's
+//! SRAM). A request whose best split+elided peak still misses an
+//! *explicit* budget gets `ERR infeasible: …`; board-default requests
+//! always return the best achievable plan.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::cache::{PlanCache, PlanCacheStats, PlanKey};
+use crate::api::{fnv64, ModelSource, OptimizeRequest, SCHEMA_VERSION};
+use crate::graph::DType;
+use crate::mcu::{boards, Board};
+use crate::models;
+use crate::trace::Event;
+use crate::util::error::Result;
+use crate::util::json::Json;
+use crate::util::stats::LatencyHist;
+
+/// Plan-service configuration.
+#[derive(Clone)]
+pub struct PlanServeConfig {
+    /// Planner worker threads.
+    pub workers: usize,
+    /// Pending-job limit; beyond it, submissions are shed.
+    pub queue_cap: usize,
+    /// LRU plan-cache capacity (entries).
+    pub cache_cap: usize,
+    /// Longest accepted protocol line.
+    pub max_line_bytes: usize,
+    /// Largest accepted `.tflite` upload.
+    pub max_upload_bytes: usize,
+    /// Split/elide search configuration applied to every plan (part of
+    /// the cache key via the options fingerprint).
+    pub split: crate::split::SplitOptions,
+    /// Record cache/shed telemetry events ([`PlanService::take_events`]).
+    pub trace: bool,
+}
+
+impl Default for PlanServeConfig {
+    fn default() -> Self {
+        PlanServeConfig {
+            workers: 2,
+            queue_cap: 64,
+            cache_cap: 128,
+            max_line_bytes: 4096,
+            max_upload_bytes: 8 * 1024 * 1024,
+            split: crate::split::SplitOptions::default(),
+            trace: false,
+        }
+    }
+}
+
+/// How a request names its model.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ModelRef {
+    /// A zoo model by name (int8, the MCU deployment dtype).
+    Zoo(String),
+    /// A prior upload, by its content hash.
+    Uploaded(u64),
+}
+
+/// One plan request from the fleet.
+#[derive(Clone, Debug)]
+pub struct PlanRequest {
+    pub model: ModelRef,
+    pub board: &'static Board,
+    /// Explicit SRAM budget; `None` plans against the board's SRAM.
+    pub budget: Option<usize>,
+}
+
+/// A computed plan as the service stores and serves it. `summary` and
+/// `json` are the exact serialized documents — byte-identical between a
+/// cache hit and a fresh computation.
+pub struct CachedPlan {
+    pub key: PlanKey,
+    pub model: String,
+    pub board: &'static str,
+    /// Effective budget the plan was computed under.
+    pub budget: usize,
+    /// Best (split+elided) peak in bytes.
+    pub peak_bytes: usize,
+    pub reordered_peak: usize,
+    pub segments: usize,
+    /// Deploy verdict at the best peak on the target board.
+    pub fits: bool,
+    /// Best peak ≤ effective budget.
+    pub budget_met: bool,
+    pub summary: Arc<String>,
+    pub json: Arc<String>,
+}
+
+/// Why a request was not served.
+#[derive(Clone, Debug)]
+pub enum PlanError {
+    /// Admission control: the planning queue is full.
+    Shed { depth: usize },
+    /// The model cannot meet the explicitly requested budget even
+    /// split+elided.
+    Infeasible { model: String, peak: usize, budget: usize },
+    /// Bad request (unknown model/upload, unparsable flatbuffer, …).
+    Invalid(String),
+    /// The planner itself failed.
+    Internal(String),
+}
+
+impl std::fmt::Display for PlanError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlanError::Shed { depth } => write!(f, "queue full ({depth} pending)"),
+            PlanError::Infeasible { model, peak, budget } => write!(
+                f,
+                "infeasible: {model} needs {peak} B > budget {budget} B even split+elided"
+            ),
+            PlanError::Invalid(msg) => write!(f, "{msg}"),
+            PlanError::Internal(msg) => write!(f, "planning failed: {msg}"),
+        }
+    }
+}
+
+type PlanReply = std::result::Result<Arc<CachedPlan>, PlanError>;
+
+/// Outcome of a non-blocking [`PlanService::submit`].
+pub enum Submission {
+    /// Cache hit — the plan is immediately available.
+    Ready(Arc<CachedPlan>),
+    /// Queued (or coalesced onto an in-flight job); await the receiver.
+    Pending(mpsc::Receiver<PlanReply>),
+    /// Shed by admission control.
+    Shed { depth: usize },
+}
+
+struct Upload {
+    label: String,
+    bytes: Arc<Vec<u8>>,
+}
+
+struct Job {
+    key: PlanKey,
+    request: OptimizeRequest,
+    enqueued: Instant,
+}
+
+#[derive(Default)]
+struct ServiceMetrics {
+    served: u64,
+    shed: u64,
+    errors: u64,
+    uploads: u64,
+    coalesced: u64,
+    infeasible: u64,
+    queue_peak: usize,
+    latency: LatencyHist,
+}
+
+struct State {
+    cache: PlanCache<Arc<CachedPlan>>,
+    uploads: HashMap<u64, Upload>,
+    /// Memoized content hashes of zoo models (stable per process).
+    zoo_hashes: HashMap<String, u64>,
+    queue: VecDeque<Job>,
+    /// Waiters per in-flight plan key (request coalescing).
+    inflight: HashMap<PlanKey, Vec<mpsc::Sender<PlanReply>>>,
+    metrics: ServiceMetrics,
+    events: Vec<Event>,
+    trace: bool,
+}
+
+/// Counter snapshot ([`PlanService::stats`]).
+#[derive(Clone, Debug)]
+pub struct PlanServiceStats {
+    /// Plans handed out (cache hits + completed planning jobs, counted
+    /// once per waiter).
+    pub served: u64,
+    pub shed: u64,
+    pub errors: u64,
+    pub uploads: u64,
+    /// Requests coalesced onto an already-in-flight planning job.
+    pub coalesced: u64,
+    /// Explicit-budget requests whose best plan missed the budget.
+    pub infeasible: u64,
+    pub queue_depth: usize,
+    pub queue_peak: usize,
+    pub cache: PlanCacheStats,
+    pub mean_latency_us: f64,
+    pub p50_latency_us: f64,
+    pub p99_latency_us: f64,
+}
+
+/// The plan-serving coordinator. Create with [`PlanService::start`]; share
+/// via `Arc`.
+pub struct PlanService {
+    cfg: PlanServeConfig,
+    state: Mutex<State>,
+    notify: Condvar,
+    stop: AtomicBool,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl PlanService {
+    fn new(cfg: PlanServeConfig) -> PlanService {
+        let trace = cfg.trace;
+        PlanService {
+            state: Mutex::new(State {
+                cache: PlanCache::new(cfg.cache_cap),
+                uploads: HashMap::new(),
+                zoo_hashes: HashMap::new(),
+                queue: VecDeque::new(),
+                inflight: HashMap::new(),
+                metrics: ServiceMetrics::default(),
+                events: Vec::new(),
+                trace,
+            }),
+            notify: Condvar::new(),
+            stop: AtomicBool::new(false),
+            workers: Mutex::new(Vec::new()),
+            cfg,
+        }
+    }
+
+    /// Start the service with `cfg.workers` planner threads.
+    pub fn start(cfg: PlanServeConfig) -> Arc<PlanService> {
+        let svc = Arc::new(PlanService::new(cfg));
+        let n = svc.cfg.workers.max(1);
+        {
+            let mut handles = svc.workers.lock().unwrap();
+            for _ in 0..n {
+                let s = svc.clone();
+                handles.push(std::thread::spawn(move || s.worker_loop()));
+            }
+        }
+        svc
+    }
+
+    /// Start with no workers: submissions queue (or shed) but never
+    /// complete. Used to test admission control deterministically.
+    pub fn start_paused(cfg: PlanServeConfig) -> Arc<PlanService> {
+        Arc::new(PlanService::new(cfg))
+    }
+
+    pub fn config(&self) -> &PlanServeConfig {
+        &self.cfg
+    }
+
+    /// Register a `.tflite` model (validated by parse + import). Returns
+    /// the content hash devices use as `hash:<16-hex>`.
+    pub fn upload(&self, label: String, bytes: Vec<u8>) -> std::result::Result<u64, PlanError> {
+        if bytes.len() > self.cfg.max_upload_bytes {
+            return Err(PlanError::Invalid(format!(
+                "upload too large: {} B (max {} B)",
+                bytes.len(),
+                self.cfg.max_upload_bytes
+            )));
+        }
+        let model = crate::tflite::Model::parse(&bytes)
+            .map_err(|e| PlanError::Invalid(format!("{label}: not a loadable TFLite model: {e}")))?;
+        crate::tflite::import(&model).map_err(|e| PlanError::Invalid(format!("{label}: {e}")))?;
+        let hash = fnv64(&bytes);
+        let mut st = self.state.lock().unwrap();
+        st.uploads.insert(hash, Upload { label, bytes: Arc::new(bytes) });
+        st.metrics.uploads += 1;
+        Ok(hash)
+    }
+
+    fn resolve_model_ref(
+        &self,
+        model: &ModelRef,
+    ) -> std::result::Result<(ModelSource, u64), PlanError> {
+        match model {
+            ModelRef::Zoo(name) => {
+                let memo = self.state.lock().unwrap().zoo_hashes.get(name).copied();
+                let source = ModelSource::Zoo { name: name.clone(), dtype: DType::I8 };
+                let hash = match memo {
+                    Some(h) => h,
+                    None => {
+                        let resolved = source
+                            .resolve()
+                            .map_err(|e| PlanError::Invalid(format!("{e:#}")))?;
+                        let h = resolved.content_hash;
+                        self.state.lock().unwrap().zoo_hashes.insert(name.clone(), h);
+                        h
+                    }
+                };
+                Ok((source, hash))
+            }
+            ModelRef::Uploaded(hash) => {
+                let st = self.state.lock().unwrap();
+                match st.uploads.get(hash) {
+                    Some(u) => Ok((
+                        ModelSource::TfliteBytes {
+                            label: u.label.clone(),
+                            bytes: u.bytes.clone(),
+                        },
+                        *hash,
+                    )),
+                    None => Err(PlanError::Invalid(format!(
+                        "unknown upload {hash:016x}; UPLOAD it first"
+                    ))),
+                }
+            }
+        }
+    }
+
+    /// Non-blocking admission: cache hit → `Ready`, otherwise enqueue (or
+    /// coalesce) → `Pending`, or shed when the queue is full.
+    pub fn submit(&self, req: &PlanRequest) -> std::result::Result<Submission, PlanError> {
+        let effective = req.budget.unwrap_or(req.board.sram_bytes);
+        let (source, model_hash) = self.resolve_model_ref(&req.model)?;
+        let label = source.label().to_string();
+        let request = OptimizeRequest {
+            source,
+            budget: Some(effective),
+            board: req.board,
+            split: Some(self.cfg.split.clone()),
+            compare_materialized: false,
+            trace: false,
+        };
+        let key = PlanKey { model_hash, budget: effective, opts_fp: request.options_fingerprint() };
+
+        let mut st = self.state.lock().unwrap();
+        if let Some(plan) = st.cache.get(&key) {
+            if st.trace {
+                st.events.push(Event::PlanCacheLookup {
+                    model: label,
+                    board: req.board.name.to_string(),
+                    hit: true,
+                });
+            }
+            st.metrics.served += 1;
+            return Ok(Submission::Ready(plan));
+        }
+        if st.trace {
+            st.events.push(Event::PlanCacheLookup {
+                model: label,
+                board: req.board.name.to_string(),
+                hit: false,
+            });
+        }
+        let (tx, rx) = mpsc::channel();
+        if let Some(waiters) = st.inflight.get_mut(&key) {
+            waiters.push(tx);
+            st.metrics.coalesced += 1;
+            return Ok(Submission::Pending(rx));
+        }
+        if st.queue.len() >= self.cfg.queue_cap {
+            let depth = st.queue.len();
+            st.metrics.shed += 1;
+            if st.trace {
+                st.events.push(Event::PlanShed { depth });
+            }
+            return Ok(Submission::Shed { depth });
+        }
+        st.queue.push_back(Job { key, request, enqueued: Instant::now() });
+        let depth = st.queue.len();
+        st.metrics.queue_peak = st.metrics.queue_peak.max(depth);
+        st.inflight.insert(key, vec![tx]);
+        drop(st);
+        self.notify.notify_one();
+        Ok(Submission::Pending(rx))
+    }
+
+    /// Blocking plan request. An *explicit* budget that the best plan
+    /// cannot meet is an [`PlanError::Infeasible`] error; board-default
+    /// requests always return the best achievable plan.
+    pub fn plan(&self, req: &PlanRequest) -> PlanReply {
+        let plan = match self.submit(req)? {
+            Submission::Ready(p) => p,
+            Submission::Shed { depth } => return Err(PlanError::Shed { depth }),
+            Submission::Pending(rx) => rx
+                .recv()
+                .map_err(|_| PlanError::Internal("planner dropped reply".to_string()))??,
+        };
+        if req.budget.is_some() && !plan.budget_met {
+            self.state.lock().unwrap().metrics.infeasible += 1;
+            return Err(PlanError::Infeasible {
+                model: plan.model.clone(),
+                peak: plan.peak_bytes,
+                budget: plan.budget,
+            });
+        }
+        Ok(plan)
+    }
+
+    fn worker_loop(&self) {
+        loop {
+            let job = {
+                let mut st = self.state.lock().unwrap();
+                loop {
+                    if self.stop.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    if let Some(j) = st.queue.pop_front() {
+                        break j;
+                    }
+                    let (guard, _) =
+                        self.notify.wait_timeout(st, Duration::from_millis(50)).unwrap();
+                    st = guard;
+                }
+            };
+            // Plan outside the lock — this is the expensive part.
+            let result = job.request.run();
+            let reply: PlanReply = match result {
+                Ok(report) => {
+                    let best = report.best_peak();
+                    Ok(Arc::new(CachedPlan {
+                        key: job.key,
+                        model: report.model.clone(),
+                        board: report.board.name,
+                        budget: job.key.budget,
+                        peak_bytes: best,
+                        reordered_peak: report.reordered.peak_bytes,
+                        segments: report
+                            .split
+                            .as_ref()
+                            .map(|s| s.outcome.steps.len())
+                            .unwrap_or(0),
+                        fits: report.deploy_at(best).fits_sram,
+                        budget_met: best <= job.key.budget,
+                        summary: Arc::new(report.summary_json().to_string()),
+                        json: Arc::new(report.to_json().to_string()),
+                    }))
+                }
+                Err(e) => Err(PlanError::Internal(format!("{e:#}"))),
+            };
+            let waiters = {
+                let mut st = self.state.lock().unwrap();
+                let waiters = st.inflight.remove(&job.key).unwrap_or_default();
+                match &reply {
+                    Ok(plan) => {
+                        if let Some((_, victim)) = st.cache.insert(job.key, plan.clone()) {
+                            if st.trace {
+                                st.events.push(Event::PlanCacheEvict {
+                                    model: victim.model.clone(),
+                                    board: victim.board.to_string(),
+                                });
+                            }
+                        }
+                        st.metrics.served += waiters.len() as u64;
+                    }
+                    Err(_) => st.metrics.errors += waiters.len() as u64,
+                }
+                st.metrics
+                    .latency
+                    .record_us(job.enqueued.elapsed().as_secs_f64() * 1e6);
+                waiters
+            };
+            for tx in waiters {
+                let _ = tx.send(reply.clone());
+            }
+        }
+    }
+
+    pub fn stats(&self) -> PlanServiceStats {
+        let st = self.state.lock().unwrap();
+        PlanServiceStats {
+            served: st.metrics.served,
+            shed: st.metrics.shed,
+            errors: st.metrics.errors,
+            uploads: st.metrics.uploads,
+            coalesced: st.metrics.coalesced,
+            infeasible: st.metrics.infeasible,
+            queue_depth: st.queue.len(),
+            queue_peak: st.metrics.queue_peak,
+            cache: st.cache.stats(),
+            mean_latency_us: st.metrics.latency.mean_us(),
+            p50_latency_us: st.metrics.latency.percentile_us(50.0),
+            p99_latency_us: st.metrics.latency.percentile_us(99.0),
+        }
+    }
+
+    /// The `STATS` document.
+    pub fn stats_json(&self) -> Json {
+        let s = self.stats();
+        Json::obj(vec![
+            ("schema_version", Json::Num(SCHEMA_VERSION as f64)),
+            ("served", Json::Num(s.served as f64)),
+            ("shed", Json::Num(s.shed as f64)),
+            ("errors", Json::Num(s.errors as f64)),
+            ("uploads", Json::Num(s.uploads as f64)),
+            ("coalesced", Json::Num(s.coalesced as f64)),
+            ("infeasible", Json::Num(s.infeasible as f64)),
+            ("queue_depth", Json::Num(s.queue_depth as f64)),
+            ("queue_peak", Json::Num(s.queue_peak as f64)),
+            (
+                "cache",
+                Json::obj(vec![
+                    ("hits", Json::Num(s.cache.hits as f64)),
+                    ("misses", Json::Num(s.cache.misses as f64)),
+                    ("evictions", Json::Num(s.cache.evictions as f64)),
+                    ("entries", Json::Num(s.cache.entries as f64)),
+                    ("cap", Json::Num(s.cache.cap as f64)),
+                ]),
+            ),
+            (
+                "latency",
+                Json::obj(vec![
+                    ("mean_us", Json::Num(s.mean_latency_us)),
+                    ("p50_us", Json::Num(s.p50_latency_us)),
+                    ("p99_us", Json::Num(s.p99_latency_us)),
+                ]),
+            ),
+        ])
+    }
+
+    /// Drain recorded telemetry events (empty unless `cfg.trace`).
+    pub fn take_events(&self) -> Vec<Event> {
+        std::mem::take(&mut self.state.lock().unwrap().events)
+    }
+
+    /// Stop workers and fail any queued jobs.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+        self.notify.notify_all();
+        let handles: Vec<JoinHandle<()>> =
+            self.workers.lock().unwrap().drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+        let (jobs, waiters): (Vec<Job>, Vec<Vec<mpsc::Sender<PlanReply>>>) = {
+            let mut st = self.state.lock().unwrap();
+            let jobs: Vec<Job> = st.queue.drain(..).collect();
+            let waiters = jobs
+                .iter()
+                .map(|j| st.inflight.remove(&j.key).unwrap_or_default())
+                .collect();
+            (jobs, waiters)
+        };
+        drop(jobs);
+        for txs in waiters {
+            for tx in txs {
+                let _ = tx.send(Err(PlanError::Internal("service shut down".to_string())));
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// TCP front-end.
+// ---------------------------------------------------------------------------
+
+enum LineError {
+    TooLong,
+    Closed,
+    Io,
+}
+
+/// Read one `\n`-terminated line, never buffering more than `max` bytes.
+/// Oversized lines are drained to their newline and reported as
+/// [`LineError::TooLong`] so the connection stays usable.
+fn read_line_capped<R: BufRead>(
+    reader: &mut R,
+    max: usize,
+) -> std::result::Result<String, LineError> {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut over = false;
+    loop {
+        let (consume, done) = {
+            let data = match reader.fill_buf() {
+                Ok(d) => d,
+                Err(_) => return Err(LineError::Io),
+            };
+            if data.is_empty() {
+                if buf.is_empty() && !over {
+                    return Err(LineError::Closed);
+                }
+                (0, true)
+            } else {
+                match data.iter().position(|&b| b == b'\n') {
+                    Some(i) => {
+                        if !over {
+                            buf.extend_from_slice(&data[..i]);
+                        }
+                        (i + 1, true)
+                    }
+                    None => {
+                        if !over {
+                            buf.extend_from_slice(data);
+                        }
+                        (data.len(), false)
+                    }
+                }
+            }
+        };
+        reader.consume(consume);
+        if buf.len() > max {
+            over = true;
+            buf.clear();
+        }
+        if done {
+            if over {
+                return Err(LineError::TooLong);
+            }
+            return Ok(String::from_utf8_lossy(&buf).into_owned());
+        }
+    }
+}
+
+fn parse_model_ref(token: &str) -> std::result::Result<ModelRef, String> {
+    match token.strip_prefix("hash:") {
+        Some(hex) => u64::from_str_radix(hex, 16)
+            .map(ModelRef::Uploaded)
+            .map_err(|_| format!("bad model hash {hex:?} (want 16 hex digits)")),
+        None => Ok(ModelRef::Zoo(token.to_string())),
+    }
+}
+
+fn plan_request_from(parts: &[&str]) -> std::result::Result<PlanRequest, String> {
+    if parts.len() < 3 || parts.len() > 4 {
+        return Err(format!("usage: {} <model> <board> [budget]", parts[0]));
+    }
+    let model = parse_model_ref(parts[1])?;
+    let board = boards::by_name(parts[2]).ok_or_else(|| {
+        let names: Vec<&str> = boards::ALL_BOARDS.iter().map(|b| b.name).collect();
+        format!("unknown board {:?}; try: {}", parts[2], names.join(", "))
+    })?;
+    let budget = match parts.get(3) {
+        Some(s) => Some(s.parse::<usize>().map_err(|_| format!("bad budget {s:?}"))?),
+        None => None,
+    };
+    Ok(PlanRequest { model, board, budget })
+}
+
+/// Handle one protocol line. Returns the reply and whether to close the
+/// connection afterwards.
+fn dispatch_line<R: BufRead>(
+    svc: &Arc<PlanService>,
+    line: &str,
+    reader: &mut R,
+) -> (String, bool) {
+    let parts: Vec<&str> = line.split_whitespace().collect();
+    match parts[0].to_ascii_uppercase().as_str() {
+        cmd @ ("PLAN" | "GET") => match plan_request_from(&parts) {
+            Err(msg) => (format!("ERR {msg}\n"), false),
+            Ok(req) => match svc.plan(&req) {
+                Ok(plan) => {
+                    let doc = if cmd == "GET" { &plan.json } else { &plan.summary };
+                    (format!("OK {doc}\n"), false)
+                }
+                Err(PlanError::Shed { depth }) => {
+                    (format!("SHED queue full ({depth} pending)\n"), false)
+                }
+                Err(e) => (format!("ERR {e}\n"), false),
+            },
+        },
+        "UPLOAD" => {
+            if parts.len() != 3 {
+                return ("ERR usage: UPLOAD <label> <nbytes>\n".to_string(), false);
+            }
+            let n: usize = match parts[2].parse() {
+                Ok(n) => n,
+                Err(_) => return (format!("ERR bad byte count {:?}\n", parts[2]), false),
+            };
+            if n > svc.cfg.max_upload_bytes {
+                // The body cannot be skipped without reading it; close.
+                return (
+                    format!(
+                        "ERR upload too large: {n} B (max {} B)\n",
+                        svc.cfg.max_upload_bytes
+                    ),
+                    true,
+                );
+            }
+            let mut bytes = vec![0u8; n];
+            if reader.read_exact(&mut bytes).is_err() {
+                return ("ERR short upload body\n".to_string(), true);
+            }
+            match svc.upload(parts[1].to_string(), bytes) {
+                Ok(h) => (format!("OK {h:016x}\n"), false),
+                Err(e) => (format!("ERR {e}\n"), false),
+            }
+        }
+        "STATS" => (format!("OK {}\n", svc.stats_json().to_string()), false),
+        "BOARDS" => {
+            let arr = Json::Arr(
+                boards::ALL_BOARDS
+                    .iter()
+                    .map(|b| {
+                        Json::obj(vec![
+                            ("name", Json::Str(b.name.to_string())),
+                            ("sram_bytes", Json::Num(b.sram_bytes as f64)),
+                        ])
+                    })
+                    .collect(),
+            );
+            (format!("OK {}\n", arr.to_string()), false)
+        }
+        "MODELS" => (format!("OK {}\n", models::MODEL_NAMES.join(",")), false),
+        other => (
+            format!("ERR unknown command {other:?} (PLAN|GET|UPLOAD|STATS|BOARDS|MODELS|QUIT)\n"),
+            false,
+        ),
+    }
+}
+
+fn handle_plan_client(svc: &Arc<PlanService>, stream: TcpStream) {
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    loop {
+        let line = match read_line_capped(&mut reader, svc.cfg.max_line_bytes) {
+            Ok(l) => l,
+            Err(LineError::TooLong) => {
+                let msg = format!("ERR line too long (max {} B)\n", svc.cfg.max_line_bytes);
+                if writer.write_all(msg.as_bytes()).is_err() {
+                    return;
+                }
+                continue;
+            }
+            Err(_) => return,
+        };
+        let line = line.trim();
+        if line.is_empty() || line == "QUIT" {
+            return;
+        }
+        let (reply, close) = dispatch_line(svc, line, &mut reader);
+        if writer.write_all(reply.as_bytes()).is_err() {
+            return;
+        }
+        if close {
+            return;
+        }
+    }
+}
+
+/// Serve the plan protocol until `max_conns` connections have been
+/// accepted (`None` = run forever). The bound address is reported through
+/// `on_ready` (useful with port 0).
+pub fn serve_plans_tcp(
+    svc: Arc<PlanService>,
+    addr: &str,
+    max_conns: Option<usize>,
+    on_ready: impl FnOnce(std::net::SocketAddr),
+) -> Result<()> {
+    let listener = TcpListener::bind(addr)?;
+    on_ready(listener.local_addr()?);
+    let mut handled = 0usize;
+    for stream in listener.incoming() {
+        let stream = stream?;
+        let svc = svc.clone();
+        std::thread::spawn(move || handle_plan_client(&svc, stream));
+        handled += 1;
+        if let Some(max) = max_conns {
+            if handled >= max {
+                break;
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_cfg() -> PlanServeConfig {
+        PlanServeConfig {
+            workers: 1,
+            split: crate::split::SplitOptions::quick(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn zoo_plan_roundtrip_and_cache_hit_is_bit_identical() {
+        let svc = PlanService::start(quick_cfg());
+        let req = PlanRequest {
+            model: ModelRef::Zoo("figure1".to_string()),
+            board: &crate::mcu::NUCLEO_F767ZI,
+            budget: None,
+        };
+        let a = svc.plan(&req).unwrap();
+        let b = svc.plan(&req).unwrap();
+        assert_eq!(*a.json, *b.json);
+        assert_eq!(*a.summary, *b.summary);
+        let s = svc.stats();
+        assert_eq!(s.served, 2);
+        assert_eq!(s.cache.hits, 1);
+        assert_eq!(s.cache.misses, 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn unknown_model_and_upload_are_invalid() {
+        let svc = PlanService::start_paused(quick_cfg());
+        let bad_zoo = PlanRequest {
+            model: ModelRef::Zoo("nope".to_string()),
+            board: &crate::mcu::NUCLEO_F767ZI,
+            budget: None,
+        };
+        assert!(matches!(svc.submit(&bad_zoo), Err(PlanError::Invalid(_))));
+        let bad_up = PlanRequest {
+            model: ModelRef::Uploaded(0xdead),
+            board: &crate::mcu::NUCLEO_F767ZI,
+            budget: None,
+        };
+        assert!(matches!(svc.submit(&bad_up), Err(PlanError::Invalid(_))));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn paused_service_sheds_beyond_queue_cap() {
+        let cfg = PlanServeConfig { queue_cap: 1, ..quick_cfg() };
+        let svc = PlanService::start_paused(cfg);
+        let req = |b: usize| PlanRequest {
+            model: ModelRef::Zoo("tiny".to_string()),
+            board: &crate::mcu::NUCLEO_F767ZI,
+            budget: Some(4_000_000 + b),
+        };
+        assert!(matches!(svc.submit(&req(0)), Ok(Submission::Pending(_))));
+        assert!(matches!(svc.submit(&req(1)), Ok(Submission::Shed { depth: 1 })));
+        assert_eq!(svc.stats().shed, 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn coalesces_duplicate_inflight_requests() {
+        let svc = PlanService::start_paused(quick_cfg());
+        let req = PlanRequest {
+            model: ModelRef::Zoo("tiny".to_string()),
+            board: &crate::mcu::NUCLEO_F767ZI,
+            budget: None,
+        };
+        assert!(matches!(svc.submit(&req), Ok(Submission::Pending(_))));
+        assert!(matches!(svc.submit(&req), Ok(Submission::Pending(_))));
+        let s = svc.stats();
+        assert_eq!(s.coalesced, 1);
+        assert_eq!(s.queue_depth, 1);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn explicit_infeasible_budget_errors_cleanly() {
+        let svc = PlanService::start(quick_cfg());
+        let req = PlanRequest {
+            model: ModelRef::Zoo("figure1".to_string()),
+            board: &crate::mcu::NUCLEO_F767ZI,
+            budget: Some(16),
+        };
+        match svc.plan(&req) {
+            Err(PlanError::Infeasible { budget: 16, .. }) => {}
+            other => panic!("expected infeasible, got {:?}", other.map(|p| p.peak_bytes)),
+        }
+        assert_eq!(svc.stats().infeasible, 1);
+        // The same model at the board default still plans fine.
+        let ok = svc
+            .plan(&PlanRequest { budget: None, ..req })
+            .expect("board-default request must serve");
+        assert!(ok.fits);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn oversized_line_reports_and_connection_survives() {
+        let svc = PlanService::start(quick_cfg());
+        let (addr_tx, addr_rx) = mpsc::channel();
+        let server = {
+            let svc = svc.clone();
+            std::thread::spawn(move || {
+                serve_plans_tcp(svc, "127.0.0.1:0", Some(1), move |a| {
+                    let _ = addr_tx.send(a);
+                })
+            })
+        };
+        let addr = addr_rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        let mut stream = TcpStream::connect(addr).unwrap();
+        let long = "X".repeat(svc.cfg.max_line_bytes + 100);
+        stream.write_all(format!("{long}\n").as_bytes()).unwrap();
+        let mut reader = BufReader::new(stream.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("ERR line too long"), "got: {line}");
+        stream.write_all(b"MODELS\n").unwrap();
+        line.clear();
+        reader.read_line(&mut line).unwrap();
+        assert!(line.starts_with("OK "), "got: {line}");
+        stream.write_all(b"QUIT\n").unwrap();
+        drop(stream);
+        server.join().unwrap().unwrap();
+        svc.shutdown();
+    }
+}

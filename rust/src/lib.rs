@@ -6,6 +6,10 @@
 //!
 //! The crate provides:
 //!
+//! - [`api`] — the library-level optimize facade: one [`api::OptimizeRequest`]
+//!   → [`api::OptimizeReport`] pipeline shared by the CLI subcommands and the
+//!   plan-serving coordinator, with versioned JSON serialization
+//!   ([`api::SCHEMA_VERSION`]).
 //! - [`graph`] — a computation-graph IR with byte-exact SRAM/Flash memory
 //!   accounting and a JSON model container.
 //! - [`sched`] — working-set simulation and the paper's Algorithm 1: a
@@ -30,8 +34,9 @@
 //!   synthetic DAG generators.
 //! - [`runtime`] — PJRT loading/execution of the AOT-compiled JAX/Pallas
 //!   artifacts (Python never runs at inference time).
-//! - [`coordinator`] — a small serving layer (request queue, batcher,
-//!   worker pool, metrics) driving the runtime.
+//! - [`coordinator`] — the serving layer: a fleet-scale plan-serving
+//!   service (LRU plan cache, admission control, TCP front-end) built on
+//!   [`api`], plus the inference micro-batcher driving the runtime.
 //! - [`trace`] — memory-timeline tracing and planner telemetry: a
 //!   zero-cost-when-off event recorder threaded through `sched`, `alloc`,
 //!   `interp` and `split`, with Chrome trace-event (Perfetto) export and
@@ -41,6 +46,7 @@
 //!   vendored here).
 
 pub mod alloc;
+pub mod api;
 pub mod graph;
 pub mod interp;
 pub mod mcu;

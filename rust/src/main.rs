@@ -9,11 +9,12 @@ use std::sync::Arc;
 
 use mcu_reorder::util::error::{anyhow, bail, Context, Result};
 
+use mcu_reorder::api;
 use mcu_reorder::coordinator::{self, Coordinator, ServeConfig};
 use mcu_reorder::graph::serde::ModelFile;
 use mcu_reorder::graph::{DType, Graph, SplitAxis};
 use mcu_reorder::interp::{ExecConfig, Interpreter, TensorData, WeightStore};
-use mcu_reorder::mcu::{CostModel, DeployReport, OverheadModel, SplitOverhead, NUCLEO_F767ZI};
+use mcu_reorder::mcu::{CostModel, DeployReport, OverheadModel, NUCLEO_F767ZI};
 use mcu_reorder::models;
 use mcu_reorder::sched;
 use mcu_reorder::trace;
@@ -86,6 +87,14 @@ COMMANDS:
   serve     --model M [--engine pjrt|interp] [--artifacts DIR]
             [--port P] [--workers N]
                                Start the serving coordinator (TCP front-end)
+  plan-serve [--port P] [--workers N] [--cache-cap N] [--queue-cap N]
+            [--threads N]      Start the plan-serving coordinator: fleet
+                               devices request reorder+split+elide plans per
+                               (model, board, budget) over TCP; plans are
+                               LRU-cached by model content hash and served
+                               bit-identically to a fresh `optimize` run
+                               (protocol: PLAN/GET/UPLOAD/STATS/BOARDS/
+                               MODELS/QUIT; see README "Plan serving")
   table1                       Reproduce the paper's Table 1
   sweep                        Fit matrix: zoo models × boards × orders
   nas       [--samples N] [--seed S]
@@ -167,28 +176,29 @@ fn dtype_flag(flags: &HashMap<String, String>, default: DType) -> Result<DType> 
     }
 }
 
+/// Model source from `--model <zoo-name>` or `--file <model.json|.tflite>`.
+fn source_from_flags(
+    flags: &HashMap<String, String>,
+    default_dtype: DType,
+) -> Result<api::ModelSource> {
+    if let Some(path) = path_flag(flags, "file", "--file")? {
+        // `.tflite` loads through the flatbuffer frontend (the operator
+        // vector is the embedded execution order, so the graph's default
+        // order already reflects the file); anything else as model JSON.
+        return Ok(api::ModelSource::from_path(path));
+    }
+    let name = flags.get("model").ok_or_else(|| anyhow!("--model or --file required"))?;
+    let dtype = dtype_flag(flags, default_dtype)?;
+    Ok(api::ModelSource::Zoo { name: name.clone(), dtype })
+}
+
 /// Resolve a model graph from `--model <zoo-name>` or `--file <model.json>`.
 fn load_graph(
     flags: &HashMap<String, String>,
     default_dtype: DType,
 ) -> Result<(Graph, Option<Vec<usize>>)> {
-    if let Some(path) = path_flag(flags, "file", "--file")? {
-        // Real TFLite flatbuffers load through the tflite frontend (the
-        // operator vector is the embedded execution order, so the graph's
-        // default order already reflects the file).
-        if is_tflite(path) {
-            let imp = mcu_reorder::tflite::load(path)?;
-            return Ok((imp.graph, None));
-        }
-        let src = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
-        let mf = ModelFile::from_json(&src).map_err(|e| anyhow!("{e}"))?;
-        return Ok((mf.graph, mf.execution_order));
-    }
-    let name = flags.get("model").ok_or_else(|| anyhow!("--model or --file required"))?;
-    let dtype = dtype_flag(flags, default_dtype)?;
-    let g = models::by_name(name, dtype)
-        .ok_or_else(|| anyhow!("unknown model {name:?}; try: {}", models::MODEL_NAMES.join(", ")))?;
-    Ok((g, None))
+    let resolved = source_from_flags(flags, default_dtype)?.resolve()?;
+    Ok((resolved.graph, resolved.embedded_order))
 }
 
 fn order_for(g: &Graph, spec: &str) -> Result<sched::Schedule> {
@@ -294,44 +304,13 @@ fn is_tflite(path: &str) -> bool {
 fn cmd_import(pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
     let path = tflite_path(pos, flags)?
         .ok_or_else(|| anyhow!("usage: mcu-reorder import MODEL.tflite [--json F]"))?;
-    let model = mcu_reorder::tflite::read_model(path)?;
-    let imp = mcu_reorder::tflite::import(&model).map_err(|e| anyhow!("{path}: {e}"))?;
-    let g = &imp.graph;
-    let n_w = g.tensors.iter().filter(|t| t.is_weight).count();
-    println!(
-        "imported {path}: {} ({} operators → {} ops after de-fusing, {} tensors / {} weights)",
-        g.name,
-        model.subgraph.operators.len(),
-        g.n_ops(),
-        g.n_tensors(),
-        n_w,
-    );
-    let dtype = g.inputs.first().map(|&t| g.tensors[t].dtype.name()).unwrap_or("?");
-    println!(
-        "dtype: {}   model size: {} B   activation total: {} B   MACs: {}",
-        dtype,
-        g.model_size(),
-        g.activation_total(),
-        g.total_macs()
-    );
-
-    let file_peak = sched::peak_of(g, &g.default_order());
-    let (opt, _) = sched::optimal(g).map_err(|e| anyhow!("{e}"))?;
-    let static_plan = mcu_reorder::alloc::StaticPlan::no_reuse(g);
-    println!();
-    println!("file-order peak       : {:>9} B", file_peak);
-    println!("reorder-only optimal  : {:>9} B", opt.peak_bytes);
-    println!("static no-reuse arena : {:>9} B", static_plan.arena_bytes);
-    let report = DeployReport::new(g, opt.peak_bytes, &NUCLEO_F767ZI, &OverheadModel::default());
-    println!(
-        "deploy ({:>14}): peak + overhead = {} B of {} B SRAM → {}",
-        report.board,
-        report.total_sram(),
-        NUCLEO_F767ZI.sram_bytes,
-        if report.fits_sram { "FITS" } else { "DOES NOT FIT" }
-    );
+    let report = api::OptimizeRequest::reorder_only(api::ModelSource::TflitePath(
+        path.to_string(),
+    ))
+    .run()?;
+    print!("{}", api::render_import(&report));
     if let Some(json_path) = path_flag(flags, "json", "--json")? {
-        let mf = ModelFile::new(g.clone());
+        let mf = ModelFile::new(report.graph.clone());
         std::fs::write(json_path, mf.to_json()).with_context(|| format!("writing {json_path}"))?;
         println!("wrote IR model JSON to {json_path}");
     }
@@ -359,48 +338,6 @@ fn emit_json(doc: &Json, dest: Option<&str>) -> Result<()> {
     Ok(())
 }
 
-fn order_json(order: &[usize]) -> Json {
-    Json::Arr(order.iter().map(|&o| Json::Num(o as f64)).collect())
-}
-
-fn steps_json(steps: &[mcu_reorder::split::SplitStep]) -> Json {
-    Json::Arr(
-        steps
-            .iter()
-            .map(|st| {
-                Json::obj(vec![
-                    (
-                        "segment",
-                        Json::Arr(st.segment.iter().map(|s| Json::Str(s.clone())).collect()),
-                    ),
-                    ("factor", Json::Num(st.factor as f64)),
-                    ("axis", Json::Str(st.axis.name().to_string())),
-                    ("elided", Json::Bool(st.elided)),
-                    ("peak_before", Json::Num(st.peak_before as f64)),
-                    ("peak_after", Json::Num(st.peak_after as f64)),
-                ])
-            })
-            .collect(),
-    )
-}
-
-/// Planner work counters for `optimize --json` / `split`: how much the
-/// incremental fast path saved over naive full-DP candidate scoring.
-fn planner_json(st: &mcu_reorder::split::PlannerStats) -> Json {
-    Json::obj(vec![
-        ("scored", Json::Num(st.scored as f64)),
-        ("deduped", Json::Num(st.deduped as f64)),
-        ("improved", Json::Num(st.improved as f64)),
-        ("bounded", Json::Num(st.bounded as f64)),
-        ("full_evals", Json::Num(st.full_evals as f64)),
-        ("cache_lookups", Json::Num(st.cache_lookups as f64)),
-        ("cache_hits", Json::Num(st.cache_hits as f64)),
-        ("cache_misses", Json::Num(st.cache_misses as f64)),
-        ("eval_ratio", Json::Num(st.eval_ratio())),
-        ("threads", Json::Num(st.threads as f64)),
-    ])
-}
-
 fn threads_flag(flags: &HashMap<String, String>) -> Result<usize> {
     Ok(flags.get("threads").map(|s| s.parse()).transpose()?.unwrap_or(1))
 }
@@ -409,96 +346,38 @@ fn threads_flag(flags: &HashMap<String, String>) -> Result<usize> {
 /// elided peaks and write the model back with the optimal operator order
 /// embedded (buffers byte-identical).
 fn cmd_optimize_tflite(path: &str, flags: &HashMap<String, String>) -> Result<()> {
-    let model = mcu_reorder::tflite::read_model(path)?;
-    let imp = mcu_reorder::tflite::import(&model).map_err(|e| anyhow!("{path}: {e}"))?;
-    let g = &imp.graph;
     let budget: Option<usize> = flags
         .get("budget")
         .or_else(|| flags.get("sram-budget"))
         .map(|s| s.parse())
         .transpose()?;
-
-    let file_peak = sched::peak_of(g, &g.default_order());
-    let (opt, stats) = sched::optimal(g).map_err(|e| anyhow!("{e}"))?;
     let split_opts = mcu_reorder::split::SplitOptions {
         sram_budget: budget,
         ..Default::default()
     }
     .with_threads(threads_flag(flags)?);
-    let mat = mcu_reorder::split::optimize(g, &split_opts.clone().materialized())
-        .map_err(|e| anyhow!("{e}"))?;
-    let elided = mcu_reorder::split::optimize(g, &split_opts).map_err(|e| anyhow!("{e}"))?;
+    let report = api::OptimizeRequest {
+        source: api::ModelSource::TflitePath(path.to_string()),
+        budget,
+        board: &NUCLEO_F767ZI,
+        split: Some(split_opts),
+        compare_materialized: true,
+        trace: false,
+    }
+    .run()?;
 
     let json = json_mode(flags);
     if json.is_none() {
-        println!("model: {} ({} ops de-fused)\n", g.name, g.n_ops());
-        let verdict = |peak: usize| match budget {
-            Some(b) if peak <= b => "  [budget MET]",
-            Some(_) => "  [budget NOT met]",
-            None => "",
-        };
-        println!("file-order peak       : {:>9} B{}", file_peak, verdict(file_peak));
-        println!(
-            "reorder-only optimal  : {:>9} B{}  ({} states, {} expansions)",
-            opt.peak_bytes,
-            verdict(opt.peak_bytes),
-            stats.states,
-            stats.expansions
-        );
-        println!(
-            "split+reorder         : {:>9} B{}  ({} segment(s))",
-            mat.schedule.peak_bytes,
-            verdict(mat.schedule.peak_bytes),
-            mat.steps.len()
-        );
-        println!(
-            "split+reorder, elided : {:>9} B{}  ({} segment(s), {} join(s) streamed)",
-            elided.schedule.peak_bytes,
-            verdict(elided.schedule.peak_bytes),
-            elided.steps.len(),
-            elided.elided_steps()
-        );
-        for st in &elided.steps {
-            println!(
-                "  split [{}] ×{} along {}{}: {} B → {} B",
-                st.segment.join(" → "),
-                st.factor,
-                st.axis.name(),
-                if st.elided { ", join elided" } else { "" },
-                st.peak_before,
-                st.peak_after
-            );
-        }
-        if !elided.steps.is_empty() {
-            println!(
-                "  (splits are reported for planning; the flatbuffer stores the reordered\n   \
-                 model only — partial execution needs the interpreter/JSON pipeline)"
-            );
-        }
-        let st = &elided.stats;
-        println!(
-            "planner               : {} scored ({} deduped), {} full DP, cache {}/{} hit/miss, \
-             {:.0}× vs naive, {} thread(s)",
-            st.scored,
-            st.deduped,
-            st.full_evals,
-            st.cache_hits,
-            st.cache_misses,
-            st.eval_ratio(),
-            st.threads
-        );
+        print!("{}", api::render_optimize_tflite(&report));
     }
 
     let out = out_flag(flags)?;
     if let Some(out) = out {
-        let order = imp.operator_order(&opt.order);
-        let reordered =
-            mcu_reorder::tflite::reorder(&model, &order).map_err(|e| anyhow!("{e}"))?;
-        std::fs::write(out, reordered.serialize()).with_context(|| format!("writing {out}"))?;
+        report.write_reordered_tflite(out)?;
         if json.is_none() {
             println!(
                 "\nwrote {out}: operator order embedded, peak {} B → {} B (buffers byte-identical)",
-                file_peak, opt.peak_bytes
+                report.default_peak, report.reordered.peak_bytes
             );
         }
     } else if json.is_none() {
@@ -506,44 +385,7 @@ fn cmd_optimize_tflite(path: &str, flags: &HashMap<String, String>) -> Result<()
     }
 
     if let Some(dest) = json {
-        let doc = Json::obj(vec![
-            ("model", Json::Str(g.name.clone())),
-            ("source", Json::Str(path.to_string())),
-            (
-                "peaks",
-                Json::obj(vec![
-                    ("file", Json::Num(file_peak as f64)),
-                    ("reordered", Json::Num(opt.peak_bytes as f64)),
-                    ("split", Json::Num(mat.schedule.peak_bytes as f64)),
-                    ("elided", Json::Num(elided.schedule.peak_bytes as f64)),
-                ]),
-            ),
-            (
-                "budget",
-                match budget {
-                    Some(b) => Json::Num(b as f64),
-                    None => Json::Null,
-                },
-            ),
-            ("order", order_json(&opt.order)),
-            (
-                "search",
-                Json::obj(vec![
-                    ("states", Json::Num(stats.states as f64)),
-                    ("expansions", Json::Num(stats.expansions as f64)),
-                ]),
-            ),
-            ("plan", steps_json(&elided.steps)),
-            ("planner", planner_json(&elided.stats)),
-            (
-                "out",
-                match out {
-                    Some(p) => Json::Str(p.to_string()),
-                    None => Json::Null,
-                },
-            ),
-        ]);
-        emit_json(&doc, dest)?;
+        emit_json(&api::optimize_tflite_json(&report, out), dest)?;
     }
     Ok(())
 }
@@ -552,41 +394,19 @@ fn cmd_optimize(pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
     if let Some(path) = tflite_path(pos, flags)?.filter(|p| is_tflite(p)) {
         return cmd_optimize_tflite(path, flags);
     }
-    let (g, _) = load_graph(flags, DType::I8)?;
+    let source = source_from_flags(flags, DType::I8)?;
+    source.resolve()?;
     let json = json_mode(flags);
     let out = out_flag(flags)?.ok_or_else(|| anyhow!("--out required"))?;
-    let default_peak = sched::peak_of(&g, &g.default_order());
-    let (opt, stats) = sched::optimal(&g).map_err(|e| anyhow!("{e}"))?;
-    let mf = ModelFile { graph: g, execution_order: Some(opt.order.clone()) };
-    let name = mf.graph.name.clone();
+    let report = api::OptimizeRequest::reorder_only(source).run()?;
+    let mf = ModelFile {
+        graph: report.graph.clone(),
+        execution_order: Some(report.reordered.order.clone()),
+    };
     std::fs::write(out, mf.to_json()).with_context(|| format!("writing {out}"))?;
     match json {
-        None => println!(
-            "wrote {out}: peak {} B → {} B ({} states, {} expansions)",
-            default_peak, opt.peak_bytes, stats.states, stats.expansions
-        ),
-        Some(dest) => {
-            let doc = Json::obj(vec![
-                ("model", Json::Str(name)),
-                (
-                    "peaks",
-                    Json::obj(vec![
-                        ("default", Json::Num(default_peak as f64)),
-                        ("reordered", Json::Num(opt.peak_bytes as f64)),
-                    ]),
-                ),
-                ("order", order_json(&opt.order)),
-                (
-                    "search",
-                    Json::obj(vec![
-                        ("states", Json::Num(stats.states as f64)),
-                        ("expansions", Json::Num(stats.expansions as f64)),
-                    ]),
-                ),
-                ("out", Json::Str(out.to_string())),
-            ]);
-            emit_json(&doc, dest)?;
-        }
+        None => print!("{}", api::render_optimize_model(&report, out)),
+        Some(dest) => emit_json(&api::optimize_model_json(&report, out), dest)?,
     }
     Ok(())
 }
@@ -693,7 +513,7 @@ fn cmd_trace(pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
             mcu_reorder::alloc::StaticPlan::best_fit_traced(&g, &schedule.order, &mut sink);
             let doc = Json::obj(vec![
                 ("model", Json::Str(g.name.clone())),
-                ("order", order_json(&schedule.order)),
+                ("order", api::order_json(&schedule.order)),
                 ("peak_bytes", Json::Num(mt.peak_bytes as f64)),
                 ("peak_step", Json::Num(mt.peak_step as f64)),
                 ("events", sink.into_json()),
@@ -722,7 +542,6 @@ fn cmd_trace(pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
 }
 
 fn cmd_split(flags: &HashMap<String, String>) -> Result<()> {
-    let (g, _) = load_graph(flags, DType::I8)?;
     let budget: Option<usize> = flags.get("sram-budget").map(|s| s.parse()).transpose()?;
     let max_factor: usize =
         flags.get("max-factor").map(|s| s.parse()).transpose()?.unwrap_or(4);
@@ -746,87 +565,23 @@ fn cmd_split(flags: &HashMap<String, String>) -> Result<()> {
     }
     .with_threads(threads_flag(flags)?);
 
-    let default_peak = sched::peak_of(&g, &g.default_order());
+    let req = api::OptimizeRequest {
+        source: source_from_flags(flags, DType::I8)?,
+        budget,
+        board: &NUCLEO_F767ZI,
+        split: Some(opts),
+        compare_materialized: false,
+        trace: false,
+    };
     let t0 = std::time::Instant::now();
-    let outcome = mcu_reorder::split::optimize(&g, &opts).map_err(|e| anyhow!("{e}"))?;
+    let report = req.run()?;
     let elapsed = t0.elapsed().as_secs_f64();
 
-    println!(
-        "model: {}  ({} ops → {} after splitting)\n",
-        g.name,
-        g.n_ops(),
-        outcome.graph.n_ops()
-    );
-    println!("default order peak    : {:>9} B", default_peak);
-    println!("reorder-only optimal  : {:>9} B", outcome.base_peak);
-    println!(
-        "split+reorder optimal : {:>9} B  ({} segment(s), {:.2}s search)",
-        outcome.schedule.peak_bytes,
-        outcome.steps.len(),
-        elapsed
-    );
-    for st in &outcome.steps {
-        println!(
-            "  split [{}] ×{} along {}{}: {} B → {} B",
-            st.segment.join(" → "),
-            st.factor,
-            st.axis.name(),
-            if st.elided { ", join elided" } else { "" },
-            st.peak_before,
-            st.peak_after
-        );
-    }
-    if outcome.steps.is_empty() {
-        println!("  (no split improved on reorder-only scheduling)");
-    }
-    let st = &outcome.stats;
-    println!(
-        "planner               : {} scored ({} deduped), {} full DP, cache {}/{} hit/miss, \
-         {:.0}× vs naive, {} thread(s)",
-        st.scored,
-        st.deduped,
-        st.full_evals,
-        st.cache_hits,
-        st.cache_misses,
-        st.eval_ratio(),
-        st.threads
-    );
-    let cost = CostModel::cortex_m7_reference();
-    let ov = SplitOverhead::measure(&cost, &g, &outcome.graph, &NUCLEO_F767ZI);
-    println!(
-        "recompute overhead    : {:+.2}% MACs, modeled time ×{:.4}",
-        100.0 * ov.recompute_frac(),
-        ov.time_ratio
-    );
-    for axis in SplitAxis::ALL {
-        let frac = ov.recompute_frac_of(axis);
-        if frac > 0.0 {
-            println!("  recompute along {:<8}: {:+.2}% MACs", axis.name(), 100.0 * frac);
-        }
-    }
-    println!(
-        "weight flash traffic  : ×{:.2} ({} B join copies, {} B elided)",
-        ov.weight_traffic_ratio(),
-        ov.join_bytes,
-        ov.elided_join_bytes
-    );
-    if outcome.elided_steps() > 0 {
-        println!(
-            "join elision          : {}/{} segment join(s) streamed (no ConcatSlices copy)",
-            outcome.elided_steps(),
-            outcome.steps.len()
-        );
-    }
-    if let Some(b) = budget {
-        println!(
-            "SRAM budget {} B     : {}",
-            b,
-            if outcome.schedule.peak_bytes <= b { "MET" } else { "NOT MET" }
-        );
-    }
+    print!("{}", api::render_split(&report, elapsed));
     if let Some(out) = out_flag(flags)? {
+        let outcome = &report.split.as_ref().expect("split requested").outcome;
         let mf = ModelFile {
-            graph: outcome.graph,
+            graph: outcome.graph.clone(),
             execution_order: Some(outcome.schedule.order.clone()),
         };
         std::fs::write(out, mf.to_json()).with_context(|| format!("writing {out}"))?;
@@ -941,6 +696,32 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         g.tensors[g.inputs[0]].elems()
     });
     coordinator::serve_tcp(coord, &format!("0.0.0.0:{port}"), None, |a| {
+        println!("listening on {a}");
+    })
+}
+
+fn cmd_plan_serve(flags: &HashMap<String, String>) -> Result<()> {
+    let port: u16 = flags.get("port").map(|s| s.parse()).transpose()?.unwrap_or(7879);
+    let workers: usize = flags.get("workers").map(|s| s.parse()).transpose()?.unwrap_or(2);
+    let cache_cap: usize =
+        flags.get("cache-cap").map(|s| s.parse()).transpose()?.unwrap_or(128);
+    let queue_cap: usize =
+        flags.get("queue-cap").map(|s| s.parse()).transpose()?.unwrap_or(64);
+    let threads = threads_flag(flags)?;
+
+    let cfg = coordinator::PlanServeConfig {
+        workers,
+        cache_cap,
+        queue_cap,
+        split: mcu_reorder::split::SplitOptions::default().with_threads(threads),
+        ..Default::default()
+    };
+    let svc = coordinator::PlanService::start(cfg);
+    println!(
+        "plan-serving: {workers} planner worker(s), cache {cache_cap} plan(s), queue {queue_cap}"
+    );
+    println!("protocol: PLAN <model> <board> [budget] | GET | UPLOAD | STATS | BOARDS | MODELS");
+    coordinator::serve_plans_tcp(svc, &format!("0.0.0.0:{port}"), None, |a| {
         println!("listening on {a}");
     })
 }
@@ -1122,6 +903,7 @@ fn main() {
         "export" => cmd_export(&flags),
         "run" => cmd_run(&flags),
         "serve" => cmd_serve(&flags),
+        "plan-serve" => cmd_plan_serve(&flags),
         "table1" => cmd_table1(),
         "sweep" => cmd_sweep(),
         "nas" => cmd_nas(&flags),

@@ -61,6 +61,12 @@ pub const SPARKFUN_EDGE: Board = Board {
 pub const ALL_BOARDS: [&Board; 4] =
     [&NUCLEO_F767ZI, &STM32F446RE, &STM32H743ZI, &SPARKFUN_EDGE];
 
+/// Look a board up by its catalogue name (case-insensitive) — the handle
+/// fleet plan requests use.
+pub fn by_name(name: &str) -> Option<&'static Board> {
+    ALL_BOARDS.iter().copied().find(|b| b.name.eq_ignore_ascii_case(name))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -69,6 +75,15 @@ mod tests {
     fn paper_board_is_512kb_216mhz() {
         assert_eq!(NUCLEO_F767ZI.sram_bytes, 512 * 1024);
         assert_eq!(NUCLEO_F767ZI.clock_hz, 216_000_000);
+    }
+
+    #[test]
+    fn by_name_is_case_insensitive_and_total() {
+        for b in ALL_BOARDS {
+            let found = by_name(&b.name.to_ascii_lowercase()).unwrap();
+            assert_eq!(found.name, b.name);
+        }
+        assert!(by_name("no-such-board").is_none());
     }
 
     #[test]

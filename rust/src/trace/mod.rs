@@ -105,6 +105,15 @@ pub enum Event {
         cache_misses: usize,
         threads: usize,
     },
+    /// One plan-cache probe in the serving coordinator
+    /// ([`crate::coordinator::PlanService`]).
+    PlanCacheLookup { model: String, board: String, hit: bool },
+    /// An LRU eviction from the serving coordinator's plan cache; the
+    /// fields name the evicted plan.
+    PlanCacheEvict { model: String, board: String },
+    /// A plan request shed by admission control (`depth` = queue depth at
+    /// rejection time).
+    PlanShed { depth: usize },
 }
 
 impl Event {
@@ -121,6 +130,9 @@ impl Event {
             Event::SearchRound { .. } => "round",
             Event::Phase { .. } => "phase",
             Event::PlannerStats { .. } => "planner",
+            Event::PlanCacheLookup { .. } => "plan_cache",
+            Event::PlanCacheEvict { .. } => "plan_evict",
+            Event::PlanShed { .. } => "plan_shed",
         }
     }
 
@@ -231,6 +243,16 @@ impl Event {
                 ("cache_misses", num(*cache_misses)),
                 ("threads", num(*threads)),
             ]),
+            Event::PlanCacheLookup { model, board, hit } => fields.extend([
+                ("model", Json::Str(model.clone())),
+                ("board", Json::Str(board.clone())),
+                ("hit", Json::Bool(*hit)),
+            ]),
+            Event::PlanCacheEvict { model, board } => fields.extend([
+                ("model", Json::Str(model.clone())),
+                ("board", Json::Str(board.clone())),
+            ]),
+            Event::PlanShed { depth } => fields.extend([("depth", num(*depth))]),
         }
         Json::obj(fields)
     }

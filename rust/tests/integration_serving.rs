@@ -1,0 +1,258 @@
+//! Integration: the plan-serving coordinator end to end.
+//!
+//! Covers the ISSUE-8 acceptance criteria: the service plans the full
+//! zoo plus the imported int8 TFLite fixture across every board
+//! profile, cache hits (and post-eviction recomputations) are
+//! bit-identical to fresh plans, and the TCP front-end survives every
+//! protocol error — malformed commands, unknown models/boards/uploads,
+//! bad budgets, oversized lines, infeasible explicit budgets, garbage
+//! uploads — with a clean `ERR`/`SHED` reply and a connection that
+//! keeps serving.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::sync::{mpsc, Arc};
+
+use mcu_reorder::coordinator::{ModelRef, PlanRequest, PlanServeConfig, PlanService};
+use mcu_reorder::mcu::boards;
+use mcu_reorder::models;
+use mcu_reorder::split::SplitOptions;
+use mcu_reorder::tflite::fixtures;
+use mcu_reorder::util::json::Json;
+
+fn quick_cfg() -> PlanServeConfig {
+    PlanServeConfig { workers: 1, split: SplitOptions::quick(), ..Default::default() }
+}
+
+fn serve(svc: Arc<PlanService>, conns: usize) -> SocketAddr {
+    let (tx, rx) = mpsc::channel();
+    std::thread::spawn(move || {
+        mcu_reorder::coordinator::serve_plans_tcp(svc, "127.0.0.1:0", Some(conns), move |a| {
+            let _ = tx.send(a);
+        })
+        .expect("plan server")
+    });
+    rx.recv().expect("server address")
+}
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).expect("connect");
+        Client { reader: BufReader::new(stream.try_clone().expect("clone stream")), writer: stream }
+    }
+
+    fn send(&mut self, line: &str) -> String {
+        self.writer.write_all(line.as_bytes()).expect("send line");
+        self.writer.write_all(b"\n").expect("send newline");
+        self.recv()
+    }
+
+    fn recv(&mut self) -> String {
+        let mut line = String::new();
+        self.reader.read_line(&mut line).expect("recv line");
+        line
+    }
+}
+
+fn fixture_bytes() -> Vec<u8> {
+    let path = fixtures::ensure(fixtures::INT8_FIXTURE).expect("tflite fixture");
+    std::fs::read(path).expect("reading tflite fixture")
+}
+
+// ---------------------------------------------------------------------------
+// In-process: coverage + bit-identity
+// ---------------------------------------------------------------------------
+
+#[test]
+fn serves_full_zoo_and_tflite_across_all_boards_bit_stably() {
+    let svc = PlanService::start(quick_cfg());
+    let hash = svc.upload("cnn_int8.tflite".to_string(), fixture_bytes()).expect("upload");
+
+    let mut refs: Vec<ModelRef> =
+        models::MODEL_NAMES.iter().map(|n| ModelRef::Zoo(n.to_string())).collect();
+    refs.push(ModelRef::Uploaded(hash));
+
+    let mut served = 0usize;
+    for model in &refs {
+        for board in boards::ALL_BOARDS {
+            let req = PlanRequest { model: model.clone(), board, budget: None };
+            let fresh = svc.plan(&req).expect("fresh plan");
+            let cached = svc.plan(&req).expect("cached plan");
+            assert_eq!(
+                *fresh.json,
+                *cached.json,
+                "{}/{}: cache must be bit-identical",
+                fresh.model,
+                board.name
+            );
+            assert_eq!(*fresh.summary, *cached.summary);
+            assert!(fresh.peak_bytes <= fresh.reordered_peak, "splitting can only help");
+            assert!(fresh.budget_met == (fresh.peak_bytes <= board.sram_bytes));
+            let doc = Json::parse(&fresh.summary).expect("summary parses");
+            assert_eq!(doc.get("schema_version").as_f64(), Some(1.0));
+            assert_eq!(doc.get("board").as_str(), Some(board.name));
+            served += 2;
+        }
+    }
+    let n_keys = refs.len() * boards::ALL_BOARDS.len();
+    let s = svc.stats();
+    assert_eq!(s.served as usize, served);
+    assert_eq!(s.cache.misses as usize, n_keys, "each key computed exactly once");
+    assert_eq!(s.cache.hits as usize, n_keys, "each key hit exactly once");
+    assert_eq!(s.shed, 0);
+    assert_eq!(s.errors, 0);
+    svc.shutdown();
+}
+
+#[test]
+fn recomputation_after_eviction_is_bit_identical() {
+    let svc = PlanService::start(PlanServeConfig { cache_cap: 1, ..quick_cfg() });
+    let fig = PlanRequest {
+        model: ModelRef::Zoo("figure1".to_string()),
+        board: boards::ALL_BOARDS[0],
+        budget: None,
+    };
+    let tiny = PlanRequest { model: ModelRef::Zoo("tiny".to_string()), ..fig.clone() };
+
+    let first = svc.plan(&fig).expect("first plan");
+    svc.plan(&tiny).expect("evicting plan"); // cap 1: evicts figure1
+    let recomputed = svc.plan(&fig).expect("recomputed plan");
+    assert_eq!(*first.json, *recomputed.json, "recomputation must be bit-identical");
+    assert_eq!(*first.summary, *recomputed.summary);
+    let s = svc.stats();
+    assert_eq!(s.cache.evictions, 2, "cap-1 cache evicts on every new key");
+    assert_eq!(s.cache.hits, 0);
+    svc.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// TCP protocol error paths
+// ---------------------------------------------------------------------------
+
+#[test]
+fn tcp_protocol_errors_do_not_kill_the_connection() {
+    let svc = PlanService::start(quick_cfg());
+    let addr = serve(svc.clone(), 1);
+    let mut c = Client::connect(addr);
+
+    for (line, expect) in [
+        ("FROB", "ERR unknown command"),
+        ("PLAN", "ERR usage: PLAN <model> <board> [budget]"),
+        ("PLAN nope NUCLEO-F767ZI", "ERR unknown model"),
+        ("PLAN figure1 no-such-board", "ERR unknown board"),
+        ("PLAN figure1 NUCLEO-F767ZI twelve", "ERR bad budget"),
+        ("PLAN hash:xyz NUCLEO-F767ZI", "ERR bad model hash"),
+        ("PLAN hash:00000000deadbeef NUCLEO-F767ZI", "ERR unknown upload"),
+        ("UPLOAD junk notanum", "ERR bad byte count"),
+    ] {
+        let reply = c.send(line);
+        assert!(reply.starts_with(expect), "{line:?} → {reply:?} (wanted {expect:?})");
+    }
+
+    // An oversized line is reported and drained; the connection survives.
+    let long = "A".repeat(svc.config().max_line_bytes + 100);
+    let reply = c.send(&long);
+    assert!(reply.starts_with("ERR line too long"), "{reply:?}");
+
+    let reply = c.send("MODELS");
+    assert!(reply.starts_with("OK ") && reply.contains("figure1"), "{reply:?}");
+    let reply = c.send("BOARDS");
+    assert!(reply.contains("NUCLEO-F767ZI") && reply.contains("sram_bytes"), "{reply:?}");
+    let reply = c.send("STATS");
+    assert!(reply.starts_with("OK {") && reply.contains("\"schema_version\""), "{reply:?}");
+
+    // After all that abuse, the connection still serves real plans.
+    let reply = c.send("PLAN figure1 NUCLEO-F767ZI");
+    assert!(reply.starts_with("OK {"), "{reply:?}");
+    let reply = c.send("GET figure1 nucleo-f767zi"); // board lookup is case-insensitive
+    assert!(reply.starts_with("OK {"), "{reply:?}");
+    let doc = Json::parse(reply.trim_start_matches("OK ").trim()).expect("GET returns JSON");
+    assert_eq!(doc.get("schema_version").as_f64(), Some(1.0));
+    assert_eq!(doc.get("model").as_str(), Some("figure1"));
+
+    // QUIT closes cleanly.
+    assert_eq!(c.send("QUIT"), "", "QUIT must close the connection");
+    svc.shutdown();
+}
+
+#[test]
+fn tcp_infeasible_budget_is_clean_and_connection_survives() {
+    let svc = PlanService::start(quick_cfg());
+    let addr = serve(svc.clone(), 1);
+    let mut c = Client::connect(addr);
+
+    let reply = c.send("PLAN mobilenet NUCLEO-F767ZI 16");
+    assert!(reply.starts_with("ERR infeasible:"), "{reply:?}");
+    assert!(reply.contains("budget 16 B"), "{reply:?}");
+
+    // The same model under the board's own SRAM still plans fine.
+    let reply = c.send("PLAN mobilenet NUCLEO-F767ZI");
+    assert!(reply.starts_with("OK {"), "{reply:?}");
+    let s = svc.stats();
+    assert_eq!(s.infeasible, 1);
+    svc.shutdown();
+}
+
+#[test]
+fn tcp_sheds_when_the_queue_is_full() {
+    // Paused service (no workers) with a zero-length queue: every uncached
+    // request must be shed with an explicit SHED reply, never an error.
+    let svc = PlanService::start_paused(PlanServeConfig { queue_cap: 0, ..quick_cfg() });
+    let addr = serve(svc.clone(), 1);
+    let mut c = Client::connect(addr);
+
+    let reply = c.send("PLAN figure1 NUCLEO-F767ZI");
+    assert!(reply.starts_with("SHED queue full"), "{reply:?}");
+    let reply = c.send("PLAN tiny SparkFun-Edge");
+    assert!(reply.starts_with("SHED queue full"), "{reply:?}");
+    assert_eq!(svc.stats().shed, 2);
+    svc.shutdown();
+}
+
+#[test]
+fn tcp_upload_roundtrip_garbage_and_size_cap() {
+    let svc = PlanService::start(quick_cfg());
+    let addr = serve(svc.clone(), 2);
+    let mut c = Client::connect(addr);
+
+    // Garbage bytes: parse error, connection survives.
+    let body = b"not a flatbuffer!";
+    c.writer.write_all(format!("UPLOAD junk.tflite {}\n", body.len()).as_bytes()).unwrap();
+    c.writer.write_all(body).unwrap();
+    let reply = c.recv();
+    assert!(
+        reply.starts_with("ERR") && reply.contains("not a loadable TFLite model"),
+        "{reply:?}"
+    );
+
+    // Real fixture: accepted, hash usable as a model reference.
+    let bytes = fixture_bytes();
+    c.writer.write_all(format!("UPLOAD cnn_int8.tflite {}\n", bytes.len()).as_bytes()).unwrap();
+    c.writer.write_all(&bytes).unwrap();
+    let reply = c.recv();
+    let hash = reply.trim().strip_prefix("OK ").expect("upload accepted").to_string();
+    assert_eq!(hash.len(), 16, "hash is 16 hex digits: {hash:?}");
+    let reply = c.send(&format!("PLAN hash:{hash} NUCLEO-F446RE"));
+    assert!(reply.starts_with("OK {"), "{reply:?}");
+    let doc = Json::parse(reply.trim_start_matches("OK ").trim()).expect("summary parses");
+    assert_eq!(doc.get("board").as_str(), Some("NUCLEO-F446RE"));
+
+    // A declared size over the cap is refused before the body is read,
+    // and the connection is closed (the body cannot be skipped).
+    let max = svc.config().max_upload_bytes;
+    let reply = c.send(&format!("UPLOAD huge.tflite {}", max + 1));
+    assert!(reply.starts_with("ERR upload too large"), "{reply:?}");
+    assert_eq!(c.recv(), "", "oversized upload closes the connection");
+
+    // A fresh connection still works (the service itself is unharmed).
+    let mut c2 = Client::connect(addr);
+    let reply = c2.send(&format!("PLAN hash:{hash} SparkFun-Edge"));
+    assert!(reply.starts_with("OK {"), "{reply:?}");
+    assert_eq!(svc.stats().uploads, 1, "only the valid upload counts");
+    svc.shutdown();
+}

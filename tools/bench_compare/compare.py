@@ -5,9 +5,13 @@ Compares the freshly-written ``BENCH_<name>.json`` reports (produced by
 ``cargo bench``) against the committed baselines in ``BENCH_baseline/``
 and fails (exit 1) if any gated metric regressed.
 
-Gated metrics are the ``*_peak`` keys — peak SRAM in bytes, lower is
-better, and fully deterministic (they come from the analytic scheduler,
-not from timing). Timing rows are reported but never gated.
+Gated metrics come in two polarities, both fully deterministic (they
+come from the analytic scheduler and the deterministic serving
+simulation, not from timing). Timing rows are reported but never gated.
+
+  - ``*_peak``  keys: peak SRAM in bytes, LOWER is better
+  - ``*_floor`` keys: counters that must not drop (plans served, cache
+    hits, coverage, shed decisions), HIGHER is better
 
 Usage:
     python3 tools/bench_compare/compare.py <baseline_dir> <current_dir>
@@ -16,9 +20,10 @@ Baseline files are named ``<bench>.json`` (e.g. ``partial_exec.json``)
 and share the report schema: ``{"bench": ..., "metrics": {...}}``.
 Current files are the ``BENCH_<bench>.json`` the bench binaries write.
 
-Rules:
-  - current value >  baseline          -> REGRESSION (fail)
-  - current value <= baseline          -> ok (improvement is reported)
+Rules (inverted for ``_floor`` keys):
+  - current value worse than baseline  -> REGRESSION (fail)
+    (``_peak``: current > baseline; ``_floor``: current < baseline)
+  - current value no worse             -> ok (improvement is reported)
   - baseline key missing from current  -> MISSING (fail: coverage loss)
   - current key missing from baseline  -> new (reported, not gated)
 
@@ -33,7 +38,8 @@ import json
 import pathlib
 import sys
 
-GATED_SUFFIX = "_peak"
+GATED_SUFFIX = "_peak"  # lower is better
+FLOOR_SUFFIX = "_floor"  # higher is better
 
 
 def load_metrics(path):
@@ -43,7 +49,17 @@ def load_metrics(path):
 
 
 def gated(metrics):
-    return {k: v for k, v in metrics.items() if k.endswith(GATED_SUFFIX)}
+    return {
+        k: v
+        for k, v in metrics.items()
+        if k.endswith(GATED_SUFFIX) or k.endswith(FLOOR_SUFFIX)
+    }
+
+
+def regressed(key, cur_val, base_val):
+    if key.endswith(FLOOR_SUFFIX):
+        return cur_val < base_val
+    return cur_val > base_val
 
 
 def refresh(baseline_dir, current_dir):
@@ -76,11 +92,12 @@ def compare(baseline_dir, current_dir):
                 continue
             checked += 1
             cur_val = cur[key]
-            if cur_val > base_val:
+            if regressed(key, cur_val, base_val):
+                rel = "<" if key.endswith(FLOOR_SUFFIX) else ">"
                 failures.append(
-                    f"{bench}: {key} regressed: {cur_val:.0f} > baseline {base_val:.0f}"
+                    f"{bench}: {key} regressed: {cur_val:.0f} {rel} baseline {base_val:.0f}"
                 )
-            elif cur_val < base_val:
+            elif cur_val != base_val:
                 print(f"ok  {bench}.{key}: improved {base_val:.0f} -> {cur_val:.0f}")
             else:
                 print(f"ok  {bench}.{key}: {cur_val:.0f}")

@@ -15,10 +15,15 @@ Purpose:
     analytically (`python3 tools/schedule_mirror/mirror.py --baseline`);
   * compute the gated `BENCH_baseline/scheduler_scaling.json` values for
     the layered synthetic models (`--scaling-baseline`), and check the
-    Rust scaling bench against them (`--check BENCH_scheduler_scaling.json`).
+    Rust scaling bench against them (`--check BENCH_scheduler_scaling.json`);
+  * compute the gated `BENCH_baseline/serving.json` `_floor` counters of
+    the plan-serving bench by simulating its deterministic request
+    stream against a bit-exact tick-LRU (`--serving-baseline`), and
+    check the Rust serving bench against them (`--check BENCH_serving.json`).
 
 Everything here is deterministic and analytic — no timing, no RNG beyond
-the mirrored xoshiro256** used by the synthetic model generators.
+the mirrored xoshiro256** used by the synthetic model generators and the
+serving bench's zipf request stream.
 """
 
 import argparse
@@ -1246,6 +1251,89 @@ def scaling_metrics():
     return metrics
 
 
+SERVING_SEED = 19_100_511
+SERVING_CACHE_CAP = 24
+SERVING_ZIPF_DRAWS = 400
+SERVING_MODELS = 8  # the 7-model zoo + the uploaded cnn_int8.tflite fixture
+SERVING_BOARDS = 4
+SERVING_SHED = 4  # phase C: 12 submits into queue_cap 8 shed exactly 4
+
+
+class LruSim:
+    """Tick-counter LRU, bit-exact to `rust/src/coordinator/cache.rs`:
+    `get` increments the tick and promotes on hit; `insert` increments
+    the tick, refreshes in place if present, else evicts the minimum-tick
+    entry when full. Ticks never repeat, so eviction order — and with it
+    every hit/miss/eviction counter — is fully deterministic."""
+
+    def __init__(self, cap):
+        self.entries = {}  # key -> last-touched tick
+        self.tick = 0
+        self.cap = max(cap, 1)
+        self.hits = self.misses = self.evictions = 0
+
+    def get(self, key):
+        self.tick += 1
+        if key in self.entries:
+            self.entries[key] = self.tick
+            self.hits += 1
+            return True
+        self.misses += 1
+        return False
+
+    def insert(self, key):
+        self.tick += 1
+        if key in self.entries:
+            self.entries[key] = self.tick
+            return
+        if len(self.entries) >= self.cap:
+            victim = min(self.entries, key=self.entries.get)
+            del self.entries[victim]
+            self.evictions += 1
+        self.entries[key] = self.tick
+
+
+def zipf_rank(rng, weights):
+    total = sum(weights)
+    draw = rng.below(total)
+    for r, w in enumerate(weights):
+        if draw < w:
+            return r
+        draw -= w
+    return len(weights) - 1
+
+
+def serving_metrics():
+    """Gated `_floor` counters of the `plan_serving` bench (mirrors
+    `rust/benches/plan_serving.rs` phases A and C): a coverage sweep over
+    all (model, board) ranks, then SERVING_ZIPF_DRAWS zipf(1)-distributed
+    requests — integer weights 1e6/(r+1), ranks drawn from the mirrored
+    xoshiro256** stream — against the tick-LRU plan cache. Each request
+    is one `get`; each miss computes and `insert`s, exactly like
+    `PlanService::plan` on a single worker."""
+    n_ranks = SERVING_MODELS * SERVING_BOARDS
+    cache = LruSim(SERVING_CACHE_CAP)
+    for rank in range(n_ranks):  # coverage sweep: every key is distinct
+        cache.get(rank)
+        cache.insert(rank)
+    assert cache.misses == n_ranks and cache.evictions == n_ranks - SERVING_CACHE_CAP
+    hits_before = cache.hits
+    weights = [1_000_000 // (r + 1) for r in range(n_ranks)]
+    rng = Rng(SERVING_SEED)
+    for _ in range(SERVING_ZIPF_DRAWS):
+        rank = zipf_rank(rng, weights)
+        if not cache.get(rank):
+            cache.insert(rank)
+    zipf_hits = cache.hits - hits_before
+    return {
+        "fleet.coverage_boards_floor": SERVING_BOARDS,
+        "fleet.coverage_models_floor": SERVING_MODELS,
+        "fleet.plans_served_floor": n_ranks + SERVING_ZIPF_DRAWS,
+        "fleet.shed_floor": SERVING_SHED,
+        "fleet.zipf_hits_floor": zipf_hits,
+    }
+
+
 def live_csv(g, order):
     """Per-op live-set CSV keyed by tensor names.
 
@@ -1272,11 +1360,14 @@ def main(argv):
     ap.add_argument("--scaling-baseline", action="store_true",
                     help="print BENCH_baseline/scheduler_scaling.json gated "
                          "metrics (layered synthetic models)")
+    ap.add_argument("--serving-baseline", action="store_true",
+                    help="print BENCH_baseline/serving.json gated _floor "
+                         "counters (simulated plan-serving fleet)")
     ap.add_argument("--report", action="store_true",
                     help="print the full per-model plan report")
     ap.add_argument("--check", metavar="BENCH_JSON",
-                    help="recompute every *_peak metric and fail on any "
-                         "mismatch with the given BENCH_*.json (the "
+                    help="recompute every *_peak / *_floor metric and fail "
+                         "on any mismatch with the given BENCH_*.json (the "
                          "Rust-vs-mirror drift gate; dispatches on the "
                          "report's \"bench\" field)")
     ap.add_argument("--trace", metavar="MODEL",
@@ -1304,7 +1395,8 @@ def main(argv):
             check_doc = json.load(f)
         check_bench = check_doc.get("bench", "partial_exec")
     need_zoo = (args.report or args.baseline
-                or (args.check and check_bench != "scheduler_scaling"))
+                or (args.check
+                    and check_bench not in ("scheduler_scaling", "serving")))
     metrics = {}
     if need_zoo:
         for name, g, rows, mat, eli, metrics in bench_metrics():
@@ -1326,15 +1418,22 @@ def main(argv):
                "metrics": {k: v for k, v in sorted(scaling_metrics().items())},
                "timings": []}
         print(json.dumps(doc, indent=2))
+    if args.serving_baseline:
+        doc = {"bench": "serving",
+               "metrics": {k: v for k, v in sorted(serving_metrics().items())},
+               "timings": []}
+        print(json.dumps(doc, indent=2))
     if args.check:
         if check_bench == "scheduler_scaling":
             mirror_metrics = scaling_metrics()
+        elif check_bench == "serving":
+            mirror_metrics = serving_metrics()
         else:
             mirror_metrics = metrics
         reported = check_doc.get("metrics", {})
         bad = 0
         for key, val in sorted(mirror_metrics.items()):
-            if not key.endswith("_peak"):
+            if not (key.endswith("_peak") or key.endswith("_floor")):
                 continue
             if key not in reported:
                 print(f"MISSING {key}: mirror {val}, absent from {args.check}")
@@ -1345,10 +1444,10 @@ def main(argv):
             else:
                 print(f"ok  {key}: {val}")
         if bad:
-            print(f"\n{bad} metric(s) drifted between the Rust planner and "
-                  "the DP mirror", file=sys.stderr)
+            print(f"\n{bad} metric(s) drifted between the Rust side and "
+                  "the mirror", file=sys.stderr)
             return 1
-        print("\nexact-schedule DP mirror: all peaks agree")
+        print("\nmirror: all gated metrics agree")
     return 0
 
 
