@@ -10,6 +10,11 @@
 //!   memory may be precomputed"): lifetime-interval analysis + greedy
 //!   best-fit-decreasing offset assignment (the strategy TFLM's
 //!   `GreedyMemoryPlanner` later adopted). Needs no run-time compaction.
+//!
+//! Placements from either planner are proven sound after the fact by
+//! [`crate::verify::verify_arena`], which re-derives lifetimes and
+//! storage-sharing roots with its own interval engine — deliberately
+//! sharing none of this module's accounting code.
 
 use std::collections::HashMap;
 

@@ -313,7 +313,7 @@ impl OptimizeRequest {
             }
         };
 
-        Ok(OptimizeReport {
+        let mut report = OptimizeReport {
             schema_version: SCHEMA_VERSION,
             model: g.name.clone(),
             source: resolved.label.clone(),
@@ -331,7 +331,24 @@ impl OptimizeRequest {
             materialized_peak,
             events,
             tflite: resolved.tflite,
-        })
+            verified: false,
+        };
+
+        // Proof-carrying plans: no report leaves the facade unverified. The
+        // certificate is recomputed by [`crate::verify`], which shares no
+        // lifetime/peak accounting with the planners — a failure here is a
+        // planner bug and aborts the request rather than serving the plan.
+        let cert = crate::verify::certify_report(&report).map_err(|e| anyhow!("{e}"))?;
+        report.verified = true;
+        if self.trace {
+            report.events.push(Event::Verify {
+                model: report.model.clone(),
+                checks: cert.checks.len(),
+                peak_bytes: cert.peak_bytes,
+                ok: true,
+            });
+        }
+        Ok(report)
     }
 }
 
@@ -369,6 +386,11 @@ pub struct OptimizeReport {
     pub events: Vec<Event>,
     /// Retained flatbuffer source, when the model came from one.
     pub tflite: Option<Box<TfliteSource>>,
+    /// Every artifact in this report passed the independent static
+    /// verifier ([`crate::verify::certify_report`]). Always `true` on a
+    /// report returned by [`OptimizeRequest::run`]; the coordinator
+    /// refuses to serve cached plans without it.
+    pub verified: bool,
 }
 
 impl OptimizeReport {
@@ -468,6 +490,7 @@ impl OptimizeReport {
                 ]),
             ),
             ("static_arena", Json::Num(self.static_arena_bytes as f64)),
+            ("verified", Json::Bool(self.verified)),
             (
                 "deploy",
                 Json::obj(vec![
@@ -509,6 +532,7 @@ impl OptimizeReport {
                     None => Json::Null,
                 },
             ),
+            ("verified", Json::Bool(self.verified)),
         ])
     }
 }
@@ -897,6 +921,10 @@ mod tests {
         let summary = r.summary_json();
         assert_eq!(summary.get("schema_version").as_f64(), Some(SCHEMA_VERSION as f64));
         assert_eq!(summary.get("budget_met").as_bool(), Some(true));
+        // Every report leaving run() is proof-carrying.
+        assert!(r.verified);
+        assert_eq!(doc.get("verified").as_bool(), Some(true));
+        assert_eq!(summary.get("verified").as_bool(), Some(true));
     }
 
     #[test]

@@ -119,6 +119,11 @@ pub struct CachedPlan {
     pub budget_met: bool,
     pub summary: Arc<String>,
     pub json: Arc<String>,
+    /// The plan's report passed the independent static verifier
+    /// ([`crate::verify`]) when it was computed. [`PlanService::submit`]
+    /// refuses to serve a cached plan without this — an unverified entry
+    /// is treated as a miss and re-planned.
+    pub verified: bool,
 }
 
 /// Why a request was not served.
@@ -349,7 +354,10 @@ impl PlanService {
         let key = PlanKey { model_hash, budget: effective, opts_fp: request.options_fingerprint() };
 
         let mut st = self.state.lock().unwrap();
-        if let Some(plan) = st.cache.get(&key) {
+        // Proof-carrying gate: only certified plans leave the cache. An
+        // unverified entry (impossible via `run()`, which re-certifies
+        // every report, but cheap to enforce) falls through to a re-plan.
+        if let Some(plan) = st.cache.get(&key).filter(|p| p.verified) {
             if st.trace {
                 st.events.push(Event::PlanCacheLookup {
                     model: label,
@@ -449,6 +457,7 @@ impl PlanService {
                         budget_met: best <= job.key.budget,
                         summary: Arc::new(report.summary_json().to_string()),
                         json: Arc::new(report.to_json().to_string()),
+                        verified: report.verified,
                     }))
                 }
                 Err(e) => Err(PlanError::Internal(format!("{e:#}"))),

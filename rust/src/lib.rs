@@ -41,9 +41,16 @@
 //!   zero-cost-when-off event recorder threaded through `sched`, `alloc`,
 //!   `interp` and `split`, with Chrome trace-event (Perfetto) export and
 //!   an analytic-vs-measured peak audit.
+//! - [`verify`] — proof-carrying plans: an independent static verifier
+//!   (own interval/lifetime engine, zero shared accounting code with
+//!   `sched`/`alloc`) that certifies schedule legality, arena soundness,
+//!   split-rewrite geometry, quantization flow and export invariants
+//!   behind every [`api::OptimizeReport`].
 //! - [`util`] — in-tree substrates for JSON, RNG, property testing,
 //!   benchmarking and error handling (their crates.io equivalents are not
 //!   vendored here).
+
+#![forbid(unsafe_code)]
 
 pub mod alloc;
 pub mod api;
@@ -59,3 +66,4 @@ pub mod split;
 pub mod tflite;
 pub mod trace;
 pub mod util;
+pub mod verify;

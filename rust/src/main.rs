@@ -2,6 +2,13 @@
 //! tflite-tools: analyze a model's memory profile, compute the optimal
 //! operator order, embed it into the model file, and run/serve the
 //! AOT-compiled artifact through PJRT).
+//!
+//! Exit codes are uniform across subcommands: 0 on success, 1 with a
+//! one-line `error:` for runtime failures (unreadable files, planning or
+//! verification failures), 2 for usage errors (unknown commands/flags,
+//! missing required arguments, unparsable values).
+
+#![forbid(unsafe_code)]
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -79,6 +86,21 @@ COMMANDS:
                                split model + schedule to F; --threads N
                                scores beam candidates on N threads with
                                bit-identical results
+  verify    <model|M.tflite>   Proof-carrying plans: run the optimize
+            [--model M|--file F] [--dtype i8|f32] [--budget B]
+            [--board NAME] [--reorder-only] [--no-elide] [--threads N]
+            [--reordered F.tflite] [--json [F]]
+                               pipeline, then independently re-prove the
+                               result with a static verifier that shares no
+                               accounting code with the planners: schedule
+                               legality + recomputed peaks, arena slot
+                               soundness, split band/halo geometry, int8
+                               domain flow, and export invariants.
+                               --reordered F additionally proves an exported
+                               flatbuffer is a pure operator permutation of
+                               the source. Prints the certificate (or emits
+                               it with --json); exits 1 when any property
+                               family fails
   export    --model M --json F --weights F [--dtype f32]
                                Export graph JSON + seeded weights for the
                                AOT pipeline (python/compile/aot.py)
@@ -106,6 +128,8 @@ COMMANDS:
 
 Common analyze flags: --chart (ASCII memory plot), --csv FILE (trace dump),
 --inplace (enable §6 in-place Add accumulation in the accounting).
+
+Exit codes: 0 success · 1 runtime/verification failure · 2 usage error.
 ";
 
 fn parse_args(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
@@ -117,14 +141,21 @@ fn parse_args(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
         if let Some(name) = a.strip_prefix("--") {
             let boolean = matches!(
                 name,
-                "check" | "table" | "chart" | "inplace" | "no-elide" | "audit" | "measured"
+                "check"
+                    | "table"
+                    | "chart"
+                    | "inplace"
+                    | "no-elide"
+                    | "audit"
+                    | "measured"
+                    | "reorder-only"
             );
             if boolean {
                 flags.insert(name.to_string(), "true".to_string());
             } else if i + 1 < args.len() && !args[i + 1].starts_with("--") {
                 flags.insert(name.to_string(), args[i + 1].clone());
                 i += 1;
-            } else if matches!(name, "out" | "json" | "file" | "csv" | "weights") {
+            } else if matches!(name, "out" | "json" | "file" | "csv" | "weights" | "reordered") {
                 // A path-valued flag with no value (trailing, or followed
                 // by another flag) must not silently write to a file named
                 // "true"; record an empty path so path consumers reject it
@@ -152,15 +183,25 @@ fn parse_args(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
     (pos, flags)
 }
 
+/// Marker prefix `main()` classifies into exit code 2. Every subcommand
+/// reports bad invocations through [`usage`] and runtime failures through
+/// plain `anyhow!`, so the exit-code contract is uniform.
+const USAGE_PREFIX: &str = "usage error: ";
+
+/// A command-line usage error (exit code 2).
+fn usage(msg: impl std::fmt::Display) -> mcu_reorder::util::error::Error {
+    anyhow!("{USAGE_PREFIX}{msg}")
+}
+
 /// A path-valued flag; an explicitly empty value (a trailing flag with
 /// nothing after it) is a usage error, not a silent no-op.
 fn path_flag<'a>(
     flags: &'a HashMap<String, String>,
     name: &str,
-    usage: &str,
+    label: &str,
 ) -> Result<Option<&'a str>> {
     match flags.get(name).map(|s| s.as_str()) {
-        Some("") => Err(anyhow!("{usage} needs a path")),
+        Some("") => Err(usage(format!("{label} needs a path"))),
         other => Ok(other),
     }
 }
@@ -169,10 +210,25 @@ fn out_flag(flags: &HashMap<String, String>) -> Result<Option<&str>> {
     path_flag(flags, "out", "-o/--out")
 }
 
+/// A numeric flag; an unparsable value is a usage error, not a panic or a
+/// silently ignored setting.
+fn num_flag<T: std::str::FromStr>(
+    flags: &HashMap<String, String>,
+    name: &str,
+) -> Result<Option<T>> {
+    match flags.get(name) {
+        None => Ok(None),
+        Some(s) => s
+            .parse()
+            .map(Some)
+            .map_err(|_| usage(format!("--{name} needs a number, got {s:?}"))),
+    }
+}
+
 fn dtype_flag(flags: &HashMap<String, String>, default: DType) -> Result<DType> {
     match flags.get("dtype").map(|s| s.as_str()) {
         None => Ok(default),
-        Some(s) => DType::from_name(s).ok_or_else(|| anyhow!("unknown dtype {s:?}")),
+        Some(s) => DType::from_name(s).ok_or_else(|| usage(format!("unknown dtype {s:?}"))),
     }
 }
 
@@ -187,7 +243,8 @@ fn source_from_flags(
         // order already reflects the file); anything else as model JSON.
         return Ok(api::ModelSource::from_path(path));
     }
-    let name = flags.get("model").ok_or_else(|| anyhow!("--model or --file required"))?;
+    let name =
+        flags.get("model").ok_or_else(|| usage("--model or --file required"))?;
     let dtype = dtype_flag(flags, default_dtype)?;
     Ok(api::ModelSource::Zoo { name: name.clone(), dtype })
 }
@@ -211,7 +268,7 @@ fn order_for(g: &Graph, spec: &str) -> Result<sched::Schedule> {
         "optimal" => sched::optimal(g).map_err(|e| anyhow!("{e}"))?.0,
         "greedy" => sched::greedy_min_increase(g),
         "dfs" => sched::greedy_depth_first(g),
-        other => bail!("unknown order {other:?} (default|optimal|greedy|dfs)"),
+        other => return Err(usage(format!("unknown order {other:?} (default|optimal|greedy|dfs)"))),
     })
 }
 
@@ -303,7 +360,7 @@ fn is_tflite(path: &str) -> bool {
 
 fn cmd_import(pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
     let path = tflite_path(pos, flags)?
-        .ok_or_else(|| anyhow!("usage: mcu-reorder import MODEL.tflite [--json F]"))?;
+        .ok_or_else(|| usage("mcu-reorder import MODEL.tflite [--json F]"))?;
     let report = api::OptimizeRequest::reorder_only(api::ModelSource::TflitePath(
         path.to_string(),
     ))
@@ -339,18 +396,17 @@ fn emit_json(doc: &Json, dest: Option<&str>) -> Result<()> {
 }
 
 fn threads_flag(flags: &HashMap<String, String>) -> Result<usize> {
-    Ok(flags.get("threads").map(|s| s.parse()).transpose()?.unwrap_or(1))
+    Ok(num_flag(flags, "threads")?.unwrap_or(1))
 }
 
 /// `optimize` on a real TFLite flatbuffer: report reorder-only vs split vs
 /// elided peaks and write the model back with the optimal operator order
 /// embedded (buffers byte-identical).
 fn cmd_optimize_tflite(path: &str, flags: &HashMap<String, String>) -> Result<()> {
-    let budget: Option<usize> = flags
-        .get("budget")
-        .or_else(|| flags.get("sram-budget"))
-        .map(|s| s.parse())
-        .transpose()?;
+    let budget: Option<usize> = match num_flag(flags, "budget")? {
+        Some(b) => Some(b),
+        None => num_flag(flags, "sram-budget")?,
+    };
     let split_opts = mcu_reorder::split::SplitOptions {
         sram_budget: budget,
         ..Default::default()
@@ -397,7 +453,7 @@ fn cmd_optimize(pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
     let source = source_from_flags(flags, DType::I8)?;
     source.resolve()?;
     let json = json_mode(flags);
-    let out = out_flag(flags)?.ok_or_else(|| anyhow!("--out required"))?;
+    let out = out_flag(flags)?.ok_or_else(|| usage("optimize --model M needs --out F"))?;
     let report = api::OptimizeRequest::reorder_only(source).run()?;
     let mf = ModelFile {
         graph: report.graph.clone(),
@@ -421,9 +477,9 @@ fn trace_prepared(flags: &HashMap<String, String>) -> Result<trace::audit::Prepa
             let label = imp.graph.name.clone();
             return Ok(trace::audit::prepare_imported(imp, &label));
         }
-        bail!("--measured/--audit need weights: use a zoo model or a .tflite file");
+        return Err(usage("--measured/--audit need weights: use a zoo model or a .tflite file"));
     }
-    let name = flags.get("model").ok_or_else(|| anyhow!("--model or --file required"))?;
+    let name = flags.get("model").ok_or_else(|| usage("--model or --file required"))?;
     let dtype = dtype_flag(flags, DType::I8)?;
     let mut preps = trace_audit_err(trace::audit::prepare_zoo(name))?;
     let idx = preps.iter().position(|p| p.dtype == dtype.name()).unwrap_or(0);
@@ -520,7 +576,7 @@ fn cmd_trace(pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
             ]);
             emit(doc.to_pretty())?
         }
-        Some(other) => bail!("unknown format {other:?} (chrome|csv|json)"),
+        Some(other) => return Err(usage(format!("unknown format {other:?} (chrome|csv|json)"))),
     }
 
     if flags.contains_key("audit") {
@@ -542,17 +598,15 @@ fn cmd_trace(pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
 }
 
 fn cmd_split(flags: &HashMap<String, String>) -> Result<()> {
-    let budget: Option<usize> = flags.get("sram-budget").map(|s| s.parse()).transpose()?;
-    let max_factor: usize =
-        flags.get("max-factor").map(|s| s.parse()).transpose()?.unwrap_or(4);
-    let max_rounds: usize = flags.get("rounds").map(|s| s.parse()).transpose()?.unwrap_or(3);
-    let beam_width: usize =
-        flags.get("beam-width").map(|s| s.parse()).transpose()?.unwrap_or(2);
+    let budget: Option<usize> = num_flag(flags, "sram-budget")?;
+    let max_factor: usize = num_flag(flags, "max-factor")?.unwrap_or(4);
+    let max_rounds: usize = num_flag(flags, "rounds")?.unwrap_or(3);
+    let beam_width: usize = num_flag(flags, "beam-width")?.unwrap_or(2);
     // Unknown, duplicate and empty tokens are hard errors — a silently
     // dropped axis would quietly shrink the search space.
     let axes: Vec<SplitAxis> = match flags.get("axes") {
         None => SplitAxis::ALL.to_vec(),
-        Some(spec) => mcu_reorder::split::parse_axes(spec).map_err(|e| anyhow!("{e}"))?,
+        Some(spec) => mcu_reorder::split::parse_axes(spec).map_err(|e| usage(e))?,
     };
     let opts = mcu_reorder::split::SplitOptions {
         max_factor,
@@ -592,11 +646,11 @@ fn cmd_split(flags: &HashMap<String, String>) -> Result<()> {
 
 fn cmd_export(flags: &HashMap<String, String>) -> Result<()> {
     let (g, _) = load_graph(flags, DType::F32)?;
-    let json_path = path_flag(flags, "json", "--json")?
-        .ok_or_else(|| anyhow!("--json required"))?;
+    let json_path =
+        path_flag(flags, "json", "--json")?.ok_or_else(|| usage("export needs --json F"))?;
     let weights_path = path_flag(flags, "weights", "--weights")?
-        .ok_or_else(|| anyhow!("--weights required"))?;
-    let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(42);
+        .ok_or_else(|| usage("export needs --weights F"))?;
+    let seed: u64 = num_flag(flags, "seed")?.unwrap_or(42);
 
     let mf = ModelFile::new(g.clone());
     std::fs::write(json_path, mf.to_json()).with_context(|| format!("writing {json_path}"))?;
@@ -627,9 +681,9 @@ fn synthetic_input(g: &Graph) -> Vec<f32> {
 }
 
 fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
-    let name = flags.get("model").ok_or_else(|| anyhow!("--model required"))?.clone();
+    let name = flags.get("model").ok_or_else(|| usage("run needs --model M"))?.clone();
     let dir = PathBuf::from(flags.get("artifacts").cloned().unwrap_or_else(|| "artifacts".into()));
-    let n: usize = flags.get("n").map(|s| s.parse()).transpose()?.unwrap_or(1);
+    let n: usize = num_flag(flags, "n")?.unwrap_or(1);
     let g = models::by_name(&name, DType::F32)
         .ok_or_else(|| anyhow!("unknown model {name:?}"))?;
 
@@ -667,10 +721,10 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
 }
 
 fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
-    let name = flags.get("model").ok_or_else(|| anyhow!("--model required"))?.clone();
+    let name = flags.get("model").ok_or_else(|| usage("serve needs --model M"))?.clone();
     let engine = flags.get("engine").cloned().unwrap_or_else(|| "pjrt".into());
-    let workers: usize = flags.get("workers").map(|s| s.parse()).transpose()?.unwrap_or(2);
-    let port: u16 = flags.get("port").map(|s| s.parse()).transpose()?.unwrap_or(7878);
+    let workers: usize = num_flag(flags, "workers")?.unwrap_or(2);
+    let port: u16 = num_flag(flags, "port")?.unwrap_or(7878);
 
     let factory = match engine.as_str() {
         "pjrt" => {
@@ -684,7 +738,7 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
                 .ok_or_else(|| anyhow!("unknown model {name:?}"))?;
             coordinator::interp_engine_factory(g, 42, 16 * 1024 * 1024)
         }
-        other => bail!("unknown engine {other:?} (pjrt|interp)"),
+        other => return Err(usage(format!("unknown engine {other:?} (pjrt|interp)"))),
     };
     let coord = Arc::new(Coordinator::start(
         ServeConfig { workers, ..Default::default() },
@@ -701,12 +755,10 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
 }
 
 fn cmd_plan_serve(flags: &HashMap<String, String>) -> Result<()> {
-    let port: u16 = flags.get("port").map(|s| s.parse()).transpose()?.unwrap_or(7879);
-    let workers: usize = flags.get("workers").map(|s| s.parse()).transpose()?.unwrap_or(2);
-    let cache_cap: usize =
-        flags.get("cache-cap").map(|s| s.parse()).transpose()?.unwrap_or(128);
-    let queue_cap: usize =
-        flags.get("queue-cap").map(|s| s.parse()).transpose()?.unwrap_or(64);
+    let port: u16 = num_flag(flags, "port")?.unwrap_or(7879);
+    let workers: usize = num_flag(flags, "workers")?.unwrap_or(2);
+    let cache_cap: usize = num_flag(flags, "cache-cap")?.unwrap_or(128);
+    let queue_cap: usize = num_flag(flags, "queue-cap")?.unwrap_or(64);
     let threads = threads_flag(flags)?;
 
     let cfg = coordinator::PlanServeConfig {
@@ -841,8 +893,8 @@ fn cmd_sweep() -> Result<()> {
 }
 
 fn cmd_nas(flags: &HashMap<String, String>) -> Result<()> {
-    let samples: usize = flags.get("samples").map(|s| s.parse()).transpose()?.unwrap_or(60);
-    let seed: u64 = flags.get("seed").map(|s| s.parse()).transpose()?.unwrap_or(41);
+    let samples: usize = num_flag(flags, "samples")?.unwrap_or(60);
+    let seed: u64 = num_flag(flags, "seed")?.unwrap_or(41);
     let mut rng = mcu_reorder::util::rng::Rng::new(seed);
     let t0 = std::time::Instant::now();
     let result = mcu_reorder::nas::random_search(
@@ -882,6 +934,78 @@ fn cmd_dot(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// `mcu-reorder verify`: run the optimize pipeline, then independently
+/// re-prove every artifact with the static verifier and print (or emit as
+/// JSON) the resulting [`mcu_reorder::verify::PlanCertificate`]. A failed
+/// property family is a runtime failure (exit 1) carrying the verifier's
+/// `family/code` diagnostic.
+fn cmd_verify(pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
+    let mut flags = flags.clone();
+    if let Some(p) = pos.first() {
+        // Positional argument: a path if it looks like a file, else a zoo
+        // model name (same dispatch as `trace`).
+        if p.contains('.') && std::path::Path::new(p).extension().is_some() {
+            flags.insert("file".to_string(), p.clone());
+        } else {
+            flags.insert("model".to_string(), p.clone());
+        }
+    }
+    let source = source_from_flags(&flags, DType::I8)?;
+    let budget: Option<usize> = num_flag(&flags, "budget")?;
+    let board = match flags.get("board") {
+        None => &NUCLEO_F767ZI,
+        Some(name) => mcu_reorder::mcu::boards::by_name(name).ok_or_else(|| {
+            usage(format!("unknown board {name:?} (see `mcu-reorder sweep` for the list)"))
+        })?,
+    };
+    let split = if flags.contains_key("reorder-only") {
+        None
+    } else {
+        Some(
+            mcu_reorder::split::SplitOptions {
+                sram_budget: budget,
+                elide: !flags.contains_key("no-elide"),
+                ..Default::default()
+            }
+            .with_threads(threads_flag(&flags)?),
+        )
+    };
+    let report = api::OptimizeRequest {
+        source,
+        budget,
+        board,
+        split,
+        compare_materialized: false,
+        trace: false,
+    }
+    .run()?;
+    // run() already refuses to return an unverified report; certify again
+    // here to obtain the certificate object itself — the CLI's output is
+    // the proof, not just the plan.
+    let cert = mcu_reorder::verify::certify_report(&report).map_err(|e| anyhow!("{e}"))?;
+
+    if let Some(exported_path) = path_flag(&flags, "reordered", "--reordered")? {
+        let src = report
+            .tflite
+            .as_ref()
+            .ok_or_else(|| usage("--reordered needs a .tflite source model"))?;
+        let exported = mcu_reorder::tflite::read_model(exported_path)?;
+        let perm = mcu_reorder::verify::verify_export(&src.model, &exported)
+            .map_err(|e| anyhow!("{exported_path}: {e}"))?;
+        println!(
+            "export ok: {exported_path} is a pure operator permutation of the source \
+             ({} operators, buffers byte-identical)",
+            perm.len()
+        );
+    }
+
+    match json_mode(&flags) {
+        None => print!("{}", cert.render()),
+        Some(dest) => emit_json(&cert.to_json(), dest)?,
+    }
+    Ok(())
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     if args.is_empty() {
@@ -899,6 +1023,7 @@ fn main() {
         "import" => cmd_import(&pos, &flags),
         "optimize" => cmd_optimize(&pos, &flags),
         "trace" => cmd_trace(&pos, &flags),
+        "verify" => cmd_verify(&pos, &flags),
         "split" => cmd_split(&flags),
         "export" => cmd_export(&flags),
         "run" => cmd_run(&flags),
@@ -912,10 +1037,13 @@ fn main() {
             print!("{USAGE}");
             Ok(())
         }
-        other => Err(anyhow!("unknown command {other:?}\n{USAGE}")),
+        other => Err(usage(format!("unknown command {other:?}\n{USAGE}"))),
     };
     if let Err(e) = result {
-        eprintln!("error: {e:#}");
-        std::process::exit(1);
+        // Uniform failure contract: one line on stderr, exit 2 for usage
+        // errors, exit 1 for everything else (I/O, planning, verification).
+        let msg = format!("{e:#}");
+        eprintln!("error: {msg}");
+        std::process::exit(if msg.starts_with(USAGE_PREFIX) { 2 } else { 1 });
     }
 }

@@ -28,6 +28,11 @@
 //! sharing through [`crate::sched::elided_accumulators`]; the interpreter
 //! reuses the accumulator's arena handle, so the measured peak matches
 //! the analytic one byte-exactly.
+//!
+//! Every rewrite this module emits is independently re-proven by
+//! [`crate::verify::verify_split`] — band tiling, halo/receptive-field
+//! coverage and weight partitions re-derived from the graph pair alone,
+//! with none of this module's geometry code.
 
 use super::band::{in_band, pad_eff, partition, slice_geom, Band, SliceGeom};
 use super::SplitError;

@@ -6,6 +6,10 @@
 //! reserializing. Everything else — tensors, quantization, and above all
 //! the weight buffers — is written back from the parsed [`Model`]
 //! verbatim, so buffer payloads are byte-identical across the rewrite.
+//! That invariant is proven, not assumed: [`crate::verify::verify_export`]
+//! independently checks any exported file against its source (operator
+//! permutation only, buffers byte-identical), and
+//! `mcu-reorder verify --reordered` exposes the proof on the CLI.
 
 use super::schema::Model;
 

@@ -114,6 +114,10 @@ pub enum Event {
     /// A plan request shed by admission control (`depth` = queue depth at
     /// rejection time).
     PlanShed { depth: usize },
+    /// The independent static verifier ([`crate::verify`]) certified a
+    /// plan: `checks` property families examined, `peak_bytes` the peak it
+    /// recomputed through its own interval engine.
+    Verify { model: String, checks: usize, peak_bytes: usize, ok: bool },
 }
 
 impl Event {
@@ -133,6 +137,7 @@ impl Event {
             Event::PlanCacheLookup { .. } => "plan_cache",
             Event::PlanCacheEvict { .. } => "plan_evict",
             Event::PlanShed { .. } => "plan_shed",
+            Event::Verify { .. } => "verify",
         }
     }
 
@@ -253,6 +258,12 @@ impl Event {
                 ("board", Json::Str(board.clone())),
             ]),
             Event::PlanShed { depth } => fields.extend([("depth", num(*depth))]),
+            Event::Verify { model, checks, peak_bytes, ok } => fields.extend([
+                ("model", Json::Str(model.clone())),
+                ("checks", num(*checks)),
+                ("peak_bytes", num(*peak_bytes)),
+                ("ok", Json::Bool(*ok)),
+            ]),
         }
         Json::obj(fields)
     }

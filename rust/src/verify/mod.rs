@@ -1,0 +1,1248 @@
+//! Proof-carrying plans: an independent static verifier for schedules,
+//! arenas, split rewrites and exported flatbuffers.
+//!
+//! Every claim the planning pipeline makes — "this order fits the budget",
+//! "these slots never collide", "these slices reassemble the tensor" — is
+//! backed, everywhere else in the crate, by the same accounting code that
+//! produced the plan. On a microcontroller an aliasing or halo bug is not
+//! a test failure, it is silent memory corruption; a deployable artifact
+//! needs a checker that shares no code with the planner. This module is
+//! that checker: it re-derives tensor lifetimes, residency, storage
+//! sharing, band geometry and quantization flow **from the graph alone**,
+//! with its own interval arithmetic, and never calls into
+//! [`crate::sched`]'s simulation ([`crate::sched::simulate`] /
+//! [`crate::sched::peak_of`] / [`crate::sched::elided_accumulators`]) or
+//! [`crate::alloc`]'s lifetime/overlap accounting
+//! ([`crate::alloc::StaticPlan::check_no_overlap`]). Plans constructed by
+//! those modules are *inputs* here, never oracles.
+//!
+//! Five property families are proven into a [`PlanCertificate`]:
+//!
+//! 1. **Schedule legality** — the execution order is a permutation and a
+//!    topological sort; every tensor's lifetime interval is consistent
+//!    with its producer and consumers; the peak the planner claims equals
+//!    the peak recomputed here.
+//! 2. **Arena soundness** — every placed slot is in-bounds; no two
+//!    simultaneously-live slots overlap; buffer aliasing is permitted
+//!    only along `PartialInto` accumulator chains whose write bands are
+//!    pairwise disjoint.
+//! 3. **Split-rewrite soundness** — per-axis bands exactly tile the
+//!    original tensor (no gap, no double-cover); halo slabs cover exactly
+//!    the receptive field of their band intersected with the real input;
+//!    channel/feature splits stay within the weight partition.
+//! 4. **Quant/domain consistency** — the importer's int8 qparams flow
+//!    rules (domain-preserving kernels keep their input's quantization,
+//!    softmax writes scale 1/256 zp −128, scales finite and positive)
+//!    re-checked on the (possibly rewritten) graph.
+//! 5. **Export invariants** — the embedded operator order is a bijection
+//!    onto the file's operators, and an exported flatbuffer differs from
+//!    its source by an operator permutation only (buffers byte-identical).
+//!
+//! Rejections carry a distinct `family/code` pair plus a precise message,
+//! exercised corruption-by-corruption in `rust/tests/integration_verify.rs`.
+
+use std::collections::HashMap;
+
+use crate::alloc::StaticPlan;
+use crate::graph::{axis_dim_of, Graph, Op, OpId, OpKind, Padding, SplitAxis, TensorId};
+use crate::interp::quant::QuantParams;
+use crate::tflite::Model;
+use crate::util::json::Json;
+
+/// A verification failure: which property family failed, a stable
+/// machine-readable code (one per corruption class), and a precise
+/// human-readable diagnostic.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct VerifyError {
+    pub family: &'static str,
+    pub code: &'static str,
+    pub msg: String,
+}
+
+impl std::fmt::Display for VerifyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "plan verification failed [{}/{}]: {}", self.family, self.code, self.msg)
+    }
+}
+
+impl std::error::Error for VerifyError {}
+
+fn fail(family: &'static str, code: &'static str, msg: impl Into<String>) -> VerifyError {
+    VerifyError { family, code, msg: msg.into() }
+}
+
+/// One passed (or skipped) property family in a certificate.
+#[derive(Clone, Debug)]
+pub struct Check {
+    pub family: &'static str,
+    /// `"ok"` or `"skipped"` (a family that does not apply to this
+    /// artifact — e.g. no split plan, no quantization).
+    pub status: &'static str,
+    pub detail: String,
+}
+
+impl Check {
+    fn ok(family: &'static str, detail: impl Into<String>) -> Check {
+        Check { family, status: "ok", detail: detail.into() }
+    }
+
+    fn skipped(family: &'static str, detail: impl Into<String>) -> Check {
+        Check { family, status: "skipped", detail: detail.into() }
+    }
+}
+
+/// The proof object: everything the verifier established about a plan.
+/// Serialized (deterministically) next to the plan it certifies.
+#[derive(Clone, Debug)]
+pub struct PlanCertificate {
+    pub model: String,
+    pub content_hash: u64,
+    pub n_ops: usize,
+    pub n_tensors: usize,
+    /// The best execution order that was verified (split schedule when a
+    /// split plan was checked, the reorder-only optimum otherwise).
+    pub order: Vec<OpId>,
+    /// Peak working set of that order, recomputed independently here.
+    pub peak_bytes: usize,
+    /// Best-fit arena the verified placement needs.
+    pub arena_bytes: usize,
+    pub checks: Vec<Check>,
+}
+
+impl PlanCertificate {
+    /// Deterministic JSON encoding (BTreeMap-backed object keys).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::Str(self.model.clone())),
+            ("content_hash", Json::Str(format!("{:016x}", self.content_hash))),
+            ("n_ops", Json::Num(self.n_ops as f64)),
+            ("n_tensors", Json::Num(self.n_tensors as f64)),
+            ("order", Json::arr_usize(&self.order)),
+            ("peak_bytes", Json::Num(self.peak_bytes as f64)),
+            ("arena_bytes", Json::Num(self.arena_bytes as f64)),
+            ("verified", Json::Bool(true)),
+            (
+                "checks",
+                Json::Arr(
+                    self.checks
+                        .iter()
+                        .map(|c| {
+                            Json::obj(vec![
+                                ("family", Json::Str(c.family.to_string())),
+                                ("status", Json::Str(c.status.to_string())),
+                                ("detail", Json::Str(c.detail.clone())),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Human rendering for the `verify` CLI.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "verified: {} (hash {:016x}, {} ops, {} tensors)\n",
+            self.model, self.content_hash, self.n_ops, self.n_tensors
+        ));
+        out.push_str(&format!(
+            "peak {} B (recomputed independently), best-fit arena {} B\n",
+            self.peak_bytes, self.arena_bytes
+        ));
+        for c in &self.checks {
+            out.push_str(&format!("  {:<9} {:<8} {}\n", c.family, c.status, c.detail));
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Family 1: schedule legality (own interval/lifetime engine).
+// ---------------------------------------------------------------------------
+
+/// Independently derived facts about one `(graph, order)` pair: step
+/// positions, lifetime intervals, storage-sharing roots and the peak.
+/// This is the verifier's own computation — intentionally parallel to,
+/// and sharing nothing with, `sched::simulate`/`alloc::plan_lifetimes`.
+pub struct ScheduleFacts {
+    /// `pos[op]` — the step at which `op` executes.
+    pub pos: Vec<usize>,
+    /// First step (inclusive) each tensor occupies SRAM.
+    pub start: Vec<usize>,
+    /// Last step (inclusive) each tensor occupies SRAM.
+    pub end: Vec<usize>,
+    /// Activation tensors that occupy SRAM at all (weights are
+    /// flash-resident and never counted).
+    pub counted: Vec<bool>,
+    /// Storage-sharing representative: tensors along a `PartialInto`
+    /// accumulator chain share one buffer and resolve to one root.
+    pub root: Vec<TensorId>,
+    /// Peak working set over all steps, from the interval model.
+    pub peak_bytes: usize,
+}
+
+impl ScheduleFacts {
+    /// Resolve a tensor to its storage-sharing root.
+    pub fn find(&self, mut t: TensorId) -> TensorId {
+        while self.root[t] != t {
+            t = self.root[t];
+        }
+        t
+    }
+}
+
+/// The verifier's own accumulator-eligibility rule (mirrors the written
+/// contract of the scheduler, re-derived from the graph): a `PartialInto`
+/// writes through its second input's buffer iff that tensor is consumed
+/// exactly once as an activation input, is not a graph output, and has
+/// the same byte size as the op's output.
+fn accumulator_of(g: &Graph, op: &Op) -> Option<TensorId> {
+    if !matches!(op.kind, OpKind::PartialInto { .. }) {
+        return None;
+    }
+    let acc = *op.inputs.get(1)?;
+    let reads =
+        g.tensors[acc].consumers.iter().filter(|&&c| g.ops[c].inputs.contains(&acc)).count();
+    let same_bytes = g.tensors[acc].bytes() == g.tensors[op.output].bytes();
+    (reads == 1 && !g.outputs.contains(&acc) && same_bytes).then_some(acc)
+}
+
+/// Prove that `order` is a legal schedule of `g` and derive lifetime
+/// facts: a permutation of the ops, topologically sorted, with every
+/// tensor's interval spanning producer → last consumer (graph inputs from
+/// step 0, graph outputs to the final step).
+pub fn verify_schedule(g: &Graph, order: &[OpId]) -> Result<ScheduleFacts, VerifyError> {
+    const FAM: &str = "schedule";
+    let n = g.ops.len();
+    if order.len() != n {
+        return Err(fail(
+            FAM,
+            "order-length",
+            format!("order has {} entries but the graph has {} ops", order.len(), n),
+        ));
+    }
+    let mut pos = vec![usize::MAX; n];
+    for (p, &o) in order.iter().enumerate() {
+        if o >= n {
+            return Err(fail(FAM, "order-out-of-range", format!("op id {o} out of range (ops 0..{n})")));
+        }
+        if pos[o] != usize::MAX {
+            return Err(fail(
+                FAM,
+                "order-duplicate",
+                format!("op {} ({o}) appears at steps {} and {p}", g.ops[o].name, pos[o]),
+            ));
+        }
+        pos[o] = p;
+    }
+    for (p, &o) in order.iter().enumerate() {
+        let op = &g.ops[o];
+        for &t in op.inputs.iter().chain(&op.weights) {
+            if let Some(prod) = g.tensors[t].producer {
+                if pos[prod] > p {
+                    return Err(fail(
+                        FAM,
+                        "order-not-topological",
+                        format!(
+                            "op {} (step {p}) reads {} before its producer {} runs (step {})",
+                            op.name, g.tensors[t].name, g.ops[prod].name, pos[prod]
+                        ),
+                    ));
+                }
+            }
+        }
+    }
+
+    // Storage-sharing roots along accumulator chains, walked in schedule
+    // order so every chain resolves forward to its first buffer.
+    let mut root: Vec<TensorId> = (0..g.tensors.len()).collect();
+    let find = |root: &[TensorId], mut t: TensorId| {
+        while root[t] != t {
+            t = root[t];
+        }
+        t
+    };
+    for &o in order {
+        if let Some(acc) = accumulator_of(g, &g.ops[o]) {
+            root[g.ops[o].output] = find(&root, acc);
+        }
+    }
+
+    // Lifetime intervals (inclusive): producer step (or 0 for graph
+    // inputs) → last activation consumer (or the final step for outputs).
+    let mut start = vec![0usize; g.tensors.len()];
+    let mut end = vec![0usize; g.tensors.len()];
+    let mut counted = vec![false; g.tensors.len()];
+    for t in &g.tensors {
+        if t.is_weight {
+            continue;
+        }
+        let is_input = g.inputs.contains(&t.id);
+        let s = match t.producer {
+            Some(p) => pos[p],
+            None if is_input => 0,
+            None => continue, // dangling activation: unreachable in a validated graph
+        };
+        let mut e = s;
+        for &c in &t.consumers {
+            if g.ops[c].inputs.contains(&t.id) {
+                e = e.max(pos[c]);
+            }
+        }
+        if g.outputs.contains(&t.id) {
+            e = n.saturating_sub(1);
+        }
+        counted[t.id] = true;
+        start[t.id] = if is_input { 0 } else { s };
+        end[t.id] = e;
+    }
+
+    // Peak: one contribution per storage group (chains share a buffer),
+    // over the union of member intervals, via a step-indexed diff array.
+    let mut groups: HashMap<TensorId, (usize, usize, usize)> = HashMap::new();
+    for t in 0..g.tensors.len() {
+        if !counted[t] {
+            continue;
+        }
+        let r = find(&root, t);
+        let bytes = g.tensors[r].bytes();
+        let e = groups.entry(r).or_insert((bytes, start[t], end[t]));
+        e.1 = e.1.min(start[t]);
+        e.2 = e.2.max(end[t]);
+    }
+    let mut delta = vec![0i64; n + 1];
+    for (bytes, s, e) in groups.values() {
+        delta[*s] += *bytes as i64;
+        delta[e + 1] -= *bytes as i64;
+    }
+    let mut cur = 0i64;
+    let mut peak = 0i64;
+    for d in &delta[..n] {
+        cur += d;
+        peak = peak.max(cur);
+    }
+
+    Ok(ScheduleFacts { pos, start, end, counted, root, peak_bytes: peak as usize })
+}
+
+/// Prove a claimed peak equals the independently recomputed one.
+pub fn verify_peak(
+    g: &Graph,
+    order: &[OpId],
+    claimed: usize,
+    what: &str,
+) -> Result<ScheduleFacts, VerifyError> {
+    let facts = verify_schedule(g, order)?;
+    if facts.peak_bytes != claimed {
+        return Err(fail(
+            "schedule",
+            "peak-mismatch",
+            format!(
+                "{what}: planner claims a {claimed} B peak but the verifier recomputes {} B",
+                facts.peak_bytes
+            ),
+        ));
+    }
+    Ok(facts)
+}
+
+// ---------------------------------------------------------------------------
+// Family 2: arena soundness.
+// ---------------------------------------------------------------------------
+
+/// Prove a static placement sound against independently derived lifetimes:
+/// every counted tensor has an in-bounds slot, simultaneously-live slots
+/// never overlap, and aliasing is permitted only along accumulator chains
+/// with pairwise-disjoint write bands.
+pub fn verify_arena(
+    g: &Graph,
+    facts: &ScheduleFacts,
+    plan: &StaticPlan,
+) -> Result<(), VerifyError> {
+    const FAM: &str = "arena";
+    let live: Vec<TensorId> = (0..g.tensors.len()).filter(|&t| facts.counted[t]).collect();
+    for &t in &live {
+        let Some(&off) = plan.offsets.get(&t) else {
+            return Err(fail(
+                FAM,
+                "slot-missing",
+                format!("tensor {} has no slot in the {} plan", g.tensors[t].name, plan.strategy),
+            ));
+        };
+        let bytes = g.tensors[t].bytes();
+        if off + bytes > plan.arena_bytes {
+            return Err(fail(
+                FAM,
+                "slot-out-of-bounds",
+                format!(
+                    "tensor {} at [{off}, {}) exceeds the {} B arena",
+                    g.tensors[t].name,
+                    off + bytes,
+                    plan.arena_bytes
+                ),
+            ));
+        }
+    }
+    for (i, &a) in live.iter().enumerate() {
+        for &b in &live[i + 1..] {
+            let time = facts.start[a] <= facts.end[b] && facts.start[b] <= facts.end[a];
+            if !time {
+                continue;
+            }
+            let (oa, ob) = (plan.offsets[&a], plan.offsets[&b]);
+            let (ba, bb) = (g.tensors[a].bytes(), g.tensors[b].bytes());
+            let space = oa < ob + bb && ob < oa + ba;
+            if !space {
+                continue;
+            }
+            let (na, nb) = (&g.tensors[a].name, &g.tensors[b].name);
+            if facts.find(a) == facts.find(b) {
+                if oa != ob || ba != bb {
+                    return Err(fail(
+                        FAM,
+                        "alias-misaligned",
+                        format!(
+                            "chain-sharing tensors {na} and {nb} alias partially \
+                             ([{oa}, {}) vs [{ob}, {})) — a shared buffer must coincide exactly",
+                            oa + ba,
+                            ob + bb
+                        ),
+                    ));
+                }
+            } else if oa == ob && ba == bb {
+                return Err(fail(
+                    FAM,
+                    "alias-without-chain",
+                    format!(
+                        "tensors {na} and {nb} share slot [{oa}, {}) while both live \
+                         (steps {}..={} vs {}..={}) but are not on an accumulator chain",
+                        oa + ba,
+                        facts.start[a],
+                        facts.end[a],
+                        facts.start[b],
+                        facts.end[b]
+                    ),
+                ));
+            } else {
+                return Err(fail(
+                    FAM,
+                    "slot-overlap",
+                    format!(
+                        "slots [{oa}, {}) ({na}) and [{ob}, {}) ({nb}) overlap while both \
+                         live (steps {}..={} vs {}..={})",
+                        oa + ba,
+                        ob + bb,
+                        facts.start[a],
+                        facts.end[a],
+                        facts.start[b],
+                        facts.end[b]
+                    ),
+                ));
+            }
+        }
+    }
+
+    // Aliasing legality along chains: every writer into a shared buffer
+    // must band a distinct, disjoint region along one axis.
+    let mut chains: HashMap<TensorId, Vec<(&Op, SplitAxis, usize, usize)>> = HashMap::new();
+    for op in &g.ops {
+        if let OpKind::PartialInto { axis, offset, len, .. } = op.kind {
+            // Group writers by storage root: a non-sharing PartialInto is
+            // its own root (group of one, skipped below), so only genuine
+            // chains are band-checked.
+            chains.entry(facts.find(op.output)).or_default().push((op, axis, offset, len));
+        }
+    }
+    for (r, mut writers) in chains {
+        if writers.len() < 2 {
+            continue;
+        }
+        let axis = writers[0].1;
+        if writers.iter().any(|w| w.1 != axis) {
+            return Err(fail(
+                "arena",
+                "alias-band-overlap",
+                format!(
+                    "accumulator chain rooted at {} mixes write axes — bands are not comparable",
+                    g.tensors[r].name
+                ),
+            ));
+        }
+        writers.sort_by_key(|w| w.2);
+        for pair in writers.windows(2) {
+            let (pa, pb) = (&pair[0], &pair[1]);
+            if pa.2 + pa.3 > pb.2 {
+                return Err(fail(
+                    "arena",
+                    "alias-band-overlap",
+                    format!(
+                        "chain writers {} ([{}, {})) and {} ([{}, {})) write overlapping \
+                         bands of one shared buffer",
+                        pa.0.name,
+                        pa.2,
+                        pa.2 + pa.3,
+                        pb.0.name,
+                        pb.2,
+                        pb.2 + pb.3
+                    ),
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Family 3: split-rewrite soundness.
+// ---------------------------------------------------------------------------
+
+/// The verifier's own tap geometry. `Same` padding recomputed from the
+/// full (unsplit) extents exactly as a framework defines it.
+fn leading_pad(n_in: usize, k: usize, stride: usize, padding: Padding, n_out: usize) -> usize {
+    match padding {
+        Padding::Valid => 0,
+        Padding::Same => ((n_out - 1) * stride + k).saturating_sub(n_in) / 2,
+    }
+}
+
+fn extent(shape: &[usize], axis: SplitAxis) -> usize {
+    shape[axis_dim_of(shape, axis)]
+}
+
+/// Prove a split/elided rewrite sound against the graph it was derived
+/// from: bands tile exactly, halo slabs cover the receptive field of
+/// their band, slab shapes and weight partitions agree with provenance.
+pub fn verify_split(
+    original: &Graph,
+    g: &Graph,
+    sources: &[TensorId],
+) -> Result<(), VerifyError> {
+    const FAM: &str = "split";
+    if sources.len() != g.tensors.len() {
+        return Err(fail(
+            FAM,
+            "provenance-length",
+            format!("{} provenance entries for {} tensors", sources.len(), g.tensors.len()),
+        ));
+    }
+    for (t, &src) in sources.iter().enumerate() {
+        if src >= original.tensors.len() {
+            return Err(fail(
+                FAM,
+                "provenance-length",
+                format!("tensor {} maps to out-of-range source {src}", g.tensors[t].name),
+            ));
+        }
+    }
+
+    // Write-through bands, grouped by the original tensor they tile.
+    let mut into_bands: HashMap<TensorId, Vec<(&Op, SplitAxis, usize, usize)>> = HashMap::new();
+    for op in &g.ops {
+        match &op.kind {
+            OpKind::Partial { inner, axis, pad, offset } => {
+                let len = extent(&g.tensors[op.output].shape, *axis);
+                check_slab_shape(original, g, sources, op, *axis, Some(len))?;
+                check_slice_geometry(original, g, sources, op, inner, *axis, *pad, *offset, len)?;
+            }
+            OpKind::PartialInto { inner, axis, pad, offset, len } => {
+                check_slab_shape(original, g, sources, op, *axis, None)?;
+                check_slice_geometry(original, g, sources, op, inner, *axis, *pad, *offset, *len)?;
+                into_bands
+                    .entry(sources[op.output])
+                    .or_default()
+                    .push((op, *axis, *offset, *len));
+            }
+            OpKind::ConcatSlices { axis } => {
+                let join = &g.tensors[op.output];
+                let want = extent(&join.shape, *axis);
+                let d = axis_dim_of(&join.shape, *axis);
+                let mut covered = 0usize;
+                for &s in &op.inputs {
+                    let slab = &g.tensors[s];
+                    if slab.shape.len() != join.shape.len()
+                        || slab
+                            .shape
+                            .iter()
+                            .enumerate()
+                            .any(|(i, &v)| i != d && v != join.shape[i])
+                    {
+                        return Err(fail(
+                            FAM,
+                            "concat-cover",
+                            format!(
+                                "slab {} shape {:?} does not band join {} shape {:?} along {}",
+                                slab.name,
+                                slab.shape,
+                                join.name,
+                                join.shape,
+                                axis.name()
+                            ),
+                        ));
+                    }
+                    covered += slab.shape[d];
+                }
+                if covered != want {
+                    return Err(fail(
+                        FAM,
+                        "concat-cover",
+                        format!(
+                            "slabs of {} cover {covered} of {want} {} — the join does not \
+                             reassemble the tensor",
+                            join.name,
+                            axis.name()
+                        ),
+                    ));
+                }
+            }
+            _ => {}
+        }
+    }
+
+    // Each chain of write-through slices must tile its original tensor
+    // exactly: start at 0, contiguous, end at the full extent.
+    for (src, mut bands) in into_bands {
+        let axis = bands[0].1;
+        let want = extent(&original.tensors[src].shape, axis);
+        bands.sort_by_key(|b| b.2);
+        let mut at = 0usize;
+        for (op, _, offset, len) in &bands {
+            if *offset > at {
+                return Err(fail(
+                    FAM,
+                    "band-gap",
+                    format!(
+                        "write-through bands of {} leave [{at}, {offset}) uncovered \
+                         (next writer {})",
+                        original.tensors[src].name, op.name
+                    ),
+                ));
+            }
+            if *offset < at {
+                return Err(fail(
+                    FAM,
+                    "band-overlap",
+                    format!(
+                        "write-through band [{offset}, {}) of {} double-covers [{offset}, {at}) \
+                         of {}",
+                        offset + len,
+                        op.name,
+                        original.tensors[src].name
+                    ),
+                ));
+            }
+            at = offset + len;
+        }
+        if at != want {
+            return Err(fail(
+                FAM,
+                "band-extent",
+                format!(
+                    "write-through bands of {} cover {at} of {want} {}",
+                    original.tensors[src].name,
+                    axis.name()
+                ),
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Slab shapes must band their source: a `Partial` output is the source
+/// shape with the axis dim replaced by the band length; a `PartialInto`
+/// output carries the source's full shape (it *is* the shared buffer).
+fn check_slab_shape(
+    original: &Graph,
+    g: &Graph,
+    sources: &[TensorId],
+    op: &Op,
+    axis: SplitAxis,
+    band_len: Option<usize>,
+) -> Result<(), VerifyError> {
+    let out = &g.tensors[op.output];
+    let src = &original.tensors[sources[op.output]];
+    let mut want = src.shape.clone();
+    if let Some(len) = band_len {
+        let d = axis_dim_of(&want, axis);
+        want[d] = len;
+    }
+    if out.shape != want || out.dtype != src.dtype {
+        return Err(fail(
+            "split",
+            "slab-shape",
+            format!(
+                "slice {} output {} has shape {:?} ({}), want {:?} ({}) from source {}",
+                op.name,
+                out.name,
+                out.shape,
+                out.dtype.name(),
+                want,
+                src.dtype.name(),
+                src.name
+            ),
+        ));
+    }
+    Ok(())
+}
+
+/// Halo/receptive-field soundness of one slice op: the input slab it
+/// reads must hold exactly the real elements its output band taps, and
+/// the recorded effective padding must place the slab correctly within
+/// the full input.
+#[allow(clippy::too_many_arguments)]
+fn check_slice_geometry(
+    original: &Graph,
+    g: &Graph,
+    sources: &[TensorId],
+    op: &Op,
+    inner: &OpKind,
+    axis: SplitAxis,
+    pad_rec: isize,
+    offset: usize,
+    len: usize,
+) -> Result<(), VerifyError> {
+    const FAM: &str = "split";
+    let in_slab = &g.tensors[op.inputs[0]];
+    let in_full = &original.tensors[sources[op.inputs[0]]];
+    let out_full = &original.tensors[sources[op.output]];
+    let slab_len = extent(&in_slab.shape, axis);
+    let n_in = extent(&in_full.shape, axis);
+    let n_out = extent(&out_full.shape, axis);
+
+    if offset + len > n_out {
+        return Err(fail(
+            FAM,
+            "band-extent",
+            format!(
+                "slice {} band [{offset}, {}) exceeds the {n_out} output {} of {}",
+                op.name,
+                offset + len,
+                axis.name(),
+                out_full.name
+            ),
+        ));
+    }
+
+    if axis == SplitAxis::Channels {
+        return match inner {
+            // Projection heads read the full input and band the weight
+            // columns; the band must stay within the weight partition.
+            OpKind::Conv2D { .. } | OpKind::Dense { .. } => {
+                if slab_len != n_in || pad_rec != 0 {
+                    return Err(fail(
+                        FAM,
+                        "halo-mismatch",
+                        format!(
+                            "channel projection {} must read its full input ({n_in} channels, \
+                             pad 0) but reads {slab_len} with pad {pad_rec}",
+                            op.name
+                        ),
+                    ));
+                }
+                let w = op.weights.first().map(|&w| &g.tensors[w]);
+                if let Some(w) = w {
+                    let cout = *w.shape.last().unwrap_or(&0);
+                    if offset + len > cout {
+                        return Err(fail(
+                            FAM,
+                            "weight-partition",
+                            format!(
+                                "slice {} selects weight columns [{offset}, {}) of {} but {} \
+                                 has only {cout}",
+                                op.name,
+                                offset + len,
+                                w.name,
+                                w.name
+                            ),
+                        ));
+                    }
+                }
+                Ok(())
+            }
+            // Channel-parallel ops map a channel band 1:1; no halo.
+            OpKind::DepthwiseConv2D { .. }
+            | OpKind::MaxPool2D { .. }
+            | OpKind::AvgPool2D { .. }
+            | OpKind::Relu
+            | OpKind::Relu6
+            | OpKind::BatchNorm { .. } => {
+                if slab_len != len || pad_rec != 0 {
+                    return Err(fail(
+                        FAM,
+                        "halo-mismatch",
+                        format!(
+                            "channel-parallel slice {} writes {len} channels but reads \
+                             {slab_len} (pad {pad_rec}); channel bands map 1:1",
+                            op.name
+                        ),
+                    ));
+                }
+                Ok(())
+            }
+            other => Err(fail(
+                FAM,
+                "slice-kind",
+                format!("op {} ({}) cannot be sliced along channels", op.name, other.name()),
+            )),
+        };
+    }
+
+    match inner {
+        OpKind::Conv2D { kernel, stride, padding, .. }
+        | OpKind::DepthwiseConv2D { kernel, stride, padding, .. }
+        | OpKind::MaxPool2D { kernel, stride, padding }
+        | OpKind::AvgPool2D { kernel, stride, padding } => {
+            let pick = |p: (usize, usize)| if axis == SplitAxis::Rows { p.0 } else { p.1 };
+            let (k, s) = (pick(*kernel), pick(*stride));
+            let pad_full = leading_pad(n_in, k, s, *padding, n_out) as isize;
+            // The effective padding encodes where the slab starts in the
+            // full input: pad_rec = pad_full + in_start − offset·stride.
+            let in_start = pad_rec - pad_full + (offset * s) as isize;
+            let in_end = in_start + slab_len as isize;
+            // Taps of the band, clamped to the real input: everything the
+            // full operator would read outside [0, n_in) is zero padding.
+            let lo = ((offset * s) as isize - pad_full).clamp(0, n_in as isize);
+            let hi = (((offset + len - 1) * s + k) as isize - pad_full).clamp(0, n_in as isize);
+            if in_start < 0 || in_end > n_in as isize || lo < in_start || hi > in_end {
+                return Err(fail(
+                    FAM,
+                    "halo-mismatch",
+                    format!(
+                        "slice {} band [{offset}, {}) needs input rows [{lo}, {hi}) of {} \
+                         but its slab holds [{in_start}, {in_end}) (pad {pad_rec}, \
+                         full-geometry pad {pad_full})",
+                        op.name,
+                        offset + len,
+                        in_full.name
+                    ),
+                ));
+            }
+            Ok(())
+        }
+        OpKind::Relu | OpKind::Relu6 | OpKind::BatchNorm { .. } => {
+            if pad_rec != 0 || slab_len != len {
+                return Err(fail(
+                    FAM,
+                    "halo-mismatch",
+                    format!(
+                        "pointwise slice {} writes {len} {} but reads {slab_len} (pad \
+                         {pad_rec}); pointwise bands map 1:1",
+                        op.name,
+                        axis.name()
+                    ),
+                ));
+            }
+            Ok(())
+        }
+        other => Err(fail(
+            FAM,
+            "slice-kind",
+            format!(
+                "op {} ({}) cannot be sliced along {}",
+                op.name,
+                other.name(),
+                axis.name()
+            ),
+        )),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Family 4: quant/domain consistency.
+// ---------------------------------------------------------------------------
+
+/// Re-check the importer's int8 quantization flow rules on a (possibly
+/// rewritten) graph: scales finite and positive, domain-preserving
+/// kernels keep their input's qparams, slices and joins share their
+/// source's domain, softmax writes the conventional i8 domain.
+pub fn verify_quant(
+    g: &Graph,
+    qparams: &HashMap<TensorId, QuantParams>,
+) -> Result<(), VerifyError> {
+    const FAM: &str = "quant";
+    if qparams.is_empty() {
+        return Ok(());
+    }
+    for (&t, q) in qparams {
+        if !(q.scale.is_finite() && q.scale > 0.0) {
+            return Err(fail(
+                FAM,
+                "qparams-scale",
+                format!(
+                    "tensor {} has a non-positive/non-finite scale {}",
+                    g.tensors.get(t).map(|t| t.name.as_str()).unwrap_or("?"),
+                    q.scale
+                ),
+            ));
+        }
+    }
+    let same = |a: TensorId, b: TensorId, what: &str| -> Result<(), VerifyError> {
+        match (qparams.get(&a), qparams.get(&b)) {
+            (Some(x), Some(y)) if x != y => Err(fail(
+                FAM,
+                "qparams-mismatch",
+                format!(
+                    "{what}: output {} (scale {}, zp {}) must keep the input {}'s domain \
+                     (scale {}, zp {})",
+                    g.tensors[b].name,
+                    y.scale,
+                    y.zero_point,
+                    g.tensors[a].name,
+                    x.scale,
+                    x.zero_point
+                ),
+            )),
+            (Some(_), None) | (None, Some(_)) => Err(fail(
+                FAM,
+                "qparams-missing",
+                format!(
+                    "{what}: one of {} / {} is quantized and the other is not",
+                    g.tensors[a].name, g.tensors[b].name
+                ),
+            )),
+            _ => Ok(()),
+        }
+    };
+    for op in &g.ops {
+        let inner = match &op.kind {
+            OpKind::Partial { inner, .. } | OpKind::PartialInto { inner, .. } => inner.as_ref(),
+            k => k,
+        };
+        match inner {
+            OpKind::MaxPool2D { .. } | OpKind::GlobalAvgPool | OpKind::Relu | OpKind::Relu6
+            | OpKind::Reshape => {
+                same(op.inputs[0], op.output, inner.name())?;
+            }
+            OpKind::Softmax => {
+                if g.tensors[op.output].dtype == crate::graph::DType::I8 {
+                    match qparams.get(&op.output) {
+                        Some(q) if (q.scale, q.zero_point) == (1.0 / 256.0, -128) => {}
+                        Some(q) => {
+                            return Err(fail(
+                                FAM,
+                                "qparams-softmax",
+                                format!(
+                                    "softmax {} output domain (scale {}, zp {}) must be \
+                                     scale 1/256, zp -128",
+                                    op.name, q.scale, q.zero_point
+                                ),
+                            ))
+                        }
+                        None => {
+                            return Err(fail(
+                                FAM,
+                                "qparams-missing",
+                                format!("i8 softmax {} output has no quantization", op.name),
+                            ))
+                        }
+                    }
+                }
+            }
+            _ => {}
+        }
+        // Slices of one tensor share one domain: a join reassembles its
+        // slabs bit-for-bit, and a write-through slice reuses its
+        // accumulator's buffer.
+        if let OpKind::ConcatSlices { .. } = op.kind {
+            for &s in &op.inputs {
+                same(s, op.output, "concat-slices")?;
+            }
+        }
+        if matches!(op.kind, OpKind::PartialInto { .. }) {
+            if let Some(&acc) = op.inputs.get(1) {
+                same(acc, op.output, "write-through slice")?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Compose a weight store's qparams onto a rewritten graph through its
+/// provenance map (slabs inherit the domain of the tensor they band).
+pub fn remap_qparams(
+    qparams: &HashMap<TensorId, QuantParams>,
+    sources: &[TensorId],
+) -> HashMap<TensorId, QuantParams> {
+    sources
+        .iter()
+        .enumerate()
+        .filter_map(|(t, src)| qparams.get(src).map(|q| (t, *q)))
+        .collect()
+}
+
+// ---------------------------------------------------------------------------
+// Family 5: export invariants.
+// ---------------------------------------------------------------------------
+
+/// Prove an embedded operator order is a bijection onto the file's
+/// operator vector (every operator scheduled exactly once).
+pub fn verify_operator_order(order: &[usize], n_operators: usize) -> Result<(), VerifyError> {
+    const FAM: &str = "export";
+    let mut seen = vec![false; n_operators];
+    for &i in order {
+        if i >= n_operators || seen[i] {
+            return Err(fail(
+                FAM,
+                "export-order-not-bijective",
+                format!(
+                    "embedded order of {} entries is not a bijection onto {n_operators} \
+                     operators (operator {i} {})",
+                    order.len(),
+                    if i >= n_operators { "out of range" } else { "scheduled twice" }
+                ),
+            ));
+        }
+        seen[i] = true;
+    }
+    if order.len() != n_operators {
+        return Err(fail(
+            FAM,
+            "export-order-not-bijective",
+            format!(
+                "embedded order schedules {} of {n_operators} operators",
+                order.len()
+            ),
+        ));
+    }
+    Ok(())
+}
+
+/// Prove an exported flatbuffer differs from its source by an operator
+/// permutation only. Returns the permutation (`exported[i]` is
+/// `original[perm[i]]`).
+pub fn verify_export(original: &Model, exported: &Model) -> Result<Vec<usize>, VerifyError> {
+    const FAM: &str = "export";
+    let (a, b) = (&original.subgraph.operators, &exported.subgraph.operators);
+    if a.len() != b.len() {
+        return Err(fail(
+            FAM,
+            "export-count",
+            format!("exported model has {} operators, source has {}", b.len(), a.len()),
+        ));
+    }
+    if exported.buffers != original.buffers {
+        let idx = exported
+            .buffers
+            .iter()
+            .zip(&original.buffers)
+            .position(|(x, y)| x != y)
+            .map_or("count".to_string(), |i| format!("buffer {i}"));
+        return Err(fail(
+            FAM,
+            "export-buffers-differ",
+            format!("exported buffers are not byte-identical to the source ({idx})"),
+        ));
+    }
+    if exported.subgraph.tensors != original.subgraph.tensors
+        || exported.operator_codes != original.operator_codes
+    {
+        return Err(fail(
+            FAM,
+            "export-tensors-differ",
+            "exported tensor/opcode tables differ from the source".to_string(),
+        ));
+    }
+    let mut used = vec![false; a.len()];
+    let mut perm = Vec::with_capacity(a.len());
+    for (i, op) in b.iter().enumerate() {
+        let Some(j) = (0..a.len()).find(|&j| !used[j] && a[j] == *op) else {
+            return Err(fail(
+                FAM,
+                "export-not-permutation",
+                format!(
+                    "exported operator {i} (opcode {}) matches no unused source operator — \
+                     the export is not a pure permutation",
+                    op.opcode_index
+                ),
+            ));
+        };
+        used[j] = true;
+        perm.push(j);
+    }
+    Ok(perm)
+}
+
+// ---------------------------------------------------------------------------
+// The full certificate over an OptimizeReport.
+// ---------------------------------------------------------------------------
+
+/// Certify every artifact an [`crate::api::OptimizeReport`] carries:
+/// schedule + peak for the default and reordered orders, a best-fit
+/// placement on the base graph, the split rewrite (schedule, placement,
+/// bands, halos) when one was planned, quantization flow when the model
+/// is quantized, and export-order bijectivity when it came from a
+/// flatbuffer. This runs on every `OptimizeRequest::run`, so no report —
+/// CLI, coordinator or API — is produced unverified.
+pub fn certify_report(report: &crate::api::OptimizeReport) -> Result<PlanCertificate, VerifyError> {
+    let g = &report.graph;
+    let mut checks = Vec::new();
+
+    // 1. Schedule legality, default + reordered, peaks recomputed.
+    let default_order =
+        report.embedded_order.clone().unwrap_or_else(|| g.default_order());
+    verify_peak(g, &default_order, report.default_peak, "default order")?;
+    let facts = verify_peak(g, &report.reordered.order, report.reordered.peak_bytes, "reordered")?;
+    checks.push(Check::ok(
+        "schedule",
+        format!(
+            "default + reordered orders are topological; peaks {} / {} B recomputed",
+            report.default_peak, report.reordered.peak_bytes
+        ),
+    ));
+
+    // 2. Arena soundness of a best-fit placement on the base graph.
+    let plan = StaticPlan::best_fit(g, &report.reordered.order);
+    verify_arena(g, &facts, &plan)?;
+    let mut arena_bytes = plan.arena_bytes;
+    let mut best_order = report.reordered.order.clone();
+    let mut best_peak = facts.peak_bytes;
+    checks.push(Check::ok(
+        "arena",
+        format!("best-fit placement of {} slots in {} B, no live overlap", plan.offsets.len(), plan.arena_bytes),
+    ));
+
+    // 3. Split-rewrite soundness (+ its own schedule/arena proofs).
+    match &report.split {
+        Some(s) => {
+            let sg = &s.outcome.graph;
+            let sfacts = verify_peak(
+                sg,
+                &s.outcome.schedule.order,
+                s.outcome.schedule.peak_bytes,
+                "split schedule",
+            )?;
+            let splan = StaticPlan::best_fit(sg, &s.outcome.schedule.order);
+            verify_arena(sg, &sfacts, &splan)?;
+            verify_split(g, sg, &s.outcome.sources)?;
+            arena_bytes = splan.arena_bytes;
+            best_order = s.outcome.schedule.order.clone();
+            best_peak = sfacts.peak_bytes;
+            checks.push(Check::ok(
+                "split",
+                format!(
+                    "{} segment step(s): bands tile, halos cover receptive fields, \
+                     split peak {} B recomputed",
+                    s.outcome.steps.len(),
+                    s.outcome.schedule.peak_bytes
+                ),
+            ));
+        }
+        None => checks.push(Check::skipped("split", "no split plan in this report")),
+    }
+
+    // 4. Quant/domain flow, on the base and the rewritten graph.
+    match &report.tflite {
+        Some(src) if !src.imported.weights.qparams.is_empty() => {
+            verify_quant(g, &src.imported.weights.qparams)?;
+            if let Some(s) = &report.split {
+                let remapped = remap_qparams(&src.imported.weights.qparams, &s.outcome.sources);
+                verify_quant(&s.outcome.graph, &remapped)?;
+            }
+            checks.push(Check::ok(
+                "quant",
+                format!(
+                    "{} quantized tensors: domain-preserving kernels, slices and joins \
+                     keep their source domain",
+                    src.imported.weights.qparams.len()
+                ),
+            ));
+        }
+        _ => checks.push(Check::skipped("quant", "model carries no quantization parameters")),
+    }
+
+    // 5. Export invariants: the reordered graph order must map onto the
+    // file's operators bijectively.
+    match &report.tflite {
+        Some(src) => {
+            let order = src.imported.operator_order(&report.reordered.order);
+            verify_operator_order(&order, src.model.subgraph.operators.len())?;
+            checks.push(Check::ok(
+                "export",
+                format!(
+                    "reordered order is a bijection onto {} file operators",
+                    src.model.subgraph.operators.len()
+                ),
+            ));
+        }
+        None => checks.push(Check::skipped("export", "not a .tflite source")),
+    }
+
+    Ok(PlanCertificate {
+        model: report.model.clone(),
+        content_hash: report.content_hash,
+        n_ops: g.n_ops(),
+        n_tensors: g.n_tensors(),
+        order: best_order,
+        peak_bytes: best_peak,
+        arena_bytes,
+        checks,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models;
+    use crate::sched;
+
+    /// The verifier's interval engine must agree with the scheduler's
+    /// working-set simulation on every zoo model and order — computed
+    /// through entirely separate code paths.
+    #[test]
+    fn interval_peaks_match_the_simulator_across_the_zoo() {
+        for name in models::MODEL_NAMES {
+            let g = models::by_name(name, crate::graph::DType::I8).unwrap();
+            for order in [g.default_order(), sched::optimal(&g).unwrap().0.order] {
+                let facts = verify_schedule(&g, &order).unwrap();
+                assert_eq!(
+                    facts.peak_bytes,
+                    sched::peak_of(&g, &order),
+                    "{name}: verifier disagrees with the simulator"
+                );
+            }
+        }
+    }
+
+    /// Figure-1 reference values, independently recomputed.
+    #[test]
+    fn figure1_reference_peaks() {
+        let g = models::figure1();
+        let d = verify_schedule(&g, &g.default_order()).unwrap();
+        assert_eq!(d.peak_bytes, 5216);
+        let (opt, _) = sched::optimal(&g).unwrap();
+        let o = verify_schedule(&g, &opt.order).unwrap();
+        assert_eq!(o.peak_bytes, 4960);
+    }
+
+    #[test]
+    fn elided_split_peaks_match_the_simulator() {
+        let g = models::streamnet(crate::graph::DType::I8);
+        let opts = crate::split::SplitOptions::quick();
+        let outcome = crate::split::optimize(&g, &opts).unwrap();
+        let facts = verify_schedule(&outcome.graph, &outcome.schedule.order).unwrap();
+        assert_eq!(facts.peak_bytes, outcome.schedule.peak_bytes);
+        verify_split(&g, &outcome.graph, &outcome.sources).unwrap();
+        let plan = StaticPlan::best_fit(&outcome.graph, &outcome.schedule.order);
+        verify_arena(&outcome.graph, &facts, &plan).unwrap();
+    }
+
+    #[test]
+    fn best_fit_placements_verify_across_the_zoo() {
+        for name in models::MODEL_NAMES {
+            let g = models::by_name(name, crate::graph::DType::I8).unwrap();
+            let (opt, _) = sched::optimal(&g).unwrap();
+            let facts = verify_schedule(&g, &opt.order).unwrap();
+            let plan = StaticPlan::best_fit(&g, &opt.order);
+            verify_arena(&g, &facts, &plan)
+                .unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+    }
+
+    #[test]
+    fn operator_order_bijection() {
+        verify_operator_order(&[2, 0, 1], 3).unwrap();
+        assert_eq!(verify_operator_order(&[0, 0, 1], 3).unwrap_err().code, "export-order-not-bijective");
+        assert_eq!(verify_operator_order(&[0, 1], 3).unwrap_err().code, "export-order-not-bijective");
+        assert_eq!(verify_operator_order(&[0, 1, 3], 3).unwrap_err().code, "export-order-not-bijective");
+    }
+}

@@ -1,0 +1,681 @@
+//! Integration: the independent static verifier (`verify`) against the
+//! whole optimize stack — the PR-9 proof-carrying-plans acceptance suite.
+//!
+//! Three claims are pinned here:
+//!
+//! 1. **Teeth** — a mutation harness applies deliberate corruptions to
+//!    schedules, arenas, split rewrites, quantization maps and exported
+//!    flatbuffers; every one must be *rejected*, each with its own
+//!    precise `family/code` diagnostic (no catch-all errors).
+//! 2. **No false alarms** — every plan the real pipeline produces (all
+//!    zoo models and the `cnn_int8.tflite` fixture, reorder-only /
+//!    materialized-split / elided-split, across all four boards)
+//!    verifies clean, and the recomputed peaks agree with the Python
+//!    exact-schedule mirror.
+//! 3. **Uniform CLI failure contract** — every subcommand exits 2 with
+//!    a one-line `usage error:` for bad invocations and 1 for runtime
+//!    or verification failures (golden-tested via `CARGO_BIN_EXE`).
+
+use std::collections::{HashMap, HashSet};
+use std::path::PathBuf;
+
+use mcu_reorder::alloc::StaticPlan;
+use mcu_reorder::api::{ModelSource, OptimizeRequest};
+use mcu_reorder::graph::{Act, DType, Graph, GraphBuilder, OpKind, Padding, SplitAxis};
+use mcu_reorder::interp::quant::QuantParams;
+use mcu_reorder::mcu::boards::ALL_BOARDS;
+use mcu_reorder::models;
+use mcu_reorder::sched;
+use mcu_reorder::split::{self, SegmentSplit, SplitOptions};
+use mcu_reorder::tflite::{self, fixtures};
+use mcu_reorder::trace::Event;
+use mcu_reorder::util::json::Json;
+use mcu_reorder::verify::{
+    certify_report, verify_arena, verify_export, verify_operator_order, verify_peak,
+    verify_quant, verify_schedule, verify_split,
+};
+
+fn run_cli(args: &[&str]) -> (i32, String, String) {
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_mcu-reorder"))
+        .args(args)
+        .output()
+        .expect("spawn mcu-reorder");
+    (
+        out.status.code().unwrap_or(-1),
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("mcu-reorder-verify-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn zoo(name: &str) -> ModelSource {
+    ModelSource::Zoo { name: name.to_string(), dtype: DType::I8 }
+}
+
+/// 9×9 conv→relu chain: factor-3 row bands are an even 3 rows each, so
+/// the rewrite's band offsets (0, 3, 6) are known in advance.
+fn conv_relu_chain() -> Graph {
+    let mut b = GraphBuilder::new("vchain");
+    let x = b.input("x", &[1, 9, 9, 2], DType::I8);
+    let c1 = b.conv2d("c1", x, 8, (3, 3), (1, 1), Padding::Same, Act::Linear);
+    let r1 = b.relu("r1", c1);
+    let gap = b.global_avgpool("gap", r1);
+    let fc = b.dense("fc", gap, 3, Act::Linear);
+    b.output(fc);
+    b.finish().unwrap()
+}
+
+fn split_chain(elide: bool, factor: usize, axis: SplitAxis) -> (Graph, split::SplitResult) {
+    let g = conv_relu_chain();
+    let seg = SegmentSplit {
+        ops: vec![g.op_by_name("c1").unwrap().id, g.op_by_name("r1").unwrap().id],
+        factor,
+        axis,
+        elide,
+    };
+    let res = split::apply_segment(&g, &seg).unwrap();
+    (g, res)
+}
+
+/// The `PartialInto` writer whose band starts at `offset`.
+fn writer_at(g: &Graph, want: usize) -> usize {
+    g.ops
+        .iter()
+        .find(|o| matches!(o.kind, OpKind::PartialInto { offset, .. } if offset == want))
+        .unwrap_or_else(|| panic!("no write-through band at offset {want}"))
+        .id
+}
+
+/// Rewrite the band geometry of a `Partial`/`PartialInto` op in place.
+fn set_band(g: &mut Graph, op: usize, off: Option<usize>, length: Option<usize>, p: Option<isize>) {
+    match &mut g.ops[op].kind {
+        OpKind::PartialInto { offset, len, pad, .. } => {
+            if let Some(o) = off {
+                *offset = o;
+            }
+            if let Some(l) = length {
+                *len = l;
+            }
+            if let Some(pp) = p {
+                *pad = pp;
+            }
+        }
+        OpKind::Partial { offset, pad, .. } => {
+            if let Some(o) = off {
+                *offset = o;
+            }
+            if let Some(pp) = p {
+                *pad = pp;
+            }
+        }
+        other => panic!("op {op} is not a slice: {other:?}"),
+    }
+}
+
+fn qp(scale: f32, zero_point: i32) -> QuantParams {
+    QuantParams { scale, zero_point }
+}
+
+// ---------------------------------------------------------------------------
+// 1. Mutation harness: every corruption rejected, each with its own code.
+// ---------------------------------------------------------------------------
+
+/// Every diagnostic the harness below provokes. Pinned as a list so a
+/// refactor collapsing two corruptions into one catch-all code fails
+/// loudly here rather than silently blunting the verifier's teeth.
+const EXPECTED_CODES: [&str; 24] = [
+    // family: schedule
+    "order-length",
+    "order-out-of-range",
+    "order-duplicate",
+    "order-not-topological",
+    "peak-mismatch",
+    // family: arena
+    "slot-missing",
+    "slot-out-of-bounds",
+    "slot-overlap",
+    "alias-without-chain",
+    "alias-misaligned",
+    "alias-band-overlap",
+    // family: split
+    "provenance-length",
+    "band-gap",
+    "band-overlap",
+    "band-extent",
+    "halo-mismatch",
+    "slab-shape",
+    "slice-kind",
+    "concat-cover",
+    "weight-partition",
+    // family: quant
+    "qparams-scale",
+    "qparams-mismatch",
+    // (qparams-missing and qparams-softmax are asserted too; see below)
+    // family: export
+    "export-count",
+    "export-buffers-differ",
+];
+
+#[test]
+fn mutation_codes_are_distinct_and_cover_the_issue_floor() {
+    let set: HashSet<&str> = EXPECTED_CODES.iter().copied().collect();
+    assert_eq!(set.len(), EXPECTED_CODES.len(), "duplicate diagnostic code");
+    assert!(EXPECTED_CODES.len() >= 15, "the issue demands ~15 distinct corruptions");
+}
+
+#[test]
+fn mutated_schedules_are_rejected() {
+    let g = models::figure1();
+    let order = g.default_order();
+
+    let e = verify_schedule(&g, &order[..order.len() - 1]).unwrap_err();
+    assert_eq!((e.family, e.code), ("schedule", "order-length"));
+
+    let mut o = order.clone();
+    *o.last_mut().unwrap() = g.n_ops();
+    assert_eq!(verify_schedule(&g, &o).unwrap_err().code, "order-out-of-range");
+
+    let mut o = order.clone();
+    *o.last_mut().unwrap() = o[0];
+    assert_eq!(verify_schedule(&g, &o).unwrap_err().code, "order-duplicate");
+
+    let mut o = order.clone();
+    o.reverse();
+    assert_eq!(verify_schedule(&g, &o).unwrap_err().code, "order-not-topological");
+
+    // A planner lying about its peak is caught with both numbers named.
+    let e = verify_peak(&g, &order, 1, "default order").unwrap_err();
+    assert_eq!(e.code, "peak-mismatch");
+    assert!(e.msg.contains("5216"), "diagnostic must carry the recomputed peak: {e}");
+
+    // The honest artifacts pass (paper reference values).
+    assert_eq!(verify_peak(&g, &order, 5216, "default order").unwrap().peak_bytes, 5216);
+    let (opt, _) = sched::optimal(&g).unwrap();
+    assert_eq!(verify_peak(&g, &opt.order, 4960, "reordered").unwrap().peak_bytes, 4960);
+}
+
+#[test]
+fn mutated_arena_plans_are_rejected() {
+    let mut b = GraphBuilder::new("vrelu");
+    let x = b.input("x", &[1, 4, 4, 2], DType::I8);
+    let r1 = b.relu("r1", x);
+    let r2 = b.relu("r2", r1);
+    b.output(r2);
+    let g = b.finish().unwrap();
+    let facts = verify_schedule(&g, &g.default_order()).unwrap();
+    // x and r1 are live together at step 0, r1 and r2 at step 1; each
+    // tensor is 32 B.
+    let plan = |slots: &[(usize, usize)], arena_bytes: usize| StaticPlan {
+        offsets: slots.iter().copied().collect(),
+        arena_bytes,
+        strategy: "doctored",
+    };
+
+    let e = verify_arena(&g, &facts, &plan(&[(x, 0), (r2, 64)], 4096)).unwrap_err();
+    assert_eq!((e.family, e.code), ("arena", "slot-missing"));
+    assert!(e.msg.contains("r1"), "diagnostic must name the unplaced tensor: {e}");
+
+    let p = plan(&[(x, 0), (r1, 32), (r2, 64)], 64);
+    assert_eq!(verify_arena(&g, &facts, &p).unwrap_err().code, "slot-out-of-bounds");
+
+    let p = plan(&[(x, 0), (r1, 1), (r2, 100)], 4096);
+    assert_eq!(verify_arena(&g, &facts, &p).unwrap_err().code, "slot-overlap");
+
+    // Same slot + same size while both live, but no accumulator chain
+    // licenses the aliasing.
+    let p = plan(&[(x, 0), (r1, 0), (r2, 100)], 4096);
+    assert_eq!(verify_arena(&g, &facts, &p).unwrap_err().code, "alias-without-chain");
+
+    // The tightest honest placement (r2 reuses x's slot) passes.
+    verify_arena(&g, &facts, &plan(&[(x, 0), (r1, 32), (r2, 0)], 64)).unwrap();
+}
+
+#[test]
+fn mutated_accumulator_chains_are_rejected() {
+    let (_g, res) = split_chain(true, 3, SplitAxis::Rows);
+    let sg = res.graph.clone();
+    let (opt, _) = sched::optimal(&sg).unwrap();
+    let facts = verify_schedule(&sg, &opt.order).unwrap();
+
+    // alias-misaligned: a chained write-through slice placed one byte
+    // off its accumulator's slot. Everything else parks far away so the
+    // chain pair is the only colliding one.
+    let chained = sg
+        .ops
+        .iter()
+        .find(|o| matches!(o.kind, OpKind::PartialInto { .. }) && o.inputs.len() == 2)
+        .expect("a chained write-through slice");
+    let (out, acc) = (chained.output, chained.inputs[1]);
+    assert_eq!(facts.find(out), facts.find(acc), "writer must share its accumulator's buffer");
+    let mut offsets: HashMap<usize, usize> = HashMap::new();
+    let mut far = 1 << 16;
+    for t in 0..sg.tensors.len() {
+        if !facts.counted[t] {
+            continue;
+        }
+        if t == acc {
+            offsets.insert(t, 0);
+        } else if t == out {
+            offsets.insert(t, 1);
+        } else {
+            offsets.insert(t, far);
+            far += 1 << 16;
+        }
+    }
+    let plan = StaticPlan { offsets, arena_bytes: far + (1 << 16), strategy: "doctored" };
+    let e = verify_arena(&sg, &facts, &plan).unwrap_err();
+    assert_eq!((e.family, e.code), ("arena", "alias-misaligned"));
+
+    // alias-band-overlap: the middle writer rebanded onto [0, 3) — two
+    // writers of one shared buffer now scribble the same rows.
+    let mut mg = sg.clone();
+    set_band(&mut mg, writer_at(&sg, 3), Some(0), None, None);
+    let mfacts = verify_schedule(&mg, &opt.order).unwrap();
+    let mplan = StaticPlan::best_fit(&mg, &opt.order);
+    assert_eq!(verify_arena(&mg, &mfacts, &mplan).unwrap_err().code, "alias-band-overlap");
+
+    // The unmutated rewrite passes with its real best-fit placement.
+    verify_arena(&sg, &facts, &StaticPlan::best_fit(&sg, &opt.order)).unwrap();
+}
+
+#[test]
+fn mutated_split_rewrites_are_rejected() {
+    let (g, res) = split_chain(true, 3, SplitAxis::Rows);
+    let sg = &res.graph;
+    verify_split(&g, sg, &res.sources).unwrap();
+
+    let e = verify_split(&g, sg, &res.sources[..res.sources.len() - 1]).unwrap_err();
+    assert_eq!((e.family, e.code), ("split", "provenance-length"));
+
+    let mid = writer_at(sg, 3);
+    // band-gap: rows [3, 4) of the join written by nobody.
+    let mut m = sg.clone();
+    set_band(&mut m, mid, Some(4), None, None);
+    let e = verify_split(&g, &m, &res.sources).unwrap_err();
+    assert_eq!(e.code, "band-gap");
+    assert!(e.msg.contains("[3, 4)"), "diagnostic must name the hole: {e}");
+
+    // band-overlap: rows [2, 3) double-covered.
+    let mut m = sg.clone();
+    set_band(&mut m, mid, Some(2), None, None);
+    assert_eq!(verify_split(&g, &m, &res.sources).unwrap_err().code, "band-overlap");
+
+    // band-extent: the last band pushed past the join's 9 rows.
+    let mut m = sg.clone();
+    set_band(&mut m, writer_at(sg, 6), Some(7), None, None);
+    assert_eq!(verify_split(&g, &m, &res.sources).unwrap_err().code, "band-extent");
+
+    // halo-mismatch (pointwise): a phantom pad on a 1:1 relu band.
+    let mut m = sg.clone();
+    set_band(&mut m, mid, None, None, Some(1));
+    assert_eq!(verify_split(&g, &m, &res.sources).unwrap_err().code, "halo-mismatch");
+
+    // halo-mismatch (windowed): the conv head's recorded pad shifted,
+    // so its slab no longer holds the band's receptive field.
+    let conv_mid = sg
+        .ops
+        .iter()
+        .find(|o| matches!(&o.kind, OpKind::Partial { offset, .. } if *offset == 3))
+        .unwrap()
+        .id;
+    let mut m = sg.clone();
+    if let OpKind::Partial { pad, .. } = &mut m.ops[conv_mid].kind {
+        *pad += 1;
+    }
+    assert_eq!(verify_split(&g, &m, &res.sources).unwrap_err().code, "halo-mismatch");
+
+    // slab-shape: a slice output widened along a non-band dim.
+    let slab_op = sg.ops.iter().find(|o| matches!(o.kind, OpKind::Partial { .. })).unwrap().id;
+    let mut m = sg.clone();
+    let slab_t = m.ops[slab_op].output;
+    m.tensors[slab_t].shape[2] += 1;
+    assert_eq!(verify_split(&g, &m, &res.sources).unwrap_err().code, "slab-shape");
+
+    // slice-kind: an op that has no banded-slice semantics at all.
+    let mut m = sg.clone();
+    if let OpKind::Partial { inner, .. } = &mut m.ops[slab_op].kind {
+        *inner = Box::new(OpKind::GlobalAvgPool);
+    }
+    assert_eq!(verify_split(&g, &m, &res.sources).unwrap_err().code, "slice-kind");
+
+    // concat-cover: a materialized join missing one slab.
+    let (g2, res2) = split_chain(false, 3, SplitAxis::Rows);
+    verify_split(&g2, &res2.graph, &res2.sources).unwrap();
+    let mut m = res2.graph.clone();
+    let cat =
+        m.ops.iter().find(|o| matches!(o.kind, OpKind::ConcatSlices { .. })).unwrap().id;
+    m.ops[cat].inputs.pop();
+    assert_eq!(verify_split(&g2, &m, &res2.sources).unwrap_err().code, "concat-cover");
+
+    // weight-partition: a channel split whose weight matrix lost a
+    // column — the second head now reads columns that do not exist.
+    let (g3, res3) = split_chain(false, 2, SplitAxis::Channels);
+    verify_split(&g3, &res3.graph, &res3.sources).unwrap();
+    let mut m = res3.graph.clone();
+    let w = m
+        .ops
+        .iter()
+        .find(|o| {
+            matches!(&o.kind,
+                OpKind::Partial { inner, offset, .. }
+                    if matches!(inner.as_ref(), OpKind::Conv2D { .. }) && *offset == 4)
+        })
+        .expect("second conv projection head")
+        .weights[0];
+    *m.tensors[w].shape.last_mut().unwrap() -= 1;
+    assert_eq!(verify_split(&g3, &m, &res3.sources).unwrap_err().code, "weight-partition");
+}
+
+#[test]
+fn mutated_quantization_maps_are_rejected() {
+    let mut b = GraphBuilder::new("vquant");
+    let x = b.input("x", &[1, 8], DType::I8);
+    let r = b.relu("r", x);
+    let s = b.softmax("s", r);
+    b.output(s);
+    let g = b.finish().unwrap();
+    let (x, r, s) = (x, g.op_by_name("r").unwrap().output, g.op_by_name("s").unwrap().output);
+    let map = |entries: &[(usize, QuantParams)]| -> HashMap<usize, QuantParams> {
+        entries.iter().copied().collect()
+    };
+
+    let e = verify_quant(&g, &map(&[(x, qp(0.0, 0))])).unwrap_err();
+    assert_eq!((e.family, e.code), ("quant", "qparams-scale"));
+
+    // Relu must keep its input's domain.
+    let m = map(&[(x, qp(0.5, 0)), (r, qp(0.25, 3)), (s, qp(1.0 / 256.0, -128))]);
+    assert_eq!(verify_quant(&g, &m).unwrap_err().code, "qparams-mismatch");
+
+    // Quantized input, unquantized output: a half-quantized graph.
+    let m = map(&[(x, qp(0.5, 0)), (s, qp(1.0 / 256.0, -128))]);
+    assert_eq!(verify_quant(&g, &m).unwrap_err().code, "qparams-missing");
+
+    // i8 softmax must write the conventional (1/256, -128) domain.
+    let m = map(&[(x, qp(0.5, 0)), (r, qp(0.5, 0)), (s, qp(0.5, 0))]);
+    assert_eq!(verify_quant(&g, &m).unwrap_err().code, "qparams-softmax");
+
+    // The importer's real flow rules pass.
+    let m = map(&[(x, qp(0.5, 0)), (r, qp(0.5, 0)), (s, qp(1.0 / 256.0, -128))]);
+    verify_quant(&g, &m).unwrap();
+}
+
+#[test]
+fn mutated_exports_are_rejected() {
+    let path = fixtures::ensure(fixtures::INT8_FIXTURE).expect("fixtures");
+    let src = tflite::read_model(path.to_str().unwrap()).unwrap();
+
+    let mut m = src.clone();
+    m.subgraph.operators.pop();
+    let e = verify_export(&src, &m).unwrap_err();
+    assert_eq!((e.family, e.code), ("export", "export-count"));
+
+    let mut m = src.clone();
+    let buf = m.buffers.iter().position(|b| !b.is_empty()).unwrap();
+    m.buffers[buf][0] ^= 0xFF;
+    let e = verify_export(&src, &m).unwrap_err();
+    assert_eq!(e.code, "export-buffers-differ");
+    assert!(e.msg.contains(&format!("buffer {buf}")), "must name the buffer: {e}");
+
+    let mut m = src.clone();
+    m.operator_codes[0].version += 1;
+    assert_eq!(verify_export(&src, &m).unwrap_err().code, "export-tensors-differ");
+
+    let mut m = src.clone();
+    assert_ne!(m.subgraph.operators[0], m.subgraph.operators[1]);
+    m.subgraph.operators[0] = m.subgraph.operators[1].clone();
+    assert_eq!(verify_export(&src, &m).unwrap_err().code, "export-not-permutation");
+
+    assert_eq!(verify_operator_order(&[0, 0], 2).unwrap_err().code, "export-order-not-bijective");
+
+    // Any true permutation of the operator vector passes.
+    let mut m = src.clone();
+    m.subgraph.operators.reverse();
+    let perm = verify_export(&src, &m).unwrap();
+    assert_eq!(perm.len(), src.subgraph.operators.len());
+}
+
+// ---------------------------------------------------------------------------
+// 2. No false alarms: real plans verify clean everywhere.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn zoo_plans_verify_clean_across_modes_and_boards() {
+    for name in models::MODEL_NAMES {
+        for board in ALL_BOARDS {
+            let modes: [Option<SplitOptions>; 3] = [
+                None,                                       // reorder-only
+                Some(SplitOptions::quick().materialized()), // split, joins kept
+                Some(SplitOptions::quick()),                // split, joins elided
+            ];
+            for split in modes {
+                let tag = format!("{name} on {}", board.name);
+                let report = OptimizeRequest {
+                    source: zoo(name),
+                    budget: None,
+                    board,
+                    split,
+                    compare_materialized: false,
+                    trace: false,
+                }
+                .run()
+                .unwrap_or_else(|e| panic!("{tag}: {e}"));
+                assert!(report.verified, "{tag}: report left unverified");
+                let cert = certify_report(&report).unwrap_or_else(|e| panic!("{tag}: {e}"));
+                assert!(
+                    cert.checks.iter().filter(|c| c.status == "ok").count() >= 2,
+                    "{tag}: schedule + arena must always be proven"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn tflite_fixture_verifies_clean_with_quant_and_export_families_proven() {
+    let path = fixtures::ensure(fixtures::INT8_FIXTURE).expect("fixtures");
+    let path = path.to_str().unwrap();
+    for board in ALL_BOARDS {
+        for split in [None, Some(SplitOptions::quick())] {
+            let report = OptimizeRequest {
+                source: ModelSource::TflitePath(path.to_string()),
+                budget: None,
+                board,
+                split,
+                compare_materialized: false,
+                trace: false,
+            }
+            .run()
+            .unwrap_or_else(|e| panic!("{path} on {}: {e}", board.name));
+            assert!(report.verified);
+            let cert = certify_report(&report).unwrap();
+            for fam in ["quant", "export"] {
+                assert!(
+                    cert.checks.iter().any(|c| c.family == fam && c.status == "ok"),
+                    "{fam} must be proven (not skipped) on an int8 .tflite source"
+                );
+            }
+        }
+    }
+}
+
+/// The verifier's recomputed peaks agree with the Python exact-schedule
+/// mirror — a third, independent implementation of the accounting.
+#[test]
+fn verifier_peaks_match_the_python_mirror() {
+    let script = concat!(env!("CARGO_MANIFEST_DIR"), "/tools/schedule_mirror/mirror.py");
+    for model in ["figure1", "mobilenet", "streamnet"] {
+        for order_kind in ["default", "optimal"] {
+            let out = match std::process::Command::new("python3")
+                .args([script, "--trace", model, "--order", order_kind])
+                .output()
+            {
+                Ok(o) if o.status.success() => o,
+                Ok(o) => panic!(
+                    "mirror failed on {model}/{order_kind}: {}",
+                    String::from_utf8_lossy(&o.stderr)
+                ),
+                Err(_) => {
+                    eprintln!("python3 unavailable; skipping the mirror cross-check");
+                    return;
+                }
+            };
+            let csv = String::from_utf8_lossy(&out.stdout).into_owned();
+            let mirror_peak = csv
+                .lines()
+                .skip(1)
+                .map(|l| l.split(',').nth(2).unwrap().parse::<usize>().unwrap())
+                .max()
+                .unwrap();
+            let g = models::by_name(model, DType::I8).unwrap();
+            let order = match order_kind {
+                "default" => g.default_order(),
+                _ => sched::optimal(&g).unwrap().0.order,
+            };
+            let facts = verify_schedule(&g, &order).unwrap();
+            assert_eq!(
+                facts.peak_bytes, mirror_peak,
+                "{model}/{order_kind}: verifier vs python mirror"
+            );
+        }
+    }
+}
+
+/// Tracing a request surfaces the certification as a `verify` event.
+#[test]
+fn traced_reports_carry_one_verify_event() {
+    let report = OptimizeRequest::reorder_only(zoo("figure1")).with_trace(true).run().unwrap();
+    let verifies: Vec<_> =
+        report.events.iter().filter(|e| matches!(e, Event::Verify { .. })).collect();
+    assert_eq!(verifies.len(), 1, "exactly one certification per run");
+    if let Event::Verify { model, checks, peak_bytes, ok } = verifies[0] {
+        assert!(*ok, "run() only returns certified reports");
+        assert_eq!(model, "figure1");
+        assert!(*checks >= 4, "all five families must be visited");
+        assert_eq!(*peak_bytes, 4960, "the certificate pins the reordered peak");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// 3. CLI: the verify subcommand and the uniform exit-code contract.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cli_verify_prints_certificates_and_json() {
+    let (code, stdout, stderr) = run_cli(&["verify", "--model", "figure1", "--reorder-only"]);
+    assert_eq!(code, 0, "verify failed: {stderr}");
+    assert!(stdout.starts_with("verified: figure1"), "certificate header: {stdout}");
+    assert!(stdout.contains("peak 4960 B"), "paper peak missing: {stdout}");
+
+    // Positional zoo-name dispatch, with the full split pipeline.
+    let (code, stdout, stderr) = run_cli(&["verify", "figure1"]);
+    assert_eq!(code, 0, "verify figure1 failed: {stderr}");
+    assert!(stdout.starts_with("verified: figure1"));
+
+    // --json: a parseable certificate with every family listed.
+    let (code, stdout, _) =
+        run_cli(&["verify", "--model", "figure1", "--reorder-only", "--json"]);
+    assert_eq!(code, 0);
+    let doc = Json::parse(&stdout).expect("valid certificate JSON");
+    assert_eq!(doc.get("verified").as_bool(), Some(true));
+    assert_eq!(doc.get("peak_bytes").as_f64(), Some(4960.0));
+    let checks = doc.get("checks").as_arr().expect("checks array");
+    let families: Vec<&str> =
+        checks.iter().filter_map(|c| c.get("family").as_str()).collect();
+    assert_eq!(families, ["schedule", "arena", "split", "quant", "export"]);
+
+    // --json FILE writes the same document.
+    let dir = tmp_dir("json");
+    let out = dir.join("cert.json");
+    let (code, _, _) = run_cli(&[
+        "verify",
+        "--model",
+        "figure1",
+        "--reorder-only",
+        "--json",
+        out.to_str().unwrap(),
+    ]);
+    assert_eq!(code, 0);
+    let written = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+    assert_eq!(written.get("verified").as_bool(), Some(true));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cli_verify_proves_exported_flatbuffers() {
+    let fixture = fixtures::ensure(fixtures::INT8_FIXTURE).expect("fixtures");
+    let path = fixture.to_str().unwrap();
+    let dir = tmp_dir("export");
+    let out = dir.join("reordered.tflite");
+    let out_str = out.to_str().unwrap();
+
+    let (code, _, stderr) = run_cli(&["optimize", path, "-o", out_str]);
+    assert_eq!(code, 0, "optimize failed: {stderr}");
+
+    let (code, stdout, stderr) =
+        run_cli(&["verify", path, "--reorder-only", "--reordered", out_str]);
+    assert_eq!(code, 0, "verify --reordered failed: {stderr}");
+    assert!(stdout.contains("export ok"), "{stdout}");
+    assert!(stdout.contains("verified:"), "{stdout}");
+
+    // A truncated export is refused (exit 1, one-line error).
+    let bytes = std::fs::read(&out).unwrap();
+    let garbled = dir.join("garbled.tflite");
+    std::fs::write(&garbled, &bytes[..bytes.len() / 2]).unwrap();
+    let (code, _, stderr) =
+        run_cli(&["verify", path, "--reorder-only", "--reordered", garbled.to_str().unwrap()]);
+    assert_eq!(code, 1, "truncated export must fail verification: {stderr}");
+    assert!(!stderr.contains("panicked"), "must fail cleanly: {stderr}");
+
+    // --reordered against a zoo model is a usage error: there is no
+    // source flatbuffer to compare with.
+    let (code, _, stderr) = run_cli(&[
+        "verify",
+        "--model",
+        "figure1",
+        "--reorder-only",
+        "--reordered",
+        out_str,
+    ]);
+    assert_eq!(code, 2, "{stderr}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cli_exit_codes_are_uniform_across_subcommands() {
+    // Usage errors → exit 2, prefixed "usage error:".
+    let usage_cases: &[&[&str]] = &[
+        &["frobnicate"],
+        &["verify"],
+        &["verify", "--model", "figure1", "--budget", "abc"],
+        &["verify", "--model", "figure1", "--dtype", "bogus"],
+        &["verify", "--model", "figure1", "--board", "nope"],
+        &["analyze", "--model", "figure1", "--dtype", "bogus"],
+        &["split", "--model", "figure1", "--axes", "bogus"],
+    ];
+    for args in usage_cases {
+        let (code, _, stderr) = run_cli(args);
+        assert_eq!(code, 2, "{args:?}: want exit 2, stderr: {stderr}");
+        assert!(stderr.starts_with("error: usage error: "), "{args:?}: {stderr}");
+    }
+
+    // Runtime failures → exit 1 with a one-line error.
+    let runtime_cases: &[&[&str]] = &[
+        &["verify", "--model", "nope"],
+        &["verify", "/nonexistent/model.tflite"],
+        &["analyze", "--model", "nope"],
+    ];
+    for args in runtime_cases {
+        let (code, _, stderr) = run_cli(args);
+        assert_eq!(code, 1, "{args:?}: want exit 1, stderr: {stderr}");
+        assert!(stderr.starts_with("error: "), "{args:?}: {stderr}");
+        assert!(!stderr.contains("panicked"), "{args:?} must fail cleanly: {stderr}");
+    }
+    let (_, _, stderr) = run_cli(&["verify", "--model", "nope"]);
+    assert_eq!(stderr.lines().count(), 1, "one-line error contract: {stderr}");
+}
