@@ -1,0 +1,96 @@
+//! Bench: the AOT C codegen backend over the deployment zoo.
+//!
+//! Lowers every zoo model (in each dtype the audit pipeline prepares it
+//! for) plus the imported int8 TFLite fixture through the reorder-only
+//! pipeline into a deployable C artifact, and reports two fully
+//! deterministic size metrics per artifact:
+//!
+//!   - `{label}.arena_bytes`  — the static `.bss` arena the emitted C
+//!     declares (== the certified best-fit plan arena; `generate`
+//!     refuses to emit if they disagree)
+//!   - `{label}.rodata_bytes` — the `static const` weight tables baked
+//!     into the source
+//!
+//! Reorder-only plans are used on purpose: the DP order and the best-fit
+//! placement are bit-reproducible by the independent Python mirror
+//! (`tools/schedule_mirror/mirror.py --codegen-baseline`), which is what
+//! lets CI gate these numbers without trusting this binary. The
+//! `tflitecnn_i8` arena is the one exception — the importer and the
+//! mirror assign different tensor ids, which legitimately changes
+//! best-fit placement order — so only its rodata is mirrored; its arena
+//! rides along ungated until a confirmed value lands in the baseline.
+//!
+//! Results land in `BENCH_codegen.json`; `tools/bench_compare` gates
+//! every `*_bytes` metric (lower is better) against
+//! `BENCH_baseline/codegen.json`.
+
+use std::time::Instant;
+
+use mcu_reorder::api::{ModelSource, OptimizeRequest};
+use mcu_reorder::codegen::{generate, weights_for_report};
+use mcu_reorder::graph::DType;
+use mcu_reorder::models;
+use mcu_reorder::tflite::fixtures;
+use mcu_reorder::trace::audit;
+use mcu_reorder::util::bench::{write_json_report, BenchResult, Table};
+use mcu_reorder::util::stats;
+
+fn main() {
+    let mut cases: Vec<(String, ModelSource)> = Vec::new();
+    for name in models::MODEL_NAMES {
+        for p in audit::prepare_zoo(name).expect("prepare zoo") {
+            let dtype = DType::from_name(p.dtype).expect("zoo dtype");
+            cases.push((
+                format!("{name}_{}", p.dtype),
+                ModelSource::Zoo { name: name.to_string(), dtype },
+            ));
+        }
+    }
+    let fixture = fixtures::ensure(fixtures::INT8_FIXTURE).expect("fixture");
+    cases.push((
+        "tflitecnn_i8".to_string(),
+        ModelSource::TflitePath(fixture.display().to_string()),
+    ));
+
+    let mut metrics: Vec<(String, f64)> = Vec::new();
+    let mut table =
+        Table::new(&["artifact", "dtype", "ops", "arena B", "rodata B", "gen ms"]);
+    let mut gen_us: Vec<f64> = Vec::new();
+
+    for (label, source) in cases {
+        let report = OptimizeRequest::reorder_only(source)
+            .run()
+            .unwrap_or_else(|e| panic!("{label}: optimize: {e}"));
+        let ws = weights_for_report(&report)
+            .unwrap_or_else(|e| panic!("{label}: weights: {e}"));
+        let t0 = Instant::now();
+        let art = generate(&report, &ws, &label)
+            .unwrap_or_else(|e| panic!("{label}: codegen: {e}"));
+        let dt = t0.elapsed();
+        gen_us.push(dt.as_secs_f64() * 1e6);
+        metrics.push((format!("{label}.arena_bytes"), art.arena_bytes as f64));
+        metrics.push((format!("{label}.rodata_bytes"), art.rodata_bytes as f64));
+        table.row(&[
+            label.clone(),
+            art.dtype.to_string(),
+            art.n_ops.to_string(),
+            art.arena_bytes.to_string(),
+            art.rodata_bytes.to_string(),
+            format!("{:.2}", dt.as_secs_f64() * 1e3),
+        ]);
+    }
+    table.print();
+
+    let timings = [BenchResult {
+        name: "codegen/generate".into(),
+        iters: gen_us.len() as u64,
+        mean_ns: stats::mean(&gen_us) * 1e3,
+        stddev_ns: stats::stddev(&gen_us) * 1e3,
+        min_ns: stats::min(&gen_us) * 1e3,
+        max_ns: stats::max(&gen_us) * 1e3,
+    }];
+    match write_json_report("codegen", &metrics, &timings) {
+        Ok(p) => println!("\nwrote {p}"),
+        Err(e) => eprintln!("could not write JSON report: {e}"),
+    }
+}

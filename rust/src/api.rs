@@ -419,10 +419,11 @@ impl OptimizeReport {
         DeployReport::new(&self.graph, peak_bytes, self.board, &OverheadModel::default())
     }
 
-    /// Write the source flatbuffer back with the reorder-only optimal
+    /// The source flatbuffer re-serialized with the reorder-only optimal
     /// operator order embedded (buffers byte-identical). Errors unless the
-    /// model came from a `.tflite` source.
-    pub fn write_reordered_tflite(&self, out: &str) -> Result<()> {
+    /// model came from a `.tflite` source. This is the deployable-artifact
+    /// payload the coordinator's `ARTIFACT TFLITE` command serves.
+    pub fn reordered_tflite_bytes(&self) -> Result<Vec<u8>> {
         let src = self
             .tflite
             .as_ref()
@@ -430,8 +431,14 @@ impl OptimizeReport {
         let order = src.imported.operator_order(&self.reordered.order);
         let reordered =
             crate::tflite::reorder(&src.model, &order).map_err(|e| anyhow!("{e}"))?;
-        std::fs::write(out, reordered.serialize())
-            .with_context(|| format!("writing {out}"))?;
+        Ok(reordered.serialize())
+    }
+
+    /// Write the source flatbuffer back with the reorder-only optimal
+    /// operator order embedded ([`Self::reordered_tflite_bytes`]).
+    pub fn write_reordered_tflite(&self, out: &str) -> Result<()> {
+        let bytes = self.reordered_tflite_bytes()?;
+        std::fs::write(out, bytes).with_context(|| format!("writing {out}"))?;
         Ok(())
     }
 

@@ -1,0 +1,1084 @@
+//! Per-operator C loop emission.
+//!
+//! Every function here lowers one scheduled operator into a specialized,
+//! freestanding C99 loop nest whose arithmetic is a *transcription* of the
+//! corresponding interpreter kernel ([`crate::interp::ops`] /
+//! [`crate::interp::quant`]): same accumulation order, same rounding
+//! helpers, same zero-point handling, same activation clamps. Bit-exact
+//! equivalence with the interpreter is the contract the generated harness
+//! asserts, so any change to a kernel in `interp` must land here too.
+//!
+//! Band variants (`Partial` / `PartialInto`) bake the halo geometry —
+//! effective padding, channel-band start, write-through offsets — into
+//! compile-time constants; bounds guards are emitted only when a tap can
+//! actually fall outside the input slab.
+
+use std::collections::HashMap;
+
+use crate::graph::{Act, DType, Graph, Op, OpKind, Padding, SplitAxis, TensorId};
+use crate::interp::ops::{pad_amounts, Hwc};
+use crate::interp::quant::{FixedMult, QuantParams};
+use crate::interp::{band_shape_of, partial_pads, WeightStore};
+use crate::util::error::{anyhow, bail, Result};
+
+/// Emission context shared by every step emitter.
+pub(crate) struct Ctx<'a> {
+    pub sym: String,
+    pub g: &'a Graph,
+    pub ws: &'a WeightStore,
+    /// Element (not byte) offsets of the non-weight tensors in the arena.
+    pub off: HashMap<TensorId, usize>,
+    /// Uniform activation dtype of the graph.
+    pub dtype: DType,
+}
+
+impl Ctx<'_> {
+    /// C element type of the activation arena.
+    pub(crate) fn ety(&self) -> &'static str {
+        match self.dtype {
+            DType::F32 => "float",
+            DType::I8 => "int8_t",
+            DType::U8 => "uint8_t",
+            DType::I32 => "int32_t",
+        }
+    }
+
+    /// Arena-slot macro of tensor `t` (expands to `arena + offset`).
+    pub(crate) fn t(&self, t: TensorId) -> String {
+        format!("{}_t{}", self.sym, t)
+    }
+
+    /// Rodata array name of weight tensor `t`.
+    pub(crate) fn w(&self, t: TensorId) -> String {
+        format!("{}_w{}", self.sym, t)
+    }
+
+    /// Quantization parameters of tensor `t`, with the interpreter's
+    /// identity default for tensors that carry none.
+    pub(crate) fn qp(&self, t: TensorId) -> QuantParams {
+        self.ws.qparams.get(&t).copied().unwrap_or(QuantParams { scale: 1.0, zero_point: 0 })
+    }
+
+    fn shape(&self, t: TensorId) -> &[usize] {
+        &self.g.tensors[t].shape
+    }
+
+    fn elems(&self, t: TensorId) -> usize {
+        self.g.tensors[t].elems()
+    }
+}
+
+/// Which shared static helpers the emitted steps actually reference; the
+/// preamble emits only these (the sources compile under `-Werror` with
+/// `-Wall`, so an unused `static` function is a build break).
+#[derive(Default)]
+pub(crate) struct Helpers {
+    /// Saturating f32 → i32 cast (Rust `as` semantics).
+    pub sat_i32_f: bool,
+    /// Saturating f64 → i32 cast.
+    pub sat_i32_d: bool,
+    /// Fixed-point requantization (the `FixedMult` rounding shift).
+    pub requant: bool,
+    /// `<math.h>` symbols used (`expf`, `sqrtf`, `roundf`, `INFINITY`…).
+    pub math: bool,
+}
+
+/// Indented C writer.
+pub(crate) struct Cw {
+    s: String,
+    ind: usize,
+}
+
+impl Cw {
+    pub(crate) fn new() -> Cw {
+        Cw { s: String::new(), ind: 0 }
+    }
+
+    pub(crate) fn l(&mut self, line: impl AsRef<str>) {
+        let line = line.as_ref();
+        if line.is_empty() {
+            self.s.push('\n');
+            return;
+        }
+        for _ in 0..self.ind {
+            self.s.push_str("    ");
+        }
+        self.s.push_str(line);
+        self.s.push('\n');
+    }
+
+    pub(crate) fn open(&mut self, line: impl AsRef<str>) {
+        self.l(line);
+        self.ind += 1;
+    }
+
+    pub(crate) fn close(&mut self) {
+        self.ind -= 1;
+        self.l("}");
+    }
+
+    pub(crate) fn finish(self) -> String {
+        self.s
+    }
+}
+
+/// Render an f32 constant as a C literal that `strtof`/gcc parse back to
+/// the identical bit pattern (9 significant digits round-trip binary32).
+pub(crate) fn c_f32(v: f32) -> Result<String> {
+    if v.is_nan() {
+        bail!("NaN constant in model parameters");
+    }
+    if v == f32::INFINITY {
+        return Ok("INFINITY".into());
+    }
+    if v == f32::NEG_INFINITY {
+        return Ok("-INFINITY".into());
+    }
+    Ok(format!("{v:.8e}f"))
+}
+
+/// Render an f64 constant (17 significant digits round-trip binary64).
+pub(crate) fn c_f64(v: f64) -> Result<String> {
+    if !v.is_finite() {
+        bail!("non-finite f64 constant in quantization parameters");
+    }
+    Ok(format!("{v:.16e}"))
+}
+
+/// `var + k` with the `+ 0` folded away.
+fn shifted(var: &str, k: usize) -> String {
+    if k == 0 {
+        var.to_string()
+    } else {
+        format!("{var} + {k}")
+    }
+}
+
+/// Index expression `base * stride + tap - pad` with trivial terms folded.
+fn tap_idx(base: &str, stride: usize, tap: &str, pad: isize) -> String {
+    let mut s =
+        if stride == 1 { base.to_string() } else { format!("{base} * {stride}") };
+    s = format!("{s} + {tap}");
+    match pad.cmp(&0) {
+        std::cmp::Ordering::Greater => format!("{s} - {pad}"),
+        std::cmp::Ordering::Less => format!("{s} + {}", -pad),
+        std::cmp::Ordering::Equal => s,
+    }
+}
+
+/// Destination an op (or op band) writes to: either a rectangular window
+/// of a full NHWC tensor (`PartialInto` write-through at compile-time
+/// offsets) or a flat range (whole ops, `Partial` bands, dense rows).
+enum Dst {
+    Hwc { base: String, w: usize, c: usize, ry: usize, rx: usize, rc: usize },
+    Flat { base: String, off: usize },
+}
+
+impl Dst {
+    /// The whole output tensor of `op` (also a `Partial` band, whose
+    /// output tensor *is* the band).
+    fn whole(cx: &Ctx, t: TensorId) -> Dst {
+        let shape = cx.shape(t);
+        if shape.len() == 4 {
+            let o = Hwc::from_shape(shape);
+            Dst::Hwc { base: cx.t(t), w: o.w, c: o.c, ry: 0, rx: 0, rc: 0 }
+        } else {
+            Dst::Flat { base: cx.t(t), off: 0 }
+        }
+    }
+
+    /// The `[offset, offset+len)` band of the full join tensor `t` along
+    /// `axis` — mirrors `interp::ops::write_band`'s placement rules.
+    fn band(cx: &Ctx, t: TensorId, axis: SplitAxis, offset: usize) -> Dst {
+        let shape = cx.shape(t);
+        if shape.len() == 4 {
+            let o = Hwc::from_shape(shape);
+            let (ry, rx, rc) = match axis {
+                SplitAxis::Rows => (offset, 0, 0),
+                SplitAxis::Cols => (0, offset, 0),
+                SplitAxis::Channels => (0, 0, offset),
+            };
+            Dst::Hwc { base: cx.t(t), w: o.w, c: o.c, ry, rx, rc }
+        } else {
+            Dst::Flat { base: cx.t(t), off: offset }
+        }
+    }
+
+    /// Pointer expression for the channel row at band coords (`oy`,`ox`).
+    fn row_ptr(&self, oy: &str, ox: &str) -> Result<String> {
+        match self {
+            Dst::Hwc { base, w, c, ry, rx, rc } => {
+                let ye = shifted(oy, *ry);
+                let xe = shifted(ox, *rx);
+                let mut e = format!("{base} + (({ye}) * {w} + ({xe})) * {c}");
+                if *rc > 0 {
+                    e = format!("{e} + {rc}");
+                }
+                Ok(e)
+            }
+            Dst::Flat { .. } => Err(anyhow!("spatial op writing a flat destination")),
+        }
+    }
+
+    /// True when the destination is a contiguous cover of a band with the
+    /// given trailing dims (so elementwise ops can use one flat loop).
+    fn is_flat_cover(&self, band: &[usize]) -> bool {
+        match self {
+            Dst::Flat { .. } => true,
+            Dst::Hwc { w, c, ry, rx, rc, .. } => {
+                let b = Hwc::from_shape(band);
+                *ry == 0 && *rx == 0 && *rc == 0 && b.w == *w && b.c == *c
+            }
+        }
+    }
+
+    /// Base pointer expression for the flat-cover case.
+    fn flat_ptr(&self) -> String {
+        match self {
+            Dst::Hwc { base, .. } => base.clone(),
+            Dst::Flat { base, off } => {
+                if *off == 0 {
+                    base.clone()
+                } else {
+                    format!("({base} + {off})")
+                }
+            }
+        }
+    }
+}
+
+/// Activation transform applied per element at store time — transcribed
+/// per interpreter call site (`f32::max` compiles to `maxss`, which maps
+/// `-0.0`/NaN to the second operand; `clamp` keeps them — the emitted
+/// comparisons reproduce each exactly).
+#[derive(Clone, Copy)]
+enum CAct {
+    None,
+    /// `v.max(0.0)` (fused/standalone f32 relu).
+    FMax0,
+    /// `v.clamp(0.0, 6.0)` (fused/standalone f32 relu6).
+    FClamp06,
+    /// i8 `v.max(lo)`.
+    I8Lo(i8),
+    /// i8 `v.clamp(lo, hi)`.
+    I8LoHi(i8, i8),
+}
+
+impl CAct {
+    /// Fused-activation transform in the `out_q` domain (the i8 dispatch
+    /// arm's post-kernel pass).
+    fn fused(dtype: DType, act: Act, out_q: QuantParams) -> CAct {
+        match (dtype, act) {
+            (_, Act::Linear) => CAct::None,
+            (DType::F32, Act::Relu) => CAct::FMax0,
+            (DType::F32, Act::Relu6) => CAct::FClamp06,
+            (_, Act::Relu) => CAct::I8Lo(out_q.zero_point.clamp(-128, 127) as i8),
+            (_, Act::Relu6) => {
+                let lo = out_q.zero_point.clamp(-128, 127) as i8;
+                let hi = out_q.quantize_one(6.0).max(lo);
+                CAct::I8LoHi(lo, hi)
+            }
+        }
+    }
+
+    fn apply(&self, cw: &mut Cw, v: &str) {
+        match self {
+            CAct::None => {}
+            CAct::FMax0 => cw.l(format!("if (!({v} > 0.0f)) {v} = 0.0f;")),
+            CAct::FClamp06 => {
+                cw.l(format!("if ({v} < 0.0f) {v} = 0.0f;"));
+                cw.l(format!("else if ({v} > 6.0f) {v} = 6.0f;"));
+            }
+            CAct::I8Lo(lo) => cw.l(format!("if ({v} < {lo}) {v} = {lo};")),
+            CAct::I8LoHi(lo, hi) => {
+                cw.l(format!("if ({v} < {lo}) {v} = {lo};"));
+                cw.l(format!("else if ({v} > {hi}) {v} = {hi};"));
+            }
+        }
+    }
+}
+
+/// Saturate an `int32_t` expression into `[-128, 127]` (Rust `clamp`).
+fn clamp_i8(cw: &mut Cw, v: &str) {
+    cw.l(format!("if ({v} < -128) {v} = -128;"));
+    cw.l(format!("if ({v} > 127) {v} = 127;"));
+}
+
+/// Geometry of a (possibly banded) windowed op, fully resolved to
+/// compile-time constants.
+struct WinGeom {
+    ish: Hwc,
+    osh: Hwc,
+    kernel: (usize, usize),
+    stride: (usize, usize),
+    pad_y: isize,
+    pad_x: isize,
+    /// First output channel of the band within the full weight tensor.
+    c0: usize,
+    /// Total output channels of the full weight tensor (column stride).
+    c_total: usize,
+}
+
+impl WinGeom {
+    /// Whether the `iy` / `ix` bounds guards can ever fire; guards that
+    /// provably cannot are not emitted.
+    fn guards_y(&self) -> (bool, bool) {
+        let max_iy = (self.osh.h as isize - 1) * self.stride.0 as isize
+            + self.kernel.0 as isize
+            - 1
+            - self.pad_y;
+        (self.pad_y > 0, max_iy >= self.ish.h as isize)
+    }
+
+    fn guards_x(&self) -> (bool, bool) {
+        let max_ix = (self.osh.w as isize - 1) * self.stride.1 as isize
+            + self.kernel.1 as isize
+            - 1
+            - self.pad_x;
+        (self.pad_x > 0, max_ix >= self.ish.w as isize)
+    }
+}
+
+/// Emit `int iy = ...;` plus its (needed) guards; returns after the
+/// optional `continue`.
+#[allow(clippy::too_many_arguments)]
+fn emit_tap_guard(cw: &mut Cw, var: &str, base: &str, stride: usize, tap: &str, pad: isize, extent: usize, guards: (bool, bool)) {
+    cw.l(format!("int {var} = {};", tap_idx(base, stride, tap, pad)));
+    match guards {
+        (true, true) => cw.l(format!("if ({var} < 0 || {var} >= {extent}) continue;")),
+        (true, false) => cw.l(format!("if ({var} < 0) continue;")),
+        (false, true) => cw.l(format!("if ({var} >= {extent}) continue;")),
+        (false, false) => {}
+    }
+}
+
+/// Resolve the geometry of a whole windowed op.
+fn whole_geom(cx: &Ctx, op: &Op, kernel: (usize, usize), stride: (usize, usize), padding: Padding, c_total: usize) -> WinGeom {
+    let ish = Hwc::from_shape(cx.shape(op.inputs[0]));
+    let osh = Hwc::from_shape(cx.shape(op.output));
+    let pad_y = pad_amounts(ish.h, kernel.0, stride.0, padding, osh.h) as isize;
+    let pad_x = pad_amounts(ish.w, kernel.1, stride.1, padding, osh.w) as isize;
+    WinGeom { ish, osh, kernel, stride, pad_y, pad_x, c0: 0, c_total }
+}
+
+/// Resolve the geometry of a `Partial`/`PartialInto` band (mirrors
+/// `interp::partial_pads` and the channel-band selection in
+/// `partial_band_f32`/`_i8`).
+#[allow(clippy::too_many_arguments)]
+fn band_geom(cx: &Ctx, op: &Op, band: &[usize], axis: SplitAxis, pad: isize, offset: usize, kernel: (usize, usize), stride: (usize, usize), padding: Padding, w_cout_dim: Option<usize>) -> WinGeom {
+    let ish = Hwc::from_shape(cx.shape(op.inputs[0]));
+    let osh = Hwc::from_shape(band);
+    let (pad_y, pad_x) = partial_pads(axis, pad, ish, osh, kernel, stride, padding);
+    let (c0, c_total) = match (axis, w_cout_dim) {
+        (SplitAxis::Channels, Some(d)) => (offset, cx.shape(op.weights[0])[d]),
+        // Depthwise bands along channels read the input slab's channels.
+        (SplitAxis::Channels, None) => (offset, cx.shape(op.weights[0])[2]),
+        (_, Some(_)) => (0, osh.c),
+        (_, None) => (0, ish.c),
+    };
+    WinGeom { ish, osh, kernel, stride, pad_y, pad_x, c0, c_total }
+}
+
+/// Emit one scheduled operator as `static void {sym}_step{N}(void)`.
+pub(crate) fn emit_step(cx: &Ctx, step: usize, op: &Op, h: &mut Helpers) -> Result<String> {
+    let mut cw = Cw::new();
+    let name = op.name.replace("*/", "* /");
+    cw.l(format!("/* step {step}: {name} ({}) */", op.kind.name()));
+    cw.open(format!("static void {}_step{step}(void) {{", cx.sym));
+    if cx.dtype == DType::U8 {
+        emit_synthetic(cx, &mut cw, op)?;
+    } else {
+        emit_op(cx, &mut cw, op, h)?;
+    }
+    cw.close();
+    Ok(cw.finish())
+}
+
+/// The u8 path: every op kind executes the interpreter's deterministic
+/// byte-mixing (`ops::synthetic_bytes`) over all of its inputs.
+fn emit_synthetic(cx: &Ctx, cw: &mut Cw, op: &Op) -> Result<()> {
+    let n = cx.elems(op.output);
+    cw.l(format!("uint8_t *o = {};", cx.t(op.output)));
+    cw.open(format!("for (int i = 0; i < {n}; i++) {{"));
+    cw.l("unsigned int acc = (0x9Eu + (unsigned int)i) & 0xFFu;");
+    for &t in &op.inputs {
+        let len = cx.elems(t);
+        if len == 0 {
+            continue;
+        }
+        cw.l(format!("acc = (acc * 31u + (unsigned int){}[i % {len}]) & 0xFFu;", cx.t(t)));
+    }
+    cw.l("o[i] = (uint8_t)acc;");
+    cw.close();
+    Ok(())
+}
+
+/// The f32/i8 dispatch — one arm per interpreter-supported op kind.
+fn emit_op(cx: &Ctx, cw: &mut Cw, op: &Op, h: &mut Helpers) -> Result<()> {
+    let unsup = |what: &str| anyhow!("codegen: unsupported op `{}` ({what})", op.name);
+    match &op.kind {
+        OpKind::Conv2D { kernel, stride, padding, act } => {
+            let geom = whole_geom(cx, op, *kernel, *stride, *padding, Hwc::from_shape(cx.shape(op.output)).c);
+            emit_conv(cx, cw, h, op, &geom, *act, &Dst::whole(cx, op.output))
+        }
+        OpKind::DepthwiseConv2D { kernel, stride, padding, act } => {
+            let geom = whole_geom(cx, op, *kernel, *stride, *padding, Hwc::from_shape(cx.shape(op.inputs[0])).c);
+            emit_dwconv(cx, cw, h, op, &geom, *act, &Dst::whole(cx, op.output))
+        }
+        OpKind::Dense { act } => {
+            emit_dense(cx, cw, h, op, 0, cx.elems(op.output), *act, &Dst::whole(cx, op.output))
+        }
+        OpKind::Add => emit_add(cx, cw, h, op),
+        OpKind::Concat => emit_concat(cx, cw, h, op),
+        OpKind::Relu | OpKind::Relu6 => {
+            let band = cx.shape(op.output).to_vec();
+            emit_reluish(cx, cw, op, &op.kind, &band, &Dst::whole(cx, op.output))
+        }
+        OpKind::MaxPool2D { kernel, stride, padding } => {
+            let geom = whole_geom(cx, op, *kernel, *stride, *padding, 0);
+            emit_pool(cx, cw, h, op, &geom, false, &Dst::whole(cx, op.output))
+        }
+        OpKind::AvgPool2D { kernel, stride, padding } => {
+            if cx.dtype == DType::I8 {
+                return Err(unsup("i8 avgpool (unused in zoo)"));
+            }
+            let geom = whole_geom(cx, op, *kernel, *stride, *padding, 0);
+            emit_pool(cx, cw, h, op, &geom, true, &Dst::whole(cx, op.output))
+        }
+        OpKind::GlobalAvgPool => emit_gap(cx, cw, h, op),
+        OpKind::Softmax => emit_softmax(cx, cw, h, op),
+        OpKind::BatchNorm { eps } => {
+            if cx.dtype == DType::I8 {
+                return Err(unsup("i8 batchnorm (fold it first)"));
+            }
+            let band = cx.shape(op.output).to_vec();
+            emit_batchnorm(cx, cw, h, op, *eps, 0, &band, &Dst::whole(cx, op.output))
+        }
+        OpKind::Reshape => {
+            cw.l(format!(
+                "memcpy({}, {}, {}u);",
+                cx.t(op.output),
+                cx.t(op.inputs[0]),
+                cx.elems(op.output) * cx.dtype.size()
+            ));
+            Ok(())
+        }
+        OpKind::Synthetic { .. } => Err(unsup("synthetic op with a typed dtype")),
+        OpKind::Partial { inner, axis, pad, offset } => {
+            let band = cx.shape(op.output).to_vec();
+            emit_partial(cx, cw, h, op, inner, *axis, *pad, *offset, &band, Dst::whole(cx, op.output))
+        }
+        OpKind::PartialInto { inner, axis, pad, offset, len } => {
+            // The output shares the accumulator's buffer (asserted at
+            // plan time), so the interpreter's carry copy is a no-op here
+            // and only the band is written, in place.
+            let band = band_shape_of(cx.shape(op.output), *axis, *len);
+            emit_partial(cx, cw, h, op, inner, *axis, *pad, *offset, &band, Dst::band(cx, op.output, *axis, *offset))
+        }
+        OpKind::ConcatSlices { axis } => emit_concat_slices(cx, cw, op, *axis),
+    }
+}
+
+/// Band dispatch shared by `Partial` and `PartialInto` — mirrors
+/// `Interpreter::partial_band_f32` / `partial_band_i8`.
+#[allow(clippy::too_many_arguments)]
+fn emit_partial(cx: &Ctx, cw: &mut Cw, h: &mut Helpers, op: &Op, inner: &OpKind, axis: SplitAxis, pad: isize, offset: usize, band: &[usize], dst: Dst) -> Result<()> {
+    match inner {
+        OpKind::Conv2D { kernel, stride, padding, act } => {
+            let geom = band_geom(cx, op, band, axis, pad, offset, *kernel, *stride, *padding, Some(3));
+            emit_conv(cx, cw, h, op, &geom, *act, &dst)
+        }
+        OpKind::DepthwiseConv2D { kernel, stride, padding, act } => {
+            let geom = band_geom(cx, op, band, axis, pad, offset, *kernel, *stride, *padding, None);
+            emit_dwconv(cx, cw, h, op, &geom, *act, &dst)
+        }
+        OpKind::MaxPool2D { kernel, stride, padding } => {
+            let geom = band_geom(cx, op, band, axis, pad, offset, *kernel, *stride, *padding, None);
+            emit_pool(cx, cw, h, op, &geom, false, &dst)
+        }
+        OpKind::AvgPool2D { kernel, stride, padding } => {
+            if cx.dtype == DType::I8 {
+                bail!("codegen: unsupported op `{}` (partial AvgPool2D (i8))", op.name);
+            }
+            let geom = band_geom(cx, op, band, axis, pad, offset, *kernel, *stride, *padding, None);
+            emit_pool(cx, cw, h, op, &geom, true, &dst)
+        }
+        OpKind::Dense { act } => {
+            emit_dense(cx, cw, h, op, offset, band.iter().product(), *act, &dst)
+        }
+        OpKind::Relu | OpKind::Relu6 => emit_reluish(cx, cw, op, inner, band, &dst),
+        OpKind::BatchNorm { eps } => {
+            if cx.dtype == DType::I8 {
+                bail!("codegen: unsupported op `{}` (partial BatchNorm (i8))", op.name);
+            }
+            let c0 = if axis == SplitAxis::Channels { offset } else { 0 };
+            emit_batchnorm(cx, cw, h, op, *eps, c0, band, &dst)
+        }
+        other => bail!("codegen: unsupported op `{}` (partial {})", op.name, other.name()),
+    }
+}
+
+/// Open the per-element loops of a pointwise band write; returns
+/// `(src_index, dst_lvalue, channel_expr, n_loops)`.
+fn open_band(cw: &mut Cw, band: &[usize], dst: &Dst) -> (String, String, String, usize) {
+    let n: usize = band.iter().product();
+    if dst.is_flat_cover(band) {
+        let bc = *band.last().unwrap_or(&1);
+        cw.open(format!("for (int i = 0; i < {n}; i++) {{"));
+        let dstl = format!("{}[i]", dst.flat_ptr());
+        return ("i".into(), dstl, format!("i % {bc}"), 1);
+    }
+    let b = Hwc::from_shape(band);
+    let (base, w, c, ry, rx, rc) = match dst {
+        Dst::Hwc { base, w, c, ry, rx, rc } => (base.clone(), *w, *c, *ry, *rx, *rc),
+        Dst::Flat { .. } => unreachable!("flat dst is always a flat cover"),
+    };
+    cw.open(format!("for (int y = 0; y < {}; y++) {{", b.h));
+    cw.open(format!("for (int x_ = 0; x_ < {}; x_++) {{", b.w));
+    cw.open(format!("for (int ch = 0; ch < {}; ch++) {{", b.c));
+    let src = format!("(y * {} + x_) * {} + ch", b.w, b.c);
+    let ye = shifted("y", ry);
+    let xe = shifted("x_", rx);
+    let ce = shifted("ch", rc);
+    let dstl = format!("{base}[(({ye}) * {w} + ({xe})) * {c} + {ce}]");
+    (src, dstl, "ch".into(), 3)
+}
+
+fn close_band(cw: &mut Cw, n: usize) {
+    for _ in 0..n {
+        cw.close();
+    }
+}
+
+/// Standalone `Relu`/`Relu6` (whole op or band) — the kernels apply the
+/// transform in the *input* quantization domain for i8.
+fn emit_reluish(cx: &Ctx, cw: &mut Cw, op: &Op, kind: &OpKind, band: &[usize], dst: &Dst) -> Result<()> {
+    let in_q = cx.qp(op.inputs[0]);
+    let lo = in_q.zero_point.clamp(-128, 127) as i8;
+    let act = match (cx.dtype, kind) {
+        (DType::F32, OpKind::Relu) => CAct::FMax0,
+        (DType::F32, OpKind::Relu6) => CAct::FClamp06,
+        (DType::I8, OpKind::Relu) => CAct::I8Lo(lo),
+        (DType::I8, OpKind::Relu6) => CAct::I8LoHi(lo, in_q.quantize_one(6.0).max(lo)),
+        _ => bail!("codegen: unsupported op `{}` (relu dtype)", op.name),
+    };
+    let ety = cx.ety();
+    cw.l(format!("const {ety} *x = {};", cx.t(op.inputs[0])));
+    let (src, dstl, _, n) = open_band(cw, band, dst);
+    cw.l(format!("{ety} v = x[{src}];"));
+    act.apply(cw, "v");
+    cw.l(format!("{dstl} = v;"));
+    close_band(cw, n);
+    Ok(())
+}
+
+/// f32 `BatchNorm` (whole op or band): per-channel affine with the
+/// channel band offset folded in.
+#[allow(clippy::too_many_arguments)]
+fn emit_batchnorm(cx: &Ctx, cw: &mut Cw, h: &mut Helpers, op: &Op, eps: f32, c0: usize, band: &[usize], dst: &Dst) -> Result<()> {
+    h.math = true;
+    let (gamma, beta, mean, var) =
+        (cx.w(op.weights[0]), cx.w(op.weights[1]), cx.w(op.weights[2]), cx.w(op.weights[3]));
+    let eps = c_f32(eps)?;
+    cw.l(format!("const float *x = {};", cx.t(op.inputs[0])));
+    let (src, dstl, chexpr, n) = open_band(cw, band, dst);
+    let ch = if c0 == 0 { format!("({chexpr})") } else { format!("({c0} + ({chexpr}))") };
+    cw.l(format!("int ch_ = {ch};"));
+    cw.l(format!(
+        "{dstl} = {gamma}[ch_] * (x[{src}] - {mean}[ch_]) / sqrtf({var}[ch_] + {eps}) + {beta}[ch_];"
+    ));
+    close_band(cw, n);
+    Ok(())
+}
+
+/// Conv2D (whole or band), f32 and i8 — transcribes
+/// `ops::conv2d_with_pads` / `quant::conv2d_i8_with_pads`.
+fn emit_conv(cx: &Ctx, cw: &mut Cw, h: &mut Helpers, op: &Op, g: &WinGeom, act: Act, dst: &Dst) -> Result<()> {
+    let (kh, kw) = g.kernel;
+    let (sh, sw) = g.stride;
+    let cout = g.osh.c;
+    let cin = g.ish.c;
+    let (w, b) = (cx.w(op.weights[0]), cx.w(op.weights[1]));
+    let is_i8 = cx.dtype == DType::I8;
+    let (ety, aty) = if is_i8 { ("int8_t", "int32_t") } else { ("float", "float") };
+    let out_q = cx.qp(op.output);
+    let in_q = cx.qp(op.inputs[0]);
+    let fused = CAct::fused(cx.dtype, act, out_q);
+    cw.l(format!("const {ety} *x = {};", cx.t(op.inputs[0])));
+    cw.open(format!("for (int oy = 0; oy < {}; oy++) {{", g.osh.h));
+    cw.open(format!("for (int ox = 0; ox < {}; ox++) {{", g.osh.w));
+    cw.l(format!("{aty} acc[{cout}];"));
+    cw.l(format!("for (int oc = 0; oc < {cout}; oc++) acc[oc] = {b}[{}];", shifted("oc", g.c0)));
+    cw.open(format!("for (int ky = 0; ky < {kh}; ky++) {{"));
+    emit_tap_guard(cw, "iy", "oy", sh, "ky", g.pad_y, g.ish.h, g.guards_y());
+    cw.open(format!("for (int kx = 0; kx < {kw}; kx++) {{"));
+    emit_tap_guard(cw, "ix", "ox", sw, "kx", g.pad_x, g.ish.w, g.guards_x());
+    cw.l(format!("const {ety} *px = x + (iy * {} + ix) * {cin};", g.ish.w));
+    let wbase = format!("(ky * {kw} + kx) * {cin} * {}", g.c_total);
+    let wbase = if g.c0 == 0 { wbase } else { format!("{wbase} + {}", g.c0) };
+    cw.l(format!("const {ety} *pw = {w} + {wbase};"));
+    cw.open(format!("for (int ic = 0; ic < {cin}; ic++) {{"));
+    if is_i8 {
+        let zp = in_q.zero_point;
+        let iv = if zp == 0 {
+            "int32_t iv = (int32_t)px[ic];".to_string()
+        } else {
+            format!("int32_t iv = (int32_t)px[ic] - {zp};")
+        };
+        cw.l(iv);
+        cw.l("if (iv == 0) continue;");
+        cw.l(format!("const int8_t *wc = pw + ic * {};", g.c_total));
+        cw.l(format!("for (int oc = 0; oc < {cout}; oc++) acc[oc] += iv * (int32_t)wc[oc];"));
+    } else {
+        cw.l("float iv = px[ic];");
+        cw.l(format!("const float *wc = pw + ic * {};", g.c_total));
+        cw.l(format!("for (int oc = 0; oc < {cout}; oc++) acc[oc] += iv * wc[oc];"));
+    }
+    cw.close(); // ic
+    cw.close(); // kx
+    cw.close(); // ky
+    cw.l(format!("{ety} *po = {};", dst.row_ptr("oy", "ox")?));
+    cw.open(format!("for (int oc = 0; oc < {cout}; oc++) {{"));
+    if is_i8 {
+        h.requant = true;
+        let w_scale = cx.qp(op.weights[0]).scale;
+        let fm = fixed_mult(in_q.scale, w_scale, out_q.scale)?;
+        cw.l(format!(
+            "int8_t q = {}_requant(acc[oc], {}, {}, {});",
+            cx.sym, fm.m, fm.sh, out_q.zero_point
+        ));
+        fused.apply(cw, "q");
+        cw.l("po[oc] = q;");
+    } else {
+        cw.l("float v = acc[oc];");
+        fused.apply(cw, "v");
+        cw.l("po[oc] = v;");
+    }
+    cw.close(); // oc store
+    cw.close(); // ox
+    cw.close(); // oy
+    Ok(())
+}
+
+/// The conv/dense/dwconv requantization multiplier — identical
+/// construction to the interpreter's (`FixedMult::new(si*sw/so)`).
+fn fixed_mult(in_scale: f32, w_scale: f32, out_scale: f32) -> Result<FixedMult> {
+    let mult = (in_scale as f64) * (w_scale as f64) / (out_scale as f64);
+    if !(mult > 0.0 && mult.is_finite()) {
+        bail!("non-positive requantization multiplier {mult}");
+    }
+    Ok(FixedMult::new(mult))
+}
+
+/// DepthwiseConv2D (whole or band) — transcribes
+/// `ops::dwconv2d_with_pads` / `quant::dwconv2d_i8_with_pads` (note: the
+/// i8 depthwise kernel has no zero-skip, unlike i8 conv).
+fn emit_dwconv(cx: &Ctx, cw: &mut Cw, h: &mut Helpers, op: &Op, g: &WinGeom, act: Act, dst: &Dst) -> Result<()> {
+    let (kh, kw) = g.kernel;
+    let (sh, sw) = g.stride;
+    let cb = g.ish.c; // band channels: the slab carries only the band
+    let (w, b) = (cx.w(op.weights[0]), cx.w(op.weights[1]));
+    let is_i8 = cx.dtype == DType::I8;
+    let (ety, aty) = if is_i8 { ("int8_t", "int32_t") } else { ("float", "float") };
+    let out_q = cx.qp(op.output);
+    let in_q = cx.qp(op.inputs[0]);
+    let fused = CAct::fused(cx.dtype, act, out_q);
+    cw.l(format!("const {ety} *x = {};", cx.t(op.inputs[0])));
+    cw.open(format!("for (int oy = 0; oy < {}; oy++) {{", g.osh.h));
+    cw.open(format!("for (int ox = 0; ox < {}; ox++) {{", g.osh.w));
+    cw.l(format!("{aty} acc[{cb}];"));
+    cw.l(format!("for (int j = 0; j < {cb}; j++) acc[j] = {b}[{}];", shifted("j", g.c0)));
+    cw.open(format!("for (int ky = 0; ky < {kh}; ky++) {{"));
+    emit_tap_guard(cw, "iy", "oy", sh, "ky", g.pad_y, g.ish.h, g.guards_y());
+    cw.open(format!("for (int kx = 0; kx < {kw}; kx++) {{"));
+    emit_tap_guard(cw, "ix", "ox", sw, "kx", g.pad_x, g.ish.w, g.guards_x());
+    cw.l(format!("const {ety} *pi = x + (iy * {} + ix) * {cb};", g.ish.w));
+    let wrow = format!("(ky * {kw} + kx) * {}", g.c_total);
+    let wrow = if g.c0 == 0 { wrow } else { format!("{wrow} + {}", g.c0) };
+    cw.l(format!("const {ety} *pw = {w} + {wrow};"));
+    if is_i8 {
+        let zp = in_q.zero_point;
+        let iv = if zp == 0 { "(int32_t)pi[j]".to_string() } else { format!("((int32_t)pi[j] - {zp})") };
+        cw.l(format!("for (int j = 0; j < {cb}; j++) acc[j] += {iv} * (int32_t)pw[j];"));
+    } else {
+        cw.l(format!("for (int j = 0; j < {cb}; j++) acc[j] += pi[j] * pw[j];"));
+    }
+    cw.close(); // kx
+    cw.close(); // ky
+    cw.l(format!("{ety} *po = {};", dst.row_ptr("oy", "ox")?));
+    cw.open(format!("for (int j = 0; j < {cb}; j++) {{"));
+    if is_i8 {
+        h.requant = true;
+        let fm = fixed_mult(in_q.scale, cx.qp(op.weights[0]).scale, out_q.scale)?;
+        cw.l(format!(
+            "int8_t q = {}_requant(acc[j], {}, {}, {});",
+            cx.sym, fm.m, fm.sh, out_q.zero_point
+        ));
+        fused.apply(cw, "q");
+        cw.l("po[j] = q;");
+    } else {
+        cw.l("float v = acc[j];");
+        fused.apply(cw, "v");
+        cw.l("po[j] = v;");
+    }
+    cw.close();
+    cw.close(); // ox
+    cw.close(); // oy
+    Ok(())
+}
+
+/// Dense (whole or column band) — transcribes `ops::dense_cols`
+/// (output-major) and `quant::dense_cols_i8` (input-major, zero-skip).
+#[allow(clippy::too_many_arguments)]
+fn emit_dense(cx: &Ctx, cw: &mut Cw, h: &mut Helpers, op: &Op, col0: usize, n_out: usize, act: Act, dst: &Dst) -> Result<()> {
+    let n_in = cx.elems(op.inputs[0]);
+    let n_cols = cx.shape(op.weights[0])[1];
+    let (w, b) = (cx.w(op.weights[0]), cx.w(op.weights[1]));
+    let out_q = cx.qp(op.output);
+    let in_q = cx.qp(op.inputs[0]);
+    let fused = CAct::fused(cx.dtype, act, out_q);
+    let o = dst.flat_ptr();
+    if cx.dtype == DType::I8 {
+        h.requant = true;
+        let fm = fixed_mult(in_q.scale, cx.qp(op.weights[0]).scale, out_q.scale)?;
+        cw.l(format!("const int8_t *x = {};", cx.t(op.inputs[0])));
+        cw.l(format!("int8_t *o = {o};"));
+        cw.l(format!("int32_t acc[{n_out}];"));
+        cw.l(format!("for (int oi = 0; oi < {n_out}; oi++) acc[oi] = {b}[{}];", shifted("oi", col0)));
+        cw.open(format!("for (int i = 0; i < {n_in}; i++) {{"));
+        let zp = in_q.zero_point;
+        if zp == 0 {
+            cw.l("int32_t iv = (int32_t)x[i];");
+        } else {
+            cw.l(format!("int32_t iv = (int32_t)x[i] - {zp};"));
+        }
+        cw.l("if (iv == 0) continue;");
+        let wrow = if col0 == 0 { format!("{w} + i * {n_cols}") } else { format!("{w} + i * {n_cols} + {col0}") };
+        cw.l(format!("const int8_t *pw = {wrow};"));
+        cw.l(format!("for (int oi = 0; oi < {n_out}; oi++) acc[oi] += iv * (int32_t)pw[oi];"));
+        cw.close();
+        cw.open(format!("for (int oi = 0; oi < {n_out}; oi++) {{"));
+        cw.l(format!(
+            "int8_t q = {}_requant(acc[oi], {}, {}, {});",
+            cx.sym, fm.m, fm.sh, out_q.zero_point
+        ));
+        fused.apply(cw, "q");
+        cw.l("o[oi] = q;");
+        cw.close();
+    } else {
+        cw.l(format!("const float *x = {};", cx.t(op.inputs[0])));
+        cw.l(format!("float *o = {o};"));
+        cw.open(format!("for (int oi = 0; oi < {n_out}; oi++) {{"));
+        cw.l(format!("float a = {b}[{}];", shifted("oi", col0)));
+        let wi = if col0 == 0 { format!("i * {n_cols} + oi") } else { format!("i * {n_cols} + {col0} + oi") };
+        cw.l(format!("for (int i = 0; i < {n_in}; i++) a += x[i] * {w}[{wi}];"));
+        fused.apply(cw, "a");
+        cw.l("o[oi] = a;");
+        cw.close();
+    }
+    Ok(())
+}
+
+/// Elementwise Add — f32 direct, i8 via the dequant/requant round trip of
+/// `quant::add_i8` (f64 intermediates, scale ratios folded at gen time).
+fn emit_add(cx: &Ctx, cw: &mut Cw, h: &mut Helpers, op: &Op) -> Result<()> {
+    if op.inputs.len() != 2 {
+        bail!("codegen: Add `{}` with {} inputs", op.name, op.inputs.len());
+    }
+    let n = cx.elems(op.output);
+    let (a, b, o) = (cx.t(op.inputs[0]), cx.t(op.inputs[1]), cx.t(op.output));
+    if cx.dtype == DType::F32 {
+        cw.l(format!("const float *a = {a};"));
+        cw.l(format!("const float *b = {b};"));
+        cw.l(format!("float *o = {o};"));
+        cw.l(format!("for (int i = 0; i < {n}; i++) o[i] = a[i] + b[i];"));
+        return Ok(());
+    }
+    h.sat_i32_d = true;
+    h.math = true;
+    let (aq, bq, oq) = (cx.qp(op.inputs[0]), cx.qp(op.inputs[1]), cx.qp(op.output));
+    // The interpreter divides the f32 scales first, then widens.
+    let ma = c_f64((aq.scale / oq.scale) as f64)?;
+    let mb = c_f64((bq.scale / oq.scale) as f64)?;
+    cw.l(format!("const int8_t *a = {a};"));
+    cw.l(format!("const int8_t *b = {b};"));
+    cw.l(format!("int8_t *o = {o};"));
+    cw.open(format!("for (int i = 0; i < {n}; i++) {{"));
+    cw.l(format!("double av = (double)((int32_t)a[i] - {}) * {ma};", aq.zero_point));
+    cw.l(format!("double bv = (double)((int32_t)b[i] - {}) * {mb};", bq.zero_point));
+    cw.l(format!("int32_t v = {}_sat_i32_d(round(av + bv)) + {};", cx.sym, oq.zero_point));
+    clamp_i8(cw, "v");
+    cw.l("o[i] = (int8_t)v;");
+    cw.close();
+    Ok(())
+}
+
+/// Channel-axis Concat — f32 row copies; i8 requantizes every element
+/// into the output domain (the interpreter's per-element round trip).
+fn emit_concat(cx: &Ctx, cw: &mut Cw, h: &mut Helpers, op: &Op) -> Result<()> {
+    let osh = Hwc::from_shape(cx.shape(op.output));
+    let ety = cx.ety();
+    cw.l(format!("{ety} *o = {};", cx.t(op.output)));
+    let mut c_off = 0usize;
+    for (pi, &t) in op.inputs.iter().enumerate() {
+        let ish = Hwc::from_shape(cx.shape(t));
+        cw.l(format!("/* part {pi}: c {} at offset {c_off} */", ish.c));
+        cw.open("{");
+        cw.l(format!("const {ety} *p = {};", cx.t(t)));
+        if cx.dtype == DType::F32 {
+            cw.open(format!("for (int y = 0; y < {}; y++) {{", ish.h));
+            cw.open(format!("for (int x_ = 0; x_ < {}; x_++) {{", ish.w));
+            cw.l(format!(
+                "memcpy(o + (y * {} + x_) * {} + {c_off}, p + (y * {} + x_) * {}, {}u);",
+                osh.w,
+                osh.c,
+                ish.w,
+                ish.c,
+                ish.c * 4
+            ));
+            cw.close();
+            cw.close();
+        } else {
+            h.sat_i32_f = true;
+            h.math = true;
+            let iq = cx.qp(t);
+            let oq = cx.qp(op.output);
+            let si = c_f32(iq.scale)?;
+            let so = c_f32(oq.scale)?;
+            cw.open(format!("for (int y = 0; y < {}; y++) {{", ish.h));
+            cw.open(format!("for (int x_ = 0; x_ < {}; x_++) {{", ish.w));
+            cw.open(format!("for (int ch = 0; ch < {}; ch++) {{", ish.c));
+            cw.l(format!(
+                "float v = (float)((int32_t)p[(y * {} + x_) * {} + ch] - {}) * {si};",
+                ish.w, ish.c, iq.zero_point
+            ));
+            cw.l(format!(
+                "int32_t q = {}_sat_i32_f(roundf(v / {so})) + {};",
+                cx.sym, oq.zero_point
+            ));
+            clamp_i8(cw, "q");
+            cw.l(format!(
+                "o[(y * {} + x_) * {} + {c_off} + ch] = (int8_t)q;",
+                osh.w, osh.c
+            ));
+            cw.close();
+            cw.close();
+            cw.close();
+        }
+        cw.close();
+        c_off += ish.c;
+    }
+    Ok(())
+}
+
+/// ConcatSlices: the split join. A pure same-quantization copy in every
+/// dtype — transcribes `ops::concat_slices`' three placement modes.
+fn emit_concat_slices(cx: &Ctx, cw: &mut Cw, op: &Op, axis: SplitAxis) -> Result<()> {
+    let out_shape = cx.shape(op.output).to_vec();
+    let esz = cx.dtype.size();
+    let ety = cx.ety();
+    cw.l(format!("{ety} *o = {};", cx.t(op.output)));
+    if out_shape.len() != 4 || axis == SplitAxis::Rows {
+        let mut off = 0usize;
+        for &t in &op.inputs {
+            let n = cx.elems(t);
+            let dst = if off == 0 { "o".to_string() } else { format!("o + {off}") };
+            cw.l(format!("memcpy({dst}, {}, {}u);", cx.t(t), n * esz));
+            off += n;
+        }
+        return Ok(());
+    }
+    let osh = Hwc::from_shape(&out_shape);
+    match axis {
+        SplitAxis::Cols => {
+            let mut x_off = 0usize;
+            for &t in &op.inputs {
+                let ish = Hwc::from_shape(cx.shape(t));
+                cw.open(format!("for (int y = 0; y < {}; y++) {{", ish.h));
+                cw.l(format!(
+                    "memcpy(o + (y * {} + {x_off}) * {}, {} + y * {}, {}u);",
+                    osh.w,
+                    osh.c,
+                    cx.t(t),
+                    ish.w * ish.c,
+                    ish.w * ish.c * esz
+                ));
+                cw.close();
+                x_off += ish.w;
+            }
+        }
+        SplitAxis::Channels => {
+            let mut c_off = 0usize;
+            for &t in &op.inputs {
+                let ish = Hwc::from_shape(cx.shape(t));
+                cw.open(format!("for (int y = 0; y < {}; y++) {{", ish.h));
+                cw.open(format!("for (int x_ = 0; x_ < {}; x_++) {{", ish.w));
+                cw.l(format!(
+                    "memcpy(o + (y * {} + x_) * {} + {c_off}, {} + (y * {} + x_) * {}, {}u);",
+                    osh.w,
+                    osh.c,
+                    cx.t(t),
+                    ish.w,
+                    ish.c,
+                    ish.c * esz
+                ));
+                cw.close();
+                cw.close();
+                c_off += ish.c;
+            }
+        }
+        SplitAxis::Rows => unreachable!("handled by the flat path"),
+    }
+    Ok(())
+}
+
+/// Max/Avg 2D pooling (whole or band). The i8 path is max-only (the
+/// interpreter rejects i8 avgpool); `-128` seeds the max exactly like
+/// `i8::MIN`, `-INFINITY` like `f32::NEG_INFINITY`, and the f32 max
+/// chain reproduces `maxss` tie behavior via `!(m > t)`.
+fn emit_pool(cx: &Ctx, cw: &mut Cw, h: &mut Helpers, op: &Op, g: &WinGeom, avg: bool, dst: &Dst) -> Result<()> {
+    let (kh, kw) = g.kernel;
+    let (sh, sw) = g.stride;
+    let c = g.osh.c;
+    let ety = cx.ety();
+    let (gy, gx) = (g.guards_y(), g.guards_x());
+    let guarded = gy.0 || gy.1 || gx.0 || gx.1;
+    cw.l(format!("const {ety} *x = {};", cx.t(op.inputs[0])));
+    cw.open(format!("for (int oy = 0; oy < {}; oy++) {{", g.osh.h));
+    cw.open(format!("for (int ox = 0; ox < {}; ox++) {{", g.osh.w));
+    cw.l(format!("{ety} *po = {};", dst.row_ptr("oy", "ox")?));
+    cw.open(format!("for (int ch = 0; ch < {c}; ch++) {{"));
+    if avg {
+        cw.l("float accv = 0.0f;");
+        if guarded {
+            cw.l("int taps = 0;");
+        }
+    } else if cx.dtype == DType::F32 {
+        h.math = true;
+        cw.l("float mv = -INFINITY;");
+    } else {
+        cw.l("int8_t mv = -128;");
+    }
+    cw.open(format!("for (int ky = 0; ky < {kh}; ky++) {{"));
+    emit_tap_guard(cw, "iy", "oy", sh, "ky", g.pad_y, g.ish.h, gy);
+    cw.open(format!("for (int kx = 0; kx < {kw}; kx++) {{"));
+    emit_tap_guard(cw, "ix", "ox", sw, "kx", g.pad_x, g.ish.w, gx);
+    let tap = format!("x[(iy * {} + ix) * {} + ch]", g.ish.w, g.ish.c);
+    if avg {
+        cw.l(format!("accv += {tap};"));
+        if guarded {
+            cw.l("taps++;");
+        }
+    } else if cx.dtype == DType::F32 {
+        cw.l(format!("float tv = {tap};"));
+        cw.l("if (!(mv > tv)) mv = tv;");
+    } else {
+        cw.l(format!("int8_t tv = {tap};"));
+        cw.l("if (tv > mv) mv = tv;");
+    }
+    cw.close(); // kx
+    cw.close(); // ky
+    if avg {
+        if guarded {
+            cw.l("int d = taps;");
+            cw.l("if (d < 1) d = 1;");
+            cw.l("po[ch] = accv / (float)d;");
+        } else {
+            // Every tap is provably in bounds, so the divisor is a
+            // compile-time constant (same value the dynamic count hits).
+            cw.l(format!("po[ch] = accv / {};", c_f32((kh * kw) as f32)?));
+        }
+    } else {
+        cw.l("po[ch] = mv;");
+    }
+    cw.close(); // ch
+    cw.close(); // ox
+    cw.close(); // oy
+    Ok(())
+}
+
+/// GlobalAvgPool — channel-major accumulation exactly like the kernels
+/// (`f32` sums f32; `i8` sums zero-point-shifted i64 then rounds in f64).
+fn emit_gap(cx: &Ctx, cw: &mut Cw, h: &mut Helpers, op: &Op) -> Result<()> {
+    let ish = Hwc::from_shape(cx.shape(op.inputs[0]));
+    let (hh, ww, c) = (ish.h, ish.w, ish.c);
+    let ety = cx.ety();
+    cw.l(format!("const {ety} *x = {};", cx.t(op.inputs[0])));
+    cw.l(format!("{ety} *o = {};", cx.t(op.output)));
+    cw.open(format!("for (int ch = 0; ch < {c}; ch++) {{"));
+    if cx.dtype == DType::F32 {
+        cw.l("float accv = 0.0f;");
+        cw.open(format!("for (int y = 0; y < {hh}; y++) {{"));
+        cw.l(format!("for (int x_ = 0; x_ < {ww}; x_++) accv += x[(y * {ww} + x_) * {c} + ch];"));
+        cw.close();
+        cw.l(format!("o[ch] = accv / {};", c_f32((hh * ww) as f32)?));
+    } else {
+        h.sat_i32_d = true;
+        h.math = true;
+        let q = cx.qp(op.inputs[0]);
+        cw.l("int64_t accv = 0;");
+        cw.open(format!("for (int y = 0; y < {hh}; y++) {{"));
+        let shift = if q.zero_point == 0 { String::new() } else { format!(" - {}", q.zero_point) };
+        cw.l(format!(
+            "for (int x_ = 0; x_ < {ww}; x_++) accv += (int64_t)x[(y * {ww} + x_) * {c} + ch]{shift};"
+        ));
+        cw.close();
+        cw.l(format!(
+            "int32_t mean = {}_sat_i32_d(round((double)accv / {})) + {};",
+            cx.sym,
+            c_f64((hh * ww) as f64)?,
+            q.zero_point
+        ));
+        clamp_i8(cw, "mean");
+        cw.l("o[ch] = (int8_t)mean;");
+    }
+    cw.close();
+    Ok(())
+}
+
+/// Softmax over the flattened tensor — f32 direct; i8 dequantizes, runs
+/// the f32 softmax, then quantizes into the fixed 1/256-scale domain.
+fn emit_softmax(cx: &Ctx, cw: &mut Cw, h: &mut Helpers, op: &Op) -> Result<()> {
+    h.math = true;
+    let n = cx.elems(op.output);
+    if n > (1 << 14) {
+        bail!("codegen: softmax over {n} elements (stack slab too large)");
+    }
+    let (x, o) = (cx.t(op.inputs[0]), cx.t(op.output));
+    if cx.dtype == DType::F32 {
+        cw.l(format!("const float *x = {x};"));
+        cw.l(format!("float *o = {o};"));
+        cw.l("float mv = -INFINITY;");
+        cw.l(format!("for (int i = 0; i < {n}; i++) if (!(mv > x[i])) mv = x[i];"));
+        cw.l("float sum = 0.0f;");
+        cw.open(format!("for (int i = 0; i < {n}; i++) {{"));
+        cw.l("o[i] = expf(x[i] - mv);");
+        cw.l("sum += o[i];");
+        cw.close();
+        cw.l(format!("for (int i = 0; i < {n}; i++) o[i] /= sum;"));
+        return Ok(());
+    }
+    h.sat_i32_f = true;
+    let q = cx.qp(op.inputs[0]);
+    let si = c_f32(q.scale)?;
+    cw.l(format!("const int8_t *x = {x};"));
+    cw.l(format!("int8_t *o = {o};"));
+    cw.l(format!("float xs[{n}];"));
+    cw.l(format!("float ex[{n}];"));
+    cw.l("float mv = -INFINITY;");
+    cw.l("float sum = 0.0f;");
+    cw.open(format!("for (int i = 0; i < {n}; i++) {{"));
+    cw.l(format!("xs[i] = (float)((int32_t)x[i] - {}) * {si};", q.zero_point));
+    cw.l("if (!(mv > xs[i])) mv = xs[i];");
+    cw.close();
+    cw.open(format!("for (int i = 0; i < {n}; i++) {{"));
+    cw.l("ex[i] = expf(xs[i] - mv);");
+    cw.l("sum += ex[i];");
+    cw.close();
+    cw.open(format!("for (int i = 0; i < {n}; i++) {{"));
+    cw.l(format!("int32_t q = {}_sat_i32_f(roundf((ex[i] / sum) * 256.0f)) - 128;", cx.sym));
+    clamp_i8(cw, "q");
+    cw.l("o[i] = (int8_t)q;");
+    cw.close();
+    Ok(())
+}

@@ -1,0 +1,565 @@
+//! AOT code generation: lower a verified [`OptimizeReport`] into a
+//! freestanding, dependency-free C99 artifact with the plan baked in.
+//!
+//! The interpreter ([`crate::interp`]) executes a schedule by dispatching
+//! on `OpKind` at runtime; this backend removes the dispatch entirely. For
+//! each scheduled operator it emits one specialized C function whose loop
+//! bounds, halo paddings, channel-band offsets, quantization multipliers
+//! and arena addresses are all compile-time constants, then strings the
+//! functions together in schedule order behind a single
+//! `<model>_invoke(input, output)` entry point.
+//!
+//! Memory layout is the verified static plan: one `.bss` arena whose size
+//! equals the certificate's `arena_bytes`, tensor slots as `#define`d
+//! offsets into it ([`crate::alloc::StaticPlan::best_fit`]), and weights
+//! as `static const` `.rodata` tables. Nothing is allocated at runtime
+//! and the only libc dependencies are `memcpy` and (when the model uses
+//! softmax / batch-norm / int8 rounding) `<math.h>`.
+//!
+//! The contract with the interpreter is *bit-exactness*: the generated
+//! harness ([`Artifact::harness`]) drives the compiled artifact with the
+//! audit's deterministic input and byte-compares every output against the
+//! interpreter's. CI compiles every zoo model and the int8 TFLite fixture
+//! with `cc -std=c99 -Wall -Werror` and runs that harness.
+
+mod emit;
+
+use std::collections::HashMap;
+
+use crate::alloc::{CompactPolicy, StaticPlan};
+use crate::api::OptimizeReport;
+use crate::graph::{DType, Graph, OpId, OpKind};
+use crate::interp::{ExecConfig, Interpreter, TensorData, WeightStore};
+use crate::trace::audit;
+use crate::util::error::{anyhow, bail, Result};
+
+use emit::{Ctx, Cw, Helpers};
+
+/// A generated C artifact plus the metadata front-ends report on.
+pub struct Artifact {
+    /// Sanitized C identifier prefix (`<symbol>_invoke`, `<symbol>_arena`).
+    pub symbol: String,
+    /// File name the source `#include`s the header by (`<symbol>.h`).
+    pub header_name: String,
+    /// Public header: arena/io sizes and the `invoke` prototype.
+    pub header: String,
+    /// The model: weights, arena, one function per scheduled op, `invoke`.
+    pub source: String,
+    /// Standalone golden-equivalence `main`: feeds the audit input and
+    /// byte-compares the output against the interpreter's (exit 0/1).
+    pub harness: String,
+    /// Activation dtype label (`f32` / `i8` / `u8`).
+    pub dtype: &'static str,
+    /// Declared size of the static arena — equals the certificate's.
+    pub arena_bytes: usize,
+    /// Scheduler's analytic peak from the certificate.
+    pub peak_bytes: usize,
+    /// Total bytes of emitted `static const` weight tables.
+    pub rodata_bytes: usize,
+    /// Scheduled operator count (= emitted step functions).
+    pub n_ops: usize,
+    pub input_elems: usize,
+    pub output_elems: usize,
+}
+
+impl Artifact {
+    /// The source with the header inlined in place of its `#include` —
+    /// a single self-contained `.c` file (what `plan-serve` ships).
+    pub fn single_file(&self) -> String {
+        let inc = format!("#include \"{}\"\n", self.header_name);
+        self.source.replacen(&inc, &self.header, 1)
+    }
+}
+
+/// Reduce `name` to a C identifier: alphanumerics pass through
+/// (lowercased), everything else becomes `_`, and a leading digit gets an
+/// `m` prefix so `7seg.tflite` still yields a legal symbol.
+pub fn sanitize_symbol(name: &str) -> String {
+    let mut s = String::with_capacity(name.len());
+    for ch in name.chars() {
+        if ch.is_ascii_alphanumeric() {
+            s.push(ch.to_ascii_lowercase());
+        } else {
+            s.push('_');
+        }
+    }
+    if s.is_empty() || s.starts_with(|c: char| c.is_ascii_digit()) {
+        s.insert(0, 'm');
+    }
+    s
+}
+
+/// The weight store matching `report`'s graph: the imported store for
+/// `.tflite` sources, the zoo preparation at the graph's dtype otherwise.
+pub fn weights_for_report(report: &OptimizeReport) -> Result<WeightStore> {
+    if let Some(src) = &report.tflite {
+        return Ok(src.imported.weights.clone());
+    }
+    let want = dtype_label(report.graph.tensors[report.graph.inputs[0]].dtype)?;
+    let prepared = audit::prepare_zoo(&report.model).map_err(|e| anyhow!("{e}"))?;
+    prepared
+        .into_iter()
+        .find(|p| p.dtype == want)
+        .map(|p| p.ws)
+        .ok_or_else(|| anyhow!("no {want} weights prepared for zoo model {}", report.model))
+}
+
+fn dtype_label(d: DType) -> Result<&'static str> {
+    Ok(match d {
+        DType::F32 => "f32",
+        DType::I8 => "i8",
+        DType::U8 => "u8",
+        DType::I32 => bail!("i32 activations are not a supported codegen dtype"),
+    })
+}
+
+/// Lower `report` (with its weights) into a C artifact named `symbol`.
+///
+/// Re-runs the independent verifier first — codegen refuses to emit a
+/// plan it cannot certify — and asserts the emitted arena size equals the
+/// certificate's before returning.
+pub fn generate(report: &OptimizeReport, ws: &WeightStore, symbol: &str) -> Result<Artifact> {
+    let cert = crate::verify::certify_report(report).map_err(|e| anyhow!("verify: {e}"))?;
+
+    // The deployed plan: the split twin when a split search committed one,
+    // the reorder-only optimum otherwise.
+    let (g, order, ws_final): (&Graph, Vec<OpId>, WeightStore) = match &report.split {
+        Some(s) => (
+            &s.outcome.graph,
+            s.outcome.schedule.order.clone(),
+            s.outcome.remap_weights(ws),
+        ),
+        None => (&report.graph, report.reordered.order.clone(), ws.clone()),
+    };
+
+    if g.inputs.len() != 1 || g.outputs.len() != 1 {
+        bail!(
+            "codegen supports single-input/single-output graphs ({} has {} inputs, {} outputs)",
+            report.model,
+            g.inputs.len(),
+            g.outputs.len()
+        );
+    }
+    let dtype = g.tensors[g.inputs[0]].dtype;
+    let dlabel = dtype_label(dtype)?;
+    for t in &g.tensors {
+        if !t.is_weight && t.dtype != dtype {
+            bail!(
+                "mixed activation dtypes ({} is {}, input is {})",
+                t.name,
+                t.dtype.name(),
+                dtype.name()
+            );
+        }
+    }
+    let esize = dtype.size();
+
+    // The static layout. `certify_report` independently recomputes and
+    // checks this same plan, so equality here means the emitted `#define`s
+    // carry *certified* offsets, not merely recomputed ones.
+    let plan = StaticPlan::best_fit(g, &order);
+    if plan.arena_bytes != cert.arena_bytes {
+        bail!(
+            "arena mismatch: best-fit plan wants {} B, certificate says {} B",
+            plan.arena_bytes,
+            cert.arena_bytes
+        );
+    }
+    if plan.arena_bytes % esize != 0 {
+        bail!("arena size {} not a multiple of element size {esize}", plan.arena_bytes);
+    }
+    let mut off: HashMap<usize, usize> = HashMap::new();
+    for (&tid, &byte_off) in &plan.offsets {
+        if byte_off % esize != 0 {
+            bail!("tensor t{tid} offset {byte_off} not a multiple of element size {esize}");
+        }
+        off.insert(tid, byte_off / esize);
+    }
+    // `PartialInto` writes its band straight through the accumulator slot;
+    // the emitter skips the interpreter's copy-accumulator step on the
+    // strength of this aliasing, so prove it holds.
+    for op in &g.ops {
+        if matches!(op.kind, OpKind::PartialInto { .. }) {
+            if let Some(&acc) = op.inputs.get(1) {
+                if off.get(&op.output) != off.get(&acc) {
+                    bail!(
+                        "{}: PartialInto output t{} does not alias accumulator t{acc}",
+                        op.name,
+                        op.output
+                    );
+                }
+            }
+        }
+    }
+
+    let sym = sanitize_symbol(symbol);
+    let cx = Ctx { sym: sym.clone(), g, ws: &ws_final, off, dtype };
+
+    // Phase 1: lower every scheduled op, recording which shared helpers
+    // the steps actually reference.
+    let mut h = Helpers::default();
+    let mut steps = String::new();
+    for (i, &oid) in order.iter().enumerate() {
+        steps.push_str(&emit::emit_step(&cx, i, &g.ops[oid], &mut h)?);
+        steps.push('\n');
+    }
+
+    // Phase 2: assemble the translation unit around them.
+    let (weights_c, rodata_bytes) = render_weights(&cx, &order)?;
+    let input_elems = g.tensors[g.inputs[0]].elems();
+    let output_elems = g.tensors[g.outputs[0]].elems();
+
+    let header_name = format!("{sym}.h");
+    let header = render_header(
+        &sym,
+        dtype,
+        plan.arena_bytes,
+        cert.peak_bytes,
+        rodata_bytes,
+        input_elems,
+        output_elems,
+    );
+    let source = render_source(&cx, report, &header_name, &h, &weights_c, &steps, &plan, &order);
+    let harness = render_harness(&cx, g, &order, &ws_final, plan.arena_bytes)?;
+
+    Ok(Artifact {
+        symbol: sym,
+        header_name,
+        header,
+        source,
+        harness,
+        dtype: dlabel,
+        arena_bytes: plan.arena_bytes,
+        peak_bytes: cert.peak_bytes,
+        rodata_bytes,
+        n_ops: order.len(),
+        input_elems,
+        output_elems,
+    })
+}
+
+/// `static const` tables for every weight tensor a scheduled op touches,
+/// in tensor-id order. Returns the C text and the total `.rodata` bytes.
+fn render_weights(cx: &Ctx, order: &[OpId]) -> Result<(String, usize)> {
+    let mut tids: Vec<usize> = Vec::new();
+    for &oid in order {
+        let op = &cx.g.ops[oid];
+        for &t in op.weights.iter().chain(op.inputs.iter()) {
+            if cx.g.tensors[t].is_weight && !tids.contains(&t) {
+                tids.push(t);
+            }
+        }
+    }
+    tids.sort_unstable();
+
+    let mut out = String::new();
+    let mut bytes = 0usize;
+    for t in tids {
+        let data = cx
+            .ws
+            .data
+            .get(&t)
+            .ok_or_else(|| anyhow!("weight tensor t{t} ({}) has no payload", cx.g.tensors[t].name))?;
+        if data.len() != cx.g.tensors[t].elems() {
+            bail!(
+                "weight tensor t{t} payload has {} elements, shape wants {}",
+                data.len(),
+                cx.g.tensors[t].elems()
+            );
+        }
+        let (cty, esz) = match data {
+            TensorData::F32(_) => ("float", 4),
+            TensorData::I8(_) => ("int8_t", 1),
+            TensorData::I32(_) => ("int32_t", 4),
+            TensorData::U8(_) => ("uint8_t", 1),
+        };
+        bytes += data.len() * esz;
+        out.push_str(&format!(
+            "/* {} {:?} */\nstatic const {cty} {}[{}] = {{\n",
+            cx.g.tensors[t].name,
+            cx.g.tensors[t].shape,
+            cx.w(t),
+            data.len()
+        ));
+        let mut line = String::from("   ");
+        let mut push = |line: &mut String, out: &mut String, lit: String| {
+            line.push(' ');
+            line.push_str(&lit);
+            line.push(',');
+            if line.len() >= 96 {
+                out.push_str(line);
+                out.push('\n');
+                line.clear();
+                line.push_str("   ");
+            }
+        };
+        match data {
+            TensorData::F32(v) => {
+                for &x in v {
+                    push(&mut line, &mut out, emit::c_f32(x)?);
+                }
+            }
+            TensorData::I8(v) => {
+                for &x in v {
+                    push(&mut line, &mut out, x.to_string());
+                }
+            }
+            TensorData::I32(v) => {
+                for &x in v {
+                    push(&mut line, &mut out, x.to_string());
+                }
+            }
+            TensorData::U8(v) => {
+                for &x in v {
+                    push(&mut line, &mut out, x.to_string());
+                }
+            }
+        }
+        if !line.trim().is_empty() {
+            out.push_str(&line);
+            out.push('\n');
+        }
+        out.push_str("};\n\n");
+    }
+    Ok((out, bytes))
+}
+
+fn render_header(
+    sym: &str,
+    dtype: DType,
+    arena_bytes: usize,
+    peak_bytes: usize,
+    rodata_bytes: usize,
+    input_elems: usize,
+    output_elems: usize,
+) -> String {
+    let up = sym.to_ascii_uppercase();
+    let ety = match dtype {
+        DType::F32 => "float",
+        DType::I8 => "int8_t",
+        DType::U8 => "uint8_t",
+        DType::I32 => "int32_t",
+    };
+    let mut w = Cw::new();
+    w.l(format!("/* {sym}: generated by mcu-reorder codegen -- do not edit. */"));
+    w.l(format!("#ifndef {up}_H"));
+    w.l(format!("#define {up}_H"));
+    w.l("");
+    w.l("#include <stdint.h>");
+    w.l("");
+    w.l("/* Static activation arena, sized to the certified plan peak. */");
+    w.l(format!("#define {up}_ARENA_BYTES {arena_bytes}u"));
+    w.l(format!("#define {up}_PEAK_BYTES {peak_bytes}u"));
+    w.l(format!("#define {up}_RODATA_BYTES {rodata_bytes}u"));
+    w.l(format!("#define {up}_INPUT_ELEMS {input_elems}u"));
+    w.l(format!("#define {up}_OUTPUT_ELEMS {output_elems}u"));
+    w.l("");
+    w.l(format!("/* One inference: reads input[{up}_INPUT_ELEMS], writes"));
+    w.l(format!(" * output[{up}_OUTPUT_ELEMS]. Not reentrant (static arena). */"));
+    w.l(format!("void {sym}_invoke(const {ety} *input, {ety} *output);"));
+    w.l("");
+    w.l(format!("#endif /* {up}_H */"));
+    w.finish()
+}
+
+#[allow(clippy::too_many_arguments)]
+fn render_source(
+    cx: &Ctx,
+    report: &OptimizeReport,
+    header_name: &str,
+    h: &Helpers,
+    weights_c: &str,
+    steps: &str,
+    plan: &StaticPlan,
+    order: &[OpId],
+) -> String {
+    let sym = &cx.sym;
+    let g = cx.g;
+    let ety = cx.ety();
+    let esize = cx.dtype.size();
+    let mut w = Cw::new();
+    w.l(format!(
+        "/* Model `{}` ({} scheduled ops, {} activations) lowered by",
+        report.model,
+        order.len(),
+        cx.dtype.name()
+    ));
+    w.l(" * mcu-reorder codegen. Operator order and arena offsets are the");
+    w.l(" * verified plan; edit the model, not this file. */");
+    w.l("");
+    w.l(format!("#include \"{header_name}\""));
+    w.l("");
+    w.l("#include <string.h>");
+    if h.math {
+        w.l("#include <math.h>");
+    }
+    w.l("");
+
+    if h.sat_i32_f {
+        w.l("/* f32 -> i32 cast with Rust `as` semantics (saturating, NaN -> 0). */");
+        w.open(format!("static int32_t {sym}_sat_i32_f(float v) {{"));
+        w.l("if (v != v) return 0;");
+        w.l("if (v >= 2147483648.0f) return INT32_MAX;");
+        w.l("if (v < -2147483648.0f) return INT32_MIN;");
+        w.l("return (int32_t)v;");
+        w.close();
+        w.l("");
+    }
+    if h.sat_i32_d {
+        w.l("/* f64 -> i32 cast with Rust `as` semantics (saturating, NaN -> 0). */");
+        w.open(format!("static int32_t {sym}_sat_i32_d(double v) {{"));
+        w.l("if (v != v) return 0;");
+        w.l("if (v >= 2147483648.0) return INT32_MAX;");
+        w.l("if (v < -2147483648.0) return INT32_MIN;");
+        w.l("return (int32_t)v;");
+        w.close();
+        w.l("");
+    }
+    if h.requant {
+        w.l("/* Fixed-point requantization: round-half-up multiply-shift with the");
+        w.l(" * normalized multiplier baked in at generation time (interp::quant). */");
+        w.open(format!(
+            "static int8_t {sym}_requant(int32_t acc, int64_t mult, int shift, int32_t zp) {{"
+        ));
+        w.l("int64_t prod = (int64_t)acc * mult;");
+        w.l("int32_t v = (int32_t)((prod + ((int64_t)1 << (shift - 1))) >> shift) + zp;");
+        w.l("if (v < -128) v = -128;");
+        w.l("if (v > 127) v = 127;");
+        w.l("return (int8_t)v;");
+        w.close();
+        w.l("");
+    }
+
+    let mut s = w.finish();
+    if !weights_c.is_empty() {
+        s.push_str("/* -------- weights (.rodata) -------- */\n\n");
+        s.push_str(weights_c);
+    }
+
+    s.push_str("/* -------- activation arena (.bss) -------- */\n\n");
+    let mut w = Cw::new();
+    w.l(format!("static {ety} {sym}_arena[{}];", plan.arena_bytes / esize));
+    w.l("");
+    let mut tids: Vec<usize> = cx.off.keys().copied().collect();
+    tids.sort_unstable();
+    for t in tids {
+        w.l(format!(
+            "#define {} ({sym}_arena + {}) /* {} {:?} */",
+            cx.t(t),
+            cx.off[&t],
+            g.tensors[t].name,
+            g.tensors[t].shape
+        ));
+    }
+    w.l("");
+    s.push_str(&w.finish());
+
+    s.push_str(steps);
+
+    let mut w = Cw::new();
+    let in_t = g.inputs[0];
+    let out_t = g.outputs[0];
+    w.open(format!("void {sym}_invoke(const {ety} *input, {ety} *output) {{"));
+    w.l(format!(
+        "memcpy({}, input, {}u);",
+        cx.t(in_t),
+        g.tensors[in_t].elems() * esize
+    ));
+    for i in 0..order.len() {
+        w.l(format!("{sym}_step{i}();"));
+    }
+    w.l(format!(
+        "memcpy(output, {}, {}u);",
+        cx.t(out_t),
+        g.tensors[out_t].elems() * esize
+    ));
+    w.close();
+    s.push_str(&w.finish());
+    s
+}
+
+/// Standalone `main` asserting bit-exact equivalence with the interpreter
+/// run at the same schedule: compile-time arena-size check, audit input
+/// baked in as bytes, byte-for-byte output compare.
+fn render_harness(
+    cx: &Ctx,
+    g: &Graph,
+    order: &[OpId],
+    ws: &WeightStore,
+    arena_bytes: usize,
+) -> Result<String> {
+    let inputs = audit::inputs_for(g, ws).map_err(|e| anyhow!("{e}"))?;
+    let interp = Interpreter::new(
+        g,
+        ws.clone(),
+        ExecConfig {
+            arena_bytes: 1 << 24,
+            policy: CompactPolicy::EveryOp,
+            order: Some(order.to_vec()),
+        },
+    );
+    let result = interp.run(&inputs).map_err(|e| anyhow!("interpreter: {e}"))?;
+    let input_bytes = inputs[0].to_bytes();
+    let expected = result.outputs[0].to_bytes();
+
+    let sym = &cx.sym;
+    let up = sym.to_ascii_uppercase();
+    let ety = cx.ety();
+    let mut w = Cw::new();
+    w.l(format!("/* Golden-equivalence harness for `{sym}`: feeds the audit's"));
+    w.l(" * deterministic input and byte-compares the output against the Rust");
+    w.l(" * interpreter's (baked in below). Exit 0 on exact match. */");
+    w.l("");
+    w.l("#include <stdio.h>");
+    w.l("#include <string.h>");
+    w.l("");
+    w.l(format!("#include \"{sym}.h\""));
+    w.l("");
+    w.l("/* The artifact must declare exactly the certified arena size. */");
+    w.l(format!(
+        "typedef char {sym}_arena_size_check[({up}_ARENA_BYTES == {arena_bytes}u) ? 1 : -1];"
+    ));
+    w.l("");
+    let mut s = w.finish();
+    s.push_str(&render_byte_array(&format!("{sym}_input_bytes"), &input_bytes));
+    s.push('\n');
+    s.push_str(&render_byte_array(&format!("{sym}_expected_bytes"), &expected));
+    s.push('\n');
+
+    let mut w = Cw::new();
+    w.open("int main(void) {");
+    w.l(format!("static {ety} in[{up}_INPUT_ELEMS];"));
+    w.l(format!("static {ety} out[{up}_OUTPUT_ELEMS];"));
+    w.l(format!("memcpy(in, {sym}_input_bytes, sizeof in);"));
+    w.l(format!("{sym}_invoke(in, out);"));
+    w.l("const unsigned char *got = (const unsigned char *)out;");
+    w.open(format!("for (unsigned i = 0; i < sizeof {sym}_expected_bytes; i++) {{"));
+    w.open(format!("if (got[i] != {sym}_expected_bytes[i]) {{"));
+    w.l(format!(
+        "fprintf(stderr, \"{sym}: mismatch at byte %u: got %02x want %02x\\n\","
+    ));
+    w.l(format!("        i, got[i], {sym}_expected_bytes[i]);"));
+    w.l("return 1;");
+    w.close();
+    w.close();
+    w.l(format!(
+        "printf(\"{sym}: OK (%u output bytes bit-exact)\\n\", (unsigned)sizeof {sym}_expected_bytes);"
+    ));
+    w.l("return 0;");
+    w.close();
+    s.push_str(&w.finish());
+    Ok(s)
+}
+
+fn render_byte_array(name: &str, bytes: &[u8]) -> String {
+    let mut s = format!("static const unsigned char {name}[{}] = {{\n", bytes.len());
+    for chunk in bytes.chunks(16) {
+        s.push_str("   ");
+        for b in chunk {
+            s.push_str(&format!(" {b},"));
+        }
+        s.push('\n');
+    }
+    s.push_str("};\n");
+    s
+}

@@ -16,12 +16,21 @@
 //! ```text
 //! PLAN <model> <board> [budget]   → OK <summary-json> | SHED … | ERR …
 //! GET <model> <board> [budget]    → OK <plan-json> | SHED … | ERR …
+//! ARTIFACT <TFLITE|C> <model> <board> [budget]
+//!                                 → OK <nbytes>\n<raw bytes> | ERR …
 //! UPLOAD <label> <nbytes>\n<raw bytes> → OK <hash16> | ERR …
 //! STATS                           → OK <stats-json>
 //! BOARDS                          → OK <boards-json>
 //! MODELS                          → OK <name,name,…>
 //! QUIT / empty line               → close
 //! ```
+//!
+//! `ARTIFACT` is download-only: it serves the deployable bytes attached
+//! to an *already cached, verified* plan — the reordered `.tflite`
+//! flatbuffer (`TFLITE`, upload-sourced plans only) or the generated
+//! single-file C source (`C`, [`crate::codegen`]) — and never triggers
+//! planning. An uncached key is an `ERR plan not cached` reply, so a
+//! device cannot use the download path to bypass admission control.
 //!
 //! `<model>` is a zoo name or `hash:<16-hex>` naming a prior upload;
 //! `<board>` is a [`crate::mcu::boards`] name (case-insensitive);
@@ -124,6 +133,13 @@ pub struct CachedPlan {
     /// refuses to serve a cached plan without this — an unverified entry
     /// is treated as a miss and re-planned.
     pub verified: bool,
+    /// Reordered `.tflite` bytes (`ARTIFACT TFLITE`); `None` for zoo
+    /// models, which have no flatbuffer source.
+    pub tflite: Option<Arc<Vec<u8>>>,
+    /// Generated single-file C source (`ARTIFACT C`,
+    /// [`crate::codegen::Artifact::single_file`]); `None` when the plan's
+    /// graph is outside the codegen-supported surface.
+    pub c_source: Option<Arc<String>>,
 }
 
 /// Why a request was not served.
@@ -337,6 +353,30 @@ impl PlanService {
         }
     }
 
+    /// Cache-only lookup for `ARTIFACT`: resolves the same key as
+    /// [`Self::submit`] but never plans, never queues and never sheds —
+    /// an absent (or unverified) entry is simply `None`. Downloads are a
+    /// read-side path; a device cannot use them to bypass admission
+    /// control.
+    pub fn cached(
+        &self,
+        req: &PlanRequest,
+    ) -> std::result::Result<Option<Arc<CachedPlan>>, PlanError> {
+        let effective = req.budget.unwrap_or(req.board.sram_bytes);
+        let (source, model_hash) = self.resolve_model_ref(&req.model)?;
+        let request = OptimizeRequest {
+            source,
+            budget: Some(effective),
+            board: req.board,
+            split: Some(self.cfg.split.clone()),
+            compare_materialized: false,
+            trace: false,
+        };
+        let key = PlanKey { model_hash, budget: effective, opts_fp: request.options_fingerprint() };
+        let mut st = self.state.lock().unwrap();
+        Ok(st.cache.get(&key).filter(|p| p.verified))
+    }
+
     /// Non-blocking admission: cache hit → `Ready`, otherwise enqueue (or
     /// coalesce) → `Pending`, or shed when the queue is full.
     pub fn submit(&self, req: &PlanRequest) -> std::result::Result<Submission, PlanError> {
@@ -441,6 +481,16 @@ impl PlanService {
             let reply: PlanReply = match result {
                 Ok(report) => {
                     let best = report.best_peak();
+                    // Deployable artifacts ride on the cache entry so
+                    // `ARTIFACT` downloads never re-plan: the reordered
+                    // flatbuffer (`.tflite` sources only) and the
+                    // generated C. Either may legitimately be absent;
+                    // the download path reports that per request.
+                    let tflite = report.reordered_tflite_bytes().ok().map(Arc::new);
+                    let c_source = crate::codegen::weights_for_report(&report)
+                        .and_then(|ws| crate::codegen::generate(&report, &ws, &report.model))
+                        .ok()
+                        .map(|a| Arc::new(a.single_file()));
                     Ok(Arc::new(CachedPlan {
                         key: job.key,
                         model: report.model.clone(),
@@ -458,6 +508,8 @@ impl PlanService {
                         summary: Arc::new(report.summary_json().to_string()),
                         json: Arc::new(report.to_json().to_string()),
                         verified: report.verified,
+                        tflite,
+                        c_source,
                     }))
                 }
                 Err(e) => Err(PlanError::Internal(format!("{e:#}"))),
@@ -660,35 +712,87 @@ fn plan_request_from(parts: &[&str]) -> std::result::Result<PlanRequest, String>
     Ok(PlanRequest { model, board, budget })
 }
 
-/// Handle one protocol line. Returns the reply and whether to close the
-/// connection afterwards.
+/// `ARTIFACT <TFLITE|C> <model> <board> [budget]`: serve the deployable
+/// bytes riding on an already cached, verified plan. Download-only — an
+/// uncached key is an error, never a planning trigger.
+fn artifact_reply(svc: &Arc<PlanService>, parts: &[&str]) -> Vec<u8> {
+    if parts.len() < 4 || parts.len() > 5 {
+        return b"ERR usage: ARTIFACT <TFLITE|C> <model> <board> [budget]\n".to_vec();
+    }
+    let kind = parts[1].to_ascii_uppercase();
+    if kind != "TFLITE" && kind != "C" {
+        return format!("ERR unknown artifact kind {:?} (TFLITE|C)\n", parts[1]).into_bytes();
+    }
+    // Key tokens in PLAN position: ARTIFACT <kind> <model> <board> [budget].
+    let mut key_parts: Vec<&str> = vec![parts[0]];
+    key_parts.extend_from_slice(&parts[2..]);
+    let req = match plan_request_from(&key_parts) {
+        Ok(r) => r,
+        Err(msg) => return format!("ERR {msg}\n").into_bytes(),
+    };
+    let plan = match svc.cached(&req) {
+        Ok(Some(p)) => p,
+        Ok(None) => {
+            return format!(
+                "ERR plan not cached for {} on {}; PLAN it first\n",
+                parts[2], parts[3]
+            )
+            .into_bytes()
+        }
+        Err(e) => return format!("ERR {e}\n").into_bytes(),
+    };
+    let payload: Option<Vec<u8>> = match kind.as_str() {
+        "TFLITE" => plan.tflite.as_ref().map(|b| b.as_ref().clone()),
+        _ => plan.c_source.as_ref().map(|s| s.as_bytes().to_vec()),
+    };
+    match payload {
+        Some(bytes) => {
+            let mut out = format!("OK {}\n", bytes.len()).into_bytes();
+            out.extend_from_slice(&bytes);
+            out
+        }
+        None if kind == "TFLITE" => {
+            format!("ERR no .tflite source for {} (zoo models have no flatbuffer)\n", parts[2])
+                .into_bytes()
+        }
+        None => format!("ERR no C artifact for {} (unsupported graph surface)\n", parts[2])
+            .into_bytes(),
+    }
+}
+
+/// Handle one protocol line. Returns the reply (raw bytes — `ARTIFACT`
+/// replies carry a binary body) and whether to close the connection
+/// afterwards.
 fn dispatch_line<R: BufRead>(
     svc: &Arc<PlanService>,
     line: &str,
     reader: &mut R,
-) -> (String, bool) {
+) -> (Vec<u8>, bool) {
     let parts: Vec<&str> = line.split_whitespace().collect();
     match parts[0].to_ascii_uppercase().as_str() {
         cmd @ ("PLAN" | "GET") => match plan_request_from(&parts) {
-            Err(msg) => (format!("ERR {msg}\n"), false),
+            Err(msg) => (format!("ERR {msg}\n").into_bytes(), false),
             Ok(req) => match svc.plan(&req) {
                 Ok(plan) => {
                     let doc = if cmd == "GET" { &plan.json } else { &plan.summary };
-                    (format!("OK {doc}\n"), false)
+                    (format!("OK {doc}\n").into_bytes(), false)
                 }
                 Err(PlanError::Shed { depth }) => {
-                    (format!("SHED queue full ({depth} pending)\n"), false)
+                    (format!("SHED queue full ({depth} pending)\n").into_bytes(), false)
                 }
-                Err(e) => (format!("ERR {e}\n"), false),
+                Err(e) => (format!("ERR {e}\n").into_bytes(), false),
             },
         },
+        "ARTIFACT" => (artifact_reply(svc, &parts), false),
         "UPLOAD" => {
             if parts.len() != 3 {
-                return ("ERR usage: UPLOAD <label> <nbytes>\n".to_string(), false);
+                return (b"ERR usage: UPLOAD <label> <nbytes>\n".to_vec(), false);
             }
             let n: usize = match parts[2].parse() {
                 Ok(n) => n,
-                Err(_) => return (format!("ERR bad byte count {:?}\n", parts[2]), false),
+                Err(_) => {
+                    return (format!("ERR bad byte count {:?}\n", parts[2]).into_bytes(), false)
+                }
             };
             if n > svc.cfg.max_upload_bytes {
                 // The body cannot be skipped without reading it; close.
@@ -696,20 +800,21 @@ fn dispatch_line<R: BufRead>(
                     format!(
                         "ERR upload too large: {n} B (max {} B)\n",
                         svc.cfg.max_upload_bytes
-                    ),
+                    )
+                    .into_bytes(),
                     true,
                 );
             }
             let mut bytes = vec![0u8; n];
             if reader.read_exact(&mut bytes).is_err() {
-                return ("ERR short upload body\n".to_string(), true);
+                return (b"ERR short upload body\n".to_vec(), true);
             }
             match svc.upload(parts[1].to_string(), bytes) {
-                Ok(h) => (format!("OK {h:016x}\n"), false),
-                Err(e) => (format!("ERR {e}\n"), false),
+                Ok(h) => (format!("OK {h:016x}\n").into_bytes(), false),
+                Err(e) => (format!("ERR {e}\n").into_bytes(), false),
             }
         }
-        "STATS" => (format!("OK {}\n", svc.stats_json().to_string()), false),
+        "STATS" => (format!("OK {}\n", svc.stats_json().to_string()).into_bytes(), false),
         "BOARDS" => {
             let arr = Json::Arr(
                 boards::ALL_BOARDS
@@ -722,11 +827,14 @@ fn dispatch_line<R: BufRead>(
                     })
                     .collect(),
             );
-            (format!("OK {}\n", arr.to_string()), false)
+            (format!("OK {}\n", arr.to_string()).into_bytes(), false)
         }
-        "MODELS" => (format!("OK {}\n", models::MODEL_NAMES.join(",")), false),
+        "MODELS" => (format!("OK {}\n", models::MODEL_NAMES.join(",")).into_bytes(), false),
         other => (
-            format!("ERR unknown command {other:?} (PLAN|GET|UPLOAD|STATS|BOARDS|MODELS|QUIT)\n"),
+            format!(
+                "ERR unknown command {other:?} (PLAN|GET|ARTIFACT|UPLOAD|STATS|BOARDS|MODELS|QUIT)\n"
+            )
+            .into_bytes(),
             false,
         ),
     }
@@ -755,7 +863,7 @@ fn handle_plan_client(svc: &Arc<PlanService>, stream: TcpStream) {
             return;
         }
         let (reply, close) = dispatch_line(svc, line, &mut reader);
-        if writer.write_all(reply.as_bytes()).is_err() {
+        if writer.write_all(&reply).is_err() {
             return;
         }
         if close {

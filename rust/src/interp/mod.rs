@@ -200,7 +200,7 @@ impl WeightStore {
 /// stores its effective padding on the op; the orthogonal spatial axis is
 /// full-size on the slab, so its padding derives from the inner op's mode
 /// exactly as the unsplit kernel would compute it.
-fn partial_pads(
+pub(crate) fn partial_pads(
     axis: SplitAxis,
     pad: isize,
     ish: Hwc,
@@ -221,7 +221,7 @@ fn partial_pads(
 /// Shape of the band a [`OpKind::PartialInto`] slice computes: the full
 /// join shape with the split-axis extent replaced by `len` (dimension
 /// selection shared with the IR via [`crate::graph::axis_dim_of`]).
-fn band_shape_of(full: &[usize], axis: SplitAxis, len: usize) -> Vec<usize> {
+pub(crate) fn band_shape_of(full: &[usize], axis: SplitAxis, len: usize) -> Vec<usize> {
     let mut s = full.to_vec();
     let d = crate::graph::axis_dim_of(&s, axis);
     s[d] = len;

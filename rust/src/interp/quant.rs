@@ -63,13 +63,16 @@ impl QuantParams {
 /// rescaling is both what a real MCU kernel does and measurably faster
 /// than per-element f64 (perf pass, EXPERIMENTS.md §Perf).
 #[derive(Clone, Copy, Debug)]
-struct FixedMult {
-    m: i64,
-    sh: u32,
+pub struct FixedMult {
+    /// `round(frac · 2^31)`, the 31-bit mantissa (`codegen` bakes it into
+    /// the emitted requantization calls as a compile-time constant).
+    pub m: i64,
+    /// Right shift applied after the widening multiply.
+    pub sh: u32,
 }
 
 impl FixedMult {
-    fn new(mult: f64) -> FixedMult {
+    pub fn new(mult: f64) -> FixedMult {
         assert!(mult > 0.0, "requantization multiplier must be positive");
         let mut e = 0i32;
         let mut frac = mult;
@@ -93,7 +96,7 @@ impl FixedMult {
 
     /// `round(acc · mult)` in pure integer arithmetic.
     #[inline]
-    fn apply(&self, acc: i32) -> i32 {
+    pub fn apply(&self, acc: i32) -> i32 {
         let prod = acc as i64 * self.m;
         ((prod + (1i64 << (self.sh - 1))) >> self.sh) as i32
     }

@@ -24,6 +24,11 @@
 //! - [`alloc`] — SRAM arena allocators: the paper's dynamic allocator with
 //!   post-operator compaction/defragmentation, the static no-reuse planner
 //!   it replaces, and an offline lifetime-aware offset planner (§6).
+//! - [`codegen`] — the AOT deployment backend: lowers a verified
+//!   [`api::OptimizeReport`] into a freestanding C99 source + header with
+//!   specialized per-operator loops, the static arena (sized to the
+//!   certified peak) and weights baked in, plus a golden-equivalence
+//!   harness that asserts bit-exactness against [`interp`].
 //! - [`interp`] — a micro-interpreter that executes scheduled graphs inside
 //!   a fixed-size arena through a handle table (no raw pointers across
 //!   operators, so buffers may move during defragmentation).
@@ -54,6 +59,7 @@
 
 pub mod alloc;
 pub mod api;
+pub mod codegen;
 pub mod graph;
 pub mod interp;
 pub mod mcu;

@@ -101,6 +101,23 @@ COMMANDS:
                                the source. Prints the certificate (or emits
                                it with --json); exits 1 when any property
                                family fails
+  codegen   <model|M.tflite> -o F.c
+            [--model M|--file F] [--dtype i8|f32] [--budget B]
+            [--board NAME] [--reorder-only] [--no-elide] [--threads N]
+            [--harness F]      AOT deployment backend: run the optimize
+                               pipeline, certify it, and lower the plan to
+                               a freestanding dependency-free C99 artifact
+                               (F.c + F.h): one specialized function per
+                               scheduled op (split bands with halo offsets
+                               as compile-time constants), weights as
+                               static const .rodata tables, one static
+                               .bss arena sized exactly to the certified
+                               peak with #define'd slot offsets, and a
+                               <sym>_invoke(input, output) entry point.
+                               --harness F additionally writes a
+                               standalone main() that drives the artifact
+                               with the audit input and byte-compares the
+                               output against the Rust interpreter
   export    --model M --json F --weights F [--dtype f32]
                                Export graph JSON + seeded weights for the
                                AOT pipeline (python/compile/aot.py)
@@ -114,9 +131,12 @@ COMMANDS:
                                devices request reorder+split+elide plans per
                                (model, board, budget) over TCP; plans are
                                LRU-cached by model content hash and served
-                               bit-identically to a fresh `optimize` run
-                               (protocol: PLAN/GET/UPLOAD/STATS/BOARDS/
-                               MODELS/QUIT; see README "Plan serving")
+                               bit-identically to a fresh `optimize` run;
+                               ARTIFACT downloads the reordered .tflite or
+                               generated C for an already cached plan
+                               (protocol: PLAN/GET/ARTIFACT/UPLOAD/STATS/
+                               BOARDS/MODELS/QUIT; see README "Plan
+                               serving")
   table1                       Reproduce the paper's Table 1
   sweep                        Fit matrix: zoo models × boards × orders
   nas       [--samples N] [--seed S]
@@ -155,7 +175,10 @@ fn parse_args(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
             } else if i + 1 < args.len() && !args[i + 1].starts_with("--") {
                 flags.insert(name.to_string(), args[i + 1].clone());
                 i += 1;
-            } else if matches!(name, "out" | "json" | "file" | "csv" | "weights" | "reordered") {
+            } else if matches!(
+                name,
+                "out" | "json" | "file" | "csv" | "weights" | "reordered" | "harness"
+            ) {
                 // A path-valued flag with no value (trailing, or followed
                 // by another flag) must not silently write to a file named
                 // "true"; record an empty path so path consumers reject it
@@ -772,7 +795,9 @@ fn cmd_plan_serve(flags: &HashMap<String, String>) -> Result<()> {
     println!(
         "plan-serving: {workers} planner worker(s), cache {cache_cap} plan(s), queue {queue_cap}"
     );
-    println!("protocol: PLAN <model> <board> [budget] | GET | UPLOAD | STATS | BOARDS | MODELS");
+    println!(
+        "protocol: PLAN <model> <board> [budget] | GET | ARTIFACT <TFLITE|C> | UPLOAD | STATS | BOARDS | MODELS"
+    );
     coordinator::serve_plans_tcp(svc, &format!("0.0.0.0:{port}"), None, |a| {
         println!("listening on {a}");
     })
@@ -1006,6 +1031,82 @@ fn cmd_verify(pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// `mcu-reorder codegen`: run the optimize pipeline, certify it, and
+/// lower the plan to a deployable C artifact ([`mcu_reorder::codegen`]).
+/// The header lands next to the source (`F.c` → `F.h`); `--harness F`
+/// additionally writes the golden-equivalence `main()`.
+fn cmd_codegen(pos: &[String], flags: &HashMap<String, String>) -> Result<()> {
+    let mut flags = flags.clone();
+    if let Some(p) = pos.first() {
+        // Positional argument: a path if it looks like a file, else a zoo
+        // model name (same dispatch as `trace`/`verify`).
+        if p.contains('.') && std::path::Path::new(p).extension().is_some() {
+            flags.insert("file".to_string(), p.clone());
+        } else {
+            flags.insert("model".to_string(), p.clone());
+        }
+    }
+    let source = source_from_flags(&flags, DType::I8)?;
+    let out = out_flag(&flags)?.ok_or_else(|| usage("codegen needs -o/--out FILE.c"))?;
+    let stem = std::path::Path::new(out)
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .filter(|s| !s.is_empty())
+        .ok_or_else(|| usage(format!("-o/--out needs a C file path, got {out:?}")))?;
+    let budget: Option<usize> = num_flag(&flags, "budget")?;
+    let board = match flags.get("board") {
+        None => &NUCLEO_F767ZI,
+        Some(name) => mcu_reorder::mcu::boards::by_name(name).ok_or_else(|| {
+            usage(format!("unknown board {name:?} (see `mcu-reorder sweep` for the list)"))
+        })?,
+    };
+    let split = if flags.contains_key("reorder-only") {
+        None
+    } else {
+        Some(
+            mcu_reorder::split::SplitOptions {
+                sram_budget: budget,
+                elide: !flags.contains_key("no-elide"),
+                ..Default::default()
+            }
+            .with_threads(threads_flag(&flags)?),
+        )
+    };
+    let report = api::OptimizeRequest {
+        source,
+        budget,
+        board,
+        split,
+        compare_materialized: false,
+        trace: false,
+    }
+    .run()?;
+    let ws = mcu_reorder::codegen::weights_for_report(&report)?;
+    let art = mcu_reorder::codegen::generate(&report, &ws, stem)?;
+
+    let header_path = std::path::Path::new(out).with_extension("h");
+    std::fs::write(out, &art.source).with_context(|| format!("writing {out}"))?;
+    std::fs::write(&header_path, &art.header)
+        .with_context(|| format!("writing {}", header_path.display()))?;
+    println!(
+        "codegen {} ({}): {} ops lowered, entry {}_invoke",
+        report.model, art.dtype, art.n_ops, art.symbol
+    );
+    println!(
+        "  arena  : {:>8} B static .bss (== certified plan peak)",
+        art.arena_bytes
+    );
+    println!("  peak   : {:>8} B analytic working set", art.peak_bytes);
+    println!("  rodata : {:>8} B weight tables", art.rodata_bytes);
+    println!("  io     : {} -> {} elements", art.input_elems, art.output_elems);
+    println!("wrote {out}, {}", header_path.display());
+    if let Some(hp) = path_flag(&flags, "harness", "--harness")? {
+        std::fs::write(hp, &art.harness).with_context(|| format!("writing {hp}"))?;
+        println!("wrote {hp} (golden-equivalence harness; cc -std=c99 {out} {hp})");
+    }
+    Ok(())
+}
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     if args.is_empty() {
@@ -1024,6 +1125,7 @@ fn main() {
         "optimize" => cmd_optimize(&pos, &flags),
         "trace" => cmd_trace(&pos, &flags),
         "verify" => cmd_verify(&pos, &flags),
+        "codegen" => cmd_codegen(&pos, &flags),
         "split" => cmd_split(&flags),
         "export" => cmd_export(&flags),
         "run" => cmd_run(&flags),

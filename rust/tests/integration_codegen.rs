@@ -1,0 +1,416 @@
+//! Integration: the AOT C codegen backend (`codegen`) — the PR-10
+//! acceptance suite.
+//!
+//! Three claims are pinned here:
+//!
+//! 1. **Golden equivalence** — for zoo models and the `cnn_int8.tflite`
+//!    fixture, the emitted freestanding C99 (compiled with the host `cc`
+//!    at `-std=c99 -Wall -Werror`) produces bit-identical outputs to the
+//!    Rust interpreter via the generated self-checking harness, and the
+//!    declared arena size equals the certified plan peak. (CI runs the
+//!    same contract over the *whole* zoo through the CLI; here a
+//!    representative subset keeps the suite fast. Tests that need a C
+//!    compiler skip politely when `cc` is absent.)
+//! 2. **Band loops under stress** — split plans with odd spatial sizes,
+//!    stride-2 SAME convolutions and non-trivial halos lower to
+//!    `Partial`/`PartialInto` band loops that stay bit-exact, in f32 and
+//!    in i8 (requant rounding parity across band boundaries).
+//! 3. **CLI failure contract** — `codegen` exits 2 with a one-line
+//!    `usage error:` for bad invocations and 1 for runtime failures,
+//!    matching the PR-9 convention (golden-tested via `CARGO_BIN_EXE`).
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use mcu_reorder::api::{ModelSource, OptimizeRequest};
+use mcu_reorder::codegen::{generate, sanitize_symbol, weights_for_report, Artifact};
+use mcu_reorder::graph::{Act, DType, Graph, GraphBuilder, OpKind, Padding};
+use mcu_reorder::interp::WeightStore;
+use mcu_reorder::split::SplitOptions;
+use mcu_reorder::tflite::fixtures;
+use mcu_reorder::trace::audit;
+use mcu_reorder::verify::certify_report;
+
+fn run_cli(args: &[&str]) -> (i32, String, String) {
+    let out = Command::new(env!("CARGO_BIN_EXE_mcu-reorder"))
+        .args(args)
+        .output()
+        .expect("spawn mcu-reorder");
+    (
+        out.status.code().unwrap_or(-1),
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir =
+        std::env::temp_dir().join(format!("mcu-reorder-codegen-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Host C compiler, if one exists (CI always has one; a bare dev box may
+/// not, so compile-and-run tests degrade to emit-only checks).
+fn have_cc() -> bool {
+    Command::new("cc")
+        .arg("--version")
+        .output()
+        .map(|o| o.status.success())
+        .unwrap_or(false)
+}
+
+/// Compile `artifact` + its harness under the strict flag set the ISSUE
+/// contract names, run the harness, and require exit 0 (the harness
+/// byte-compares the C output against the interpreter's expectation).
+fn compile_and_run(dir: &Path, art: &Artifact) {
+    let src = dir.join(format!("{}.c", art.symbol));
+    let hdr = dir.join(&art.header_name);
+    let main_c = dir.join(format!("{}_main.c", art.symbol));
+    let bin = dir.join(format!("{}_bin", art.symbol));
+    std::fs::write(&src, &art.source).unwrap();
+    std::fs::write(&hdr, &art.header).unwrap();
+    std::fs::write(&main_c, &art.harness).unwrap();
+    let cc = Command::new("cc")
+        .args(["-std=c99", "-Wall", "-Werror", "-O1"])
+        .arg(&src)
+        .arg(&main_c)
+        .arg("-o")
+        .arg(&bin)
+        .arg("-lm")
+        .output()
+        .expect("spawn cc");
+    assert!(
+        cc.status.success(),
+        "cc -std=c99 -Wall -Werror failed for {}:\n{}",
+        art.symbol,
+        String::from_utf8_lossy(&cc.stderr)
+    );
+    let run = Command::new(&bin).output().expect("run harness");
+    assert!(
+        run.status.success(),
+        "golden harness mismatch for {}:\nstdout: {}\nstderr: {}",
+        art.symbol,
+        String::from_utf8_lossy(&run.stdout),
+        String::from_utf8_lossy(&run.stderr)
+    );
+}
+
+/// Emit-side invariants that hold with or without a C compiler.
+fn check_artifact(art: &Artifact, report: &mcu_reorder::api::OptimizeReport) {
+    let cert = certify_report(report).expect("report must certify before codegen");
+    assert_eq!(
+        art.arena_bytes, cert.arena_bytes,
+        "{}: declared arena must equal the certified plan arena",
+        art.symbol
+    );
+    let up = art.symbol.to_uppercase();
+    assert!(
+        art.header.contains(&format!("#define {up}_ARENA_BYTES {}u", art.arena_bytes)),
+        "{}: header must pin the arena size",
+        art.symbol
+    );
+    assert!(
+        art.source.contains(&format!("void {}_invoke(", art.symbol)),
+        "{}: source must define the invoke entry point",
+        art.symbol
+    );
+    assert!(
+        art.harness.contains(&format!("{up}_ARENA_BYTES == {}u", art.arena_bytes)),
+        "{}: harness must compile-time-check the arena size",
+        art.symbol
+    );
+    let single = art.single_file();
+    assert!(
+        !single.contains("#include \""),
+        "{}: single_file must inline the header (no local includes)",
+        art.symbol
+    );
+    assert!(art.n_ops > 0 && art.input_elems > 0 && art.output_elems > 0);
+}
+
+fn zoo_report(name: &str, dtype: DType, split: Option<SplitOptions>) -> mcu_reorder::api::OptimizeReport {
+    OptimizeRequest::new(ModelSource::Zoo { name: name.to_string(), dtype })
+        .with_split(split)
+        .run()
+        .unwrap_or_else(|e| panic!("optimize {name}: {e}"))
+}
+
+// ---------------------------------------------------------------------
+// 1. Golden equivalence
+// ---------------------------------------------------------------------
+
+/// Every zoo model, in every dtype the audit pipeline prepares it for,
+/// lowers to a certifiable artifact with the emit-side invariants intact.
+/// No C compiler needed; CI compiles the same set through the CLI.
+#[test]
+fn every_zoo_model_emits_certified_artifact() {
+    for name in mcu_reorder::models::MODEL_NAMES {
+        for p in audit::prepare_zoo(name).unwrap() {
+            let dtype = DType::from_name(p.dtype).unwrap();
+            let report = zoo_report(name, dtype, Some(SplitOptions::quick()));
+            let ws = weights_for_report(&report).unwrap();
+            let sym = sanitize_symbol(&format!("{name}_{}", p.dtype));
+            let art = generate(&report, &ws, &sym)
+                .unwrap_or_else(|e| panic!("codegen {name} {}: {e}", p.dtype));
+            check_artifact(&art, &report);
+            if name == "figure1" {
+                assert_eq!(art.rodata_bytes, 0, "figure1 has no weight tensors");
+                assert_eq!(art.dtype, "u8");
+            }
+        }
+    }
+}
+
+/// Representative zoo subset, compiled with the host `cc` and driven by
+/// the generated harness: C output must be byte-identical to the
+/// interpreter in f32, i8 and u8.
+#[test]
+fn golden_zoo_c_is_bit_exact() {
+    let dir = tmp_dir("golden-zoo");
+    let cases =
+        [("tiny", DType::F32, "tiny_f32"), ("tiny", DType::I8, "tiny_i8"), ("figure1", DType::U8, "figure1_u8")];
+    for (name, dtype, sym) in cases {
+        let report = zoo_report(name, dtype, Some(SplitOptions::quick()));
+        let ws = weights_for_report(&report).unwrap();
+        let art = generate(&report, &ws, sym).unwrap();
+        check_artifact(&art, &report);
+        if !have_cc() {
+            eprintln!("cc unavailable; skipping compile-and-run for {sym}");
+            continue;
+        }
+        compile_and_run(&dir, &art);
+    }
+}
+
+/// The int8 TFLite fixture end to end: flatbuffer import → optimize →
+/// codegen → host cc → harness. This is the i8 requant-rounding parity
+/// gate: every conv/dense in the fixture requantizes through the fixed
+/// multiplier, and one ulp of divergence fails the byte compare.
+#[test]
+fn golden_tflite_fixture_is_bit_exact() {
+    let path = fixtures::ensure(fixtures::INT8_FIXTURE).unwrap();
+    let report = OptimizeRequest::new(ModelSource::TflitePath(path.display().to_string()))
+        .with_split(Some(SplitOptions::quick()))
+        .run()
+        .unwrap();
+    let ws = weights_for_report(&report).unwrap();
+    let art = generate(&report, &ws, "cnn_int8").unwrap();
+    check_artifact(&art, &report);
+    assert_eq!(art.dtype, "i8");
+    // Requant parity starts with shape: one fixed-point requant call per
+    // accumulating i8 op, all routed through the single shared helper.
+    let n_acc = report
+        .graph
+        .ops
+        .iter()
+        .filter(|o| {
+            matches!(
+                o.kind,
+                OpKind::Conv2D { .. } | OpKind::DepthwiseConv2D { .. } | OpKind::Dense { .. }
+            )
+        })
+        .count();
+    assert!(n_acc > 0, "fixture must exercise accumulating i8 ops");
+    let calls = art.source.matches(&format!("{}_requant(", art.symbol)).count();
+    // One helper definition + one call site per accumulating op (split
+    // bands may add more call sites, never fewer).
+    assert!(
+        calls >= n_acc + 1,
+        "expected >= {} requant sites, found {calls}",
+        n_acc + 1
+    );
+    if !have_cc() {
+        eprintln!("cc unavailable; skipping compile-and-run for the fixture");
+        return;
+    }
+    compile_and_run(&tmp_dir("golden-fixture"), &art);
+}
+
+// ---------------------------------------------------------------------
+// 2. Band loops: odd sizes, stride-2 SAME halos, i8 requant across bands
+// ---------------------------------------------------------------------
+
+/// 17×17 input (odd), stride-2 SAME conv expanding to 16 channels, 1×1
+/// compression, odd-kernel valid pool: a chain where splitting the
+/// expansion segment is the only way below the reordered floor, so the
+/// planner must commit row bands whose halos land on odd boundaries.
+fn oddnet() -> Graph {
+    let mut b = GraphBuilder::new("oddnet");
+    let x = b.input("x", &[1, 17, 17, 3], DType::F32);
+    let c1 = b.conv2d("c1", x, 16, (3, 3), (2, 2), Padding::Same, Act::Relu);
+    let c2 = b.conv2d("c2", c1, 4, (1, 1), (1, 1), Padding::Valid, Act::Linear);
+    let p = b.maxpool("p", c2, (3, 3), (2, 2), Padding::Valid);
+    let gap = b.global_avgpool("gap", p);
+    let fc = b.dense("fc", gap, 5, Act::Linear);
+    let sm = b.softmax("sm", fc);
+    b.output(sm);
+    b.finish().unwrap()
+}
+
+/// Run `g` through the full pipeline with a budget 80% of its reordered
+/// peak — tight enough that the beam search must split — and return the
+/// report. Panics if no split was committed (the graphs used here are
+/// constructed so splitting strictly improves the peak).
+fn split_report(g: Graph, label: &str) -> mcu_reorder::api::OptimizeReport {
+    let base = OptimizeRequest::reorder_only(ModelSource::Graph(g.clone()))
+        .run()
+        .unwrap()
+        .best_peak();
+    let budget = base * 4 / 5;
+    let report = OptimizeRequest::new(ModelSource::Graph(g))
+        .with_budget(Some(budget))
+        .run()
+        .unwrap();
+    let split = report.split.as_ref().unwrap_or_else(|| panic!("{label}: split search must run"));
+    assert!(
+        !split.outcome.steps.is_empty(),
+        "{label}: budget {budget} (80% of reordered {base}) must force a split"
+    );
+    assert!(
+        split
+            .outcome
+            .graph
+            .ops
+            .iter()
+            .any(|o| matches!(o.kind, OpKind::Partial { .. } | OpKind::PartialInto { .. })),
+        "{label}: committed split must lower to Partial band ops"
+    );
+    report
+}
+
+#[test]
+fn split_bands_odd_stride2_same_f32_bit_exact() {
+    let g = oddnet();
+    let report = split_report(g.clone(), "oddnet");
+    let ws = WeightStore::seeded_f32(&g, 7);
+    let art = generate(&report, &ws, "oddnet").unwrap();
+    check_artifact(&art, &report);
+    // The stride-2 SAME conv must be inside a band (a Partial/PartialInto
+    // wrapper), otherwise the halo arithmetic is not exercised.
+    let banded_stride2 = report.split.as_ref().unwrap().outcome.graph.ops.iter().any(|o| {
+        match &o.kind {
+            OpKind::Partial { inner, .. } | OpKind::PartialInto { inner, .. } => {
+                matches!(**inner, OpKind::Conv2D { stride: (2, 2), padding: Padding::Same, .. })
+            }
+            _ => false,
+        }
+    });
+    assert!(banded_stride2, "oddnet split must band the stride-2 SAME conv");
+    if !have_cc() {
+        eprintln!("cc unavailable; skipping compile-and-run for oddnet");
+        return;
+    }
+    compile_and_run(&tmp_dir("oddnet"), &art);
+}
+
+/// streamnet i8 under budget: the zoo's split-friendly model quantized,
+/// so band boundaries cut through requantizing convs — i8 rounding must
+/// agree with the interpreter on every band, including halo rows.
+#[test]
+fn split_bands_i8_requant_bit_exact() {
+    let base = OptimizeRequest::reorder_only(ModelSource::Zoo {
+        name: "streamnet".to_string(),
+        dtype: DType::I8,
+    })
+    .run()
+    .unwrap()
+    .best_peak();
+    let report = OptimizeRequest::new(ModelSource::Zoo {
+        name: "streamnet".to_string(),
+        dtype: DType::I8,
+    })
+    .with_budget(Some(base * 4 / 5))
+    .run()
+    .unwrap();
+    let split = report.split.as_ref().expect("split search must run");
+    assert!(!split.outcome.steps.is_empty(), "streamnet i8 must split under 80% budget");
+    let ws = weights_for_report(&report).unwrap();
+    let art = generate(&report, &ws, "streamnet_i8").unwrap();
+    check_artifact(&art, &report);
+    if !have_cc() {
+        eprintln!("cc unavailable; skipping compile-and-run for streamnet_i8");
+        return;
+    }
+    compile_and_run(&tmp_dir("streamnet-i8"), &art);
+}
+
+// ---------------------------------------------------------------------
+// 3. CLI failure contract (exit 2 usage / exit 1 runtime, PR-9 style)
+// ---------------------------------------------------------------------
+
+#[test]
+fn codegen_cli_exit_codes() {
+    let dir = tmp_dir("cli");
+    let out_c = dir.join("t.c");
+    let out_c = out_c.to_str().unwrap();
+
+    // Usage errors: exit 2, one-line "usage error:" on stderr.
+    let usage_cases: &[&[&str]] = &[
+        &["codegen"],                                            // no source
+        &["codegen", "tiny"],                                    // missing -o
+        &["codegen", "tiny", "-o"],                              // dangling -o
+        &["codegen", "tiny", "-o", out_c, "--dtype", "f16"],     // bad dtype
+        &["codegen", "tiny", "-o", out_c, "--board", "nope"],    // bad board
+        &["codegen", "tiny", "-o", out_c, "--budget", "lots"],   // bad number
+    ];
+    for args in usage_cases {
+        let (code, _, err) = run_cli(args);
+        assert_eq!(code, 2, "{args:?} must exit 2, stderr: {err}");
+        assert!(err.starts_with("error: usage error: "), "{args:?} stderr: {err}");
+        assert_eq!(err.lines().count(), 1, "{args:?} must fail with one line: {err}");
+    }
+
+    // Runtime errors: exit 1.
+    let runtime_cases: &[&[&str]] = &[
+        &["codegen", "nope", "-o", out_c],             // unknown zoo model
+        &["codegen", "missing.tflite", "-o", out_c],   // unreadable file
+    ];
+    for args in runtime_cases {
+        let (code, _, err) = run_cli(args);
+        assert_eq!(code, 1, "{args:?} must exit 1, stderr: {err}");
+        assert!(!err.contains("usage error:"), "{args:?} is a runtime failure: {err}");
+    }
+}
+
+#[test]
+fn codegen_cli_happy_path_writes_sources() {
+    let dir = tmp_dir("cli-ok");
+    let out_c = dir.join("tiny.c");
+    let main_c = dir.join("tiny_main.c");
+    let (code, out, err) = run_cli(&[
+        "codegen",
+        "tiny",
+        "--dtype",
+        "f32",
+        "-o",
+        out_c.to_str().unwrap(),
+        "--harness",
+        main_c.to_str().unwrap(),
+    ]);
+    assert_eq!(code, 0, "stderr: {err}");
+    assert!(out.contains("arena"), "summary must report the arena size: {out}");
+    let hdr = out_c.with_extension("h");
+    for p in [&out_c, &hdr, &main_c] {
+        assert!(p.exists(), "{} must be written", p.display());
+    }
+    let src = std::fs::read_to_string(&out_c).unwrap();
+    assert!(src.contains("tiny_invoke("), "entry symbol comes from the output stem");
+    if !have_cc() {
+        eprintln!("cc unavailable; skipping compile of the CLI-written sources");
+        return;
+    }
+    let bin = dir.join("tiny_bin");
+    let cc = Command::new("cc")
+        .args(["-std=c99", "-Wall", "-Werror", "-O1"])
+        .arg(&out_c)
+        .arg(&main_c)
+        .arg("-o")
+        .arg(&bin)
+        .arg("-lm")
+        .output()
+        .expect("spawn cc");
+    assert!(cc.status.success(), "cc failed:\n{}", String::from_utf8_lossy(&cc.stderr));
+    let run = Command::new(&bin).output().expect("run harness");
+    assert!(run.status.success(), "harness mismatch: {}", String::from_utf8_lossy(&run.stdout));
+}

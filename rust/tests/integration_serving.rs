@@ -7,9 +7,11 @@
 //! protocol error — malformed commands, unknown models/boards/uploads,
 //! bad budgets, oversized lines, infeasible explicit budgets, garbage
 //! uploads — with a clean `ERR`/`SHED` reply and a connection that
-//! keeps serving.
+//! keeps serving. The `ARTIFACT` download path (reordered `.tflite` /
+//! generated C for a cached plan) is covered the same way: happy-path
+//! byte round-trips plus abuse with unknown kinds and uncached keys.
 
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpStream};
 use std::sync::{mpsc, Arc};
 
@@ -56,6 +58,21 @@ impl Client {
         let mut line = String::new();
         self.reader.read_line(&mut line).expect("recv line");
         line
+    }
+
+    /// Send an `ARTIFACT` line; `Ok(bytes)` for an `OK <n>` reply with its
+    /// binary body, `Err(reply)` for anything else.
+    fn artifact(&mut self, line: &str) -> Result<Vec<u8>, String> {
+        let reply = self.send(line);
+        match reply.trim().strip_prefix("OK ") {
+            Some(n) => {
+                let n: usize = n.parse().unwrap_or_else(|_| panic!("bad byte count: {reply:?}"));
+                let mut bytes = vec![0u8; n];
+                self.reader.read_exact(&mut bytes).expect("artifact body");
+                Ok(bytes)
+            }
+            None => Err(reply),
+        }
     }
 }
 
@@ -211,6 +228,88 @@ fn tcp_sheds_when_the_queue_is_full() {
     let reply = c.send("PLAN tiny SparkFun-Edge");
     assert!(reply.starts_with("SHED queue full"), "{reply:?}");
     assert_eq!(svc.stats().shed, 2);
+    svc.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// ARTIFACT downloads
+// ---------------------------------------------------------------------------
+
+#[test]
+fn tcp_artifact_serves_cached_plan_bytes() {
+    let svc = PlanService::start(quick_cfg());
+    let addr = serve(svc.clone(), 1);
+    let mut c = Client::connect(addr);
+
+    // Upload the fixture and plan it (board-default budget) to populate
+    // the cache, then download both artifact kinds for the same key.
+    let bytes = fixture_bytes();
+    c.writer.write_all(format!("UPLOAD cnn_int8.tflite {}\n", bytes.len()).as_bytes()).unwrap();
+    c.writer.write_all(&bytes).unwrap();
+    let hash = c.recv().trim().strip_prefix("OK ").expect("upload accepted").to_string();
+    let reply = c.send(&format!("PLAN hash:{hash} NUCLEO-F767ZI"));
+    assert!(reply.starts_with("OK {"), "{reply:?}");
+
+    let tfl = c
+        .artifact(&format!("ARTIFACT TFLITE hash:{hash} NUCLEO-F767ZI"))
+        .expect("tflite artifact");
+    assert!(!tfl.is_empty(), "artifact body present");
+    mcu_reorder::tflite::Model::parse(&tfl).expect("downloaded artifact is a loadable .tflite");
+
+    let c_src = c
+        .artifact(&format!("ARTIFACT C hash:{hash} NUCLEO-F767ZI"))
+        .expect("C artifact");
+    let c_text = String::from_utf8(c_src).expect("C artifact is UTF-8");
+    assert!(c_text.contains("_invoke(") && c_text.contains("_ARENA_BYTES"), "single-file C");
+    assert!(!c_text.contains("#include \""), "single-file C has the header inlined");
+
+    // Zoo plans have no flatbuffer source but do have a C artifact.
+    let reply = c.send("PLAN figure1 NUCLEO-F767ZI");
+    assert!(reply.starts_with("OK {"), "{reply:?}");
+    let err = c.artifact("ARTIFACT TFLITE figure1 NUCLEO-F767ZI").unwrap_err();
+    assert!(err.starts_with("ERR no .tflite source"), "{err:?}");
+    let fig = c.artifact("ARTIFACT C figure1 NUCLEO-F767ZI").expect("zoo C artifact");
+    assert!(String::from_utf8(fig).unwrap().contains("figure1_invoke"), "zoo C artifact");
+
+    c.send("QUIT");
+    svc.shutdown();
+}
+
+#[test]
+fn tcp_artifact_abuse_unknown_and_uncached_keys() {
+    let svc = PlanService::start(quick_cfg());
+    let addr = serve(svc.clone(), 1);
+    let mut c = Client::connect(addr);
+
+    for (line, expect) in [
+        ("ARTIFACT", "ERR usage: ARTIFACT <TFLITE|C> <model> <board> [budget]"),
+        ("ARTIFACT PDF figure1 NUCLEO-F767ZI", "ERR unknown artifact kind"),
+        ("ARTIFACT C nope NUCLEO-F767ZI", "ERR unknown model"),
+        ("ARTIFACT C figure1 no-such-board", "ERR unknown board"),
+        ("ARTIFACT C hash:xyz NUCLEO-F767ZI", "ERR bad model hash"),
+        ("ARTIFACT C hash:00000000deadbeef NUCLEO-F767ZI", "ERR unknown upload"),
+        // Download-only: an uncached key must never trigger planning.
+        ("ARTIFACT C figure1 NUCLEO-F767ZI", "ERR plan not cached"),
+        ("ARTIFACT TFLITE figure1 NUCLEO-F767ZI", "ERR plan not cached"),
+    ] {
+        let reply = c.artifact(line).expect_err("abuse must not yield bytes");
+        assert!(reply.starts_with(expect), "{line:?} → {reply:?} (wanted {expect:?})");
+    }
+
+    // A cached plan under one budget is not served under another key.
+    let reply = c.send("PLAN figure1 NUCLEO-F767ZI");
+    assert!(reply.starts_with("OK {"), "{reply:?}");
+    let err = c.artifact("ARTIFACT C figure1 NUCLEO-F767ZI 123456").unwrap_err();
+    assert!(err.starts_with("ERR plan not cached"), "{err:?}");
+
+    // No planning jobs ran beyond the single explicit PLAN (downloads
+    // never enqueue work or hand out plans).
+    assert_eq!(svc.stats().served, 1, "ARTIFACT must never plan");
+
+    // The connection survives the abuse and still serves downloads.
+    let ok = c.artifact("ARTIFACT C figure1 NUCLEO-F767ZI").expect("cached C artifact");
+    assert!(!ok.is_empty());
+    c.send("QUIT");
     svc.shutdown();
 }
 

@@ -10,6 +10,8 @@ come from the analytic scheduler and the deterministic serving
 simulation, not from timing). Timing rows are reported but never gated.
 
   - ``*_peak``  keys: peak SRAM in bytes, LOWER is better
+  - ``*_bytes`` keys: deployable artifact sizes (codegen arena/rodata)
+    in bytes, LOWER is better
   - ``*_floor`` keys: counters that must not drop (plans served, cache
     hits, coverage, shed decisions), HIGHER is better
 
@@ -39,6 +41,7 @@ import pathlib
 import sys
 
 GATED_SUFFIX = "_peak"  # lower is better
+BYTES_SUFFIX = "_bytes"  # lower is better (codegen artifact sizes)
 FLOOR_SUFFIX = "_floor"  # higher is better
 
 
@@ -52,7 +55,7 @@ def gated(metrics):
     return {
         k: v
         for k, v in metrics.items()
-        if k.endswith(GATED_SUFFIX) or k.endswith(FLOOR_SUFFIX)
+        if k.endswith(GATED_SUFFIX) or k.endswith(BYTES_SUFFIX) or k.endswith(FLOOR_SUFFIX)
     }
 
 

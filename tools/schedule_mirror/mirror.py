@@ -19,7 +19,16 @@ Purpose:
   * compute the gated `BENCH_baseline/serving.json` `_floor` counters of
     the plan-serving bench by simulating its deterministic request
     stream against a bit-exact tick-LRU (`--serving-baseline`), and
-    check the Rust serving bench against them (`--check BENCH_serving.json`).
+    check the Rust serving bench against them (`--check BENCH_serving.json`);
+  * compute the gated `BENCH_baseline/codegen.json` `_bytes` sizes of the
+    AOT codegen bench — the static arena each emitted C artifact declares
+    (DP order + best-fit-decreasing placement, both transcribed from
+    `rust/src/alloc/planner.rs` down to tie-breaks) and its baked-in
+    weight-table rodata (`--codegen-baseline`), and check the Rust
+    codegen bench against them (`--check BENCH_codegen.json`). The
+    `tflitecnn_i8` arena is deliberately not mirrored: the TFLite
+    importer and this mirror assign different tensor ids, which changes
+    best-fit placement order (rodata is id-independent and is mirrored).
 
 Everything here is deterministic and analytic — no timing, no RNG beyond
 the mirrored xoshiro256** used by the synthetic model generators and the
@@ -729,6 +738,83 @@ def optimal(g):
 
 
 # ---------------------------------------------------------------------------
+# static arena planner (mirrors rust/src/alloc/planner.rs)
+# ---------------------------------------------------------------------------
+
+
+def storage_roots(g):
+    """Storage-sharing root per tensor: a join-elided accumulator chain
+    (`PartialInto` writing through its accumulator) is one buffer, so
+    every member resolves to the chain's root tensor."""
+    root = list(range(len(g.tensors)))
+    for op, a in zip(g.ops, elided_accumulators(g)):
+        if a is not None:
+            r = a
+            while root[r] != r:
+                r = root[r]
+            root[op.output] = r
+    return root
+
+
+def plan_lifetimes(g, order):
+    """Activation lifetimes under `order` (weights excluded), as
+    `[tensor, start, end, bytes]` rows in tensor-id order — transcribed
+    from `alloc::plan_lifetimes`: producers set the start (graph inputs
+    start at 0), outputs live to the final step, consumers extend the
+    end only when the tensor is a data input (not a weight operand)."""
+    n_steps = len(order)
+    step_of = {o: i for i, o in enumerate(order)}
+    out = []
+    for t in g.tensors:
+        if t.is_weight:
+            continue
+        start = step_of[t.producer] if t.producer is not None else 0
+        end = n_steps - 1 if t.id in g.outputs else start
+        for c in t.consumers:
+            if t.id in g.ops[c].inputs:
+                end = max(end, step_of[c])
+        out.append([t.id, start, end, t.bytes()])
+    return out
+
+
+def best_fit(g, order):
+    """Arena size of the lifetime-aware best-fit-decreasing placement,
+    transcribed from `StaticPlan::best_fit`: sharing groups merged into
+    one slot (union lifetime, max size), groups placed largest-first
+    (ties by tensor id), each at the lowest offset whose address range
+    is free across its whole lifetime."""
+    root = storage_roots(g)
+    merged = {}
+    for tid, start, end, nbytes in plan_lifetimes(g, order):
+        r = root[tid]
+        m = merged.get(r)
+        if m is None:
+            merged[r] = [r, start, end, nbytes]
+        else:
+            m[1] = min(m[1], start)
+            m[2] = max(m[2], end)
+            m[3] = max(m[3], nbytes)
+    groups = sorted(merged.values(), key=lambda m: (-m[3], m[0]))
+    placed = []  # (offset, [tensor, start, end, bytes])
+    arena = 0
+    for grp in groups:
+        _, start, end, nbytes = grp
+        busy = sorted(
+            (off, off + o[3])
+            for off, o in placed
+            if not (o[2] < start or o[1] > end)
+        )
+        offset = 0
+        for lo, hi in busy:
+            if lo >= offset + nbytes:
+                break
+            offset = max(offset, hi)
+        arena = max(arena, offset + nbytes)
+        placed.append((offset, grp))
+    return arena
+
+
+# ---------------------------------------------------------------------------
 # split (mirrors rust/src/split: geometry, rewrite, beam search)
 # ---------------------------------------------------------------------------
 
@@ -1334,6 +1420,45 @@ def serving_metrics():
     }
 
 
+def codegen_zoo():
+    """`(label, graph, mirror_arena)` rows matching `rust/benches/codegen.rs`:
+    every zoo model in each dtype the audit pipeline prepares it for
+    (figure1 is u8-only; the CNNs come in f32 and i8), plus the imported
+    int8 TFLite fixture. `mirror_arena` is False for `tflitecnn_i8`: the
+    importer assigns tensor ids in flatbuffer order, this mirror in
+    builder order, and best-fit placement is id-tie-broken — the names
+    agree but the arena layout legitimately differs."""
+    rows = [("figure1_u8", figure1(), True)]
+    for name, make in (
+        ("mobilenet", mobilenet),
+        ("swiftnet", swiftnet),
+        ("resnet", resnet),
+        ("audionet", audionet),
+        ("streamnet", streamnet),
+        ("tiny", tiny),
+    ):
+        rows.append((f"{name}_f32", make(dsize=4), True))
+        rows.append((f"{name}_i8", make(dsize=1), True))
+    rows.append(("tflitecnn_i8", tflitecnn(), False))
+    return rows
+
+
+def codegen_metrics():
+    """Gated `_bytes` sizes of the `codegen` bench: the static arena each
+    reorder-only artifact declares (DP-optimal order + best-fit
+    placement) and the rodata of its baked-in weight tables (the sum of
+    weight-tensor bytes; biases are 4-byte f32/i32 in every dtype)."""
+    metrics = {}
+    for label, g, mirror_arena in codegen_zoo():
+        if mirror_arena:
+            order, _ = optimal(g)
+            metrics[f"{label}.arena_bytes"] = best_fit(g, order)
+        metrics[f"{label}.rodata_bytes"] = sum(
+            t.bytes() for t in g.tensors if t.is_weight
+        )
+    return metrics
+
+
 def live_csv(g, order):
     """Per-op live-set CSV keyed by tensor names.
 
@@ -1363,6 +1488,9 @@ def main(argv):
     ap.add_argument("--serving-baseline", action="store_true",
                     help="print BENCH_baseline/serving.json gated _floor "
                          "counters (simulated plan-serving fleet)")
+    ap.add_argument("--codegen-baseline", action="store_true",
+                    help="print BENCH_baseline/codegen.json gated _bytes "
+                         "sizes (AOT artifact arena + rodata)")
     ap.add_argument("--report", action="store_true",
                     help="print the full per-model plan report")
     ap.add_argument("--check", metavar="BENCH_JSON",
@@ -1396,7 +1524,8 @@ def main(argv):
         check_bench = check_doc.get("bench", "partial_exec")
     need_zoo = (args.report or args.baseline
                 or (args.check
-                    and check_bench not in ("scheduler_scaling", "serving")))
+                    and check_bench not in ("scheduler_scaling", "serving",
+                                            "codegen")))
     metrics = {}
     if need_zoo:
         for name, g, rows, mat, eli, metrics in bench_metrics():
@@ -1423,17 +1552,25 @@ def main(argv):
                "metrics": {k: v for k, v in sorted(serving_metrics().items())},
                "timings": []}
         print(json.dumps(doc, indent=2))
+    if args.codegen_baseline:
+        doc = {"bench": "codegen",
+               "metrics": {k: v for k, v in sorted(codegen_metrics().items())},
+               "timings": []}
+        print(json.dumps(doc, indent=2))
     if args.check:
         if check_bench == "scheduler_scaling":
             mirror_metrics = scaling_metrics()
         elif check_bench == "serving":
             mirror_metrics = serving_metrics()
+        elif check_bench == "codegen":
+            mirror_metrics = codegen_metrics()
         else:
             mirror_metrics = metrics
         reported = check_doc.get("metrics", {})
         bad = 0
         for key, val in sorted(mirror_metrics.items()):
-            if not (key.endswith("_peak") or key.endswith("_floor")):
+            if not (key.endswith("_peak") or key.endswith("_floor")
+                    or key.endswith("_bytes")):
                 continue
             if key not in reported:
                 print(f"MISSING {key}: mirror {val}, absent from {args.check}")
